@@ -1,0 +1,27 @@
+//! Ablation benches beyond the paper's numbered figures:
+//! split-FIFO chain depth (§3.3), pipeline-register density (Fig. 4's
+//! `reg_density` parameter), and the dynamic-NoC extension (§3.3 last
+//! paragraph). DESIGN.md §5 lists these as the design-choice ablations.
+use std::time::Duration;
+
+use canal::coordinator::{
+    dynamic_noc_comparison, fifo_chain_depth, reg_density_sweep, ExpOptions,
+};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions::default();
+
+    let t = fifo_chain_depth();
+    println!("{}", t.render());
+    let t = reg_density_sweep(&o);
+    println!("{}", t.render());
+    let t = dynamic_noc_comparison(&o);
+    println!("{}", t.render());
+
+    let s = bench("ablation suite (chain+density+noc)", 3, Duration::from_secs(30), || {
+        black_box(fifo_chain_depth());
+        black_box(dynamic_noc_comparison(&ExpOptions { sa_moves: 4, ..Default::default() }));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,16 @@
+//! Ablation bench: detailed-placement alpha sweep (paper §3.4: sweep
+//! alpha 1..20, keep the best post-route critical path).
+use std::time::Duration;
+
+use canal::coordinator::{alpha_sweep, ExpOptions};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 10, ..Default::default() };
+    println!("{}", alpha_sweep(&o).render());
+    let quick = ExpOptions { sa_moves: 2, ..Default::default() };
+    let s = bench("alpha sweep (6 values x 3 apps)", 3, Duration::from_secs(60), || {
+        black_box(alpha_sweep(&quick));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,15 @@
+//! Fig. 8 bench: SB area — static vs full-FIFO vs split-FIFO ready-valid.
+//! Regenerates the paper's bar chart data and times the area pipeline.
+use std::time::Duration;
+
+use canal::coordinator::fig08_fifo_area;
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let t = fig08_fifo_area();
+    println!("{}", t.render());
+    let s = bench("fig08 area pipeline", 50, Duration::from_secs(5), || {
+        black_box(fig08_fifo_area());
+    });
+    println!("{s}");
+}

@@ -1,0 +1,16 @@
+//! Fig. 9 bench: Wilton vs Disjoint routability across track counts.
+use std::time::Duration;
+
+use canal::coordinator::{fig09_topology, ExpOptions};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 8, ..Default::default() };
+    let t = fig09_topology(&o);
+    println!("{}", t.render());
+    let quick = ExpOptions { sa_moves: 2, seeds: 1, ..Default::default() };
+    let s = bench("fig09 full topology sweep", 3, Duration::from_secs(60), || {
+        black_box(fig09_topology(&quick));
+    });
+    println!("{s}");
+}

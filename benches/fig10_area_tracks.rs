@@ -1,0 +1,14 @@
+//! Fig. 10 bench: SB / CB area vs number of routing tracks.
+use std::time::Duration;
+
+use canal::coordinator::fig10_area_tracks;
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let t = fig10_area_tracks();
+    println!("{}", t.render());
+    let s = bench("fig10 area-vs-tracks sweep", 20, Duration::from_secs(5), || {
+        black_box(fig10_area_tracks());
+    });
+    println!("{s}");
+}

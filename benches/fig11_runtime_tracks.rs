@@ -1,0 +1,18 @@
+//! Fig. 11 bench: application run time vs routing tracks (full PnR per
+//! cell; uses the PJRT JAX/Pallas placer when artifacts are present).
+use std::time::Duration;
+
+use canal::coordinator::{default_placer, fig11_runtime_tracks, ExpOptions};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 10, ..Default::default() };
+    let placer = default_placer();
+    let t = fig11_runtime_tracks(&o, placer.as_ref());
+    println!("{}", t.render());
+    let quick = ExpOptions { sa_moves: 2, ..Default::default() };
+    let s = bench("fig11 runtime-vs-tracks sweep", 3, Duration::from_secs(90), || {
+        black_box(fig11_runtime_tracks(&quick, placer.as_ref()));
+    });
+    println!("{s}");
+}

@@ -1,0 +1,14 @@
+//! Fig. 13 bench: SB / CB area vs core connection sides (4/3/2).
+use std::time::Duration;
+
+use canal::coordinator::fig13_port_area;
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let t = fig13_port_area();
+    println!("{}", t.render());
+    let s = bench("fig13 port-area sweep", 20, Duration::from_secs(5), || {
+        black_box(fig13_port_area());
+    });
+    println!("{s}");
+}

@@ -1,0 +1,17 @@
+//! Fig. 14 bench: run time vs SB core-output connection sides.
+use std::time::Duration;
+
+use canal::coordinator::{default_placer, fig14_sb_ports_runtime, ExpOptions};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 10, ..Default::default() };
+    let placer = default_placer();
+    let t = fig14_sb_ports_runtime(&o, placer.as_ref());
+    println!("{}", t.render());
+    let quick = ExpOptions { sa_moves: 2, ..Default::default() };
+    let s = bench("fig14 sb-ports sweep", 3, Duration::from_secs(60), || {
+        black_box(fig14_sb_ports_runtime(&quick, placer.as_ref()));
+    });
+    println!("{s}");
+}

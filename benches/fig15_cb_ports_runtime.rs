@@ -1,0 +1,17 @@
+//! Fig. 15 bench: run time vs CB core-input connection sides.
+use std::time::Duration;
+
+use canal::coordinator::{default_placer, fig15_cb_ports_runtime, ExpOptions};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 10, ..Default::default() };
+    let placer = default_placer();
+    let t = fig15_cb_ports_runtime(&o, placer.as_ref());
+    println!("{}", t.render());
+    let quick = ExpOptions { sa_moves: 2, ..Default::default() };
+    let s = bench("fig15 cb-ports sweep", 3, Duration::from_secs(60), || {
+        black_box(fig15_cb_ports_runtime(&quick, placer.as_ref()));
+    });
+    println!("{s}");
+}

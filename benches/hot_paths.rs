@@ -1,0 +1,107 @@
+//! Hot-path micro/meso benchmarks — the §Perf measurement harness.
+//!
+//! Covers every layer on the request path:
+//!   L3  router (A* + negotiation), SA detailed placement, elastic sim,
+//!       configuration sweep, bitstream encode;
+//!   L2/L1  global placement: native Rust vs the AOT JAX/Pallas artifact
+//!       through PJRT (dispatch amortization = INNER_STEPS per call).
+//!
+//! Run: `cargo bench --bench hot_paths` (results land in bench_output.txt
+//! via the Makefile; EXPERIMENTS.md §Perf records before/after).
+
+use std::time::Duration;
+
+use canal::apps;
+use canal::bitstream::{encode, Configuration};
+use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
+use canal::hw::allocate;
+use canal::pnr::{
+    build_global_problem, detailed_place, initial_positions, legalize, pack, route,
+    GlobalPlacer, NativePlacer, RouterParams, SaParams,
+};
+use canal::sim::{sweep_connections, RvSim, StallPattern};
+use canal::util::bench::{bench, black_box};
+
+fn main() {
+    let budget = Duration::from_secs(8);
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+    let ic16 = create_uniform_interconnect(&InterconnectConfig::paper_baseline(16, 16));
+
+    // --- L3: router ------------------------------------------------------
+    let packed = pack(&apps::harris());
+    let problem = build_global_problem(&packed.app, &ic);
+    let (xs0, ys0) = initial_positions(&packed.app, &ic, 1);
+    let (xs, ys) = NativePlacer::default().optimize(&problem, &xs0, &ys0);
+    let placement = legalize(&packed.app, &ic, &xs, &ys).unwrap();
+    let nets = packed.app.nets();
+    let n_nets = nets.len() as f64;
+    let s = bench("route harris (8x8x5)", 200, budget, || {
+        black_box(route(&ic, &packed.app, &placement, 16, &RouterParams::default()).unwrap());
+    });
+    println!("{s}   [{:.0} net-routes/s]", n_nets * s.throughput_per_sec());
+
+    // --- L3: SA detailed placement ---------------------------------------
+    let sa = SaParams { moves_per_node: 20, ..Default::default() };
+    let s = bench("SA detailed place harris (20 mpn)", 100, budget, || {
+        black_box(detailed_place(&packed.app, &ic, &nets, placement.clone(), &sa));
+    });
+    println!("{s}");
+
+    // --- L3: elastic simulation ------------------------------------------
+    let app = apps::gaussian();
+    let caps: std::collections::HashMap<_, _> = app
+        .edges()
+        .iter()
+        .map(|e| ((e.src, e.src_port, e.dst, e.dst_port), 2usize))
+        .collect();
+    let input: Vec<i64> = (0..4096).map(|i| (i * 7) % 255).collect();
+    let s = bench("rv-sim gaussian 1024 tokens", 100, budget, || {
+        let mut sim = RvSim::new(&app, &caps, input.clone());
+        black_box(sim.run(1024, 10_000_000, StallPattern::None));
+    });
+    println!("{s}");
+
+    // --- L3: exhaustive configuration sweep -------------------------------
+    let cs = allocate(&ic);
+    let conns = ic.edge_count() as f64;
+    let s = bench("config sweep 8x8", 50, budget, || {
+        black_box(sweep_connections(&ic, Some(&cs)));
+    });
+    println!("{s}   [{:.2}M conn/s]", conns * s.throughput_per_sec() / 1e6);
+
+    // --- L3: bitstream encode ---------------------------------------------
+    let flow = canal::pnr::run_flow(
+        &ic,
+        &apps::gaussian(),
+        &canal::pnr::FlowParams {
+            sa: SaParams { moves_per_node: 6, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let config = Configuration::from_routing(&ic, 16, &flow.routing).unwrap();
+    let s = bench("bitstream encode (gaussian)", 2000, budget, || {
+        black_box(encode(&config, &cs));
+    });
+    println!("{s}");
+
+    // --- L2/L1: global placement backends ---------------------------------
+    let packed16 = pack(&apps::harris());
+    let problem16 = build_global_problem(&packed16.app, &ic16);
+    let (x160, y160) = initial_positions(&packed16.app, &ic16, 1);
+    let native = NativePlacer::default();
+    let s = bench("global place native (150 iters)", 100, budget, || {
+        black_box(native.optimize(&problem16, &x160, &y160));
+    });
+    println!("{s}");
+
+    match canal::runtime::PjrtPlacer::load_default() {
+        Ok(pjrt) => {
+            let s = bench("global place pjrt jax/pallas (150 iters)", 50, budget, || {
+                black_box(pjrt.optimize(&problem16, &x160, &y160));
+            });
+            println!("{s}");
+        }
+        Err(e) => println!("pjrt placer unavailable: {e} (run `make artifacts`)"),
+    }
+}

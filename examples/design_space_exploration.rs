@@ -1,0 +1,20 @@
+//! Design-space exploration (§4.2): sweep the three axes the paper
+//! explores — switch-box topology, routing tracks, and core connection
+//! sides — and print the paper-style tables.
+//!
+//! Run: `cargo run --release --example design_space_exploration`
+
+use canal::coordinator::{self, ExpOptions};
+
+fn main() {
+    let o = ExpOptions { sa_moves: 10, ..Default::default() };
+    let placer = coordinator::default_placer();
+
+    println!("{}", coordinator::fig09_topology(&o).render());
+    println!("{}", coordinator::fig10_area_tracks().render());
+    println!("{}", coordinator::fig11_runtime_tracks(&o, placer.as_ref()).render());
+    println!("{}", coordinator::fig13_port_area().render());
+    println!("{}", coordinator::fig14_sb_ports_runtime(&o, placer.as_ref()).render());
+    println!("{}", coordinator::fig15_cb_ports_runtime(&o, placer.as_ref()).render());
+    println!("{}", coordinator::alpha_sweep(&o).render());
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime — the Rust binary loads the HLO-text artifacts
+this package produces (see aot.py and `canal::runtime`).
+"""

@@ -1,0 +1,104 @@
+"""AOT export: lower the L2 placement model to HLO text artifacts.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+`xla` crate's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit
+instruction ids; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts:
+  placer_step.hlo.txt   — INNER_STEPS momentum-GD steps per call
+  placer_cost.hlo.txt   — objective value (convergence monitoring)
+  placer_meta.txt       — shape contract consumed by canal::runtime
+  placer_testvec.txt    — input/output vectors for Rust cross-checks
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _testvec_inputs(seed=7):
+    """Small deterministic problem embedded in the padded shapes."""
+    rng = np.random.default_rng(seed)
+    n_real, m_real, k_real = 40, 60, 5
+    xs = np.zeros(model.PAD_N, np.float32)
+    ys = np.zeros(model.PAD_N, np.float32)
+    xs[:n_real] = rng.uniform(2, 6, n_real).astype(np.float32)
+    ys[:n_real] = rng.uniform(2, 6, n_real).astype(np.float32)
+    pins = -np.ones((model.PAD_M, model.PAD_K), np.int32)
+    for m in range(m_real):
+        deg = int(rng.integers(2, k_real + 1))
+        pins[m, :deg] = rng.choice(n_real, size=deg, replace=False)
+    col = np.zeros(model.PAD_N, np.float32)
+    colm = np.zeros(model.PAD_N, np.float32)
+    mem = rng.choice(n_real, size=6, replace=False)
+    col[mem] = 4.0
+    colm[mem] = 1.0
+    bounds = np.array([7.0, 7.0], np.float32)
+    hyper = np.array([0.12, 0.9, 0.4], np.float32)
+    vx = np.zeros(model.PAD_N, np.float32)
+    vy = np.zeros(model.PAD_N, np.float32)
+    return xs, ys, vx, vy, pins, col, colm, bounds, hyper
+
+
+def _dump_vec(f, name, arr):
+    flat = np.asarray(arr).reshape(-1)
+    f.write(f"{name} {' '.join(repr(float(v)) for v in flat)}\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    example = model.example_args()
+
+    step_hlo = to_hlo_text(jax.jit(model.placement_steps).lower(*example))
+    with open(os.path.join(args.out_dir, "placer_step.hlo.txt"), "w") as f:
+        f.write(step_hlo)
+    print(f"placer_step.hlo.txt: {len(step_hlo)} chars")
+
+    cost_example = (example[0], example[1], example[4], example[5], example[6], example[8])
+    cost_hlo = to_hlo_text(jax.jit(model.placement_cost).lower(*cost_example))
+    with open(os.path.join(args.out_dir, "placer_cost.hlo.txt"), "w") as f:
+        f.write(cost_hlo)
+    print(f"placer_cost.hlo.txt: {len(cost_hlo)} chars")
+
+    with open(os.path.join(args.out_dir, "placer_meta.txt"), "w") as f:
+        f.write(
+            f"pad_n = {model.PAD_N}\npad_m = {model.PAD_M}\npad_k = {model.PAD_K}\n"
+            f"inner_steps = {model.INNER_STEPS}\n"
+        )
+
+    # Golden test vector: run one artifact call worth of steps in python
+    # and dump inputs + outputs for the Rust runtime's numeric cross-check.
+    inputs = _testvec_inputs()
+    outs = jax.jit(model.placement_steps)(*[jnp.asarray(a) for a in inputs])
+    with open(os.path.join(args.out_dir, "placer_testvec.txt"), "w") as f:
+        names = ["xs", "ys", "vx", "vy", "pins", "col", "colm", "bounds", "hyper"]
+        for name, arr in zip(names, inputs):
+            _dump_vec(f, f"in_{name}", arr)
+        for name, arr in zip(["xs", "ys", "vx", "vy"], outs):
+            _dump_vec(f, f"out_{name}", np.asarray(arr))
+    print("placer_testvec.txt written")
+
+
+if __name__ == "__main__":
+    main()

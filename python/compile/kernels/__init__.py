@@ -1,0 +1,3 @@
+"""L1 Pallas kernels and their pure-jnp oracles."""
+
+from . import hpwl, ref  # noqa: F401

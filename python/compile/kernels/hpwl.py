@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: per-net star-model wirelength cost + pin gradients.
+
+The global placer's hot spot is the per-net reduction over gathered pin
+coordinates: masked centroid, squared deviations, and the 2*(p - c)
+gradient. This kernel blocks the *net* dimension so each program instance
+reduces a (BLOCK_M, K, 2) slab held in VMEM; the VPU handles the masked
+reductions (no data-dependent control flow). The gather/scatter between
+vertex space and pin space stays in the L2 jax model where XLA fuses it
+with the optimizer update.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): the paper's CAD
+lineage runs this on CPUs; on TPU the slab layout is chosen so K*2 lands
+on the lane dimension and BLOCK_M on sublanes. VMEM footprint per program
+instance: BLOCK_M * K * 2 * 4B (coords) + BLOCK_M * K * 4B (mask) +
+outputs — ~20 KiB at BLOCK_M=128, K=16, far under the ~16 MiB budget, so
+the kernel is memory-bandwidth-bound and the roofline argument is made on
+bytes, not FLOPs.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+
+
+def _net_kernel(coords_ref, mask_ref, cost_ref, grad_ref):
+    """One block of nets: coords (BM, K, 2), mask (BM, K)."""
+    coords = coords_ref[...]
+    mask = mask_ref[...]
+    mask3 = mask[..., None]
+    count = jnp.maximum(mask.sum(axis=1), 1.0)[:, None]
+    centroid = (coords * mask3).sum(axis=1) / count
+    dev = (coords - centroid[:, None, :]) * mask3
+    live = (mask.sum(axis=1) >= 2.0).astype(jnp.float32)
+    cost_ref[...] = (dev * dev).sum(axis=(1, 2)) * live
+    grad_ref[...] = 2.0 * dev * live[:, None, None]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def net_cost_grad(coords, mask):
+    """Pallas-blocked per-net cost/gradient.
+
+    coords: f32[M, K, 2]; mask: f32[M, K]; M must be a multiple of
+    BLOCK_M (the model pads). Returns (f32[M], f32[M, K, 2]).
+    """
+    m, k, _ = coords.shape
+    assert m % BLOCK_M == 0, f"net count {m} not padded to {BLOCK_M}"
+    grid = (m // BLOCK_M,)
+    return pl.pallas_call(
+        _net_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k, 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((BLOCK_M, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_M,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_M, k, 2), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), jnp.float32),
+            jax.ShapeDtypeStruct((m, k, 2), jnp.float32),
+        ],
+        interpret=True,
+    )(coords, mask)

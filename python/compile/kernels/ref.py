@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the global-placement wirelength kernel.
+
+This is the correctness reference the Pallas kernel (`hpwl.py`) is tested
+against, and it mirrors `canal::pnr::place::global_cost_grad` on the Rust
+side exactly: a quadratic star-model wirelength (the L2 approximation of
+HPWL the paper's global placer uses, Eq. 1) plus a quadratic MEM-column
+legalization term.
+
+Conventions (shared by ref, kernel, model and the Rust runtime):
+- ``pos``:   f32[N, 2]   continuous positions (x, y) per vertex;
+- ``pins``:  i32[M, K]   vertex indices per net, ``-1`` padding;
+- ``col``:   f32[N]      target MEM column per vertex (0 where unused);
+- ``colm``:  f32[N]      1.0 where the column pull applies, else 0.0.
+"""
+
+import jax.numpy as jnp
+
+
+def gather_pins(pos, pins):
+    """Gather pin coordinates: f32[M, K, 2]; padded pins gather index 0."""
+    safe = jnp.maximum(pins, 0)
+    return pos[safe]
+
+
+def pin_mask(pins):
+    """f32[M, K] validity mask."""
+    return (pins >= 0).astype(jnp.float32)
+
+
+def net_cost_grad(coords, mask):
+    """Per-net star-model cost and per-pin gradient.
+
+    coords: f32[M, K, 2] gathered pin positions, mask: f32[M, K].
+    Returns (cost f32[M], grad f32[M, K, 2]) where
+    ``cost_m = sum_k mask * |p_k - c_m|^2`` with ``c_m`` the masked
+    centroid, and ``grad = 2 * mask * (p_k - c_m)`` (centroid terms cancel
+    in the total derivative, matching the Rust implementation).
+    """
+    mask3 = mask[..., None]
+    count = jnp.maximum(mask.sum(axis=1), 1.0)[:, None]
+    centroid = (coords * mask3).sum(axis=1) / count  # [M, 2]
+    dev = (coords - centroid[:, None, :]) * mask3  # [M, K, 2]
+    cost = (dev * dev).sum(axis=(1, 2))  # [M]
+    # Degenerate nets (fewer than 2 real pins) contribute nothing.
+    live = (mask.sum(axis=1) >= 2.0).astype(jnp.float32)
+    return cost * live, 2.0 * dev * live[:, None, None]
+
+
+def placement_cost_grad(pos, pins, col, colm, lambda_mem):
+    """Full objective: wirelength + MEM legalization. Returns (cost, grad).
+
+    cost: f32[]; grad: f32[N, 2].
+    """
+    coords = gather_pins(pos, pins)
+    mask = pin_mask(pins)
+    net_cost, pin_grad = net_cost_grad(coords, mask)
+
+    n = pos.shape[0]
+    safe = jnp.maximum(pins, 0).reshape(-1)
+    flat = (pin_grad * mask[..., None]).reshape(-1, 2)
+    grad = jnp.zeros((n, 2), jnp.float32).at[safe].add(flat)
+
+    dx = (pos[:, 0] - col) * colm
+    cost = net_cost.sum() + lambda_mem * (dx * dx).sum()
+    grad = grad.at[:, 0].add(lambda_mem * 2.0 * dx)
+    return cost, grad

@@ -1,0 +1,97 @@
+"""L2 JAX model: the analytic global-placement optimizer (Eq. 1).
+
+Builds the full differentiable objective on top of the L1 Pallas kernel
+(`kernels.hpwl`): gather vertex positions into pin space, run the per-net
+kernel, scatter pin gradients back, add the MEM-column legalization term,
+and advance a momentum-gradient-descent step (the conjugate-gradient
+stand-in; same fixed-iteration contract as the Rust-native fallback in
+`canal::pnr::place::NativePlacer`).
+
+The AOT artifact exports `placement_steps`: INNER_STEPS optimizer steps
+per call (lax.scan), so the Rust hot loop pays one PJRT dispatch per
+INNER_STEPS iterations.
+
+Shape contract (fixed at AOT time, padded by the Rust runtime):
+  xs, ys, vx, vy : f32[N]
+  pins           : i32[M, K]   (-1 padded)
+  col, colm      : f32[N]
+  bounds         : f32[2]      (width-1, height-1) clamp box
+  hyper          : f32[3]      (lr, momentum, lambda_mem)
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import hpwl, ref
+
+INNER_STEPS = 75
+
+# Padded problem sizes for the exported artifact. Generous for the whole
+# application suite (largest packed app is ~70 vertices / ~90 nets).
+PAD_N = 256
+PAD_M = 512
+PAD_K = 16
+
+
+def cost_grad(xs, ys, pins, col, colm, lambda_mem, *, use_pallas=True):
+    """Objective + gradient, kernel-accelerated. Returns (cost, gx, gy)."""
+    pos = jnp.stack([xs, ys], axis=1)
+    coords = ref.gather_pins(pos, pins)
+    mask = ref.pin_mask(pins)
+    kern = hpwl.net_cost_grad if use_pallas else ref.net_cost_grad
+    net_cost, pin_grad = kern(coords, mask)
+
+    n = pos.shape[0]
+    safe = jnp.maximum(pins, 0).reshape(-1)
+    flat = (pin_grad * mask[..., None]).reshape(-1, 2)
+    grad = jnp.zeros((n, 2), jnp.float32).at[safe].add(flat)
+
+    dx = (xs - col) * colm
+    cost = net_cost.sum() + lambda_mem * (dx * dx).sum()
+    gx = grad[:, 0] + lambda_mem * 2.0 * dx
+    gy = grad[:, 1]
+    return cost, gx, gy
+
+
+def one_step(state, pins, col, colm, bounds, hyper, *, use_pallas=True):
+    """One momentum-GD step; mirrors NativePlacer::optimize's inner loop."""
+    xs, ys, vx, vy = state
+    lr, momentum, lambda_mem = hyper[0], hyper[1], hyper[2]
+    _, gx, gy = cost_grad(xs, ys, pins, col, colm, lambda_mem, use_pallas=use_pallas)
+    vx = momentum * vx - lr * gx
+    vy = momentum * vy - lr * gy
+    xs = jnp.clip(xs + vx, 0.0, bounds[0])
+    ys = jnp.clip(ys + vy, 0.0, bounds[1])
+    return (xs, ys, vx, vy)
+
+
+def placement_steps(xs, ys, vx, vy, pins, col, colm, bounds, hyper):
+    """INNER_STEPS optimizer steps (the AOT-exported entry point)."""
+
+    def body(state, _):
+        return one_step(state, pins, col, colm, bounds, hyper), ()
+
+    (xs, ys, vx, vy), _ = jax.lax.scan(body, (xs, ys, vx, vy), None, length=INNER_STEPS)
+    return xs, ys, vx, vy
+
+
+def placement_cost(xs, ys, pins, col, colm, hyper):
+    """Objective value only (exported for convergence monitoring)."""
+    cost, _, _ = cost_grad(xs, ys, pins, col, colm, hyper[2])
+    return cost
+
+
+def example_args():
+    """ShapeDtypeStructs for AOT lowering at the padded sizes."""
+    f = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((PAD_N,), f),  # xs
+        jax.ShapeDtypeStruct((PAD_N,), f),  # ys
+        jax.ShapeDtypeStruct((PAD_N,), f),  # vx
+        jax.ShapeDtypeStruct((PAD_N,), f),  # vy
+        jax.ShapeDtypeStruct((PAD_M, PAD_K), jnp.int32),  # pins
+        jax.ShapeDtypeStruct((PAD_N,), f),  # col
+        jax.ShapeDtypeStruct((PAD_N,), f),  # colm
+        jax.ShapeDtypeStruct((2,), f),  # bounds
+        jax.ShapeDtypeStruct((3,), f),  # hyper
+    )

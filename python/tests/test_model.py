@@ -1,0 +1,82 @@
+"""L2 correctness: the placement model and its AOT contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def small_problem(seed=0, n=20, m=24, k=4):
+    rng = np.random.default_rng(seed)
+    pad_m = 128
+    pins = -np.ones((pad_m, k), np.int32)
+    for i in range(m):
+        deg = int(rng.integers(2, k + 1))
+        pins[i, :deg] = rng.choice(n, size=deg, replace=False)
+    xs = rng.uniform(1, 7, n).astype(np.float32)
+    ys = rng.uniform(1, 7, n).astype(np.float32)
+    col = np.zeros(n, np.float32)
+    colm = np.zeros(n, np.float32)
+    col[:3] = 4.0
+    colm[:3] = 1.0
+    return xs, ys, pins, col, colm
+
+
+def test_cost_grad_matches_ref_path():
+    xs, ys, pins, col, colm = small_problem()
+    a = model.cost_grad(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(pins),
+                        jnp.asarray(col), jnp.asarray(colm), 0.4, use_pallas=True)
+    b = model.cost_grad(jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(pins),
+                        jnp.asarray(col), jnp.asarray(colm), 0.4, use_pallas=False)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-5)
+
+
+def test_steps_reduce_cost():
+    xs, ys, pins, col, colm = small_problem(seed=2)
+    bounds = jnp.array([7.0, 7.0], jnp.float32)
+    hyper = jnp.array([0.05, 0.9, 0.4], jnp.float32)
+    state = (jnp.asarray(xs), jnp.asarray(ys),
+             jnp.zeros_like(jnp.asarray(xs)), jnp.zeros_like(jnp.asarray(ys)))
+    c0 = model.placement_cost(state[0], state[1], jnp.asarray(pins),
+                              jnp.asarray(col), jnp.asarray(colm), hyper)
+    out = model.placement_steps(state[0], state[1], state[2], state[3],
+                                jnp.asarray(pins), jnp.asarray(col),
+                                jnp.asarray(colm), bounds, hyper)
+    c1 = model.placement_cost(out[0], out[1], jnp.asarray(pins),
+                              jnp.asarray(col), jnp.asarray(colm), hyper)
+    assert float(c1) < float(c0)
+
+
+def test_positions_stay_in_bounds():
+    xs, ys, pins, col, colm = small_problem(seed=5)
+    bounds = jnp.array([7.0, 7.0], jnp.float32)
+    hyper = jnp.array([0.5, 0.95, 0.4], jnp.float32)  # aggressive lr
+    out = model.placement_steps(jnp.asarray(xs), jnp.asarray(ys),
+                                jnp.zeros(len(xs)), jnp.zeros(len(ys)),
+                                jnp.asarray(pins), jnp.asarray(col),
+                                jnp.asarray(colm), bounds, hyper)
+    assert float(out[0].min()) >= 0.0 and float(out[0].max()) <= 7.0
+    assert float(out[1].min()) >= 0.0 and float(out[1].max()) <= 7.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.0, 2.0))
+def test_grad_is_descent_direction(seed, lam):
+    xs, ys, pins, col, colm = small_problem(seed=seed)
+    xs, ys = jnp.asarray(xs), jnp.asarray(ys)
+    pins, col, colm = jnp.asarray(pins), jnp.asarray(col), jnp.asarray(colm)
+    c0, gx, gy = model.cost_grad(xs, ys, pins, col, colm, lam)
+    eps = 1e-3
+    c1, _, _ = model.cost_grad(xs - eps * gx, ys - eps * gy, pins, col, colm, lam)
+    assert float(c1) <= float(c0) + 1e-4
+
+
+def test_example_args_cover_padded_shapes():
+    args = model.example_args()
+    assert args[0].shape == (model.PAD_N,)
+    assert args[4].shape == (model.PAD_M, model.PAD_K)
+    assert model.PAD_M % 128 == 0  # kernel block constraint

@@ -1,0 +1,601 @@
+//! Application benchmark suite.
+//!
+//! Dataflow-graph generators standing in for the Halide-compiled image
+//! processing and ML applications the paper's CGRAs run (DESIGN.md §3).
+//! Each generator produces an [`AppGraph`] whose structure (stencil
+//! reuse, adder trees, streaming I/O through memory tiles, fan-out)
+//! matches the corresponding real workload's communication pattern —
+//! which is what the interconnect experiments measure.
+
+use crate::pnr::app::{AppGraph, AppNodeId, AppOp};
+
+/// Chain of `stages` pointwise ops on one stream: the simplest "does the
+/// fabric route at all" workload.
+pub fn pointwise(stages: usize) -> AppGraph {
+    let mut g = AppGraph::new("pointwise");
+    let input = g.mem("in", "stream_in");
+    let mut prev = input;
+    for i in 0..stages {
+        let c = g.add(&format!("c{i}"), AppOp::Const(i as i64 + 1));
+        let op = g.alu(&format!("op{i}"), if i % 2 == 0 { "mul" } else { "add" });
+        g.wire(prev, op, 0);
+        g.wire(c, op, 1);
+        prev = op;
+    }
+    let output = g.mem("out", "stream_out");
+    g.wire(prev, output, 0);
+    g
+}
+
+/// Binary reduction tree over `inputs`, returning the root.
+fn adder_tree(g: &mut AppGraph, prefix: &str, mut level: Vec<AppNodeId>) -> AppNodeId {
+    let mut depth = 0;
+    while level.len() > 1 {
+        let mut next = Vec::new();
+        for (i, pair) in level.chunks(2).enumerate() {
+            if pair.len() == 1 {
+                next.push(pair[0]);
+                continue;
+            }
+            let add = g.alu(&format!("{prefix}_add_d{depth}_{i}"), "add");
+            g.wire(pair[0], add, 0);
+            g.wire(pair[1], add, 1);
+            next.push(add);
+        }
+        level = next;
+        depth += 1;
+    }
+    level[0]
+}
+
+/// NxN stencil skeleton: `n-1` line buffers (MEM) feed an NxN window of
+/// shift registers; each window element is multiplied by a coefficient
+/// and reduced through an adder tree. Models a Halide `convNxN` lowering.
+/// Zero coefficients skip their multiplier (like a real compiler would).
+fn stencil(name: &str, n: usize, coeffs: &[i64]) -> AppGraph {
+    assert_eq!(coeffs.len(), n * n, "{name}: need {n}x{n} coefficients");
+    let mut g = AppGraph::new(name);
+    let input = g.mem("in", "stream_in");
+    // n-1 line buffers give n row streams.
+    let mut rows = vec![input];
+    for i in 0..n - 1 {
+        let lb = g.mem(&format!("lb{i}"), "linebuffer");
+        g.wire(rows[i], lb, 0);
+        rows.push(lb);
+    }
+    // Window: each row stream through n-1 registers -> n columns.
+    let mut window = Vec::new();
+    for (r, &row) in rows.iter().enumerate() {
+        let mut prev = row;
+        window.push(row);
+        for c in 0..n - 1 {
+            let reg = g.add(&format!("w{r}{c}"), AppOp::Reg);
+            g.wire(prev, reg, 0);
+            window.push(reg);
+            prev = reg;
+        }
+    }
+    // Multiply by coefficients and reduce.
+    let mut products = Vec::new();
+    for (i, (&w, &c)) in window.iter().zip(coeffs.iter()).enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let k = g.add(&format!("k{i}"), AppOp::Const(c));
+        let m = g.alu(&format!("mul{i}"), "mul");
+        g.wire(w, m, 0);
+        g.wire(k, m, 1);
+        products.push(m);
+    }
+    let sum = adder_tree(&mut g, "t", products);
+    let shift = g.alu("norm", "ashr");
+    let sh = g.add("shamt", AppOp::Const(4));
+    g.wire(sum, shift, 0);
+    g.wire(sh, shift, 1);
+    let output = g.mem("out", "stream_out");
+    g.wire(shift, output, 0);
+    g
+}
+
+/// 3x3 stencil (kept as the building block for gaussian/resnet).
+fn stencil3x3(name: &str, coeffs: [i64; 9]) -> AppGraph {
+    stencil(name, 3, &coeffs)
+}
+
+/// Gaussian 3x3 blur (binomial coefficients).
+pub fn gaussian() -> AppGraph {
+    stencil3x3("gaussian", [1, 2, 1, 2, 4, 2, 1, 2, 1])
+}
+
+/// Horizontal Sobel derivative (used inside Harris).
+fn sobel_products(g: &mut AppGraph, prefix: &str, rows: [AppNodeId; 3], coeffs: [i64; 9]) -> AppNodeId {
+    let mut window = Vec::new();
+    for (r, &row) in rows.iter().enumerate() {
+        let r0 = g.add(&format!("{prefix}_w{r}0"), AppOp::Reg);
+        let r1 = g.add(&format!("{prefix}_w{r}1"), AppOp::Reg);
+        g.wire(row, r0, 0);
+        g.wire(r0, r1, 0);
+        window.extend([row, r0, r1]);
+    }
+    let mut products = Vec::new();
+    for (i, (&w, &c)) in window.iter().zip(coeffs.iter()).enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let k = g.add(&format!("{prefix}_k{i}"), AppOp::Const(c));
+        let m = g.alu(&format!("{prefix}_mul{i}"), "mul");
+        g.wire(w, m, 0);
+        g.wire(k, m, 1);
+        products.push(m);
+    }
+    adder_tree(g, prefix, products)
+}
+
+/// Harris corner detector: Sobel dx/dy, structure-tensor products, and
+/// the corner response `det - k*trace^2`. The heaviest stencil app in the
+/// suite (matches the paper's Harris benchmark).
+pub fn harris() -> AppGraph {
+    let mut g = AppGraph::new("harris");
+    let input = g.mem("in", "stream_in");
+    let lb0 = g.mem("lb0", "linebuffer");
+    let lb1 = g.mem("lb1", "linebuffer");
+    g.wire(input, lb0, 0);
+    g.wire(lb0, lb1, 0);
+    let rows = [input, lb0, lb1];
+    let gx = sobel_products(&mut g, "gx", rows, [-1, 0, 1, -2, 0, 2, -1, 0, 1]);
+    let gy = sobel_products(&mut g, "gy", rows, [1, 2, 1, 0, 0, 0, -1, -2, -1]);
+    // Structure tensor entries.
+    let ixx = g.alu("ixx", "mul");
+    g.wire(gx, ixx, 0);
+    g.wire(gx, ixx, 1);
+    let iyy = g.alu("iyy", "mul");
+    g.wire(gy, iyy, 0);
+    g.wire(gy, iyy, 1);
+    let ixy = g.alu("ixy", "mul");
+    g.wire(gx, ixy, 0);
+    g.wire(gy, ixy, 1);
+    // det = ixx*iyy - ixy^2 ; trace = ixx + iyy
+    let m1 = g.alu("det_l", "mul");
+    g.wire(ixx, m1, 0);
+    g.wire(iyy, m1, 1);
+    let m2 = g.alu("det_r", "mul");
+    g.wire(ixy, m2, 0);
+    g.wire(ixy, m2, 1);
+    let det = g.alu("det", "sub");
+    g.wire(m1, det, 0);
+    g.wire(m2, det, 1);
+    let tr = g.alu("trace", "add");
+    g.wire(ixx, tr, 0);
+    g.wire(iyy, tr, 1);
+    let tr2 = g.alu("trace2", "mul");
+    g.wire(tr, tr2, 0);
+    g.wire(tr, tr2, 1);
+    let k = g.add("k", AppOp::Const(3)); // ~0.05 in fixed point >>6
+    let ktr2 = g.alu("ktrace2", "mul");
+    g.wire(tr2, ktr2, 0);
+    g.wire(k, ktr2, 1);
+    let shr = g.add("shr6", AppOp::Const(6));
+    let ktr2s = g.alu("ktrace2_s", "ashr");
+    g.wire(ktr2, ktr2s, 0);
+    g.wire(shr, ktr2s, 1);
+    let resp = g.alu("response", "sub");
+    g.wire(det, resp, 0);
+    g.wire(ktr2s, resp, 1);
+    let output = g.mem("out", "stream_out");
+    g.wire(resp, output, 0);
+    g
+}
+
+/// Simplified camera (ISP) pipeline: black-level subtract, demosaic
+/// cross-channel mixes, white balance, gamma-ish shift — a wide app with
+/// three parallel channel paths.
+pub fn camera() -> AppGraph {
+    let mut g = AppGraph::new("camera");
+    let input = g.mem("in", "stream_in");
+    let bl = g.add("black_level", AppOp::Const(16));
+    let sub = g.alu("blc", "sub");
+    g.wire(input, sub, 0);
+    g.wire(bl, sub, 1);
+    let lb = g.mem("lb", "linebuffer");
+    g.wire(sub, lb, 0);
+    let mut channels = Vec::new();
+    for (c, chan) in ["r", "g", "b"].iter().enumerate() {
+        let r0 = g.add(&format!("{chan}_d0"), AppOp::Reg);
+        g.wire(if c % 2 == 0 { sub } else { lb }, r0, 0);
+        let w = g.add(&format!("{chan}_gain"), AppOp::Const(20 + c as i64));
+        let mul = g.alu(&format!("{chan}_wb"), "mul");
+        g.wire(r0, mul, 0);
+        g.wire(w, mul, 1);
+        let sh = g.add(&format!("{chan}_shamt"), AppOp::Const(4));
+        let gam = g.alu(&format!("{chan}_gamma"), "ashr");
+        g.wire(mul, gam, 0);
+        g.wire(sh, gam, 1);
+        channels.push(gam);
+    }
+    // Luma combine: (r + 2g + b) >> 2
+    let g2 = g.add("g2", AppOp::Const(2));
+    let gm = g.alu("g_x2", "mul");
+    g.wire(channels[1], gm, 0);
+    g.wire(g2, gm, 1);
+    let s1 = g.alu("rg", "add");
+    g.wire(channels[0], s1, 0);
+    g.wire(gm, s1, 1);
+    let s2 = g.alu("rgb", "add");
+    g.wire(s1, s2, 0);
+    g.wire(channels[2], s2, 1);
+    let sh = g.add("lshamt", AppOp::Const(2));
+    let luma = g.alu("luma", "ashr");
+    g.wire(s2, luma, 0);
+    g.wire(sh, luma, 1);
+    let out_rgb = g.mem("out_rgb", "stream_out");
+    g.wire(s2, out_rgb, 1); // also stream the un-shifted sum
+    let output = g.mem("out", "stream_out");
+    g.wire(luma, output, 0);
+    g
+}
+
+/// `n x n` output-stationary matmul tile: MAC grid with row/column
+/// broadcast — the highest-fan-out app in the suite.
+pub fn matmul(n: usize) -> AppGraph {
+    let mut g = AppGraph::new("matmul");
+    let a_rows: Vec<AppNodeId> =
+        (0..n).map(|i| g.mem(&format!("a_row{i}"), "stream_in")).collect();
+    let b_cols: Vec<AppNodeId> =
+        (0..n).map(|j| g.mem(&format!("b_col{j}"), "stream_in")).collect();
+    for i in 0..n {
+        for j in 0..n {
+            let mul = g.alu(&format!("mul_{i}_{j}"), "mul");
+            g.wire(a_rows[i], mul, 0);
+            g.wire(b_cols[j], mul, 1);
+            let mac = g.alu(&format!("mac_{i}_{j}"), "mac");
+            g.wire(mul, mac, 0);
+            // Accumulator output streams to a result buffer per row.
+        }
+    }
+    for i in 0..n {
+        let sinks: Vec<AppNodeId> = (0..n)
+            .map(|j| g.ids().find(|&id| g.node(id).name == format!("mac_{i}_{j}")).unwrap())
+            .collect();
+        let sum = adder_tree(&mut g, &format!("r{i}"), sinks);
+        let out = g.mem(&format!("c_row{i}"), "stream_out");
+        g.wire(sum, out, 0);
+    }
+    g
+}
+
+/// Residual conv block: 3x3 conv + ReLU + skip connection add. Models a
+/// quantized ResNet layer's inner loop.
+pub fn resnet_block() -> AppGraph {
+    let mut g = stencil3x3("resnet", [1, 1, 1, 1, 2, 1, 1, 1, 1]);
+    // Append relu + skip add after the stencil's `norm` node.
+    let norm = g.ids().find(|&id| g.node(id).name == "norm").unwrap();
+    let zero = g.add("zero", AppOp::Const(0));
+    let relu = g.alu("relu", "max");
+    g.wire(norm, relu, 0);
+    g.wire(zero, relu, 1);
+    let skip = g.mem("skip_in", "stream_in");
+    let add = g.alu("skip_add", "add");
+    g.wire(relu, add, 0);
+    g.wire(skip, add, 1);
+    let out2 = g.mem("out2", "stream_out");
+    g.wire(add, out2, 0);
+    g
+}
+
+/// 5x5 convolution (binomial kernel): the big stencil. Roughly 2.8x the
+/// PE count of gaussian 3x3; the channel-pressure workload for the
+/// topology/track experiments.
+pub fn conv5x5() -> AppGraph {
+    // Binomial 5x5 = outer([1,4,6,4,1]).
+    let b = [1i64, 4, 6, 4, 1];
+    let mut coeffs = [0i64; 25];
+    for r in 0..5 {
+        for c in 0..5 {
+            coeffs[r * 5 + c] = b[r] * b[c];
+        }
+    }
+    stencil("conv5x5", 5, &coeffs)
+}
+
+/// Unsharp masking: gaussian blur + amount-weighted difference from the
+/// original. Two stencil paths sharing the input stream — high fan-out on
+/// the input net.
+pub fn unsharp() -> AppGraph {
+    let mut g = stencil("unsharp", 3, &[1, 2, 1, 2, 4, 2, 1, 2, 1]);
+    let input = g.ids().find(|&id| g.node(id).name == "in").unwrap();
+    let blurred = g.ids().find(|&id| g.node(id).name == "norm").unwrap();
+    // sharp = in + amount * (in - blurred)
+    let delay = g.add("in_align", AppOp::Reg);
+    g.wire(input, delay, 1); // second consumer port of the input stream
+    let diff = g.alu("hipass", "sub");
+    g.wire(delay, diff, 0);
+    g.wire(blurred, diff, 1);
+    let amt = g.add("amount", AppOp::Const(3));
+    let scaled = g.alu("amount_mul", "mul");
+    g.wire(diff, scaled, 0);
+    g.wire(amt, scaled, 1);
+    let sh = g.add("ash", AppOp::Const(1));
+    let scaled_s = g.alu("amount_shift", "ashr");
+    g.wire(scaled, scaled_s, 0);
+    g.wire(sh, scaled_s, 1);
+    let add = g.alu("sharp", "add");
+    g.wire(delay, add, 0);
+    g.wire(scaled_s, add, 1);
+    let out = g.mem("out_sharp", "stream_out");
+    g.wire(add, out, 0);
+    g
+}
+
+/// Radix-2 FFT over 8 real-valued lanes (fixed-point, twiddle factors as
+/// constant multipliers): 3 butterfly stages with the classic strided
+/// cross-lane exchange — the worst-case *non-local* communication pattern
+/// in the suite.
+pub fn fft8() -> AppGraph {
+    let mut g = AppGraph::new("fft8");
+    let mut lanes: Vec<AppNodeId> =
+        (0..8).map(|i| g.mem(&format!("x{i}"), "stream_in")).collect();
+    for stage in 0..3usize {
+        let half = 4 >> stage; // butterfly stride: 4, 2, 1
+        let mut next = lanes.clone();
+        for group in 0..(8 / (2 * half)) {
+            for k in 0..half {
+                let i = group * 2 * half + k;
+                let j = i + half;
+                // Twiddle on the lower input.
+                let tw = g.add(&format!("tw_s{stage}_{i}"), AppOp::Const(181 >> stage));
+                let twm = g.alu(&format!("twmul_s{stage}_{i}"), "mul");
+                g.wire(lanes[j], twm, 0);
+                g.wire(tw, twm, 1);
+                let sh = g.add(&format!("twsh_s{stage}_{i}"), AppOp::Const(7));
+                let tws = g.alu(&format!("twshift_s{stage}_{i}"), "ashr");
+                g.wire(twm, tws, 0);
+                g.wire(sh, tws, 1);
+                let a = g.alu(&format!("bfly_add_s{stage}_{i}"), "add");
+                g.wire(lanes[i], a, 0);
+                g.wire(tws, a, 1);
+                let s = g.alu(&format!("bfly_sub_s{stage}_{i}"), "sub");
+                g.connect(lanes[i], 0, s, 0);
+                g.connect(tws, 0, s, 1);
+                next[i] = a;
+                next[j] = s;
+            }
+        }
+        lanes = next;
+    }
+    for (i, &lane) in lanes.iter().enumerate() {
+        let out = g.mem(&format!("y{i}"), "stream_out");
+        g.wire(lane, out, 0);
+    }
+    g
+}
+
+/// Stereo block matching: per-disparity absolute differences over a
+/// 3-wide window, SAD adder trees, and a min-reduction across `disps`
+/// disparities. Wide parallel structure with a deep reduction.
+pub fn stereo(disps: usize) -> AppGraph {
+    let mut g = AppGraph::new("stereo");
+    let left = g.mem("left", "stream_in");
+    let right = g.mem("right", "stream_in");
+    // Window taps on the left stream.
+    let mut lw = vec![left];
+    for c in 0..2 {
+        let r = g.add(&format!("lw{c}"), AppOp::Reg);
+        g.wire(*lw.last().unwrap(), r, 0);
+        lw.push(r);
+    }
+    // Right stream delayed per disparity.
+    let mut rtap = right;
+    let mut sads = Vec::new();
+    for d in 0..disps {
+        // 3-tap window on this disparity's right stream.
+        let mut rw = vec![rtap];
+        for c in 0..2 {
+            let r = g.add(&format!("rw{d}_{c}"), AppOp::Reg);
+            g.wire(*rw.last().unwrap(), r, 0);
+            rw.push(r);
+        }
+        let mut diffs = Vec::new();
+        for c in 0..3 {
+            let sub = g.alu(&format!("diff{d}_{c}"), "sub");
+            g.connect(lw[c], 0, sub, 0);
+            g.connect(rw[c], 0, sub, 1);
+            let abs = g.alu(&format!("abs{d}_{c}"), "abs");
+            g.wire(sub, abs, 0);
+            diffs.push(abs);
+        }
+        let sad = adder_tree(&mut g, &format!("sad{d}"), diffs);
+        sads.push(sad);
+        // Next disparity: delay the right stream one more pixel.
+        let r = g.add(&format!("rd{d}"), AppOp::Reg);
+        g.wire(rtap, r, 1);
+        rtap = r;
+    }
+    // Min-reduce the SADs.
+    let mut level = sads;
+    let mut depth = 0;
+    while level.len() > 1 {
+        let mut nextl = Vec::new();
+        for (i, pair) in level.chunks(2).enumerate() {
+            if pair.len() == 1 {
+                nextl.push(pair[0]);
+                continue;
+            }
+            let m = g.alu(&format!("min_d{depth}_{i}"), "min");
+            g.connect(pair[0], 0, m, 0);
+            g.connect(pair[1], 0, m, 1);
+            nextl.push(m);
+        }
+        level = nextl;
+        depth += 1;
+    }
+    let out = g.mem("disparity", "stream_out");
+    g.wire(level[0], out, 0);
+    g
+}
+
+/// Depthwise-separable conv block: two per-channel 3x3 depthwise stencils
+/// followed by a 1x1 pointwise combine + ReLU. Models a MobileNet-style
+/// layer; two independent stencil subgraphs that converge late.
+pub fn depthwise_separable() -> AppGraph {
+    let mut g = AppGraph::new("depthwise");
+    let mut channel_outs = Vec::new();
+    for ch in 0..2 {
+        let input = g.mem(&format!("ch{ch}_in"), "stream_in");
+        let lb0 = g.mem(&format!("ch{ch}_lb0"), "linebuffer");
+        let lb1 = g.mem(&format!("ch{ch}_lb1"), "linebuffer");
+        g.wire(input, lb0, 0);
+        g.wire(lb0, lb1, 0);
+        let rows = [input, lb0, lb1];
+        let mut window = Vec::new();
+        for (r, &row) in rows.iter().enumerate() {
+            let r0 = g.add(&format!("ch{ch}_w{r}0"), AppOp::Reg);
+            let r1 = g.add(&format!("ch{ch}_w{r}1"), AppOp::Reg);
+            g.wire(row, r0, 0);
+            g.wire(r0, r1, 0);
+            window.extend([row, r0, r1]);
+        }
+        let coeffs = [1i64, 2, 1, 2, 4, 2, 1, 2, 1];
+        let mut products = Vec::new();
+        for (i, (&w, &c)) in window.iter().zip(coeffs.iter()).enumerate() {
+            let k = g.add(&format!("ch{ch}_k{i}"), AppOp::Const(c));
+            let m = g.alu(&format!("ch{ch}_mul{i}"), "mul");
+            g.wire(w, m, 0);
+            g.wire(k, m, 1);
+            products.push(m);
+        }
+        let sum = adder_tree(&mut g, &format!("ch{ch}_t"), products);
+        channel_outs.push(sum);
+    }
+    // Pointwise 1x1: weighted channel mix + ReLU.
+    let mut mixed = Vec::new();
+    for (ch, &c_out) in channel_outs.iter().enumerate() {
+        let w = g.add(&format!("pw_w{ch}"), AppOp::Const(5 + ch as i64));
+        let m = g.alu(&format!("pw_mul{ch}"), "mul");
+        g.wire(c_out, m, 0);
+        g.wire(w, m, 1);
+        mixed.push(m);
+    }
+    let sum = g.alu("pw_sum", "add");
+    g.connect(mixed[0], 0, sum, 0);
+    g.connect(mixed[1], 0, sum, 1);
+    let zero = g.add("zero", AppOp::Const(0));
+    let relu = g.alu("relu", "max");
+    g.wire(sum, relu, 0);
+    g.wire(zero, relu, 1);
+    let out = g.mem("out", "stream_out");
+    g.wire(relu, out, 0);
+    g
+}
+
+/// A stack of `n` chained 3x3 convolutions (conv -> relu -> conv ...):
+/// the fused multi-stage pipeline shape Halide emits for deep stencil
+/// programs. The biggest app in the dense suite: ~n x the PE count of a
+/// single stencil, with long producer→consumer routes between stages.
+pub fn conv_stack(n: usize) -> AppGraph {
+    let mut g = AppGraph::new("conv_stack");
+    let coeffs = [1i64, 2, 1, 2, 4, 2, 1, 2, 1];
+    let input = g.mem("in", "stream_in");
+    let mut stream = input;
+    for stage in 0..n {
+        let lb0 = g.mem(&format!("s{stage}_lb0"), "linebuffer");
+        let lb1 = g.mem(&format!("s{stage}_lb1"), "linebuffer");
+        g.wire(stream, lb0, 0);
+        g.wire(lb0, lb1, 0);
+        let rows = [stream, lb0, lb1];
+        let mut window = Vec::new();
+        for (r, &row) in rows.iter().enumerate() {
+            let r0 = g.add(&format!("s{stage}_w{r}0"), AppOp::Reg);
+            let r1 = g.add(&format!("s{stage}_w{r}1"), AppOp::Reg);
+            g.wire(row, r0, 0);
+            g.wire(r0, r1, 0);
+            window.extend([row, r0, r1]);
+        }
+        let mut products = Vec::new();
+        for (i, (&w, &c)) in window.iter().zip(coeffs.iter()).enumerate() {
+            let k = g.add(&format!("s{stage}_k{i}"), AppOp::Const(c));
+            let m = g.alu(&format!("s{stage}_mul{i}"), "mul");
+            g.wire(w, m, 0);
+            g.wire(k, m, 1);
+            products.push(m);
+        }
+        let sum = adder_tree(&mut g, &format!("s{stage}_t"), products);
+        let sh = g.add(&format!("s{stage}_sh"), AppOp::Const(4));
+        let norm = g.alu(&format!("s{stage}_norm"), "ashr");
+        g.wire(sum, norm, 0);
+        g.wire(sh, norm, 1);
+        let zero = g.add(&format!("s{stage}_zero"), AppOp::Const(0));
+        let relu = g.alu(&format!("s{stage}_relu"), "max");
+        g.wire(norm, relu, 0);
+        g.wire(zero, relu, 1);
+        stream = relu;
+    }
+    let out = g.mem("out", "stream_out");
+    g.wire(stream, out, 0);
+    g
+}
+
+/// The full suite used by the paper-style runtime experiments
+/// (Figs. 11/14/15 sweep "applications" on each interconnect variant).
+pub fn suite() -> Vec<AppGraph> {
+    vec![pointwise(8), gaussian(), harris(), camera(), resnet_block(), matmul(2)]
+}
+
+/// The dense suite: larger applications whose PE demand approaches the
+/// array capacity. Used by the topology-routability (Fig. 9) and
+/// track-count (Fig. 11) experiments, where the paper's effects only
+/// appear under channel pressure.
+pub fn dense_suite() -> Vec<AppGraph> {
+    vec![
+        harris(),
+        conv5x5(),
+        unsharp(),
+        fft8(),
+        stereo(4),
+        depthwise_separable(),
+        matmul(3),
+        conv_stack(3),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_suite_apps_are_well_formed() {
+        for app in suite() {
+            app.check().unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            assert!(app.len() >= 10, "{} too small ({})", app.name, app.len());
+        }
+    }
+
+    #[test]
+    fn harris_is_largest_stencil() {
+        assert!(harris().len() > gaussian().len());
+    }
+
+    #[test]
+    fn suite_spans_fanout_range() {
+        // At least one app must have a high-fanout net (stresses the
+        // ready-valid join logic) and one must be a pure chain.
+        let max_fanout = |g: &AppGraph| g.nets().iter().map(|n| n.sinks.len()).max().unwrap();
+        let fans: Vec<usize> = suite().iter().map(max_fanout).collect();
+        assert!(fans.iter().any(|&f| f >= 3), "{fans:?}");
+        assert!(fans.contains(&1) || fans.contains(&2));
+    }
+
+    #[test]
+    fn matmul_scales_quadratically() {
+        assert!(matmul(3).len() > matmul(2).len());
+        let g = matmul(2);
+        // 2 rows + 2 cols in, 4 mul + 4 mac, adders, 2 out
+        assert!(g.histogram()["mem"] == 6);
+    }
+
+    #[test]
+    fn pointwise_node_count_linear() {
+        // in + out + (const, op) per stage
+        assert_eq!(pointwise(4).len(), 2 + 2 * 4);
+        assert_eq!(pointwise(6).len(), 2 + 2 * 6);
+    }
+}

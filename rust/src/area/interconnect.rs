@@ -1,0 +1,211 @@
+//! Area accounting over the interconnect IR.
+//!
+//! Walks the routing graphs and prices every lowered component (SB muxes,
+//! CB muxes, pipeline registers, config storage, and — for the ready-valid
+//! backend — FIFOs, valid paths and ready-join logic), per tile and per
+//! structure. Feeds Figs. 8, 10 and 13.
+
+use std::collections::BTreeMap;
+
+use crate::ir::{Interconnect, NodeKind, SbIo};
+
+use super::model::AreaModel;
+
+/// Which hardware backend the area is priced for (§3.3 / Fig. 8).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FabricMode {
+    /// Fully static interconnect (baseline bar of Fig. 8).
+    Static,
+    /// Ready-valid with a full depth-`fifo_depth` FIFO at every register.
+    ReadyValidFullFifo { fifo_depth: usize },
+    /// Ready-valid with the split-FIFO optimization (Fig. 6).
+    ReadyValidSplitFifo,
+}
+
+impl FabricMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            FabricMode::Static => "static",
+            FabricMode::ReadyValidFullFifo { .. } => "rv-full-fifo",
+            FabricMode::ReadyValidSplitFifo => "rv-split-fifo",
+        }
+    }
+}
+
+/// Area of one tile, broken down by structure (µm²).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TileArea {
+    pub sb_um2: f64,
+    pub cb_um2: f64,
+    pub config_um2: f64,
+}
+
+impl TileArea {
+    pub fn total(&self) -> f64 {
+        self.sb_um2 + self.cb_um2 + self.config_um2
+    }
+}
+
+/// Area report for an interconnect.
+#[derive(Clone, Debug, Default)]
+pub struct AreaReport {
+    pub per_tile: BTreeMap<(u16, u16), TileArea>,
+}
+
+impl AreaReport {
+    pub fn total_um2(&self) -> f64 {
+        self.per_tile.values().map(TileArea::total).sum()
+    }
+
+    pub fn total_sb_um2(&self) -> f64 {
+        self.per_tile.values().map(|t| t.sb_um2).sum()
+    }
+
+    pub fn total_cb_um2(&self) -> f64 {
+        self.per_tile.values().map(|t| t.cb_um2).sum()
+    }
+
+    pub fn total_config_um2(&self) -> f64 {
+        self.per_tile.values().map(|t| t.config_um2).sum()
+    }
+
+    /// Area of a representative *interior* tile (margin tiles have smaller
+    /// muxes); this is what the paper's per-SB/per-CB bars report.
+    pub fn interior_tile(&self, ic: &Interconnect) -> TileArea {
+        let (x, y) = (ic.width / 2, ic.height / 2);
+        self.per_tile[&(x, y)]
+    }
+}
+
+/// Price the whole interconnect under a fabric mode.
+pub fn area_of(ic: &Interconnect, model: &AreaModel, mode: FabricMode) -> AreaReport {
+    let mut report = AreaReport::default();
+    for tile in &ic.tiles {
+        report.per_tile.insert((tile.x, tile.y), TileArea::default());
+    }
+
+    let rv = !matches!(mode, FabricMode::Static);
+
+    for g in ic.graphs.values() {
+        for (id, node) in g.iter() {
+            let entry = report.per_tile.get_mut(&(node.x, node.y)).expect("tile exists");
+            let fan_in = g.fan_in(id).len();
+            match &node.kind {
+                // SB output = data mux + its config; RV adds the valid
+                // mirror and ready-join logic.
+                NodeKind::SwitchBox { io: SbIo::Out, .. } => {
+                    entry.sb_um2 += model.to_um2(model.mux_ge(fan_in, node.width));
+                    entry.config_um2 += model.to_um2(model.mux_config_ge(fan_in));
+                    if rv {
+                        entry.sb_um2 += model.to_um2(model.valid_path_ge(fan_in));
+                        entry.sb_um2 += model.to_um2(model.ready_join_ge(fan_in));
+                    }
+                }
+                NodeKind::SwitchBox { io: SbIo::In, .. } => {}
+                // Input port = CB mux + config (+ RV mirrors).
+                NodeKind::Port { input: true, .. } => {
+                    entry.cb_um2 += model.to_um2(model.mux_ge(fan_in, node.width));
+                    entry.config_um2 += model.to_um2(model.mux_config_ge(fan_in));
+                    if rv {
+                        entry.cb_um2 += model.to_um2(model.valid_path_ge(fan_in));
+                        entry.cb_um2 += model.to_um2(model.ready_join_ge(fan_in));
+                    }
+                }
+                NodeKind::Port { input: false, .. } => {}
+                // Pipeline register; in RV modes it becomes (part of) a
+                // FIFO.
+                NodeKind::Register { .. } => {
+                    entry.sb_um2 += model.to_um2(model.register_ge(node.width));
+                    match mode {
+                        FabricMode::Static => {}
+                        FabricMode::ReadyValidFullFifo { fifo_depth } => {
+                            entry.sb_um2 +=
+                                model.to_um2(model.fifo_extra_ge(fifo_depth, node.width));
+                        }
+                        FabricMode::ReadyValidSplitFifo => {
+                            entry.sb_um2 += model.to_um2(model.split_fifo_extra_ge());
+                        }
+                    }
+                }
+                // Register bypass mux (2:1) + 1 config bit.
+                NodeKind::RegMux { .. } => {
+                    entry.sb_um2 += model.to_um2(model.mux_ge(fan_in, node.width));
+                    entry.config_um2 += model.to_um2(model.mux_config_ge(fan_in));
+                }
+            }
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    fn baseline_ic(tracks: u16) -> Interconnect {
+        let cfg = InterconnectConfig {
+            width: 6,
+            height: 6,
+            num_tracks: tracks,
+            mem_column_period: 0,
+            ..Default::default()
+        };
+        create_uniform_interconnect(&cfg)
+    }
+
+    #[test]
+    fn fig8_overheads_in_paper_range() {
+        // Paper §4.1: depth-2 FIFOs add 54% SB area over the static
+        // baseline; the split FIFO only 32%. We require the model to land
+        // near those ratios (the constants are calibrated for this).
+        let ic = baseline_ic(5);
+        let m = AreaModel::default();
+        let base = area_of(&ic, &m, FabricMode::Static).interior_tile(&ic).sb_um2;
+        let full = area_of(&ic, &m, FabricMode::ReadyValidFullFifo { fifo_depth: 2 })
+            .interior_tile(&ic)
+            .sb_um2;
+        let split =
+            area_of(&ic, &m, FabricMode::ReadyValidSplitFifo).interior_tile(&ic).sb_um2;
+        let full_ovh = full / base - 1.0;
+        let split_ovh = split / base - 1.0;
+        assert!((0.44..0.64).contains(&full_ovh), "full-FIFO overhead {full_ovh:.3}");
+        assert!((0.22..0.42).contains(&split_ovh), "split-FIFO overhead {split_ovh:.3}");
+        assert!(split_ovh < full_ovh);
+    }
+
+    #[test]
+    fn fig10_area_scales_with_tracks() {
+        let m = AreaModel::default();
+        let mut prev_sb = 0.0;
+        let mut prev_cb = 0.0;
+        for tracks in [2u16, 4, 6, 8] {
+            let ic = baseline_ic(tracks);
+            let t = area_of(&ic, &m, FabricMode::Static).interior_tile(&ic);
+            assert!(t.sb_um2 > prev_sb, "SB area must grow with tracks");
+            assert!(t.cb_um2 > prev_cb, "CB area must grow with tracks");
+            prev_sb = t.sb_um2;
+            prev_cb = t.cb_um2;
+        }
+    }
+
+    #[test]
+    fn margin_tiles_cheaper_than_interior() {
+        let ic = baseline_ic(5);
+        let m = AreaModel::default();
+        let r = area_of(&ic, &m, FabricMode::Static);
+        let corner = r.per_tile[&(0, 0)];
+        let interior = r.interior_tile(&ic);
+        assert!(corner.total() <= interior.total());
+    }
+
+    #[test]
+    fn totals_are_sums_of_tiles() {
+        let ic = baseline_ic(3);
+        let m = AreaModel::default();
+        let r = area_of(&ic, &m, FabricMode::Static);
+        let sum: f64 = r.per_tile.values().map(TileArea::total).sum();
+        assert!((r.total_um2() - sum).abs() < 1e-9);
+        assert!(r.total_um2() > 0.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! Area modeling (GF12-calibrated gate-equivalent model) — the substrate
+//! standing in for the paper's Global Foundries 12 nm synthesis flow.
+//! See DESIGN.md §3 for the substitution rationale.
+
+pub mod interconnect;
+pub mod model;
+pub mod power;
+
+pub use interconnect::{area_of, AreaReport, FabricMode, TileArea};
+pub use model::AreaModel;
+pub use power::{energy_of, EnergyModel, EnergyReport};

@@ -1,0 +1,175 @@
+//! Gate-level area model.
+//!
+//! The paper reports areas from Global Foundries 12 nm synthesis. We have
+//! no PDK, so we substitute a component-level model in *gate equivalents*
+//! (GE = one NAND2), converted to µm² with a GF12-representative factor.
+//! Every paper claim this model feeds is *relative* (overhead percentages
+//! in Fig. 8, scaling trends in Figs. 10/13), which gate-count models
+//! capture faithfully; see DESIGN.md §3.
+
+/// Technology/area constants. Defaults approximate a 12 nm standard-cell
+/// library; `calibration` tests pin the Fig. 8 ratios.
+#[derive(Clone, Copy, Debug)]
+pub struct AreaModel {
+    /// µm² per gate equivalent.
+    pub um2_per_ge: f64,
+    /// One bit of a 2:1 mux (the unit of an AOI mux tree).
+    pub mux2_ge: f64,
+    /// One flip-flop bit (config or datapath).
+    pub flop_ge: f64,
+    /// One-hot decoder cost per decoded output bit (AOI mux select
+    /// pre-decode — the paper reuses these signals for ready joining).
+    pub decoder_ge_per_out: f64,
+    /// FIFO control per register entry converted to FIFO duty: pointer
+    /// bits, full/empty comparators, enqueue/dequeue handshake.
+    pub fifo_ctrl_ge_per_entry: f64,
+    /// Extra control for the *split* FIFO: cross-tile handshake plus the
+    /// chained enable logic of Fig. 6 (no second data register!).
+    pub split_fifo_ctrl_ge: f64,
+    /// Ready-join logic per mux input: OR of inverted one-hot with the
+    /// per-direction ready, plus its share of the final AND tree (Fig. 5).
+    pub ready_join_ge_per_input: f64,
+    /// Per-track valid-signal routing overhead (1-bit mux mirror of the
+    /// data mux).
+    pub valid_path_ge_per_input: f64,
+}
+
+impl Default for AreaModel {
+    fn default() -> Self {
+        AreaModel {
+            um2_per_ge: 0.121,
+            mux2_ge: 1.79,
+            flop_ge: 4.49,
+            decoder_ge_per_out: 1.2,
+            // Calibrated so the Fig. 8 experiment reproduces the paper's
+            // overheads on the §4.1 baseline (five 16-bit tracks, 4-in /
+            // 2-out PEs): +54% for depth-2 FIFOs, +32% for split FIFOs.
+            // The split-FIFO control is richer than a single in-tile
+            // entry's (cross-tile handshake, per-register position
+            // configuration — §3.3), which is why it exceeds
+            // 2x `fifo_ctrl_ge_per_entry`.
+            fifo_ctrl_ge_per_entry: 13.0,
+            split_fifo_ctrl_ge: 48.0,
+            ready_join_ge_per_input: 2.1,
+            valid_path_ge_per_input: 2.5,
+        }
+    }
+}
+
+impl AreaModel {
+    /// `n`:1 AOI mux over a `width`-bit datapath, including the one-hot
+    /// select decoder. `n <= 1` is a wire.
+    pub fn mux_ge(&self, fan_in: usize, width: u8) -> f64 {
+        if fan_in <= 1 {
+            return 0.0;
+        }
+        let tree = (fan_in as f64 - 1.0) * self.mux2_ge * width as f64;
+        let decoder = fan_in as f64 * self.decoder_ge_per_out;
+        tree + decoder
+    }
+
+    /// Configuration storage for an `n`:1 mux: ceil(log2 n) flop bits.
+    pub fn mux_config_ge(&self, fan_in: usize) -> f64 {
+        if fan_in <= 1 {
+            return 0.0;
+        }
+        (usize::BITS - (fan_in - 1).leading_zeros()) as f64 * self.flop_ge
+    }
+
+    /// Number of configuration bits an `n`:1 mux needs.
+    pub fn mux_config_bits(fan_in: usize) -> u32 {
+        if fan_in <= 1 {
+            0
+        } else {
+            usize::BITS - (fan_in - 1).leading_zeros()
+        }
+    }
+
+    /// A `width`-bit register.
+    pub fn register_ge(&self, width: u8) -> f64 {
+        width as f64 * self.flop_ge
+    }
+
+    /// Full in-tile FIFO of `depth` entries over `width` bits: the first
+    /// entry reuses the existing pipeline register; the remaining
+    /// `depth-1` entries add data flops; every entry adds control.
+    pub fn fifo_extra_ge(&self, depth: usize, width: u8) -> f64 {
+        assert!(depth >= 1);
+        (depth as f64 - 1.0) * self.register_ge(width)
+            + depth as f64 * self.fifo_ctrl_ge_per_entry
+    }
+
+    /// Split-FIFO extra (Fig. 6): the second entry lives in the adjacent
+    /// tile's already-existing register, so only control is added.
+    pub fn split_fifo_extra_ge(&self) -> f64 {
+        self.split_fifo_ctrl_ge
+    }
+
+    /// Deeper split-FIFO chain (§3.3: "we can also chain more registers
+    /// together into a deeper FIFO using the same logic"): every chained
+    /// entry past the first reuses a neighbouring tile's register and
+    /// adds one cross-tile control stage. `chain == 2` is the classic
+    /// split FIFO of Fig. 6.
+    pub fn split_fifo_chain_extra_ge(&self, chain: usize) -> f64 {
+        assert!(chain >= 2, "a split chain needs at least two entries");
+        (chain as f64 - 1.0) * self.split_fifo_ctrl_ge
+    }
+
+    /// Ready-joining logic for a mux of `fan_in` inputs (Fig. 5,
+    /// optimized variant reusing the one-hot decode).
+    pub fn ready_join_ge(&self, fan_in: usize) -> f64 {
+        if fan_in <= 1 {
+            return 0.0;
+        }
+        fan_in as f64 * self.ready_join_ge_per_input
+    }
+
+    /// Valid-path mirror of a data mux (1-bit mux reusing the data mux's
+    /// config).
+    pub fn valid_path_ge(&self, fan_in: usize) -> f64 {
+        if fan_in <= 1 {
+            return 0.0;
+        }
+        fan_in as f64 * self.valid_path_ge_per_input
+    }
+
+    /// Convert GE to µm².
+    pub fn to_um2(&self, ge: f64) -> f64 {
+        ge * self.um2_per_ge
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mux_area_monotone_in_fan_in_and_width() {
+        let m = AreaModel::default();
+        assert_eq!(m.mux_ge(1, 16), 0.0);
+        assert!(m.mux_ge(2, 16) < m.mux_ge(3, 16));
+        assert!(m.mux_ge(5, 16) < m.mux_ge(5, 32));
+    }
+
+    #[test]
+    fn config_bits_are_ceil_log2() {
+        assert_eq!(AreaModel::mux_config_bits(1), 0);
+        assert_eq!(AreaModel::mux_config_bits(2), 1);
+        assert_eq!(AreaModel::mux_config_bits(5), 3);
+        assert_eq!(AreaModel::mux_config_bits(8), 3);
+        assert_eq!(AreaModel::mux_config_bits(9), 4);
+    }
+
+    #[test]
+    fn split_fifo_cheaper_than_full_fifo() {
+        let m = AreaModel::default();
+        assert!(m.split_fifo_extra_ge() < m.fifo_extra_ge(2, 16));
+    }
+
+    #[test]
+    fn full_fifo_depth2_dominated_by_second_data_register() {
+        let m = AreaModel::default();
+        let extra = m.fifo_extra_ge(2, 16);
+        assert!(extra > m.register_ge(16));
+    }
+}

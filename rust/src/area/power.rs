@@ -1,0 +1,169 @@
+//! Interconnect energy model.
+//!
+//! The paper motivates interconnect DSE with the observation that the
+//! reconfigurable interconnect is "over 50% of the CGRA area and 25% of
+//! the CGRA energy" [Vasilyev et al.]. This module prices dynamic energy
+//! per routed application: every net sink path charges the muxes, wires
+//! and registers it traverses per token, plus per-cycle clock load on
+//! configured registers; PE/MEM compute energy uses per-op constants so
+//! the interconnect *share* can be reported.
+
+use crate::ir::{Interconnect, NodeKind, SbIo};
+use crate::pnr::app::AppOp;
+use crate::pnr::{PackedApp, RoutingResult};
+
+/// Energy constants (fJ at nominal voltage, 12nm-representative; only
+/// relative magnitudes matter for the share-of-energy experiments).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyModel {
+    /// Switching one mux (per bit).
+    pub mux_fj_per_bit: f64,
+    /// Driving one inter-tile track hop (per bit).
+    pub wire_fj_per_bit: f64,
+    /// Register clocking per cycle (per bit, includes clock tree share).
+    pub reg_clk_fj_per_bit: f64,
+    /// PE ALU op.
+    pub alu_op_fj: f64,
+    /// Memory access.
+    pub mem_access_fj: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        EnergyModel {
+            mux_fj_per_bit: 1.4,
+            wire_fj_per_bit: 4.2,
+            reg_clk_fj_per_bit: 1.1,
+            // 16-bit multiply-class PE op and SRAM access energies in a
+            // 12nm-class node; calibrated so the interconnect share of
+            // stencil apps lands near the ~25% the paper cites.
+            alu_op_fj: 1200.0,
+            mem_access_fj: 2600.0,
+        }
+    }
+}
+
+/// Energy report for one routed application (pJ for a whole workload).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyReport {
+    pub interconnect_pj: f64,
+    pub compute_pj: f64,
+    pub tokens: usize,
+}
+
+impl EnergyReport {
+    pub fn total_pj(&self) -> f64 {
+        self.interconnect_pj + self.compute_pj
+    }
+
+    /// The paper's headline ratio: interconnect share of total energy.
+    pub fn interconnect_share(&self) -> f64 {
+        self.interconnect_pj / self.total_pj().max(1e-12)
+    }
+}
+
+/// Estimate energy for `tokens` streamed elements through a routed app.
+pub fn energy_of(
+    ic: &Interconnect,
+    packed: &PackedApp,
+    routing: &RoutingResult,
+    bit_width: u8,
+    model: &EnergyModel,
+    tokens: usize,
+) -> EnergyReport {
+    let g = ic.graph(bit_width);
+    let bits = bit_width as f64;
+    let mut interconnect_fj_per_token = 0.0;
+
+    for tree in &routing.trees {
+        for path in &tree.sink_paths {
+            for (i, &n) in path.iter().enumerate() {
+                match &g.node(n).kind {
+                    // Every traversed mux switches once per token.
+                    NodeKind::SwitchBox { io: SbIo::Out, .. }
+                    | NodeKind::Port { input: true, .. }
+                    | NodeKind::RegMux { .. } => {
+                        interconnect_fj_per_token += model.mux_fj_per_bit * bits;
+                    }
+                    NodeKind::Register { .. } => {
+                        interconnect_fj_per_token += model.reg_clk_fj_per_bit * bits;
+                    }
+                    _ => {}
+                }
+                if i + 1 < path.len() && g.wire_delay(n, path[i + 1]) > 0 {
+                    interconnect_fj_per_token += model.wire_fj_per_bit * bits;
+                }
+            }
+        }
+    }
+
+    let mut compute_fj_per_token = 0.0;
+    for (_, n) in packed.app.iter() {
+        compute_fj_per_token += match n.op {
+            AppOp::Alu(_) => model.alu_op_fj,
+            AppOp::Mem(_) => model.mem_access_fj,
+            AppOp::Reg => model.reg_clk_fj_per_bit * bits,
+            AppOp::Const(_) => 0.0,
+        };
+    }
+    // Packed input registers clock every cycle too.
+    compute_fj_per_token +=
+        packed.packed_regs.len() as f64 * model.reg_clk_fj_per_bit * bits;
+
+    EnergyReport {
+        interconnect_pj: interconnect_fj_per_token * tokens as f64 / 1000.0,
+        compute_pj: compute_fj_per_token * tokens as f64 / 1000.0,
+        tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use crate::pnr::{run_flow, FlowParams, SaParams};
+
+    fn routed(app_name: &str) -> (Interconnect, PackedApp, RoutingResult) {
+        let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+        let app = apps::suite().into_iter().find(|a| a.name == app_name).unwrap();
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 6, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_flow(&ic, &app, &params).unwrap();
+        (ic, r.packed, r.routing)
+    }
+
+    #[test]
+    fn energy_scales_linearly_with_tokens() {
+        let (ic, packed, routing) = routed("gaussian");
+        let m = EnergyModel::default();
+        let e1 = energy_of(&ic, &packed, &routing, 16, &m, 1000);
+        let e4 = energy_of(&ic, &packed, &routing, 16, &m, 4000);
+        assert!((e4.total_pj() / e1.total_pj() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn interconnect_share_in_plausible_band() {
+        // The Vasilyev/paper motivation: interconnect ≈ 25% of energy.
+        // Our model should land in a broad band around that for stencil
+        // apps (10%..45%) — it is a calibration sanity check, not a claim.
+        let (ic, packed, routing) = routed("harris");
+        let e = energy_of(&ic, &packed, &routing, 16, &EnergyModel::default(), 4096);
+        let share = e.interconnect_share();
+        assert!((0.08..0.5).contains(&share), "share {share}");
+    }
+
+    #[test]
+    fn longer_routes_cost_more_energy() {
+        let (ic, packed, routing) = routed("pointwise");
+        let m = EnergyModel::default();
+        let e = energy_of(&ic, &packed, &routing, 16, &m, 1024);
+        // Doubling wire energy must increase interconnect energy.
+        let m2 = EnergyModel { wire_fj_per_bit: m.wire_fj_per_bit * 2.0, ..m };
+        let e2 = energy_of(&ic, &packed, &routing, 16, &m2, 1024);
+        assert!(e2.interconnect_pj > e.interconnect_pj);
+        assert_eq!(e2.compute_pj, e.compute_pj);
+    }
+}

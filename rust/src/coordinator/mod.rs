@@ -1,0 +1,147 @@
+//! Design-space-exploration coordinator (the paper's §4 driver).
+//!
+//! Orchestrates parallel PnR runs across interconnect variants,
+//! regenerates every figure of the paper's evaluation
+//! ([`experiments`]), and owns the global-placement backend selection:
+//! the AOT JAX/Pallas artifact executed through PJRT when available
+//! (behind a single-owner service thread — PJRT handles are not Send),
+//! the native fallback otherwise.
+
+pub mod experiments;
+pub mod viz;
+
+pub use experiments::{
+    all_experiments, alpha_sweep, fig08_fifo_area, fig09_topology, fig10_area_tracks,
+    fig11_runtime_tracks, fig13_port_area, fig14_sb_ports_runtime, fig15_cb_ports_runtime,
+    dynamic_noc_comparison, fifo_chain_depth, motivation_shares, reg_density_sweep,
+    rv_throughput, run_suite,
+    tight_array, ExpOptions,
+};
+
+use std::sync::mpsc;
+use std::sync::Mutex;
+
+use crate::pnr::place::{GlobalPlacer, GlobalProblem, NativePlacer};
+
+struct Job {
+    problem: GlobalProblem,
+    xs0: Vec<f32>,
+    ys0: Vec<f32>,
+    reply: mpsc::Sender<(Vec<f32>, Vec<f32>)>,
+}
+
+/// A `Send + Sync` front for a non-`Send` placer: a dedicated worker
+/// thread owns the backend (e.g. the PJRT executable) and serves
+/// `optimize` requests over a channel. PnR threads share the service.
+pub struct PlacerService {
+    tx: Mutex<mpsc::Sender<Job>>,
+    name: &'static str,
+}
+
+impl PlacerService {
+    /// Spawn a worker that constructs its backend *inside* the thread
+    /// (PJRT handles never cross threads).
+    pub fn spawn<F>(name: &'static str, factory: F) -> PlacerService
+    where
+        F: FnOnce() -> Box<dyn GlobalPlacer> + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<Job>();
+        std::thread::spawn(move || {
+            let backend = factory();
+            while let Ok(job) = rx.recv() {
+                let out = backend.optimize(&job.problem, &job.xs0, &job.ys0);
+                let _ = job.reply.send(out);
+            }
+        });
+        PlacerService { tx: Mutex::new(tx), name }
+    }
+}
+
+impl GlobalPlacer for PlacerService {
+    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("placer service poisoned")
+            .send(Job { problem: p.clone(), xs0: xs0.to_vec(), ys0: ys0.to_vec(), reply })
+            .expect("placer service gone");
+        rx.recv().expect("placer service dropped reply")
+    }
+
+    fn name(&self) -> &'static str {
+        self.name
+    }
+}
+
+/// Best available global-placement backend: the AOT JAX/Pallas artifact
+/// (via PJRT, wrapped in a service thread) when `artifacts/` is present;
+/// the native fallback otherwise.
+pub fn default_placer() -> Box<dyn GlobalPlacer + Sync + Send> {
+    let dir = crate::runtime::artifacts_dir();
+    if dir.join("placer_step.hlo.txt").exists() {
+        Box::new(PlacerService::spawn("pjrt-jax-pallas", move || {
+            match crate::runtime::PjrtPlacer::load(&dir) {
+                Ok(p) => Box::new(p),
+                Err(e) => {
+                    eprintln!("note: PJRT placer failed to load ({e}); native fallback");
+                    Box::new(NativePlacer::default())
+                }
+            }
+        }))
+    } else {
+        eprintln!("note: artifacts missing; run `make artifacts` for the PJRT placer");
+        Box::new(NativePlacer::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pnr::place::build_global_problem;
+
+    #[test]
+    fn placer_service_matches_native_directly() {
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 6,
+            height: 6,
+            num_tracks: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let app = crate::pnr::pack::pack(&crate::apps::gaussian()).app;
+        let p = build_global_problem(&app, &ic);
+        let (xs0, ys0) = crate::pnr::place::initial_positions(&app, &ic, 3);
+        let direct = NativePlacer::default().optimize(&p, &xs0, &ys0);
+        let svc = PlacerService::spawn("native", || Box::new(NativePlacer::default()));
+        let via = svc.optimize(&p, &xs0, &ys0);
+        assert_eq!(direct, via);
+        assert_eq!(svc.name(), "native");
+    }
+
+    #[test]
+    fn placer_service_is_shareable_across_threads() {
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 6,
+            height: 6,
+            num_tracks: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let app = crate::pnr::pack::pack(&crate::apps::camera()).app;
+        let p = build_global_problem(&app, &ic);
+        let svc = PlacerService::spawn("native", || Box::new(NativePlacer::default()));
+        std::thread::scope(|s| {
+            for seed in 0..4u64 {
+                let (svc, p, app, ic) = (&svc, &p, &app, &ic);
+                s.spawn(move || {
+                    let (xs0, ys0) = crate::pnr::place::initial_positions(app, ic, seed);
+                    let (xs, ys) = svc.optimize(p, &xs0, &ys0);
+                    assert_eq!(xs.len(), app.len());
+                    assert_eq!(ys.len(), app.len());
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,113 @@
+//! ASCII visualization of placements and routing utilization.
+//!
+//! DSE is much easier to reason about with a picture: `placement_map`
+//! draws which vertex sits on which tile; `congestion_map` shades tiles
+//! by how many routed nets pass through them (the routing analogue of
+//! the paper's pass-through-tile discussion in Eq. 2).
+
+use crate::ir::{CoreKind, Interconnect};
+use crate::pnr::app::AppGraph;
+use crate::pnr::{Placement, RoutingResult};
+
+/// Draw the placement: `P`/`M` = PE/MEM tile hosting a vertex (letter
+/// indexes the vertex), `.` = empty PE, `:` = empty MEM column tile.
+pub fn placement_map(ic: &Interconnect, app: &AppGraph, placement: &Placement) -> String {
+    let mut grid = vec![vec![' '; ic.width as usize]; ic.height as usize];
+    for y in 0..ic.height {
+        for x in 0..ic.width {
+            grid[y as usize][x as usize] = match ic.tile(x, y).core.kind {
+                CoreKind::Pe => '.',
+                CoreKind::Mem => ':',
+                CoreKind::Io => '-',
+            };
+        }
+    }
+    for (i, (id, _)) in app.iter().enumerate() {
+        let (x, y) = placement.of(id);
+        // a..z then A..Z then '#'
+        let c = if i < 26 {
+            (b'a' + i as u8) as char
+        } else if i < 52 {
+            (b'A' + (i - 26) as u8) as char
+        } else {
+            '#'
+        };
+        grid[y as usize][x as usize] = c;
+    }
+    let mut s = String::new();
+    for row in grid {
+        s.extend(row);
+        s.push('\n');
+    }
+    s
+}
+
+/// Legend lines mapping glyphs to vertex names (first 52 vertices).
+pub fn placement_legend(app: &AppGraph) -> String {
+    let mut s = String::new();
+    for (i, (_, n)) in app.iter().enumerate() {
+        if i >= 52 {
+            s.push_str("  ... (remaining vertices shown as '#')\n");
+            break;
+        }
+        let c = if i < 26 { (b'a' + i as u8) as char } else { (b'A' + (i - 26) as u8) as char };
+        s.push_str(&format!("  {c} = {}\n", n.name));
+    }
+    s
+}
+
+/// Shade tiles by routing-node usage: ` .:-=+*#%@` from idle to hot.
+pub fn congestion_map(ic: &Interconnect, bit_width: u8, routing: &RoutingResult) -> String {
+    let g = ic.graph(bit_width);
+    let mut counts = vec![0usize; ic.width as usize * ic.height as usize];
+    for tree in &routing.trees {
+        for node in tree.nodes() {
+            let n = g.node(node);
+            counts[n.y as usize * ic.width as usize + n.x as usize] += 1;
+        }
+    }
+    let max = counts.iter().copied().max().unwrap_or(1).max(1);
+    let shades: &[u8] = b" .:-=+*#%@";
+    let mut s = String::new();
+    for y in 0..ic.height as usize {
+        for x in 0..ic.width as usize {
+            let c = counts[y * ic.width as usize + x];
+            let idx = c * (shades.len() - 1) / max;
+            s.push(shades[idx] as char);
+        }
+        s.push('\n');
+    }
+    s.push_str(&format!("max {} routing nodes in one tile\n", max));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use crate::pnr::{run_flow, FlowParams, SaParams};
+
+    #[test]
+    fn maps_render_with_correct_dimensions() {
+        let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_flow(&ic, &apps::gaussian(), &params).unwrap();
+        let pm = placement_map(&ic, &r.packed.app, &r.placement);
+        assert_eq!(pm.lines().count(), 8);
+        assert!(pm.lines().all(|l| l.len() == 8));
+        // Every placed vertex appears exactly once.
+        let letters = pm.chars().filter(|c| c.is_ascii_alphabetic()).count();
+        assert_eq!(letters, r.packed.app.len().min(52));
+
+        let cm = congestion_map(&ic, 16, &r.routing);
+        assert_eq!(cm.lines().count(), 9); // 8 rows + footer
+        assert!(cm.contains("max"));
+
+        let legend = placement_legend(&r.packed.app);
+        assert!(legend.contains("a = "));
+    }
+}

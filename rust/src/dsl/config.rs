@@ -1,0 +1,228 @@
+//! Interconnect configuration: the parameter surface of the Canal eDSL's
+//! high-level helpers (the paper's Fig. 4:
+//! `create_uniform_interconnect(width=32, height=32, sb_type="wilton",
+//! num_tracks=5, track_width=16, reg_density=1)`), extended with the
+//! design-space axes of §4.2 (SB/CB core-connection sides, Fig. 12/13).
+
+use super::sb::SbTopology;
+
+/// Delay model attached to generated IR nodes/edges (Fig. 7: "timing
+/// information as weights"). Values are representative of a 12 nm CGRA
+/// fabric; only *relative* timing matters for the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayModel {
+    /// Switch-box output mux propagation delay.
+    pub sb_mux_ps: u32,
+    /// Connection-box mux propagation delay.
+    pub cb_mux_ps: u32,
+    /// Inter-tile track wire delay per hop.
+    pub wire_ps: u32,
+    /// Pipeline-register clk-to-q (counts on the downstream segment).
+    pub reg_clk_q_ps: u32,
+    /// Register-bypass mux delay.
+    pub reg_mux_ps: u32,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        DelayModel { sb_mux_ps: 45, cb_mux_ps: 38, wire_ps: 90, reg_clk_q_ps: 55, reg_mux_ps: 25 }
+    }
+}
+
+/// How many of a tile's four sides carry core↔fabric connections
+/// (§4.2.2). The paper reduces 4 → 3 by dropping the east-facing
+/// connections, then 3 → 2 by also dropping south.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ConnectedSides(pub u8);
+
+impl ConnectedSides {
+    pub const FOUR: ConnectedSides = ConnectedSides(4);
+    pub const THREE: ConnectedSides = ConnectedSides(3);
+    pub const TWO: ConnectedSides = ConnectedSides(2);
+
+    /// The sides kept, in the paper's reduction order: always N and W;
+    /// 3 sides adds S; 4 sides adds E.
+    pub fn sides(self) -> Vec<crate::ir::Side> {
+        use crate::ir::Side::*;
+        match self.0 {
+            4 => vec![North, South, East, West],
+            3 => vec![North, South, West],
+            2 => vec![North, West],
+            n => panic!("connected sides must be 2..=4, got {n}"),
+        }
+    }
+}
+
+/// How core *outputs* attach to switch-box tracks.
+///
+/// `AllTracks` (the default) lets every output drive every track of each
+/// connected side — maximal endpoint flexibility. `Pinned` models the
+/// depopulated style (output `j` drives only tracks `t ≡ j mod
+/// n_outputs`): a net's starting track is then fixed by its driver, which
+/// is exactly the restriction §4.2.1 blames for Disjoint's unroutability
+/// ("if you want to route a wire ... starting from a certain track
+/// number, you must only use that track number").
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OutputTrackMode {
+    AllTracks,
+    Pinned,
+}
+
+impl OutputTrackMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            OutputTrackMode::AllTracks => "all",
+            OutputTrackMode::Pinned => "pinned",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OutputTrackMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "all" => Some(OutputTrackMode::AllTracks),
+            "pinned" => Some(OutputTrackMode::Pinned),
+            _ => None,
+        }
+    }
+}
+
+/// Full parameterization of a uniform interconnect.
+#[derive(Clone, Debug)]
+pub struct InterconnectConfig {
+    /// Array width/height in tiles.
+    pub width: u16,
+    pub height: u16,
+    /// Routing tracks per side, per bit-width layer.
+    pub num_tracks: u16,
+    /// Bit widths of the routing layers (e.g. `[16]`, or `[1, 16]` for a
+    /// control layer plus a data layer).
+    pub track_widths: Vec<u8>,
+    /// Switch-box topology.
+    pub sb_topology: SbTopology,
+    /// Pipeline-register density: a register on every SB output of every
+    /// tile whose `(x + y) % reg_density == 0`. `0` disables pipeline
+    /// registers entirely. `1` ⇒ registers in every tile (the paper's
+    /// `reg_density=1`).
+    pub reg_density: u16,
+    /// Sides on which core *outputs* drive the switch box (Fig. 12/14).
+    pub sb_core_sides: ConnectedSides,
+    /// Which tracks each core output drives on those sides.
+    pub output_tracks: OutputTrackMode,
+    /// Sides whose incoming tracks feed the connection box (Fig. 13/15).
+    pub cb_core_sides: ConnectedSides,
+    /// Every `mem_column_period`-th column is a MEM column (0 = no MEM
+    /// tiles). CGRAs "typically have fewer rows or columns of memory
+    /// tiles" (§3.4); Amber-style arrays use every 4th column.
+    pub mem_column_period: u16,
+    /// Delay model for STA / timing-driven routing.
+    pub delays: DelayModel,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 5,
+            track_widths: vec![16],
+            sb_topology: SbTopology::Wilton,
+            reg_density: 1,
+            sb_core_sides: ConnectedSides::FOUR,
+            output_tracks: OutputTrackMode::AllTracks,
+            cb_core_sides: ConnectedSides::FOUR,
+            mem_column_period: 4,
+            delays: DelayModel::default(),
+        }
+    }
+}
+
+impl InterconnectConfig {
+    /// The paper's §4 baseline: five 16-bit tracks, Wilton, PEs with four
+    /// inputs and two outputs, MEM every 4th column.
+    pub fn paper_baseline(width: u16, height: u16) -> Self {
+        InterconnectConfig { width, height, ..Default::default() }
+    }
+
+    /// One-line descriptor recorded in generated collateral.
+    pub fn descriptor(&self) -> String {
+        format!(
+            "uniform {}x{} sb={} tracks={} widths={:?} reg_density={} sb_sides={} cb_sides={} mem_period={} out_tracks={}",
+            self.width,
+            self.height,
+            self.sb_topology.name(),
+            self.num_tracks,
+            self.track_widths,
+            self.reg_density,
+            self.sb_core_sides.0,
+            self.cb_core_sides.0,
+            self.mem_column_period,
+            self.output_tracks.name(),
+        )
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.width == 0 || self.height == 0 {
+            return Err("array dimensions must be nonzero".into());
+        }
+        if self.num_tracks == 0 {
+            return Err("need at least one routing track".into());
+        }
+        if self.track_widths.is_empty() {
+            return Err("need at least one track width".into());
+        }
+        let mut w = self.track_widths.clone();
+        w.dedup();
+        if w.len() != self.track_widths.len() {
+            return Err("duplicate track widths".into());
+        }
+        if !(2..=4).contains(&self.sb_core_sides.0) || !(2..=4).contains(&self.cb_core_sides.0) {
+            return Err("connected sides must be in 2..=4".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::Side;
+
+    #[test]
+    fn side_reduction_follows_paper_order() {
+        // 4 -> 3 removes east; 3 -> 2 removes south.
+        let four = ConnectedSides::FOUR.sides();
+        let three = ConnectedSides::THREE.sides();
+        let two = ConnectedSides::TWO.sides();
+        assert!(four.contains(&Side::East) && !three.contains(&Side::East));
+        assert!(three.contains(&Side::South) && !two.contains(&Side::South));
+        assert_eq!(two, vec![Side::North, Side::West]);
+    }
+
+    #[test]
+    fn default_config_is_valid_paper_baseline() {
+        let c = InterconnectConfig::paper_baseline(16, 16);
+        c.validate().unwrap();
+        assert_eq!(c.num_tracks, 5);
+        assert_eq!(c.track_widths, vec![16]);
+        assert_eq!(c.sb_topology, SbTopology::Wilton);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        let mut c = InterconnectConfig::default();
+        c.num_tracks = 0;
+        assert!(c.validate().is_err());
+        let mut c = InterconnectConfig::default();
+        c.width = 0;
+        assert!(c.validate().is_err());
+        let mut c = InterconnectConfig::default();
+        c.track_widths = vec![16, 16];
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn descriptor_mentions_key_axes() {
+        let d = InterconnectConfig::default().descriptor();
+        assert!(d.contains("wilton"));
+        assert!(d.contains("tracks=5"));
+    }
+}

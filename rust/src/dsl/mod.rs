@@ -1,0 +1,21 @@
+//! The Canal eDSL (§3.2): programmatic construction of interconnect IR.
+//!
+//! Two levels, mirroring the paper:
+//! - [`builder`] — low-level node creation and wiring (Fig. 4, top);
+//! - [`uniform::create_uniform_interconnect`] — high-level helper that
+//!   builds a full uniform array from an [`config::InterconnectConfig`]
+//!   (Fig. 4, bottom).
+//!
+//! [`spec`] adds a textual front-end so the CLI can load interconnect
+//! specifications from files.
+
+pub mod builder;
+pub mod config;
+pub mod sb;
+pub mod spec;
+pub mod uniform;
+
+pub use builder::GraphBuilder;
+pub use config::{ConnectedSides, DelayModel, InterconnectConfig, OutputTrackMode};
+pub use sb::SbTopology;
+pub use uniform::create_uniform_interconnect;

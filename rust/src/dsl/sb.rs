@@ -1,0 +1,210 @@
+//! Switch-box topology policies (§4.2.1, Fig. 9).
+//!
+//! A switch-box topology defines, for every *incoming* track on one side,
+//! which *outgoing* track it connects to on each of the other three sides
+//! (no U-turns). Both topologies evaluated in the paper connect each input
+//! to each other side exactly once, so they have identical area; they
+//! differ only in which track the turn lands on:
+//!
+//! - **Disjoint** [Weste & Eshraghian]: track `i` connects to track `i` on
+//!   every other side. A route that starts on track `i` is confined to
+//!   track `i` for its whole life — the restriction the paper blames for
+//!   Disjoint failing to route.
+//! - **Wilton** [Wilton '97]: straight-through connections keep the track
+//!   number, but turns *permute* it, so the router can change tracks at
+//!   every corner. The specific turn permutations below follow the
+//!   classic Wilton construction (a cyclic shift on one diagonal and the
+//!   reflection `W - t mod W` on the other); the property the paper's
+//!   routability result rests on is that every turn is a non-identity
+//!   bijection.
+
+use crate::ir::Side;
+
+/// Supported switch-box topologies.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum SbTopology {
+    Wilton,
+    Disjoint,
+    /// Imran/universal-style variant (extension beyond the paper's two):
+    /// reflection on every turn. Kept for DSE breadth.
+    Imran,
+}
+
+impl SbTopology {
+    pub fn name(self) -> &'static str {
+        match self {
+            SbTopology::Wilton => "wilton",
+            SbTopology::Disjoint => "disjoint",
+            SbTopology::Imran => "imran",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SbTopology> {
+        match s.to_ascii_lowercase().as_str() {
+            "wilton" => Some(SbTopology::Wilton),
+            "disjoint" => Some(SbTopology::Disjoint),
+            "imran" => Some(SbTopology::Imran),
+            _ => None,
+        }
+    }
+
+    /// Outgoing track on `to` for a signal entering on `from` at `track`,
+    /// with `num_tracks` tracks per side. `from == to` (U-turn) is not a
+    /// connection and returns `None`.
+    pub fn map_track(self, from: Side, to: Side, track: u16, num_tracks: u16) -> Option<u16> {
+        if from == to {
+            return None;
+        }
+        let nt = num_tracks;
+        let t = track;
+        debug_assert!(t < nt);
+        let straight = from.opposite() == to;
+        let mapped = match self {
+            SbTopology::Disjoint => t,
+            SbTopology::Imran => {
+                if straight {
+                    t
+                } else {
+                    (nt - t) % nt
+                }
+            }
+            SbTopology::Wilton => {
+                if straight {
+                    t
+                } else {
+                    use Side::*;
+                    match (from, to) {
+                        // Reflection diagonal (self-inverse pairs).
+                        (West, North) | (North, West) => (nt - t) % nt,
+                        (South, West) | (West, South) => (nt - t) % nt,
+                        // Cyclic-shift diagonal.
+                        (North, East) | (East, South) => (t + 1) % nt,
+                        (East, North) | (South, East) => (t + nt - 1) % nt,
+                        _ => unreachable!("straight handled above"),
+                    }
+                }
+            }
+        };
+        Some(mapped)
+    }
+
+    /// Enumerate every internal SB connection as
+    /// `(from_side, from_track, to_side, to_track)`.
+    pub fn connections(self, num_tracks: u16) -> Vec<(Side, u16, Side, u16)> {
+        let mut out = Vec::new();
+        for from in Side::ALL {
+            for to in Side::ALL {
+                if from == to {
+                    continue;
+                }
+                for t in 0..num_tracks {
+                    if let Some(t2) = self.map_track(from, to, t, num_tracks) {
+                        out.push((from, t, to, t2));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    const TOPOS: [SbTopology; 3] = [SbTopology::Wilton, SbTopology::Disjoint, SbTopology::Imran];
+
+    #[test]
+    fn no_u_turns() {
+        for topo in TOPOS {
+            for s in Side::ALL {
+                assert_eq!(topo.map_track(s, s, 0, 5), None);
+            }
+        }
+    }
+
+    #[test]
+    fn every_side_pair_is_a_bijection() {
+        // Each (from, to) pair must map the track set one-to-one, so every
+        // SB output mux sees exactly one input per other side — the
+        // equal-area property the paper relies on when comparing
+        // topologies.
+        for topo in TOPOS {
+            for nt in 1..9u16 {
+                for from in Side::ALL {
+                    for to in Side::ALL {
+                        if from == to {
+                            continue;
+                        }
+                        let image: HashSet<u16> = (0..nt)
+                            .map(|t| topo.map_track(from, to, t, nt).unwrap())
+                            .collect();
+                        assert_eq!(image.len(), nt as usize, "{topo:?} {from}->{to} nt={nt}");
+                        assert!(image.iter().all(|&t| t < nt));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_is_identity_everywhere() {
+        for from in Side::ALL {
+            for to in Side::ALL {
+                if from == to {
+                    continue;
+                }
+                for t in 0..8 {
+                    assert_eq!(SbTopology::Disjoint.map_track(from, to, t, 8), Some(t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wilton_turns_change_tracks() {
+        // The defining difference from Disjoint: at least one track number
+        // changes on every turn (for nt > 2).
+        let nt = 5;
+        for from in Side::ALL {
+            for to in Side::ALL {
+                if from == to || from.opposite() == to {
+                    continue;
+                }
+                let moved = (0..nt)
+                    .filter(|&t| SbTopology::Wilton.map_track(from, to, t, nt) != Some(t))
+                    .count();
+                assert!(moved >= nt as usize - 1, "turn {from}->{to} barely permutes");
+            }
+        }
+    }
+
+    #[test]
+    fn straight_connections_preserve_track() {
+        for topo in TOPOS {
+            for (a, b) in [(Side::North, Side::South), (Side::East, Side::West)] {
+                for t in 0..6 {
+                    assert_eq!(topo.map_track(a, b, t, 6), Some(t));
+                    assert_eq!(topo.map_track(b, a, t, 6), Some(t));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn connection_counts_match_equal_area_claim() {
+        // Both paper topologies: 4 sides x 3 other sides x nt tracks.
+        for topo in TOPOS {
+            assert_eq!(topo.connections(5).len(), 4 * 3 * 5, "{topo:?}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for topo in TOPOS {
+            assert_eq!(SbTopology::parse(topo.name()), Some(topo));
+        }
+        assert_eq!(SbTopology::parse("nope"), None);
+    }
+}

@@ -1,0 +1,149 @@
+//! Textual interconnect specifications.
+//!
+//! A flat `key = value` format (one setting per line, `#` comments) that
+//! maps 1:1 onto [`InterconnectConfig`]. This gives the `canal` CLI a
+//! file-based front-end next to the programmatic eDSL:
+//!
+//! ```text
+//! # amber-like array
+//! width = 16
+//! height = 16
+//! num_tracks = 5
+//! track_widths = 16
+//! sb_topology = wilton
+//! reg_density = 1
+//! sb_core_sides = 4
+//! cb_core_sides = 4
+//! mem_column_period = 4
+//! ```
+
+use super::config::{ConnectedSides, InterconnectConfig, OutputTrackMode};
+use super::sb::SbTopology;
+
+/// Parse a spec document into a config, starting from defaults.
+pub fn parse_spec(text: &str) -> Result<InterconnectConfig, String> {
+    let mut cfg = InterconnectConfig::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected `key = value`, got `{raw}`", lineno + 1))?;
+        let (key, value) = (key.trim(), value.trim());
+        let err = |what: &str| format!("line {}: invalid {what}: `{value}`", lineno + 1);
+        match key {
+            "width" => cfg.width = value.parse().map_err(|_| err("width"))?,
+            "height" => cfg.height = value.parse().map_err(|_| err("height"))?,
+            "num_tracks" => cfg.num_tracks = value.parse().map_err(|_| err("num_tracks"))?,
+            "track_widths" => {
+                cfg.track_widths = value
+                    .split(',')
+                    .map(|v| v.trim().parse().map_err(|_| err("track_widths")))
+                    .collect::<Result<_, _>>()?;
+            }
+            "sb_topology" => {
+                cfg.sb_topology = SbTopology::parse(value).ok_or_else(|| err("sb_topology"))?;
+            }
+            "reg_density" => cfg.reg_density = value.parse().map_err(|_| err("reg_density"))?,
+            "sb_core_sides" => {
+                cfg.sb_core_sides = ConnectedSides(value.parse().map_err(|_| err("sb_core_sides"))?);
+            }
+            "cb_core_sides" => {
+                cfg.cb_core_sides = ConnectedSides(value.parse().map_err(|_| err("cb_core_sides"))?);
+            }
+            "mem_column_period" => {
+                cfg.mem_column_period = value.parse().map_err(|_| err("mem_column_period"))?;
+            }
+            "output_tracks" => {
+                cfg.output_tracks =
+                    OutputTrackMode::parse(value).ok_or_else(|| err("output_tracks"))?;
+            }
+            other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Emit a spec document for a config (round-trips through [`parse_spec`]).
+pub fn emit_spec(cfg: &InterconnectConfig) -> String {
+    let widths: Vec<String> = cfg.track_widths.iter().map(|w| w.to_string()).collect();
+    format!(
+        "# canal interconnect spec\n\
+         width = {}\nheight = {}\nnum_tracks = {}\ntrack_widths = {}\n\
+         sb_topology = {}\nreg_density = {}\nsb_core_sides = {}\ncb_core_sides = {}\n\
+         mem_column_period = {}\noutput_tracks = {}\n",
+        cfg.width,
+        cfg.height,
+        cfg.num_tracks,
+        widths.join(", "),
+        cfg.sb_topology.name(),
+        cfg.reg_density,
+        cfg.sb_core_sides.0,
+        cfg.cb_core_sides.0,
+        cfg.mem_column_period,
+        cfg.output_tracks.name(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let cfg = parse_spec(
+            "width = 16\nheight = 8\nnum_tracks = 7\ntrack_widths = 1, 16\n\
+             sb_topology = disjoint\nreg_density = 2\nsb_core_sides = 3\n\
+             cb_core_sides = 2\nmem_column_period = 4\n",
+        )
+        .unwrap();
+        assert_eq!((cfg.width, cfg.height), (16, 8));
+        assert_eq!(cfg.num_tracks, 7);
+        assert_eq!(cfg.track_widths, vec![1, 16]);
+        assert_eq!(cfg.sb_topology, SbTopology::Disjoint);
+        assert_eq!(cfg.sb_core_sides, ConnectedSides(3));
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let cfg = parse_spec("# hello\n\nwidth = 4 # inline\n").unwrap();
+        assert_eq!(cfg.width, 4);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_with_line_number() {
+        let e = parse_spec("widht = 4\n").unwrap_err();
+        assert!(e.contains("line 1"), "{e}");
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(parse_spec("width = banana\n").is_err());
+        assert!(parse_spec("sb_topology = torus\n").is_err());
+        assert!(parse_spec("num_tracks = 0\n").is_err()); // fails validate()
+    }
+
+    #[test]
+    fn output_tracks_key_parses() {
+        let cfg = parse_spec("output_tracks = pinned\n").unwrap();
+        assert_eq!(cfg.output_tracks, OutputTrackMode::Pinned);
+        assert!(parse_spec("output_tracks = some\n").is_err());
+    }
+
+    #[test]
+    fn emit_parse_roundtrip() {
+        let mut cfg = InterconnectConfig::default();
+        cfg.width = 12;
+        cfg.track_widths = vec![1, 16];
+        cfg.sb_topology = SbTopology::Imran;
+        cfg.output_tracks = OutputTrackMode::Pinned;
+        let parsed = parse_spec(&emit_spec(&cfg)).unwrap();
+        assert_eq!(parsed.width, cfg.width);
+        assert_eq!(parsed.track_widths, cfg.track_widths);
+        assert_eq!(parsed.sb_topology, cfg.sb_topology);
+        assert_eq!(parsed.output_tracks, cfg.output_tracks);
+    }
+}

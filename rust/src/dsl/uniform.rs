@@ -1,0 +1,325 @@
+//! `create_uniform_interconnect` — the high-level Canal helper (§3.2,
+//! Fig. 4): build a full array where every switch box shares one topology,
+//! parameterized by array size, topology, track count/width, register
+//! density, and core-connection sides.
+
+use crate::ir::{
+    assert_valid, CoreKind, CoreSpec, Interconnect, NodeId, PortSpec, RoutingGraph, SbIo, Side,
+    Tile,
+};
+
+use super::builder::GraphBuilder;
+use super::config::InterconnectConfig;
+
+/// Core specs per tile position: PEs everywhere, MEM columns on the
+/// configured period. Ports are created for every configured track width
+/// (data ports on wide layers, one predicate/valid pair on the 1-bit
+/// layer).
+fn make_core(kind: CoreKind, widths: &[u8]) -> CoreSpec {
+    let mut inputs = Vec::new();
+    let mut outputs = Vec::new();
+    for &w in widths {
+        let base = match kind {
+            CoreKind::Pe => CoreSpec::pe(w),
+            CoreKind::Mem => CoreSpec::mem(w),
+            CoreKind::Io => CoreSpec::io(w),
+        };
+        if w == 1 {
+            // Control layer: a single predicate in / valid out pair.
+            inputs.push(PortSpec::new("bit_in_0", 1));
+            outputs.push(PortSpec::new("bit_out_0", 1));
+        } else {
+            inputs.extend(base.inputs);
+            outputs.extend(base.outputs);
+        }
+    }
+    let delay_ps = match kind {
+        CoreKind::Pe => 640,
+        CoreKind::Mem => 800,
+        CoreKind::Io => 0,
+    };
+    CoreSpec { kind, inputs, outputs, delay_ps }
+}
+
+/// Whether tile `(x, y)` carries pipeline registers under `reg_density`.
+/// Density 1 ⇒ every tile; density N ⇒ every N-th diagonal; 0 ⇒ none.
+fn is_registered(cfg: &InterconnectConfig, x: u16, y: u16) -> bool {
+    cfg.reg_density != 0 && (x + y) % cfg.reg_density == 0
+}
+
+/// Build one routing-graph layer.
+fn build_layer(cfg: &InterconnectConfig, tiles: &[Tile], bit_width: u8) -> RoutingGraph {
+    let mut graph = RoutingGraph::new(bit_width);
+    let nt = cfg.num_tracks;
+    let mut b = GraphBuilder::new(&mut graph, cfg.delays);
+
+    // --- Per-tile nodes -------------------------------------------------
+    // `boundary[(x, y, side, track)]` is the node that drives the
+    // neighbouring tile: the register bypass mux if this tile is
+    // registered, otherwise the raw SB output.
+    let mut boundary: std::collections::HashMap<(u16, u16, Side, u16), NodeId> =
+        std::collections::HashMap::new();
+
+    for tile in tiles {
+        let (x, y) = (tile.x, tile.y);
+        // SB endpoints on all four sides.
+        let mut sb_in = [[NodeId(0); 8]; 4];
+        let mut sb_out = [[NodeId(0); 8]; 4];
+        assert!(nt as usize <= 8, "track count > 8 unsupported by builder scratch arrays");
+        for side in Side::ALL {
+            for t in 0..nt {
+                sb_in[side.index()][t as usize] = b.sb(x, y, side, SbIo::In, t);
+                sb_out[side.index()][t as usize] = b.sb(x, y, side, SbIo::Out, t);
+            }
+        }
+
+        // Internal SB topology connections.
+        for (from, t, to, t2) in cfg.sb_topology.connections(nt) {
+            b.wire(sb_in[from.index()][t as usize], sb_out[to.index()][t2 as usize]);
+        }
+
+        // Core ports of this layer.
+        let in_ports: Vec<(String, NodeId)> = tile
+            .core
+            .inputs
+            .iter()
+            .filter(|p| p.width == bit_width)
+            .map(|p| (p.name.clone(), b.port(x, y, &p.name, true)))
+            .collect();
+        let out_ports: Vec<NodeId> = tile
+            .core
+            .outputs
+            .iter()
+            .filter(|p| p.width == bit_width)
+            .map(|p| b.port(x, y, &p.name, false))
+            .collect();
+
+        // Core outputs -> SB outputs on the configured sides (Fig. 12).
+        // `AllTracks`: every output reaches every track of each connected
+        // side. `Pinned`: output j reaches only tracks t ≡ j (mod
+        // n_outputs) — the depopulated style whose interaction with the
+        // Disjoint topology §4.2.1 describes.
+        for &side in &cfg.sb_core_sides.sides() {
+            for t in 0..nt {
+                for (j, &op) in out_ports.iter().enumerate() {
+                    let drives = match cfg.output_tracks {
+                        super::config::OutputTrackMode::AllTracks => true,
+                        super::config::OutputTrackMode::Pinned => {
+                            !out_ports.is_empty()
+                                && t as usize % out_ports.len() == j
+                        }
+                    };
+                    if drives {
+                        b.wire(op, sb_out[side.index()][t as usize]);
+                    }
+                }
+            }
+        }
+
+        // Connection box: incoming tracks on the configured sides feed
+        // every core input port (Fig. 13).
+        for &side in &cfg.cb_core_sides.sides() {
+            for t in 0..nt {
+                for (_, ip) in &in_ports {
+                    b.wire(sb_in[side.index()][t as usize], *ip);
+                }
+            }
+        }
+
+        // Pipeline registers on SB outputs.
+        let registered = is_registered(cfg, x, y);
+        for side in Side::ALL {
+            for t in 0..nt {
+                let out = sb_out[side.index()][t as usize];
+                let driver = if registered { b.register(out, side, t) } else { out };
+                boundary.insert((x, y, side, t), driver);
+            }
+        }
+    }
+
+    // --- Inter-tile track wires -----------------------------------------
+    let (w, h) = (cfg.width as i32, cfg.height as i32);
+    for tile in tiles {
+        let (x, y) = (tile.x, tile.y);
+        for side in Side::ALL {
+            let (dx, dy) = side.offset();
+            let (nx, ny) = (x as i32 + dx, y as i32 + dy);
+            if nx < 0 || ny < 0 || nx >= w || ny >= h {
+                continue; // array margin
+            }
+            for t in 0..nt {
+                let from = boundary[&(x, y, side, t)];
+                let to = graph_find_sb(b.graph(), nx as u16, ny as u16, side.opposite(), t);
+                b.track_wire(from, to);
+            }
+        }
+    }
+
+    graph
+}
+
+fn graph_find_sb(g: &RoutingGraph, x: u16, y: u16, side: Side, track: u16) -> NodeId {
+    g.find_sb(x, y, side, SbIo::In, track)
+        .unwrap_or_else(|| panic!("missing sb in node at ({x},{y}) {side} t{track}"))
+}
+
+/// Build a uniform interconnect from a configuration. This is the
+/// reproduction of the paper's `create_uniform_interconnect` helper.
+pub fn create_uniform_interconnect(cfg: &InterconnectConfig) -> Interconnect {
+    cfg.validate().unwrap_or_else(|e| panic!("invalid interconnect config: {e}"));
+
+    // Tile grid: MEM columns every `mem_column_period` (never column 0).
+    let mut tiles = Vec::with_capacity(cfg.width as usize * cfg.height as usize);
+    for y in 0..cfg.height {
+        for x in 0..cfg.width {
+            let kind = if cfg.mem_column_period != 0 && x != 0 && x % cfg.mem_column_period == 0 {
+                CoreKind::Mem
+            } else {
+                CoreKind::Pe
+            };
+            tiles.push(Tile { x, y, core: make_core(kind, &cfg.track_widths) });
+        }
+    }
+
+    let mut ic = Interconnect::new(cfg.width, cfg.height, tiles, cfg.descriptor());
+    for &bw in &cfg.track_widths {
+        let layer = build_layer(cfg, &ic.tiles, bw);
+        ic.graphs.insert(bw, layer);
+    }
+    assert_valid(&ic);
+    ic
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::config::ConnectedSides;
+    use crate::dsl::sb::SbTopology;
+    use crate::ir::{validate, NodeKind};
+
+    fn small(cfg_mod: impl FnOnce(&mut InterconnectConfig)) -> Interconnect {
+        let mut cfg = InterconnectConfig {
+            width: 4,
+            height: 4,
+            num_tracks: 3,
+            mem_column_period: 2,
+            ..Default::default()
+        };
+        cfg_mod(&mut cfg);
+        create_uniform_interconnect(&cfg)
+    }
+
+    #[test]
+    fn builds_valid_ir() {
+        let ic = small(|_| {});
+        assert!(validate(&ic).is_empty());
+        assert_eq!(ic.tiles.len(), 16);
+    }
+
+    #[test]
+    fn mem_columns_on_period() {
+        let ic = small(|_| {});
+        assert_eq!(ic.tile(2, 1).core.kind, CoreKind::Mem);
+        assert_eq!(ic.tile(1, 1).core.kind, CoreKind::Pe);
+        assert_eq!(ic.tile(0, 0).core.kind, CoreKind::Pe); // column 0 never MEM
+    }
+
+    #[test]
+    fn sb_out_mux_inputs_match_topology_plus_core() {
+        // Interior tile, 4-side core connections: each SB out mux sees one
+        // input per other side (3) + each of the PE's 2 outputs.
+        let ic = small(|c| c.reg_density = 0);
+        let g = ic.graph(16);
+        let out = g.find_sb(1, 1, Side::East, SbIo::Out, 0).unwrap();
+        assert_eq!(g.fan_in(out).len(), 3 + 2);
+    }
+
+    #[test]
+    fn cb_fan_in_scales_with_sides_and_tracks() {
+        let ic4 = small(|c| c.reg_density = 0);
+        let g = ic4.graph(16);
+        let p = g.find_port(1, 1, "data_in_0", true).unwrap();
+        assert_eq!(g.fan_in(p).len(), 4 * 3); // 4 sides x 3 tracks
+
+        let ic2 = small(|c| {
+            c.reg_density = 0;
+            c.cb_core_sides = ConnectedSides::TWO;
+        });
+        let g2 = ic2.graph(16);
+        let p2 = g2.find_port(1, 1, "data_in_0", true).unwrap();
+        assert_eq!(g2.fan_in(p2).len(), 2 * 3);
+    }
+
+    #[test]
+    fn reducing_sb_sides_shrinks_mux_fan_in() {
+        let ic = small(|c| {
+            c.reg_density = 0;
+            c.sb_core_sides = ConnectedSides::TWO; // keeps N and W
+        });
+        let g = ic.graph(16);
+        // East side no longer fed by core outputs: 3 topology inputs only.
+        let east = g.find_sb(1, 1, Side::East, SbIo::Out, 0).unwrap();
+        assert_eq!(g.fan_in(east).len(), 3);
+        // North still fed by both PE outputs.
+        let north = g.find_sb(1, 1, Side::North, SbIo::Out, 0).unwrap();
+        assert_eq!(g.fan_in(north).len(), 3 + 2);
+    }
+
+    #[test]
+    fn tiles_stitched_to_neighbours() {
+        let ic = small(|c| c.reg_density = 0);
+        let g = ic.graph(16);
+        let out = g.find_sb(1, 1, Side::East, SbIo::Out, 2).unwrap();
+        let nin = g.find_sb(2, 1, Side::West, SbIo::In, 2).unwrap();
+        assert_eq!(g.fan_out(out), &[nin]);
+        assert_eq!(g.wire_delay(out, nin), crate::dsl::config::DelayModel::default().wire_ps);
+    }
+
+    #[test]
+    fn registered_tiles_interpose_regmux_at_boundary() {
+        let ic = small(|c| c.reg_density = 1);
+        let g = ic.graph(16);
+        let out = g.find_sb(1, 1, Side::East, SbIo::Out, 0).unwrap();
+        // SB out drives register + bypass mux, not the neighbour directly.
+        let sinks = g.fan_out(out);
+        assert_eq!(sinks.len(), 2);
+        let rmux = sinks
+            .iter()
+            .copied()
+            .find(|&n| matches!(g.node(n).kind, NodeKind::RegMux { .. }))
+            .unwrap();
+        // The bypass mux drives the neighbour's SB input.
+        let nin = g.find_sb(2, 1, Side::West, SbIo::In, 0).unwrap();
+        assert_eq!(g.fan_out(rmux), &[nin]);
+    }
+
+    #[test]
+    fn margins_have_no_dangling_wires() {
+        let ic = small(|c| c.reg_density = 0);
+        let g = ic.graph(16);
+        // West side of column-0 tile has no incoming neighbour.
+        let win = g.find_sb(0, 1, Side::West, SbIo::In, 0).unwrap();
+        assert!(g.fan_in(win).is_empty());
+        // And its west out drives nothing.
+        let wout = g.find_sb(0, 1, Side::West, SbIo::Out, 0).unwrap();
+        assert!(g.fan_out(wout).is_empty());
+    }
+
+    #[test]
+    fn control_layer_built_when_requested() {
+        let ic = small(|c| c.track_widths = vec![1, 16]);
+        assert_eq!(ic.bit_widths(), vec![1, 16]);
+        let g1 = ic.graph(1);
+        assert!(g1.find_port(1, 1, "bit_in_0", true).is_some());
+        assert!(g1.find_port(1, 1, "data_in_0", true).is_none());
+    }
+
+    #[test]
+    fn disjoint_and_wilton_have_equal_node_and_edge_counts() {
+        // The equal-area premise of Fig. 9's comparison.
+        let w = small(|c| c.sb_topology = SbTopology::Wilton);
+        let d = small(|c| c.sb_topology = SbTopology::Disjoint);
+        assert_eq!(w.node_count(), d.node_count());
+        assert_eq!(w.edge_count(), d.edge_count());
+    }
+}

@@ -1,0 +1,211 @@
+//! Configuration-space allocation.
+//!
+//! Every configurable element (SB mux, CB mux, register-bypass mux, FIFO
+//! mode) owns a field in its tile's configuration registers. The
+//! allocator packs fields into 32-bit words per tile; a bitstream is a
+//! sequence of `(tile, word) -> value` writes (the addressing scheme used
+//! by Amber-class CGRAs: tile-row/column + register offset).
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ir::{Interconnect, NodeId, NodeKind};
+
+pub const CONFIG_WORD_BITS: u32 = 32;
+
+/// A configuration field: `bits` wide, at `offset` within `word` of tile
+/// `(x, y)`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ConfigField {
+    pub x: u16,
+    pub y: u16,
+    pub word: u32,
+    pub offset: u32,
+    pub bits: u32,
+}
+
+impl ConfigField {
+    /// Mask of this field within its word.
+    pub fn mask(&self) -> u32 {
+        if self.bits >= 32 {
+            u32::MAX
+        } else {
+            ((1u32 << self.bits) - 1) << self.offset
+        }
+    }
+
+    /// Encode a value into (word, shifted-bits) form.
+    pub fn encode(&self, value: u32) -> u32 {
+        assert!(self.bits >= 32 || value < (1 << self.bits), "value {value} overflows field");
+        value << self.offset
+    }
+}
+
+/// What a field controls (for reports and the bitstream debugger).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub enum FieldRole {
+    /// Select of the mux lowered from this IR node (bit width graph key +
+    /// node id).
+    MuxSelect { bit_width: u8, node: NodeId },
+    /// FIFO/register mode of a register node: 0 = pipeline register,
+    /// 1 = FIFO head, 2 = FIFO tail (split mode).
+    RegisterMode { bit_width: u8, node: NodeId },
+}
+
+/// The allocated configuration space of one interconnect.
+#[derive(Clone, Debug, Default)]
+pub struct ConfigSpace {
+    fields: Vec<(FieldRole, ConfigField)>,
+    by_role: HashMap<(u8, u32, bool), usize>,
+    /// Next free (word, offset) per tile.
+    cursor: HashMap<(u16, u16), (u32, u32)>,
+}
+
+impl ConfigSpace {
+    /// Allocate `bits` for `role` in tile `(x, y)`. Fields never straddle
+    /// word boundaries.
+    pub fn alloc(&mut self, x: u16, y: u16, bits: u32, role: FieldRole) -> ConfigField {
+        assert!(bits >= 1 && bits <= CONFIG_WORD_BITS);
+        let (mut word, mut offset) = *self.cursor.get(&(x, y)).unwrap_or(&(0, 0));
+        if offset + bits > CONFIG_WORD_BITS {
+            word += 1;
+            offset = 0;
+        }
+        let field = ConfigField { x, y, word, offset, bits };
+        self.cursor.insert((x, y), (word, offset + bits));
+        let key = match &role {
+            FieldRole::MuxSelect { bit_width, node } => (*bit_width, node.0, false),
+            FieldRole::RegisterMode { bit_width, node } => (*bit_width, node.0, true),
+        };
+        self.by_role.insert(key, self.fields.len());
+        self.fields.push((role, field));
+        field
+    }
+
+    /// Find the field of a mux select.
+    pub fn mux_field(&self, bit_width: u8, node: NodeId) -> Option<ConfigField> {
+        self.by_role.get(&(bit_width, node.0, false)).map(|&i| self.fields[i].1)
+    }
+
+    /// Find the field of a register mode.
+    pub fn reg_field(&self, bit_width: u8, node: NodeId) -> Option<ConfigField> {
+        self.by_role.get(&(bit_width, node.0, true)).map(|&i| self.fields[i].1)
+    }
+
+    pub fn fields(&self) -> &[(FieldRole, ConfigField)] {
+        &self.fields
+    }
+
+    /// Total config bits per tile.
+    pub fn bits_per_tile(&self) -> BTreeMap<(u16, u16), u32> {
+        let mut m = BTreeMap::new();
+        for (_, f) in &self.fields {
+            *m.entry((f.x, f.y)).or_insert(0) += f.bits;
+        }
+        m
+    }
+
+    /// Number of config words a tile uses.
+    pub fn words_of_tile(&self, x: u16, y: u16) -> u32 {
+        self.cursor.get(&(x, y)).map(|&(w, o)| w + (o > 0) as u32).unwrap_or(0)
+    }
+}
+
+/// Allocate the configuration space of an interconnect: one select field
+/// per mux node (fan-in > 1), one mode field per register node.
+pub fn allocate(ic: &Interconnect) -> ConfigSpace {
+    let mut cs = ConfigSpace::default();
+    for (&bw, g) in &ic.graphs {
+        for (id, node) in g.iter() {
+            let fan_in = g.fan_in(id).len();
+            match node.kind {
+                NodeKind::SwitchBox { .. } | NodeKind::Port { .. } | NodeKind::RegMux { .. } => {
+                    if fan_in > 1 {
+                        let bits = (usize::BITS - (fan_in - 1).leading_zeros()).max(1);
+                        cs.alloc(node.x, node.y, bits, FieldRole::MuxSelect { bit_width: bw, node: id });
+                    }
+                }
+                NodeKind::Register { .. } => {
+                    // 2 bits: pipeline / fifo-head / fifo-tail.
+                    cs.alloc(node.x, node.y, 2, FieldRole::RegisterMode { bit_width: bw, node: id });
+                }
+            }
+        }
+    }
+    cs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    #[test]
+    fn fields_never_straddle_words() {
+        let mut cs = ConfigSpace::default();
+        // 10 x 3 bits + one 31-bit field forces straddle handling.
+        for i in 0..10 {
+            cs.alloc(0, 0, 3, FieldRole::MuxSelect { bit_width: 16, node: NodeId(i) });
+        }
+        let f = cs.alloc(0, 0, 31, FieldRole::MuxSelect { bit_width: 16, node: NodeId(99) });
+        assert_eq!(f.offset, 0);
+        assert_eq!(f.word, 1);
+        for (_, f) in cs.fields() {
+            assert!(f.offset + f.bits <= CONFIG_WORD_BITS);
+        }
+    }
+
+    #[test]
+    fn fields_within_a_tile_do_not_overlap() {
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 3,
+            height: 3,
+            num_tracks: 3,
+            ..Default::default()
+        });
+        let cs = allocate(&ic);
+        let mut seen: HashMap<(u16, u16, u32), u32> = HashMap::new();
+        for (_, f) in cs.fields() {
+            let used = seen.entry((f.x, f.y, f.word)).or_insert(0);
+            assert_eq!(*used & f.mask(), 0, "overlap in tile ({},{}) word {}", f.x, f.y, f.word);
+            *used |= f.mask();
+        }
+    }
+
+    #[test]
+    fn every_mux_gets_a_field() {
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 3,
+            height: 3,
+            num_tracks: 2,
+            ..Default::default()
+        });
+        let cs = allocate(&ic);
+        let g = ic.graph(16);
+        for id in g.mux_nodes() {
+            assert!(cs.mux_field(16, id).is_some(), "{}", g.node(id).qualified_name());
+        }
+    }
+
+    #[test]
+    fn encode_respects_field_width() {
+        let f = ConfigField { x: 0, y: 0, word: 0, offset: 4, bits: 3 };
+        assert_eq!(f.encode(5), 5 << 4);
+        assert_eq!(f.mask(), 0b111 << 4);
+        let r = std::panic::catch_unwind(|| f.encode(8));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn config_bits_scale_with_tracks() {
+        let bits = |tracks| {
+            let ic = create_uniform_interconnect(&InterconnectConfig {
+                width: 3,
+                height: 3,
+                num_tracks: tracks,
+                ..Default::default()
+            });
+            allocate(&ic).bits_per_tile()[&(1, 1)]
+        };
+        assert!(bits(4) > bits(2));
+    }
+}

@@ -1,0 +1,361 @@
+//! Dynamic NoC backend (§3.3, final paragraph).
+//!
+//! "The methodology described here also applies to generating dynamic
+//! NoCs. Instead of lowering a node into a configurable multiplexer to
+//! select among incoming data tracks, we can generate a router whose
+//! routing table is computed based on the same connectivity information."
+//!
+//! This backend lowers the same graph IR into one *router* per tile:
+//! - every side of the tile whose SB endpoints have inter-tile edges in
+//!   the IR becomes a router port (the IR's connectivity decides which
+//!   ports exist — a margin tile has no port on its array-boundary side);
+//! - the routing table is computed from the IR connectivity by BFS over
+//!   the tile-adjacency graph *induced by the IR edges*, with X-first
+//!   (dimension-order) tie-breaking so the table is deadlock-free on a
+//!   mesh;
+//! - the area of a router is priced from the same gate-level model as the
+//!   static muxes: a crossbar per output port, an input FIFO per input
+//!   port, and the routing-table storage.
+
+use std::collections::VecDeque;
+
+use crate::area::AreaModel;
+use crate::ir::{Interconnect, SbIo, Side};
+
+/// Options for the dynamic NoC backend.
+#[derive(Clone, Copy, Debug)]
+pub struct DynOptions {
+    /// Input-buffer depth per router port (flits).
+    pub buf_depth: usize,
+    /// Router pipeline latency (cycles from head-of-queue to neighbour).
+    pub hop_latency: u32,
+}
+
+impl Default for DynOptions {
+    fn default() -> Self {
+        DynOptions { buf_depth: 2, hop_latency: 1 }
+    }
+}
+
+/// One generated router.
+#[derive(Clone, Debug)]
+pub struct DynRouter {
+    pub x: u16,
+    pub y: u16,
+    /// Sides with an inter-tile link (derived from the IR edges).
+    pub ports: Vec<Side>,
+    /// `table[dest_tile_index]` = side to forward on (None = local
+    /// delivery, i.e. dest == this tile).
+    pub table: Vec<Option<Side>>,
+}
+
+impl DynRouter {
+    /// Look up the output side for a destination tile.
+    pub fn route_to(&self, dest: usize) -> Option<Side> {
+        self.table[dest]
+    }
+
+    /// Number of routing-table entries that are reachable.
+    pub fn reachable(&self) -> usize {
+        self.table.iter().filter(|e| e.is_some()).count()
+    }
+}
+
+/// The lowered dynamic NoC.
+#[derive(Clone, Debug)]
+pub struct DynNoc {
+    pub width: u16,
+    pub height: u16,
+    /// Routers in row-major order.
+    pub routers: Vec<DynRouter>,
+    /// Data width (bits) carried per flit.
+    pub flit_width: u8,
+    pub opts: DynOptions,
+}
+
+impl DynNoc {
+    pub fn router(&self, x: u16, y: u16) -> &DynRouter {
+        &self.routers[y as usize * self.width as usize + x as usize]
+    }
+
+    pub fn tile_index(&self, x: u16, y: u16) -> usize {
+        y as usize * self.width as usize + x as usize
+    }
+}
+
+/// Which sides of tile (x, y) have inter-tile IR edges (outgoing track
+/// endpoints wired to a neighbour). This is "the same connectivity
+/// information" the static backend lowers to muxes.
+fn linked_sides(ic: &Interconnect, bit_width: u8, x: u16, y: u16) -> Vec<Side> {
+    let g = ic.graph(bit_width);
+    // Does the transitive fan-out of `id`, walked through *same-tile*
+    // nodes (register / bypass-mux chains), ever cross the tile edge?
+    let crosses_tile = |start: crate::ir::NodeId| {
+        let mut stack = vec![start];
+        let mut seen = std::collections::HashSet::new();
+        while let Some(id) = stack.pop() {
+            if !seen.insert(id) {
+                continue;
+            }
+            for &s in g.fan_out(id) {
+                let n = g.node(s);
+                if (n.x, n.y) != (x, y) {
+                    return true;
+                }
+                stack.push(s);
+            }
+        }
+        false
+    };
+    let mut sides = Vec::new();
+    for side in Side::ALL {
+        // An out endpoint on `side` whose (possibly registered) output
+        // reaches a neighbouring tile makes this a NoC link.
+        let linked = (0..64u16)
+            .map_while(|t| g.find_sb(x, y, side, SbIo::Out, t))
+            .any(crosses_tile);
+        if linked {
+            sides.push(side);
+        }
+    }
+    sides
+}
+
+/// Lower the interconnect IR into a dynamic NoC: one router per tile,
+/// with routing tables computed from IR connectivity.
+pub fn lower_dynamic(ic: &Interconnect, bit_width: u8, opts: &DynOptions) -> DynNoc {
+    let (w, h) = (ic.width as usize, ic.height as usize);
+
+    // Tile-adjacency induced by the IR (usually the full mesh, but a
+    // custom IR with missing links produces tables that avoid them).
+    let mut adj: Vec<Vec<Side>> = Vec::with_capacity(w * h);
+    for y in 0..ic.height {
+        for x in 0..ic.width {
+            adj.push(linked_sides(ic, bit_width, x, y));
+        }
+    }
+
+    // BFS per destination, walking *backwards* from the destination so
+    // each tile learns its forwarding side. X-first preference: sides are
+    // visited E/W before N/S so ties resolve to dimension-ordered routes
+    // (deadlock-free on a mesh).
+    const SIDE_PREF: [Side; 4] = [Side::East, Side::West, Side::North, Side::South];
+    let mut tables: Vec<Vec<Option<Side>>> = vec![vec![None; w * h]; w * h];
+    for dest in 0..w * h {
+        let (dx, dy) = ((dest % w) as i32, (dest / w) as i32);
+        // dist[t] = hops from t to dest; fwd[t] = side to forward on.
+        let mut dist: Vec<u32> = vec![u32::MAX; w * h];
+        dist[dest] = 0;
+        let mut queue = VecDeque::from([dest]);
+        while let Some(t) = queue.pop_front() {
+            let (tx, ty) = ((t % w) as i32, (t / w) as i32);
+            for &side in &SIDE_PREF {
+                // Neighbour that would forward *onto* t via `side`:
+                // neighbour + offset(side) == t, i.e. neighbour = t -
+                // offset. The neighbour needs an IR link on `side`.
+                let (ox, oy) = side.offset();
+                let (nx, ny) = (tx - ox, ty - oy);
+                if nx < 0 || ny < 0 || nx >= w as i32 || ny >= h as i32 {
+                    continue;
+                }
+                let n = ny as usize * w + nx as usize;
+                if !adj[n].contains(&side) {
+                    continue;
+                }
+                if dist[n] == u32::MAX {
+                    dist[n] = dist[t] + 1;
+                    tables[n][dest] = Some(side);
+                    queue.push_back(n);
+                } else if dist[n] == dist[t] + 1 {
+                    // Prefer X-dimension moves among equal-length choices
+                    // (dimension order): replace a N/S entry with an E/W
+                    // one when the destination differs in X.
+                    let cur = tables[n][dest];
+                    let cur_is_y =
+                        matches!(cur, Some(Side::North) | Some(Side::South));
+                    let new_is_x = matches!(side, Side::East | Side::West);
+                    if cur_is_y && new_is_x && nx != dx && ny != dy {
+                        tables[n][dest] = Some(side);
+                    }
+                }
+            }
+        }
+        let _ = (dx, dy);
+    }
+
+    let mut routers = Vec::with_capacity(w * h);
+    for y in 0..ic.height {
+        for x in 0..ic.width {
+            let i = y as usize * w + x as usize;
+            routers.push(DynRouter { x, y, ports: adj[i].clone(), table: tables[i].clone() });
+        }
+    }
+
+    DynNoc { width: ic.width, height: ic.height, routers, flit_width: bit_width, opts: *opts }
+}
+
+/// Area of one router in µm² under the shared gate-level model:
+/// crossbar (one `ports+1`:1 mux per output, +1 for local injection),
+/// input FIFOs, and routing-table storage (2 bits per reachable dest:
+/// the side encoding).
+pub fn router_area_um2(model: &AreaModel, r: &DynRouter, flit_width: u8, opts: &DynOptions) -> f64 {
+    let p = r.ports.len();
+    if p == 0 {
+        return 0.0;
+    }
+    // Crossbar: each output port (p sides + 1 ejection) selects among
+    // (p inputs + 1 injection).
+    let crossbar: f64 = (0..=p).map(|_| model.mux_ge(p + 1, flit_width)).sum();
+    // Input buffering: depth x (width + valid) flops + FIFO control.
+    let fifos: f64 = (p + 1) as f64
+        * (opts.buf_depth as f64 * model.register_ge(flit_width + 1)
+            + model.fifo_extra_ge(opts.buf_depth, 0));
+    // Routing table: 2 bits per reachable destination (side encoding),
+    // stored in flops (a statically-configured NoC writes it at config
+    // time, exactly like the mux config bits of the static fabric).
+    let table = 2.0 * r.reachable() as f64 * model.flop_ge / 8.0; // amortized SRAM-ish
+    model.to_um2(crossbar + fifos + table)
+}
+
+/// Total and per-interior-tile router area for the NoC.
+pub fn noc_area(model: &AreaModel, noc: &DynNoc) -> (f64, f64) {
+    let total: f64 =
+        noc.routers.iter().map(|r| router_area_um2(model, r, noc.flit_width, &noc.opts)).sum();
+    let interior = noc.router(noc.width / 2, noc.height / 2);
+    (total, router_area_um2(model, interior, noc.flit_width, &noc.opts))
+}
+
+/// Verify the routing tables: every (src, dest) pair where dest is
+/// reachable must converge to dest within `w*h` hops, without loops.
+pub fn verify_tables(noc: &DynNoc) -> Result<(), String> {
+    let (w, h) = (noc.width as usize, noc.height as usize);
+    for src in 0..w * h {
+        for dest in 0..w * h {
+            if src == dest {
+                continue;
+            }
+            let mut cur = src;
+            let mut hops = 0;
+            let mut seen = vec![false; w * h];
+            while cur != dest {
+                if seen[cur] {
+                    return Err(format!("routing loop: src {src} dest {dest} at {cur}"));
+                }
+                seen[cur] = true;
+                let r = &noc.routers[cur];
+                let side = match r.table[dest] {
+                    Some(s) => s,
+                    None => {
+                        // Unreachable is only legal if no router reaches it.
+                        if noc.routers[dest].ports.is_empty() {
+                            break;
+                        }
+                        return Err(format!("no route: src {src} dest {dest} at {cur}"));
+                    }
+                };
+                let (ox, oy) = side.offset();
+                let (nx, ny) = (r.x as i32 + ox, r.y as i32 + oy);
+                if nx < 0 || ny < 0 || nx >= w as i32 || ny >= h as i32 {
+                    return Err(format!("route walks off-array: src {src} dest {dest}"));
+                }
+                cur = ny as usize * w + nx as usize;
+                hops += 1;
+                if hops > w * h {
+                    return Err(format!("route too long: src {src} dest {dest}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Hop count between two tiles under the generated tables.
+pub fn hop_count(noc: &DynNoc, src: (u16, u16), dest: (u16, u16)) -> Option<u32> {
+    let d = noc.tile_index(dest.0, dest.1);
+    let mut cur = noc.tile_index(src.0, src.1);
+    let mut hops = 0;
+    while cur != d {
+        let side = noc.routers[cur].table[d]?;
+        let (ox, oy) = side.offset();
+        let r = &noc.routers[cur];
+        cur = (r.y as i32 + oy) as usize * noc.width as usize + (r.x as i32 + ox) as usize;
+        hops += 1;
+        if hops > noc.routers.len() as u32 {
+            return None;
+        }
+    }
+    Some(hops)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    fn noc(w: u16, h: u16) -> DynNoc {
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: w,
+            height: h,
+            num_tracks: 3,
+            mem_column_period: 0,
+            ..Default::default()
+        });
+        lower_dynamic(&ic, 16, &DynOptions::default())
+    }
+
+    #[test]
+    fn routers_have_mesh_ports() {
+        let n = noc(4, 4);
+        // Interior tile: 4 ports; corner: 2; edge: 3.
+        assert_eq!(n.router(1, 1).ports.len(), 4);
+        assert_eq!(n.router(0, 0).ports.len(), 2);
+        assert_eq!(n.router(1, 0).ports.len(), 3);
+    }
+
+    #[test]
+    fn tables_verify_on_meshes() {
+        for (w, h) in [(2u16, 2u16), (4, 4), (5, 3)] {
+            verify_tables(&noc(w, h)).unwrap();
+        }
+    }
+
+    #[test]
+    fn routes_are_minimal_on_full_mesh() {
+        let n = noc(6, 6);
+        for (src, dest) in [((0u16, 0u16), (5u16, 5u16)), ((2, 3), (4, 1)), ((5, 0), (0, 5))] {
+            let hops = hop_count(&n, src, dest).unwrap();
+            let manhattan = (src.0 as i32 - dest.0 as i32).unsigned_abs()
+                + (src.1 as i32 - dest.1 as i32).unsigned_abs();
+            assert_eq!(hops, manhattan, "{src:?} -> {dest:?}");
+        }
+    }
+
+    #[test]
+    fn x_first_dimension_order() {
+        // From (0,0) to (3,3) the first hop must be East (X before Y).
+        let n = noc(4, 4);
+        let dest = n.tile_index(3, 3);
+        assert_eq!(n.router(0, 0).table[dest], Some(Side::East));
+        // And once X is aligned, hops go South.
+        assert_eq!(n.router(3, 0).table[dest], Some(Side::South));
+    }
+
+    #[test]
+    fn router_area_scales_with_ports_and_buffers() {
+        let n = noc(4, 4);
+        let m = AreaModel::default();
+        let corner = router_area_um2(&m, n.router(0, 0), 16, &n.opts);
+        let interior = router_area_um2(&m, n.router(1, 1), 16, &n.opts);
+        assert!(interior > corner);
+        let deep = DynOptions { buf_depth: 8, hop_latency: 1 };
+        assert!(router_area_um2(&m, n.router(1, 1), 16, &deep) > interior);
+    }
+
+    #[test]
+    fn local_delivery_is_none() {
+        let n = noc(3, 3);
+        for (i, r) in n.routers.iter().enumerate() {
+            assert_eq!(r.table[i], None, "router {i} must deliver locally");
+        }
+    }
+}

@@ -1,0 +1,365 @@
+//! Lowering the graph IR to hardware (§3.3).
+//!
+//! Two backends share the mechanical core rules:
+//! 1. nodes with hardware attributes generate the specified hardware,
+//! 2. directed edges are translated into wires,
+//! 3. nodes with multiple incoming edges generate multiplexers;
+//!
+//! [`lower_static`] produces the fully static mesh. [`lower_ready_valid`]
+//! additionally threads a valid layer (same direction as data, muxes
+//! mirror the data muxes and share their config) and a ready layer
+//! (opposite direction, merged at fan-in points by reusing the AOI mux
+//! one-hot decode — Fig. 5), and lowers register nodes to FIFOs (full,
+//! or split across adjacent tiles — Fig. 6).
+
+use crate::ir::{Interconnect, NodeId, NodeKind, RoutingGraph};
+#[cfg(test)]
+use crate::ir::SbIo;
+
+use super::config::{allocate, ConfigSpace};
+use super::netlist::{Netlist, Prim, WireId};
+
+/// Ready-valid backend options.
+#[derive(Clone, Copy, Debug)]
+pub struct RvOptions {
+    /// FIFO depth at each register node.
+    pub fifo_depth: u8,
+    /// Use the split-FIFO optimization (Fig. 6): the second entry is the
+    /// adjacent tile's register, chained by cross-tile control.
+    pub split: bool,
+}
+
+impl Default for RvOptions {
+    fn default() -> Self {
+        RvOptions { fifo_depth: 2, split: true }
+    }
+}
+
+/// Output of lowering: the netlist plus the config space it references.
+pub struct Lowered {
+    pub netlist: Netlist,
+    pub config: ConfigSpace,
+}
+
+fn data_wire(n: &Netlist, bw: u8) -> impl Fn(&mut Netlist, &RoutingGraph, NodeId) -> WireId {
+    let _ = n;
+    move |nl: &mut Netlist, g: &RoutingGraph, id: NodeId| {
+        let name = format!("w{bw}_{}", g.node(id).qualified_name());
+        nl.wire(&name, bw)
+    }
+}
+
+/// Lower to the fully static mesh backend.
+pub fn lower_static(ic: &Interconnect) -> Lowered {
+    let config = allocate(ic);
+    let mut nl = Netlist::new("canal_fabric");
+
+    for (&bw, g) in &ic.graphs {
+        let wire_of = data_wire(&nl, bw);
+        for (id, node) in g.iter() {
+            let out = wire_of(&mut nl, g, id);
+            let fan_in = g.fan_in(id);
+            let qname = node.qualified_name();
+            match (&node.kind, fan_in.len()) {
+                // Core output ports are fabric inputs.
+                (NodeKind::Port { input: false, .. }, _) => {
+                    nl.add(Prim::Io { name: format!("io_{bw}_{qname}"), wire: out, output: false });
+                }
+                // Registers are DFFs.
+                (NodeKind::Register { .. }, 1) => {
+                    let d = wire_of(&mut nl, g, fan_in[0]);
+                    nl.add(Prim::Dff { name: format!("dff_{bw}_{qname}"), d, q: out });
+                }
+                // Multi-fan-in ⇒ mux (CB muxes for input ports also get
+                // a fabric output Io toward the core).
+                (_, n) if n > 1 => {
+                    let inputs: Vec<WireId> =
+                        fan_in.iter().map(|&f| wire_of(&mut nl, g, f)).collect();
+                    let field = config.mux_field(bw, id).expect("mux field allocated");
+                    nl.add(Prim::Mux {
+                        name: format!("mux_{bw}_{qname}"),
+                        inputs,
+                        out,
+                        config: field,
+                    });
+                    if matches!(node.kind, NodeKind::Port { input: true, .. }) {
+                        nl.add(Prim::Io { name: format!("io_{bw}_{qname}"), wire: out, output: true });
+                    }
+                }
+                // Single fan-in ⇒ buffer (plain wire).
+                (_, 1) => {
+                    let input = wire_of(&mut nl, g, fan_in[0]);
+                    nl.add(Prim::Buf { name: format!("buf_{bw}_{qname}"), input, out });
+                    if matches!(node.kind, NodeKind::Port { input: true, .. }) {
+                        nl.add(Prim::Io { name: format!("io_{bw}_{qname}"), wire: out, output: true });
+                    }
+                }
+                // Fan-in 0 non-port nodes: margin SB inputs — undriven
+                // stubs (tied off at the array boundary).
+                (_, _) => {}
+            }
+        }
+    }
+
+    nl.check().expect("static lowering must produce a sane netlist");
+    Lowered { netlist: nl, config }
+}
+
+/// Lower to the statically-configured ready-valid NoC backend.
+pub fn lower_ready_valid(ic: &Interconnect, opts: &RvOptions) -> Lowered {
+    // Start from the static lowering: data path is identical (§3.3:
+    // "generating hardware for valid channels follows the same strategy
+    // as the data channels").
+    let Lowered { mut netlist, config } = lower_static(ic);
+
+    for (&bw, g) in &ic.graphs {
+        let vname = |g: &RoutingGraph, id: NodeId| format!("v{bw}_{}", g.node(id).qualified_name());
+        let rname = |g: &RoutingGraph, id: NodeId| format!("r{bw}_{}", g.node(id).qualified_name());
+
+        for (id, node) in g.iter() {
+            let qname = node.qualified_name();
+            let fan_in = g.fan_in(id);
+            let v_out = netlist.wire(&vname(g, id), 1);
+            let r_out = netlist.wire(&rname(g, id), 1);
+
+            // --- Valid layer: mirrors the data path --------------------
+            match (&node.kind, fan_in.len()) {
+                (NodeKind::Port { input: false, .. }, _) => {
+                    netlist.add(Prim::Io { name: format!("iov_{bw}_{qname}"), wire: v_out, output: false });
+                }
+                (NodeKind::Register { .. }, 1) => {
+                    // Handled by the FIFO below (valid threads through it).
+                }
+                (_, n) if n > 1 => {
+                    let inputs: Vec<WireId> =
+                        fan_in.iter().map(|&f| netlist.wire(&vname(g, f), 1)).collect();
+                    let field = config.mux_field(bw, id).expect("shared config");
+                    netlist.add(Prim::ValidMux {
+                        name: format!("vmux_{bw}_{qname}"),
+                        inputs,
+                        out: v_out,
+                        config: field,
+                    });
+                    if matches!(node.kind, NodeKind::Port { input: true, .. }) {
+                        netlist.add(Prim::Io { name: format!("iov_{bw}_{qname}"), wire: v_out, output: true });
+                    }
+                }
+                (_, 1) => {
+                    let input = netlist.wire(&vname(g, fan_in[0]), 1);
+                    netlist.add(Prim::Buf { name: format!("vbuf_{bw}_{qname}"), input, out: v_out });
+                }
+                (_, _) => {}
+            }
+
+            // --- Ready layer: flows opposite to data -------------------
+            // The ready seen by node `id` joins the readies of all its
+            // consumers; consumers that are muxes gate their contribution
+            // with "that mux currently selects `id`" (Fig. 5, one-hot
+            // reuse).
+            let consumers = g.fan_out(id);
+            match (&node.kind, consumers.len()) {
+                (NodeKind::Port { input: true, .. }, _) => {
+                    // Core input port: ready comes from the core.
+                    netlist.add(Prim::Io { name: format!("ior_{bw}_{qname}"), wire: r_out, output: false });
+                }
+                (_, 0) => {
+                    // Margin stub: never back-pressured (stays undriven in
+                    // the netlist; simulation ties it high).
+                }
+                _ => {
+                    // For register nodes the join lands on a dedicated
+                    // "downstream" wire: the FIFO sits between its
+                    // consumers' join and the ready its *upstream* sees.
+                    let join_out = if node.kind.is_register() {
+                        netlist.wire(&format!("rdn{bw}_{qname}"), 1)
+                    } else {
+                        r_out
+                    };
+                    let mut readies = Vec::new();
+                    let mut sel_of = Vec::new();
+                    for &c in consumers {
+                        readies.push(netlist.wire(&rname(g, c), 1));
+                        if g.fan_in(c).len() > 1 {
+                            let field = config.mux_field(bw, c).expect("consumer mux config");
+                            let sel = g.select_of(c, id).expect("consumer edge") as u32;
+                            sel_of.push((field, sel));
+                        } else {
+                            // Single-input consumer: always listening
+                            // (sentinel zero-bit field, never gated).
+                            sel_of.push((
+                                super::config::ConfigField { x: node.x, y: node.y, word: u32::MAX, offset: 0, bits: 0 },
+                                0,
+                            ));
+                        }
+                    }
+                    netlist.add(Prim::ReadyJoin {
+                        name: format!("rjoin_{bw}_{qname}"),
+                        readies,
+                        sel_of,
+                        out: join_out,
+                    });
+                }
+            }
+
+            // --- FIFO at register nodes -------------------------------
+            // Ready topology: upstream sees the FIFO's `ready_out`
+            // (not-full); the FIFO drains toward its consumers' join.
+            if node.kind.is_register() && fan_in.len() == 1 {
+                let src = fan_in[0];
+                let d = netlist.find_wire(&format!("w{bw}_{}", g.node(src).qualified_name())).unwrap();
+                let q = netlist.find_wire(&format!("w{bw}_{}", g.node(id).qualified_name())).unwrap();
+                let mode = config.reg_field(bw, id).expect("register mode field");
+                let valid_in = netlist.wire(&vname(g, src), 1);
+                let ready_in = netlist.wire(&format!("rdn{bw}_{qname}"), 1);
+                let fifo = Prim::Fifo {
+                    name: format!("fifo_{bw}_{qname}"),
+                    d,
+                    q,
+                    depth: opts.fifo_depth,
+                    split: opts.split,
+                    mode,
+                    valid_in,
+                    valid_out: v_out,
+                    ready_in,
+                    ready_out: r_out,
+                };
+                netlist.add(fifo);
+            }
+        }
+    }
+
+    // Note: the RV netlist intentionally leaves the Dff primitives from
+    // the static pass in place for register nodes — the FIFO *wraps* the
+    // existing register (depth-1 storage) per §3.3; the Dff's q/FIFO's q
+    // are the same wire, so we drop the redundant Dffs here.
+    let mut nl = Netlist::new(&netlist.name);
+    for w in netlist.wires().to_vec() {
+        nl.wire(&w.name, w.width);
+    }
+    let fifo_qs: std::collections::HashSet<String> = netlist
+        .prims
+        .iter()
+        .filter_map(|p| match p {
+            Prim::Fifo { q, .. } => Some(netlist.wire_name(*q).to_string()),
+            _ => None,
+        })
+        .collect();
+    for p in netlist.prims.clone() {
+        if let Prim::Dff { q, .. } = &p {
+            if fifo_qs.contains(netlist.wire_name(*q)) {
+                continue;
+            }
+        }
+        nl.add(p);
+    }
+    nl.check().expect("ready-valid lowering must produce a sane netlist");
+    Lowered { netlist: nl, config }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    fn ic(reg_density: u16) -> Interconnect {
+        create_uniform_interconnect(&InterconnectConfig {
+            width: 3,
+            height: 3,
+            num_tracks: 2,
+            mem_column_period: 0,
+            reg_density,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn static_lowering_mux_count_matches_ir() {
+        let ic = ic(0);
+        let lowered = lower_static(&ic);
+        let g = ic.graph(16);
+        let ir_muxes = g.mux_nodes().count();
+        assert_eq!(lowered.netlist.histogram()["mux"], ir_muxes);
+    }
+
+    #[test]
+    fn registers_lower_to_dffs() {
+        let ic = ic(1);
+        let lowered = lower_static(&ic);
+        let g = ic.graph(16);
+        let regs = g.iter().filter(|(_, n)| n.kind.is_register()).count();
+        assert_eq!(lowered.netlist.histogram()["dff"], regs);
+    }
+
+    #[test]
+    fn rv_lowering_adds_valid_and_ready_layers() {
+        let ic = ic(1);
+        let lowered = lower_ready_valid(&ic, &RvOptions::default());
+        let h = lowered.netlist.histogram();
+        assert!(h["valid_mux"] > 0);
+        assert!(h["ready_join"] > 0);
+        assert!(h["fifo"] > 0);
+        assert!(!h.contains_key("dff"), "FIFOs must absorb the registers");
+    }
+
+    #[test]
+    fn valid_muxes_share_data_mux_config() {
+        let ic = ic(0);
+        let lowered = lower_ready_valid(&ic, &RvOptions::default());
+        let nl = &lowered.netlist;
+        for p in &nl.prims {
+            if let Prim::ValidMux { name, config, .. } = p {
+                let data_name = name.replacen("vmux_", "mux_", 1);
+                let data = nl
+                    .prims
+                    .iter()
+                    .find_map(|q| match q {
+                        Prim::Mux { name, config, .. } if *name == data_name => Some(*config),
+                        _ => None,
+                    })
+                    .unwrap_or_else(|| panic!("no data mux for {name}"));
+                assert_eq!(*config, data, "{name} must share its data mux's config");
+            }
+        }
+    }
+
+    #[test]
+    fn ready_join_gates_match_mux_selects() {
+        let ic = ic(0);
+        let lowered = lower_ready_valid(&ic, &RvOptions::default());
+        let g = ic.graph(16);
+        // Pick an SB input with multiple mux consumers and check its
+        // ready join lists one gate per consumer.
+        let (id, _) = g
+            .iter()
+            .find(|(id, n)| {
+                matches!(n.kind, NodeKind::SwitchBox { io: SbIo::In, .. })
+                    && g.fan_out(*id).len() > 1
+            })
+            .expect("an SB input with fanout");
+        let jn = format!("rjoin_16_{}", g.node(id).qualified_name());
+        let join = lowered
+            .netlist
+            .prims
+            .iter()
+            .find(|p| p.name() == jn)
+            .unwrap_or_else(|| panic!("missing {jn}"));
+        if let Prim::ReadyJoin { readies, sel_of, .. } = join {
+            assert_eq!(readies.len(), g.fan_out(id).len());
+            assert_eq!(sel_of.len(), readies.len());
+        } else {
+            panic!("not a ReadyJoin");
+        }
+    }
+
+    #[test]
+    fn split_flag_propagates_to_fifos() {
+        let ic = ic(1);
+        let split = lower_ready_valid(&ic, &RvOptions { fifo_depth: 2, split: true });
+        let full = lower_ready_valid(&ic, &RvOptions { fifo_depth: 2, split: false });
+        let is_split = |nl: &Netlist| {
+            nl.prims.iter().any(|p| matches!(p, Prim::Fifo { split: true, .. }))
+        };
+        assert!(is_split(&split.netlist));
+        assert!(!is_split(&full.netlist));
+    }
+}

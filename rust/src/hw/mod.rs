@@ -1,0 +1,21 @@
+//! Hardware generation (§3.3): lowering the graph IR to RTL.
+//!
+//! Two backends — a fully static mesh and a statically-configured
+//! ready-valid NoC (valid layer mirroring data, ready joining via the AOI
+//! one-hot reuse of Fig. 5, and full or split FIFOs per Fig. 6) — plus
+//! Verilog emission, RTL-vs-IR structural verification, and the
+//! configuration-space allocator shared with the bitstream generator.
+
+pub mod config;
+pub mod dynamic;
+pub mod lower;
+pub mod netlist;
+pub mod verify;
+pub mod verilog;
+
+pub use config::{allocate, ConfigField, ConfigSpace, FieldRole, CONFIG_WORD_BITS};
+pub use dynamic::{hop_count, lower_dynamic, noc_area, router_area_um2, verify_tables, DynNoc, DynOptions, DynRouter};
+pub use lower::{lower_ready_valid, lower_static, Lowered, RvOptions};
+pub use netlist::{Netlist, Prim, Wire, WireId};
+pub use verify::{parse_rtl, verify_rtl, Mismatch, ParsedRtl};
+pub use verilog::{cfg_reg_name, emit};

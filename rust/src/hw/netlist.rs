@@ -1,0 +1,256 @@
+//! Structural netlist: the hardware-side IR the graph IR lowers into.
+//!
+//! The paper uses magma; we use an equivalent in-memory structural
+//! representation from which Verilog is emitted ([`super::verilog`]) and
+//! against which structural verification runs ([`super::verify`]). Only
+//! *connectivity* semantics matter for Canal's checks, so primitives are
+//! kept at mux/register/FIFO granularity — exactly the components the
+//! lowering rules of §3.3 produce.
+
+use std::collections::HashMap;
+
+use super::config::ConfigField;
+
+/// Index of a wire in a [`Netlist`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct WireId(pub u32);
+
+/// A named wire (bus) of `width` bits.
+#[derive(Clone, Debug)]
+pub struct Wire {
+    pub name: String,
+    pub width: u8,
+}
+
+/// Hardware primitive instances — the lowering targets of §3.3:
+/// edges → wires, multi-fan-in nodes → muxes, register nodes → registers
+/// (or FIFOs in the ready-valid backend).
+#[derive(Clone, Debug)]
+pub enum Prim {
+    /// Configurable mux: `out = inputs[config]`.
+    Mux { name: String, inputs: Vec<WireId>, out: WireId, config: ConfigField },
+    /// Plain wire alias (fan-in of exactly one): `out = input`.
+    Buf { name: String, input: WireId, out: WireId },
+    /// Pipeline register.
+    Dff { name: String, d: WireId, q: WireId },
+    /// Ready-valid FIFO stage replacing a Dff in the RV backend.
+    /// `split` marks the Fig. 6 optimization (second entry borrowed from
+    /// the adjacent tile's register; control chained across the border).
+    Fifo {
+        name: String,
+        d: WireId,
+        q: WireId,
+        depth: u8,
+        split: bool,
+        mode: ConfigField,
+        valid_in: WireId,
+        valid_out: WireId,
+        ready_in: WireId,
+        ready_out: WireId,
+    },
+    /// 1-bit valid mux mirroring a data mux (shares its config field).
+    ValidMux { name: String, inputs: Vec<WireId>, out: WireId, config: ConfigField },
+    /// Ready-join (Fig. 5): combines downstream readies of a fan-out
+    /// point using the one-hot decode of the listed mux selects.
+    /// `readies[i]` is gated by "mux `muxes[i]` currently selects us".
+    ReadyJoin {
+        name: String,
+        readies: Vec<WireId>,
+        sel_of: Vec<(ConfigField, u32)>,
+        out: WireId,
+    },
+    /// Top-level port of the fabric (core-side or pad-side boundary).
+    Io { name: String, wire: WireId, output: bool },
+}
+
+impl Prim {
+    pub fn name(&self) -> &str {
+        match self {
+            Prim::Mux { name, .. }
+            | Prim::Buf { name, .. }
+            | Prim::Dff { name, .. }
+            | Prim::Fifo { name, .. }
+            | Prim::ValidMux { name, .. }
+            | Prim::ReadyJoin { name, .. }
+            | Prim::Io { name, .. } => name,
+        }
+    }
+}
+
+/// A flat structural netlist.
+#[derive(Clone, Debug, Default)]
+pub struct Netlist {
+    pub name: String,
+    wires: Vec<Wire>,
+    by_name: HashMap<String, WireId>,
+    pub prims: Vec<Prim>,
+}
+
+impl Netlist {
+    pub fn new(name: &str) -> Self {
+        Netlist { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Declare (or fetch) a wire.
+    pub fn wire(&mut self, name: &str, width: u8) -> WireId {
+        if let Some(&id) = self.by_name.get(name) {
+            assert_eq!(self.wires[id.0 as usize].width, width, "width clash on `{name}`");
+            return id;
+        }
+        let id = WireId(self.wires.len() as u32);
+        self.wires.push(Wire { name: name.to_string(), width });
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    pub fn wire_name(&self, id: WireId) -> &str {
+        &self.wires[id.0 as usize].name
+    }
+
+    pub fn wire_width(&self, id: WireId) -> u8 {
+        self.wires[id.0 as usize].width
+    }
+
+    pub fn find_wire(&self, name: &str) -> Option<WireId> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn wires(&self) -> &[Wire] {
+        &self.wires
+    }
+
+    pub fn add(&mut self, prim: Prim) {
+        self.prims.push(prim);
+    }
+
+    /// Drivers per wire (for structural checks): wire -> primitive index.
+    pub fn drivers(&self) -> HashMap<WireId, Vec<usize>> {
+        let mut m: HashMap<WireId, Vec<usize>> = HashMap::new();
+        for (i, p) in self.prims.iter().enumerate() {
+            let outs: Vec<WireId> = match p {
+                Prim::Mux { out, .. }
+                | Prim::Buf { out, .. }
+                | Prim::ValidMux { out, .. }
+                | Prim::ReadyJoin { out, .. } => vec![*out],
+                Prim::Dff { q, .. } => vec![*q],
+                Prim::Fifo { q, valid_out, ready_out, .. } => vec![*q, *valid_out, *ready_out],
+                Prim::Io { wire, output, .. } => {
+                    if *output {
+                        vec![]
+                    } else {
+                        vec![*wire]
+                    }
+                }
+            };
+            for o in outs {
+                m.entry(o).or_default().push(i);
+            }
+        }
+        m
+    }
+
+    /// Structural sanity: every wire has at most one driver; mux inputs
+    /// have matching widths.
+    pub fn check(&self) -> Result<(), String> {
+        for (w, drv) in self.drivers() {
+            if drv.len() > 1 {
+                return Err(format!(
+                    "wire `{}` multiply driven by {:?}",
+                    self.wire_name(w),
+                    drv.iter().map(|&i| self.prims[i].name()).collect::<Vec<_>>()
+                ));
+            }
+        }
+        for p in &self.prims {
+            if let Prim::Mux { name, inputs, out, .. } = p {
+                let w = self.wire_width(*out);
+                for i in inputs {
+                    if self.wire_width(*i) != w {
+                        return Err(format!("mux `{name}` mixes widths"));
+                    }
+                }
+                if inputs.len() < 2 {
+                    return Err(format!("mux `{name}` has {} inputs", inputs.len()));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Count primitives by family.
+    pub fn histogram(&self) -> HashMap<&'static str, usize> {
+        let mut h = HashMap::new();
+        for p in &self.prims {
+            let k = match p {
+                Prim::Mux { .. } => "mux",
+                Prim::Buf { .. } => "buf",
+                Prim::Dff { .. } => "dff",
+                Prim::Fifo { .. } => "fifo",
+                Prim::ValidMux { .. } => "valid_mux",
+                Prim::ReadyJoin { .. } => "ready_join",
+                Prim::Io { .. } => "io",
+            };
+            *h.entry(k).or_insert(0) += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field() -> ConfigField {
+        ConfigField { x: 0, y: 0, word: 0, offset: 0, bits: 2 }
+    }
+
+    #[test]
+    fn wire_dedup_by_name() {
+        let mut n = Netlist::new("t");
+        let a = n.wire("a", 16);
+        let a2 = n.wire("a", 16);
+        assert_eq!(a, a2);
+        assert_eq!(n.wires().len(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "width clash")]
+    fn width_clash_detected() {
+        let mut n = Netlist::new("t");
+        n.wire("a", 16);
+        n.wire("a", 8);
+    }
+
+    #[test]
+    fn multiple_drivers_rejected() {
+        let mut n = Netlist::new("t");
+        let a = n.wire("a", 16);
+        let b = n.wire("b", 16);
+        let c = n.wire("c", 16);
+        n.add(Prim::Buf { name: "b0".into(), input: a, out: c });
+        n.add(Prim::Buf { name: "b1".into(), input: b, out: c });
+        assert!(n.check().is_err());
+    }
+
+    #[test]
+    fn mux_width_mismatch_rejected() {
+        let mut n = Netlist::new("t");
+        let a = n.wire("a", 16);
+        let b = n.wire("b", 8);
+        let c = n.wire("c", 16);
+        n.add(Prim::Mux { name: "m".into(), inputs: vec![a, b], out: c, config: field() });
+        assert!(n.check().is_err());
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let mut n = Netlist::new("t");
+        let a = n.wire("a", 16);
+        let b = n.wire("b", 16);
+        n.add(Prim::Dff { name: "r".into(), d: a, q: b });
+        n.add(Prim::Io { name: "ia".into(), wire: a, output: false });
+        assert_eq!(n.histogram()["dff"], 1);
+        assert_eq!(n.histogram()["io"], 1);
+        n.check().unwrap();
+    }
+}

@@ -1,0 +1,268 @@
+//! Structural verification: RTL vs IR (§3.3).
+//!
+//! "After the graph is translated into RTL, Canal verifies structural
+//! correctness by comparing the connectivity of the hardware with that of
+//! the IR by parsing the generated RTL." This module parses the emitted
+//! Verilog back into (out ← ordered inputs) connectivity and checks it
+//! against the routing graph: every fan-in-N node must appear as an N-way
+//! mux with the IR's driver order (the order *is* the select encoding),
+//! every single-driver node as a buffer/DFF, and every port as a module
+//! port of the right direction.
+
+use std::collections::HashMap;
+
+use crate::ir::{Interconnect, NodeKind};
+
+/// Connectivity recovered from RTL text.
+#[derive(Clone, Debug, Default)]
+pub struct ParsedRtl {
+    /// mux: out wire -> ordered input wires.
+    pub muxes: HashMap<String, Vec<String>>,
+    /// buf: out -> in.
+    pub bufs: HashMap<String, String>,
+    /// dff: q -> d.
+    pub dffs: HashMap<String, String>,
+    /// fifo instance name -> (d, q).
+    pub fifos: HashMap<String, (String, String)>,
+    /// module ports: name -> is_output.
+    pub ports: HashMap<String, bool>,
+}
+
+/// Parse the canonical Verilog produced by [`super::verilog::emit`].
+pub fn parse_rtl(text: &str) -> ParsedRtl {
+    let mut out = ParsedRtl::default();
+    for raw in text.lines() {
+        let line = raw.trim();
+        if let Some(rest) = line.strip_prefix("input  wire ") {
+            let name = rest.trim_end_matches(',').split_whitespace().last().unwrap_or("");
+            if !name.is_empty() && name != "clk" && name != "rst" {
+                out.ports.insert(name.to_string(), false);
+            }
+        } else if let Some(rest) = line.strip_prefix("output wire ") {
+            let name = rest.trim_end_matches(',').split_whitespace().last().unwrap_or("");
+            out.ports.insert(name.to_string(), true);
+        } else if line.starts_with("assign ") && line.contains(" ? ") {
+            // assign OUT = cfg == B'dK ? IN0 : cfg == B'dK ? IN1 : ... : W'd0; // name
+            let body = line.trim_start_matches("assign ");
+            let (lhs, rhs) = match body.split_once('=') {
+                Some(p) => p,
+                None => continue,
+            };
+            let lhs = lhs.trim().to_string();
+            let mut inputs = Vec::new();
+            for seg in rhs.split('?').skip(1) {
+                let inp = seg.split(':').next().unwrap_or("").trim();
+                if !inp.is_empty() {
+                    inputs.push(inp.to_string());
+                }
+            }
+            out.muxes.insert(lhs, inputs);
+        } else if line.starts_with("assign ") && !line.contains('?') && !line.contains('&') {
+            // assign OUT = IN; // name
+            let body = line.trim_start_matches("assign ");
+            if let Some((lhs, rhs)) = body.split_once('=') {
+                let rhs = rhs.split(';').next().unwrap_or("").trim();
+                // Ready joins with a single ungated term also match this
+                // shape; they never collide with data wires (r-prefix).
+                out.bufs.insert(lhs.trim().to_string(), rhs.to_string());
+            }
+        } else if line.starts_with("always @(posedge clk) ") {
+            // always @(posedge clk) Q <= D; // name
+            let body = line.trim_start_matches("always @(posedge clk) ");
+            if let Some((q, d)) = body.split_once("<=") {
+                let d = d.split(';').next().unwrap_or("").trim();
+                out.dffs.insert(q.trim().to_string(), d.to_string());
+            }
+        } else if line.starts_with("canal_rv_fifo #(") {
+            // grab .d(WIRE) / .q(WIRE) + instance name
+            let name = line
+                .split(')')
+                .find_map(|s| {
+                    let s = s.trim_start();
+                    s.strip_prefix(") ").map(|x| x.to_string())
+                })
+                .unwrap_or_default();
+            let grab = |key: &str| {
+                line.split(key)
+                    .nth(1)
+                    .and_then(|s| s.split(')').next())
+                    .unwrap_or("")
+                    .to_string()
+            };
+            let inst = if name.is_empty() {
+                // fallback: token before "(.clk"
+                line.split("(.clk").next().unwrap_or("").split_whitespace().last().unwrap_or("").to_string()
+            } else {
+                name
+            };
+            out.fifos.insert(inst, (grab(".d("), grab(".q(")));
+        }
+    }
+    out
+}
+
+/// A structural mismatch between RTL and IR.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Mismatch {
+    pub wire: String,
+    pub reason: String,
+}
+
+/// Verify RTL text against the interconnect IR. Empty result ⇒ pass.
+pub fn verify_rtl(ic: &Interconnect, rtl: &str) -> Vec<Mismatch> {
+    let parsed = parse_rtl(rtl);
+    let mut mismatches = Vec::new();
+
+    for (&bw, g) in &ic.graphs {
+        let wname = |id| format!("w{bw}_{}", g.node(id).qualified_name());
+        for (id, node) in g.iter() {
+            let wire = wname(id);
+            let fan_in = g.fan_in(id);
+            match (&node.kind, fan_in.len()) {
+                (NodeKind::Port { input: false, .. }, _) => {
+                    match parsed.ports.get(&wire) {
+                        Some(false) => {}
+                        Some(true) => mismatches.push(Mismatch {
+                            wire,
+                            reason: "output port emitted as module output".into(),
+                        }),
+                        None => mismatches.push(Mismatch {
+                            wire,
+                            reason: "core output port missing from module ports".into(),
+                        }),
+                    }
+                }
+                (NodeKind::Register { .. }, 1) => {
+                    let d_expected = wname(fan_in[0]);
+                    let dff_ok =
+                        parsed.dffs.get(&wire).map(|d| *d == d_expected).unwrap_or(false);
+                    let fifo_ok = parsed
+                        .fifos
+                        .values()
+                        .any(|(d, q)| *q == wire && *d == d_expected);
+                    if !dff_ok && !fifo_ok {
+                        mismatches.push(Mismatch {
+                            wire,
+                            reason: format!("register not driven by {d_expected}"),
+                        });
+                    }
+                }
+                (_, n) if n > 1 => match parsed.muxes.get(&wire) {
+                    None => mismatches.push(Mismatch {
+                        wire,
+                        reason: format!("expected {n}-input mux, none found"),
+                    }),
+                    Some(inputs) => {
+                        let expected: Vec<String> =
+                            fan_in.iter().map(|&f| wname(f)).collect();
+                        if *inputs != expected {
+                            mismatches.push(Mismatch {
+                                wire,
+                                reason: format!(
+                                    "mux inputs {inputs:?} != IR drivers {expected:?}"
+                                ),
+                            });
+                        }
+                    }
+                },
+                (_, 1) => {
+                    let expected = wname(fan_in[0]);
+                    let ok = parsed.bufs.get(&wire).map(|i| *i == expected).unwrap_or(false);
+                    if !ok {
+                        mismatches.push(Mismatch {
+                            wire,
+                            reason: format!("buffer from {expected} missing"),
+                        });
+                    }
+                }
+                (_, _) => {} // margin stubs have no hardware
+            }
+        }
+    }
+    mismatches
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use crate::hw::lower::{lower_ready_valid, lower_static, RvOptions};
+    use crate::hw::verilog::emit;
+
+    fn ic() -> Interconnect {
+        create_uniform_interconnect(&InterconnectConfig {
+            width: 3,
+            height: 2,
+            num_tracks: 2,
+            mem_column_period: 2,
+            reg_density: 1,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn static_rtl_verifies_against_ir() {
+        let ic = ic();
+        let rtl = emit(&lower_static(&ic).netlist);
+        let m = verify_rtl(&ic, &rtl);
+        assert!(m.is_empty(), "{:?}", &m[..m.len().min(5)]);
+    }
+
+    #[test]
+    fn rv_rtl_verifies_against_ir() {
+        let ic = ic();
+        let rtl = emit(&lower_ready_valid(&ic, &RvOptions::default()).netlist);
+        let m = verify_rtl(&ic, &rtl);
+        assert!(m.is_empty(), "{:?}", &m[..m.len().min(5)]);
+    }
+
+    #[test]
+    fn tampered_mux_input_detected() {
+        let ic = ic();
+        let rtl = emit(&lower_static(&ic).netlist);
+        // Swap the first two mux alternatives on some mux line: select
+        // encodings no longer match the IR driver order.
+        let line = rtl
+            .lines()
+            .find(|l| l.contains(" ? ") && l.contains("sb_north_out_t0"))
+            .expect("a mux line");
+        let mut parts: Vec<&str> = line.split(" ? ").collect();
+        assert!(parts.len() >= 3);
+        // swap input wires between first two arms
+        let a = parts[1].split(" : ").next().unwrap().to_string();
+        let b = parts[2].split(" : ").next().unwrap().to_string();
+        let swapped = line
+            .replacen(&a, "__TMP__", 1)
+            .replacen(&b, &a, 1)
+            .replacen("__TMP__", &b, 1);
+        let tampered = rtl.replace(line, &swapped);
+        let _ = parts.pop();
+        let m = verify_rtl(&ic, &tampered);
+        assert!(!m.is_empty(), "tampering must be detected");
+    }
+
+    #[test]
+    fn dropped_buffer_detected() {
+        let ic = ic();
+        let rtl = emit(&lower_static(&ic).netlist);
+        let line = rtl
+            .lines()
+            .find(|l| {
+                l.trim_start().starts_with("assign") && !l.contains('?') && l.contains("// buf_")
+            })
+            .expect("a buf line");
+        let tampered = rtl.replace(line, "");
+        let m = verify_rtl(&ic, &tampered);
+        assert!(m.iter().any(|x| x.reason.contains("buffer")));
+    }
+
+    #[test]
+    fn parse_recovers_port_directions() {
+        let ic = ic();
+        let rtl = emit(&lower_static(&ic).netlist);
+        let parsed = parse_rtl(&rtl);
+        assert!(parsed.ports.values().any(|&o| o));
+        assert!(parsed.ports.values().any(|&o| !o));
+        assert!(!parsed.ports.contains_key("clk"));
+    }
+}

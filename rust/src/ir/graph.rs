@@ -1,0 +1,250 @@
+//! The routing graph: Canal's graph-based IR (§3.1).
+//!
+//! One `RoutingGraph` holds all nodes and wires of a single bit width
+//! (real interconnects instantiate one graph per track width, e.g. a
+//! 16-bit data layer and a 1-bit control layer). Nodes live in an arena
+//! indexed by [`NodeId`]; edges are adjacency lists kept in *insertion
+//! order* — the position of an incoming edge is the mux-select value the
+//! bitstream generator emits, so order is part of the architecture.
+
+use std::collections::HashMap;
+
+use super::node::{Node, NodeId, NodeKind, SbIo, Side};
+
+/// Key used to find a node by (tile, kind) — the IR analogue of the
+/// `Node(x=1, y=1, side="south", track=1)` lookup in the paper's Fig. 4.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub struct NodeKey {
+    pub x: u16,
+    pub y: u16,
+    pub kind: NodeKind,
+}
+
+/// Directed routing graph for one bit width.
+#[derive(Clone, Debug, Default)]
+pub struct RoutingGraph {
+    /// Bit width carried by every node in this graph.
+    pub width: u8,
+    nodes: Vec<Node>,
+    /// `edges_out[n]` = nodes driven by `n`, in insertion order.
+    edges_out: Vec<Vec<NodeId>>,
+    /// `edges_in[n]` = drivers of `n`, in insertion order. The index of a
+    /// driver in this list is its mux-select encoding.
+    edges_in: Vec<Vec<NodeId>>,
+    /// Per-edge wire delay in ps, keyed by (from, to).
+    wire_delay: HashMap<(NodeId, NodeId), u32>,
+    /// Reverse lookup from (x, y, kind).
+    index: HashMap<NodeKey, NodeId>,
+}
+
+impl RoutingGraph {
+    pub fn new(width: u8) -> Self {
+        RoutingGraph { width, ..Default::default() }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add a node; panics if an identical (x, y, kind) node already exists
+    /// or if the node's width disagrees with the graph's width.
+    pub fn add_node(&mut self, node: Node) -> NodeId {
+        assert_eq!(
+            node.width, self.width,
+            "node width {} does not match graph width {}",
+            node.width, self.width
+        );
+        let key = NodeKey { x: node.x, y: node.y, kind: node.kind.clone() };
+        assert!(
+            !self.index.contains_key(&key),
+            "duplicate node {} at ({}, {})",
+            node.kind.label(),
+            node.x,
+            node.y
+        );
+        let id = NodeId(self.nodes.len() as u32);
+        self.index.insert(key, id);
+        self.nodes.push(node);
+        self.edges_out.push(Vec::new());
+        self.edges_in.push(Vec::new());
+        id
+    }
+
+    /// Connect `from -> to` with an explicit wire delay. Duplicate edges
+    /// are rejected (they would create ambiguous mux selects).
+    pub fn connect_with_delay(&mut self, from: NodeId, to: NodeId, delay_ps: u32) {
+        assert_ne!(from, to, "self-loop on {}", self.node(from).qualified_name());
+        assert!(
+            !self.edges_out[from.index()].contains(&to),
+            "duplicate edge {} -> {}",
+            self.node(from).qualified_name(),
+            self.node(to).qualified_name()
+        );
+        self.edges_out[from.index()].push(to);
+        self.edges_in[to.index()].push(from);
+        self.wire_delay.insert((from, to), delay_ps);
+    }
+
+    /// Connect with zero wire delay (intra-tile wiring).
+    pub fn connect(&mut self, from: NodeId, to: NodeId) {
+        self.connect_with_delay(from, to, 0);
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.index()]
+    }
+
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id.index()]
+    }
+
+    /// Drivers of `id` in mux-select order.
+    pub fn fan_in(&self, id: NodeId) -> &[NodeId] {
+        &self.edges_in[id.index()]
+    }
+
+    /// Nodes driven by `id`.
+    pub fn fan_out(&self, id: NodeId) -> &[NodeId] {
+        &self.edges_out[id.index()]
+    }
+
+    /// Wire delay of edge `(from, to)`; panics if absent.
+    pub fn wire_delay(&self, from: NodeId, to: NodeId) -> u32 {
+        self.wire_delay[&(from, to)]
+    }
+
+    /// Mux-select value that routes `driver` onto `id`, if connected.
+    pub fn select_of(&self, id: NodeId, driver: NodeId) -> Option<usize> {
+        self.fan_in(id).iter().position(|&d| d == driver)
+    }
+
+    /// Find a node by (x, y, kind).
+    pub fn find(&self, x: u16, y: u16, kind: &NodeKind) -> Option<NodeId> {
+        self.index.get(&NodeKey { x, y, kind: kind.clone() }).copied()
+    }
+
+    /// Convenience: find a switch-box endpoint.
+    pub fn find_sb(&self, x: u16, y: u16, side: Side, io: SbIo, track: u16) -> Option<NodeId> {
+        self.find(x, y, &NodeKind::SwitchBox { side, io, track })
+    }
+
+    /// Convenience: find a core port.
+    pub fn find_port(&self, x: u16, y: u16, name: &str, input: bool) -> Option<NodeId> {
+        self.find(x, y, &NodeKind::Port { name: name.to_string(), input })
+    }
+
+    /// Iterate `(NodeId, &Node)`.
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (NodeId(i as u32), n))
+    }
+
+    /// All node ids.
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> + 'static {
+        (0..self.nodes.len() as u32).map(NodeId)
+    }
+
+    /// Nodes that lower to multiplexers (fan-in > 1). The heart of the
+    /// lowering rule "nodes with multiple incoming edges generate
+    /// multiplexers" (§3.3).
+    pub fn mux_nodes(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.ids().filter(|id| self.fan_in(*id).len() > 1)
+    }
+
+    /// Total number of directed edges.
+    pub fn edge_count(&self) -> usize {
+        self.edges_out.iter().map(Vec::len).sum()
+    }
+
+    /// All edges as (from, to) pairs.
+    pub fn edges(&self) -> impl Iterator<Item = (NodeId, NodeId)> + '_ {
+        self.ids().flat_map(move |from| {
+            self.fan_out(from).iter().map(move |&to| (from, to))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::node::{Node, NodeKind, SbIo, Side};
+
+    fn sb(x: u16, y: u16, side: Side, io: SbIo, track: u16) -> Node {
+        Node::new(NodeKind::SwitchBox { side, io, track }, x, y, 16, 40)
+    }
+
+    #[test]
+    fn add_and_find_roundtrip() {
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::North, SbIo::In, 0));
+        assert_eq!(g.find_sb(0, 0, Side::North, SbIo::In, 0), Some(a));
+        assert_eq!(g.find_sb(0, 0, Side::North, SbIo::Out, 0), None);
+        assert_eq!(g.len(), 1);
+    }
+
+    #[test]
+    fn fan_in_order_is_mux_select_order() {
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::North, SbIo::In, 0));
+        let b = g.add_node(sb(0, 0, Side::South, SbIo::In, 0));
+        let c = g.add_node(sb(0, 0, Side::East, SbIo::Out, 0));
+        g.connect(a, c);
+        g.connect(b, c);
+        assert_eq!(g.fan_in(c), &[a, b]);
+        assert_eq!(g.select_of(c, a), Some(0));
+        assert_eq!(g.select_of(c, b), Some(1));
+        assert_eq!(g.select_of(c, c), None);
+    }
+
+    #[test]
+    fn mux_nodes_require_multiple_drivers() {
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::North, SbIo::In, 0));
+        let b = g.add_node(sb(0, 0, Side::South, SbIo::In, 0));
+        let c = g.add_node(sb(0, 0, Side::East, SbIo::Out, 0));
+        g.connect(a, c);
+        assert_eq!(g.mux_nodes().count(), 0);
+        g.connect(b, c);
+        assert_eq!(g.mux_nodes().collect::<Vec<_>>(), vec![c]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node")]
+    fn duplicate_nodes_rejected() {
+        let mut g = RoutingGraph::new(16);
+        g.add_node(sb(1, 1, Side::North, SbIo::In, 0));
+        g.add_node(sb(1, 1, Side::North, SbIo::In, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate edge")]
+    fn duplicate_edges_rejected() {
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::North, SbIo::In, 0));
+        let b = g.add_node(sb(0, 0, Side::East, SbIo::Out, 0));
+        g.connect(a, b);
+        g.connect(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "width")]
+    fn width_mismatch_rejected() {
+        let mut g = RoutingGraph::new(16);
+        g.add_node(Node::new(NodeKind::Port { name: "p".into(), input: true }, 0, 0, 1, 0));
+    }
+
+    #[test]
+    fn wire_delay_stored_per_edge() {
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::East, SbIo::Out, 0));
+        let b = g.add_node(sb(1, 0, Side::West, SbIo::In, 0));
+        g.connect_with_delay(a, b, 85);
+        assert_eq!(g.wire_delay(a, b), 85);
+        assert_eq!(g.edge_count(), 1);
+        assert_eq!(g.edges().collect::<Vec<_>>(), vec![(a, b)]);
+    }
+}

@@ -1,0 +1,240 @@
+//! The full interconnect: a grid of tiles plus one routing graph per bit
+//! width. This is what the Canal eDSL builds and every downstream tool
+//! (hardware lowering, PnR, bitstream generation, simulation) consumes.
+
+use std::collections::BTreeMap;
+
+use super::graph::RoutingGraph;
+use super::node::{NodeId, NodeKind};
+
+/// A port on a core (PE or MEM).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct PortSpec {
+    pub name: String,
+    pub width: u8,
+}
+
+impl PortSpec {
+    pub fn new(name: &str, width: u8) -> Self {
+        PortSpec { name: name.to_string(), width }
+    }
+}
+
+/// Kind of core occupying a tile. The paper's arrays interleave PE tiles
+/// and MEM tiles (fewer MEM columns than PE columns).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum CoreKind {
+    Pe,
+    Mem,
+    /// I/O pad tiles on the array margin: entry/exit points for
+    /// application streams.
+    Io,
+}
+
+impl CoreKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CoreKind::Pe => "PE",
+            CoreKind::Mem => "MEM",
+            CoreKind::Io => "IO",
+        }
+    }
+}
+
+/// What sits inside a tile. Canal treats cores as opaque: only their
+/// ports (and a delay attribute for STA) are visible to the interconnect.
+#[derive(Clone, PartialEq, Debug)]
+pub struct CoreSpec {
+    pub kind: CoreKind,
+    pub inputs: Vec<PortSpec>,
+    pub outputs: Vec<PortSpec>,
+    /// Combinational delay through the core in ps (used by timing-driven
+    /// routing and STA; Fig. 7's "timing information as weights").
+    pub delay_ps: u32,
+}
+
+impl CoreSpec {
+    /// The paper's reference PE: 4 data inputs, 2 data outputs
+    /// (§4.1: "PEs with two outputs and four inputs").
+    pub fn pe(width: u8) -> Self {
+        CoreSpec {
+            kind: CoreKind::Pe,
+            inputs: (0..4).map(|i| PortSpec::new(&format!("data_in_{i}"), width)).collect(),
+            outputs: (0..2).map(|i| PortSpec::new(&format!("data_out_{i}"), width)).collect(),
+            delay_ps: 640,
+        }
+    }
+
+    /// Memory tile: 2 inputs (wdata, addr-ish) and 2 outputs.
+    pub fn mem(width: u8) -> Self {
+        CoreSpec {
+            kind: CoreKind::Mem,
+            inputs: (0..2).map(|i| PortSpec::new(&format!("wdata_{i}"), width)).collect(),
+            outputs: (0..2).map(|i| PortSpec::new(&format!("rdata_{i}"), width)).collect(),
+            delay_ps: 800,
+        }
+    }
+
+    /// Margin I/O tile: one input (to pad) and one output (from pad).
+    pub fn io(width: u8) -> Self {
+        CoreSpec {
+            kind: CoreKind::Io,
+            inputs: vec![PortSpec::new("io_in", width)],
+            outputs: vec![PortSpec::new("io_out", width)],
+            delay_ps: 0,
+        }
+    }
+
+    pub fn port_width(&self, name: &str) -> Option<u8> {
+        self.inputs
+            .iter()
+            .chain(self.outputs.iter())
+            .find(|p| p.name == name)
+            .map(|p| p.width)
+    }
+}
+
+/// One tile of the array.
+#[derive(Clone, Debug)]
+pub struct Tile {
+    pub x: u16,
+    pub y: u16,
+    pub core: CoreSpec,
+}
+
+/// The complete interconnect IR.
+#[derive(Clone, Debug)]
+pub struct Interconnect {
+    pub width: u16,
+    pub height: u16,
+    /// Row-major tiles (`y * width + x`).
+    pub tiles: Vec<Tile>,
+    /// One routing graph per bit width, e.g. {16: data, 1: control}.
+    pub graphs: BTreeMap<u8, RoutingGraph>,
+    /// Human-readable description of how this interconnect was built
+    /// (topology name, tracks, ...), embedded into generated collateral.
+    pub descriptor: String,
+}
+
+impl Interconnect {
+    pub fn new(width: u16, height: u16, tiles: Vec<Tile>, descriptor: String) -> Self {
+        assert_eq!(tiles.len(), width as usize * height as usize);
+        for (i, t) in tiles.iter().enumerate() {
+            assert_eq!(
+                (t.x as usize, t.y as usize),
+                (i % width as usize, i / width as usize),
+                "tiles must be row-major"
+            );
+        }
+        Interconnect { width, height, tiles, graphs: BTreeMap::new(), descriptor }
+    }
+
+    pub fn tile(&self, x: u16, y: u16) -> &Tile {
+        &self.tiles[y as usize * self.width as usize + x as usize]
+    }
+
+    pub fn in_bounds(&self, x: i32, y: i32) -> bool {
+        x >= 0 && y >= 0 && (x as u16) < self.width && (y as u16) < self.height
+    }
+
+    pub fn graph(&self, bit_width: u8) -> &RoutingGraph {
+        self.graphs
+            .get(&bit_width)
+            .unwrap_or_else(|| panic!("no routing graph of width {bit_width}"))
+    }
+
+    pub fn graph_mut(&mut self, bit_width: u8) -> &mut RoutingGraph {
+        self.graphs
+            .get_mut(&bit_width)
+            .unwrap_or_else(|| panic!("no routing graph of width {bit_width}"))
+    }
+
+    /// Bit widths present, ascending.
+    pub fn bit_widths(&self) -> Vec<u8> {
+        self.graphs.keys().copied().collect()
+    }
+
+    /// Iterate tiles of a given core kind.
+    pub fn tiles_of(&self, kind: CoreKind) -> impl Iterator<Item = &Tile> {
+        self.tiles.iter().filter(move |t| t.core.kind == kind)
+    }
+
+    /// All core-port nodes of a graph at a tile.
+    pub fn port_nodes(&self, bit_width: u8, x: u16, y: u16) -> Vec<NodeId> {
+        let g = self.graph(bit_width);
+        let tile = self.tile(x, y);
+        let mut out = Vec::new();
+        for p in tile.core.inputs.iter().filter(|p| p.width == bit_width) {
+            if let Some(id) = g.find(x, y, &NodeKind::Port { name: p.name.clone(), input: true }) {
+                out.push(id);
+            }
+        }
+        for p in tile.core.outputs.iter().filter(|p| p.width == bit_width) {
+            if let Some(id) = g.find(x, y, &NodeKind::Port { name: p.name.clone(), input: false }) {
+                out.push(id);
+            }
+        }
+        out
+    }
+
+    /// Total nodes across all graphs.
+    pub fn node_count(&self) -> usize {
+        self.graphs.values().map(RoutingGraph::len).sum()
+    }
+
+    /// Total edges across all graphs.
+    pub fn edge_count(&self) -> usize {
+        self.graphs.values().map(RoutingGraph::edge_count).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiles(w: u16, h: u16) -> Vec<Tile> {
+        let mut ts = Vec::new();
+        for y in 0..h {
+            for x in 0..w {
+                ts.push(Tile { x, y, core: CoreSpec::pe(16) });
+            }
+        }
+        ts
+    }
+
+    #[test]
+    fn row_major_layout_enforced() {
+        let ic = Interconnect::new(3, 2, tiles(3, 2), "t".into());
+        assert_eq!(ic.tile(2, 1).x, 2);
+        assert_eq!(ic.tile(2, 1).y, 1);
+        assert!(ic.in_bounds(0, 0));
+        assert!(!ic.in_bounds(3, 0));
+        assert!(!ic.in_bounds(-1, 0));
+    }
+
+    #[test]
+    #[should_panic(expected = "row-major")]
+    fn shuffled_tiles_rejected() {
+        let mut ts = tiles(2, 2);
+        ts.swap(0, 1);
+        Interconnect::new(2, 2, ts, "t".into());
+    }
+
+    #[test]
+    fn reference_pe_matches_paper() {
+        let pe = CoreSpec::pe(16);
+        assert_eq!(pe.inputs.len(), 4);
+        assert_eq!(pe.outputs.len(), 2);
+        assert_eq!(pe.port_width("data_in_0"), Some(16));
+        assert_eq!(pe.port_width("nope"), None);
+    }
+
+    #[test]
+    fn graphs_indexed_by_width() {
+        let mut ic = Interconnect::new(2, 2, tiles(2, 2), "t".into());
+        ic.graphs.insert(16, RoutingGraph::new(16));
+        ic.graphs.insert(1, RoutingGraph::new(1));
+        assert_eq!(ic.bit_widths(), vec![1, 16]);
+        assert_eq!(ic.graph(16).width, 16);
+    }
+}

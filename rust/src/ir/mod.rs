@@ -1,0 +1,19 @@
+//! Graph-based intermediate representation for CGRA interconnects (§3.1).
+//!
+//! Nodes represent anything connectable in hardware (switch-box track
+//! endpoints, core ports, pipeline registers, bypass muxes); directed edges
+//! are wires. Fan-in > 1 lowers to a configurable multiplexer. The same IR
+//! drives hardware generation (`crate::hw`), PnR (`crate::pnr`), bitstream
+//! generation (`crate::bitstream`) and simulation (`crate::sim`).
+
+pub mod graph;
+pub mod interconnect;
+pub mod node;
+pub mod serialize;
+pub mod validate;
+
+pub use graph::{NodeKey, RoutingGraph};
+pub use interconnect::{CoreKind, CoreSpec, Interconnect, PortSpec, Tile};
+pub use node::{Node, NodeId, NodeKind, SbIo, Side};
+pub use serialize::{emit_graph, parse_graph};
+pub use validate::{assert_valid, validate, Violation};

@@ -1,0 +1,218 @@
+//! IR node definitions.
+//!
+//! Canal's intermediate representation is a directed graph whose nodes are
+//! "anything that can be connected in the underlying hardware" (§3.1 of the
+//! paper) and whose edges are wires. A node with multiple incoming edges
+//! lowers to a configurable multiplexer; node attributes drive both hardware
+//! generation and place-and-route.
+
+use std::fmt;
+
+/// A side of a switch box / tile. The ordering (N, S, E, W) is significant:
+/// it is the configuration-space ordering used by the bitstream generator
+/// and the mux-select encoding.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum Side {
+    North = 0,
+    South = 1,
+    East = 2,
+    West = 3,
+}
+
+impl Side {
+    pub const ALL: [Side; 4] = [Side::North, Side::South, Side::East, Side::West];
+
+    /// The opposite side (used to stitch adjacent tiles together: this
+    /// tile's `East` output drives the neighbour's `West` input).
+    pub fn opposite(self) -> Side {
+        match self {
+            Side::North => Side::South,
+            Side::South => Side::North,
+            Side::East => Side::West,
+            Side::West => Side::East,
+        }
+    }
+
+    /// Grid offset of the neighbouring tile on this side. `North` is
+    /// -y (row 0 is the top row, matching the paper's figures).
+    pub fn offset(self) -> (i32, i32) {
+        match self {
+            Side::North => (0, -1),
+            Side::South => (0, 1),
+            Side::East => (1, 0),
+            Side::West => (-1, 0),
+        }
+    }
+
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn from_index(i: usize) -> Side {
+        Side::ALL[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Side::North => "north",
+            Side::South => "south",
+            Side::East => "east",
+            Side::West => "west",
+        }
+    }
+}
+
+impl fmt::Display for Side {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Direction of a switch-box track endpoint relative to the tile.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub enum SbIo {
+    /// Track entering the tile from a neighbour.
+    In = 0,
+    /// Track leaving the tile toward a neighbour.
+    Out = 1,
+}
+
+impl SbIo {
+    pub fn name(self) -> &'static str {
+        match self {
+            SbIo::In => "in",
+            SbIo::Out => "out",
+        }
+    }
+}
+
+/// What a node *is* — drives hardware lowering (§3.3):
+/// - `SwitchBox` out endpoints with fan-in > 1 lower to SB multiplexers,
+/// - `Port { input: true }` lowers to a connection box (CB) multiplexer,
+/// - `Register` lowers to a pipeline register (or a FIFO entry in the
+///   ready-valid backend),
+/// - `RegMux` lowers to the register-bypass multiplexer that makes
+///   pipeline registers optional per route.
+#[derive(Clone, PartialEq, Eq, Hash, Debug)]
+pub enum NodeKind {
+    /// A track endpoint on one side of a switch box.
+    SwitchBox { side: Side, io: SbIo, track: u16 },
+    /// A core port. `input` ports get a CB; `output` ports feed SBs.
+    Port { name: String, input: bool },
+    /// A pipeline register sitting on a track (before the SB output).
+    Register { side: Side, track: u16 },
+    /// The bypass mux choosing between a register and its input wire.
+    RegMux { side: Side, track: u16 },
+}
+
+impl NodeKind {
+    /// Stable, human-readable node-kind label used in netlists, PnR dumps
+    /// and bitstream metadata.
+    pub fn label(&self) -> String {
+        match self {
+            NodeKind::SwitchBox { side, io, track } => {
+                format!("sb_{}_{}_t{}", side.name(), io.name(), track)
+            }
+            NodeKind::Port { name, input } => {
+                format!("port_{}_{}", if *input { "in" } else { "out" }, name)
+            }
+            NodeKind::Register { side, track } => format!("reg_{}_t{}", side.name(), track),
+            NodeKind::RegMux { side, track } => format!("rmux_{}_t{}", side.name(), track),
+        }
+    }
+
+    pub fn is_port(&self) -> bool {
+        matches!(self, NodeKind::Port { .. })
+    }
+
+    pub fn is_register(&self) -> bool {
+        matches!(self, NodeKind::Register { .. })
+    }
+}
+
+/// Index of a node within one [`super::graph::RoutingGraph`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct NodeId(pub u32);
+
+impl NodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for NodeId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// A node in the routing graph, with the attributes hardware generation and
+/// PnR need (§3.1: "each node also has attributes that provide additional
+/// information for type checking and hardware generation").
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub kind: NodeKind,
+    /// Tile coordinates within the array.
+    pub x: u16,
+    pub y: u16,
+    /// Bit width of the value this node carries (e.g. 16-bit data, 1-bit
+    /// control). All edges between nodes must connect equal widths.
+    pub width: u8,
+    /// Intrinsic delay in picoseconds contributed when a route passes
+    /// through this node (mux delay, register clk-q, ...). Edge weights in
+    /// Fig. 7 of the paper; consumed by the router and by STA.
+    pub delay_ps: u32,
+}
+
+impl Node {
+    pub fn new(kind: NodeKind, x: u16, y: u16, width: u8, delay_ps: u32) -> Self {
+        Node { kind, x, y, width, delay_ps }
+    }
+
+    /// Fully qualified name: unique within an interconnect of one width.
+    pub fn qualified_name(&self) -> String {
+        format!("x{:02}_y{:02}_{}", self.x, self.y, self.kind.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn side_opposites_are_involutive() {
+        for s in Side::ALL {
+            assert_eq!(s.opposite().opposite(), s);
+        }
+    }
+
+    #[test]
+    fn side_offsets_are_antisymmetric() {
+        for s in Side::ALL {
+            let (dx, dy) = s.offset();
+            let (ox, oy) = s.opposite().offset();
+            assert_eq!((dx, dy), (-ox, -oy));
+        }
+    }
+
+    #[test]
+    fn labels_are_distinct_per_kind() {
+        let kinds = [
+            NodeKind::SwitchBox { side: Side::North, io: SbIo::In, track: 0 },
+            NodeKind::SwitchBox { side: Side::North, io: SbIo::Out, track: 0 },
+            NodeKind::SwitchBox { side: Side::South, io: SbIo::In, track: 0 },
+            NodeKind::Port { name: "data0".into(), input: true },
+            NodeKind::Port { name: "data0".into(), input: false },
+            NodeKind::Register { side: Side::East, track: 1 },
+            NodeKind::RegMux { side: Side::East, track: 1 },
+        ];
+        let labels: std::collections::HashSet<_> = kinds.iter().map(|k| k.label()).collect();
+        assert_eq!(labels.len(), kinds.len());
+    }
+
+    #[test]
+    fn qualified_names_embed_position() {
+        let n = Node::new(NodeKind::Register { side: Side::West, track: 3 }, 4, 7, 16, 50);
+        assert_eq!(n.qualified_name(), "x04_y07_reg_west_t3");
+    }
+}

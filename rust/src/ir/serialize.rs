@@ -1,0 +1,183 @@
+//! IR serialization: the PnR-collateral graph format.
+//!
+//! Canal's generator emits place-and-route collateral alongside RTL
+//! (Fig. 2). This module serializes a routing graph to a line-based text
+//! format (one node or edge per line) and parses it back — the analogue
+//! of the `.graph` files the Stanford flow hands to its PnR tools. The
+//! format round-trips exactly, including fan-in order (= mux select
+//! encoding).
+//!
+//! ```text
+//! canal-graph v1 width=16
+//! N 0 x=1 y=2 d=45 sb north out t=3
+//! N 1 x=1 y=2 d=0  port in data_in_0
+//! N 2 x=1 y=2 d=55 reg east t=0
+//! N 3 x=1 y=2 d=25 rmux east t=0
+//! E 0 1 w=90
+//! ```
+
+use crate::ir::{Node, NodeId, NodeKind, RoutingGraph, SbIo, Side};
+
+fn side_of(tok: &str) -> Result<Side, String> {
+    match tok {
+        "north" => Ok(Side::North),
+        "south" => Ok(Side::South),
+        "east" => Ok(Side::East),
+        "west" => Ok(Side::West),
+        other => Err(format!("bad side `{other}`")),
+    }
+}
+
+/// Serialize one routing graph.
+pub fn emit_graph(g: &RoutingGraph) -> String {
+    let mut s = format!("canal-graph v1 width={}\n", g.width);
+    for (id, n) in g.iter() {
+        let kind = match &n.kind {
+            NodeKind::SwitchBox { side, io, track } => {
+                format!("sb {} {} t={}", side.name(), io.name(), track)
+            }
+            NodeKind::Port { name, input } => {
+                format!("port {} {}", if *input { "in" } else { "out" }, name)
+            }
+            NodeKind::Register { side, track } => format!("reg {} t={}", side.name(), track),
+            NodeKind::RegMux { side, track } => format!("rmux {} t={}", side.name(), track),
+        };
+        s.push_str(&format!("N {} x={} y={} d={} {}\n", id.0, n.x, n.y, n.delay_ps, kind));
+    }
+    // Edges in fan-in order per sink so select encodings survive.
+    for (id, _) in g.iter() {
+        for &src in g.fan_in(id) {
+            s.push_str(&format!("E {} {} w={}\n", src.0, id.0, g.wire_delay(src, id)));
+        }
+    }
+    s
+}
+
+fn kv(tok: &str, key: &str) -> Result<u32, String> {
+    tok.strip_prefix(key)
+        .and_then(|v| v.strip_prefix('='))
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| format!("expected `{key}=<int>`, got `{tok}`"))
+}
+
+/// Parse a serialized routing graph.
+pub fn parse_graph(text: &str) -> Result<RoutingGraph, String> {
+    let mut lines = text.lines().enumerate();
+    let (_, header) = lines.next().ok_or("empty graph file")?;
+    let width: u8 = header
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("width="))
+        .and_then(|v| v.parse().ok())
+        .ok_or("missing width in header")?;
+    if !header.starts_with("canal-graph v1") {
+        return Err("unsupported graph format".into());
+    }
+
+    let mut g = RoutingGraph::new(width);
+    let mut pending_edges: Vec<(NodeId, NodeId, u32)> = Vec::new();
+    let mut max_seen_id: i64 = -1;
+
+    for (lineno, line) in lines {
+        let err = |m: String| format!("line {}: {m}", lineno + 1);
+        let toks: Vec<&str> = line.split_whitespace().collect();
+        match toks.first() {
+            Some(&"N") => {
+                let id: u32 = toks[1].parse().map_err(|_| err("bad node id".into()))?;
+                if id as i64 != max_seen_id + 1 {
+                    return Err(err(format!("non-sequential node id {id}")));
+                }
+                max_seen_id = id as i64;
+                let x = kv(toks[2], "x")? as u16;
+                let y = kv(toks[3], "y")? as u16;
+                let d = kv(toks[4], "d")?;
+                let kind = match toks[5] {
+                    "sb" => NodeKind::SwitchBox {
+                        side: side_of(toks[6])?,
+                        io: match toks[7] {
+                            "in" => SbIo::In,
+                            "out" => SbIo::Out,
+                            o => return Err(err(format!("bad io `{o}`"))),
+                        },
+                        track: kv(toks[8], "t")? as u16,
+                    },
+                    "port" => NodeKind::Port {
+                        input: toks[6] == "in",
+                        name: toks[7].to_string(),
+                    },
+                    "reg" => NodeKind::Register {
+                        side: side_of(toks[6])?,
+                        track: kv(toks[7], "t")? as u16,
+                    },
+                    "rmux" => NodeKind::RegMux {
+                        side: side_of(toks[6])?,
+                        track: kv(toks[7], "t")? as u16,
+                    },
+                    o => return Err(err(format!("bad node kind `{o}`"))),
+                };
+                g.add_node(Node::new(kind, x, y, width, d));
+            }
+            Some(&"E") => {
+                let a: u32 = toks[1].parse().map_err(|_| err("bad edge src".into()))?;
+                let b: u32 = toks[2].parse().map_err(|_| err("bad edge dst".into()))?;
+                let w = kv(toks[3], "w")?;
+                pending_edges.push((NodeId(a), NodeId(b), w));
+            }
+            Some(_) | None => continue,
+        }
+    }
+    for (a, b, w) in pending_edges {
+        g.connect_with_delay(a, b, w);
+    }
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    fn graph() -> RoutingGraph {
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 3,
+            height: 3,
+            num_tracks: 2,
+            reg_density: 1,
+            mem_column_period: 2,
+            ..Default::default()
+        });
+        ic.graphs[&16].clone()
+    }
+
+    #[test]
+    fn roundtrip_preserves_everything() {
+        let g = graph();
+        let text = emit_graph(&g);
+        let g2 = parse_graph(&text).unwrap();
+        assert_eq!(g.len(), g2.len());
+        assert_eq!(g.edge_count(), g2.edge_count());
+        for (id, n) in g.iter() {
+            let n2 = g2.node(id);
+            assert_eq!(n.kind, n2.kind);
+            assert_eq!((n.x, n.y, n.delay_ps), (n2.x, n2.y, n2.delay_ps));
+            // Fan-in order (select encoding) must survive exactly.
+            assert_eq!(g.fan_in(id), g2.fan_in(id), "{}", n.qualified_name());
+            for &src in g.fan_in(id) {
+                assert_eq!(g.wire_delay(src, id), g2.wire_delay(src, id));
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(parse_graph("").is_err());
+        assert!(parse_graph("not-a-graph v9\n").is_err());
+        assert!(parse_graph("canal-graph v1 width=16\nN 5 x=0 y=0 d=0 sb north in t=0\n").is_err());
+        assert!(parse_graph("canal-graph v1 width=16\nN 0 x=0 y=0 d=0 frob\n").is_err());
+    }
+
+    #[test]
+    fn emitted_text_is_stable() {
+        let g = graph();
+        assert_eq!(emit_graph(&g), emit_graph(&g));
+    }
+}

@@ -1,0 +1,229 @@
+//! Structural validation of the interconnect IR.
+//!
+//! Canal performs type checking on node attributes (§3.1) and verifies the
+//! structural correctness of generated hardware against the IR (§3.3).
+//! This module is the first half of that story: invariants the IR itself
+//! must satisfy before any lowering happens. The second half (RTL vs IR)
+//! lives in `hw::verify`.
+
+use super::interconnect::Interconnect;
+use super::node::{NodeKind, SbIo};
+
+/// A violated invariant, with enough context to locate it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+impl std::fmt::Display for Violation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "[{}] {}", self.rule, self.detail)
+    }
+}
+
+/// Validate every graph of an interconnect. Returns all violations found
+/// (empty ⇒ valid).
+pub fn validate(ic: &Interconnect) -> Vec<Violation> {
+    let mut out = Vec::new();
+    for (&bw, g) in &ic.graphs {
+        let ctx = |detail: String| format!("width-{bw} graph: {detail}");
+
+        for (id, node) in g.iter() {
+            // Coordinates must be inside the array.
+            if node.x >= ic.width || node.y >= ic.height {
+                out.push(Violation {
+                    rule: "node-in-bounds",
+                    detail: ctx(format!("{} outside {}x{} array", node.qualified_name(), ic.width, ic.height)),
+                });
+            }
+
+            let fan_in = g.fan_in(id).len();
+            let fan_out = g.fan_out(id).len();
+
+            match &node.kind {
+                // SB input endpoints are driven by at most one neighbour
+                // tile output (plus nothing else): they are wires, not
+                // muxes. Fan-in 0 is legal on array margins.
+                NodeKind::SwitchBox { io: SbIo::In, .. } => {
+                    if fan_in > 1 {
+                        out.push(Violation {
+                            rule: "sb-in-single-driver",
+                            detail: ctx(format!("{} has fan-in {fan_in}", node.qualified_name())),
+                        });
+                    }
+                }
+                // SB outputs must drive exactly one neighbour SB input
+                // (or nothing on the margin) and must have at least one
+                // driver, otherwise the mux has no inputs. Intra-tile
+                // sinks (pipeline register + bypass mux) are exempt from
+                // the single-sink rule.
+                NodeKind::SwitchBox { io: SbIo::Out, .. } => {
+                    if fan_in == 0 {
+                        out.push(Violation {
+                            rule: "sb-out-has-drivers",
+                            detail: ctx(format!("{} has no drivers", node.qualified_name())),
+                        });
+                    }
+                    let sb_sinks = g
+                        .fan_out(id)
+                        .iter()
+                        .filter(|&&s| matches!(g.node(s).kind, NodeKind::SwitchBox { .. }))
+                        .count();
+                    if sb_sinks > 1 {
+                        out.push(Violation {
+                            rule: "sb-out-single-sink",
+                            detail: ctx(format!(
+                                "{} drives {sb_sinks} switch-box nodes",
+                                node.qualified_name()
+                            )),
+                        });
+                    }
+                    let _ = fan_out;
+                }
+                // A register has exactly one driver (the SB mux feeding
+                // it) and drives exactly one node (its bypass mux).
+                NodeKind::Register { .. } => {
+                    if fan_in != 1 || fan_out != 1 {
+                        out.push(Violation {
+                            rule: "register-1-in-1-out",
+                            detail: ctx(format!(
+                                "{} fan-in {fan_in} fan-out {fan_out}",
+                                node.qualified_name()
+                            )),
+                        });
+                    }
+                }
+                // A register-bypass mux has exactly two drivers: the
+                // register and the register's own driver.
+                NodeKind::RegMux { .. } => {
+                    if fan_in != 2 {
+                        out.push(Violation {
+                            rule: "regmux-2-drivers",
+                            detail: ctx(format!("{} fan-in {fan_in}", node.qualified_name())),
+                        });
+                    }
+                }
+                // Output ports are sources; input ports are sinks of the
+                // routing fabric.
+                NodeKind::Port { input, .. } => {
+                    if *input && fan_out != 0 {
+                        out.push(Violation {
+                            rule: "in-port-is-sink",
+                            detail: ctx(format!("{} drives fabric nodes", node.qualified_name())),
+                        });
+                    }
+                    if !*input && fan_in != 0 {
+                        out.push(Violation {
+                            rule: "out-port-is-source",
+                            detail: ctx(format!("{} driven by fabric", node.qualified_name())),
+                        });
+                    }
+                }
+            }
+
+            // Inter-tile edges must connect geometric neighbours.
+            for &succ in g.fan_out(id) {
+                let s = g.node(succ);
+                let dx = (s.x as i32 - node.x as i32).abs();
+                let dy = (s.y as i32 - node.y as i32).abs();
+                if dx + dy > 1 {
+                    out.push(Violation {
+                        rule: "edges-are-local",
+                        detail: ctx(format!(
+                            "{} -> {} spans non-adjacent tiles",
+                            node.qualified_name(),
+                            s.qualified_name()
+                        )),
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Panic with a readable report if the interconnect is invalid. Builders
+/// call this after construction.
+pub fn assert_valid(ic: &Interconnect) {
+    let violations = validate(ic);
+    if !violations.is_empty() {
+        let mut msg = format!("interconnect IR invalid ({} violations):\n", violations.len());
+        for v in violations.iter().take(20) {
+            msg.push_str(&format!("  {v}\n"));
+        }
+        panic!("{msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::graph::RoutingGraph;
+    use crate::ir::interconnect::{CoreSpec, Interconnect, Tile};
+    use crate::ir::node::{Node, NodeKind, SbIo, Side};
+
+    fn ic_1x1() -> Interconnect {
+        let tiles = vec![Tile { x: 0, y: 0, core: CoreSpec::pe(16) }];
+        let mut ic = Interconnect::new(1, 1, tiles, "test".into());
+        ic.graphs.insert(16, RoutingGraph::new(16));
+        ic
+    }
+
+    #[test]
+    fn empty_graph_is_valid() {
+        assert!(validate(&ic_1x1()).is_empty());
+    }
+
+    #[test]
+    fn detects_out_of_bounds_node() {
+        let mut ic = ic_1x1();
+        ic.graph_mut(16).add_node(Node::new(
+            NodeKind::SwitchBox { side: Side::North, io: SbIo::In, track: 0 },
+            5,
+            5,
+            16,
+            0,
+        ));
+        let v = validate(&ic);
+        assert!(v.iter().any(|v| v.rule == "node-in-bounds"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_multi_driven_sb_input() {
+        let mut ic = ic_1x1();
+        let g = ic.graph_mut(16);
+        let i = g.add_node(Node::new(
+            NodeKind::SwitchBox { side: Side::North, io: SbIo::In, track: 0 },
+            0, 0, 16, 0,
+        ));
+        let a = g.add_node(Node::new(NodeKind::Port { name: "data_out_0".into(), input: false }, 0, 0, 16, 0));
+        let b = g.add_node(Node::new(NodeKind::Port { name: "data_out_1".into(), input: false }, 0, 0, 16, 0));
+        g.connect(a, i);
+        g.connect(b, i);
+        let v = validate(&ic);
+        assert!(v.iter().any(|v| v.rule == "sb-in-single-driver"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_driverless_sb_output() {
+        let mut ic = ic_1x1();
+        ic.graph_mut(16).add_node(Node::new(
+            NodeKind::SwitchBox { side: Side::North, io: SbIo::Out, track: 0 },
+            0, 0, 16, 0,
+        ));
+        let v = validate(&ic);
+        assert!(v.iter().any(|v| v.rule == "sb-out-has-drivers"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_fabric_driving_output_port() {
+        let mut ic = ic_1x1();
+        let g = ic.graph_mut(16);
+        let p = g.add_node(Node::new(NodeKind::Port { name: "data_out_0".into(), input: false }, 0, 0, 16, 0));
+        let q = g.add_node(Node::new(NodeKind::Port { name: "data_out_1".into(), input: false }, 0, 0, 16, 0));
+        g.connect(q, p);
+        let v = validate(&ic);
+        assert!(v.iter().any(|v| v.rule == "out-port-is-source"), "{v:?}");
+    }
+}

@@ -1,0 +1,38 @@
+//! # Canal — a flexible interconnect generator for CGRAs
+//!
+//! Rust + JAX + Pallas reproduction of *"Canal: A Flexible Interconnect
+//! Generator for Coarse-Grained Reconfigurable Arrays"* (Melchert, Zhang,
+//! et al., 2022).
+//!
+//! The crate is organized around the paper's system diagram (Fig. 2):
+//!
+//! - [`ir`] — the graph-based intermediate representation (§3.1);
+//! - [`dsl`] — the Canal eDSL that constructs the IR (§3.2);
+//! - [`hw`] — hardware generation: static mesh and statically-configured
+//!   ready-valid NoC backends, Verilog emission, structural verification,
+//!   configuration-space allocation (§3.3);
+//! - [`bitstream`] — bitstream generation from PnR results;
+//! - [`pnr`] — packing, placement (analytic global + simulated-annealing
+//!   detailed) and iterative A* routing over the IR graph (§3.4);
+//! - [`sim`] — functional simulation of configured fabrics, including a
+//!   cycle-accurate ready-valid mode with FIFO backpressure;
+//! - [`apps`] — the application benchmark suite (dataflow graphs);
+//! - [`area`] — the GF12-calibrated area model (evaluation substrate);
+//! - [`runtime`] — PJRT loader executing the AOT-compiled JAX/Pallas
+//!   global-placement artifacts from the Rust hot path;
+//! - [`coordinator`] — design-space-exploration driver reproducing every
+//!   figure in the paper's evaluation;
+//! - [`util`] — self-contained support code (deterministic RNG, JSON,
+//!   benchmarking, property-test harness).
+
+pub mod apps;
+pub mod area;
+pub mod bitstream;
+pub mod coordinator;
+pub mod dsl;
+pub mod hw;
+pub mod ir;
+pub mod pnr;
+pub mod runtime;
+pub mod sim;
+pub mod util;

@@ -1,0 +1,333 @@
+//! `canal` — CLI for the Canal interconnect generator.
+//!
+//! Subcommands mirror the paper's Fig. 2 system diagram:
+//!
+//! ```text
+//! canal generate   --spec FILE [--backend static|rv] [--verilog OUT] [--verify]
+//! canal pnr        --spec FILE --app NAME [--alpha-sweep] [--placer native|pjrt]
+//! canal bitstream  --spec FILE --app NAME [--out FILE]
+//! canal simulate   --app NAME [--fabric static|rv-full|rv-split] [--tokens N]
+//! canal sweep      --spec FILE           # exhaustive connection sweep
+//! canal experiment fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|all
+//! canal info
+//! ```
+//!
+//! Argument parsing is hand-rolled (clap is unavailable in the offline
+//! vendor set); flags are positional-order-independent `--key value`.
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use canal::apps;
+use canal::bitstream::{encode, Configuration};
+use canal::coordinator::{self, ExpOptions};
+use canal::dsl::spec::{emit_spec, parse_spec};
+use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
+use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
+use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams};
+use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
+
+struct Args {
+    flags: HashMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut flags = HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { flags, positional }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn load_config(args: &Args) -> Result<InterconnectConfig, String> {
+    match args.get("spec") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+            parse_spec(&text)
+        }
+        None => Ok(InterconnectConfig::paper_baseline(8, 8)),
+    }
+}
+
+fn find_app(name: &str) -> Result<canal::pnr::AppGraph, String> {
+    let mut all = apps::suite();
+    all.push(apps::matmul(3));
+    all.into_iter().find(|a| a.name == name).ok_or_else(|| {
+        format!("unknown app `{name}` (try: pointwise gaussian harris camera resnet matmul)")
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let ic = create_uniform_interconnect(&cfg);
+    println!("interconnect: {}", ic.descriptor);
+    println!("  nodes: {}  edges: {}", ic.node_count(), ic.edge_count());
+
+    let backend = args.get("backend").unwrap_or("static");
+    let lowered = match backend {
+        "static" => lower_static(&ic),
+        "rv" => lower_ready_valid(&ic, &RvOptions::default()),
+        other => return Err(format!("unknown backend `{other}`")),
+    };
+    let hist = lowered.netlist.histogram();
+    let mut kinds: Vec<_> = hist.iter().collect();
+    kinds.sort();
+    for (k, v) in kinds {
+        println!("  {k}: {v}");
+    }
+    let cs = allocate(&ic);
+    let total_bits: u32 = cs.bits_per_tile().values().sum();
+    println!("  config bits: {total_bits}");
+
+    let rtl = emit(&lowered.netlist);
+    if args.has("verify") {
+        let mismatches = verify_rtl(&ic, &rtl);
+        if mismatches.is_empty() {
+            println!("  structural verification: PASS");
+        } else {
+            for m in mismatches.iter().take(10) {
+                eprintln!("  MISMATCH {}: {}", m.wire, m.reason);
+            }
+            return Err(format!("structural verification failed ({})", mismatches.len()));
+        }
+    }
+    if let Some(path) = args.get("verilog") {
+        std::fs::write(path, &rtl).map_err(|e| e.to_string())?;
+        println!("  wrote {} ({} bytes)", path, rtl.len());
+    }
+    if let Some(path) = args.get("emit-spec") {
+        std::fs::write(path, emit_spec(&cfg)).map_err(|e| e.to_string())?;
+        println!("  wrote {path}");
+    }
+    Ok(())
+}
+
+fn flow_params(args: &Args) -> FlowParams {
+    let mut p = FlowParams {
+        sa: SaParams {
+            moves_per_node: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
+            ..Default::default()
+        },
+        seed: args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1),
+        ..Default::default()
+    };
+    if args.has("alpha-sweep") {
+        p.alpha_sweep = vec![1.0, 2.0, 4.0, 8.0, 16.0, 20.0];
+    }
+    p
+}
+
+fn cmd_pnr(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let ic = create_uniform_interconnect(&cfg);
+    let app = find_app(args.get("app").ok_or("--app required")?)?;
+    let params = flow_params(args);
+    let placer: Box<dyn canal::pnr::GlobalPlacer + Sync + Send> =
+        match args.get("placer").unwrap_or("auto") {
+            "native" => Box::new(NativePlacer::default()),
+            "pjrt" | "auto" => coordinator::default_placer(),
+            other => return Err(format!("unknown placer `{other}`")),
+        };
+    let r = run_flow_with(&ic, &app, &params, placer.as_ref()).map_err(|e| e.to_string())?;
+    println!("app: {} on {}", app.name, ic.descriptor);
+    println!("  placer backend : {}", placer.name());
+    println!("  packed vertices: {}", r.packed.app.len());
+    println!("  nets routed    : {} ({} iterations)", r.routing.trees.len(), r.routing.iterations);
+    println!("  wire nodes used: {}", r.routing.nodes_used);
+    println!("  alpha          : {}", r.alpha);
+    println!("  critical path  : {:.0} ps", r.timing.critical_path_ps);
+    println!("  clock period   : {:.0} ps", r.timing.period_ps);
+    println!("  latency        : {} cycles", r.timing.latency_cycles);
+    println!(
+        "  run time       : {:.1} us ({} items)",
+        r.timing.runtime_ns / 1000.0,
+        r.timing.workload_items
+    );
+    Ok(())
+}
+
+fn cmd_bitstream(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let ic = create_uniform_interconnect(&cfg);
+    let app = find_app(args.get("app").ok_or("--app required")?)?;
+    let params = flow_params(args);
+    let r =
+        run_flow_with(&ic, &app, &params, &NativePlacer::default()).map_err(|e| e.to_string())?;
+    let config = Configuration::from_routing(&ic, 16, &r.routing)?;
+    let cs = allocate(&ic);
+    let bits = encode(&config, &cs);
+    canal::sim::check_routing(&ic, 16, &config, &r.routing)?;
+    println!("bitstream: {} words, functional check PASS", bits.len());
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, bits.to_text()).map_err(|e| e.to_string())?;
+        println!("wrote {path}");
+    } else {
+        print!("{}", bits.to_text());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<(), String> {
+    let app = find_app(args.get("app").ok_or("--app required")?)?;
+    let fabric = match args.get("fabric").unwrap_or("rv-split") {
+        "static" => FabricKind::Static,
+        "rv-full" => FabricKind::RvFullFifo { depth: 2 },
+        "rv-split" => FabricKind::RvSplitFifo,
+        other => return Err(format!("unknown fabric `{other}`")),
+    };
+    let tokens: usize = args.get("tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
+    let caps: HashMap<_, _> = app
+        .edges()
+        .iter()
+        .map(|e| ((e.src, e.src_port, e.dst, e.dst_port), fabric.capacity(1)))
+        .collect();
+    let input: Vec<i64> = (0..(tokens as i64 * 4)).map(|i| (i * 13 + 5) % 199).collect();
+    let stall = StallPattern::Bursty { accept: 3, stall: 2 };
+    let mut sim = RvSim::new(&app, &caps, input);
+    let run = sim.run(tokens, 10_000_000, stall);
+    println!("app {} on {:?}: {} tokens in {} cycles", app.name, fabric, run.tokens, run.cycles);
+    let mut names: Vec<_> = run.outputs.keys().collect();
+    names.sort();
+    for name in names {
+        let seq = &run.outputs[name];
+        let head: Vec<String> = seq.iter().take(8).map(|v| v.to_string()).collect();
+        println!("  {name}: [{} ...] ({} tokens)", head.join(", "), seq.len());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<(), String> {
+    let cfg = load_config(args)?;
+    let ic = create_uniform_interconnect(&cfg);
+    let cs = allocate(&ic);
+    let r = sweep_connections(&ic, Some(&cs));
+    println!(
+        "configuration sweep: {} connections tested, {} failures",
+        r.connections_tested,
+        r.failures.len()
+    );
+    for f in r.failures.iter().take(10) {
+        eprintln!("  FAIL {f}");
+    }
+    if r.ok() {
+        Ok(())
+    } else {
+        Err("sweep failed".into())
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<(), String> {
+    let which = args.positional.get(1).map(String::as_str).unwrap_or("all");
+    let o = ExpOptions {
+        sa_moves: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
+        ..Default::default()
+    };
+    let placer = coordinator::default_placer();
+    let tables = match which {
+        "fig8" => vec![coordinator::fig08_fifo_area()],
+        "fig9" => vec![coordinator::fig09_topology(&o)],
+        "fig10" => vec![coordinator::fig10_area_tracks()],
+        "fig11" => vec![coordinator::fig11_runtime_tracks(&o, placer.as_ref())],
+        "fig13" => vec![coordinator::fig13_port_area()],
+        "fig14" => vec![coordinator::fig14_sb_ports_runtime(&o, placer.as_ref())],
+        "fig15" => vec![coordinator::fig15_cb_ports_runtime(&o, placer.as_ref())],
+        "alpha" => vec![coordinator::alpha_sweep(&o)],
+        "rv" => vec![coordinator::rv_throughput()],
+        "chain" => vec![coordinator::fifo_chain_depth()],
+        "density" => vec![coordinator::reg_density_sweep(&o)],
+        "noc" => vec![coordinator::dynamic_noc_comparison(&o)],
+        "motivation" => vec![coordinator::motivation_shares(&o)],
+        "all" => coordinator::all_experiments(&o, placer.as_ref()),
+        other => return Err(format!("unknown experiment `{other}`")),
+    };
+    for t in tables {
+        println!("{}", t.render());
+        if let Some(dir) = args.get("csv-dir") {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+            let slug: String = t
+                .title
+                .chars()
+                .take_while(|&c| c != '—')
+                .filter(|c| c.is_alphanumeric())
+                .collect::<String>()
+                .to_lowercase();
+            std::fs::write(format!("{dir}/{slug}.csv"), t.to_csv()).map_err(|e| e.to_string())?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<(), String> {
+    println!("canal {} — CGRA interconnect generator", env!("CARGO_PKG_VERSION"));
+    match canal::runtime::PjrtPlacer::load_default() {
+        Ok(p) => {
+            let m = p.meta();
+            println!(
+                "  pjrt: {} (pad_n={} pad_m={} pad_k={} inner_steps={})",
+                p.platform(),
+                m.pad_n,
+                m.pad_m,
+                m.pad_k,
+                m.inner_steps
+            );
+        }
+        Err(e) => println!("  pjrt: unavailable ({e})"),
+    }
+    println!("  apps: pointwise gaussian harris camera resnet matmul");
+    Ok(())
+}
+
+const USAGE: &str =
+    "usage: canal <generate|pnr|bitstream|simulate|sweep|experiment|info> [--flags]
+see README.md for the full flag reference";
+
+fn main() -> ExitCode {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    let result = match cmd {
+        "generate" => cmd_generate(&args),
+        "pnr" => cmd_pnr(&args),
+        "bitstream" => cmd_bitstream(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "experiment" => cmd_experiment(&args),
+        "info" => cmd_info(),
+        _ => {
+            eprintln!("{USAGE}");
+            return ExitCode::from(2);
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Application dataflow graphs (§3.4).
+//!
+//! Applications are "represented as a dataflow graph" whose vertices are
+//! PE operations, memory accesses, constants and pipeline registers, and
+//! whose edges are data dependencies. PnR maps vertices onto tiles and
+//! edges onto routed nets.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ir::CoreKind;
+
+/// Index of a vertex in an [`AppGraph`].
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct AppNodeId(pub u32);
+
+impl AppNodeId {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// What an application vertex computes.
+#[derive(Clone, PartialEq, Debug)]
+pub enum AppOp {
+    /// A PE ALU operation (`add`, `mul`, `sub`, `shift`, `gte`, ...).
+    Alu(String),
+    /// A memory operation: line buffer, ROM, stream in/out buffer.
+    Mem(String),
+    /// A compile-time constant (packable into the consuming PE).
+    Const(i64),
+    /// An explicit pipeline register (packable into a consuming PE's
+    /// input register — the paper's packing example).
+    Reg,
+}
+
+impl AppOp {
+    /// Which core kind this op needs once placed (packed Const/Reg need
+    /// none — they disappear into their host PE).
+    pub fn core_kind(&self) -> CoreKind {
+        match self {
+            AppOp::Alu(_) => CoreKind::Pe,
+            AppOp::Mem(_) => CoreKind::Mem,
+            AppOp::Const(_) | AppOp::Reg => CoreKind::Pe,
+        }
+    }
+}
+
+/// An application vertex.
+#[derive(Clone, Debug)]
+pub struct AppNode {
+    pub name: String,
+    pub op: AppOp,
+}
+
+/// A directed dependency: output port `src_port` of `src` feeds input
+/// port `dst_port` of `dst`. Port indices select among a core's data
+/// ports at routing time.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AppEdge {
+    pub src: AppNodeId,
+    pub src_port: u8,
+    pub dst: AppNodeId,
+    pub dst_port: u8,
+}
+
+/// A multi-terminal net: one driver, many sinks (the fan-out case §3.3
+/// calls out for ready-valid generation).
+#[derive(Clone, Debug)]
+pub struct Net {
+    pub src: AppNodeId,
+    pub src_port: u8,
+    pub sinks: Vec<(AppNodeId, u8)>,
+}
+
+/// Application dataflow graph.
+#[derive(Clone, Debug, Default)]
+pub struct AppGraph {
+    pub name: String,
+    nodes: Vec<AppNode>,
+    edges: Vec<AppEdge>,
+}
+
+impl AppGraph {
+    pub fn new(name: &str) -> Self {
+        AppGraph { name: name.to_string(), ..Default::default() }
+    }
+
+    pub fn add(&mut self, name: &str, op: AppOp) -> AppNodeId {
+        let id = AppNodeId(self.nodes.len() as u32);
+        self.nodes.push(AppNode { name: name.to_string(), op });
+        id
+    }
+
+    /// Shorthand for an ALU vertex.
+    pub fn alu(&mut self, name: &str, op: &str) -> AppNodeId {
+        self.add(name, AppOp::Alu(op.to_string()))
+    }
+
+    /// Shorthand for a memory vertex.
+    pub fn mem(&mut self, name: &str, role: &str) -> AppNodeId {
+        self.add(name, AppOp::Mem(role.to_string()))
+    }
+
+    pub fn connect(&mut self, src: AppNodeId, src_port: u8, dst: AppNodeId, dst_port: u8) {
+        assert!(src.index() < self.nodes.len() && dst.index() < self.nodes.len());
+        assert!(
+            !self.edges.iter().any(|e| e.dst == dst && e.dst_port == dst_port),
+            "input port {}#{} already driven",
+            self.nodes[dst.index()].name,
+            dst_port
+        );
+        self.edges.push(AppEdge { src, src_port, dst, dst_port });
+    }
+
+    /// Simple 0->0 connection.
+    pub fn wire(&mut self, src: AppNodeId, dst: AppNodeId, dst_port: u8) {
+        self.connect(src, 0, dst, dst_port);
+    }
+
+    pub fn node(&self, id: AppNodeId) -> &AppNode {
+        &self.nodes[id.index()]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn ids(&self) -> impl Iterator<Item = AppNodeId> {
+        (0..self.nodes.len() as u32).map(AppNodeId)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (AppNodeId, &AppNode)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (AppNodeId(i as u32), n))
+    }
+
+    pub fn edges(&self) -> &[AppEdge] {
+        &self.edges
+    }
+
+    /// Incoming edges of a vertex, sorted by destination port.
+    pub fn inputs_of(&self, id: AppNodeId) -> Vec<AppEdge> {
+        let mut v: Vec<AppEdge> = self.edges.iter().filter(|e| e.dst == id).copied().collect();
+        v.sort_by_key(|e| e.dst_port);
+        v
+    }
+
+    /// Outgoing edges of a vertex.
+    pub fn outputs_of(&self, id: AppNodeId) -> Vec<AppEdge> {
+        self.edges.iter().filter(|e| e.src == id).copied().collect()
+    }
+
+    /// Group edges into multi-terminal nets by (src, src_port).
+    pub fn nets(&self) -> Vec<Net> {
+        let mut by_src: BTreeMap<(AppNodeId, u8), Vec<(AppNodeId, u8)>> = BTreeMap::new();
+        for e in &self.edges {
+            by_src.entry((e.src, e.src_port)).or_default().push((e.dst, e.dst_port));
+        }
+        by_src
+            .into_iter()
+            .map(|((src, src_port), sinks)| Net { src, src_port, sinks })
+            .collect()
+    }
+
+    /// Count of vertices per op family (used in reports).
+    pub fn histogram(&self) -> HashMap<&'static str, usize> {
+        let mut h = HashMap::new();
+        for n in &self.nodes {
+            let k = match n.op {
+                AppOp::Alu(_) => "alu",
+                AppOp::Mem(_) => "mem",
+                AppOp::Const(_) => "const",
+                AppOp::Reg => "reg",
+            };
+            *h.entry(k).or_insert(0) += 1;
+        }
+        h
+    }
+
+    /// Validate basic well-formedness: every non-source vertex has at
+    /// least one input, names are unique, no duplicate edges.
+    pub fn check(&self) -> Result<(), String> {
+        let mut names = std::collections::HashSet::new();
+        for n in &self.nodes {
+            if !names.insert(&n.name) {
+                return Err(format!("duplicate vertex name `{}`", n.name));
+            }
+        }
+        for (id, n) in self.iter() {
+            let has_in = self.edges.iter().any(|e| e.dst == id);
+            let has_out = self.edges.iter().any(|e| e.src == id);
+            match n.op {
+                AppOp::Const(_) => {
+                    if has_in {
+                        return Err(format!("constant `{}` has inputs", n.name));
+                    }
+                }
+                AppOp::Alu(_) | AppOp::Reg => {
+                    if !has_in {
+                        return Err(format!("compute vertex `{}` has no inputs", n.name));
+                    }
+                }
+                AppOp::Mem(_) => {}
+            }
+            if !has_in && !has_out {
+                return Err(format!("vertex `{}` is disconnected", n.name));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AppGraph {
+        let mut g = AppGraph::new("tiny");
+        let src = g.mem("in", "stream_in");
+        let a = g.alu("a", "mul");
+        let b = g.alu("b", "add");
+        let dst = g.mem("out", "stream_out");
+        g.wire(src, a, 0);
+        let c = g.add("c2", AppOp::Const(2));
+        g.wire(c, a, 1);
+        g.wire(a, b, 0);
+        g.wire(a, b, 1); // fan-out of `a`
+        g.wire(b, dst, 0);
+        g
+    }
+
+    #[test]
+    fn nets_group_fanout() {
+        let g = tiny();
+        g.check().unwrap();
+        let nets = g.nets();
+        // in->a, c2->a, a->{b0,b1}, b->out
+        assert_eq!(nets.len(), 4);
+        let fan = nets.iter().find(|n| n.sinks.len() == 2).expect("fanout net");
+        assert_eq!(g.node(fan.src).name, "a");
+    }
+
+    #[test]
+    fn double_driven_port_rejected() {
+        let mut g = AppGraph::new("bad");
+        let a = g.mem("i", "stream_in");
+        let b = g.mem("j", "stream_in");
+        let c = g.alu("c", "add");
+        g.wire(a, c, 0);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| g.wire(b, c, 0)));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn check_rejects_malformed() {
+        let mut g = AppGraph::new("g");
+        let a = g.alu("a", "add");
+        assert!(g.check().is_err()); // no inputs
+        let i = g.mem("in", "stream_in");
+        g.wire(i, a, 0);
+        g.check().unwrap();
+
+        let mut g2 = AppGraph::new("g2");
+        g2.add("k", AppOp::Const(1));
+        assert!(g2.check().is_err()); // disconnected const
+    }
+
+    #[test]
+    fn inputs_sorted_by_port() {
+        let g = tiny();
+        let b = g.ids().find(|&i| g.node(i).name == "b").unwrap();
+        let ins = g.inputs_of(b);
+        assert_eq!(ins.len(), 2);
+        assert!(ins[0].dst_port < ins[1].dst_port);
+    }
+
+    #[test]
+    fn histogram_counts_families() {
+        let h = tiny().histogram();
+        assert_eq!(h["alu"], 2);
+        assert_eq!(h["mem"], 2);
+        assert_eq!(h["const"], 1);
+    }
+}

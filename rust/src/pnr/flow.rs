@@ -1,0 +1,190 @@
+//! The end-to-end PnR flow (Fig. 2 right-hand path): pack → global place
+//! → detailed place → route → STA, with the α-sweep the paper describes
+//! ("sweeping α from 1 to 20 and choosing the best result post-routing").
+
+use crate::ir::Interconnect;
+
+use super::app::AppGraph;
+use super::pack::{pack, PackedApp};
+use super::place::{
+    build_global_problem, detailed_place, initial_positions, legalize, GlobalPlacer,
+    NativePlacer, Placement, SaParams,
+};
+use super::route::{route, RouterParams, RoutingFailed, RoutingResult};
+use super::timing::{analyze, TimingReport};
+
+/// Flow-level options.
+#[derive(Clone, Debug)]
+pub struct FlowParams {
+    pub seed: u64,
+    pub sa: SaParams,
+    pub router: RouterParams,
+    /// α values to sweep (best post-route critical path wins). Empty ⇒
+    /// single run with `sa.alpha`.
+    pub alpha_sweep: Vec<f64>,
+    /// Streamed elements for the run-time model (64x64 image default).
+    pub workload_items: usize,
+    /// Routing layer.
+    pub bit_width: u8,
+}
+
+impl Default for FlowParams {
+    fn default() -> Self {
+        FlowParams {
+            seed: 1,
+            sa: SaParams::default(),
+            router: RouterParams::default(),
+            alpha_sweep: vec![],
+            workload_items: 4096,
+            bit_width: 16,
+        }
+    }
+}
+
+/// Everything the flow produces for one application.
+#[derive(Clone, Debug)]
+pub struct FlowResult {
+    pub packed: PackedApp,
+    pub placement: Placement,
+    pub routing: RoutingResult,
+    pub timing: TimingReport,
+    /// α that won the sweep (or the single configured α).
+    pub alpha: f64,
+    pub placement_cost: f64,
+}
+
+/// Run the full flow with the native global placer.
+pub fn run_flow(
+    ic: &Interconnect,
+    app: &AppGraph,
+    params: &FlowParams,
+) -> Result<FlowResult, RoutingFailed> {
+    run_flow_with(ic, app, params, &NativePlacer::default())
+}
+
+/// Run the full flow with an explicit global-placement backend (native or
+/// the PJRT artifact executor).
+pub fn run_flow_with(
+    ic: &Interconnect,
+    app: &AppGraph,
+    params: &FlowParams,
+    placer: &dyn GlobalPlacer,
+) -> Result<FlowResult, RoutingFailed> {
+    // 1. Packing.
+    let packed = pack(app);
+
+    // 2. Global placement (analytic; Eq. 1).
+    let (xs0, ys0) = initial_positions(&packed.app, ic, params.seed);
+    let problem = build_global_problem(&packed.app, ic);
+    let (xs, ys) = placer.optimize(&problem, &xs0, &ys0);
+    let seed_placement = legalize(&packed.app, ic, &xs, &ys).map_err(|e| RoutingFailed {
+        iterations: 0,
+        overused_nodes: 0,
+        detail: format!("legalization failed: {e}"),
+    })?;
+
+    // 3+4. Detailed placement (Eq. 2) + routing, over the α sweep.
+    let alphas: Vec<f64> =
+        if params.alpha_sweep.is_empty() { vec![params.sa.alpha] } else { params.alpha_sweep.clone() };
+    let nets = packed.app.nets();
+
+    let mut best: Option<FlowResult> = None;
+    let mut last_err: Option<RoutingFailed> = None;
+    for &alpha in &alphas {
+        let sa = SaParams { alpha, seed: params.seed ^ alpha.to_bits(), ..params.sa };
+        let (placement, placement_cost) =
+            detailed_place(&packed.app, ic, &nets, seed_placement.clone(), &sa);
+        match route(ic, &packed.app, &placement, params.bit_width, &params.router) {
+            Ok(routing) => {
+                let timing =
+                    analyze(ic, &packed, &routing, params.bit_width, params.workload_items);
+                let better = best
+                    .as_ref()
+                    .map_or(true, |b| timing.critical_path_ps < b.timing.critical_path_ps);
+                if better {
+                    best = Some(FlowResult {
+                        packed: packed.clone(),
+                        placement,
+                        routing,
+                        timing,
+                        alpha,
+                        placement_cost,
+                    });
+                }
+            }
+            Err(e) => last_err = Some(e),
+        }
+    }
+
+    best.ok_or_else(|| {
+        last_err.unwrap_or(RoutingFailed {
+            iterations: 0,
+            overused_nodes: 0,
+            detail: "no alpha produced a routable placement".into(),
+        })
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+
+    fn ic() -> Interconnect {
+        create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 5,
+            mem_column_period: 3,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn flow_runs_entire_suite() {
+        let ic = ic();
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 10, ..Default::default() },
+            ..Default::default()
+        };
+        for app in apps::suite() {
+            let r = run_flow(&ic, &app, &params)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", app.name));
+            assert!(r.timing.critical_path_ps > 0.0, "{}", app.name);
+            assert_eq!(r.routing.trees.len(), r.packed.app.nets().len());
+        }
+    }
+
+    #[test]
+    fn alpha_sweep_never_worse_than_single_alpha() {
+        let ic = ic();
+        let app = apps::gaussian();
+        let base = FlowParams {
+            sa: SaParams { moves_per_node: 10, ..Default::default() },
+            ..Default::default()
+        };
+        let single = run_flow(&ic, &app, &base).unwrap();
+        let swept = run_flow(
+            &ic,
+            &app,
+            &FlowParams { alpha_sweep: vec![1.0, 2.0, 4.0], ..base },
+        )
+        .unwrap();
+        assert!(swept.timing.critical_path_ps <= single.timing.critical_path_ps + 1e-9);
+    }
+
+    #[test]
+    fn flow_is_deterministic() {
+        let ic = ic();
+        let app = apps::camera();
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 8, ..Default::default() },
+            ..Default::default()
+        };
+        let a = run_flow(&ic, &app, &params).unwrap();
+        let b = run_flow(&ic, &app, &params).unwrap();
+        assert_eq!(a.placement.pos, b.placement.pos);
+        assert_eq!(a.timing.critical_path_ps, b.timing.critical_path_ps);
+    }
+}

@@ -1,0 +1,24 @@
+//! Place and route over the Canal IR (§3.4).
+//!
+//! The PnR backend runs in three stages — packing, placement (analytic
+//! global + simulated-annealing detailed), and iteration-based negotiated
+//! A* routing — operating *directly on the interconnect graph*, which is
+//! the point of Canal's IR design (Fig. 7: PnR runs on the same digraph
+//! the hardware is generated from, with delays as edge weights).
+
+pub mod app;
+pub mod flow;
+pub mod pack;
+pub mod place;
+pub mod route;
+pub mod timing;
+
+pub use app::{AppEdge, AppGraph, AppNode, AppNodeId, AppOp, Net};
+pub use flow::{run_flow, run_flow_with, FlowParams, FlowResult};
+pub use pack::{pack, PackedApp};
+pub use place::{
+    build_global_problem, detailed_place, global_cost_grad, initial_positions, legalize,
+    GlobalPlacer, GlobalProblem, NativePlacer, Placement, SaParams,
+};
+pub use route::{route, RouterParams, RouteTree, RoutingFailed, RoutingResult};
+pub use timing::{analyze, TimingReport};

@@ -1,0 +1,232 @@
+//! Packing (§3.4, stage 1 of PnR).
+//!
+//! "Constants and registers in the application are analyzed to identify
+//! any packing opportunities. For example, a pipeline register that feeds
+//! directly into a PE can be packed within that PE, eliminating the need
+//! to place that register on the configurable interconnect."
+//!
+//! Rules implemented:
+//! - every `Const` is packed into each of its consumers (constants are
+//!   free to replicate into PE immediate registers) and disappears;
+//! - a `Reg` whose *only* consumer is an ALU/MEM vertex is packed into
+//!   that consumer's input register and disappears;
+//! - remaining `Reg` vertices (fan-out > 1, or feeding another register)
+//!   stay placeable and occupy a PE in register/passthrough mode.
+
+use std::collections::HashMap;
+
+use super::app::{AppGraph, AppNodeId, AppOp};
+
+/// Result of packing: a rewritten graph plus records of what was folded
+/// where (consumed later by the bitstream generator to configure PE
+/// immediates and input registers).
+#[derive(Clone, Debug)]
+pub struct PackedApp {
+    /// Rewritten application (no `Const` vertices; packed `Reg`s removed).
+    pub app: AppGraph,
+    /// `(consumer, port, value)` — constant packed as a PE immediate.
+    pub packed_consts: Vec<(AppNodeId, u8, i64)>,
+    /// `(consumer, port)` — input port with a packed pipeline register.
+    pub packed_regs: Vec<(AppNodeId, u8)>,
+    /// Mapping from original vertex ids to packed ids (packed-away
+    /// vertices are absent).
+    pub mapping: HashMap<AppNodeId, AppNodeId>,
+}
+
+/// Pack an application graph.
+pub fn pack(original: &AppGraph) -> PackedApp {
+    original.check().unwrap_or_else(|e| panic!("unpackable app {}: {e}", original.name));
+
+    // Decide which Reg vertices get packed: single consumer, and that
+    // consumer is an ALU or MEM vertex.
+    let mut packed_reg_of: HashMap<AppNodeId, (AppNodeId, u8)> = HashMap::new();
+    for (id, n) in original.iter() {
+        if !matches!(n.op, AppOp::Reg) {
+            continue;
+        }
+        let outs = original.outputs_of(id);
+        if outs.len() != 1 {
+            continue;
+        }
+        let consumer = outs[0].dst;
+        if matches!(original.node(consumer).op, AppOp::Alu(_) | AppOp::Mem(_)) {
+            packed_reg_of.insert(id, (consumer, outs[0].dst_port));
+        }
+    }
+
+    // Build the rewritten graph.
+    let mut app = AppGraph::new(&original.name);
+    let mut mapping: HashMap<AppNodeId, AppNodeId> = HashMap::new();
+    for (id, n) in original.iter() {
+        let keep = match n.op {
+            AppOp::Const(_) => false,
+            AppOp::Reg => !packed_reg_of.contains_key(&id),
+            _ => true,
+        };
+        if keep {
+            mapping.insert(id, app.add(&n.name, n.op.clone()));
+        }
+    }
+
+    let mut packed_consts = Vec::new();
+    let mut packed_regs = Vec::new();
+
+    for e in original.edges() {
+        let src_node = original.node(e.src);
+        match (&src_node.op, packed_reg_of.get(&e.src)) {
+            // Constant -> consumer: becomes an immediate (if the consumer
+            // is itself a packed register, the immediate lands on the
+            // register's host port).
+            (AppOp::Const(v), _) => {
+                let (dst, port) = match packed_reg_of.get(&e.dst) {
+                    Some(&(consumer, port)) => (mapping[&consumer], port),
+                    None => (mapping[&e.dst], e.dst_port),
+                };
+                packed_consts.push((dst, port, *v));
+            }
+            // Packed register -> consumer: the register's own input edge
+            // is rerouted below; here we just record the registered port.
+            (AppOp::Reg, Some(_)) => {
+                let dst = mapping[&e.dst];
+                packed_regs.push((dst, e.dst_port));
+            }
+            _ => {
+                // Edge into a packed register is rerouted to the
+                // register's consumer; everything else copies through.
+                if let Some(&(consumer, port)) = packed_reg_of.get(&e.dst) {
+                    // original: e.src -> reg -> consumer.port
+                    let s = mapping[&e.src];
+                    let d = mapping[&consumer];
+                    app.connect(s, e.src_port, d, port);
+                } else {
+                    app.connect(mapping[&e.src], e.src_port, mapping[&e.dst], e.dst_port);
+                }
+            }
+        }
+    }
+
+    packed_consts.sort_by_key(|&(n, p, _)| (n, p));
+    packed_regs.sort();
+    packed_regs.dedup();
+    PackedApp { app, packed_consts, packed_regs, mapping }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::pnr::app::AppGraph;
+
+    #[test]
+    fn constants_always_packed() {
+        let packed = pack(&apps::pointwise(4));
+        assert!(packed.app.iter().all(|(_, n)| !matches!(n.op, AppOp::Const(_))));
+        assert_eq!(packed.packed_consts.len(), 4);
+    }
+
+    #[test]
+    fn single_consumer_reg_packed() {
+        let mut g = AppGraph::new("t");
+        let i = g.mem("in", "stream_in");
+        let r = g.add("r", AppOp::Reg);
+        let a = g.alu("a", "add");
+        let o = g.mem("out", "stream_out");
+        g.wire(i, r, 0);
+        g.wire(r, a, 0);
+        g.wire(i, a, 1);
+        g.wire(a, o, 0);
+        let p = pack(&g);
+        // r disappears; in drives a.0 directly; a.0 is a registered port.
+        assert_eq!(p.app.len(), 3);
+        assert_eq!(p.packed_regs.len(), 1);
+        let a_new = p.app.ids().find(|&id| p.app.node(id).name == "a").unwrap();
+        assert_eq!(p.packed_regs[0].0, a_new);
+        assert_eq!(p.app.inputs_of(a_new).len(), 2);
+    }
+
+    #[test]
+    fn fanout_reg_stays_placeable() {
+        let mut g = AppGraph::new("t");
+        let i = g.mem("in", "stream_in");
+        let r = g.add("r", AppOp::Reg);
+        let a = g.alu("a", "add");
+        let b = g.alu("b", "add");
+        let o = g.mem("out", "stream_out");
+        g.wire(i, r, 0);
+        g.wire(r, a, 0);
+        g.wire(i, a, 1);
+        g.wire(r, b, 0);
+        g.wire(i, b, 1);
+        g.wire(a, o, 0);
+        g.wire(b, o, 1);
+        let p = pack(&g);
+        assert!(p.app.iter().any(|(_, n)| matches!(n.op, AppOp::Reg)));
+    }
+
+    #[test]
+    fn reg_feeding_reg_not_packed_into_it() {
+        // reg chains stay chains: the first reg's consumer is a Reg, so it
+        // cannot be packed (only ALU/MEM hosts have input registers).
+        let mut g = AppGraph::new("t");
+        let i = g.mem("in", "stream_in");
+        let r0 = g.add("r0", AppOp::Reg);
+        let r1 = g.add("r1", AppOp::Reg);
+        let o = g.mem("out", "stream_out");
+        g.wire(i, r0, 0);
+        g.wire(r0, r1, 0);
+        g.wire(r1, o, 0);
+        let p = pack(&g);
+        // r1 packs into the MEM; r0 stays (its consumer was a Reg).
+        let regs: Vec<_> =
+            p.app.iter().filter(|(_, n)| matches!(n.op, AppOp::Reg)).collect();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(p.app.node(regs[0].0).name, "r0");
+    }
+
+    #[test]
+    fn suite_packs_and_stays_well_formed() {
+        for app in apps::suite() {
+            let p = pack(&app);
+            p.app.check().unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            assert!(p.app.len() <= app.len(), "{} must not grow", app.name);
+            if app.iter().any(|(_, n)| matches!(n.op, AppOp::Const(_))) {
+                assert!(p.app.len() < app.len(), "{} should shrink", app.name);
+            }
+        }
+    }
+
+    #[test]
+    fn packed_graph_preserves_net_semantics() {
+        // Every non-const edge of the original must correspond to a path
+        // of length 1 in the packed graph (possibly through a removed
+        // register).
+        let g = apps::gaussian();
+        let p = pack(&g);
+        for e in g.edges() {
+            let src = g.node(e.src);
+            if matches!(src.op, AppOp::Const(_)) {
+                continue;
+            }
+            if !p.mapping.contains_key(&e.src) {
+                continue; // packed reg: its input edge was rerouted
+            }
+            let s = p.mapping[&e.src];
+            if let Some(&d) = p.mapping.get(&e.dst) {
+                assert!(
+                    p.app.edges().iter().any(|pe| pe.src == s && pe.dst == d),
+                    "edge {} -> {} lost",
+                    src.name,
+                    g.node(e.dst).name
+                );
+            } else {
+                // destination was packed away: s must now reach the
+                // destination's consumer directly.
+                assert!(
+                    p.app.edges().iter().any(|pe| pe.src == s),
+                    "rerouted edge from {} lost",
+                    src.name
+                );
+            }
+        }
+    }
+}

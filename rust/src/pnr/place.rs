@@ -1,0 +1,732 @@
+//! Placement (§3.4, stages 2-3 of PnR).
+//!
+//! **Global placement** is analytic: gradient-based minimization of a
+//! differentiable star-model wirelength (the L2 approximation of HPWL the
+//! paper uses "to speed up the algorithm") plus a quadratic legalization
+//! term pulling MEM vertices toward MEM columns (Eq. 1). The objective is
+//! implemented twice with identical semantics: natively here (fallback +
+//! baseline) and as an AOT-compiled JAX/Pallas artifact executed through
+//! PJRT (`crate::runtime`) — the repo's L2/L1 layers.
+//!
+//! **Detailed placement** is simulated annealing on Eq. 2:
+//! `cost_net = (HPWL_net − γ·|Area_net ∩ Area_existing|)^α`, where γ
+//! discourages powering on pass-through tiles and α penalizes long nets;
+//! the paper sweeps α in 1..20 and keeps the best post-route result.
+
+use std::collections::HashMap;
+
+use crate::ir::{CoreKind, Interconnect};
+use crate::util::rng::Rng;
+
+use super::app::{AppGraph, AppNodeId, Net};
+
+/// A full placement: tile coordinates per application vertex.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Placement {
+    pub pos: Vec<(u16, u16)>,
+}
+
+impl Placement {
+    pub fn of(&self, id: AppNodeId) -> (u16, u16) {
+        self.pos[id.index()]
+    }
+
+    /// Check legality: in-bounds, one vertex per tile, core kinds match.
+    pub fn check(&self, app: &AppGraph, ic: &Interconnect) -> Result<(), String> {
+        if self.pos.len() != app.len() {
+            return Err("placement size mismatch".into());
+        }
+        let mut used: HashMap<(u16, u16), AppNodeId> = HashMap::new();
+        for (id, n) in app.iter() {
+            let (x, y) = self.of(id);
+            if x >= ic.width || y >= ic.height {
+                return Err(format!("`{}` out of bounds at ({x},{y})", n.name));
+            }
+            if let Some(prev) = used.insert((x, y), id) {
+                return Err(format!(
+                    "`{}` and `{}` share tile ({x},{y})",
+                    app.node(prev).name,
+                    n.name
+                ));
+            }
+            let need = n.op.core_kind();
+            let have = ic.tile(x, y).core.kind;
+            if need != have {
+                return Err(format!(
+                    "`{}` needs {} but tile ({x},{y}) is {}",
+                    n.name,
+                    need.name(),
+                    have.name()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Half-perimeter wirelength of one net under this placement.
+    pub fn hpwl(&self, net: &Net) -> f64 {
+        let mut min_x = u16::MAX;
+        let mut max_x = 0;
+        let mut min_y = u16::MAX;
+        let mut max_y = 0;
+        let mut visit = |(x, y): (u16, u16)| {
+            min_x = min_x.min(x);
+            max_x = max_x.max(x);
+            min_y = min_y.min(y);
+            max_y = max_y.max(y);
+        };
+        visit(self.of(net.src));
+        for &(s, _) in &net.sinks {
+            visit(self.of(s));
+        }
+        (max_x - min_x) as f64 + (max_y - min_y) as f64
+    }
+
+    /// Total HPWL over all nets.
+    pub fn total_hpwl(&self, nets: &[Net]) -> f64 {
+        nets.iter().map(|n| self.hpwl(n)).sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Global placement objective (shared semantics with the JAX artifact)
+// ---------------------------------------------------------------------------
+
+/// The analytic global-placement problem in the padded dense form consumed
+/// by both the native optimizer and the AOT JAX artifact: `memberships`
+/// holds, for each net, the vertex indices of its pins (-1 padding).
+#[derive(Clone, Debug)]
+pub struct GlobalProblem {
+    pub n_nodes: usize,
+    /// `pins[net][k]` = vertex index or -1.
+    pub pins: Vec<Vec<i32>>,
+    /// Per-vertex target-column legalization: `Some(col)` pulls x toward
+    /// `col` (MEM vertices toward their nearest MEM column).
+    pub column_pull: Vec<Option<f32>>,
+    /// Array bounds for clamping.
+    pub width: f32,
+    pub height: f32,
+}
+
+/// Quadratic star-model wirelength + legalization (Eq. 1), and its
+/// gradient. This exact function is what `python/compile/model.py`
+/// lowers to HLO; keep the two in lockstep (pytest cross-checks via the
+/// dumped test vectors, rust cross-checks via `runtime` tests).
+pub fn global_cost_grad(
+    p: &GlobalProblem,
+    xs: &[f32],
+    ys: &[f32],
+    lambda_mem: f32,
+) -> (f32, Vec<f32>, Vec<f32>) {
+    let mut cost = 0.0f32;
+    let mut gx = vec![0.0f32; p.n_nodes];
+    let mut gy = vec![0.0f32; p.n_nodes];
+    for net in &p.pins {
+        let idx: Vec<usize> = net.iter().filter(|&&i| i >= 0).map(|&i| i as usize).collect();
+        if idx.len() < 2 {
+            continue;
+        }
+        let k = idx.len() as f32;
+        let cx = idx.iter().map(|&i| xs[i]).sum::<f32>() / k;
+        let cy = idx.iter().map(|&i| ys[i]).sum::<f32>() / k;
+        for &i in &idx {
+            let dx = xs[i] - cx;
+            let dy = ys[i] - cy;
+            cost += dx * dx + dy * dy;
+            // d/dxi of sum_j (xj - cx)^2 = 2(xi - cx) (the centroid terms
+            // cancel: sum_j 2(xj-cx)·(-1/k) = 0).
+            gx[i] += 2.0 * dx;
+            gy[i] += 2.0 * dy;
+        }
+    }
+    for i in 0..p.n_nodes {
+        if let Some(col) = p.column_pull[i] {
+            let dx = xs[i] - col;
+            cost += lambda_mem * dx * dx;
+            gx[i] += lambda_mem * 2.0 * dx;
+        }
+    }
+    (cost, gx, gy)
+}
+
+/// Build the dense problem from a packed app + interconnect.
+pub fn build_global_problem(app: &AppGraph, ic: &Interconnect) -> GlobalProblem {
+    let mem_cols: Vec<u16> = (0..ic.width)
+        .filter(|&x| ic.tile(x, 0).core.kind == CoreKind::Mem)
+        .collect();
+    let column_pull = app
+        .iter()
+        .map(|(_, n)| {
+            if n.op.core_kind() == CoreKind::Mem && !mem_cols.is_empty() {
+                // Pull toward the array-centre-most MEM column; the
+                // optimizer refines via the quadratic well, legalization
+                // snaps to the actual nearest column.
+                let mid = ic.width as f32 / 2.0;
+                let col = mem_cols
+                    .iter()
+                    .copied()
+                    .min_by(|a, b| {
+                        (*a as f32 - mid).abs().partial_cmp(&(*b as f32 - mid).abs()).unwrap()
+                    })
+                    .unwrap();
+                Some(col as f32)
+            } else {
+                None
+            }
+        })
+        .collect();
+    GlobalProblem {
+        n_nodes: app.len(),
+        pins: app
+            .nets()
+            .iter()
+            .map(|n| {
+                let mut v: Vec<i32> = vec![n.src.0 as i32];
+                v.extend(n.sinks.iter().map(|&(s, _)| s.0 as i32));
+                v
+            })
+            .collect(),
+        column_pull,
+        width: ic.width as f32,
+        height: ic.height as f32,
+    }
+}
+
+/// Backend executing the global-placement optimization loop. The native
+/// implementation lives here; `crate::runtime::PjrtPlacer` implements the
+/// same trait on top of the AOT JAX/Pallas artifact.
+pub trait GlobalPlacer {
+    /// Return optimized continuous positions (xs, ys).
+    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>);
+    fn name(&self) -> &'static str;
+}
+
+/// Native gradient-descent-with-momentum placer (the conjugate-gradient
+/// stand-in; same objective, same fixed iteration budget as the artifact).
+pub struct NativePlacer {
+    pub iters: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    pub lambda_mem: f32,
+}
+
+impl Default for NativePlacer {
+    fn default() -> Self {
+        NativePlacer { iters: 150, lr: 0.12, momentum: 0.9, lambda_mem: 0.4 }
+    }
+}
+
+impl GlobalPlacer for NativePlacer {
+    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let mut xs = xs0.to_vec();
+        let mut ys = ys0.to_vec();
+        let mut vx = vec![0.0f32; p.n_nodes];
+        let mut vy = vec![0.0f32; p.n_nodes];
+        for _ in 0..self.iters {
+            let (_, gx, gy) = global_cost_grad(p, &xs, &ys, self.lambda_mem);
+            for i in 0..p.n_nodes {
+                vx[i] = self.momentum * vx[i] - self.lr * gx[i];
+                vy[i] = self.momentum * vy[i] - self.lr * gy[i];
+                xs[i] = (xs[i] + vx[i]).clamp(0.0, p.width - 1.0);
+                ys[i] = (ys[i] + vy[i]).clamp(0.0, p.height - 1.0);
+            }
+        }
+        (xs, ys)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-gd"
+    }
+}
+
+/// Deterministic initial spread: vertices on a jittered grid around the
+/// array centre.
+pub fn initial_positions(app: &AppGraph, ic: &Interconnect, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(seed);
+    let cx = ic.width as f32 / 2.0;
+    let cy = ic.height as f32 / 2.0;
+    let spread = (ic.width.min(ic.height) as f32 / 4.0).max(1.0);
+    let mut xs = Vec::with_capacity(app.len());
+    let mut ys = Vec::with_capacity(app.len());
+    for _ in 0..app.len() {
+        xs.push(cx + (rng.f64() as f32 - 0.5) * spread);
+        ys.push(cy + (rng.f64() as f32 - 0.5) * spread);
+    }
+    (xs, ys)
+}
+
+// ---------------------------------------------------------------------------
+// Legalization: snap continuous positions to distinct compatible tiles
+// ---------------------------------------------------------------------------
+
+/// Snap continuous positions onto legal tiles: nearest free tile of the
+/// right core kind, searched in expanding rings.
+pub fn legalize(
+    app: &AppGraph,
+    ic: &Interconnect,
+    xs: &[f32],
+    ys: &[f32],
+) -> Result<Placement, String> {
+    let mut used = vec![false; ic.width as usize * ic.height as usize];
+    let mut pos = vec![(0u16, 0u16); app.len()];
+    // Place in order of "constrainedness": MEM first (fewer sites).
+    let mut order: Vec<AppNodeId> = app.ids().collect();
+    order.sort_by_key(|&id| match app.node(id).op.core_kind() {
+        CoreKind::Mem => 0,
+        CoreKind::Io => 1,
+        CoreKind::Pe => 2,
+    });
+    for id in order {
+        let kind = app.node(id).op.core_kind();
+        let (fx, fy) = (xs[id.index()], ys[id.index()]);
+        let mut best: Option<(f32, u16, u16)> = None;
+        for y in 0..ic.height {
+            for x in 0..ic.width {
+                if used[y as usize * ic.width as usize + x as usize] {
+                    continue;
+                }
+                if ic.tile(x, y).core.kind != kind {
+                    continue;
+                }
+                let d = (x as f32 - fx).powi(2) + (y as f32 - fy).powi(2);
+                if best.map_or(true, |(bd, _, _)| d < bd) {
+                    best = Some((d, x, y));
+                }
+            }
+        }
+        let (_, x, y) = best.ok_or_else(|| {
+            format!("no free {} tile for `{}`", kind.name(), app.node(id).name)
+        })?;
+        used[y as usize * ic.width as usize + x as usize] = true;
+        pos[id.index()] = (x, y);
+    }
+    let placement = Placement { pos };
+    placement.check(app, ic)?;
+    Ok(placement)
+}
+
+// ---------------------------------------------------------------------------
+// Detailed placement: simulated annealing on Eq. 2
+// ---------------------------------------------------------------------------
+
+/// SA hyperparameters (γ and α of Eq. 2 plus schedule knobs).
+#[derive(Clone, Copy, Debug)]
+pub struct SaParams {
+    /// Pass-through-tile reuse bonus weight (γ).
+    pub gamma: f64,
+    /// Route-length penalty exponent (α); the paper sweeps 1..20.
+    pub alpha: f64,
+    /// Moves per temperature step, scaled by vertex count.
+    pub moves_per_node: usize,
+    /// Geometric cooling factor.
+    pub cooling: f64,
+    pub seed: u64,
+}
+
+impl Default for SaParams {
+    fn default() -> Self {
+        SaParams { gamma: 0.3, alpha: 1.0, moves_per_node: 40, cooling: 0.92, seed: 0xCA7A1 }
+    }
+}
+
+struct SaState<'a> {
+    app: &'a AppGraph,
+    ic: &'a Interconnect,
+    nets: &'a [Net],
+    place: Placement,
+    /// Occupancy grid: vertex id per tile.
+    grid: Vec<Option<AppNodeId>>,
+    /// Net indices touching each vertex (incremental cost evaluation).
+    nets_of: Vec<Vec<u32>>,
+    /// Cached Eq. 2 cost per net (valid between accepted moves).
+    net_cost_cache: Vec<f64>,
+    /// Cached bounding box per net: (min_x, max_x, min_y, max_y).
+    net_bbox: Vec<(u16, u16, u16, u16)>,
+    /// Scratch: per-net "already queued" epoch marker.
+    mark: Vec<u32>,
+    epoch: u32,
+    /// Reusable buffers for the per-move affected-net set.
+    affected_scratch: Vec<u32>,
+    newcost_scratch: Vec<(f64, (u16, u16, u16, u16))>,
+}
+
+impl<'a> SaState<'a> {
+    fn new(
+        app: &'a AppGraph,
+        ic: &'a Interconnect,
+        nets: &'a [Net],
+        place: Placement,
+        grid: Vec<Option<AppNodeId>>,
+    ) -> SaState<'a> {
+        let mut nets_of: Vec<Vec<u32>> = vec![Vec::new(); app.len()];
+        for (ni, net) in nets.iter().enumerate() {
+            nets_of[net.src.index()].push(ni as u32);
+            for &(sv, _) in &net.sinks {
+                if !nets_of[sv.index()].contains(&(ni as u32)) {
+                    nets_of[sv.index()].push(ni as u32);
+                }
+            }
+        }
+        SaState {
+            app,
+            ic,
+            nets,
+            place,
+            grid,
+            nets_of,
+            net_cost_cache: Vec::new(),
+            net_bbox: Vec::new(),
+            mark: vec![0; nets.len()],
+            epoch: 0,
+            affected_scratch: Vec::with_capacity(64),
+            newcost_scratch: Vec::new(),
+        }
+    }
+
+    fn tile_index(&self, x: u16, y: u16) -> usize {
+        y as usize * self.ic.width as usize + x as usize
+    }
+
+    /// Bounding box of a net under the current placement.
+    fn bbox_of(&self, net: &Net) -> (u16, u16, u16, u16) {
+        let mut min_x = u16::MAX;
+        let mut max_x = 0;
+        let mut min_y = u16::MAX;
+        let mut max_y = 0;
+        let mut visit = |(x, y): (u16, u16)| {
+            min_x = min_x.min(x);
+            max_x = max_x.max(x);
+            min_y = min_y.min(y);
+            max_y = max_y.max(y);
+        };
+        visit(self.place.of(net.src));
+        for &(s, _) in &net.sinks {
+            visit(self.place.of(s));
+        }
+        (min_x, max_x, min_y, max_y)
+    }
+
+    /// Eq. 2 for one net: (HPWL − γ·overlap)^α where overlap counts
+    /// *occupied* tiles inside the net's bounding box — routing through
+    /// already-powered tiles is free-ish, pass-through tiles cost.
+    fn net_cost_at(&self, net: &Net, bbox: (u16, u16, u16, u16), gamma: f64, alpha: f64) -> f64 {
+        let (min_x, max_x, min_y, max_y) = bbox;
+        let hpwl = (max_x - min_x) as f64 + (max_y - min_y) as f64;
+        let mut overlap = 0usize;
+        for y in min_y..=max_y {
+            for x in min_x..=max_x {
+                if self.grid[y as usize * self.ic.width as usize + x as usize].is_some() {
+                    overlap += 1;
+                }
+            }
+        }
+        // Terminals themselves are always occupied; exclude them so an
+        // isolated 2-pin net has zero bonus.
+        let terminals = 1 + net.sinks.len();
+        let bonus = gamma * overlap.saturating_sub(terminals.min(overlap)) as f64;
+        (hpwl - bonus).max(0.0).powf(alpha)
+    }
+
+    fn net_cost(&self, net: &Net, gamma: f64, alpha: f64) -> f64 {
+        self.net_cost_at(net, self.bbox_of(net), gamma, alpha)
+    }
+
+    fn total_cost(&self, gamma: f64, alpha: f64) -> f64 {
+        self.nets.iter().map(|n| self.net_cost(n, gamma, alpha)).sum()
+    }
+
+    /// Refresh every cache entry (called once at the start of annealing).
+    fn rebuild_caches(&mut self, gamma: f64, alpha: f64) {
+        self.net_bbox = self.nets.iter().map(|n| self.bbox_of(n)).collect();
+        self.net_cost_cache = self
+            .nets
+            .iter()
+            .zip(&self.net_bbox)
+            .map(|(n, &b)| self.net_cost_at(n, b, gamma, alpha))
+            .collect();
+    }
+
+    /// Net indices affected by occupancy/terminal changes at the given
+    /// tiles and vertices: member nets of the moved vertices plus any net
+    /// whose cached bbox covers a changed tile. Deduplicated via epoch
+    /// marks. O(nets) with O(1) per-net tests — the expensive bbox scans
+    /// only run for the returned subset.
+    fn affected_nets(
+        &mut self,
+        verts: impl Iterator<Item = AppNodeId>,
+        tiles: &[(u16, u16)],
+    ) -> Vec<u32> {
+        self.epoch += 1;
+        let mut out = std::mem::take(&mut self.affected_scratch);
+        out.clear();
+        for v in verts {
+            for &ni in &self.nets_of[v.index()] {
+                if self.mark[ni as usize] != self.epoch {
+                    self.mark[ni as usize] = self.epoch;
+                    out.push(ni);
+                }
+            }
+        }
+        for (ni, &(min_x, max_x, min_y, max_y)) in self.net_bbox.iter().enumerate() {
+            if self.mark[ni] == self.epoch {
+                continue;
+            }
+            if tiles
+                .iter()
+                .any(|&(x, y)| x >= min_x && x <= max_x && y >= min_y && y <= max_y)
+            {
+                self.mark[ni] = self.epoch;
+                out.push(ni as u32);
+            }
+        }
+        if self.newcost_scratch.len() < out.len() {
+            self.newcost_scratch.resize(out.len(), (0.0, (0, 0, 0, 0)));
+        }
+        out
+    }
+
+    /// Hand the affected-net buffer back for reuse by the next move.
+    fn return_scratch(&mut self, buf: Vec<u32>) {
+        self.affected_scratch = buf;
+    }
+}
+
+/// Detailed placement: anneal `initial` under Eq. 2. Returns the improved
+/// placement and its final cost.
+pub fn detailed_place(
+    app: &AppGraph,
+    ic: &Interconnect,
+    nets: &[Net],
+    initial: Placement,
+    params: &SaParams,
+) -> (Placement, f64) {
+    initial.check(app, ic).expect("detailed placement needs a legal start");
+    let mut grid = vec![None; ic.width as usize * ic.height as usize];
+    for (id, _) in app.iter() {
+        let (x, y) = initial.of(id);
+        grid[y as usize * ic.width as usize + x as usize] = Some(id);
+    }
+    let mut st = SaState::new(app, ic, nets, initial, grid);
+    let mut rng = Rng::new(params.seed);
+
+    let n = app.len().max(1);
+    st.rebuild_caches(params.gamma, params.alpha);
+    let mut cost: f64 = st.net_cost_cache.iter().sum();
+    // Initial temperature: accept ~85% of average uphill moves early on.
+    let mut temp = (cost / nets.len().max(1) as f64).max(1.0);
+    let moves = params.moves_per_node * n;
+
+    while temp > 1e-3 {
+        for _ in 0..moves {
+            // Pick a vertex and a candidate tile of the same core kind.
+            let id = AppNodeId(rng.below(n) as u32);
+            let kind = st.app.node(id).op.core_kind();
+            let (ox, oy) = st.place.of(id);
+            let tx = rng.below(ic.width as usize) as u16;
+            let ty = rng.below(ic.height as usize) as u16;
+            if (tx, ty) == (ox, oy) || ic.tile(tx, ty).core.kind != kind {
+                continue;
+            }
+            let other = st.grid[st.tile_index(tx, ty)];
+            if let Some(o) = other {
+                if st.app.node(o).op.core_kind() != kind {
+                    continue; // cannot swap across kinds
+                }
+            }
+
+            // Apply move (swap or relocate).
+            let apply = |st: &mut SaState, to_empty: bool| {
+                let gi_old = st.tile_index(ox, oy);
+                let gi_new = st.tile_index(tx, ty);
+                st.place.pos[id.index()] = (tx, ty);
+                if to_empty {
+                    st.grid[gi_old] = None;
+                    st.grid[gi_new] = Some(id);
+                } else {
+                    let o = other.unwrap();
+                    st.place.pos[o.index()] = (ox, oy);
+                    st.grid[gi_old] = Some(o);
+                    st.grid[gi_new] = Some(id);
+                }
+            };
+            let revert = |st: &mut SaState| {
+                let gi_old = st.tile_index(ox, oy);
+                let gi_new = st.tile_index(tx, ty);
+                st.place.pos[id.index()] = (ox, oy);
+                st.grid[gi_old] = Some(id);
+                match other {
+                    Some(o) => {
+                        st.place.pos[o.index()] = (tx, ty);
+                        st.grid[gi_new] = Some(o);
+                    }
+                    None => st.grid[gi_new] = None,
+                }
+            };
+
+            // Incremental Eq. 2 evaluation. Only two net families can
+            // change cost: member nets of the moved vertices (their bbox
+            // moves), and nets whose *unchanged* bbox covers one of the
+            // two occupancy-flipped tiles. One pre-move scan finds both —
+            // non-member bboxes are identical before and after the move.
+            let verts = [Some(id), other];
+            let tiles = [(ox, oy), (tx, ty)];
+            let affected =
+                st.affected_nets(verts.iter().flatten().copied(), &tiles);
+            apply(&mut st, other.is_none());
+            let mut delta = 0.0;
+            let mut k = 0;
+            while k < affected.len() {
+                let ni = affected[k];
+                let net = &st.nets[ni as usize];
+                let bbox = st.bbox_of(net);
+                let c = st.net_cost_at(net, bbox, params.gamma, params.alpha);
+                delta += c - st.net_cost_cache[ni as usize];
+                st.newcost_scratch[k] = (c, bbox);
+                k += 1;
+            }
+            if delta <= 0.0 || rng.f64() < (-delta / temp).exp() {
+                cost += delta;
+                for (k, &ni) in affected.iter().enumerate() {
+                    let (c, bbox) = st.newcost_scratch[k];
+                    st.net_cost_cache[ni as usize] = c;
+                    st.net_bbox[ni as usize] = bbox;
+                }
+                st.return_scratch(affected);
+            } else {
+                st.return_scratch(affected);
+                revert(&mut st);
+            }
+        }
+        temp *= params.cooling;
+    }
+
+    st.place.check(app, ic).expect("SA must preserve legality");
+    (st.place, cost)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use crate::pnr::pack::pack;
+
+    fn ic() -> Interconnect {
+        create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 3,
+            mem_column_period: 3,
+            reg_density: 0,
+            ..Default::default()
+        })
+    }
+
+    fn place_app(name: &str) -> (AppGraph, Interconnect, Placement) {
+        let ic = ic();
+        let app = apps::suite().into_iter().find(|a| a.name == name).unwrap();
+        let packed = pack(&app).app;
+        let (xs, ys) = initial_positions(&packed, &ic, 1);
+        let p = build_global_problem(&packed, &ic);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs, &ys);
+        let placement = legalize(&packed, &ic, &xs, &ys).unwrap();
+        (packed, ic, placement)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let ic = ic();
+        let packed = pack(&apps::gaussian()).app;
+        let p = build_global_problem(&packed, &ic);
+        let (xs, ys) = initial_positions(&packed, &ic, 7);
+        let (c0, gx, gy) = global_cost_grad(&p, &xs, &ys, 0.4);
+        let eps = 1e-2f32;
+        for i in [0usize, 3, 7] {
+            let mut xs2 = xs.clone();
+            xs2[i] += eps;
+            let (c1, _, _) = global_cost_grad(&p, &xs2, &ys, 0.4);
+            let fd = (c1 - c0) / eps;
+            assert!((fd - gx[i]).abs() < 0.05 * gx[i].abs().max(1.0), "gx[{i}] {fd} vs {}", gx[i]);
+            let mut ys2 = ys.clone();
+            ys2[i] += eps;
+            let (c2, _, _) = global_cost_grad(&p, &xs, &ys2, 0.4);
+            let fd = (c2 - c0) / eps;
+            assert!((fd - gy[i]).abs() < 0.05 * gy[i].abs().max(1.0), "gy[{i}]");
+        }
+    }
+
+    #[test]
+    fn global_placement_reduces_cost() {
+        let ic = ic();
+        let packed = pack(&apps::harris()).app;
+        let p = build_global_problem(&packed, &ic);
+        let (xs0, ys0) = initial_positions(&packed, &ic, 3);
+        let (c0, _, _) = global_cost_grad(&p, &xs0, &ys0, 0.4);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs0, &ys0);
+        let (c1, _, _) = global_cost_grad(&p, &xs, &ys, 0.4);
+        assert!(c1 < c0, "optimizer must reduce cost: {c0} -> {c1}");
+    }
+
+    #[test]
+    fn legalization_produces_legal_placements_for_suite() {
+        let ic = ic();
+        for app in apps::suite() {
+            let packed = pack(&app).app;
+            let (xs, ys) = initial_positions(&packed, &ic, 5);
+            let p = build_global_problem(&packed, &ic);
+            let (xs, ys) = NativePlacer::default().optimize(&p, &xs, &ys);
+            let placement = legalize(&packed, &ic, &xs, &ys)
+                .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+            placement.check(&packed, &ic).unwrap();
+        }
+    }
+
+    #[test]
+    fn sa_improves_or_maintains_hpwl() {
+        let (packed, ic, placement) = place_app("gaussian");
+        let nets = packed.nets();
+        let before = placement.total_hpwl(&nets);
+        let params = SaParams { moves_per_node: 20, ..Default::default() };
+        let (after_p, _) = detailed_place(&packed, &ic, &nets, placement, &params);
+        let after = after_p.total_hpwl(&nets);
+        assert!(after <= before * 1.05, "SA regressed HPWL {before} -> {after}");
+        after_p.check(&packed, &ic).unwrap();
+    }
+
+    #[test]
+    fn sa_is_deterministic_per_seed() {
+        let (packed, ic, placement) = place_app("pointwise");
+        let nets = packed.nets();
+        let params = SaParams { moves_per_node: 10, ..Default::default() };
+        let (p1, c1) = detailed_place(&packed, &ic, &nets, placement.clone(), &params);
+        let (p2, c2) = detailed_place(&packed, &ic, &nets, placement, &params);
+        assert_eq!(p1.pos, p2.pos);
+        assert_eq!(c1, c2);
+    }
+
+    #[test]
+    fn alpha_changes_cost_landscape() {
+        let (packed, ic, placement) = place_app("camera");
+        let nets = packed.nets();
+        let mut grid = vec![None; 64];
+        for (id, _) in packed.iter() {
+            let (x, y) = placement.of(id);
+            grid[y as usize * 8 + x as usize] = Some(id);
+        }
+        let st = SaState::new(&packed, &ic, &nets, placement, grid);
+        let c1 = st.total_cost(0.3, 1.0);
+        let c2 = st.total_cost(0.3, 2.0);
+        assert!(c1 > 0.0 && c2 > 0.0 && (c1 - c2).abs() > 1e-9);
+    }
+
+    #[test]
+    fn mem_nodes_land_on_mem_columns() {
+        let (packed, ic, placement) = place_app("gaussian");
+        for (id, n) in packed.iter() {
+            if n.op.core_kind() == CoreKind::Mem {
+                let (x, _) = placement.of(id);
+                assert_eq!(ic.tile(x, 0).core.kind, CoreKind::Mem);
+            }
+        }
+    }
+}

@@ -1,0 +1,655 @@
+//! Iteration-based negotiated-congestion routing (§3.4, stage 4).
+//!
+//! PathFinder-style: each iteration routes every net with A* over the
+//! routing graph; node costs combine base (delay) cost, present
+//! congestion, and accumulated history. Timing criticality re-weights
+//! nets between iterations ("we compute the slack on a net and determine
+//! how critical it is given global timing information"). Routing finishes
+//! when a legal (overuse-free) result is produced, or fails after
+//! `max_iterations` — which is how the Disjoint topology's unroutability
+//! manifests in Fig. 9's experiment.
+
+use std::collections::HashMap;
+
+use crate::ir::{CoreKind, Interconnect, NodeId, RoutingGraph};
+
+use super::app::{AppGraph, AppNodeId, Net};
+use super::place::Placement;
+
+/// Router tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterParams {
+    pub max_iterations: usize,
+    /// Present-congestion factor growth per iteration.
+    pub pres_fac_init: f64,
+    pub pres_fac_mult: f64,
+    /// History increment per overused node per iteration.
+    pub hist_incr: f64,
+    /// Weight of delay in the base cost (timing-driven share).
+    pub delay_weight: f64,
+    /// Extra cost discouraging routes through tiles no app vertex uses
+    /// (the §3.4 "discourage the use of unused tiles" wire-cost shaping).
+    pub unused_tile_penalty: f64,
+}
+
+impl Default for RouterParams {
+    fn default() -> Self {
+        RouterParams {
+            max_iterations: 40,
+            pres_fac_init: 0.6,
+            pres_fac_mult: 1.4,
+            hist_incr: 0.35,
+            delay_weight: 1.0,
+            unused_tile_penalty: 0.15,
+        }
+    }
+}
+
+/// A routed net: the tree edges in routing-graph node space, plus the
+/// concrete path to each sink (for STA and bitstream generation).
+#[derive(Clone, Debug)]
+pub struct RouteTree {
+    pub net: Net,
+    /// Path per sink, source port node first, sink port node last.
+    pub sink_paths: Vec<Vec<NodeId>>,
+}
+
+impl RouteTree {
+    /// Every routing-graph node used by this net (deduplicated).
+    pub fn nodes(&self) -> Vec<NodeId> {
+        let mut v: Vec<NodeId> = self.sink_paths.iter().flatten().copied().collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    /// Every directed edge used by this net (deduplicated).
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut v = Vec::new();
+        for path in &self.sink_paths {
+            for w in path.windows(2) {
+                v.push((w[0], w[1]));
+            }
+        }
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// Successful routing result.
+#[derive(Clone, Debug)]
+pub struct RoutingResult {
+    pub trees: Vec<RouteTree>,
+    pub iterations: usize,
+    /// Total routing-graph nodes used (wirelength proxy).
+    pub nodes_used: usize,
+}
+
+/// Routing failure: congestion never resolved.
+#[derive(Clone, Debug)]
+pub struct RoutingFailed {
+    pub iterations: usize,
+    pub overused_nodes: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for RoutingFailed {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "routing failed after {} iterations ({} overused nodes): {}",
+            self.iterations, self.overused_nodes, self.detail
+        )
+    }
+}
+
+/// Map an application vertex's output port index to the IR port-node name.
+pub fn out_port_name(kind: CoreKind, port: u8) -> String {
+    match kind {
+        CoreKind::Pe => format!("data_out_{port}"),
+        CoreKind::Mem => format!("rdata_{port}"),
+        CoreKind::Io => "io_out".to_string(),
+    }
+}
+
+/// Map an application vertex's input port index to the IR port-node name.
+pub fn in_port_name(kind: CoreKind, port: u8) -> String {
+    match kind {
+        CoreKind::Pe => format!("data_in_{port}"),
+        CoreKind::Mem => format!("wdata_{port}"),
+        CoreKind::Io => "io_in".to_string(),
+    }
+}
+
+/// Resolve a net terminal to its routing-graph port node.
+fn terminal_node(
+    g: &RoutingGraph,
+    app: &AppGraph,
+    placement: &Placement,
+    vertex: AppNodeId,
+    port: u8,
+    input: bool,
+) -> Result<NodeId, String> {
+    let (x, y) = placement.of(vertex);
+    let kind = app.node(vertex).op.core_kind();
+    let name =
+        if input { in_port_name(kind, port) } else { out_port_name(kind, port) };
+    g.find_port(x, y, &name, input).ok_or_else(|| {
+        format!("no port node `{name}` at ({x},{y}) for vertex `{}`", app.node(vertex).name)
+    })
+}
+
+/// f64 ordered for the binary heap (min-heap via Reverse).
+#[derive(PartialEq)]
+struct Cost(f64);
+impl Eq for Cost {}
+impl PartialOrd for Cost {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Cost {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+struct RouterState<'a> {
+    g: &'a RoutingGraph,
+    params: RouterParams,
+    /// Present occupancy per node (net count).
+    occ: Vec<u16>,
+    /// Historical congestion per node.
+    hist: Vec<f64>,
+    /// Tiles occupied by app vertices (for the unused-tile penalty).
+    used_tiles: Vec<bool>,
+    ic_width: usize,
+    /// Base cost per node: 1 + delay share.
+    base: Vec<f64>,
+    pres_fac: f64,
+    // --- Flat per-node lookups (cache-friendly; avoid deref of fat
+    // `Node` structs in the inner loop) ---------------------------------
+    /// Tile coordinates per node.
+    nx: Vec<f32>,
+    ny: Vec<f32>,
+    /// Port-node flags (ports may not be route intermediates).
+    is_port: Vec<bool>,
+    /// Flattened tile index per node.
+    tile_of: Vec<u32>,
+    // --- A* scratch arenas (allocated once, reset via `touched`) -------
+    /// Tentative cost per node (`f64::INFINITY` = unvisited).
+    dist: Vec<f64>,
+    /// Predecessor per node (u32::MAX = none / search root).
+    prev: Vec<u32>,
+    /// Is this node part of the current net's tree?
+    in_tree: Vec<bool>,
+    /// Nodes whose scratch entries need resetting after this search.
+    touched: Vec<u32>,
+    /// Reusable A* frontier (cleared per search, capacity persists).
+    pq: std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>,
+}
+
+impl<'a> RouterState<'a> {
+    fn node_cost(&self, n: NodeId, crit: f64) -> f64 {
+        let i = n.index();
+        let over = self.occ[i] as f64; // occupancy *before* adding us
+        let pres = 1.0 + self.pres_fac * over;
+        let unused = if self.used_tiles[self.tile_of[i] as usize] {
+            0.0
+        } else {
+            self.params.unused_tile_penalty
+        };
+        // Timing-criticality blend: critical nets weight delay, relaxed
+        // nets weight congestion (negotiation share).
+        let cong_share = (self.base[i] + unused) * pres + self.hist[i];
+        let delay_share = self.base[i];
+        crit * delay_share + (1.0 - crit) * cong_share
+    }
+}
+
+/// Route all nets of a placed application on the `bit_width` layer.
+pub fn route(
+    ic: &Interconnect,
+    app: &AppGraph,
+    placement: &Placement,
+    bit_width: u8,
+    params: &RouterParams,
+) -> Result<RoutingResult, RoutingFailed> {
+    let g = ic.graph(bit_width);
+    let nets = app.nets();
+
+    // Pre-resolve terminals.
+    let mut terminals: Vec<(NodeId, Vec<NodeId>)> = Vec::with_capacity(nets.len());
+    for net in &nets {
+        let src = terminal_node(g, app, placement, net.src, net.src_port, false)
+            .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
+        let sinks = net
+            .sinks
+            .iter()
+            .map(|&(s, p)| terminal_node(g, app, placement, s, p, true))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
+        terminals.push((src, sinks));
+    }
+
+    let mut used_tiles = vec![false; ic.width as usize * ic.height as usize];
+    for (id, _) in app.iter() {
+        let (x, y) = placement.of(id);
+        used_tiles[y as usize * ic.width as usize + x as usize] = true;
+    }
+
+    let base: Vec<f64> = g
+        .ids()
+        .map(|id| {
+            let n = g.node(id);
+            let wire_out: u32 =
+                g.fan_out(id).iter().map(|&s| g.wire_delay(id, s)).max().unwrap_or(0);
+            1.0 + params.delay_weight * (n.delay_ps + wire_out) as f64 / 1000.0
+        })
+        .collect();
+
+    let mut st = RouterState {
+        g,
+        params: *params,
+        occ: vec![0; g.len()],
+        hist: vec![0.0; g.len()],
+        used_tiles,
+        ic_width: ic.width as usize,
+        base,
+        pres_fac: params.pres_fac_init,
+        nx: g.ids().map(|id| g.node(id).x as f32).collect(),
+        ny: g.ids().map(|id| g.node(id).y as f32).collect(),
+        is_port: g.ids().map(|id| g.node(id).kind.is_port()).collect(),
+        tile_of: g
+            .ids()
+            .map(|id| {
+                let n = g.node(id);
+                n.y as u32 * ic.width as u32 + n.x as u32
+            })
+            .collect(),
+        dist: vec![f64::INFINITY; g.len()],
+        prev: vec![u32::MAX; g.len()],
+        in_tree: vec![false; g.len()],
+        touched: Vec::with_capacity(256),
+        pq: std::collections::BinaryHeap::with_capacity(1024),
+    };
+
+    // Route-order: big nets first (more sinks, larger bbox).
+    let mut order: Vec<usize> = (0..nets.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(nets[i].sinks.len()));
+
+    let mut trees: Vec<Option<RouteTree>> = vec![None; nets.len()];
+    let mut crit = vec![0.0f64; nets.len()];
+
+    for iter in 0..params.max_iterations {
+        // Rip up everything (occupancies reset; history persists).
+        for o in st.occ.iter_mut() {
+            *o = 0;
+        }
+
+        for &ni in &order {
+            let (src, sinks) = &terminals[ni];
+            let tree = route_net(&mut st, *src, sinks, crit[ni]).map_err(|detail| {
+                RoutingFailed { iterations: iter, overused_nodes: 0, detail }
+            })?;
+            // Mark occupancy for this net's nodes (once per net).
+            for &n in &tree_nodes(&tree) {
+                st.occ[n.index()] += 1;
+            }
+            trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
+        }
+
+        // Count overuse (port nodes are per-net by construction; all
+        // nodes have capacity 1).
+        let overused: Vec<usize> =
+            (0..g.len()).filter(|&i| st.occ[i] > 1).collect();
+        if overused.is_empty() {
+            let trees: Vec<RouteTree> = trees.into_iter().map(Option::unwrap).collect();
+            let nodes_used = trees.iter().map(|t| t.nodes().len()).sum();
+            return Ok(RoutingResult { trees, iterations: iter + 1, nodes_used });
+        }
+
+        // Negotiate: bump history on overused nodes, raise pressure.
+        for &i in &overused {
+            st.hist[i] += params.hist_incr * (st.occ[i] as f64 - 1.0);
+        }
+        st.pres_fac *= params.pres_fac_mult;
+
+        // Update criticalities from current route delays.
+        let delays: Vec<f64> = trees
+            .iter()
+            .map(|t| {
+                t.as_ref()
+                    .map(|t| {
+                        t.sink_paths
+                            .iter()
+                            .map(|p| path_delay(g, p))
+                            .fold(0.0f64, f64::max)
+                    })
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let dmax = delays.iter().copied().fold(1e-9, f64::max);
+        for i in 0..nets.len() {
+            crit[i] = (delays[i] / dmax).clamp(0.0, 0.95);
+        }
+    }
+
+    let overused = st.occ.iter().filter(|&&o| o > 1).count();
+    Err(RoutingFailed {
+        iterations: params.max_iterations,
+        overused_nodes: overused,
+        detail: "congestion did not resolve".into(),
+    })
+}
+
+/// Delay along one path (node delays + wire delays).
+pub fn path_delay(g: &RoutingGraph, path: &[NodeId]) -> f64 {
+    let mut d = 0.0;
+    for (i, &n) in path.iter().enumerate() {
+        d += g.node(n).delay_ps as f64;
+        if i + 1 < path.len() {
+            d += g.wire_delay(n, path[i + 1]) as f64;
+        }
+    }
+    d
+}
+
+fn tree_nodes(paths: &[Vec<NodeId>]) -> Vec<NodeId> {
+    let mut v: Vec<NodeId> = paths.iter().flatten().copied().collect();
+    v.sort();
+    v.dedup();
+    v
+}
+
+/// Route one net: grow a Steiner tree by A*-ing from the current tree to
+/// each sink (nearest sink first). Uses the arena scratch in
+/// [`RouterState`] — no per-net allocation beyond the result paths.
+fn route_net(
+    st: &mut RouterState,
+    src: NodeId,
+    sinks: &[NodeId],
+    crit: f64,
+) -> Result<Vec<Vec<NodeId>>, String> {
+    let g = st.g;
+    // Order sinks by manhattan distance from source.
+    let (sx, sy) = {
+        let n = g.node(src);
+        (n.x as i32, n.y as i32)
+    };
+    let mut order: Vec<usize> = (0..sinks.len()).collect();
+    order.sort_by_key(|&i| {
+        let n = g.node(sinks[i]);
+        (n.x as i32 - sx).abs() + (n.y as i32 - sy).abs()
+    });
+
+    let mut tree: Vec<NodeId> = vec![src];
+    st.in_tree[src.index()] = true;
+    let mut paths: Vec<Vec<NodeId>> = vec![Vec::new(); sinks.len()];
+
+    let mut result = Ok(());
+    for &si in &order {
+        let sink = sinks[si];
+        match astar(st, &tree, sink, crit) {
+            Some(path) => {
+                for &n in &path {
+                    if !st.in_tree[n.index()] {
+                        st.in_tree[n.index()] = true;
+                        tree.push(n);
+                    }
+                }
+                paths[si] = path;
+            }
+            None => {
+                result =
+                    Err(format!("no path to sink {}", g.node(sink).qualified_name()));
+                break;
+            }
+        }
+    }
+    // Reset tree membership for the next net.
+    for &n in &tree {
+        st.in_tree[n.index()] = false;
+    }
+    result?;
+
+    // Rebuild each sink path so it starts at the net source (A* from the
+    // tree may start mid-tree; graft with recorded prefixes).
+    Ok(stitch_paths(src, sinks, paths))
+}
+
+/// A* from any node of `tree` (cost 0) to `sink`, using (and resetting)
+/// the arena scratch in `st`.
+fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Option<Vec<NodeId>> {
+    use std::cmp::Reverse;
+
+    let g = st.g;
+    let (tx, ty) = (st.nx[sink.index()], st.ny[sink.index()]);
+    // Admissible-ish heuristic: manhattan distance x a conservative
+    // per-hop lower bound (all node base costs are >= 1.0).
+    let nx = &st.nx;
+    let ny = &st.ny;
+    let h = move |n: NodeId| {
+        ((nx[n.index()] - tx).abs() + (ny[n.index()] - ty).abs()) as f64 * 0.9
+    };
+
+    let mut pq = std::mem::take(&mut st.pq);
+    pq.clear();
+    for &t in tree {
+        st.dist[t.index()] = 0.0;
+        st.prev[t.index()] = u32::MAX;
+        st.touched.push(t.0);
+        pq.push((Reverse(Cost(h(t))), t));
+    }
+
+    let mut found = false;
+    while let Some((Reverse(Cost(f)), n)) = pq.pop() {
+        let d = st.dist[n.index()];
+        if f > d + h(n) + 1e-9 {
+            continue; // stale entry
+        }
+        if n == sink {
+            found = true;
+            break;
+        }
+        for &succ in g.fan_out(n) {
+            // Sinks of other nets (ports) are not usable as intermediates:
+            // only the target sink's port node may terminate the search.
+            if st.is_port[succ.index()] && succ != sink {
+                continue;
+            }
+            let nd = d + st.node_cost(succ, crit);
+            let si = succ.index();
+            if nd < st.dist[si] - 1e-12 {
+                if st.dist[si].is_infinite() {
+                    st.touched.push(succ.0);
+                }
+                st.dist[si] = nd;
+                st.prev[si] = n.0;
+                pq.push((Reverse(Cost(nd + h(succ))), succ));
+            }
+        }
+    }
+
+    let path = if found {
+        // Walk back to a tree node (prev == MAX).
+        let mut path = vec![sink];
+        let mut cur = sink;
+        while st.prev[cur.index()] != u32::MAX {
+            cur = NodeId(st.prev[cur.index()]);
+            path.push(cur);
+        }
+        path.reverse();
+        Some(path)
+    } else {
+        None
+    };
+
+    // Reset scratch for the next search; return the heap's capacity.
+    for &t in &st.touched {
+        st.dist[t as usize] = f64::INFINITY;
+        st.prev[t as usize] = u32::MAX;
+    }
+    st.touched.clear();
+    st.pq = pq;
+    path
+}
+
+/// Make every sink path start at the true source by grafting tree
+/// prefixes together.
+fn stitch_paths(src: NodeId, sinks: &[NodeId], paths: Vec<Vec<NodeId>>) -> Vec<Vec<NodeId>> {
+    // Build child->parent map over the union of all paths.
+    let mut parent: HashMap<NodeId, NodeId> = HashMap::new();
+    for p in &paths {
+        for w in p.windows(2) {
+            parent.entry(w[1]).or_insert(w[0]);
+        }
+    }
+    sinks
+        .iter()
+        .map(|&sink| {
+            let mut path = vec![sink];
+            let mut cur = sink;
+            let mut guard = 0;
+            while cur != src {
+                let p = *parent.get(&cur).expect("path must reach source");
+                path.push(p);
+                cur = p;
+                guard += 1;
+                assert!(guard < 1_000_000, "cycle in stitched path");
+            }
+            path.reverse();
+            path
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig, SbTopology};
+    use crate::pnr::pack::pack;
+    use crate::pnr::place::{
+        build_global_problem, initial_positions, legalize, GlobalPlacer, NativePlacer,
+    };
+
+    fn ic_with(topo: SbTopology, tracks: u16) -> Interconnect {
+        create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: tracks,
+            mem_column_period: 3,
+            sb_topology: topo,
+            reg_density: 0,
+            ..Default::default()
+        })
+    }
+
+    fn place(app_name: &str, ic: &Interconnect) -> (AppGraph, Placement) {
+        let app = apps::suite().into_iter().find(|a| a.name == app_name).unwrap();
+        let packed = pack(&app).app;
+        let (xs, ys) = initial_positions(&packed, ic, 1);
+        let p = build_global_problem(&packed, ic);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs, &ys);
+        let placement = legalize(&packed, ic, &xs, &ys).unwrap();
+        (packed, placement)
+    }
+
+    #[test]
+    fn routes_pointwise_on_wilton() {
+        let ic = ic_with(SbTopology::Wilton, 3);
+        let (app, placement) = place("pointwise", &ic);
+        let r = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
+        assert_eq!(r.trees.len(), app.nets().len());
+        // Every sink path starts at a source port and ends at a sink port.
+        let g = ic.graph(16);
+        for t in &r.trees {
+            for p in &t.sink_paths {
+                assert!(g.node(*p.first().unwrap()).kind.is_port());
+                assert!(g.node(*p.last().unwrap()).kind.is_port());
+                // consecutive nodes are graph edges
+                for w in p.windows(2) {
+                    assert!(g.fan_out(w[0]).contains(&w[1]), "non-edge in path");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn routed_nets_are_node_disjoint() {
+        let ic = ic_with(SbTopology::Wilton, 5);
+        let (app, placement) = place("gaussian", &ic);
+        let r = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
+        let mut seen: HashMap<NodeId, usize> = HashMap::new();
+        for (i, t) in r.trees.iter().enumerate() {
+            for n in t.nodes() {
+                if let Some(&j) = seen.get(&n) {
+                    panic!("node {n} shared by nets {i} and {j}");
+                }
+                seen.insert(n, i);
+            }
+        }
+    }
+
+    #[test]
+    fn wilton_routes_suite_where_disjoint_fails() {
+        // The Fig. 9 result in miniature, on the pinned-output fabric
+        // where each net's starting track is fixed by its driver (the
+        // regime §4.2.1 describes): Wilton escapes the plane at every
+        // turn and routes apps that Disjoint cannot.
+        use crate::dsl::OutputTrackMode;
+        use crate::pnr::flow::{run_flow, FlowParams};
+        use crate::pnr::place::SaParams;
+        let apps: Vec<AppGraph> =
+            vec![crate::apps::matmul(3), crate::apps::harris(), crate::apps::conv5x5()];
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 15, ..Default::default() },
+            ..Default::default()
+        };
+        let count = |topo| {
+            let ic = create_uniform_interconnect(&InterconnectConfig {
+                width: 10,
+                height: 10,
+                num_tracks: 4,
+                mem_column_period: 3,
+                sb_topology: topo,
+                output_tracks: OutputTrackMode::Pinned,
+                ..Default::default()
+            });
+            apps.iter().filter(|a| run_flow(&ic, a, &params).is_ok()).count()
+        };
+        let wilton_ok = count(SbTopology::Wilton);
+        let disjoint_ok = count(SbTopology::Disjoint);
+        assert!(wilton_ok > disjoint_ok, "wilton {wilton_ok} vs disjoint {disjoint_ok}");
+    }
+
+    #[test]
+    fn more_tracks_never_hurt_routability() {
+        let ic3 = ic_with(SbTopology::Wilton, 3);
+        let ic6 = ic_with(SbTopology::Wilton, 6);
+        let (app3, p3) = place("harris", &ic3);
+        let (app6, p6) = place("harris", &ic6);
+        let r3 = route(&ic3, &app3, &p3, 16, &RouterParams::default());
+        let r6 = route(&ic6, &app6, &p6, 16, &RouterParams::default());
+        assert!(r6.is_ok());
+        if let (Ok(r3), Ok(r6)) = (r3, r6) {
+            assert!(r6.iterations <= r3.iterations + 2);
+        }
+    }
+
+    #[test]
+    fn path_delay_accumulates_node_and_wire() {
+        let ic = ic_with(SbTopology::Wilton, 3);
+        let g = ic.graph(16);
+        let (app, placement) = place("pointwise", &ic);
+        let r = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
+        let p = &r.trees[0].sink_paths[0];
+        let d = path_delay(g, p);
+        assert!(d > 0.0);
+        let manual: f64 = p.iter().map(|&n| g.node(n).delay_ps as f64).sum::<f64>()
+            + p.windows(2).map(|w| g.wire_delay(w[0], w[1]) as f64).sum::<f64>();
+        assert_eq!(d, manual);
+    }
+}

@@ -1,0 +1,248 @@
+//! Static timing analysis and the application run-time model.
+//!
+//! The paper's runtime experiments (Figs. 11/14/15) rest on the chain:
+//! routability → shorter routes → shorter critical path → higher clock →
+//! lower application run time. This module computes the post-route
+//! critical path over the combined application + routed-interconnect
+//! timing graph, and converts it into a run-time figure for a fixed
+//! streaming workload.
+
+use std::collections::HashMap;
+
+use crate::ir::Interconnect;
+
+use super::app::{AppGraph, AppNodeId, AppOp};
+use super::pack::PackedApp;
+use super::route::{path_delay, RoutingResult};
+
+/// Timing report for one placed-and-routed application.
+#[derive(Clone, Debug)]
+pub struct TimingReport {
+    /// Longest register-to-register combinational path, ps.
+    pub critical_path_ps: f64,
+    /// Achievable clock period (critical path + margin), ps.
+    pub period_ps: f64,
+    /// Pipeline latency in cycles (longest sequential chain).
+    pub latency_cycles: usize,
+    /// Modeled run time for `workload_items` streamed elements, ns.
+    pub runtime_ns: f64,
+    pub workload_items: usize,
+}
+
+/// Clock margin (setup + clock uncertainty), ps.
+const CLOCK_MARGIN_PS: f64 = 60.0;
+
+/// Is this vertex a sequential element (breaks combinational paths)?
+fn is_sequential(op: &AppOp) -> bool {
+    matches!(op, AppOp::Mem(_) | AppOp::Reg)
+}
+
+/// Compute STA over the packed app + routing result.
+///
+/// Arrival semantics: sequential vertices launch at `clk_q`; combinational
+/// vertices add their core delay; each routed edge adds its sink path's
+/// interconnect delay; packed input registers (from packing) also break
+/// paths at the consumer's input pin.
+pub fn analyze(
+    ic: &Interconnect,
+    packed: &PackedApp,
+    routing: &RoutingResult,
+    bit_width: u8,
+    workload_items: usize,
+) -> TimingReport {
+    let app = &packed.app;
+    let g = ic.graph(bit_width);
+
+    // Route delay per (src, src_port, dst, dst_port).
+    let mut route_delay: HashMap<(AppNodeId, u8, AppNodeId, u8), f64> = HashMap::new();
+    for tree in &routing.trees {
+        for (k, &(dst, dst_port)) in tree.net.sinks.iter().enumerate() {
+            let d = path_delay(g, &tree.sink_paths[k]);
+            route_delay.insert((tree.net.src, tree.net.src_port, dst, dst_port), d);
+        }
+    }
+
+    let registered_inputs: std::collections::HashSet<(AppNodeId, u8)> =
+        packed.packed_regs.iter().copied().collect();
+
+    // Topological order (apps are DAGs; on a cycle we fall back to
+    // iteration-bounded relaxation).
+    let order = topo_order(app);
+
+    let clk_q = 80.0; // register/core launch delay, ps
+    let mut arrival: Vec<f64> = vec![0.0; app.len()];
+    let mut critical = 0.0f64;
+
+    for &v in &order {
+        let node = app.node(v);
+        let mut in_arrival = 0.0f64;
+        for e in app.inputs_of(v) {
+            let src_arr = arrival[e.src.index()];
+            let rd = route_delay
+                .get(&(e.src, e.src_port, e.dst, e.dst_port))
+                .copied()
+                .unwrap_or(0.0);
+            let at_pin = src_arr + rd;
+            // A packed input register terminates the path at the pin.
+            if registered_inputs.contains(&(v, e.dst_port)) {
+                critical = critical.max(at_pin);
+            } else {
+                in_arrival = in_arrival.max(at_pin);
+            }
+        }
+        if is_sequential(&node.op) {
+            // Path ends at the sequential element's D pin.
+            critical = critical.max(in_arrival);
+            arrival[v.index()] = clk_q;
+        } else {
+            let delay = core_delay(ic, node);
+            arrival[v.index()] = if app.inputs_of(v).is_empty() {
+                clk_q + delay
+            } else {
+                in_arrival + delay
+            };
+            critical = critical.max(arrival[v.index()]);
+        }
+    }
+
+    // Latency: longest chain of sequential elements (cycles of pipeline
+    // fill before the first output).
+    let mut depth: Vec<usize> = vec![0; app.len()];
+    for &v in &order {
+        let node = app.node(v);
+        let in_depth = app
+            .inputs_of(v)
+            .iter()
+            .map(|e| depth[e.src.index()] + registered_inputs.contains(&(v, e.dst_port)) as usize)
+            .max()
+            .unwrap_or(0);
+        depth[v.index()] = in_depth + is_sequential(&node.op) as usize;
+    }
+    let latency_cycles = depth.iter().copied().max().unwrap_or(0).max(1);
+
+    let period_ps = critical + CLOCK_MARGIN_PS;
+    let cycles = workload_items + latency_cycles;
+    TimingReport {
+        critical_path_ps: critical,
+        period_ps,
+        latency_cycles,
+        runtime_ns: period_ps * cycles as f64 / 1000.0,
+        workload_items,
+    }
+}
+
+fn core_delay(ic: &Interconnect, node: &super::app::AppNode) -> f64 {
+    // Core delays are tile attributes; use the spec of the core kind (all
+    // tiles of a kind share a spec in uniform interconnects).
+    match node.op {
+        AppOp::Alu(_) => {
+            ic.tiles
+                .iter()
+                .find(|t| t.core.kind == crate::ir::CoreKind::Pe)
+                .map(|t| t.core.delay_ps as f64)
+                .unwrap_or(640.0)
+        }
+        _ => 0.0,
+    }
+}
+
+/// Kahn topological sort; on a cyclic graph returns vertices in input
+/// order for the cyclic remainder (bounded relaxation semantics).
+fn topo_order(app: &AppGraph) -> Vec<AppNodeId> {
+    let mut in_deg: Vec<usize> = vec![0; app.len()];
+    for e in app.edges() {
+        in_deg[e.dst.index()] += 1;
+    }
+    let mut queue: Vec<AppNodeId> = app.ids().filter(|v| in_deg[v.index()] == 0).collect();
+    let mut order = Vec::with_capacity(app.len());
+    let mut qi = 0;
+    while qi < queue.len() {
+        let v = queue[qi];
+        qi += 1;
+        order.push(v);
+        for e in app.outputs_of(v) {
+            in_deg[e.dst.index()] -= 1;
+            if in_deg[e.dst.index()] == 0 {
+                queue.push(e.dst);
+            }
+        }
+    }
+    if order.len() < app.len() {
+        for v in app.ids() {
+            if !order.contains(&v) {
+                order.push(v);
+            }
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+    use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use crate::pnr::pack::pack;
+    use crate::pnr::place::{
+        build_global_problem, initial_positions, legalize, GlobalPlacer, NativePlacer,
+    };
+    use crate::pnr::route::{route, RouterParams};
+
+    fn pnr(name: &str) -> (Interconnect, PackedApp, RoutingResult) {
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 5,
+            mem_column_period: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let app = apps::suite().into_iter().find(|a| a.name == name).unwrap();
+        let packed = pack(&app);
+        let (xs, ys) = initial_positions(&packed.app, &ic, 1);
+        let p = build_global_problem(&packed.app, &ic);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs, &ys);
+        let placement = legalize(&packed.app, &ic, &xs, &ys).unwrap();
+        let routing = route(&ic, &packed.app, &placement, 16, &RouterParams::default()).unwrap();
+        (ic, packed, routing)
+    }
+
+    #[test]
+    fn critical_path_positive_and_bounded() {
+        let (ic, packed, routing) = pnr("gaussian");
+        let t = analyze(&ic, &packed, &routing, 16, 4096);
+        assert!(t.critical_path_ps > 0.0);
+        // Sanity: no combinational path should exceed a few ns on an 8x8.
+        assert!(t.critical_path_ps < 20_000.0, "{}", t.critical_path_ps);
+        assert_eq!(t.period_ps, t.critical_path_ps + CLOCK_MARGIN_PS);
+    }
+
+    #[test]
+    fn runtime_scales_with_workload() {
+        let (ic, packed, routing) = pnr("pointwise");
+        let t1 = analyze(&ic, &packed, &routing, 16, 1024);
+        let t2 = analyze(&ic, &packed, &routing, 16, 4096);
+        assert!(t2.runtime_ns > t1.runtime_ns * 3.0);
+        assert_eq!(t1.period_ps, t2.period_ps);
+    }
+
+    #[test]
+    fn latency_reflects_pipeline_depth() {
+        let (ic, packed, routing) = pnr("gaussian");
+        let t = analyze(&ic, &packed, &routing, 16, 64);
+        // gaussian has linebuffer chains and register windows: at least
+        // a few sequential stages.
+        assert!(t.latency_cycles >= 2, "{}", t.latency_cycles);
+    }
+
+    #[test]
+    fn packed_registers_cut_paths() {
+        let (ic, packed, routing) = pnr("gaussian");
+        let with_regs = analyze(&ic, &packed, &routing, 16, 64);
+        // Strip the packed-register records: paths lengthen.
+        let mut no_regs = packed.clone();
+        no_regs.packed_regs.clear();
+        let without = analyze(&ic, &no_regs, &routing, 16, 64);
+        assert!(without.critical_path_ps >= with_regs.critical_path_ps);
+    }
+}

@@ -1,0 +1,304 @@
+//! PJRT runtime: execute the AOT-compiled JAX/Pallas placement artifacts
+//! from the Rust hot path.
+//!
+//! `make artifacts` lowers `python/compile/model.py` (which calls the L1
+//! Pallas kernel) to HLO text; this module loads the text with
+//! `HloModuleProto::from_text_file`, compiles it once on the PJRT CPU
+//! client, and drives the optimizer loop from
+//! [`crate::pnr::place::GlobalPlacer`]'s interface. Python never runs at
+//! request time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::pnr::place::{GlobalPlacer, GlobalProblem};
+
+/// Shape contract of the exported artifact (must match
+/// `python/compile/model.py` and `artifacts/placer_meta.txt`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArtifactMeta {
+    pub pad_n: usize,
+    pub pad_m: usize,
+    pub pad_k: usize,
+    pub inner_steps: usize,
+}
+
+impl ArtifactMeta {
+    /// Parse `placer_meta.txt` (flat `key = value` lines).
+    pub fn from_file(path: &Path) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let mut meta = ArtifactMeta { pad_n: 0, pad_m: 0, pad_k: 0, inner_steps: 0 };
+        for line in text.lines() {
+            let Some((k, v)) = line.split_once('=') else { continue };
+            let v: usize = v.trim().parse().with_context(|| format!("bad meta line `{line}`"))?;
+            match k.trim() {
+                "pad_n" => meta.pad_n = v,
+                "pad_m" => meta.pad_m = v,
+                "pad_k" => meta.pad_k = v,
+                "inner_steps" => meta.inner_steps = v,
+                _ => {}
+            }
+        }
+        if meta.pad_n == 0 || meta.pad_m == 0 || meta.pad_k == 0 || meta.inner_steps == 0 {
+            bail!("incomplete artifact meta in {}", path.display());
+        }
+        Ok(meta)
+    }
+}
+
+/// The PJRT-backed global placer (drop-in for `NativePlacer`).
+pub struct PjrtPlacer {
+    client: xla::PjRtClient,
+    step_exe: xla::PjRtLoadedExecutable,
+    meta: ArtifactMeta,
+    /// Total optimizer iterations per `optimize` call (rounded up to a
+    /// multiple of `meta.inner_steps`).
+    pub iters: usize,
+    /// Hyperparameters fed to the artifact: (lr, momentum, lambda_mem).
+    pub hyper: (f32, f32, f32),
+}
+
+/// Default artifacts directory, overridable with `CANAL_ARTIFACTS`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("CANAL_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl PjrtPlacer {
+    /// Load and compile the step artifact from a directory.
+    pub fn load(dir: &Path) -> Result<PjrtPlacer> {
+        let meta = ArtifactMeta::from_file(&dir.join("placer_meta.txt"))?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let step_path = dir.join("placer_step.hlo.txt");
+        let proto = xla::HloModuleProto::from_text_file(
+            step_path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing {}", step_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let step_exe = client.compile(&comp).context("compiling placer_step")?;
+        Ok(PjrtPlacer { client, step_exe, meta, iters: 150, hyper: (0.12, 0.9, 0.4) })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default() -> Result<PjrtPlacer> {
+        Self::load(&artifacts_dir())
+    }
+
+    pub fn meta(&self) -> ArtifactMeta {
+        self.meta
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Pad a problem into artifact shapes.
+    fn pad_problem(&self, p: &GlobalProblem) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+        let m = self.meta;
+        if p.n_nodes > m.pad_n {
+            bail!("problem has {} nodes > artifact pad {}", p.n_nodes, m.pad_n);
+        }
+        if p.pins.len() > m.pad_m {
+            bail!("problem has {} nets > artifact pad {}", p.pins.len(), m.pad_m);
+        }
+        let mut pins = vec![-1i32; m.pad_m * m.pad_k];
+        for (i, net) in p.pins.iter().enumerate() {
+            if net.len() > m.pad_k {
+                bail!("net {i} has {} pins > artifact pad {}", net.len(), m.pad_k);
+            }
+            for (j, &v) in net.iter().enumerate() {
+                pins[i * m.pad_k + j] = v;
+            }
+        }
+        let mut col = vec![0f32; m.pad_n];
+        let mut colm = vec![0f32; m.pad_n];
+        for (i, c) in p.column_pull.iter().enumerate() {
+            if let Some(c) = c {
+                col[i] = *c;
+                colm[i] = 1.0;
+            }
+        }
+        Ok((pins, col, colm))
+    }
+
+    /// One artifact invocation: `inner_steps` optimizer steps.
+    #[allow(clippy::too_many_arguments)]
+    pub fn call_step(
+        &self,
+        xs: &[f32],
+        ys: &[f32],
+        vx: &[f32],
+        vy: &[f32],
+        pins: &[i32],
+        col: &[f32],
+        colm: &[f32],
+        bounds: [f32; 2],
+        hyper: [f32; 3],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let m = self.meta;
+        let args = [
+            xla::Literal::vec1(xs),
+            xla::Literal::vec1(ys),
+            xla::Literal::vec1(vx),
+            xla::Literal::vec1(vy),
+            xla::Literal::vec1(pins).reshape(&[m.pad_m as i64, m.pad_k as i64])?,
+            xla::Literal::vec1(col),
+            xla::Literal::vec1(colm),
+            xla::Literal::vec1(&bounds),
+            xla::Literal::vec1(&hyper),
+        ];
+        let result = self.step_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let (oxs, oys, ovx, ovy) = result.to_tuple4()?;
+        Ok((oxs.to_vec()?, oys.to_vec()?, ovx.to_vec()?, ovy.to_vec()?))
+    }
+}
+
+impl GlobalPlacer for PjrtPlacer {
+    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        let m = self.meta;
+        let (pins, col, colm) = self.pad_problem(p).expect("problem exceeds artifact padding");
+        let mut xs = vec![0f32; m.pad_n];
+        let mut ys = vec![0f32; m.pad_n];
+        xs[..p.n_nodes].copy_from_slice(xs0);
+        ys[..p.n_nodes].copy_from_slice(ys0);
+        let mut vx = vec![0f32; m.pad_n];
+        let mut vy = vec![0f32; m.pad_n];
+        let bounds = [p.width - 1.0, p.height - 1.0];
+        let hyper = [self.hyper.0, self.hyper.1, self.hyper.2];
+
+        let calls = self.iters.div_ceil(m.inner_steps);
+        for _ in 0..calls {
+            let (nxs, nys, nvx, nvy) = self
+                .call_step(&xs, &ys, &vx, &vy, &pins, &col, &colm, bounds, hyper)
+                .expect("artifact execution failed");
+            xs = nxs;
+            ys = nys;
+            vx = nvx;
+            vy = nvy;
+        }
+        xs.truncate(p.n_nodes);
+        ys.truncate(p.n_nodes);
+        (xs, ys)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt-jax-pallas"
+    }
+}
+
+/// Parsed golden test vector dumped by `aot.py`.
+pub struct TestVec {
+    pub fields: std::collections::HashMap<String, Vec<f32>>,
+}
+
+impl TestVec {
+    pub fn from_file(path: &Path) -> Result<TestVec> {
+        let text = std::fs::read_to_string(path)?;
+        let mut fields = std::collections::HashMap::new();
+        for line in text.lines() {
+            let mut it = line.split_whitespace();
+            let Some(name) = it.next() else { continue };
+            let vals: Vec<f32> = it.map(|t| t.parse().unwrap_or(f32::NAN)).collect();
+            fields.insert(name.to_string(), vals);
+        }
+        Ok(TestVec { fields })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pnr::pack::pack;
+    use crate::pnr::place::{build_global_problem, initial_positions, NativePlacer};
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("placer_step.hlo.txt").exists()
+    }
+
+    #[test]
+    fn meta_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = ArtifactMeta::from_file(&artifacts_dir().join("placer_meta.txt")).unwrap();
+        assert!(m.pad_n >= 64 && m.pad_m >= 128 && m.inner_steps >= 1);
+    }
+
+    #[test]
+    fn artifact_matches_python_golden_vector() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let placer = PjrtPlacer::load_default().unwrap();
+        let m = placer.meta();
+        let tv = TestVec::from_file(&artifacts_dir().join("placer_testvec.txt")).unwrap();
+        let f = |k: &str| tv.fields[k].clone();
+        let pins: Vec<i32> = f("in_pins").iter().map(|&v| v as i32).collect();
+        let bounds = [f("in_bounds")[0], f("in_bounds")[1]];
+        let hyper = [f("in_hyper")[0], f("in_hyper")[1], f("in_hyper")[2]];
+        let (xs, ys, vx, vy) = placer
+            .call_step(
+                &f("in_xs"),
+                &f("in_ys"),
+                &f("in_vx"),
+                &f("in_vy"),
+                &pins,
+                &f("in_col"),
+                &f("in_colm"),
+                bounds,
+                hyper,
+            )
+            .unwrap();
+        let check = |got: &[f32], want: &[f32], what: &str| {
+            assert_eq!(got.len(), want.len(), "{what} length");
+            for (i, (g, w)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (g - w).abs() <= 1e-4 * w.abs().max(1.0),
+                    "{what}[{i}]: rust={g} python={w}"
+                );
+            }
+        };
+        check(&xs, &f("out_xs"), "xs");
+        check(&ys, &f("out_ys"), "ys");
+        check(&vx, &f("out_vx"), "vx");
+        check(&vy, &f("out_vy"), "vy");
+        assert_eq!(m.pad_n, xs.len());
+    }
+
+    #[test]
+    fn pjrt_placer_agrees_with_native_on_final_cost() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 3,
+            mem_column_period: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let packed = pack(&crate::apps::harris()).app;
+        let problem = build_global_problem(&packed, &ic);
+        let (xs0, ys0) = initial_positions(&packed, &ic, 11);
+
+        let native = NativePlacer::default();
+        let (nx, ny) = native.optimize(&problem, &xs0, &ys0);
+        let (nc, _, _) = crate::pnr::place::global_cost_grad(&problem, &nx, &ny, 0.4);
+
+        let pjrt = PjrtPlacer::load_default().unwrap();
+        let (px, py) = pjrt.optimize(&problem, &xs0, &ys0);
+        let (pc, _, _) = crate::pnr::place::global_cost_grad(&problem, &px, &py, 0.4);
+
+        // Same objective, same step rule, same budget: final costs must
+        // land close (fp accumulation differences only).
+        assert!((nc - pc).abs() <= 0.05 * nc.abs().max(1.0), "native {nc} vs pjrt {pc}");
+    }
+}

@@ -1,0 +1,18 @@
+//! Simulation of configured fabrics.
+//!
+//! - [`static_sim`] — functional propagation through a configured static
+//!   fabric (used by bitstream checks);
+//! - [`sweep`] — the exhaustive configuration sweep suite of §3.3;
+//! - [`rv_sim`] — cycle-accurate elastic (ready-valid) simulation with
+//!   FIFO backpressure, modeling the NoC backend and the split-FIFO
+//!   optimization.
+
+pub mod noc_sim;
+pub mod rv_sim;
+pub mod static_sim;
+pub mod sweep;
+
+pub use noc_sim::{hotspot_pattern, simulate_app, NocRun, NocSim};
+pub use rv_sim::{channel_capacities, FabricKind, RvSim, SimRun, StallPattern};
+pub use static_sim::{check_routing, StaticSim};
+pub use sweep::{sweep_connections, SweepReport};

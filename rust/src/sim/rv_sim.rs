@@ -1,0 +1,484 @@
+//! Cycle-accurate ready-valid (elastic) simulation.
+//!
+//! Models the statically-configured NoC backend (§3.3): every routed edge
+//! is an elastic channel whose buffering comes from the interconnect
+//! registers the route passes through — none for a static fabric, depth-2
+//! FIFOs in full-FIFO mode, shared split FIFOs in split mode (Fig. 6).
+//! Vertices fire when all inputs are valid and all outputs ready, exactly
+//! the join semantics the ready/valid layers implement in hardware.
+//!
+//! Two invariants matter:
+//! - **elasticity preserves values**: any stall pattern produces the same
+//!   output *sequence* as an unconstrained run (FIFOs only retime);
+//! - **buffering recovers throughput**: unbalanced reconvergent paths and
+//!   bursty sinks run faster with deeper channels — the reason the RV
+//!   backend needs FIFOs at all (Fig. 8's motivation).
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::pnr::app::{AppGraph, AppNodeId, AppOp};
+use crate::pnr::RoutingResult;
+use crate::util::rng::Rng;
+
+/// Which fabric the channels model.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum FabricKind {
+    /// Static interconnect: no elastic buffering (capacity-1 wires).
+    Static,
+    /// Ready-valid with a depth-`d` FIFO at every route register.
+    RvFullFifo { depth: u8 },
+    /// Ready-valid with split FIFOs: each register contributes one entry;
+    /// adjacent pairs chain into depth-2 (Fig. 6).
+    RvSplitFifo,
+}
+
+impl FabricKind {
+    /// Channel capacity for a route that crosses `regs` register nodes.
+    pub fn capacity(self, regs: usize) -> usize {
+        match self {
+            FabricKind::Static => 1,
+            FabricKind::RvFullFifo { depth } => 1 + regs * depth as usize,
+            FabricKind::RvSplitFifo => 1 + regs,
+        }
+    }
+
+    /// Extra combinational delay (ps) from chained split-FIFO control:
+    /// "these control signals cannot be registered at the tile boundary;
+    /// the longer the FIFO is chained, the longer the combinational delay"
+    /// (§3.3). `chain` = longest register chain on any route.
+    pub fn period_penalty_ps(self, chain: usize) -> f64 {
+        match self {
+            FabricKind::RvSplitFifo => 35.0 * chain.saturating_sub(1) as f64,
+            _ => 0.0,
+        }
+    }
+}
+
+/// Stall model applied to stream sinks (downstream backpressure).
+#[derive(Clone, Copy, Debug)]
+pub enum StallPattern {
+    None,
+    /// Sink accepts `accept` cycles then stalls `stall` cycles.
+    Bursty { accept: u32, stall: u32 },
+    /// Random stalls with probability `p` (deterministic seed).
+    Random { p: f64, seed: u64 },
+}
+
+/// Result of a simulation run.
+#[derive(Clone, Debug)]
+pub struct SimRun {
+    /// Output token sequence per stream-out vertex (sorted by name).
+    pub outputs: HashMap<String, Vec<i64>>,
+    pub cycles: usize,
+    pub tokens: usize,
+}
+
+/// Per-edge channel capacities, derived from a routing result (registers
+/// crossed per sink path) or uniform for un-routed simulations.
+pub fn channel_capacities(
+    app: &AppGraph,
+    routing: Option<(&crate::ir::Interconnect, u8, &RoutingResult)>,
+    fabric: FabricKind,
+) -> HashMap<(AppNodeId, u8, AppNodeId, u8), usize> {
+    let mut caps = HashMap::new();
+    match routing {
+        Some((ic, bw, routing)) => {
+            let g = ic.graph(bw);
+            for tree in &routing.trees {
+                for (k, &(dst, dport)) in tree.net.sinks.iter().enumerate() {
+                    let regs = tree.sink_paths[k]
+                        .iter()
+                        .filter(|&&n| g.node(n).kind.is_register())
+                        .count();
+                    caps.insert(
+                        (tree.net.src, tree.net.src_port, dst, dport),
+                        fabric.capacity(regs),
+                    );
+                }
+            }
+        }
+        None => {
+            for e in app.edges() {
+                caps.insert((e.src, e.src_port, e.dst, e.dst_port), fabric.capacity(1));
+            }
+        }
+    }
+    caps
+}
+
+struct Channel {
+    cap: usize,
+    q: VecDeque<i64>,
+}
+
+/// The elastic dataflow simulator.
+pub struct RvSim<'a> {
+    app: &'a AppGraph,
+    /// channel index: (src, sport, dst, dport) -> Channel
+    channels: HashMap<(AppNodeId, u8, AppNodeId, u8), Channel>,
+    /// MAC accumulators and linebuffer delay lines.
+    state: HashMap<AppNodeId, VecDeque<i64>>,
+    input_stream: Vec<i64>,
+    /// Next input index per stream-in vertex.
+    in_pos: HashMap<AppNodeId, usize>,
+    /// Tokens produced this cycle, visible next cycle (1-cycle stages).
+    pending: Vec<((AppNodeId, u8, AppNodeId, u8), i64)>,
+    /// Staged push counts per channel (for capacity checks within the
+    /// current cycle).
+    staged: HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
+    /// Linebuffer depth: the row stride of the streamed image.
+    pub linebuffer_delay: usize,
+}
+
+/// Default linebuffer delay in tokens (a "row" of the modeled image).
+pub const DEFAULT_LINEBUFFER_DELAY: usize = 8;
+
+impl<'a> RvSim<'a> {
+    pub fn new(
+        app: &'a AppGraph,
+        caps: &HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
+        input_stream: Vec<i64>,
+    ) -> Self {
+        let mut channels = HashMap::new();
+        for e in app.edges() {
+            let key = (e.src, e.src_port, e.dst, e.dst_port);
+            let cap = caps.get(&key).copied().unwrap_or(1);
+            channels.insert(key, Channel { cap, q: VecDeque::new() });
+        }
+        RvSim {
+            app,
+            channels,
+            state: HashMap::new(),
+            input_stream,
+            in_pos: HashMap::new(),
+            pending: Vec::new(),
+            staged: HashMap::new(),
+            linebuffer_delay: DEFAULT_LINEBUFFER_DELAY,
+        }
+    }
+
+    fn stage(&mut self, key: (AppNodeId, u8, AppNodeId, u8), tok: i64) {
+        self.pending.push((key, tok));
+        *self.staged.entry(key).or_insert(0) += 1;
+    }
+
+    fn channel_ready(&self, key: &(AppNodeId, u8, AppNodeId, u8)) -> bool {
+        let ch = &self.channels[key];
+        ch.q.len() + self.staged.get(key).copied().unwrap_or(0) < ch.cap
+    }
+
+    fn out_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
+        self.app
+            .outputs_of(v)
+            .iter()
+            .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
+            .collect()
+    }
+
+    fn in_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
+        self.app
+            .inputs_of(v)
+            .iter()
+            .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
+            .collect()
+    }
+
+    /// Run until every stream-out vertex has collected `n_tokens` or
+    /// `max_cycles` elapse.
+    pub fn run(&mut self, n_tokens: usize, max_cycles: usize, stall: StallPattern) -> SimRun {
+        let sinks: Vec<AppNodeId> = self
+            .app
+            .iter()
+            .filter(|(_, n)| matches!(&n.op, AppOp::Mem(r) if r == "stream_out"))
+            .map(|(id, _)| id)
+            .collect();
+        let mut outputs: HashMap<String, Vec<i64>> =
+            sinks.iter().map(|&s| (self.app.node(s).name.clone(), Vec::new())).collect();
+        let mut rng = Rng::new(match stall {
+            StallPattern::Random { seed, .. } => seed,
+            _ => 0,
+        });
+
+        let order: Vec<AppNodeId> = self.app.ids().collect();
+        let mut cycles = 0usize;
+        while cycles < max_cycles
+            && outputs.values().any(|v| v.len() < n_tokens)
+        {
+            // Sink acceptance this cycle.
+            let sink_ready = match stall {
+                StallPattern::None => true,
+                StallPattern::Bursty { accept, stall } => {
+                    (cycles as u32) % (accept + stall) < accept
+                }
+                StallPattern::Random { p, .. } => rng.f64() >= p,
+            };
+
+            // Two-phase update: decide fires on the pre-cycle state.
+            // (Vertices read channel occupancy as of cycle start; pushes
+            // land visible next cycle — modeled by draining *then*
+            // firing producers in reverse topological order.)
+            for &v in order.iter() {
+                let node = self.app.node(v);
+                match &node.op {
+                    AppOp::Mem(role) if role == "stream_out" => {
+                        if !sink_ready {
+                            continue;
+                        }
+                        let keys = self.in_keys(v);
+                        if keys.is_empty() {
+                            continue;
+                        }
+                        // Accept one token per input channel per cycle.
+                        if keys.iter().all(|k| !self.channels[k].q.is_empty()) {
+                            let tok = self.channels.get_mut(&keys[0]).unwrap().q.pop_front().unwrap();
+                            for k in &keys[1..] {
+                                self.channels.get_mut(k).unwrap().q.pop_front();
+                            }
+                            outputs.get_mut(&node.name).unwrap().push(tok);
+                        }
+                    }
+                    _ => {}
+                }
+            }
+
+            for &v in order.iter() {
+                let node = self.app.node(v);
+                let outs = self.out_keys(v);
+                if outs.is_empty() {
+                    continue; // sinks handled above
+                }
+                let outs_ready = outs.iter().all(|k| self.channel_ready(k));
+                if !outs_ready {
+                    continue;
+                }
+                match &node.op {
+                    AppOp::Mem(role) if role == "stream_in" => {
+                        let pos = self.in_pos.entry(v).or_insert(0);
+                        if *pos < self.input_stream.len() {
+                            let tok = self.input_stream[*pos];
+                            *pos += 1;
+                            for k in &outs {
+                                self.stage(*k, tok);
+                            }
+                        }
+                    }
+                    AppOp::Mem(role) if role == "linebuffer" => {
+                        let ins = self.in_keys(v);
+                        if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
+                            let tok =
+                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
+                            let delay = self.linebuffer_delay;
+                            let line = self.state.entry(v).or_default();
+                            line.push_back(tok);
+                            let out_tok = if line.len() > delay {
+                                line.pop_front().unwrap()
+                            } else {
+                                0 // priming zeros
+                            };
+                            for k in &outs {
+                                self.stage(*k, out_tok);
+                            }
+                        }
+                    }
+                    AppOp::Alu(op) => {
+                        let ins = self.in_keys(v);
+                        if !ins.is_empty()
+                            && ins.iter().all(|k| !self.channels[k].q.is_empty())
+                        {
+                            let args: Vec<i64> = ins
+                                .iter()
+                                .map(|k| self.channels.get_mut(k).unwrap().q.pop_front().unwrap())
+                                .collect();
+                            let val = self.eval_alu(v, op, &args);
+                            for k in &outs {
+                                self.stage(*k, val);
+                            }
+                        }
+                    }
+                    AppOp::Reg => {
+                        // A register is a 1-token delay line: out[i] =
+                        // in[i-1], with a zero priming token — this is
+                        // what makes stencil window registers select the
+                        // previous pixel column.
+                        let ins = self.in_keys(v);
+                        if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
+                            let tok =
+                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
+                            let st = self.state.entry(v).or_default();
+                            let prev = if st.is_empty() { 0 } else { st.pop_front().unwrap() };
+                            st.push_back(tok);
+                            for k in &outs {
+                                self.stage(*k, prev);
+                            }
+                        }
+                    }
+                    AppOp::Const(c) => {
+                        let c = *c;
+                        for k in &outs {
+                            self.stage(*k, c);
+                        }
+                    }
+                    AppOp::Mem(_) => {
+                        // other memory roles behave as pass-throughs
+                        let ins = self.in_keys(v);
+                        if !ins.is_empty()
+                            && ins.iter().all(|k| !self.channels[k].q.is_empty())
+                        {
+                            let tok =
+                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
+                            for k in ins.iter().skip(1) {
+                                self.channels.get_mut(k).unwrap().q.pop_front();
+                            }
+                            for k in &outs {
+                                self.stage(*k, tok);
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Commit this cycle's productions: visible next cycle.
+            for (key, tok) in self.pending.drain(..) {
+                self.channels.get_mut(&key).unwrap().q.push_back(tok);
+            }
+            self.staged.clear();
+
+            cycles += 1;
+        }
+
+        let tokens = outputs.values().map(Vec::len).min().unwrap_or(0);
+        SimRun { outputs, cycles, tokens }
+    }
+
+    fn eval_alu(&mut self, v: AppNodeId, op: &str, args: &[i64]) -> i64 {
+        let a = args.first().copied().unwrap_or(0);
+        let b = args.get(1).copied().unwrap_or(0);
+        match op {
+            "add" => a.wrapping_add(b),
+            "sub" => a.wrapping_sub(b),
+            "mul" => a.wrapping_mul(b),
+            "ashr" => a >> (b & 63),
+            "max" => a.max(b),
+            "min" => a.min(b),
+            "abs" => a.wrapping_abs(),
+            "mac" => {
+                let acc = self.state.entry(v).or_default();
+                if acc.is_empty() {
+                    acc.push_back(0);
+                }
+                let sum = acc[0].wrapping_add(a.wrapping_mul(if args.len() > 1 { b } else { 1 }));
+                acc[0] = sum;
+                sum
+            }
+            other => panic!("unknown ALU op `{other}`"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps;
+
+    fn uniform_caps(app: &AppGraph, cap: usize) -> HashMap<(AppNodeId, u8, AppNodeId, u8), usize> {
+        app.edges().iter().map(|e| ((e.src, e.src_port, e.dst, e.dst_port), cap)).collect()
+    }
+
+    fn stream(n: usize) -> Vec<i64> {
+        (0..n as i64).map(|i| (i * 7 + 3) % 251).collect()
+    }
+
+    #[test]
+    fn pointwise_computes_correct_values() {
+        let app = apps::pointwise(3);
+        // in -> *1 -> +2 -> *3 -> out
+        let caps = uniform_caps(&app, 2);
+        let mut sim = RvSim::new(&app, &caps, stream(16));
+        let run = sim.run(8, 10_000, StallPattern::None);
+        let out = &run.outputs["out"];
+        assert_eq!(out.len(), 8);
+        for (i, &v) in out.iter().enumerate() {
+            let x = stream(16)[i];
+            assert_eq!(v, (x * 1 + 2) * 3, "token {i}");
+        }
+    }
+
+    #[test]
+    fn elasticity_preserves_output_sequence() {
+        // The core RV invariant: stalls retime but never reorder/corrupt.
+        for app in [apps::gaussian(), apps::camera(), apps::pointwise(5)] {
+            let caps = uniform_caps(&app, 2);
+            let free = RvSim::new(&app, &caps, stream(64)).run(24, 100_000, StallPattern::None);
+            let bursty = RvSim::new(&app, &caps, stream(64)).run(
+                24,
+                100_000,
+                StallPattern::Bursty { accept: 2, stall: 3 },
+            );
+            let random = RvSim::new(&app, &caps, stream(64)).run(
+                24,
+                100_000,
+                StallPattern::Random { p: 0.3, seed: 9 },
+            );
+            for (name, seq) in &free.outputs {
+                assert_eq!(&bursty.outputs[name][..], &seq[..], "{}: bursty diverged", app.name);
+                assert_eq!(&random.outputs[name][..], &seq[..], "{}: random diverged", app.name);
+            }
+        }
+    }
+
+    #[test]
+    fn buffering_improves_unbalanced_reconvergence() {
+        // a -> e directly and a -> b -> c -> e: the short path needs >= 3
+        // slack slots to keep `a` producing at full rate.
+        let mut g = AppGraph::new("reconverge");
+        let i = g.mem("in", "stream_in");
+        let b = g.alu("b", "add");
+        let c = g.alu("c", "add");
+        let d = g.alu("d", "add");
+        let e = g.alu("e", "add");
+        let o = g.mem("out", "stream_out");
+        let k = g.add("k", AppOp::Const(1));
+        g.wire(i, b, 0);
+        g.wire(k, b, 1);
+        g.wire(b, c, 0);
+        g.wire(c, d, 0);
+        g.wire(i, e, 0); // short path
+        g.wire(d, e, 1); // long path
+        g.wire(e, o, 0);
+        g.check().unwrap();
+
+        let n = 32;
+        let run1 = RvSim::new(&g, &uniform_caps(&g, 1), stream(64)).run(n, 100_000, StallPattern::None);
+        let run4 = RvSim::new(&g, &uniform_caps(&g, 4), stream(64)).run(n, 100_000, StallPattern::None);
+        assert_eq!(run1.outputs["out"], run4.outputs["out"]);
+        assert!(
+            run4.cycles < run1.cycles,
+            "deep channels must be faster: {} vs {}",
+            run4.cycles,
+            run1.cycles
+        );
+    }
+
+    #[test]
+    fn fabric_capacity_model() {
+        assert_eq!(FabricKind::Static.capacity(3), 1);
+        assert_eq!(FabricKind::RvFullFifo { depth: 2 }.capacity(3), 7);
+        assert_eq!(FabricKind::RvSplitFifo.capacity(3), 4);
+        assert_eq!(FabricKind::RvSplitFifo.period_penalty_ps(1), 0.0);
+        assert!(FabricKind::RvSplitFifo.period_penalty_ps(3) > 0.0);
+        assert_eq!(FabricKind::Static.period_penalty_ps(5), 0.0);
+    }
+
+    #[test]
+    fn mac_accumulates() {
+        let mut g = AppGraph::new("acc");
+        let i = g.mem("in", "stream_in");
+        let m = g.alu("m", "mac");
+        let o = g.mem("out", "stream_out");
+        g.wire(i, m, 0);
+        g.wire(m, o, 0);
+        let caps = uniform_caps(&g, 2);
+        let run = RvSim::new(&g, &caps, vec![1, 2, 3, 4]).run(4, 1000, StallPattern::None);
+        assert_eq!(run.outputs["out"], vec![1, 3, 6, 10]);
+    }
+}

@@ -1,0 +1,82 @@
+//! Minimal benchmarking harness (criterion is unavailable offline; this
+//! provides the same core loop: warmup, timed iterations, robust stats).
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn throughput_per_sec(&self) -> f64 {
+        1.0 / self.median.as_secs_f64()
+    }
+}
+
+impl std::fmt::Display for BenchStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<40} median {:>12?}  mean {:>12?}  min {:>12?}  ({} iters)",
+            self.name, self.median, self.mean, self.min, self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: a warmup pass, then up to `max_iters` timed passes
+/// or until `budget` elapses, whichever first. Returns robust stats.
+pub fn bench<F: FnMut()>(name: &str, max_iters: usize, budget: Duration, mut f: F) -> BenchStats {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    for _ in 0..max_iters.max(1) {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if start.elapsed() > budget {
+            break;
+        }
+    }
+    samples.sort();
+    let n = samples.len();
+    let mean = samples.iter().sum::<Duration>() / n as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        median: samples[n / 2],
+        mean,
+        min: samples[0],
+        max: samples[n - 1],
+    }
+}
+
+/// Guard against the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut acc = 0u64;
+        let s = bench("spin", 16, Duration::from_millis(200), || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+        });
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.throughput_per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Small self-contained utilities: deterministic RNG, table rendering,
+//! and a benchmarking harness (offline substitutes for rand/criterion).
+pub mod bench;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,121 @@
+//! Integration tests: the full generate → PnR → bitstream → simulate
+//! pipeline across interconnect variants (Fig. 2 end to end).
+
+use canal::apps;
+use canal::bitstream::{decode, encode, Configuration};
+use canal::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig, SbTopology};
+use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
+use canal::pnr::{run_flow, FlowParams, SaParams};
+use canal::sim::{check_routing, sweep_connections};
+
+fn quick_params() -> FlowParams {
+    FlowParams { sa: SaParams { moves_per_node: 6, ..Default::default() }, ..Default::default() }
+}
+
+/// Full pipeline on the paper baseline for every suite app.
+#[test]
+fn pipeline_suite_on_baseline() {
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+    let cs = allocate(&ic);
+    for app in apps::suite() {
+        let r = run_flow(&ic, &app, &quick_params())
+            .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+        let cfg = Configuration::from_routing(&ic, 16, &r.routing)
+            .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+        // encode -> decode -> simulate: the delivered configuration (not
+        // just the abstract one) must deliver every net.
+        let bits = encode(&cfg, &cs);
+        let decoded = decode(&bits, &cs);
+        check_routing(&ic, 16, &decoded, &r.routing)
+            .unwrap_or_else(|e| panic!("{}: decoded bitstream broken: {e}", app.name));
+    }
+}
+
+/// Every interconnect variant used in the DSE experiments generates
+/// verifiable hardware and passes the exhaustive connection sweep.
+#[test]
+fn generate_verify_sweep_across_variants() {
+    let variants = [
+        InterconnectConfig { num_tracks: 2, ..InterconnectConfig::paper_baseline(4, 4) },
+        InterconnectConfig {
+            sb_topology: SbTopology::Disjoint,
+            ..InterconnectConfig::paper_baseline(4, 4)
+        },
+        InterconnectConfig {
+            sb_core_sides: ConnectedSides::TWO,
+            cb_core_sides: ConnectedSides::THREE,
+            ..InterconnectConfig::paper_baseline(4, 4)
+        },
+        InterconnectConfig {
+            track_widths: vec![1, 16],
+            reg_density: 2,
+            ..InterconnectConfig::paper_baseline(4, 4)
+        },
+    ];
+    for cfg in variants {
+        let ic = create_uniform_interconnect(&cfg);
+        let rtl = emit(&lower_static(&ic).netlist);
+        let mismatches = verify_rtl(&ic, &rtl);
+        assert!(mismatches.is_empty(), "{}: {:?}", cfg.descriptor(), &mismatches[..mismatches.len().min(3)]);
+        let cs = allocate(&ic);
+        let sweep = sweep_connections(&ic, Some(&cs));
+        assert!(sweep.ok(), "{}: {:?}", cfg.descriptor(), &sweep.failures[..sweep.failures.len().min(3)]);
+    }
+}
+
+/// Ready-valid generation verifies for the same variants.
+#[test]
+fn rv_generation_across_variants() {
+    for (split, depth) in [(true, 2), (false, 2), (false, 4)] {
+        let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(4, 4));
+        let lowered = lower_ready_valid(&ic, &RvOptions { fifo_depth: depth, split });
+        let rtl = emit(&lowered.netlist);
+        let mismatches = verify_rtl(&ic, &rtl);
+        assert!(mismatches.is_empty(), "split={split} depth={depth}");
+        // One FIFO per register node.
+        let regs: usize = ic
+            .graphs
+            .values()
+            .map(|g| g.iter().filter(|(_, n)| n.kind.is_register()).count())
+            .sum();
+        assert_eq!(lowered.netlist.histogram()["fifo"], regs);
+    }
+}
+
+/// Routing respects per-app determinism across repeated full flows.
+#[test]
+fn flow_reproducible_across_processes() {
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+    let app = apps::harris();
+    let a = run_flow(&ic, &app, &quick_params()).unwrap();
+    let b = run_flow(&ic, &app, &quick_params()).unwrap();
+    assert_eq!(a.placement.pos, b.placement.pos);
+    assert_eq!(a.routing.nodes_used, b.routing.nodes_used);
+    assert_eq!(a.timing.critical_path_ps, b.timing.critical_path_ps);
+}
+
+/// Larger array: the 16x16 baseline routes the whole suite (the array
+/// the paper's Fig. 4 example parameterizes is 32x32; 16x16 keeps CI
+/// fast while exercising multi-hop routes).
+#[test]
+fn suite_routes_on_16x16() {
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(16, 16));
+    for app in apps::suite() {
+        let r = run_flow(&ic, &app, &quick_params())
+            .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+        assert!(r.timing.critical_path_ps > 0.0);
+    }
+}
+
+/// Registered fabrics (reg_density 1 and 2) still route and verify.
+#[test]
+fn registered_fabrics_route() {
+    for density in [1u16, 2] {
+        let cfg = InterconnectConfig { reg_density: density, ..InterconnectConfig::paper_baseline(8, 8) };
+        let ic = create_uniform_interconnect(&cfg);
+        let r = run_flow(&ic, &apps::gaussian(), &quick_params())
+            .unwrap_or_else(|e| panic!("density {density}: {e}"));
+        let cfg2 = Configuration::from_routing(&ic, 16, &r.routing).unwrap();
+        check_routing(&ic, 16, &cfg2, &r.routing).unwrap();
+    }
+}
