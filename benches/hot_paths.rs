@@ -40,6 +40,13 @@ fn main() {
     });
     println!("{s}   [{:.0} net-routes/s]", n_nets * s.throughput_per_sec());
 
+    // --- L3: STA ----------------------------------------------------------
+    let routed = route(&ic, &packed.app, &placement, 16, &RouterParams::default()).unwrap();
+    let s = bench("STA harris (8x8x5)", 2000, budget, || {
+        black_box(canal::pnr::analyze(&ic, &packed, &routed, 16, 4096));
+    });
+    println!("{s}");
+
     // --- L3: SA detailed placement ---------------------------------------
     let sa = SaParams { moves_per_node: 20, ..Default::default() };
     let s = bench("SA detailed place harris (20 mpn)", 100, budget, || {
@@ -82,6 +89,12 @@ fn main() {
     let config = Configuration::from_routing(&ic, 16, &flow.routing).unwrap();
     let s = bench("bitstream encode (gaussian)", 2000, budget, || {
         black_box(encode(&config, &cs));
+    });
+    println!("{s}");
+
+    // --- L3: static functional sim ----------------------------------------
+    let s = bench("static-sim check gaussian", 1000, budget, || {
+        canal::sim::check_routing(&ic, 16, &config, &flow.routing).unwrap();
     });
     println!("{s}");
 

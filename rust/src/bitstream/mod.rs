@@ -31,12 +31,17 @@ impl Configuration {
     /// pins `b`'s mux to select `a`. Conflicting requirements (two nets
     /// demanding different selects on one mux) are impossible for
     /// node-disjoint routings and are reported as errors.
+    ///
+    /// Runs on the frozen CSR graph; its fan-in CSR preserves the builder
+    /// graph's insertion order, so selects (and thus bitstreams) are
+    /// bit-identical to ones derived from the builder graph.
     pub fn from_routing(
         ic: &Interconnect,
         bit_width: u8,
         routing: &RoutingResult,
     ) -> Result<Configuration, String> {
-        let g = ic.graph(bit_width);
+        let g = ic.compiled(bit_width);
+        let names = ic.graph(bit_width);
         let mut cfg = Configuration::default();
         for tree in &routing.trees {
             for path in &tree.sink_paths {
@@ -48,15 +53,15 @@ impl Configuration {
                             .ok_or_else(|| {
                                 format!(
                                     "route uses non-edge {} -> {}",
-                                    g.node(a).qualified_name(),
-                                    g.node(b).qualified_name()
+                                    names.node(a).qualified_name(),
+                                    names.node(b).qualified_name()
                                 )
                             })? as u32;
                         match cfg.selects.get(&(bit_width, b)) {
                             Some(&prev) if prev != sel => {
                                 return Err(format!(
                                     "conflicting selects on {}: {prev} vs {sel}",
-                                    g.node(b).qualified_name()
+                                    names.node(b).qualified_name()
                                 ));
                             }
                             _ => {
@@ -66,7 +71,7 @@ impl Configuration {
                     }
                     // Routes through a register node pin its mode to
                     // pipeline (static flow) — RV flows override later.
-                    if g.node(b).kind.is_register() {
+                    if g.is_register(b) {
                         cfg.reg_modes.insert((bit_width, b), 0);
                     }
                 }

@@ -144,6 +144,19 @@ pub fn fig09_topology(o: &ExpOptions) -> Table {
     let seeds: Vec<u64> = (0..o.seeds as u64).map(|i| o.seed + i).collect();
     for tracks in [3u16, 4, 5] {
         let count = |topo: SbTopology, mode: OutputTrackMode| {
+            // Build and freeze the interconnect once per sweep point; all
+            // seeds and app threads share the immutable compiled graphs
+            // by reference instead of regenerating them per run.
+            let cfg = InterconnectConfig {
+                width: 10,
+                height: 10,
+                num_tracks: tracks,
+                sb_topology: topo,
+                mem_column_period: 3,
+                output_tracks: mode,
+                ..Default::default()
+            };
+            let ic = create_uniform_interconnect(&cfg);
             let mut ok = 0;
             for &seed in &seeds {
                 let params = FlowParams {
@@ -155,19 +168,9 @@ pub fn fig09_topology(o: &ExpOptions) -> Table {
                     let hs: Vec<_> = suite
                         .iter()
                         .map(|app| {
-                            let params = &params;
+                            let (params, ic) = (&params, &ic);
                             s.spawn(move || {
-                                let cfg = InterconnectConfig {
-                                    width: 10,
-                                    height: 10,
-                                    num_tracks: tracks,
-                                    sb_topology: topo,
-                                    mem_column_period: 3,
-                                    output_tracks: mode,
-                                    ..Default::default()
-                                };
-                                let ic = create_uniform_interconnect(&cfg);
-                                run_flow_with(&ic, app, params, &NativePlacer::default())
+                                run_flow_with(ic, app, params, &NativePlacer::default())
                                     .is_ok()
                             })
                         })

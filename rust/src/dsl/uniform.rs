@@ -187,6 +187,10 @@ pub fn create_uniform_interconnect(cfg: &InterconnectConfig) -> Interconnect {
         ic.graphs.insert(bw, layer);
     }
     assert_valid(&ic);
+    // Freeze once, here: every consumer (PnR, STA, bitstream, simulation)
+    // reads the immutable CSR view, and DSE sweeps share it across
+    // threads without re-deriving anything per run.
+    ic.freeze();
     ic
 }
 
@@ -214,6 +218,16 @@ mod tests {
         let ic = small(|_| {});
         assert!(validate(&ic).is_empty());
         assert_eq!(ic.tiles.len(), 16);
+    }
+
+    #[test]
+    fn built_interconnect_is_frozen() {
+        let ic = small(|c| c.track_widths = vec![1, 16]);
+        assert!(ic.is_frozen());
+        for bw in ic.bit_widths() {
+            assert_eq!(ic.compiled(bw).len(), ic.graph(bw).len());
+            assert_eq!(ic.compiled(bw).edge_count(), ic.graph(bw).edge_count());
+        }
     }
 
     #[test]

@@ -1,0 +1,342 @@
+//! The frozen routing graph: an immutable, cache-friendly CSR view.
+//!
+//! [`super::graph::RoutingGraph`] is the *builder-facing* IR: adjacency as
+//! `Vec<Vec<NodeId>>`, wire delays in a `HashMap` — convenient to grow one
+//! edge at a time from the eDSL, hostile to the PnR/timing/simulation hot
+//! loops that traverse it millions of times per design-space sweep.
+//! [`CompiledGraph`] is the same graph *frozen*: compressed-sparse-row
+//! adjacency in both directions, wire delays in flat arrays parallel to
+//! the CSR edge arrays (no hashing on an edge relaxation), and dense
+//! per-node attribute arrays (coordinates, intrinsic delay, kind flags).
+//!
+//! # The freeze contract
+//!
+//! Lowering is purely structural — `compile` never reorders anything:
+//!
+//! - **Fan-in order is mux-select order.** `fan_in(n)[k]` is the driver
+//!   that select value `k` routes onto `n`, exactly as in the builder
+//!   graph, where the position of an incoming edge in insertion order *is*
+//!   the select encoding the bitstream generator emits. A routing result
+//!   therefore produces a bit-identical bitstream whether its selects are
+//!   derived from the builder graph or the compiled one.
+//! - **Fan-out order is insertion order** too, so edge iteration (and
+//!   with it A* tie-breaking, hence routing determinism) is unchanged.
+//! - **Node ids are shared.** `NodeId` indexes both representations; a
+//!   path computed on one is valid on the other.
+//!
+//! The compiled view is immutable by construction (no `&mut` API) and all
+//! of its storage is plain `Vec`s of POD, so it is `Send + Sync`: one
+//! frozen interconnect can be shared by reference across every PnR thread
+//! of a design-space sweep — the foundation for parallel/sharded DSE.
+//! Mutating the builder graph after a freeze does *not* update the
+//! compiled view; [`super::interconnect::Interconnect::graph_mut`] drops
+//! stale compiled graphs and the owner must re-freeze.
+
+use super::graph::RoutingGraph;
+use super::node::NodeId;
+
+/// Per-node kind flags (dense `u8` instead of the fat `NodeKind` enum).
+const FLAG_PORT: u8 = 1 << 0;
+const FLAG_REGISTER: u8 = 1 << 1;
+
+/// An immutable CSR-packed routing graph of one bit width.
+#[derive(Clone, Debug)]
+pub struct CompiledGraph {
+    /// Bit width carried by every node in this graph.
+    pub width: u8,
+    n: usize,
+    // --- CSR fan-out ---------------------------------------------------
+    /// `out_offsets[i]..out_offsets[i+1]` slices the fan-out of node `i`.
+    out_offsets: Vec<u32>,
+    out_targets: Vec<NodeId>,
+    /// Wire delay (ps) of the edge at the same CSR position.
+    out_delays: Vec<u32>,
+    // --- CSR fan-in (position = mux-select encoding) -------------------
+    in_offsets: Vec<u32>,
+    in_sources: Vec<NodeId>,
+    in_delays: Vec<u32>,
+    // --- Dense per-node attributes -------------------------------------
+    xs: Vec<u16>,
+    ys: Vec<u16>,
+    node_delays: Vec<u32>,
+    flags: Vec<u8>,
+    /// Largest outgoing wire delay per node (precomputed for the router's
+    /// base-cost model; 0 for sink nodes).
+    max_out_wire: Vec<u32>,
+}
+
+impl CompiledGraph {
+    /// Freeze a builder graph. Insertion order of both adjacency
+    /// directions is preserved exactly (see the module docs).
+    pub fn compile(g: &RoutingGraph) -> CompiledGraph {
+        let n = g.len();
+        let edges = g.edge_count();
+
+        let mut out_offsets = Vec::with_capacity(n + 1);
+        let mut out_targets = Vec::with_capacity(edges);
+        let mut out_delays = Vec::with_capacity(edges);
+        let mut in_offsets = Vec::with_capacity(n + 1);
+        let mut in_sources = Vec::with_capacity(edges);
+        let mut in_delays = Vec::with_capacity(edges);
+        let mut xs = Vec::with_capacity(n);
+        let mut ys = Vec::with_capacity(n);
+        let mut node_delays = Vec::with_capacity(n);
+        let mut flags = Vec::with_capacity(n);
+        let mut max_out_wire = Vec::with_capacity(n);
+
+        for (id, node) in g.iter() {
+            out_offsets.push(out_targets.len() as u32);
+            let mut max_wire = 0u32;
+            for &to in g.fan_out(id) {
+                let w = g.wire_delay(id, to);
+                max_wire = max_wire.max(w);
+                out_targets.push(to);
+                out_delays.push(w);
+            }
+            in_offsets.push(in_sources.len() as u32);
+            for &from in g.fan_in(id) {
+                in_sources.push(from);
+                in_delays.push(g.wire_delay(from, id));
+            }
+            xs.push(node.x);
+            ys.push(node.y);
+            node_delays.push(node.delay_ps);
+            let mut f = 0u8;
+            if node.kind.is_port() {
+                f |= FLAG_PORT;
+            }
+            if node.kind.is_register() {
+                f |= FLAG_REGISTER;
+            }
+            flags.push(f);
+            max_out_wire.push(max_wire);
+        }
+        out_offsets.push(out_targets.len() as u32);
+        in_offsets.push(in_sources.len() as u32);
+
+        CompiledGraph {
+            width: g.width,
+            n,
+            out_offsets,
+            out_targets,
+            out_delays,
+            in_offsets,
+            in_sources,
+            in_delays,
+            xs,
+            ys,
+            node_delays,
+            flags,
+            max_out_wire,
+        }
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Total number of directed edges.
+    pub fn edge_count(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    /// All node ids.
+    pub fn ids(&self) -> impl Iterator<Item = NodeId> + 'static {
+        (0..self.n as u32).map(NodeId)
+    }
+
+    /// Nodes driven by `id`, in the builder graph's insertion order.
+    #[inline]
+    pub fn fan_out(&self, id: NodeId) -> &[NodeId] {
+        let i = id.index();
+        &self.out_targets[self.out_offsets[i] as usize..self.out_offsets[i + 1] as usize]
+    }
+
+    /// Wire delays (ps) parallel to [`Self::fan_out`].
+    #[inline]
+    pub fn out_wire_delays(&self, id: NodeId) -> &[u32] {
+        let i = id.index();
+        &self.out_delays[self.out_offsets[i] as usize..self.out_offsets[i + 1] as usize]
+    }
+
+    /// Drivers of `id` in mux-select order.
+    #[inline]
+    pub fn fan_in(&self, id: NodeId) -> &[NodeId] {
+        let i = id.index();
+        &self.in_sources[self.in_offsets[i] as usize..self.in_offsets[i + 1] as usize]
+    }
+
+    /// Wire delays (ps) parallel to [`Self::fan_in`].
+    #[inline]
+    pub fn in_wire_delays(&self, id: NodeId) -> &[u32] {
+        let i = id.index();
+        &self.in_delays[self.in_offsets[i] as usize..self.in_offsets[i + 1] as usize]
+    }
+
+    /// Wire delay of edge `(from, to)`; panics if the edge does not exist
+    /// (the same contract as `RoutingGraph::wire_delay`). Fan-outs are
+    /// small (a handful of sinks), so the scan beats any hash.
+    #[inline]
+    pub fn wire_delay(&self, from: NodeId, to: NodeId) -> u32 {
+        let outs = self.fan_out(from);
+        let k = outs
+            .iter()
+            .position(|&t| t == to)
+            .unwrap_or_else(|| panic!("no edge {from} -> {to}"));
+        self.out_wire_delays(from)[k]
+    }
+
+    /// Mux-select value that routes `driver` onto `id`, if connected.
+    #[inline]
+    pub fn select_of(&self, id: NodeId, driver: NodeId) -> Option<usize> {
+        self.fan_in(id).iter().position(|&d| d == driver)
+    }
+
+    /// Tile x coordinate of a node.
+    #[inline]
+    pub fn x(&self, id: NodeId) -> u16 {
+        self.xs[id.index()]
+    }
+
+    /// Tile y coordinate of a node.
+    #[inline]
+    pub fn y(&self, id: NodeId) -> u16 {
+        self.ys[id.index()]
+    }
+
+    /// Intrinsic node delay in ps (mux delay, register clk-q, ...).
+    #[inline]
+    pub fn node_delay_ps(&self, id: NodeId) -> u32 {
+        self.node_delays[id.index()]
+    }
+
+    /// Is this a core-port node?
+    #[inline]
+    pub fn is_port(&self, id: NodeId) -> bool {
+        self.flags[id.index()] & FLAG_PORT != 0
+    }
+
+    /// Is this a pipeline-register node?
+    #[inline]
+    pub fn is_register(&self, id: NodeId) -> bool {
+        self.flags[id.index()] & FLAG_REGISTER != 0
+    }
+
+    /// Largest outgoing wire delay of a node (0 for sinks). Precomputed
+    /// so the router's base-cost pass is hash-free.
+    #[inline]
+    pub fn max_out_wire_delay(&self, id: NodeId) -> u32 {
+        self.max_out_wire[id.index()]
+    }
+
+    /// Delay along one path (node delays + wire delays), ps.
+    pub fn path_delay(&self, path: &[NodeId]) -> f64 {
+        let mut d = 0.0;
+        for (i, &n) in path.iter().enumerate() {
+            d += self.node_delays[n.index()] as f64;
+            if i + 1 < path.len() {
+                d += self.wire_delay(n, path[i + 1]) as f64;
+            }
+        }
+        d
+    }
+}
+
+impl RoutingGraph {
+    /// Freeze this builder graph into an immutable CSR view.
+    pub fn compile(&self) -> CompiledGraph {
+        CompiledGraph::compile(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::node::{Node, NodeKind, SbIo, Side};
+
+    fn sb(x: u16, y: u16, side: Side, io: SbIo, track: u16) -> Node {
+        Node::new(NodeKind::SwitchBox { side, io, track }, x, y, 16, 40)
+    }
+
+    fn diamond() -> (RoutingGraph, [NodeId; 4]) {
+        // a -> c, b -> c (mux), c -> d, a -> d (mux on d too)
+        let mut g = RoutingGraph::new(16);
+        let a = g.add_node(sb(0, 0, Side::North, SbIo::In, 0));
+        let b = g.add_node(sb(0, 0, Side::South, SbIo::In, 0));
+        let c = g.add_node(sb(0, 0, Side::East, SbIo::Out, 0));
+        let d = g.add_node(sb(1, 0, Side::West, SbIo::In, 0));
+        g.connect_with_delay(a, c, 10);
+        g.connect_with_delay(b, c, 20);
+        g.connect_with_delay(c, d, 90);
+        g.connect_with_delay(a, d, 5);
+        (g, [a, b, c, d])
+    }
+
+    #[test]
+    fn csr_preserves_adjacency_and_order() {
+        let (g, [a, b, c, d]) = diamond();
+        let cg = g.compile();
+        assert_eq!(cg.len(), 4);
+        assert_eq!(cg.edge_count(), 4);
+        assert_eq!(cg.fan_out(a), &[c, d]);
+        assert_eq!(cg.fan_in(c), &[a, b]);
+        assert_eq!(cg.fan_in(d), &[c, a]);
+        assert_eq!(cg.select_of(c, a), Some(0));
+        assert_eq!(cg.select_of(c, b), Some(1));
+        assert_eq!(cg.select_of(d, a), Some(1));
+        assert_eq!(cg.select_of(c, c), None);
+    }
+
+    #[test]
+    fn delays_align_with_csr_positions() {
+        let (g, [a, b, c, d]) = diamond();
+        let cg = g.compile();
+        assert_eq!(cg.wire_delay(a, c), 10);
+        assert_eq!(cg.wire_delay(b, c), 20);
+        assert_eq!(cg.wire_delay(c, d), 90);
+        assert_eq!(cg.wire_delay(a, d), 5);
+        assert_eq!(cg.out_wire_delays(a), &[10, 5]);
+        assert_eq!(cg.in_wire_delays(c), &[10, 20]);
+        assert_eq!(cg.max_out_wire_delay(a), 10);
+        assert_eq!(cg.max_out_wire_delay(c), 90);
+        assert_eq!(cg.max_out_wire_delay(d), 0);
+    }
+
+    #[test]
+    fn node_attributes_are_dense_copies() {
+        let (g, [a, _, c, d]) = diamond();
+        let cg = g.compile();
+        assert_eq!((cg.x(d), cg.y(d)), (1, 0));
+        assert_eq!(cg.node_delay_ps(a), 40);
+        assert!(!cg.is_port(c));
+        assert!(!cg.is_register(c));
+    }
+
+    #[test]
+    fn path_delay_matches_builder_graph() {
+        let (g, [a, _, c, d]) = diamond();
+        let cg = g.compile();
+        let path = [a, c, d];
+        let manual: f64 = path.iter().map(|&n| g.node(n).delay_ps as f64).sum::<f64>()
+            + path.windows(2).map(|w| g.wire_delay(w[0], w[1]) as f64).sum::<f64>();
+        assert_eq!(cg.path_delay(&path), manual);
+    }
+
+    #[test]
+    fn compiled_graph_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<CompiledGraph>();
+    }
+
+    #[test]
+    #[should_panic(expected = "no edge")]
+    fn missing_edge_delay_panics_like_builder() {
+        let (g, [a, b, ..]) = diamond();
+        g.compile().wire_delay(b, a);
+    }
+}

@@ -6,6 +6,12 @@
 //! indexed by [`NodeId`]; edges are adjacency lists kept in *insertion
 //! order* — the position of an incoming edge is the mux-select value the
 //! bitstream generator emits, so order is part of the architecture.
+//!
+//! This is the *builder-facing* representation. Once construction is
+//! done it is frozen into the immutable CSR
+//! [`super::compiled::CompiledGraph`] (via [`RoutingGraph::compile`] /
+//! `Interconnect::freeze`), which every PnR, timing and simulation hot
+//! path consumes.
 
 use std::collections::HashMap;
 
@@ -33,6 +39,12 @@ pub struct RoutingGraph {
     edges_in: Vec<Vec<NodeId>>,
     /// Per-edge wire delay in ps, keyed by (from, to).
     wire_delay: HashMap<(NodeId, NodeId), u32>,
+    /// Edges whose delay was given explicitly (via `connect_with_delay`).
+    /// `connect` defaults to 0 ps, which is right for intra-tile wiring
+    /// but a silent lie on a tile crossing — validation flags cross-tile
+    /// edges that were never given an explicit delay, while an explicit
+    /// 0 (an idealized delay model) stays legal.
+    explicit_delay: std::collections::HashSet<(NodeId, NodeId)>,
     /// Reverse lookup from (x, y, kind).
     index: HashMap<NodeKey, NodeId>,
 }
@@ -78,6 +90,16 @@ impl RoutingGraph {
     /// Connect `from -> to` with an explicit wire delay. Duplicate edges
     /// are rejected (they would create ambiguous mux selects).
     pub fn connect_with_delay(&mut self, from: NodeId, to: NodeId, delay_ps: u32) {
+        self.connect_inner(from, to, delay_ps);
+        self.explicit_delay.insert((from, to));
+    }
+
+    /// Connect with zero wire delay (intra-tile wiring).
+    pub fn connect(&mut self, from: NodeId, to: NodeId) {
+        self.connect_inner(from, to, 0);
+    }
+
+    fn connect_inner(&mut self, from: NodeId, to: NodeId, delay_ps: u32) {
         assert_ne!(from, to, "self-loop on {}", self.node(from).qualified_name());
         assert!(
             !self.edges_out[from.index()].contains(&to),
@@ -90,9 +112,11 @@ impl RoutingGraph {
         self.wire_delay.insert((from, to), delay_ps);
     }
 
-    /// Connect with zero wire delay (intra-tile wiring).
-    pub fn connect(&mut self, from: NodeId, to: NodeId) {
-        self.connect_with_delay(from, to, 0);
+    /// Was this edge's delay given explicitly (rather than defaulted to 0
+    /// by [`Self::connect`])? Consumed by validation to catch tile
+    /// crossings whose delay was never modeled.
+    pub fn has_explicit_delay(&self, from: NodeId, to: NodeId) -> bool {
+        self.explicit_delay.contains(&(from, to))
     }
 
     pub fn node(&self, id: NodeId) -> &Node {

@@ -3,7 +3,9 @@
 //! (hardware lowering, PnR, bitstream generation, simulation) consumes.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
+use super::compiled::CompiledGraph;
 use super::graph::RoutingGraph;
 use super::node::{NodeId, NodeKind};
 
@@ -114,6 +116,25 @@ pub struct Interconnect {
     /// Human-readable description of how this interconnect was built
     /// (topology name, tracks, ...), embedded into generated collateral.
     pub descriptor: String,
+    /// Frozen CSR view per bit width (see [`CompiledGraph`]): built by
+    /// [`Self::freeze`], dropped by [`Self::graph_mut`] so a stale view
+    /// can never be read after mutation. `Arc` so sweeps can share one
+    /// compiled graph across threads without cloning it.
+    compiled: BTreeMap<u8, Arc<CompiledGraph>>,
+    /// Dense core kind per tile (row-major) — hot-loop alternative to
+    /// dereferencing the fat `Tile`/`CoreSpec` structs.
+    kind_grid: Vec<CoreKind>,
+    /// Tile coordinates per core kind, in row-major scan order (the
+    /// legalizer depends on this order for deterministic tie-breaking).
+    sites: [Vec<(u16, u16)>; 3],
+}
+
+fn kind_slot(kind: CoreKind) -> usize {
+    match kind {
+        CoreKind::Pe => 0,
+        CoreKind::Mem => 1,
+        CoreKind::Io => 2,
+    }
 }
 
 impl Interconnect {
@@ -126,7 +147,90 @@ impl Interconnect {
                 "tiles must be row-major"
             );
         }
-        Interconnect { width, height, tiles, graphs: BTreeMap::new(), descriptor }
+        let mut ic = Interconnect {
+            width,
+            height,
+            tiles,
+            graphs: BTreeMap::new(),
+            descriptor,
+            compiled: BTreeMap::new(),
+            kind_grid: Vec::new(),
+            sites: Default::default(),
+        };
+        ic.rebuild_tile_index();
+        ic
+    }
+
+    fn rebuild_tile_index(&mut self) {
+        self.kind_grid = self.tiles.iter().map(|t| t.core.kind).collect();
+        self.sites = Default::default();
+        for t in &self.tiles {
+            self.sites[kind_slot(t.core.kind)].push((t.x, t.y));
+        }
+    }
+
+    /// Freeze every routing graph into its immutable CSR form and refresh
+    /// the dense tile index. Builders call this once, after the last edge
+    /// (or tile customization) is applied; every PnR / timing / simulation
+    /// hot path reads the compiled view. Idempotent — and because `tiles`
+    /// and `graphs` are public, any direct mutation of either after a
+    /// freeze must be followed by another `freeze()` call.
+    pub fn freeze(&mut self) {
+        self.rebuild_tile_index();
+        self.compiled =
+            self.graphs.iter().map(|(&bw, g)| (bw, Arc::new(g.compile()))).collect();
+    }
+
+    /// Has [`Self::freeze`] been called (and no graph mutated since)?
+    pub fn is_frozen(&self) -> bool {
+        self.compiled.len() == self.graphs.len() && !self.graphs.is_empty()
+    }
+
+    /// The frozen CSR view of one layer. Panics if the interconnect was
+    /// never frozen or was mutated (via [`Self::graph_mut`]) after the
+    /// last freeze. `graphs` is a public field, so a direct mutation
+    /// bypasses that invalidation — debug builds catch the common cases
+    /// (added nodes/edges) here; release builds trust the contract.
+    pub fn compiled(&self, bit_width: u8) -> &CompiledGraph {
+        match self.compiled.get(&bit_width) {
+            Some(c) => {
+                debug_assert!(
+                    self.graphs
+                        .get(&bit_width)
+                        .map(|g| (g.len(), g.edge_count()))
+                        == Some((c.len(), c.edge_count())),
+                    "compiled view of width {bit_width} is stale: re-freeze() after \
+                     mutating `graphs` directly"
+                );
+                c
+            }
+            None => panic!(
+                "no compiled graph of width {bit_width}: call freeze() after building \
+                 or mutating the interconnect"
+            ),
+        }
+    }
+
+    /// Shared handle to one frozen layer (for cross-thread DSE sharding).
+    pub fn compiled_arc(&self, bit_width: u8) -> Arc<CompiledGraph> {
+        Arc::clone(self.compiled.get(&bit_width).unwrap_or_else(|| {
+            panic!("no compiled graph of width {bit_width}: call freeze() first")
+        }))
+    }
+
+    /// Core kind at a tile — dense-array lookup for placer hot loops.
+    /// Reflects `tiles` as of construction or the last [`Self::freeze`];
+    /// re-freeze after mutating `tiles` directly.
+    #[inline]
+    pub fn core_kind_at(&self, x: u16, y: u16) -> CoreKind {
+        self.kind_grid[y as usize * self.width as usize + x as usize]
+    }
+
+    /// All tile coordinates hosting `kind`, in row-major order (the
+    /// legalizer's tie-break order). Same freshness contract as
+    /// [`Self::core_kind_at`].
+    pub fn sites_of(&self, kind: CoreKind) -> &[(u16, u16)] {
+        &self.sites[kind_slot(kind)]
     }
 
     pub fn tile(&self, x: u16, y: u16) -> &Tile {
@@ -143,7 +247,10 @@ impl Interconnect {
             .unwrap_or_else(|| panic!("no routing graph of width {bit_width}"))
     }
 
+    /// Mutable access to a builder graph. Drops every frozen view first:
+    /// a compiled graph must never outlive a mutation of its source.
     pub fn graph_mut(&mut self, bit_width: u8) -> &mut RoutingGraph {
+        self.compiled.clear();
         self.graphs
             .get_mut(&bit_width)
             .unwrap_or_else(|| panic!("no routing graph of width {bit_width}"))
@@ -236,5 +343,54 @@ mod tests {
         ic.graphs.insert(1, RoutingGraph::new(1));
         assert_eq!(ic.bit_widths(), vec![1, 16]);
         assert_eq!(ic.graph(16).width, 16);
+    }
+
+    #[test]
+    fn freeze_builds_compiled_views_and_mutation_drops_them() {
+        let mut ic = Interconnect::new(2, 2, tiles(2, 2), "t".into());
+        ic.graphs.insert(16, RoutingGraph::new(16));
+        assert!(!ic.is_frozen());
+        ic.freeze();
+        assert!(ic.is_frozen());
+        assert_eq!(ic.compiled(16).width, 16);
+        assert_eq!(ic.compiled_arc(16).len(), 0);
+        // Any mutable graph access invalidates the frozen views.
+        let _ = ic.graph_mut(16);
+        assert!(!ic.is_frozen());
+    }
+
+    #[test]
+    #[should_panic(expected = "freeze()")]
+    fn compiled_access_without_freeze_panics() {
+        let mut ic = Interconnect::new(2, 2, tiles(2, 2), "t".into());
+        ic.graphs.insert(16, RoutingGraph::new(16));
+        ic.compiled(16);
+    }
+
+    #[test]
+    fn freeze_refreshes_tile_index_after_tile_mutation() {
+        let mut ic = Interconnect::new(2, 2, tiles(2, 2), "t".into());
+        ic.graphs.insert(16, RoutingGraph::new(16));
+        ic.freeze();
+        assert_eq!(ic.core_kind_at(1, 0), CoreKind::Pe);
+        ic.tiles[1].core = CoreSpec::mem(16); // customize post-construction
+        ic.freeze();
+        assert_eq!(ic.core_kind_at(1, 0), CoreKind::Mem);
+        assert_eq!(ic.sites_of(CoreKind::Mem), &[(1, 0)]);
+    }
+
+    #[test]
+    fn dense_tile_lookups_match_tiles() {
+        let mut ts = tiles(3, 2);
+        ts[4].core = CoreSpec::mem(16); // (1, 1)
+        let ic = Interconnect::new(3, 2, ts, "t".into());
+        assert_eq!(ic.core_kind_at(1, 1), CoreKind::Mem);
+        assert_eq!(ic.core_kind_at(0, 1), CoreKind::Pe);
+        assert_eq!(ic.sites_of(CoreKind::Mem), &[(1, 1)]);
+        assert_eq!(ic.sites_of(CoreKind::Pe).len(), 5);
+        assert!(ic.sites_of(CoreKind::Io).is_empty());
+        // Row-major order (the legalizer's tie-break contract).
+        assert_eq!(ic.sites_of(CoreKind::Pe)[0], (0, 0));
+        assert_eq!(ic.sites_of(CoreKind::Pe)[1], (1, 0));
     }
 }

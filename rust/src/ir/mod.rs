@@ -6,12 +6,14 @@
 //! drives hardware generation (`crate::hw`), PnR (`crate::pnr`), bitstream
 //! generation (`crate::bitstream`) and simulation (`crate::sim`).
 
+pub mod compiled;
 pub mod graph;
 pub mod interconnect;
 pub mod node;
 pub mod serialize;
 pub mod validate;
 
+pub use compiled::CompiledGraph;
 pub use graph::{NodeKey, RoutingGraph};
 pub use interconnect::{CoreKind, CoreSpec, Interconnect, PortSpec, Tile};
 pub use node::{Node, NodeId, NodeKind, SbIo, Side};

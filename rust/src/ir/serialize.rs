@@ -44,10 +44,17 @@ pub fn emit_graph(g: &RoutingGraph) -> String {
         };
         s.push_str(&format!("N {} x={} y={} d={} {}\n", id.0, n.x, n.y, n.delay_ps, kind));
     }
-    // Edges in fan-in order per sink so select encodings survive.
+    // Edges in fan-in order per sink so select encodings survive. An
+    // edge whose delay was never given explicitly (plain `connect`) is
+    // emitted without a `w=` token, so delay-missingness — which the
+    // validator flags on tile crossings — survives a round-trip.
     for (id, _) in g.iter() {
         for &src in g.fan_in(id) {
-            s.push_str(&format!("E {} {} w={}\n", src.0, id.0, g.wire_delay(src, id)));
+            if g.has_explicit_delay(src, id) {
+                s.push_str(&format!("E {} {} w={}\n", src.0, id.0, g.wire_delay(src, id)));
+            } else {
+                s.push_str(&format!("E {} {}\n", src.0, id.0));
+            }
         }
     }
     s
@@ -74,7 +81,7 @@ pub fn parse_graph(text: &str) -> Result<RoutingGraph, String> {
     }
 
     let mut g = RoutingGraph::new(width);
-    let mut pending_edges: Vec<(NodeId, NodeId, u32)> = Vec::new();
+    let mut pending_edges: Vec<(NodeId, NodeId, Option<u32>)> = Vec::new();
     let mut max_seen_id: i64 = -1;
 
     for (lineno, line) in lines {
@@ -119,14 +126,23 @@ pub fn parse_graph(text: &str) -> Result<RoutingGraph, String> {
             Some(&"E") => {
                 let a: u32 = toks[1].parse().map_err(|_| err("bad edge src".into()))?;
                 let b: u32 = toks[2].parse().map_err(|_| err("bad edge dst".into()))?;
-                let w = kv(toks[3], "w")?;
+                // `w=` absent ⇒ an implicit (defaulted) delay, re-created
+                // with plain `connect` so validation still sees it as
+                // never-explicitly-modeled.
+                let w = match toks.get(3) {
+                    Some(tok) => Some(kv(tok, "w")?),
+                    None => None,
+                };
                 pending_edges.push((NodeId(a), NodeId(b), w));
             }
             Some(_) | None => continue,
         }
     }
     for (a, b, w) in pending_edges {
-        g.connect_with_delay(a, b, w);
+        match w {
+            Some(w) => g.connect_with_delay(a, b, w),
+            None => g.connect(a, b),
+        }
     }
     Ok(g)
 }
@@ -163,6 +179,14 @@ mod tests {
             assert_eq!(g.fan_in(id), g2.fan_in(id), "{}", n.qualified_name());
             for &src in g.fan_in(id) {
                 assert_eq!(g.wire_delay(src, id), g2.wire_delay(src, id));
+                // Delay explicitness (the validator's missing-delay
+                // signal) must survive too.
+                assert_eq!(
+                    g.has_explicit_delay(src, id),
+                    g2.has_explicit_delay(src, id),
+                    "{}",
+                    n.qualified_name()
+                );
             }
         }
     }

@@ -122,7 +122,13 @@ pub fn validate(ic: &Interconnect) -> Vec<Violation> {
                 }
             }
 
-            // Inter-tile edges must connect geometric neighbours.
+            // Inter-tile edges must connect geometric neighbours, and a
+            // tile-crossing wire must carry an *explicitly given* delay:
+            // `connect` defaults to 0 ps (correct for intra-tile wiring),
+            // and a cross-tile hop silently left at the default would
+            // make every downstream timing number quietly wrong. An
+            // explicit 0 via `connect_with_delay` (idealized delay
+            // model) remains legal.
             for &succ in g.fan_out(id) {
                 let s = g.node(succ);
                 let dx = (s.x as i32 - node.x as i32).abs();
@@ -132,6 +138,16 @@ pub fn validate(ic: &Interconnect) -> Vec<Violation> {
                         rule: "edges-are-local",
                         detail: ctx(format!(
                             "{} -> {} spans non-adjacent tiles",
+                            node.qualified_name(),
+                            s.qualified_name()
+                        )),
+                    });
+                }
+                if dx + dy > 0 && !g.has_explicit_delay(id, succ) {
+                    out.push(Violation {
+                        rule: "wire-delay-missing",
+                        detail: ctx(format!(
+                            "{} -> {} crosses tiles with no explicit wire delay",
                             node.qualified_name(),
                             s.qualified_name()
                         )),
@@ -214,6 +230,41 @@ mod tests {
         ));
         let v = validate(&ic);
         assert!(v.iter().any(|v| v.rule == "sb-out-has-drivers"), "{v:?}");
+    }
+
+    #[test]
+    fn detects_missing_wire_delay_on_tile_crossing() {
+        // Build a 2x1 array with one cross-tile hop, wired by `wire`.
+        let crossing = |wire: fn(&mut RoutingGraph, crate::ir::NodeId, crate::ir::NodeId)| {
+            let tiles = vec![
+                Tile { x: 0, y: 0, core: CoreSpec::pe(16) },
+                Tile { x: 1, y: 0, core: CoreSpec::pe(16) },
+            ];
+            let mut ic = Interconnect::new(2, 1, tiles, "test".into());
+            ic.graphs.insert(16, RoutingGraph::new(16));
+            let g = ic.graph_mut(16);
+            let out = g.add_node(Node::new(
+                NodeKind::SwitchBox { side: Side::East, io: SbIo::Out, track: 0 },
+                0, 0, 16, 0,
+            ));
+            let inn = g.add_node(Node::new(
+                NodeKind::SwitchBox { side: Side::West, io: SbIo::In, track: 0 },
+                1, 0, 16, 0,
+            ));
+            wire(g, out, inn);
+            validate(&ic)
+        };
+        let missing = |v: &[Violation]| v.iter().any(|v| v.rule == "wire-delay-missing");
+
+        // Defaulted delay on a tile crossing: silent STA poison, flagged.
+        let v = crossing(|g, a, b| g.connect(a, b));
+        assert!(missing(&v), "{v:?}");
+        // The same hop with an explicit delay is clean.
+        let v = crossing(|g, a, b| g.connect_with_delay(a, b, 90));
+        assert!(!missing(&v), "{v:?}");
+        // An explicit zero (idealized delay model) is also clean.
+        let v = crossing(|g, a, b| g.connect_with_delay(a, b, 0));
+        assert!(!missing(&v), "{v:?}");
     }
 
     #[test]

@@ -280,18 +280,16 @@ pub fn legalize(
         let kind = app.node(id).op.core_kind();
         let (fx, fy) = (xs[id.index()], ys[id.index()]);
         let mut best: Option<(f32, u16, u16)> = None;
-        for y in 0..ic.height {
-            for x in 0..ic.width {
-                if used[y as usize * ic.width as usize + x as usize] {
-                    continue;
-                }
-                if ic.tile(x, y).core.kind != kind {
-                    continue;
-                }
-                let d = (x as f32 - fx).powi(2) + (y as f32 - fy).powi(2);
-                if best.map_or(true, |(bd, _, _)| d < bd) {
-                    best = Some((d, x, y));
-                }
+        // Scan only compatible sites (frozen per-kind lists, row-major —
+        // the same order as a full-grid scan, so tie-breaks are
+        // unchanged) instead of testing every tile's core kind.
+        for &(x, y) in ic.sites_of(kind) {
+            if used[y as usize * ic.width as usize + x as usize] {
+                continue;
+            }
+            let d = (x as f32 - fx).powi(2) + (y as f32 - fy).powi(2);
+            if best.map_or(true, |(bd, _, _)| d < bd) {
+                best = Some((d, x, y));
             }
         }
         let (_, x, y) = best.ok_or_else(|| {
@@ -524,7 +522,7 @@ pub fn detailed_place(
             let (ox, oy) = st.place.of(id);
             let tx = rng.below(ic.width as usize) as u16;
             let ty = rng.below(ic.height as usize) as u16;
-            if (tx, ty) == (ox, oy) || ic.tile(tx, ty).core.kind != kind {
+            if (tx, ty) == (ox, oy) || ic.core_kind_at(tx, ty) != kind {
                 continue;
             }
             let other = st.grid[st.tile_index(tx, ty)];

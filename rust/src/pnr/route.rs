@@ -11,7 +11,7 @@
 
 use std::collections::HashMap;
 
-use crate::ir::{CoreKind, Interconnect, NodeId, RoutingGraph};
+use crate::ir::{CompiledGraph, CoreKind, Interconnect, NodeId, RoutingGraph};
 
 use super::app::{AppGraph, AppNodeId, Net};
 use super::place::Placement;
@@ -156,7 +156,11 @@ impl Ord for Cost {
 }
 
 struct RouterState<'a> {
-    g: &'a RoutingGraph,
+    /// Frozen CSR graph — every inner-loop access (fan-out slices, wire
+    /// delays) is a flat-array read; no hashing, no `Vec<Vec<_>>` chase.
+    g: &'a CompiledGraph,
+    /// Builder graph, kept only for cold paths (names in error reports).
+    names: &'a RoutingGraph,
     params: RouterParams,
     /// Present occupancy per node (net count).
     occ: Vec<u16>,
@@ -173,8 +177,6 @@ struct RouterState<'a> {
     /// Tile coordinates per node.
     nx: Vec<f32>,
     ny: Vec<f32>,
-    /// Port-node flags (ports may not be route intermediates).
-    is_port: Vec<bool>,
     /// Flattened tile index per node.
     tile_of: Vec<u32>,
     // --- A* scratch arenas (allocated once, reset via `touched`) -------
@@ -216,18 +218,21 @@ pub fn route(
     bit_width: u8,
     params: &RouterParams,
 ) -> Result<RoutingResult, RoutingFailed> {
-    let g = ic.graph(bit_width);
+    // The frozen CSR graph drives the search; the builder graph only
+    // resolves terminal names (cold) and labels errors.
+    let g = ic.compiled(bit_width);
+    let rg = ic.graph(bit_width);
     let nets = app.nets();
 
     // Pre-resolve terminals.
     let mut terminals: Vec<(NodeId, Vec<NodeId>)> = Vec::with_capacity(nets.len());
     for net in &nets {
-        let src = terminal_node(g, app, placement, net.src, net.src_port, false)
+        let src = terminal_node(rg, app, placement, net.src, net.src_port, false)
             .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
         let sinks = net
             .sinks
             .iter()
-            .map(|&(s, p)| terminal_node(g, app, placement, s, p, true))
+            .map(|&(s, p)| terminal_node(rg, app, placement, s, p, true))
             .collect::<Result<Vec<_>, _>>()
             .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
         terminals.push((src, sinks));
@@ -242,15 +247,14 @@ pub fn route(
     let base: Vec<f64> = g
         .ids()
         .map(|id| {
-            let n = g.node(id);
-            let wire_out: u32 =
-                g.fan_out(id).iter().map(|&s| g.wire_delay(id, s)).max().unwrap_or(0);
-            1.0 + params.delay_weight * (n.delay_ps + wire_out) as f64 / 1000.0
+            let wire_out = g.max_out_wire_delay(id);
+            1.0 + params.delay_weight * (g.node_delay_ps(id) + wire_out) as f64 / 1000.0
         })
         .collect();
 
     let mut st = RouterState {
         g,
+        names: rg,
         params: *params,
         occ: vec![0; g.len()],
         hist: vec![0.0; g.len()],
@@ -258,15 +262,11 @@ pub fn route(
         ic_width: ic.width as usize,
         base,
         pres_fac: params.pres_fac_init,
-        nx: g.ids().map(|id| g.node(id).x as f32).collect(),
-        ny: g.ids().map(|id| g.node(id).y as f32).collect(),
-        is_port: g.ids().map(|id| g.node(id).kind.is_port()).collect(),
+        nx: g.ids().map(|id| g.x(id) as f32).collect(),
+        ny: g.ids().map(|id| g.y(id) as f32).collect(),
         tile_of: g
             .ids()
-            .map(|id| {
-                let n = g.node(id);
-                n.y as u32 * ic.width as u32 + n.x as u32
-            })
+            .map(|id| g.y(id) as u32 * ic.width as u32 + g.x(id) as u32)
             .collect(),
         dist: vec![f64::INFINITY; g.len()],
         prev: vec![u32::MAX; g.len()],
@@ -344,16 +344,9 @@ pub fn route(
     })
 }
 
-/// Delay along one path (node delays + wire delays).
-pub fn path_delay(g: &RoutingGraph, path: &[NodeId]) -> f64 {
-    let mut d = 0.0;
-    for (i, &n) in path.iter().enumerate() {
-        d += g.node(n).delay_ps as f64;
-        if i + 1 < path.len() {
-            d += g.wire_delay(n, path[i + 1]) as f64;
-        }
-    }
-    d
+/// Delay along one path (node delays + wire delays), on the frozen graph.
+pub fn path_delay(g: &CompiledGraph, path: &[NodeId]) -> f64 {
+    g.path_delay(path)
 }
 
 fn tree_nodes(paths: &[Vec<NodeId>]) -> Vec<NodeId> {
@@ -374,14 +367,11 @@ fn route_net(
 ) -> Result<Vec<Vec<NodeId>>, String> {
     let g = st.g;
     // Order sinks by manhattan distance from source.
-    let (sx, sy) = {
-        let n = g.node(src);
-        (n.x as i32, n.y as i32)
-    };
+    let (sx, sy) = (g.x(src) as i32, g.y(src) as i32);
     let mut order: Vec<usize> = (0..sinks.len()).collect();
     order.sort_by_key(|&i| {
-        let n = g.node(sinks[i]);
-        (n.x as i32 - sx).abs() + (n.y as i32 - sy).abs()
+        let s = sinks[i];
+        (g.x(s) as i32 - sx).abs() + (g.y(s) as i32 - sy).abs()
     });
 
     let mut tree: Vec<NodeId> = vec![src];
@@ -403,7 +393,7 @@ fn route_net(
             }
             None => {
                 result =
-                    Err(format!("no path to sink {}", g.node(sink).qualified_name()));
+                    Err(format!("no path to sink {}", st.names.node(sink).qualified_name()));
                 break;
             }
         }
@@ -456,7 +446,7 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
         for &succ in g.fan_out(n) {
             // Sinks of other nets (ports) are not usable as intermediates:
             // only the target sink's port node may terminate the search.
-            if st.is_port[succ.index()] && succ != sink {
+            if g.is_port(succ) && succ != sink {
                 continue;
             }
             let nd = d + st.node_cost(succ, crit);
@@ -646,7 +636,8 @@ mod tests {
         let (app, placement) = place("pointwise", &ic);
         let r = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
         let p = &r.trees[0].sink_paths[0];
-        let d = path_delay(g, p);
+        // Computed on the frozen graph; checked against the builder graph.
+        let d = path_delay(ic.compiled(16), p);
         assert!(d > 0.0);
         let manual: f64 = p.iter().map(|&n| g.node(n).delay_ps as f64).sum::<f64>()
             + p.windows(2).map(|w| g.wire_delay(w[0], w[1]) as f64).sum::<f64>();

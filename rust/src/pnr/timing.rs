@@ -51,7 +51,8 @@ pub fn analyze(
     workload_items: usize,
 ) -> TimingReport {
     let app = &packed.app;
-    let g = ic.graph(bit_width);
+    // Route delays are summed over the frozen CSR graph (hash-free).
+    let g = ic.compiled(bit_width);
 
     // Route delay per (src, src_port, dst, dst_port).
     let mut route_delay: HashMap<(AppNodeId, u8, AppNodeId, u8), f64> = HashMap::new();

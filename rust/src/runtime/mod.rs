@@ -7,12 +7,39 @@
 //! client, and drives the optimizer loop from
 //! [`crate::pnr::place::GlobalPlacer`]'s interface. Python never runs at
 //! request time.
+//!
+//! The PJRT executor itself needs the `xla` crate, which is not part of
+//! the offline dependency set, so it is gated behind the off-by-default
+//! `pjrt` cargo feature. Without the feature, [`PjrtPlacer::load`]
+//! reports that support is compiled out and every flow falls back to
+//! [`crate::pnr::place::NativePlacer`] (same objective, same step rule);
+//! artifact metadata and golden-vector parsing stay available either way.
 
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
-
 use crate::pnr::place::{GlobalPlacer, GlobalProblem};
+
+/// Self-contained runtime error (the offline build carries no
+/// error-handling dependencies).
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    pub fn new(msg: impl Into<String>) -> RuntimeError {
+        RuntimeError(msg.into())
+    }
+}
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
 
 /// Shape contract of the exported artifact (must match
 /// `python/compile/model.py` and `artifacts/placer_meta.txt`).
@@ -28,11 +55,14 @@ impl ArtifactMeta {
     /// Parse `placer_meta.txt` (flat `key = value` lines).
     pub fn from_file(path: &Path) -> Result<ArtifactMeta> {
         let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
+            .map_err(|e| RuntimeError::new(format!("reading {}: {e}", path.display())))?;
         let mut meta = ArtifactMeta { pad_n: 0, pad_m: 0, pad_k: 0, inner_steps: 0 };
         for line in text.lines() {
             let Some((k, v)) = line.split_once('=') else { continue };
-            let v: usize = v.trim().parse().with_context(|| format!("bad meta line `{line}`"))?;
+            let v: usize = v
+                .trim()
+                .parse()
+                .map_err(|e| RuntimeError::new(format!("bad meta line `{line}`: {e}")))?;
             match k.trim() {
                 "pad_n" => meta.pad_n = v,
                 "pad_m" => meta.pad_m = v,
@@ -42,22 +72,13 @@ impl ArtifactMeta {
             }
         }
         if meta.pad_n == 0 || meta.pad_m == 0 || meta.pad_k == 0 || meta.inner_steps == 0 {
-            bail!("incomplete artifact meta in {}", path.display());
+            return Err(RuntimeError::new(format!(
+                "incomplete artifact meta in {}",
+                path.display()
+            )));
         }
         Ok(meta)
     }
-}
-
-/// The PJRT-backed global placer (drop-in for `NativePlacer`).
-pub struct PjrtPlacer {
-    client: xla::PjRtClient,
-    step_exe: xla::PjRtLoadedExecutable,
-    meta: ArtifactMeta,
-    /// Total optimizer iterations per `optimize` call (rounded up to a
-    /// multiple of `meta.inner_steps`).
-    pub iters: usize,
-    /// Hyperparameters fed to the artifact: (lr, momentum, lambda_mem).
-    pub hyper: (f32, f32, f32),
 }
 
 /// Default artifacts directory, overridable with `CANAL_ARTIFACTS`.
@@ -67,22 +88,197 @@ pub fn artifacts_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl PjrtPlacer {
-    /// Load and compile the step artifact from a directory.
-    pub fn load(dir: &Path) -> Result<PjrtPlacer> {
-        let meta = ArtifactMeta::from_file(&dir.join("placer_meta.txt"))?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        let step_path = dir.join("placer_step.hlo.txt");
-        let proto = xla::HloModuleProto::from_text_file(
-            step_path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing {}", step_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let step_exe = client.compile(&comp).context("compiling placer_step")?;
-        Ok(PjrtPlacer { client, step_exe, meta, iters: 150, hyper: (0.12, 0.9, 0.4) })
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+
+    /// The PJRT-backed global placer (drop-in for `NativePlacer`).
+    pub struct PjrtPlacer {
+        client: xla::PjRtClient,
+        step_exe: xla::PjRtLoadedExecutable,
+        meta: ArtifactMeta,
+        /// Total optimizer iterations per `optimize` call (rounded up to a
+        /// multiple of `meta.inner_steps`).
+        pub iters: usize,
+        /// Hyperparameters fed to the artifact: (lr, momentum, lambda_mem).
+        pub hyper: (f32, f32, f32),
     }
 
-    /// Load from the default artifacts directory.
+    fn err(what: &str) -> impl Fn(xla::Error) -> RuntimeError + '_ {
+        move |e| RuntimeError::new(format!("{what}: {e}"))
+    }
+
+    impl PjrtPlacer {
+        /// Load and compile the step artifact from a directory.
+        pub fn load(dir: &Path) -> Result<PjrtPlacer> {
+            let meta = ArtifactMeta::from_file(&dir.join("placer_meta.txt"))?;
+            let client = xla::PjRtClient::cpu().map_err(err("creating PJRT CPU client"))?;
+            let step_path = dir.join("placer_step.hlo.txt");
+            let step_str = step_path
+                .to_str()
+                .ok_or_else(|| RuntimeError::new("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(step_str)
+                .map_err(|e| RuntimeError::new(format!("parsing {}: {e}", step_path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let step_exe = client.compile(&comp).map_err(err("compiling placer_step"))?;
+            Ok(PjrtPlacer { client, step_exe, meta, iters: 150, hyper: (0.12, 0.9, 0.4) })
+        }
+
+        /// Load from the default artifacts directory.
+        pub fn load_default() -> Result<PjrtPlacer> {
+            Self::load(&artifacts_dir())
+        }
+
+        pub fn meta(&self) -> ArtifactMeta {
+            self.meta
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Pad a problem into artifact shapes.
+        fn pad_problem(&self, p: &GlobalProblem) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
+            let m = self.meta;
+            if p.n_nodes > m.pad_n {
+                return Err(RuntimeError::new(format!(
+                    "problem has {} nodes > artifact pad {}",
+                    p.n_nodes, m.pad_n
+                )));
+            }
+            if p.pins.len() > m.pad_m {
+                return Err(RuntimeError::new(format!(
+                    "problem has {} nets > artifact pad {}",
+                    p.pins.len(),
+                    m.pad_m
+                )));
+            }
+            let mut pins = vec![-1i32; m.pad_m * m.pad_k];
+            for (i, net) in p.pins.iter().enumerate() {
+                if net.len() > m.pad_k {
+                    return Err(RuntimeError::new(format!(
+                        "net {i} has {} pins > artifact pad {}",
+                        net.len(),
+                        m.pad_k
+                    )));
+                }
+                for (j, &v) in net.iter().enumerate() {
+                    pins[i * m.pad_k + j] = v;
+                }
+            }
+            let mut col = vec![0f32; m.pad_n];
+            let mut colm = vec![0f32; m.pad_n];
+            for (i, c) in p.column_pull.iter().enumerate() {
+                if let Some(c) = c {
+                    col[i] = *c;
+                    colm[i] = 1.0;
+                }
+            }
+            Ok((pins, col, colm))
+        }
+
+        /// One artifact invocation: `inner_steps` optimizer steps.
+        #[allow(clippy::too_many_arguments)]
+        pub fn call_step(
+            &self,
+            xs: &[f32],
+            ys: &[f32],
+            vx: &[f32],
+            vy: &[f32],
+            pins: &[i32],
+            col: &[f32],
+            colm: &[f32],
+            bounds: [f32; 2],
+            hyper: [f32; 3],
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+            let m = self.meta;
+            let args = [
+                xla::Literal::vec1(xs),
+                xla::Literal::vec1(ys),
+                xla::Literal::vec1(vx),
+                xla::Literal::vec1(vy),
+                xla::Literal::vec1(pins)
+                    .reshape(&[m.pad_m as i64, m.pad_k as i64])
+                    .map_err(err("reshaping pins"))?,
+                xla::Literal::vec1(col),
+                xla::Literal::vec1(colm),
+                xla::Literal::vec1(&bounds),
+                xla::Literal::vec1(&hyper),
+            ];
+            let result = self
+                .step_exe
+                .execute::<xla::Literal>(&args)
+                .map_err(err("executing placer_step"))?[0][0]
+                .to_literal_sync()
+                .map_err(err("syncing result"))?;
+            let (oxs, oys, ovx, ovy) = result.to_tuple4().map_err(err("untupling result"))?;
+            Ok((
+                oxs.to_vec().map_err(err("reading xs"))?,
+                oys.to_vec().map_err(err("reading ys"))?,
+                ovx.to_vec().map_err(err("reading vx"))?,
+                ovy.to_vec().map_err(err("reading vy"))?,
+            ))
+        }
+    }
+
+    impl GlobalPlacer for PjrtPlacer {
+        fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+            let m = self.meta;
+            let (pins, col, colm) =
+                self.pad_problem(p).expect("problem exceeds artifact padding");
+            let mut xs = vec![0f32; m.pad_n];
+            let mut ys = vec![0f32; m.pad_n];
+            xs[..p.n_nodes].copy_from_slice(xs0);
+            ys[..p.n_nodes].copy_from_slice(ys0);
+            let mut vx = vec![0f32; m.pad_n];
+            let mut vy = vec![0f32; m.pad_n];
+            let bounds = [p.width - 1.0, p.height - 1.0];
+            let hyper = [self.hyper.0, self.hyper.1, self.hyper.2];
+
+            let calls = self.iters.div_ceil(m.inner_steps);
+            for _ in 0..calls {
+                let (nxs, nys, nvx, nvy) = self
+                    .call_step(&xs, &ys, &vx, &vy, &pins, &col, &colm, bounds, hyper)
+                    .expect("artifact execution failed");
+                xs = nxs;
+                ys = nys;
+                vx = nvx;
+                vy = nvy;
+            }
+            xs.truncate(p.n_nodes);
+            ys.truncate(p.n_nodes);
+            (xs, ys)
+        }
+
+        fn name(&self) -> &'static str {
+            "pjrt-jax-pallas"
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtPlacer;
+
+/// Stub placer used when the crate is built without the `pjrt` feature:
+/// [`PjrtPlacer::load`] always fails, so callers take their native
+/// fallback path. The type still exists (and implements `GlobalPlacer`)
+/// so call sites compile identically with and without the feature.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtPlacer {
+    meta: ArtifactMeta,
+    pub iters: usize,
+    pub hyper: (f32, f32, f32),
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtPlacer {
+    pub fn load(_dir: &Path) -> Result<PjrtPlacer> {
+        Err(RuntimeError::new(
+            "PJRT support not compiled in: vendor the `xla` crate, declare it \
+             in rust/Cargo.toml, and build with `--features pjrt`",
+        ))
+    }
+
     pub fn load_default() -> Result<PjrtPlacer> {
         Self::load(&artifacts_dir())
     }
@@ -92,100 +288,18 @@ impl PjrtPlacer {
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Pad a problem into artifact shapes.
-    fn pad_problem(&self, p: &GlobalProblem) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>)> {
-        let m = self.meta;
-        if p.n_nodes > m.pad_n {
-            bail!("problem has {} nodes > artifact pad {}", p.n_nodes, m.pad_n);
-        }
-        if p.pins.len() > m.pad_m {
-            bail!("problem has {} nets > artifact pad {}", p.pins.len(), m.pad_m);
-        }
-        let mut pins = vec![-1i32; m.pad_m * m.pad_k];
-        for (i, net) in p.pins.iter().enumerate() {
-            if net.len() > m.pad_k {
-                bail!("net {i} has {} pins > artifact pad {}", net.len(), m.pad_k);
-            }
-            for (j, &v) in net.iter().enumerate() {
-                pins[i * m.pad_k + j] = v;
-            }
-        }
-        let mut col = vec![0f32; m.pad_n];
-        let mut colm = vec![0f32; m.pad_n];
-        for (i, c) in p.column_pull.iter().enumerate() {
-            if let Some(c) = c {
-                col[i] = *c;
-                colm[i] = 1.0;
-            }
-        }
-        Ok((pins, col, colm))
-    }
-
-    /// One artifact invocation: `inner_steps` optimizer steps.
-    #[allow(clippy::too_many_arguments)]
-    pub fn call_step(
-        &self,
-        xs: &[f32],
-        ys: &[f32],
-        vx: &[f32],
-        vy: &[f32],
-        pins: &[i32],
-        col: &[f32],
-        colm: &[f32],
-        bounds: [f32; 2],
-        hyper: [f32; 3],
-    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
-        let m = self.meta;
-        let args = [
-            xla::Literal::vec1(xs),
-            xla::Literal::vec1(ys),
-            xla::Literal::vec1(vx),
-            xla::Literal::vec1(vy),
-            xla::Literal::vec1(pins).reshape(&[m.pad_m as i64, m.pad_k as i64])?,
-            xla::Literal::vec1(col),
-            xla::Literal::vec1(colm),
-            xla::Literal::vec1(&bounds),
-            xla::Literal::vec1(&hyper),
-        ];
-        let result = self.step_exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
-        let (oxs, oys, ovx, ovy) = result.to_tuple4()?;
-        Ok((oxs.to_vec()?, oys.to_vec()?, ovx.to_vec()?, ovy.to_vec()?))
+        "unavailable".to_string()
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
 impl GlobalPlacer for PjrtPlacer {
-    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let m = self.meta;
-        let (pins, col, colm) = self.pad_problem(p).expect("problem exceeds artifact padding");
-        let mut xs = vec![0f32; m.pad_n];
-        let mut ys = vec![0f32; m.pad_n];
-        xs[..p.n_nodes].copy_from_slice(xs0);
-        ys[..p.n_nodes].copy_from_slice(ys0);
-        let mut vx = vec![0f32; m.pad_n];
-        let mut vy = vec![0f32; m.pad_n];
-        let bounds = [p.width - 1.0, p.height - 1.0];
-        let hyper = [self.hyper.0, self.hyper.1, self.hyper.2];
-
-        let calls = self.iters.div_ceil(m.inner_steps);
-        for _ in 0..calls {
-            let (nxs, nys, nvx, nvy) = self
-                .call_step(&xs, &ys, &vx, &vy, &pins, &col, &colm, bounds, hyper)
-                .expect("artifact execution failed");
-            xs = nxs;
-            ys = nys;
-            vx = nvx;
-            vy = nvy;
-        }
-        xs.truncate(p.n_nodes);
-        ys.truncate(p.n_nodes);
-        (xs, ys)
+    fn optimize(&self, _p: &GlobalProblem, _xs0: &[f32], _ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        unreachable!("stub PjrtPlacer cannot be constructed")
     }
 
     fn name(&self) -> &'static str {
-        "pjrt-jax-pallas"
+        "pjrt-unavailable"
     }
 }
 
@@ -196,7 +310,8 @@ pub struct TestVec {
 
 impl TestVec {
     pub fn from_file(path: &Path) -> Result<TestVec> {
-        let text = std::fs::read_to_string(path)?;
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| RuntimeError::new(format!("reading {}: {e}", path.display())))?;
         let mut fields = std::collections::HashMap::new();
         for line in text.lines() {
             let mut it = line.split_whitespace();
@@ -211,8 +326,6 @@ impl TestVec {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pnr::pack::pack;
-    use crate::pnr::place::{build_global_problem, initial_positions, NativePlacer};
 
     fn have_artifacts() -> bool {
         artifacts_dir().join("placer_step.hlo.txt").exists()
@@ -228,6 +341,26 @@ mod tests {
         assert!(m.pad_n >= 64 && m.pad_m >= 128 && m.inner_steps >= 1);
     }
 
+    #[test]
+    fn meta_rejects_incomplete_files() {
+        let dir = std::env::temp_dir().join("canal-runtime-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("placer_meta.txt");
+        std::fs::write(&path, "pad_n = 64\npad_m = 128\n").unwrap();
+        assert!(ArtifactMeta::from_file(&path).is_err());
+        std::fs::write(&path, "pad_n = 64\npad_m = 128\npad_k = 8\ninner_steps = 10\n").unwrap();
+        let m = ArtifactMeta::from_file(&path).unwrap();
+        assert_eq!(m, ArtifactMeta { pad_n: 64, pad_m: 128, pad_k: 8, inner_steps: 10 });
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_placer_reports_missing_feature() {
+        let e = PjrtPlacer::load_default().unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
+    }
+
+    #[cfg(feature = "pjrt")]
     #[test]
     fn artifact_matches_python_golden_vector() {
         if !have_artifacts() {
@@ -270,8 +403,11 @@ mod tests {
         assert_eq!(m.pad_n, xs.len());
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_placer_agrees_with_native_on_final_cost() {
+        use crate::pnr::pack::pack;
+        use crate::pnr::place::{build_global_problem, initial_positions, NativePlacer};
         if !have_artifacts() {
             eprintln!("skipping: run `make artifacts` first");
             return;

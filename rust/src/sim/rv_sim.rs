@@ -83,12 +83,12 @@ pub fn channel_capacities(
     let mut caps = HashMap::new();
     match routing {
         Some((ic, bw, routing)) => {
-            let g = ic.graph(bw);
+            let g = ic.compiled(bw);
             for tree in &routing.trees {
                 for (k, &(dst, dport)) in tree.net.sinks.iter().enumerate() {
                     let regs = tree.sink_paths[k]
                         .iter()
-                        .filter(|&&n| g.node(n).kind.is_register())
+                        .filter(|&&n| g.is_register(n))
                         .count();
                     caps.insert(
                         (tree.net.src, tree.net.src_port, dst, dport),

@@ -8,11 +8,12 @@
 use std::collections::HashMap;
 
 use crate::bitstream::Configuration;
-use crate::ir::{Interconnect, NodeId, RoutingGraph};
+use crate::ir::{CompiledGraph, Interconnect, NodeId};
 
 /// One configured simulation instance over a single bit-width layer.
+/// Propagation walks the frozen CSR graph's fan-in slices.
 pub struct StaticSim<'a> {
-    g: &'a RoutingGraph,
+    g: &'a CompiledGraph,
     bit_width: u8,
     cfg: &'a Configuration,
     injected: HashMap<NodeId, u64>,
@@ -20,7 +21,7 @@ pub struct StaticSim<'a> {
 
 impl<'a> StaticSim<'a> {
     pub fn new(ic: &'a Interconnect, bit_width: u8, cfg: &'a Configuration) -> Self {
-        StaticSim { g: ic.graph(bit_width), bit_width, cfg, injected: HashMap::new() }
+        StaticSim { g: ic.compiled(bit_width), bit_width, cfg, injected: HashMap::new() }
     }
 
     /// Drive a node with a value (typically a core output port).

@@ -33,8 +33,12 @@ impl SweepReport {
 /// simulation, covering the encode/decode path.
 pub fn sweep_connections(ic: &Interconnect, cs: Option<&ConfigSpace>) -> SweepReport {
     let mut report = SweepReport::default();
-    for (&bw, g) in &ic.graphs {
-        for (node, _) in g.iter() {
+    for bw in ic.bit_widths() {
+        // Enumerate connections off the frozen CSR view; the builder
+        // graph is only consulted to name nodes in failure reports.
+        let g = ic.compiled(bw);
+        let names = ic.graph(bw);
+        for node in g.ids() {
             let fan_in = g.fan_in(node).to_vec();
             if fan_in.is_empty() {
                 continue;
@@ -71,8 +75,8 @@ pub fn sweep_connections(ic: &Interconnect, cs: Option<&ConfigSpace>) -> SweepRe
                 if sim.value(node) != Some(magic) {
                     report.failures.push(format!(
                         "width {bw}: {} -> {} (select {sel}) did not deliver",
-                        g.node(driver).qualified_name(),
-                        g.node(node).qualified_name(),
+                        names.node(driver).qualified_name(),
+                        names.node(node).qualified_name(),
                     ));
                 }
             }

@@ -378,6 +378,96 @@ fn prop_disassembly_complete_and_valid() {
     }
 }
 
+/// Property: the frozen CSR `CompiledGraph` is observationally equivalent
+/// to the builder `RoutingGraph` it was compiled from, on random
+/// DSL-built interconnects — same fan-in order (mux-select encodings),
+/// same fan-out sets, same wire delays, same node attributes.
+#[test]
+fn prop_compiled_graph_matches_routing_graph() {
+    let mut rng = Rng::new(0xC5A11);
+    for case in 0..40 {
+        let cfg = random_config(&mut rng);
+        let ic = create_uniform_interconnect(&cfg);
+        for bw in ic.bit_widths() {
+            let g = ic.graph(bw);
+            let c = ic.compiled(bw);
+            assert_eq!(g.width, c.width, "case {case}");
+            assert_eq!(g.len(), c.len(), "case {case}");
+            assert_eq!(g.edge_count(), c.edge_count(), "case {case}");
+            for (id, n) in g.iter() {
+                // Fan-in order IS the mux-select encoding; it must
+                // survive the freeze exactly.
+                assert_eq!(g.fan_in(id), c.fan_in(id), "case {case}: fan-in of {id}");
+                assert_eq!(g.fan_out(id), c.fan_out(id), "case {case}: fan-out of {id}");
+                assert_eq!(
+                    (n.x, n.y, n.delay_ps),
+                    (c.x(id), c.y(id), c.node_delay_ps(id)),
+                    "case {case}: attrs of {id}"
+                );
+                assert_eq!(n.kind.is_port(), c.is_port(id), "case {case}");
+                assert_eq!(n.kind.is_register(), c.is_register(id), "case {case}");
+                for &src in g.fan_in(id) {
+                    assert_eq!(
+                        g.wire_delay(src, id),
+                        c.wire_delay(src, id),
+                        "case {case}: delay {src} -> {id}"
+                    );
+                    assert_eq!(
+                        g.select_of(id, src),
+                        c.select_of(id, src),
+                        "case {case}: select {src} -> {id}"
+                    );
+                }
+                let max_wire =
+                    g.fan_out(id).iter().map(|&s| g.wire_delay(id, s)).max().unwrap_or(0);
+                assert_eq!(max_wire, c.max_out_wire_delay(id), "case {case}");
+            }
+        }
+    }
+}
+
+/// End to end: routing Harris through the compiled hot path yields a
+/// bitstream bit-identical to one whose selects are re-derived from the
+/// builder graph's insertion-order adjacency (the seed path's semantics).
+#[test]
+fn e2e_compiled_harris_bitstream_matches_builder_graph_path() {
+    use canal::pnr::{run_flow, FlowParams};
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 8, ..Default::default() },
+        ..Default::default()
+    };
+    let r = run_flow(&ic, &canal::apps::harris(), &params).unwrap();
+
+    // Hot path: selects derived via the CompiledGraph (the normal API).
+    let via_compiled = Configuration::from_routing(&ic, 16, &r.routing).unwrap();
+
+    // Reference path: every select recomputed from the builder graph.
+    let g = ic.graph(16);
+    let mut reference = Configuration::default();
+    for tree in &r.routing.trees {
+        for path in &tree.sink_paths {
+            for w in path.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                if g.fan_in(b).len() > 1 {
+                    let sel = g.select_of(b, a).expect("route uses a real edge") as u32;
+                    reference.selects.insert((16, b), sel);
+                }
+                if g.node(b).kind.is_register() {
+                    reference.reg_modes.insert((16, b), 0);
+                }
+            }
+        }
+    }
+    assert_eq!(via_compiled, reference);
+
+    let cs = allocate(&ic);
+    let hot = encode(&via_compiled, &cs).to_text();
+    let seed = encode(&reference, &cs).to_text();
+    assert_eq!(hot, seed, "compiled-path bitstream must be bit-identical");
+    assert!(!hot.is_empty());
+}
+
 /// Property: the NoC simulator delivers exactly tokens x sink-edges
 /// packets for every random placed app, with latency at least the hop
 /// count of the farthest flow.
