@@ -98,6 +98,39 @@ fn main() {
     });
     println!("{s}");
 
+    // --- L3: DSE sweep throughput (cold vs warm cache) --------------------
+    {
+        use canal::dse::{DseEngine, SweepSpec};
+        let spec = SweepSpec {
+            name: "bench_sweep".into(),
+            base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+            tracks: vec![4, 5],
+            apps: vec!["pointwise".into(), "gaussian".into()],
+            seeds: vec![1, 2],
+            flow: canal::pnr::FlowParams {
+                sa: SaParams { moves_per_node: 6, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut engine = DseEngine::in_memory();
+        let t0 = std::time::Instant::now();
+        let cold = engine.run(&spec, &NativePlacer::default()).unwrap();
+        let cold_s = t0.elapsed().as_secs_f64();
+        let n = cold.points.len() as f64;
+        println!(
+            "dse sweep cold ({} points, {} pnr runs)          {:.3}s   [{:.1} points/s]",
+            cold.points.len(),
+            cold.stats.pnr_runs,
+            cold_s,
+            n / cold_s
+        );
+        let s = bench("dse sweep warm (cache-hit path)", 500, budget, || {
+            black_box(engine.run(&spec, &NativePlacer::default()).unwrap());
+        });
+        println!("{s}   [{:.0} points/s warm]", n * s.throughput_per_sec());
+    }
+
     // --- L2/L1: global placement backends ---------------------------------
     let packed16 = pack(&apps::harris());
     let problem16 = build_global_problem(&packed16.app, &ic16);

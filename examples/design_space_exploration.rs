@@ -2,19 +2,48 @@
 //! explores — switch-box topology, routing tracks, and core connection
 //! sides — and print the paper-style tables.
 //!
+//! The sweeps run through the sharded `canal::dse` engine: one engine
+//! instance is shared across the five engine-backed figures, so
+//! overlapping points are PnR'd once, and results persist in
+//! `dse_cache.json` — on a warm re-run the engine performs zero PnR
+//! calls (the fig13 area table and the alpha ablation at the end run
+//! outside the engine and recompute every time).
+//!
 //! Run: `cargo run --release --example design_space_exploration`
 
 use canal::coordinator::{self, ExpOptions};
+use canal::dse::{DseEngine, EngineOptions};
 
 fn main() {
     let o = ExpOptions { sa_moves: 10, ..Default::default() };
     let placer = coordinator::default_placer();
+    let mut engine = DseEngine::new(EngineOptions {
+        workers: 0, // one per core
+        cache_path: Some("dse_cache.json".into()),
+    })
+    .expect("dse engine");
 
-    println!("{}", coordinator::fig09_topology(&o).render());
-    println!("{}", coordinator::fig10_area_tracks().render());
-    println!("{}", coordinator::fig11_runtime_tracks(&o, placer.as_ref()).render());
+    println!("{}", coordinator::fig09_topology_with(&o, &mut engine).render());
+    println!("{}", coordinator::fig10_area_tracks_with(&mut engine).render());
+    println!(
+        "{}",
+        coordinator::fig11_runtime_tracks_with(&o, placer.as_ref(), &mut engine).render()
+    );
     println!("{}", coordinator::fig13_port_area().render());
-    println!("{}", coordinator::fig14_sb_ports_runtime(&o, placer.as_ref()).render());
-    println!("{}", coordinator::fig15_cb_ports_runtime(&o, placer.as_ref()).render());
+    println!(
+        "{}",
+        coordinator::fig14_sb_ports_runtime_with(&o, placer.as_ref(), &mut engine).render()
+    );
+    println!(
+        "{}",
+        coordinator::fig15_cb_ports_runtime_with(&o, placer.as_ref(), &mut engine).render()
+    );
     println!("{}", coordinator::alpha_sweep(&o).render());
+
+    let s = engine.lifetime_stats();
+    println!(
+        "dse engine: {} jobs, {} cache hits, {} PnR runs, {} configs built, {} steals",
+        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.steals
+    );
+    println!("cache: {} entries in dse_cache.json", engine.cache().len());
 }

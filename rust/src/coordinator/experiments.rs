@@ -4,9 +4,18 @@
 //! evaluation section as a [`Table`]; `benches/` and the `canal
 //! experiment` CLI subcommand print them. DESIGN.md §5 maps experiments
 //! to modules; EXPERIMENTS.md records measured-vs-paper outcomes.
+//!
+//! The sweep-shaped figures (fig09/10/11/14/15) are thin formatters over
+//! the [`crate::dse`] engine: each builds a [`SweepSpec`], lets the
+//! sharded executor run (or cache-hit) the points, and lays the results
+//! out in the paper's table shape. The `figNN_*_with` variants take a
+//! caller-owned [`DseEngine`] so successive figures share one result
+//! cache; the plain variants run on a throwaway in-memory engine and
+//! produce the same bytes.
 
 use crate::apps;
 use crate::area::{area_of, AreaModel, FabricMode};
+use crate::dse::{dense_suite_keys, suite_keys, DseEngine, SweepSpec};
 use crate::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig, SbTopology};
 use crate::pnr::{run_flow_with, FlowParams, FlowResult, GlobalPlacer, NativePlacer, SaParams};
 use crate::sim::{FabricKind, RvSim, StallPattern};
@@ -135,55 +144,52 @@ pub fn tight_array(app: &crate::pnr::AppGraph, mem_period: u16, slack: f64) -> (
 /// track planes and most of the gap closes — disclosed in the
 /// third/fourth columns and in EXPERIMENTS.md.
 pub fn fig09_topology(o: &ExpOptions) -> Table {
+    fig09_topology_with(o, &mut DseEngine::in_memory())
+}
+
+/// [`fig09_topology`] on a caller-owned engine, so the five figure sweeps
+/// can share one result cache (overlapping points run PnR once).
+pub fn fig09_topology_with(o: &ExpOptions, engine: &mut DseEngine) -> Table {
     use crate::dsl::OutputTrackMode;
     let mut t = Table::new(
         "Fig. 9 — switch-box topology routability (app-runs routed / total, 3 seeds)",
         &["tracks", "wilton(pinned)", "disjoint(pinned)", "wilton(all)", "disjoint(all)"],
     );
-    let suite = apps::dense_suite();
+    let apps = dense_suite_keys();
     let seeds: Vec<u64> = (0..o.seeds as u64).map(|i| o.seed + i).collect();
+    let total = apps.len() * seeds.len();
+    // One engine run covers the whole 3x2x2 grid: the executor shards
+    // every (config, app, seed) point over the worker pool, freezing each
+    // interconnect once and sharing its compiled graphs via `Arc`.
+    let spec = SweepSpec {
+        name: "fig09_topology".into(),
+        base: InterconnectConfig {
+            width: 10,
+            height: 10,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks: vec![3, 4, 5],
+        topologies: vec![SbTopology::Wilton, SbTopology::Disjoint],
+        output_tracks: vec![OutputTrackMode::Pinned, OutputTrackMode::AllTracks],
+        apps,
+        seeds,
+        flow: flow_params(o),
+        ..Default::default()
+    };
+    let out = engine.run(&spec, &NativePlacer::default()).expect("fig09 sweep");
     for tracks in [3u16, 4, 5] {
         let count = |topo: SbTopology, mode: OutputTrackMode| {
-            // Build and freeze the interconnect once per sweep point; all
-            // seeds and app threads share the immutable compiled graphs
-            // by reference instead of regenerating them per run.
-            let cfg = InterconnectConfig {
-                width: 10,
-                height: 10,
-                num_tracks: tracks,
-                sb_topology: topo,
-                mem_column_period: 3,
-                output_tracks: mode,
-                ..Default::default()
-            };
-            let ic = create_uniform_interconnect(&cfg);
-            let mut ok = 0;
-            for &seed in &seeds {
-                let params = FlowParams {
-                    seed,
-                    sa: SaParams { moves_per_node: o.sa_moves, ..Default::default() },
-                    ..Default::default()
-                };
-                ok += std::thread::scope(|s| {
-                    let hs: Vec<_> = suite
-                        .iter()
-                        .map(|app| {
-                            let (params, ic) = (&params, &ic);
-                            s.spawn(move || {
-                                run_flow_with(ic, app, params, &NativePlacer::default())
-                                    .is_ok()
-                            })
-                        })
-                        .collect();
-                    hs.into_iter()
-                        .map(|h| h.join().unwrap_or(false))
-                        .filter(|&b| b)
-                        .count()
-                });
-            }
-            ok
+            out.points
+                .iter()
+                .filter(|(job, r)| {
+                    job.cfg.num_tracks == tracks
+                        && job.cfg.sb_topology == topo
+                        && job.cfg.output_tracks == mode
+                        && r.routed
+                })
+                .count()
         };
-        let total = suite.len() * seeds.len();
         t.row(vec![
             tracks.to_string(),
             format!("{}/{total}", count(SbTopology::Wilton, OutputTrackMode::Pinned)),
@@ -199,22 +205,31 @@ pub fn fig09_topology(o: &ExpOptions) -> Table {
 
 /// Fig. 10: SB and CB area vs number of routing tracks.
 pub fn fig10_area_tracks() -> Table {
-    let model = AreaModel::default();
+    fig10_area_tracks_with(&mut DseEngine::in_memory())
+}
+
+/// [`fig10_area_tracks`] on a caller-owned engine (area-only sweep: the
+/// engine evaluates per-config metrics, no PnR jobs).
+pub fn fig10_area_tracks_with(engine: &mut DseEngine) -> Table {
     let mut t = Table::new(
         "Fig. 10 — SB and CB area vs routing tracks (um^2, interior tile)",
         &["tracks", "sb_area_um2", "cb_area_um2"],
     );
-    for tracks in 2..=8u16 {
-        let cfg = InterconnectConfig {
+    let spec = SweepSpec {
+        name: "fig10_area_tracks".into(),
+        base: InterconnectConfig {
             width: 6,
             height: 6,
-            num_tracks: tracks,
             mem_column_period: 0,
             ..Default::default()
-        };
-        let ic = create_uniform_interconnect(&cfg);
-        let tile = area_of(&ic, &model, FabricMode::Static).interior_tile(&ic);
-        t.row(vec![tracks.to_string(), fmt(tile.sb_um2), fmt(tile.cb_um2)]);
+        },
+        tracks: (2..=8).collect(),
+        area: true,
+        ..Default::default()
+    };
+    let out = engine.run(&spec, &NativePlacer::default()).expect("fig10 sweep");
+    for a in &out.areas {
+        t.row(vec![a.tracks.to_string(), fmt(a.sb_um2), fmt(a.cb_um2)]);
     }
     t.note("paper: both scale with track count (SB ~linear, CB ~linear)");
     t
@@ -227,43 +242,40 @@ pub fn fig10_area_tracks() -> Table {
 /// pressure fewer tracks force detours → longer critical paths → longer
 /// run times, the paper's <25% effect.
 pub fn fig11_runtime_tracks(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync)) -> Table {
-    let tracks_axis = [3u16, 4, 5, 6, 7];
+    fig11_runtime_tracks_with(o, placer, &mut DseEngine::in_memory())
+}
+
+/// [`fig11_runtime_tracks`] on a caller-owned engine.
+pub fn fig11_runtime_tracks_with(
+    o: &ExpOptions,
+    placer: &(dyn GlobalPlacer + Sync),
+    engine: &mut DseEngine,
+) -> Table {
+    use crate::dse::Sizing;
     let mut t = Table::new(
         "Fig. 11 — application run time vs routing tracks (us, 4096-item stream)",
         &["app", "t=3", "t=4", "t=5", "t=6", "t=7"],
     );
-    let suite = apps::dense_suite();
+    let spec = SweepSpec {
+        name: "fig11_runtime_tracks".into(),
+        base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+        tracks: vec![3, 4, 5, 6, 7],
+        sizing: Sizing::TightArray { slack: 1.25 },
+        apps: dense_suite_keys(),
+        seeds: vec![o.seed],
+        flow: flow_params(o),
+        ..Default::default()
+    };
+    let out = engine.run(&spec, placer).expect("fig11 sweep");
+    // Points arrive tracks-major (canonical order), so each app's cells
+    // accumulate left-to-right across the track axis.
     let mut per_app: std::collections::BTreeMap<String, Vec<String>> = Default::default();
-    for &tracks in &tracks_axis {
-        let params = flow_params(o);
-        let results: Vec<(String, Option<f64>)> = std::thread::scope(|s| {
-            let hs: Vec<_> = suite
-                .iter()
-                .map(|app| {
-                    let params = &params;
-                    s.spawn(move || {
-                        let (w, h) = tight_array(app, 3, 1.25);
-                        let cfg = InterconnectConfig {
-                            width: w,
-                            height: h,
-                            num_tracks: tracks,
-                            mem_column_period: 3,
-                            ..Default::default()
-                        };
-                        let ic = create_uniform_interconnect(&cfg);
-                        let r = run_flow_with(&ic, app, params, placer).ok();
-                        (app.name.clone(), r.map(|r| r.timing.runtime_ns / 1000.0))
-                    })
-                })
-                .collect();
-            hs.into_iter().map(|h| h.join().expect("fig11 thread")).collect()
+    for (job, r) in &out.points {
+        per_app.entry(job.app_name.clone()).or_default().push(if r.routed {
+            fmt(r.runtime_us())
+        } else {
+            "unroutable".into()
         });
-        for (name, r) in results {
-            per_app.entry(name).or_default().push(match r {
-                Some(us) => fmt(us),
-                None => "unroutable".into(),
-            });
-        }
     }
     for (app, cells) in per_app {
         let mut row = vec![app];
@@ -300,35 +312,66 @@ pub fn fig13_port_area() -> Table {
 
 /// Fig. 14: run time vs SB core-output connection sides.
 pub fn fig14_sb_ports_runtime(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync)) -> Table {
-    ports_runtime(o, placer, true)
+    ports_runtime_with(o, placer, true, &mut DseEngine::in_memory())
 }
 
 /// Fig. 15: run time vs CB input connection sides.
 pub fn fig15_cb_ports_runtime(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync)) -> Table {
-    ports_runtime(o, placer, false)
+    ports_runtime_with(o, placer, false, &mut DseEngine::in_memory())
 }
 
-fn ports_runtime(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync), sb: bool) -> Table {
+/// [`fig14_sb_ports_runtime`] on a caller-owned engine.
+pub fn fig14_sb_ports_runtime_with(
+    o: &ExpOptions,
+    placer: &(dyn GlobalPlacer + Sync),
+    engine: &mut DseEngine,
+) -> Table {
+    ports_runtime_with(o, placer, true, engine)
+}
+
+/// [`fig15_cb_ports_runtime`] on a caller-owned engine.
+pub fn fig15_cb_ports_runtime_with(
+    o: &ExpOptions,
+    placer: &(dyn GlobalPlacer + Sync),
+    engine: &mut DseEngine,
+) -> Table {
+    ports_runtime_with(o, placer, false, engine)
+}
+
+fn ports_runtime_with(
+    o: &ExpOptions,
+    placer: &(dyn GlobalPlacer + Sync),
+    sb: bool,
+    engine: &mut DseEngine,
+) -> Table {
     let what = if sb { "SB core-output" } else { "CB core-input" };
     let figno = if sb { 14 } else { 15 };
     let mut t = Table::new(
         &format!("Fig. {figno} — run time vs {what} connection sides (us)"),
         &["app", "sides=4", "sides=3", "sides=2"],
     );
+    let mut spec = SweepSpec {
+        name: format!("fig{figno}_ports_runtime"),
+        base: base_config(o),
+        apps: suite_keys(),
+        seeds: vec![o.seed],
+        flow: flow_params(o),
+        ..Default::default()
+    };
+    if sb {
+        spec.sb_sides = vec![4, 3, 2];
+    } else {
+        spec.cb_sides = vec![4, 3, 2];
+    }
+    let out = engine.run(&spec, placer).expect("ports sweep");
+    // Points arrive sides-major, so each app's cells fill sides=4,3,2.
     let mut per_app: std::collections::BTreeMap<String, Vec<String>> = Default::default();
-    for sides in [4u8, 3, 2] {
-        let mut cfg = base_config(o);
-        if sb {
-            cfg.sb_core_sides = ConnectedSides(sides);
+    for (job, r) in &out.points {
+        per_app.entry(job.app_name.clone()).or_default().push(if r.routed {
+            fmt(r.runtime_us())
         } else {
-            cfg.cb_core_sides = ConnectedSides(sides);
-        }
-        for (name, r) in run_suite(&cfg, &flow_params(o), placer) {
-            per_app.entry(name).or_default().push(match r {
-                Some(r) => fmt(r.timing.runtime_ns / 1000.0),
-                None => "unroutable".into(),
-            });
-        }
+            "unroutable".into()
+        });
     }
     for (app, cells) in per_app {
         let mut row = vec![app];
@@ -688,6 +731,40 @@ mod tests {
             let static_um2: f64 = r[4].parse().unwrap();
             let router_um2: f64 = r[5].parse().unwrap();
             assert!(router_um2 < static_um2, "{}", r[0]);
+        }
+    }
+
+    #[test]
+    fn fig14_engine_cell_matches_direct_flow() {
+        // The engine-ported figure must report exactly what a direct
+        // (engine-free) flow run reports for the same point — the
+        // "tables identical to the pre-refactor output" contract.
+        let o = quick();
+        let t = fig14_sb_ports_runtime(&o, &NativePlacer::default());
+        let cfg = base_config(&o); // sides=4 is the default ⇒ first column
+        let ic = create_uniform_interconnect(&cfg);
+        let app = apps::suite().into_iter().find(|a| a.name == "gaussian").unwrap();
+        let expect = match run_flow_with(&ic, &app, &flow_params(&o), &NativePlacer::default()) {
+            Ok(r) => fmt(r.timing.runtime_ns / 1000.0),
+            Err(_) => "unroutable".into(),
+        };
+        let row = t.rows.iter().find(|r| r[0] == "gaussian").unwrap();
+        assert_eq!(row[1], expect);
+    }
+
+    #[test]
+    fn fig11_rows_use_display_names() {
+        // Registry keys (matmul3, conv_stack3) must not leak into the
+        // table; rows carry the apps' display names as before.
+        let o = ExpOptions { sa_moves: 2, seeds: 1, ..Default::default() };
+        let t = fig11_runtime_tracks(&o, &NativePlacer::default());
+        let names: Vec<&str> = t.rows.iter().map(|r| r[0].as_str()).collect();
+        assert!(names.contains(&"matmul"), "{names:?}");
+        assert!(names.contains(&"conv_stack"), "{names:?}");
+        assert!(!names.contains(&"matmul3"), "{names:?}");
+        assert_eq!(t.rows.len(), crate::apps::dense_suite().len());
+        for r in &t.rows {
+            assert_eq!(r.len(), 6); // app + 5 track columns
         }
     }
 

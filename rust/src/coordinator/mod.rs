@@ -11,8 +11,10 @@ pub mod experiments;
 pub mod viz;
 
 pub use experiments::{
-    all_experiments, alpha_sweep, fig08_fifo_area, fig09_topology, fig10_area_tracks,
-    fig11_runtime_tracks, fig13_port_area, fig14_sb_ports_runtime, fig15_cb_ports_runtime,
+    all_experiments, alpha_sweep, fig08_fifo_area, fig09_topology, fig09_topology_with,
+    fig10_area_tracks, fig10_area_tracks_with, fig11_runtime_tracks, fig11_runtime_tracks_with,
+    fig13_port_area, fig14_sb_ports_runtime, fig14_sb_ports_runtime_with,
+    fig15_cb_ports_runtime, fig15_cb_ports_runtime_with,
     dynamic_noc_comparison, fifo_chain_depth, motivation_shares, reg_density_sweep,
     rv_throughput, run_suite,
     tight_array, ExpOptions,

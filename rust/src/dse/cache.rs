@@ -1,0 +1,260 @@
+//! PnR result cache keyed by `(config descriptor, app, seed)` with JSON
+//! persistence — re-runs and overlapping sweeps (fig09/10/11/14/15 share
+//! many points) skip completed PnR entirely.
+//!
+//! ## File format (`dse_cache.json`, version 1)
+//!
+//! ```json
+//! { "version": 1,
+//!   "entries": [
+//!     { "config": "<ConfigDescriptor string>", "app": "harris", "seed": 1,
+//!       "routed": true, "critical_path_ps": 2209.0, "period_ps": 2269.0,
+//!       "latency_cycles": 14, "runtime_ns": 9378.25, "iterations": 3,
+//!       "nodes_used": 412, "alpha": 1.0 } ] }
+//! ```
+//!
+//! Floats are written in Rust's shortest-round-trip form and numbers are
+//! re-emitted from their literal text (see [`crate::util::json`]), so a
+//! load → save cycle is lossless and a warm-cache table render is
+//! byte-identical to the cold one. Unroutable points are cached too
+//! (`routed: false`, zero metrics) — negative results are as expensive to
+//! recompute as positive ones.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+use super::spec::{ConfigDescriptor, JobKey, PointResult};
+
+/// Cache file schema version.
+pub const CACHE_VERSION: u64 = 1;
+
+/// In-memory map of completed points, optionally backed by a JSON file.
+#[derive(Default)]
+pub struct ResultCache {
+    path: Option<PathBuf>,
+    map: BTreeMap<JobKey, PointResult>,
+}
+
+impl ResultCache {
+    /// Unbacked cache (lives for the engine's lifetime only).
+    pub fn in_memory() -> ResultCache {
+        ResultCache::default()
+    }
+
+    /// Cache backed by `path`: loads what is there (a missing file is an
+    /// empty cache; a corrupt one is an error — better loud than silently
+    /// recomputing or clobbering). A missing file is created immediately,
+    /// so an unwritable path fails here — before a sweep spends hours of
+    /// PnR it could not have persisted.
+    pub fn at(path: &Path) -> Result<ResultCache, String> {
+        let mut cache =
+            ResultCache { path: Some(path.to_path_buf()), map: BTreeMap::new() };
+        match std::fs::read_to_string(path) {
+            Ok(text) => cache.load_json(&text).map_err(|e| format!("{}: {e}", path.display()))?,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => cache.save()?,
+            Err(e) => return Err(format!("{}: {e}", path.display())),
+        }
+        Ok(cache)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get(&self, key: &JobKey) -> Option<&PointResult> {
+        self.map.get(key)
+    }
+
+    pub fn insert(&mut self, key: JobKey, result: PointResult) {
+        self.map.insert(key, result);
+    }
+
+    /// Merge entries from cache-file text.
+    pub fn load_json(&mut self, text: &str) -> Result<(), String> {
+        let doc = Json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_u64).ok_or("missing version")?;
+        if version != CACHE_VERSION {
+            return Err(format!("unsupported cache version {version}"));
+        }
+        let entries = doc.get("entries").and_then(Json::as_arr).ok_or("missing entries")?;
+        for (i, entry) in entries.iter().enumerate() {
+            let (key, result) =
+                entry_from_json(entry).map_err(|e| format!("entry {i}: {e}"))?;
+            self.map.insert(key, result);
+        }
+        Ok(())
+    }
+
+    /// Full cache as JSON text.
+    pub fn to_json(&self) -> String {
+        let entries: Vec<Json> =
+            self.map.iter().map(|(k, r)| entry_json(k, r)).collect();
+        Json::Obj(vec![
+            ("version".into(), Json::num_u64(CACHE_VERSION)),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+        .render()
+    }
+
+    /// Persist to the backing file (no-op for in-memory caches).
+    /// Writes a sibling temp file and renames it over the target, so an
+    /// interrupted save can never truncate an existing cache.
+    pub fn save(&self) -> Result<(), String> {
+        let Some(path) = &self.path else { return Ok(()) };
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json()).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn entry_json(key: &JobKey, r: &PointResult) -> Json {
+    Json::Obj(vec![
+        ("config".into(), Json::str(&key.config.0)),
+        ("app".into(), Json::str(&key.app)),
+        ("seed".into(), Json::num_u64(key.seed)),
+        ("routed".into(), Json::Bool(r.routed)),
+        ("critical_path_ps".into(), Json::num_f64(r.critical_path_ps)),
+        ("period_ps".into(), Json::num_f64(r.period_ps)),
+        ("latency_cycles".into(), Json::num_u64(r.latency_cycles)),
+        ("runtime_ns".into(), Json::num_f64(r.runtime_ns)),
+        ("iterations".into(), Json::num_u64(r.iterations)),
+        ("nodes_used".into(), Json::num_u64(r.nodes_used)),
+        ("alpha".into(), Json::num_f64(r.alpha)),
+    ])
+}
+
+fn entry_from_json(v: &Json) -> Result<(JobKey, PointResult), String> {
+    let str_field = |k: &str| -> Result<String, String> {
+        v.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing `{k}`"))
+    };
+    let u64_field = |k: &str| -> Result<u64, String> {
+        v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing `{k}`"))
+    };
+    // `num_f64` writes non-finite values as `null` (JSON has no NaN/inf);
+    // accept them back as NaN rather than hard-failing the whole cache —
+    // one odd metric must not brick every future run.
+    let f64_field = |k: &str| -> Result<f64, String> {
+        match v.get(k) {
+            Some(Json::Null) => Ok(f64::NAN),
+            Some(j) => j.as_f64().ok_or_else(|| format!("bad `{k}`")),
+            None => Err(format!("missing `{k}`")),
+        }
+    };
+    let key = JobKey {
+        config: ConfigDescriptor(str_field("config")?),
+        app: str_field("app")?,
+        seed: u64_field("seed")?,
+    };
+    let result = PointResult {
+        routed: v.get("routed").and_then(Json::as_bool).ok_or("missing `routed`")?,
+        critical_path_ps: f64_field("critical_path_ps")?,
+        period_ps: f64_field("period_ps")?,
+        latency_cycles: u64_field("latency_cycles")?,
+        runtime_ns: f64_field("runtime_ns")?,
+        iterations: u64_field("iterations")?,
+        nodes_used: u64_field("nodes_used")?,
+        alpha: f64_field("alpha")?,
+    };
+    Ok((key, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(app: &str, seed: u64) -> JobKey {
+        JobKey { config: ConfigDescriptor("cfg-A".into()), app: app.into(), seed }
+    }
+
+    fn point(runtime_ns: f64) -> PointResult {
+        PointResult {
+            routed: true,
+            critical_path_ps: 2209.123456789,
+            period_ps: 2269.0,
+            latency_cycles: 14,
+            runtime_ns,
+            iterations: 3,
+            nodes_used: 412,
+            alpha: 1.0,
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_exact() {
+        let mut c = ResultCache::in_memory();
+        c.insert(key("harris", 1), point(9378.0 / 3.0));
+        c.insert(key("gaussian", 2), PointResult::unroutable());
+        let text = c.to_json();
+        let mut back = ResultCache::in_memory();
+        back.load_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        let orig = c.get(&key("harris", 1)).unwrap();
+        let got = back.get(&key("harris", 1)).unwrap();
+        assert_eq!(orig, got);
+        assert_eq!(orig.runtime_ns.to_bits(), got.runtime_ns.to_bits());
+        assert!(!back.get(&key("gaussian", 2)).unwrap().routed);
+        // Stable re-emission.
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn file_backing_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("canal_cache_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut c = ResultCache::at(&path).unwrap();
+            assert!(c.is_empty());
+            c.insert(key("harris", 7), point(123.456));
+            c.save().unwrap();
+        }
+        let c = ResultCache::at(&path).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(&key("harris", 7)), Some(&point(123.456)));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn non_finite_floats_roundtrip_as_nan_instead_of_bricking() {
+        let mut c = ResultCache::in_memory();
+        let mut p = point(1.0);
+        p.runtime_ns = f64::INFINITY; // written as null
+        c.insert(key("harris", 1), p);
+        let text = c.to_json();
+        let mut back = ResultCache::in_memory();
+        back.load_json(&text).unwrap();
+        assert!(back.get(&key("harris", 1)).unwrap().runtime_ns.is_nan());
+    }
+
+    #[test]
+    fn corrupt_or_versioned_files_are_loud() {
+        let mut c = ResultCache::in_memory();
+        assert!(c.load_json("{not json").is_err());
+        assert!(c.load_json(r#"{"version": 99, "entries": []}"#).is_err());
+        assert!(c.load_json(r#"{"version": 1}"#).is_err());
+        assert!(c
+            .load_json(r#"{"version": 1, "entries": [{"config": "x"}]}"#)
+            .is_err());
+    }
+
+    #[test]
+    fn in_memory_save_is_noop() {
+        let c = ResultCache::in_memory();
+        c.save().unwrap();
+        assert!(c.path().is_none());
+    }
+}

@@ -1,0 +1,390 @@
+//! The sharded sweep executor: a fixed worker pool over per-worker job
+//! deques with work stealing. Each worker owns reusable
+//! [`RouterScratch`] buffers (PathFinder cost/visited/heap arrays
+//! allocated once, reset per route); each interconnect configuration is
+//! built — and its routing graphs frozen to immutable CSR
+//! [`crate::ir::CompiledGraph`]s — exactly once, then shared across
+//! workers via `Arc`. Results are keyed and cached through
+//! [`ResultCache`], so a warm re-run of the same spec performs zero PnR
+//! calls (observable via [`EngineStats::pnr_runs`]).
+//!
+//! Determinism: a job's result depends only on its resolved
+//! `(config, app, seed)` content — never on the worker count, the
+//! steal pattern, or cache temperature — and the outcome lists points in
+//! the spec's canonical enumeration order, so sharded runs are
+//! bit-identical to a sequential (`workers: 1`) baseline.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::area::{area_of, AreaModel, FabricMode};
+use crate::dsl::create_uniform_interconnect;
+use crate::ir::Interconnect;
+use crate::pnr::{run_flow_scratch, GlobalPlacer, RouterScratch};
+
+use super::cache::ResultCache;
+use super::spec::{app_by_name, AreaPoint, Job, PointResult, SweepSpec};
+
+/// Executor tuning.
+#[derive(Clone, Debug, Default)]
+pub struct EngineOptions {
+    /// Worker threads; `0` ⇒ one per available core.
+    pub workers: usize,
+    /// JSON cache backing file (`dse_cache.json` by convention); `None`
+    /// ⇒ in-memory cache only.
+    pub cache_path: Option<std::path::PathBuf>,
+}
+
+/// Counters for one `run` (and, accumulated, for an engine's lifetime).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Jobs in the (deduplicated) list.
+    pub jobs: u64,
+    /// Jobs answered from the cache.
+    pub cache_hits: u64,
+    /// Actual PnR flow executions (cold jobs). Zero on a warm re-run.
+    pub pnr_runs: u64,
+    /// Interconnects built + frozen (≤ unique configs among cold jobs).
+    pub configs_built: u64,
+    /// Jobs a worker took from another worker's shard.
+    pub steals: u64,
+}
+
+impl EngineStats {
+    fn absorb(&mut self, other: &EngineStats) {
+        self.jobs += other.jobs;
+        self.cache_hits += other.cache_hits;
+        self.pnr_runs += other.pnr_runs;
+        self.configs_built += other.configs_built;
+        self.steals += other.steals;
+    }
+}
+
+/// Everything one sweep produced.
+#[derive(Clone, Debug)]
+pub struct SweepOutcome {
+    pub name: String,
+    /// One entry per job, in the spec's canonical enumeration order.
+    pub points: Vec<(Job, PointResult)>,
+    /// Per-config area metrics (when `spec.area`), in config order.
+    pub areas: Vec<AreaPoint>,
+    pub stats: EngineStats,
+}
+
+/// The DSE engine: owns the options and the result cache, so successive
+/// sweeps in one process (e.g. the five figure sweeps) share hits.
+pub struct DseEngine {
+    opts: EngineOptions,
+    cache: ResultCache,
+    lifetime: EngineStats,
+}
+
+impl DseEngine {
+    pub fn new(opts: EngineOptions) -> Result<DseEngine, String> {
+        let cache = match &opts.cache_path {
+            Some(path) => ResultCache::at(path)?,
+            None => ResultCache::in_memory(),
+        };
+        Ok(DseEngine { opts, cache, lifetime: EngineStats::default() })
+    }
+
+    /// Engine with default options and an unbacked cache.
+    pub fn in_memory() -> DseEngine {
+        DseEngine {
+            opts: EngineOptions::default(),
+            cache: ResultCache::in_memory(),
+            lifetime: EngineStats::default(),
+        }
+    }
+
+    pub fn cache(&self) -> &ResultCache {
+        &self.cache
+    }
+
+    /// Counters accumulated over every `run` of this engine.
+    pub fn lifetime_stats(&self) -> &EngineStats {
+        &self.lifetime
+    }
+
+    fn worker_count(&self) -> usize {
+        let configured = if self.opts.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.opts.workers
+        };
+        configured.max(1)
+    }
+
+    /// Run one sweep. Cold points fan out over the worker pool; warm
+    /// points come from the cache; the cache file (if any) is updated
+    /// when new results were computed.
+    pub fn run(
+        &mut self,
+        spec: &SweepSpec,
+        placer: &(dyn GlobalPlacer + Sync),
+    ) -> Result<SweepOutcome, String> {
+        let jobs = spec.jobs(placer.name())?;
+        let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
+
+        // Partition into cache hits and cold misses.
+        let mut hits: Vec<Option<PointResult>> = Vec::with_capacity(jobs.len());
+        let mut misses: Vec<usize> = Vec::new();
+        for (i, job) in jobs.iter().enumerate() {
+            match self.cache.get(&job.key) {
+                Some(r) => {
+                    stats.cache_hits += 1;
+                    hits.push(Some(r.clone()));
+                }
+                None => {
+                    hits.push(None);
+                    misses.push(i);
+                }
+            }
+        }
+
+        // Unique configurations among the cold jobs; each is built and
+        // frozen lazily by the first worker that needs it and shared via
+        // `Arc` from then on.
+        let mut cfg_slot: BTreeMap<String, usize> = BTreeMap::new();
+        let mut configs: Vec<crate::dsl::InterconnectConfig> = Vec::new();
+        let mut cfg_of_job: Vec<usize> = vec![usize::MAX; jobs.len()];
+        for &i in &misses {
+            let slot = *cfg_slot.entry(jobs[i].key.config.0.clone()).or_insert_with(|| {
+                configs.push(jobs[i].cfg.clone());
+                configs.len() - 1
+            });
+            cfg_of_job[i] = slot;
+        }
+        let interconnects: Vec<OnceLock<Arc<Interconnect>>> =
+            (0..configs.len()).map(|_| OnceLock::new()).collect();
+
+        // Resolve each distinct app generator once per run; workers share
+        // the graphs read-only (generator construction is not free).
+        let mut app_graphs: BTreeMap<String, crate::pnr::AppGraph> = BTreeMap::new();
+        for &i in &misses {
+            let key = &jobs[i].key.app;
+            if !app_graphs.contains_key(key) {
+                let app = app_by_name(key).expect("app validated by SweepSpec::jobs");
+                app_graphs.insert(key.clone(), app);
+            }
+        }
+
+        // Shard the cold jobs round-robin; idle workers steal from the
+        // back of the most-loaded victim.
+        let workers = self.worker_count();
+        let shards: Vec<Mutex<VecDeque<usize>>> =
+            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+        for (k, &i) in misses.iter().enumerate() {
+            shards[k % workers].lock().expect("shard").push_back(i);
+        }
+
+        let computed: Vec<OnceLock<PointResult>> =
+            (0..jobs.len()).map(|_| OnceLock::new()).collect();
+        let pnr_runs = AtomicU64::new(0);
+        let configs_built = AtomicU64::new(0);
+        let steals = AtomicU64::new(0);
+
+        if !misses.is_empty() {
+            std::thread::scope(|scope| {
+                for me in 0..workers {
+                    let jobs = &jobs;
+                    let shards = &shards;
+                    let configs = &configs;
+                    let interconnects = &interconnects;
+                    let app_graphs = &app_graphs;
+                    let cfg_of_job = &cfg_of_job;
+                    let computed = &computed;
+                    let pnr_runs = &pnr_runs;
+                    let configs_built = &configs_built;
+                    let steals = &steals;
+                    scope.spawn(move || {
+                        let mut scratch = RouterScratch::new();
+                        while let Some(i) = next_job(shards, me, steals) {
+                            let job = &jobs[i];
+                            let slot = cfg_of_job[i];
+                            let ic = interconnects[slot].get_or_init(|| {
+                                configs_built.fetch_add(1, Ordering::Relaxed);
+                                Arc::new(create_uniform_interconnect(&configs[slot]))
+                            });
+                            let app = &app_graphs[job.key.app.as_str()];
+                            pnr_runs.fetch_add(1, Ordering::Relaxed);
+                            let result =
+                                match run_flow_scratch(ic, app, &job.flow, placer, &mut scratch)
+                                {
+                                    Ok(flow) => PointResult::from_flow(&flow),
+                                    Err(_) => PointResult::unroutable(),
+                                };
+                            let _ = computed[i].set(result);
+                        }
+                    });
+                }
+            });
+        }
+
+        stats.pnr_runs = pnr_runs.into_inner();
+        stats.configs_built = configs_built.into_inner();
+        stats.steals = steals.into_inner();
+
+        // Merge in canonical job order; feed new results to the cache.
+        let mut points = Vec::with_capacity(jobs.len());
+        for (i, job) in jobs.into_iter().enumerate() {
+            let result = match hits[i].take() {
+                Some(r) => r,
+                None => {
+                    let r = computed[i].get().expect("cold job executed").clone();
+                    self.cache.insert(job.key.clone(), r.clone());
+                    r
+                }
+            };
+            points.push((job, result));
+        }
+        if stats.pnr_runs > 0 {
+            self.cache.save()?;
+        }
+
+        // Area metrics per unique config, in enumeration order. Cheap
+        // (no PnR), so not cached; deterministic, so warm and cold runs
+        // render identical tables. Interconnects the worker pool already
+        // froze are reused by their config descriptor.
+        let mut areas = Vec::new();
+        if spec.area {
+            let built: BTreeMap<String, Arc<Interconnect>> = configs
+                .iter()
+                .zip(&interconnects)
+                .filter_map(|(cfg, cell)| {
+                    cell.get().map(|ic| (cfg.descriptor(), Arc::clone(ic)))
+                })
+                .collect();
+            let model = AreaModel::default();
+            for cfg in spec.configs()? {
+                let ic = match built.get(&cfg.descriptor()) {
+                    Some(ic) => Arc::clone(ic),
+                    None => Arc::new(create_uniform_interconnect(&cfg)),
+                };
+                let tile = area_of(&ic, &model, FabricMode::Static).interior_tile(&ic);
+                areas.push(AreaPoint {
+                    config: cfg.descriptor(),
+                    tracks: cfg.num_tracks,
+                    sb_sides: cfg.sb_core_sides.0,
+                    cb_sides: cfg.cb_core_sides.0,
+                    sb_um2: tile.sb_um2,
+                    cb_um2: tile.cb_um2,
+                });
+            }
+        }
+
+        self.lifetime.absorb(&stats);
+        Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
+    }
+}
+
+/// Pop the next job: own shard front first, then steal from the back of
+/// the most-loaded victim (re-scanning on races until every shard is
+/// observed empty).
+fn next_job(shards: &[Mutex<VecDeque<usize>>], me: usize, steals: &AtomicU64) -> Option<usize> {
+    if let Some(i) = shards[me].lock().expect("shard").pop_front() {
+        return Some(i);
+    }
+    loop {
+        let mut victim = None;
+        let mut victim_len = 0;
+        for (v, shard) in shards.iter().enumerate() {
+            if v == me {
+                continue;
+            }
+            let len = shard.lock().expect("shard").len();
+            if len > victim_len {
+                victim_len = len;
+                victim = Some(v);
+            }
+        }
+        let v = victim?;
+        if let Some(i) = shards[v].lock().expect("shard").pop_back() {
+            steals.fetch_add(1, Ordering::Relaxed);
+            return Some(i);
+        }
+        // Raced with the victim draining its shard; rescan.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::InterconnectConfig;
+    use crate::pnr::{FlowParams, NativePlacer, SaParams};
+
+    fn quick_spec() -> SweepSpec {
+        SweepSpec {
+            name: "exec-test".into(),
+            base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+            tracks: vec![4, 5],
+            apps: vec!["pointwise".into()],
+            seeds: vec![1],
+            flow: FlowParams {
+                sa: SaParams { moves_per_node: 4, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn cold_runs_count_pnr_and_warm_runs_do_not() {
+        let mut engine = DseEngine::in_memory();
+        let cold = engine.run(&quick_spec(), &NativePlacer::default()).unwrap();
+        assert_eq!(cold.points.len(), 2);
+        assert_eq!(cold.stats.pnr_runs, 2);
+        assert_eq!(cold.stats.cache_hits, 0);
+        assert!(cold.stats.configs_built <= 2);
+        let warm = engine.run(&quick_spec(), &NativePlacer::default()).unwrap();
+        assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.cache_hits, 2);
+        for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(engine.lifetime_stats().pnr_runs, 2);
+        assert_eq!(engine.lifetime_stats().jobs, 4);
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let spec = quick_spec();
+        let run_with = |workers: usize| {
+            let mut e = DseEngine::new(EngineOptions { workers, cache_path: None }).unwrap();
+            e.run(&spec, &NativePlacer::default()).unwrap()
+        };
+        let sequential = run_with(1);
+        let sharded = run_with(4);
+        assert_eq!(sequential.points.len(), sharded.points.len());
+        for ((ja, ra), (jb, rb)) in sequential.points.iter().zip(&sharded.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn area_only_sweep_runs_no_pnr() {
+        let spec = SweepSpec {
+            name: "area-only".into(),
+            base: InterconnectConfig {
+                width: 6,
+                height: 6,
+                mem_column_period: 0,
+                ..Default::default()
+            },
+            tracks: vec![2, 3, 4],
+            area: true,
+            ..Default::default()
+        };
+        let mut engine = DseEngine::in_memory();
+        let out = engine.run(&spec, &NativePlacer::default()).unwrap();
+        assert!(out.points.is_empty());
+        assert_eq!(out.stats.pnr_runs, 0);
+        assert_eq!(out.areas.len(), 3);
+        assert_eq!(out.areas[0].tracks, 2);
+        // More tracks ⇒ more SB area (Fig. 10's monotonicity).
+        assert!(out.areas[2].sb_um2 > out.areas[0].sb_um2);
+    }
+}

@@ -1,0 +1,40 @@
+//! Design-space exploration engine (§4's "fast design space exploration"
+//! claim, industrialized): the sharded, cached sweep infrastructure the
+//! ROADMAP's parallel-DSE item called for.
+//!
+//! - [`SweepSpec`] (in [`spec`]) declaratively enumerates the
+//!   cross-product of axes — tracks × SB topology × connected sides ×
+//!   output-track mode × apps × seeds — into a deduplicated job list with
+//!   stable [`ConfigDescriptor`] keys;
+//! - [`DseEngine`] (in [`exec`]) runs the jobs on a fixed worker pool:
+//!   per-worker job deques with work stealing, per-worker reusable
+//!   [`crate::pnr::RouterScratch`] buffers, and interconnects frozen once
+//!   per configuration then shared across workers via `Arc` (the
+//!   immutable CSR [`crate::ir::CompiledGraph`]s inside);
+//! - [`ResultCache`] (in [`cache`]) keys results by
+//!   `(config, app, seed)` and persists them to `dse_cache.json`, so
+//!   re-runs and overlapping figures skip completed PnR — a warm re-run
+//!   of the full figure suite performs zero PnR calls;
+//! - [`ResultsStore`] (in [`report`]) emits both the paper-style
+//!   [`crate::util::table::Table`]s and a machine-readable JSON record.
+//!
+//! The figure drivers in [`crate::coordinator::experiments`]
+//! (fig09/10/11/14/15) are thin table-formatters over this engine, and
+//! the `canal dse` CLI subcommand exposes it for ad-hoc sweeps.
+//!
+//! Determinism contract: sharded results — any worker count, cache cold
+//! or warm — are bit-identical to a sequential baseline run of the same
+//! spec (asserted in `tests/dse_determinism.rs`).
+
+pub mod cache;
+pub mod exec;
+pub mod report;
+pub mod spec;
+
+pub use cache::{ResultCache, CACHE_VERSION};
+pub use exec::{DseEngine, EngineOptions, EngineStats, SweepOutcome};
+pub use report::{areas_table, outcome_json, points_table, short_config, ResultsStore};
+pub use spec::{
+    app_by_name, dense_suite_keys, suite_keys, AreaPoint, ConfigDescriptor, Job, JobKey,
+    PointResult, SeedMode, Sizing, SweepSpec,
+};

@@ -1,0 +1,216 @@
+//! Results store: collects sweep outcomes, renders the paper-style
+//! [`Table`]s, and emits a machine-readable JSON record for the bench
+//! log (`canal dse --json FILE`).
+
+use std::path::Path;
+
+use crate::dsl::InterconnectConfig;
+use crate::util::json::Json;
+use crate::util::table::{fmt, Table};
+
+use super::exec::{EngineStats, SweepOutcome};
+
+/// Compact one-line config label for generic point tables.
+pub fn short_config(cfg: &InterconnectConfig) -> String {
+    format!(
+        "{}x{} t={} {} sb{}/cb{} {}",
+        cfg.width,
+        cfg.height,
+        cfg.num_tracks,
+        cfg.sb_topology.name(),
+        cfg.sb_core_sides.0,
+        cfg.cb_core_sides.0,
+        cfg.output_tracks.name(),
+    )
+}
+
+/// Generic one-row-per-point table for ad-hoc `canal dse` sweeps.
+pub fn points_table(outcome: &SweepOutcome) -> Table {
+    let mut t = Table::new(
+        &format!("DSE sweep — {}", outcome.name),
+        &["config", "app", "seed", "routed", "runtime_us", "critical_ps", "iters"],
+    );
+    for (job, r) in &outcome.points {
+        let dash = || "-".to_string();
+        t.row(vec![
+            short_config(&job.cfg),
+            job.app_name.clone(),
+            job.key.seed.to_string(),
+            if r.routed { "yes".into() } else { "no".into() },
+            if r.routed { fmt(r.runtime_us()) } else { dash() },
+            if r.routed { fmt(r.critical_path_ps) } else { dash() },
+            r.iterations.to_string(),
+        ]);
+    }
+    let s = &outcome.stats;
+    t.note(&format!(
+        "{} jobs: {} cached, {} PnR runs, {} configs built, {} steals",
+        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.steals
+    ));
+    t
+}
+
+/// Per-config area table for area-enabled sweeps.
+pub fn areas_table(outcome: &SweepOutcome) -> Table {
+    let mut t = Table::new(
+        &format!("DSE areas — {}", outcome.name),
+        &["tracks", "sb_sides", "cb_sides", "sb_area_um2", "cb_area_um2"],
+    );
+    for a in &outcome.areas {
+        t.row(vec![
+            a.tracks.to_string(),
+            a.sb_sides.to_string(),
+            a.cb_sides.to_string(),
+            fmt(a.sb_um2),
+            fmt(a.cb_um2),
+        ]);
+    }
+    t
+}
+
+fn stats_json(s: &EngineStats) -> Json {
+    Json::Obj(vec![
+        ("jobs".into(), Json::num_u64(s.jobs)),
+        ("cache_hits".into(), Json::num_u64(s.cache_hits)),
+        ("pnr_runs".into(), Json::num_u64(s.pnr_runs)),
+        ("configs_built".into(), Json::num_u64(s.configs_built)),
+        ("steals".into(), Json::num_u64(s.steals)),
+    ])
+}
+
+/// Machine-readable record of one sweep (points + areas + stats).
+pub fn outcome_json(outcome: &SweepOutcome) -> Json {
+    let points: Vec<Json> = outcome
+        .points
+        .iter()
+        .map(|(job, r)| {
+            Json::Obj(vec![
+                ("config".into(), Json::str(&job.key.config.0)),
+                ("app".into(), Json::str(&job.key.app)),
+                ("app_name".into(), Json::str(&job.app_name)),
+                ("seed".into(), Json::num_u64(job.key.seed)),
+                ("tracks".into(), Json::num_u64(job.cfg.num_tracks as u64)),
+                ("topology".into(), Json::str(job.cfg.sb_topology.name())),
+                ("sb_sides".into(), Json::num_u64(job.cfg.sb_core_sides.0 as u64)),
+                ("cb_sides".into(), Json::num_u64(job.cfg.cb_core_sides.0 as u64)),
+                ("routed".into(), Json::Bool(r.routed)),
+                ("runtime_ns".into(), Json::num_f64(r.runtime_ns)),
+                ("critical_path_ps".into(), Json::num_f64(r.critical_path_ps)),
+                ("iterations".into(), Json::num_u64(r.iterations)),
+                ("nodes_used".into(), Json::num_u64(r.nodes_used)),
+                ("alpha".into(), Json::num_f64(r.alpha)),
+            ])
+        })
+        .collect();
+    let areas: Vec<Json> = outcome
+        .areas
+        .iter()
+        .map(|a| {
+            Json::Obj(vec![
+                ("config".into(), Json::str(&a.config)),
+                ("tracks".into(), Json::num_u64(a.tracks as u64)),
+                ("sb_sides".into(), Json::num_u64(a.sb_sides as u64)),
+                ("cb_sides".into(), Json::num_u64(a.cb_sides as u64)),
+                ("sb_um2".into(), Json::num_f64(a.sb_um2)),
+                ("cb_um2".into(), Json::num_f64(a.cb_um2)),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("name".into(), Json::str(&outcome.name)),
+        ("stats".into(), stats_json(&outcome.stats)),
+        ("points".into(), Json::Arr(points)),
+        ("areas".into(), Json::Arr(areas)),
+    ])
+}
+
+/// Accumulates sweeps: the rendered tables for humans, the raw records
+/// for machines.
+#[derive(Default)]
+pub struct ResultsStore {
+    tables: Vec<Table>,
+    records: Vec<Json>,
+}
+
+impl ResultsStore {
+    pub fn new() -> ResultsStore {
+        ResultsStore::default()
+    }
+
+    /// Record one sweep with the table its figure built from it.
+    pub fn add(&mut self, outcome: &SweepOutcome, table: Table) {
+        self.records.push(outcome_json(outcome));
+        self.tables.push(table);
+    }
+
+    pub fn tables(&self) -> &[Table] {
+        &self.tables
+    }
+
+    pub fn render_all(&self) -> String {
+        let mut s = String::new();
+        for t in &self.tables {
+            s.push_str(&t.render());
+            s.push('\n');
+        }
+        s
+    }
+
+    /// The bench record: every sweep's raw points under one roof.
+    pub fn to_json(&self) -> String {
+        Json::Obj(vec![
+            ("version".into(), Json::num_u64(1)),
+            ("sweeps".into(), Json::Arr(self.records.clone())),
+        ])
+        .render()
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<(), String> {
+        std::fs::write(path, self.to_json()).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::{DseEngine, SweepSpec};
+    use crate::dsl::InterconnectConfig;
+    use crate::pnr::{FlowParams, NativePlacer, SaParams};
+
+    #[test]
+    fn store_renders_tables_and_valid_json() {
+        let spec = SweepSpec {
+            name: "report-test".into(),
+            base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+            apps: vec!["pointwise".into()],
+            seeds: vec![1],
+            flow: FlowParams {
+                sa: SaParams { moves_per_node: 4, ..Default::default() },
+                ..Default::default()
+            },
+            area: true,
+            ..Default::default()
+        };
+        let mut engine = DseEngine::in_memory();
+        let out = engine.run(&spec, &NativePlacer::default()).unwrap();
+        let mut store = ResultsStore::new();
+        store.add(&out, points_table(&out));
+        store.add(&out, areas_table(&out));
+        assert_eq!(store.tables().len(), 2);
+        let rendered = store.render_all();
+        assert!(rendered.contains("DSE sweep — report-test"));
+        assert!(rendered.contains("pointwise"));
+        // The JSON record parses back and carries both sweeps.
+        let doc = Json::parse(&store.to_json()).unwrap();
+        let sweeps = doc.get("sweeps").and_then(Json::as_arr).unwrap();
+        assert_eq!(sweeps.len(), 2);
+        let first = &sweeps[0];
+        assert_eq!(first.get("name").and_then(Json::as_str), Some("report-test"));
+        assert_eq!(
+            first.get("stats").and_then(|s| s.get("jobs")).and_then(Json::as_u64),
+            Some(1)
+        );
+        assert_eq!(first.get("points").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+        assert_eq!(first.get("areas").and_then(Json::as_arr).map(<[Json]>::len), Some(1));
+    }
+}

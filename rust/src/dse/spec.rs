@@ -1,0 +1,521 @@
+//! Sweep specification: the declarative cross-product of design-space
+//! axes (tracks × SB topology × connected sides × output-track mode ×
+//! apps × seeds), compiled into a deduplicated, deterministically-ordered
+//! job list with stable [`ConfigDescriptor`] keys.
+
+use crate::apps;
+use crate::dsl::{ConnectedSides, InterconnectConfig, OutputTrackMode, SbTopology};
+use crate::pnr::{AppGraph, FlowParams, FlowResult};
+use crate::util::rng::derive_seed;
+
+/// Canonical key for one sweep point's *configuration*: the resolved
+/// interconnect parameters (including the delay model) plus every flow
+/// knob that can change a PnR result, plus the placement backend. The
+/// per-run seed is keyed separately — see [`JobKey`].
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct ConfigDescriptor(pub String);
+
+impl std::fmt::Display for ConfigDescriptor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl ConfigDescriptor {
+    pub fn of(
+        cfg: &InterconnectConfig,
+        flow: &FlowParams,
+        placer: &str,
+        seed_mode: SeedMode,
+    ) -> ConfigDescriptor {
+        let d = &cfg.delays;
+        let alphas = if flow.alpha_sweep.is_empty() {
+            format!("[{}]", flow.sa.alpha)
+        } else {
+            let v: Vec<String> = flow.alpha_sweep.iter().map(f64::to_string).collect();
+            format!("[{}]", v.join(","))
+        };
+        let r = &flow.router;
+        // `seed_mode` changes how the logical seed maps to the RNG
+        // stream, so raw and derived runs must never share cache entries.
+        let seeds = match seed_mode {
+            SeedMode::Raw => "raw",
+            SeedMode::Derived => "derived",
+        };
+        ConfigDescriptor(format!(
+            "{} delays={}/{}/{}/{}/{} | placer={placer} seeds={seeds} \
+             sa(moves={} gamma={} cooling={}) \
+             alphas={alphas} router(iters={} pres={}x{} hist={} dw={} unused={}) items={} bw={}",
+            cfg.descriptor(),
+            d.sb_mux_ps,
+            d.cb_mux_ps,
+            d.wire_ps,
+            d.reg_clk_q_ps,
+            d.reg_mux_ps,
+            flow.sa.moves_per_node,
+            flow.sa.gamma,
+            flow.sa.cooling,
+            r.max_iterations,
+            r.pres_fac_init,
+            r.pres_fac_mult,
+            r.hist_incr,
+            r.delay_weight,
+            r.unused_tile_penalty,
+            flow.workload_items,
+            flow.bit_width,
+        ))
+    }
+}
+
+/// Cache key of one PnR job.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct JobKey {
+    pub config: ConfigDescriptor,
+    /// App *registry* key (see [`app_by_name`]) — unique even where two
+    /// generators share a display name.
+    pub app: String,
+    /// Logical seed (the sweep-axis value, before any derivation).
+    pub seed: u64,
+}
+
+/// One executable sweep point.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub key: JobKey,
+    /// Display name of the resolved application (what tables print).
+    pub app_name: String,
+    /// Fully-resolved interconnect configuration.
+    pub cfg: InterconnectConfig,
+    /// Flow parameters with the per-job seed already applied.
+    pub flow: FlowParams,
+}
+
+/// How the array is sized for each job.
+#[derive(Clone, Copy, Debug)]
+pub enum Sizing {
+    /// Use `base.width` × `base.height` as-is.
+    Fixed,
+    /// Capacity-match the array to each application with `slack` headroom
+    /// (the Fig. 11 regime; see [`crate::coordinator::tight_array`]).
+    TightArray { slack: f64 },
+}
+
+/// How a job's logical seed maps onto the flow RNG stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedMode {
+    /// `flow.seed = seed` — matches the pre-engine `figNN_*` loops.
+    Raw,
+    /// `flow.seed = derive_seed(seed, "<config>/<app>")`: every
+    /// (config, app, seed) point gets an independent, reproducible
+    /// stream regardless of worker count or scheduling order.
+    Derived,
+}
+
+/// The summarized outcome of one (config, app, seed) job — what the
+/// figures and the cache need, small enough to persist.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PointResult {
+    pub routed: bool,
+    pub critical_path_ps: f64,
+    pub period_ps: f64,
+    pub latency_cycles: u64,
+    pub runtime_ns: f64,
+    pub iterations: u64,
+    pub nodes_used: u64,
+    /// α that won the flow's sweep.
+    pub alpha: f64,
+}
+
+impl PointResult {
+    pub fn unroutable() -> PointResult {
+        PointResult {
+            routed: false,
+            critical_path_ps: 0.0,
+            period_ps: 0.0,
+            latency_cycles: 0,
+            runtime_ns: 0.0,
+            iterations: 0,
+            nodes_used: 0,
+            alpha: 0.0,
+        }
+    }
+
+    pub fn from_flow(r: &FlowResult) -> PointResult {
+        PointResult {
+            routed: true,
+            critical_path_ps: r.timing.critical_path_ps,
+            period_ps: r.timing.period_ps,
+            latency_cycles: r.timing.latency_cycles as u64,
+            runtime_ns: r.timing.runtime_ns,
+            iterations: r.routing.iterations as u64,
+            nodes_used: r.routing.nodes_used as u64,
+            alpha: r.alpha,
+        }
+    }
+
+    pub fn runtime_us(&self) -> f64 {
+        self.runtime_ns / 1000.0
+    }
+}
+
+/// Per-config area metrics (static fabric, interior tile) for the
+/// area-vs-axis figures.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AreaPoint {
+    /// `InterconnectConfig::descriptor()` of the measured config.
+    pub config: String,
+    pub tracks: u16,
+    pub sb_sides: u8,
+    pub cb_sides: u8,
+    pub sb_um2: f64,
+    pub cb_um2: f64,
+}
+
+/// Declarative sweep: empty axes fall back to the base config's value.
+#[derive(Clone, Debug)]
+pub struct SweepSpec {
+    pub name: String,
+    pub base: InterconnectConfig,
+    pub tracks: Vec<u16>,
+    pub topologies: Vec<SbTopology>,
+    pub output_tracks: Vec<OutputTrackMode>,
+    pub sb_sides: Vec<u8>,
+    pub cb_sides: Vec<u8>,
+    pub sizing: Sizing,
+    /// App registry keys (see [`app_by_name`]); empty ⇒ no PnR jobs
+    /// (area-only sweeps).
+    pub apps: Vec<String>,
+    /// Logical seeds; one job per (config, app, seed).
+    pub seeds: Vec<u64>,
+    pub seed_mode: SeedMode,
+    /// Flow knobs shared by every job (`flow.seed` is set per job).
+    pub flow: FlowParams,
+    /// Also record per-config [`AreaPoint`]s.
+    pub area: bool,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            name: "sweep".into(),
+            base: InterconnectConfig::default(),
+            tracks: vec![],
+            topologies: vec![],
+            output_tracks: vec![],
+            sb_sides: vec![],
+            cb_sides: vec![],
+            sizing: Sizing::Fixed,
+            apps: vec![],
+            seeds: vec![1],
+            seed_mode: SeedMode::Raw,
+            flow: FlowParams::default(),
+            area: false,
+        }
+    }
+}
+
+fn axis<T: Clone>(axis: &[T], base: T) -> Vec<T> {
+    if axis.is_empty() {
+        vec![base]
+    } else {
+        axis.to_vec()
+    }
+}
+
+impl SweepSpec {
+    /// Resolve one point's interconnect config (the app matters only
+    /// under tight sizing).
+    fn resolve_cfg(
+        &self,
+        tracks: u16,
+        topo: SbTopology,
+        out_mode: OutputTrackMode,
+        sb: u8,
+        cb: u8,
+        app: Option<&AppGraph>,
+    ) -> Result<InterconnectConfig, String> {
+        let mut cfg = self.base.clone();
+        cfg.num_tracks = tracks;
+        cfg.sb_topology = topo;
+        cfg.output_tracks = out_mode;
+        cfg.sb_core_sides = ConnectedSides(sb);
+        cfg.cb_core_sides = ConnectedSides(cb);
+        if let Sizing::TightArray { slack } = self.sizing {
+            let app = app.ok_or("tight sizing needs an application")?;
+            let (w, h) = crate::coordinator::tight_array(app, cfg.mem_column_period, slack);
+            cfg.width = w;
+            cfg.height = h;
+        }
+        cfg.validate().map_err(|e| format!("sweep `{}`: {e}", self.name))?;
+        Ok(cfg)
+    }
+
+    /// Resolve every app key once, up front (registry generators are not
+    /// free to construct; the job loop runs per axis combination).
+    fn resolved_apps(&self) -> Result<Vec<(String, AppGraph)>, String> {
+        self.apps
+            .iter()
+            .map(|k| {
+                app_by_name(k)
+                    .map(|a| (k.clone(), a))
+                    .ok_or_else(|| format!("unknown app `{k}`"))
+            })
+            .collect()
+    }
+
+    /// The single axis-enumeration core: calls `f` for every
+    /// (tracks, topology, output-mode, sb-sides, cb-sides) combination in
+    /// canonical order. `jobs` and `configs` both build on this, so the
+    /// PnR points and the area metrics can never enumerate different
+    /// config sets.
+    fn for_each_combo<F>(&self, mut f: F) -> Result<(), String>
+    where
+        F: FnMut(u16, SbTopology, OutputTrackMode, u8, u8) -> Result<(), String>,
+    {
+        for &tr in &axis(&self.tracks, self.base.num_tracks) {
+            for &topo in &axis(&self.topologies, self.base.sb_topology) {
+                for &om in &axis(&self.output_tracks, self.base.output_tracks) {
+                    for &sb in &axis(&self.sb_sides, self.base.sb_core_sides.0) {
+                        for &cb in &axis(&self.cb_sides, self.base.cb_core_sides.0) {
+                            f(tr, topo, om, sb, cb)?;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The deduplicated job list in canonical enumeration order:
+    /// tracks → topology → output-tracks → SB sides → CB sides → app →
+    /// seed. `placer` is the placement backend's name (part of the cache
+    /// key: different backends may legally produce different placements).
+    pub fn jobs(&self, placer: &str) -> Result<Vec<Job>, String> {
+        let apps = self.resolved_apps()?;
+        let tight = matches!(self.sizing, Sizing::TightArray { .. });
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        self.for_each_combo(|tr, topo, om, sb, cb| {
+            // Under fixed sizing every app shares one config (and one
+            // descriptor) per combination.
+            let shared = if tight || apps.is_empty() {
+                None
+            } else {
+                let cfg = self.resolve_cfg(tr, topo, om, sb, cb, None)?;
+                let desc = ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode);
+                Some((cfg, desc))
+            };
+            for (app_key, app) in &apps {
+                let (cfg, desc) = match &shared {
+                    Some((cfg, desc)) => (cfg.clone(), desc.clone()),
+                    None => {
+                        let cfg = self.resolve_cfg(tr, topo, om, sb, cb, Some(app))?;
+                        let desc =
+                            ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode);
+                        (cfg, desc)
+                    }
+                };
+                for &seed in &self.seeds {
+                    let key =
+                        JobKey { config: desc.clone(), app: app_key.clone(), seed };
+                    if !seen.insert(key.clone()) {
+                        continue;
+                    }
+                    let mut flow = self.flow.clone();
+                    flow.seed = match self.seed_mode {
+                        SeedMode::Raw => seed,
+                        SeedMode::Derived => {
+                            derive_seed(seed, &format!("{}/{}", desc.0, app_key))
+                        }
+                    };
+                    out.push(Job {
+                        key,
+                        app_name: app.name.clone(),
+                        cfg: cfg.clone(),
+                        flow,
+                    });
+                }
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+
+    /// Every unique interconnect configuration of the cross-product, in
+    /// enumeration order (used for the area metrics; under tight sizing
+    /// configs vary per app).
+    pub fn configs(&self) -> Result<Vec<InterconnectConfig>, String> {
+        let app_axis: Vec<Option<AppGraph>> = if matches!(self.sizing, Sizing::TightArray { .. })
+        {
+            if self.apps.is_empty() {
+                return Err(format!(
+                    "sweep `{}`: tight sizing needs at least one app",
+                    self.name
+                ));
+            }
+            self.resolved_apps()?.into_iter().map(|(_, a)| Some(a)).collect()
+        } else {
+            vec![None]
+        };
+        let mut seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        self.for_each_combo(|tr, topo, om, sb, cb| {
+            for app in &app_axis {
+                let cfg = self.resolve_cfg(tr, topo, om, sb, cb, app.as_ref())?;
+                if seen.insert(cfg.descriptor()) {
+                    out.push(cfg);
+                }
+            }
+            Ok(())
+        })?;
+        Ok(out)
+    }
+}
+
+/// Named application registry. Keys are unique and stable even where two
+/// generators share a display name (`matmul` = `matmul(2)` from the
+/// runtime suite, `matmul3` = `matmul(3)` from the dense suite).
+pub fn app_by_name(key: &str) -> Option<AppGraph> {
+    Some(match key {
+        "pointwise" => apps::pointwise(8),
+        "pointwise4" => apps::pointwise(4),
+        "gaussian" => apps::gaussian(),
+        "harris" => apps::harris(),
+        "camera" => apps::camera(),
+        "resnet" => apps::resnet_block(),
+        "matmul" => apps::matmul(2),
+        "matmul3" => apps::matmul(3),
+        "conv5x5" => apps::conv5x5(),
+        "unsharp" => apps::unsharp(),
+        "fft8" => apps::fft8(),
+        "stereo" => apps::stereo(4),
+        "depthwise" => apps::depthwise_separable(),
+        "conv_stack3" => apps::conv_stack(3),
+        _ => return None,
+    })
+}
+
+/// Registry keys matching [`apps::suite`] element-for-element.
+pub fn suite_keys() -> Vec<String> {
+    ["pointwise", "gaussian", "harris", "camera", "resnet", "matmul"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+/// Registry keys matching [`apps::dense_suite`] element-for-element.
+pub fn dense_suite_keys() -> Vec<String> {
+    ["harris", "conv5x5", "unsharp", "fft8", "stereo", "depthwise", "matmul3", "conv_stack3"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_both_suites() {
+        for (keys, suite) in
+            [(suite_keys(), apps::suite()), (dense_suite_keys(), apps::dense_suite())]
+        {
+            assert_eq!(keys.len(), suite.len());
+            for (k, a) in keys.iter().zip(&suite) {
+                let resolved = app_by_name(k).unwrap_or_else(|| panic!("missing key {k}"));
+                assert_eq!(resolved.name, a.name, "{k}");
+                assert_eq!(resolved.len(), a.len(), "{k}");
+            }
+        }
+        assert!(app_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn jobs_enumerate_cross_product_in_order() {
+        let spec = SweepSpec {
+            tracks: vec![3, 4],
+            topologies: vec![SbTopology::Wilton, SbTopology::Disjoint],
+            apps: vec!["gaussian".into(), "pointwise".into()],
+            seeds: vec![1, 2],
+            ..Default::default()
+        };
+        let jobs = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs.len(), 2 * 2 * 2 * 2);
+        // tracks is the outermost axis, seeds the innermost.
+        assert_eq!(jobs[0].cfg.num_tracks, 3);
+        assert_eq!(jobs[0].key.app, "gaussian");
+        assert_eq!(jobs[0].key.seed, 1);
+        assert_eq!(jobs[1].key.seed, 2);
+        assert_eq!(jobs.last().unwrap().cfg.num_tracks, 4);
+        assert_eq!(jobs.last().unwrap().cfg.sb_topology, SbTopology::Disjoint);
+        // Raw mode passes the logical seed straight through.
+        assert_eq!(jobs[0].flow.seed, 1);
+        // Keys are unique.
+        let keys: std::collections::BTreeSet<_> = jobs.iter().map(|j| j.key.clone()).collect();
+        assert_eq!(keys.len(), jobs.len());
+    }
+
+    #[test]
+    fn duplicate_axis_values_dedup() {
+        let spec = SweepSpec {
+            tracks: vec![4, 4],
+            apps: vec!["gaussian".into()],
+            seeds: vec![1, 1],
+            ..Default::default()
+        };
+        assert_eq!(spec.jobs("native-gd").unwrap().len(), 1);
+    }
+
+    #[test]
+    fn derived_seed_mode_splits_streams_per_point() {
+        let spec = SweepSpec {
+            tracks: vec![3, 4],
+            apps: vec!["gaussian".into()],
+            seeds: vec![7],
+            seed_mode: SeedMode::Derived,
+            ..Default::default()
+        };
+        let jobs = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs.len(), 2);
+        // Same logical seed, different configs ⇒ different streams; and
+        // the mapping is reproducible.
+        assert_ne!(jobs[0].flow.seed, jobs[1].flow.seed);
+        assert_ne!(jobs[0].flow.seed, 7);
+        let again = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs[0].flow.seed, again[0].flow.seed);
+    }
+
+    #[test]
+    fn descriptor_separates_flow_placer_and_seed_mode_variants() {
+        let cfg = InterconnectConfig::default();
+        let flow = FlowParams::default();
+        let a = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Raw);
+        let b = ConfigDescriptor::of(&cfg, &flow, "pjrt-jax-pallas", SeedMode::Raw);
+        assert_ne!(a, b);
+        // Raw and Derived runs must never alias in the cache.
+        let d = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Derived);
+        assert_ne!(a, d);
+        let mut flow2 = flow.clone();
+        flow2.sa.moves_per_node += 1;
+        assert_ne!(a, ConfigDescriptor::of(&cfg, &flow2, "native-gd", SeedMode::Raw));
+        let mut flow3 = flow.clone();
+        flow3.seed = 99; // seed is keyed separately, not in the descriptor
+        assert_eq!(a, ConfigDescriptor::of(&cfg, &flow3, "native-gd", SeedMode::Raw));
+    }
+
+    #[test]
+    fn tight_sizing_resolves_per_app() {
+        let spec = SweepSpec {
+            base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+            sizing: Sizing::TightArray { slack: 1.25 },
+            apps: vec!["gaussian".into(), "conv5x5".into()],
+            ..Default::default()
+        };
+        let jobs = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs.len(), 2);
+        // conv5x5 needs a bigger array than gaussian.
+        assert!(jobs[1].cfg.width > jobs[0].cfg.width);
+        // configs() under tight sizing enumerates one per app.
+        assert_eq!(spec.configs().unwrap().len(), 2);
+    }
+}

@@ -22,6 +22,10 @@
 //!   global-placement artifacts from the Rust hot path;
 //! - [`coordinator`] — design-space-exploration driver reproducing every
 //!   figure in the paper's evaluation;
+//! - [`dse`] — the sharded, cached design-space-exploration engine:
+//!   declarative sweep specs over the frozen `CompiledGraph`, a
+//!   work-stealing worker pool with per-worker router scratch, and a
+//!   `(config, app, seed)`-keyed result cache with JSON persistence;
 //! - [`util`] — self-contained support code (deterministic RNG, JSON,
 //!   benchmarking, property-test harness).
 
@@ -29,6 +33,7 @@ pub mod apps;
 pub mod area;
 pub mod bitstream;
 pub mod coordinator;
+pub mod dse;
 pub mod dsl;
 pub mod hw;
 pub mod ir;

@@ -9,8 +9,22 @@
 //! canal simulate   --app NAME [--fabric static|rv-full|rv-split] [--tokens N]
 //! canal sweep      --spec FILE           # exhaustive connection sweep
 //! canal experiment fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|all
+//! canal dse [figures] [--smoke] [--tracks 3,4,5] [--topologies wilton,disjoint]
+//!           [--sb-sides 4,3,2] [--cb-sides 4,3,2] [--out-tracks all,pinned]
+//!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
+//!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
+//!           [--workers N] [--cache FILE] [--no-cache] [--json FILE]
 //! canal info
 //! ```
+//!
+//! `canal dse` drives the sharded, cached design-space-exploration engine
+//! (`canal::dse`): axis flags build the cross-product sweep; results are
+//! cached in `dse_cache.json` (override with `--cache`, disable with
+//! `--no-cache`; the file format is documented in `dse::cache`), so
+//! re-runs and overlapping sweeps skip completed PnR. `canal dse figures`
+//! regenerates fig09/10/11/14/15 through one shared engine; `--smoke` is
+//! the CI end-to-end check (tiny 4x4 sweep, 2 workers, asserts a warm
+//! re-run performs zero PnR calls).
 //!
 //! Argument parsing is hand-rolled (clap is unavailable in the offline
 //! vendor set); flags are positional-order-independent `--key value`.
@@ -21,11 +35,20 @@ use std::process::ExitCode;
 use canal::apps;
 use canal::bitstream::{encode, Configuration};
 use canal::coordinator::{self, ExpOptions};
+use canal::dse::{
+    points_table, DseEngine, EngineOptions, ResultsStore, SeedMode, Sizing, SweepSpec,
+};
 use canal::dsl::spec::{emit_spec, parse_spec};
-use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
+use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMode, SbTopology};
 use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
 use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams};
 use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
+
+/// Flags that never take a value — without this list, a bare word after
+/// one of them (e.g. `canal dse --no-cache figures`) would be swallowed
+/// as its value instead of staying positional.
+const BOOL_FLAGS: &[&str] =
+    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds"];
 
 struct Args {
     flags: HashMap<String, String>,
@@ -40,7 +63,10 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(key) = a.strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                if !BOOL_FLAGS.contains(&key)
+                    && i + 1 < argv.len()
+                    && !argv[i + 1].starts_with("--")
+                {
                     flags.insert(key.to_string(), argv[i + 1].clone());
                     i += 2;
                 } else {
@@ -282,6 +308,179 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+fn parse_list<T, F: Fn(&str) -> Option<T>>(
+    args: &Args,
+    key: &str,
+    parse: F,
+) -> Result<Vec<T>, String> {
+    match args.get(key) {
+        None => Ok(vec![]),
+        Some(raw) => raw
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| parse(s.trim()).ok_or_else(|| format!("--{key}: bad value `{s}`")))
+            .collect(),
+    }
+}
+
+/// `canal dse --smoke`: the CI end-to-end check. A tiny 4x4 sweep on two
+/// workers, run cold then warm against a throwaway cache file; fails if
+/// the warm pass performs any PnR.
+fn dse_smoke() -> Result<(), String> {
+    let cache = std::env::temp_dir().join(format!("canal_dse_smoke_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&cache);
+    let spec = SweepSpec {
+        name: "smoke".into(),
+        base: InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks: vec![2, 3],
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1, 2],
+        flow: canal::pnr::FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        area: true,
+        ..Default::default()
+    };
+    let placer = NativePlacer::default();
+    let run = |label: &str| -> Result<canal::dse::SweepOutcome, String> {
+        // A fresh engine per pass: warm hits must come through the cache
+        // *file*, proving persistence end-to-end.
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 2, cache_path: Some(cache.clone()) })?;
+        let out = engine.run(&spec, &placer)?;
+        let s = &out.stats;
+        println!(
+            "smoke {label}: {} jobs, {} cached, {} PnR runs, {} configs built",
+            s.jobs, s.cache_hits, s.pnr_runs, s.configs_built
+        );
+        Ok(out)
+    };
+    let cold = run("cold")?;
+    let warm = run("warm")?;
+    let _ = std::fs::remove_file(&cache);
+    println!("{}", points_table(&warm).render());
+    if cold.stats.pnr_runs != cold.stats.jobs {
+        return Err(format!(
+            "smoke: expected {} cold PnR runs, got {}",
+            cold.stats.jobs, cold.stats.pnr_runs
+        ));
+    }
+    if warm.stats.pnr_runs != 0 {
+        return Err(format!("smoke: warm re-run performed {} PnR calls", warm.stats.pnr_runs));
+    }
+    for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+        if ja.key != jb.key || ra != rb {
+            return Err("smoke: warm results differ from cold".into());
+        }
+    }
+    println!("smoke: PASS (warm re-run did zero PnR, results bit-identical)");
+    Ok(())
+}
+
+/// Regenerate the engine-backed figures through one shared engine, so
+/// overlapping points across figures are PnR'd once.
+fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
+    let o = ExpOptions {
+        sa_moves: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
+        ..Default::default()
+    };
+    let placer = coordinator::default_placer();
+    println!("{}", coordinator::fig09_topology_with(&o, engine).render());
+    println!("{}", coordinator::fig10_area_tracks_with(engine).render());
+    println!("{}", coordinator::fig11_runtime_tracks_with(&o, placer.as_ref(), engine).render());
+    println!("{}", coordinator::fig14_sb_ports_runtime_with(&o, placer.as_ref(), engine).render());
+    println!("{}", coordinator::fig15_cb_ports_runtime_with(&o, placer.as_ref(), engine).render());
+    let s = engine.lifetime_stats();
+    println!(
+        "engine: {} jobs, {} cached, {} PnR runs, {} configs built, {} steals, {} cache entries",
+        s.jobs,
+        s.cache_hits,
+        s.pnr_runs,
+        s.configs_built,
+        s.steals,
+        engine.cache().len()
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<(), String> {
+    if args.has("smoke") {
+        return dse_smoke();
+    }
+    let workers = args.get("workers").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let cache_path = if args.has("no-cache") {
+        None
+    } else {
+        Some(args.get("cache").unwrap_or("dse_cache.json").into())
+    };
+    let mut engine = DseEngine::new(EngineOptions { workers, cache_path })?;
+
+    if args.positional.get(1).map(String::as_str) == Some("figures") {
+        return dse_figures(args, &mut engine);
+    }
+
+    // Ad-hoc sweep from axis flags.
+    let seed0: u64 = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let n_seeds: u64 = args.get("seeds").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let mut base = InterconnectConfig {
+        width: args.get("width").and_then(|v| v.parse().ok()).unwrap_or(8),
+        height: args.get("height").and_then(|v| v.parse().ok()).unwrap_or(8),
+        mem_column_period: 3,
+        ..Default::default()
+    };
+    if let Some(period) = args.get("mem-period").and_then(|v| v.parse().ok()) {
+        base.mem_column_period = period;
+    }
+    let spec = SweepSpec {
+        name: "cli".into(),
+        base,
+        tracks: parse_list(args, "tracks", |s| s.parse().ok())?,
+        topologies: parse_list(args, "topologies", SbTopology::parse)?,
+        output_tracks: parse_list(args, "out-tracks", OutputTrackMode::parse)?,
+        sb_sides: parse_list(args, "sb-sides", |s| s.parse().ok())?,
+        cb_sides: parse_list(args, "cb-sides", |s| s.parse().ok())?,
+        sizing: match args.get("tight").and_then(|v| v.parse().ok()) {
+            Some(slack) => Sizing::TightArray { slack },
+            None => Sizing::Fixed,
+        },
+        apps: parse_list(args, "apps", |s| Some(s.to_string()))?,
+        seeds: (0..n_seeds).map(|i| seed0 + i).collect(),
+        seed_mode: if args.has("derived-seeds") { SeedMode::Derived } else { SeedMode::Raw },
+        flow: canal::pnr::FlowParams {
+            sa: SaParams {
+                moves_per_node: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        area: args.has("area"),
+    };
+    if spec.apps.is_empty() && !spec.area {
+        return Err("nothing to do: pass --apps a,b,c and/or --area".into());
+    }
+    let placer = coordinator::default_placer();
+    let out = engine.run(&spec, placer.as_ref())?;
+    let mut store = ResultsStore::new();
+    let table = points_table(&out);
+    if spec.area {
+        let areas = canal::dse::areas_table(&out);
+        println!("{}", areas.render());
+    }
+    store.add(&out, table.clone());
+    println!("{}", table.render());
+    if let Some(path) = args.get("json") {
+        store.write_json(std::path::Path::new(path))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     println!("canal {} — CGRA interconnect generator", env!("CARGO_PKG_VERSION"));
     match canal::runtime::PjrtPlacer::load_default() {
@@ -303,8 +502,11 @@ fn cmd_info() -> Result<(), String> {
 }
 
 const USAGE: &str =
-    "usage: canal <generate|pnr|bitstream|simulate|sweep|experiment|info> [--flags]
-see README.md for the full flag reference";
+    "usage: canal <generate|pnr|bitstream|simulate|sweep|experiment|dse|info> [--flags]
+  canal dse            ad-hoc sharded sweep: --tracks/--topologies/--sb-sides/... x --apps x --seeds
+  canal dse figures    regenerate fig09/10/11/14/15 through one shared result cache
+  canal dse --smoke    CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
+see README.md and `rust/src/main.rs` docs for the full flag reference";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -317,6 +519,7 @@ fn main() -> ExitCode {
         "simulate" => cmd_simulate(&args),
         "sweep" => cmd_sweep(&args),
         "experiment" => cmd_experiment(&args),
+        "dse" => cmd_dse(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!("{USAGE}");

@@ -10,7 +10,7 @@ use super::place::{
     build_global_problem, detailed_place, initial_positions, legalize, GlobalPlacer,
     NativePlacer, Placement, SaParams,
 };
-use super::route::{route, RouterParams, RoutingFailed, RoutingResult};
+use super::route::{route_with_scratch, RouterParams, RouterScratch, RoutingFailed, RoutingResult};
 use super::timing::{analyze, TimingReport};
 
 /// Flow-level options.
@@ -70,6 +70,20 @@ pub fn run_flow_with(
     params: &FlowParams,
     placer: &dyn GlobalPlacer,
 ) -> Result<FlowResult, RoutingFailed> {
+    run_flow_scratch(ic, app, params, placer, &mut RouterScratch::new())
+}
+
+/// [`run_flow_with`], reusing caller-owned PathFinder buffers across the
+/// α sweep's routes — and, for the DSE engine's workers, across every
+/// sweep point the worker processes. Bit-identical to a fresh-scratch
+/// call.
+pub fn run_flow_scratch(
+    ic: &Interconnect,
+    app: &AppGraph,
+    params: &FlowParams,
+    placer: &dyn GlobalPlacer,
+    scratch: &mut RouterScratch,
+) -> Result<FlowResult, RoutingFailed> {
     // 1. Packing.
     let packed = pack(app);
 
@@ -94,7 +108,15 @@ pub fn run_flow_with(
         let sa = SaParams { alpha, seed: params.seed ^ alpha.to_bits(), ..params.sa };
         let (placement, placement_cost) =
             detailed_place(&packed.app, ic, &nets, seed_placement.clone(), &sa);
-        match route(ic, &packed.app, &placement, params.bit_width, &params.router) {
+        let routed = route_with_scratch(
+            ic,
+            &packed.app,
+            &placement,
+            params.bit_width,
+            &params.router,
+            scratch,
+        );
+        match routed {
             Ok(routing) => {
                 let timing =
                     analyze(ic, &packed, &routing, params.bit_width, params.workload_items);

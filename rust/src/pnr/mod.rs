@@ -14,11 +14,14 @@ pub mod route;
 pub mod timing;
 
 pub use app::{AppEdge, AppGraph, AppNode, AppNodeId, AppOp, Net};
-pub use flow::{run_flow, run_flow_with, FlowParams, FlowResult};
+pub use flow::{run_flow, run_flow_scratch, run_flow_with, FlowParams, FlowResult};
 pub use pack::{pack, PackedApp};
 pub use place::{
     build_global_problem, detailed_place, global_cost_grad, initial_positions, legalize,
     GlobalPlacer, GlobalProblem, NativePlacer, Placement, SaParams,
 };
-pub use route::{route, RouterParams, RouteTree, RoutingFailed, RoutingResult};
+pub use route::{
+    route, route_with_scratch, RouterParams, RouterScratch, RouteTree, RoutingFailed,
+    RoutingResult,
+};
 pub use timing::{analyze, TimingReport};

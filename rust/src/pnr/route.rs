@@ -155,23 +155,21 @@ impl Ord for Cost {
     }
 }
 
-struct RouterState<'a> {
-    /// Frozen CSR graph — every inner-loop access (fan-out slices, wire
-    /// delays) is a flat-array read; no hashing, no `Vec<Vec<_>>` chase.
-    g: &'a CompiledGraph,
-    /// Builder graph, kept only for cold paths (names in error reports).
-    names: &'a RoutingGraph,
-    params: RouterParams,
+/// Reusable PathFinder buffers: every per-route allocation — occupancy,
+/// history, base costs, the flat coordinate lookups, the A* arenas and
+/// the frontier heap — lives here so repeat callers stop paying
+/// malloc/free per route. The α sweep inside one flow reuses one, and the
+/// DSE engine gives each worker its own, carried across thousands of
+/// sweep points. Reuse never changes results: [`route_with_scratch`]
+/// resets every array to exactly the state a fresh allocation would have.
+#[derive(Default)]
+pub struct RouterScratch {
     /// Present occupancy per node (net count).
     occ: Vec<u16>,
     /// Historical congestion per node.
     hist: Vec<f64>,
-    /// Tiles occupied by app vertices (for the unused-tile penalty).
-    used_tiles: Vec<bool>,
-    ic_width: usize,
     /// Base cost per node: 1 + delay share.
     base: Vec<f64>,
-    pres_fac: f64,
     // --- Flat per-node lookups (cache-friendly; avoid deref of fat
     // `Node` structs in the inner loop) ---------------------------------
     /// Tile coordinates per node.
@@ -179,6 +177,8 @@ struct RouterState<'a> {
     ny: Vec<f32>,
     /// Flattened tile index per node.
     tile_of: Vec<u32>,
+    /// Tiles occupied by app vertices (for the unused-tile penalty).
+    used_tiles: Vec<bool>,
     // --- A* scratch arenas (allocated once, reset via `touched`) -------
     /// Tentative cost per node (`f64::INFINITY` = unvisited).
     dist: Vec<f64>,
@@ -192,20 +192,69 @@ struct RouterState<'a> {
     pq: std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>,
 }
 
+impl RouterScratch {
+    pub fn new() -> RouterScratch {
+        RouterScratch::default()
+    }
+
+    /// Reset every buffer to the fresh-allocation state for a graph of
+    /// `g.len()` nodes on a `tiles`-tile array (capacity persists).
+    fn prepare(&mut self, g: &CompiledGraph, tiles: usize, ic_width: u32, params: &RouterParams) {
+        let n = g.len();
+        self.occ.clear();
+        self.occ.resize(n, 0);
+        self.hist.clear();
+        self.hist.resize(n, 0.0);
+        self.base.clear();
+        self.base.extend(g.ids().map(|id| {
+            let wire_out = g.max_out_wire_delay(id);
+            1.0 + params.delay_weight * (g.node_delay_ps(id) + wire_out) as f64 / 1000.0
+        }));
+        self.nx.clear();
+        self.nx.extend(g.ids().map(|id| g.x(id) as f32));
+        self.ny.clear();
+        self.ny.extend(g.ids().map(|id| g.y(id) as f32));
+        self.tile_of.clear();
+        self.tile_of.extend(g.ids().map(|id| g.y(id) as u32 * ic_width + g.x(id) as u32));
+        self.used_tiles.clear();
+        self.used_tiles.resize(tiles, false);
+        self.dist.clear();
+        self.dist.resize(n, f64::INFINITY);
+        self.prev.clear();
+        self.prev.resize(n, u32::MAX);
+        self.in_tree.clear();
+        self.in_tree.resize(n, false);
+        self.touched.clear();
+        self.pq.clear();
+    }
+}
+
+struct RouterState<'a> {
+    /// Frozen CSR graph — every inner-loop access (fan-out slices, wire
+    /// delays) is a flat-array read; no hashing, no `Vec<Vec<_>>` chase.
+    g: &'a CompiledGraph,
+    /// Builder graph, kept only for cold paths (names in error reports).
+    names: &'a RoutingGraph,
+    params: RouterParams,
+    pres_fac: f64,
+    /// Reusable buffers (see [`RouterScratch`]).
+    s: &'a mut RouterScratch,
+}
+
 impl<'a> RouterState<'a> {
     fn node_cost(&self, n: NodeId, crit: f64) -> f64 {
         let i = n.index();
-        let over = self.occ[i] as f64; // occupancy *before* adding us
+        let over = self.s.occ[i] as f64; // occupancy *before* adding us
         let pres = 1.0 + self.pres_fac * over;
-        let unused = if self.used_tiles[self.tile_of[i] as usize] {
+        let unused = if self.s.used_tiles[self.s.tile_of[i] as usize] {
             0.0
         } else {
             self.params.unused_tile_penalty
         };
         // Timing-criticality blend: critical nets weight delay, relaxed
         // nets weight congestion (negotiation share).
-        let cong_share = (self.base[i] + unused) * pres + self.hist[i];
-        let delay_share = self.base[i];
+        let cong_share = (self.s.base[i] + unused) * pres + self.s.hist[i];
+        let delay_share = self.s.base[i];
         crit * delay_share + (1.0 - crit) * cong_share
     }
 }
@@ -217,6 +266,19 @@ pub fn route(
     placement: &Placement,
     bit_width: u8,
     params: &RouterParams,
+) -> Result<RoutingResult, RoutingFailed> {
+    route_with_scratch(ic, app, placement, bit_width, params, &mut RouterScratch::new())
+}
+
+/// [`route`], reusing caller-owned PathFinder buffers. Bit-identical to a
+/// fresh-scratch call; strictly an allocation saving.
+pub fn route_with_scratch(
+    ic: &Interconnect,
+    app: &AppGraph,
+    placement: &Placement,
+    bit_width: u8,
+    params: &RouterParams,
+    scratch: &mut RouterScratch,
 ) -> Result<RoutingResult, RoutingFailed> {
     // The frozen CSR graph drives the search; the builder graph only
     // resolves terminal names (cold) and labels errors.
@@ -238,41 +300,18 @@ pub fn route(
         terminals.push((src, sinks));
     }
 
-    let mut used_tiles = vec![false; ic.width as usize * ic.height as usize];
+    scratch.prepare(g, ic.width as usize * ic.height as usize, ic.width as u32, params);
     for (id, _) in app.iter() {
         let (x, y) = placement.of(id);
-        used_tiles[y as usize * ic.width as usize + x as usize] = true;
+        scratch.used_tiles[y as usize * ic.width as usize + x as usize] = true;
     }
-
-    let base: Vec<f64> = g
-        .ids()
-        .map(|id| {
-            let wire_out = g.max_out_wire_delay(id);
-            1.0 + params.delay_weight * (g.node_delay_ps(id) + wire_out) as f64 / 1000.0
-        })
-        .collect();
 
     let mut st = RouterState {
         g,
         names: rg,
         params: *params,
-        occ: vec![0; g.len()],
-        hist: vec![0.0; g.len()],
-        used_tiles,
-        ic_width: ic.width as usize,
-        base,
         pres_fac: params.pres_fac_init,
-        nx: g.ids().map(|id| g.x(id) as f32).collect(),
-        ny: g.ids().map(|id| g.y(id) as f32).collect(),
-        tile_of: g
-            .ids()
-            .map(|id| g.y(id) as u32 * ic.width as u32 + g.x(id) as u32)
-            .collect(),
-        dist: vec![f64::INFINITY; g.len()],
-        prev: vec![u32::MAX; g.len()],
-        in_tree: vec![false; g.len()],
-        touched: Vec::with_capacity(256),
-        pq: std::collections::BinaryHeap::with_capacity(1024),
+        s: scratch,
     };
 
     // Route-order: big nets first (more sinks, larger bbox).
@@ -284,7 +323,7 @@ pub fn route(
 
     for iter in 0..params.max_iterations {
         // Rip up everything (occupancies reset; history persists).
-        for o in st.occ.iter_mut() {
+        for o in st.s.occ.iter_mut() {
             *o = 0;
         }
 
@@ -295,7 +334,7 @@ pub fn route(
             })?;
             // Mark occupancy for this net's nodes (once per net).
             for &n in &tree_nodes(&tree) {
-                st.occ[n.index()] += 1;
+                st.s.occ[n.index()] += 1;
             }
             trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
         }
@@ -303,7 +342,7 @@ pub fn route(
         // Count overuse (port nodes are per-net by construction; all
         // nodes have capacity 1).
         let overused: Vec<usize> =
-            (0..g.len()).filter(|&i| st.occ[i] > 1).collect();
+            (0..g.len()).filter(|&i| st.s.occ[i] > 1).collect();
         if overused.is_empty() {
             let trees: Vec<RouteTree> = trees.into_iter().map(Option::unwrap).collect();
             let nodes_used = trees.iter().map(|t| t.nodes().len()).sum();
@@ -312,7 +351,7 @@ pub fn route(
 
         // Negotiate: bump history on overused nodes, raise pressure.
         for &i in &overused {
-            st.hist[i] += params.hist_incr * (st.occ[i] as f64 - 1.0);
+            st.s.hist[i] += params.hist_incr * (st.s.occ[i] as f64 - 1.0);
         }
         st.pres_fac *= params.pres_fac_mult;
 
@@ -336,7 +375,7 @@ pub fn route(
         }
     }
 
-    let overused = st.occ.iter().filter(|&&o| o > 1).count();
+    let overused = st.s.occ.iter().filter(|&&o| o > 1).count();
     Err(RoutingFailed {
         iterations: params.max_iterations,
         overused_nodes: overused,
@@ -375,7 +414,7 @@ fn route_net(
     });
 
     let mut tree: Vec<NodeId> = vec![src];
-    st.in_tree[src.index()] = true;
+    st.s.in_tree[src.index()] = true;
     let mut paths: Vec<Vec<NodeId>> = vec![Vec::new(); sinks.len()];
 
     let mut result = Ok(());
@@ -384,8 +423,8 @@ fn route_net(
         match astar(st, &tree, sink, crit) {
             Some(path) => {
                 for &n in &path {
-                    if !st.in_tree[n.index()] {
-                        st.in_tree[n.index()] = true;
+                    if !st.s.in_tree[n.index()] {
+                        st.s.in_tree[n.index()] = true;
                         tree.push(n);
                     }
                 }
@@ -400,7 +439,7 @@ fn route_net(
     }
     // Reset tree membership for the next net.
     for &n in &tree {
-        st.in_tree[n.index()] = false;
+        st.s.in_tree[n.index()] = false;
     }
     result?;
 
@@ -415,28 +454,26 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
     use std::cmp::Reverse;
 
     let g = st.g;
-    let (tx, ty) = (st.nx[sink.index()], st.ny[sink.index()]);
+    let (tx, ty) = (st.s.nx[sink.index()], st.s.ny[sink.index()]);
     // Admissible-ish heuristic: manhattan distance x a conservative
     // per-hop lower bound (all node base costs are >= 1.0).
-    let nx = &st.nx;
-    let ny = &st.ny;
-    let h = move |n: NodeId| {
-        ((nx[n.index()] - tx).abs() + (ny[n.index()] - ty).abs()) as f64 * 0.9
-    };
+    fn h(s: &RouterScratch, n: NodeId, tx: f32, ty: f32) -> f64 {
+        ((s.nx[n.index()] - tx).abs() + (s.ny[n.index()] - ty).abs()) as f64 * 0.9
+    }
 
-    let mut pq = std::mem::take(&mut st.pq);
+    let mut pq = std::mem::take(&mut st.s.pq);
     pq.clear();
     for &t in tree {
-        st.dist[t.index()] = 0.0;
-        st.prev[t.index()] = u32::MAX;
-        st.touched.push(t.0);
-        pq.push((Reverse(Cost(h(t))), t));
+        st.s.dist[t.index()] = 0.0;
+        st.s.prev[t.index()] = u32::MAX;
+        st.s.touched.push(t.0);
+        pq.push((Reverse(Cost(h(st.s, t, tx, ty))), t));
     }
 
     let mut found = false;
     while let Some((Reverse(Cost(f)), n)) = pq.pop() {
-        let d = st.dist[n.index()];
-        if f > d + h(n) + 1e-9 {
+        let d = st.s.dist[n.index()];
+        if f > d + h(st.s, n, tx, ty) + 1e-9 {
             continue; // stale entry
         }
         if n == sink {
@@ -451,13 +488,13 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
             }
             let nd = d + st.node_cost(succ, crit);
             let si = succ.index();
-            if nd < st.dist[si] - 1e-12 {
-                if st.dist[si].is_infinite() {
-                    st.touched.push(succ.0);
+            if nd < st.s.dist[si] - 1e-12 {
+                if st.s.dist[si].is_infinite() {
+                    st.s.touched.push(succ.0);
                 }
-                st.dist[si] = nd;
-                st.prev[si] = n.0;
-                pq.push((Reverse(Cost(nd + h(succ))), succ));
+                st.s.dist[si] = nd;
+                st.s.prev[si] = n.0;
+                pq.push((Reverse(Cost(nd + h(st.s, succ, tx, ty))), succ));
             }
         }
     }
@@ -466,8 +503,8 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
         // Walk back to a tree node (prev == MAX).
         let mut path = vec![sink];
         let mut cur = sink;
-        while st.prev[cur.index()] != u32::MAX {
-            cur = NodeId(st.prev[cur.index()]);
+        while st.s.prev[cur.index()] != u32::MAX {
+            cur = NodeId(st.s.prev[cur.index()]);
             path.push(cur);
         }
         path.reverse();
@@ -477,12 +514,12 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
     };
 
     // Reset scratch for the next search; return the heap's capacity.
-    for &t in &st.touched {
-        st.dist[t as usize] = f64::INFINITY;
-        st.prev[t as usize] = u32::MAX;
+    for &t in &st.s.touched {
+        st.s.dist[t as usize] = f64::INFINITY;
+        st.s.prev[t as usize] = u32::MAX;
     }
-    st.touched.clear();
-    st.pq = pq;
+    st.s.touched.clear();
+    st.s.pq = pq;
     path
 }
 
@@ -627,6 +664,29 @@ mod tests {
         if let (Ok(r3), Ok(r6)) = (r3, r6) {
             assert!(r6.iterations <= r3.iterations + 2);
         }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        // One scratch carried across differently-sized graphs (the DSE
+        // worker regime) must give exactly the fresh-allocation result.
+        let ic3 = ic_with(SbTopology::Wilton, 3);
+        let ic5 = ic_with(SbTopology::Wilton, 5);
+        let (a3, p3) = place("pointwise", &ic3);
+        let (a5, p5) = place("gaussian", &ic5);
+        let params = RouterParams::default();
+        let mut scratch = RouterScratch::new();
+        let r1 = route_with_scratch(&ic5, &a5, &p5, 16, &params, &mut scratch).unwrap();
+        let _ = route_with_scratch(&ic3, &a3, &p3, 16, &params, &mut scratch).unwrap();
+        let r2 = route_with_scratch(&ic5, &a5, &p5, 16, &params, &mut scratch).unwrap();
+        let fresh = route(&ic5, &a5, &p5, 16, &params).unwrap();
+        let paths = |r: &RoutingResult| -> Vec<Vec<Vec<NodeId>>> {
+            r.trees.iter().map(|t| t.sink_paths.clone()).collect()
+        };
+        assert_eq!(paths(&r1), paths(&fresh));
+        assert_eq!(paths(&r2), paths(&fresh));
+        assert_eq!(r1.iterations, fresh.iterations);
+        assert_eq!(r2.nodes_used, fresh.nodes_used);
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Small self-contained utilities: deterministic RNG, table rendering,
-//! and a benchmarking harness (offline substitutes for rand/criterion).
+//! lossless JSON, and a benchmarking harness (offline substitutes for
+//! rand/serde_json/criterion).
 pub mod bench;
+pub mod json;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,115 @@
+//! Determinism and cache semantics of the sharded DSE engine.
+//!
+//! Contract under test: engine results are bit-identical across worker
+//! counts and cache temperature, the cache file round-trips losslessly,
+//! and a warm re-run of the full figure suite (fig09/10/11/14/15)
+//! performs zero PnR calls.
+
+use canal::coordinator::{self, ExpOptions};
+use canal::dse::{DseEngine, EngineOptions, SweepSpec};
+use canal::dsl::InterconnectConfig;
+use canal::pnr::{FlowParams, NativePlacer, SaParams};
+
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        name: "determinism".into(),
+        base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+        tracks: vec![3, 4],
+        apps: vec!["pointwise".into(), "gaussian".into()],
+        seeds: vec![1, 2],
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+fn run_with_workers(spec: &SweepSpec, workers: usize) -> canal::dse::SweepOutcome {
+    let mut engine =
+        DseEngine::new(EngineOptions { workers, cache_path: None }).expect("engine");
+    engine.run(spec, &NativePlacer::default()).expect("sweep")
+}
+
+#[test]
+fn any_worker_count_is_bit_identical_to_sequential() {
+    let spec = small_spec();
+    let sequential = run_with_workers(&spec, 1);
+    assert_eq!(sequential.points.len(), 8);
+    for workers in [2, 4, 7] {
+        let sharded = run_with_workers(&spec, workers);
+        assert_eq!(sharded.points.len(), sequential.points.len(), "workers={workers}");
+        for ((ja, ra), (jb, rb)) in sequential.points.iter().zip(&sharded.points) {
+            assert_eq!(ja.key, jb.key, "workers={workers}");
+            assert_eq!(ra, rb, "workers={workers} {:?}", ja.key);
+            // f64 equality above is already exact; make bit-identity explicit.
+            assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+            assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+        }
+    }
+}
+
+#[test]
+fn warm_cache_is_bit_identical_and_file_backed() {
+    let path = std::env::temp_dir()
+        .join(format!("canal_dse_determinism_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let spec = small_spec();
+
+    let cold = {
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
+                .expect("engine");
+        engine.run(&spec, &NativePlacer::default()).expect("cold sweep")
+    };
+    assert_eq!(cold.stats.pnr_runs, cold.points.len() as u64);
+    assert_eq!(cold.stats.cache_hits, 0);
+
+    // A *new* engine over the same cache file: every point must come from
+    // disk, bit-identical.
+    let warm = {
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
+                .expect("engine");
+        engine.run(&spec, &NativePlacer::default()).expect("warm sweep")
+    };
+    std::fs::remove_file(&path).expect("cache file written");
+    assert_eq!(warm.stats.pnr_runs, 0, "warm re-run must skip all PnR");
+    assert_eq!(warm.stats.cache_hits, cold.points.len() as u64);
+    assert_eq!(warm.stats.configs_built, 0);
+    for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(ja.key, jb.key);
+        assert_eq!(ra, rb);
+        assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+    }
+}
+
+#[test]
+fn figure_suite_warm_rerun_does_zero_pnr() {
+    // The acceptance check for the engine port: render fig09/10/11/14/15
+    // through one shared engine, then render them all again — the second
+    // pass must hit the cache for every point (zero PnR runs) and produce
+    // byte-identical tables.
+    let o = ExpOptions { sa_moves: 2, seeds: 1, ..Default::default() };
+    let placer = NativePlacer::default();
+    let mut engine = DseEngine::in_memory();
+
+    let render_all = |engine: &mut DseEngine| -> String {
+        let mut s = String::new();
+        s.push_str(&coordinator::fig09_topology_with(&o, engine).render());
+        s.push_str(&coordinator::fig10_area_tracks_with(engine).render());
+        s.push_str(&coordinator::fig11_runtime_tracks_with(&o, &placer, engine).render());
+        s.push_str(&coordinator::fig14_sb_ports_runtime_with(&o, &placer, engine).render());
+        s.push_str(&coordinator::fig15_cb_ports_runtime_with(&o, &placer, engine).render());
+        s
+    };
+
+    let cold_tables = render_all(&mut engine);
+    let cold_runs = engine.lifetime_stats().pnr_runs;
+    assert!(cold_runs > 0, "cold figure pass must perform PnR");
+
+    let warm_tables = render_all(&mut engine);
+    let warm_runs = engine.lifetime_stats().pnr_runs - cold_runs;
+    assert_eq!(warm_runs, 0, "warm figure re-run must perform zero PnR calls");
+    assert_eq!(cold_tables, warm_tables, "warm tables must be byte-identical");
+}
