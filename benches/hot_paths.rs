@@ -17,7 +17,7 @@ use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
 use canal::hw::allocate;
 use canal::pnr::{
     build_global_problem, detailed_place, initial_positions, legalize, pack, route,
-    GlobalPlacer, NativePlacer, RouterParams, SaParams,
+    BatchedNativePlacer, GlobalPlacer, NativePlacer, PlacementInstance, RouterParams, SaParams,
 };
 use canal::sim::{sweep_connections, RvSim, StallPattern};
 use canal::util::bench::{bench, black_box};
@@ -113,17 +113,38 @@ fn main() {
             },
             ..Default::default()
         };
+        // Cold-cache batched-vs-scalar: same spec, one engine per
+        // backend. NativePlacer takes the trait's sequential place_batch
+        // loop; BatchedNativePlacer solves each per-config job group in
+        // one struct-of-arrays pass. Results are bit-identical — only
+        // the solve pattern differs.
         let mut engine = DseEngine::in_memory();
         let t0 = std::time::Instant::now();
         let cold = engine.run(&spec, &NativePlacer::default()).unwrap();
         let cold_s = t0.elapsed().as_secs_f64();
         let n = cold.points.len() as f64;
         println!(
-            "dse sweep cold ({} points, {} pnr runs)          {:.3}s   [{:.1} points/s]",
+            "dse sweep cold scalar-place ({} points, {} pnr runs)   {:.3}s   [{:.1} points/s]",
             cold.points.len(),
             cold.stats.pnr_runs,
             cold_s,
             n / cold_s
+        );
+        let mut engine_b = DseEngine::in_memory();
+        let t0 = std::time::Instant::now();
+        let cold_b = engine_b.run(&spec, &BatchedNativePlacer::default()).unwrap();
+        let cold_b_s = t0.elapsed().as_secs_f64();
+        println!(
+            "dse sweep cold batched-place ({} points, {} group solves) {:.3}s   [{:.1} points/s]",
+            cold_b.points.len(),
+            cold_b.stats.batched_solves,
+            cold_b_s,
+            n / cold_b_s
+        );
+        assert_eq!(
+            cold.points.iter().map(|(_, r)| r).collect::<Vec<_>>(),
+            cold_b.points.iter().map(|(_, r)| r).collect::<Vec<_>>(),
+            "batched and scalar cold sweeps must be bit-identical"
         );
         let s = bench("dse sweep warm (cache-hit path)", 500, budget, || {
             black_box(engine.run(&spec, &NativePlacer::default()).unwrap());
@@ -140,6 +161,36 @@ fn main() {
         black_box(native.optimize(&problem16, &x160, &y160));
     });
     println!("{s}");
+
+    // Batched-vs-scalar at the solver level: the whole suite's problems
+    // as one group (a per-config DSE job group), scalar loop vs one
+    // struct-of-arrays pass.
+    {
+        let suite: Vec<_> = apps::suite().iter().map(|a| pack(a).app).collect();
+        let problems: Vec<_> = suite.iter().map(|a| build_global_problem(a, &ic16)).collect();
+        let inits: Vec<_> = suite
+            .iter()
+            .enumerate()
+            .map(|(i, a)| initial_positions(a, &ic16, i as u64))
+            .collect();
+        let batch: Vec<PlacementInstance> = problems
+            .iter()
+            .zip(&inits)
+            .map(|(p, (xs0, ys0))| PlacementInstance { problem: p, xs0, ys0 })
+            .collect();
+        let k = batch.len() as f64;
+        let s = bench("global place scalar loop (suite group)", 50, budget, || {
+            for b in &batch {
+                black_box(native.optimize(b.problem, b.xs0, b.ys0));
+            }
+        });
+        println!("{s}   [{:.1} problems/s]", k * s.throughput_per_sec());
+        let batched = BatchedNativePlacer::default();
+        let s = bench("global place batched SoA (suite group)", 50, budget, || {
+            black_box(batched.place_batch(&batch));
+        });
+        println!("{s}   [{:.1} problems/s]", k * s.throughput_per_sec());
+    }
 
     match canal::runtime::PjrtPlacer::load_default() {
         Ok(pjrt) => {

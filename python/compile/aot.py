@@ -6,10 +6,12 @@ instruction ids; the text parser reassigns ids and round-trips cleanly
 (see /opt/xla-example/README.md).
 
 Artifacts:
-  placer_step.hlo.txt   — INNER_STEPS momentum-GD steps per call
-  placer_cost.hlo.txt   — objective value (convergence monitoring)
-  placer_meta.txt       — shape contract consumed by canal::runtime
-  placer_testvec.txt    — input/output vectors for Rust cross-checks
+  placer_step.hlo.txt        — INNER_STEPS momentum-GD steps per call
+  placer_batch_step.hlo.txt  — the same steps on PAD_B problems per call
+                               (vmapped; one dispatch per DSE job group)
+  placer_cost.hlo.txt        — objective value (convergence monitoring)
+  placer_meta.txt            — shape contract consumed by canal::runtime
+  placer_testvec.txt         — input/output vectors for Rust cross-checks
 
 Usage: python -m compile.aot --out-dir ../artifacts
 """
@@ -75,6 +77,13 @@ def main() -> None:
         f.write(step_hlo)
     print(f"placer_step.hlo.txt: {len(step_hlo)} chars")
 
+    batch_hlo = to_hlo_text(
+        jax.jit(model.placement_steps_batch).lower(*model.example_args_batch())
+    )
+    with open(os.path.join(args.out_dir, "placer_batch_step.hlo.txt"), "w") as f:
+        f.write(batch_hlo)
+    print(f"placer_batch_step.hlo.txt: {len(batch_hlo)} chars")
+
     cost_example = (example[0], example[1], example[4], example[5], example[6], example[8])
     cost_hlo = to_hlo_text(jax.jit(model.placement_cost).lower(*cost_example))
     with open(os.path.join(args.out_dir, "placer_cost.hlo.txt"), "w") as f:
@@ -84,7 +93,7 @@ def main() -> None:
     with open(os.path.join(args.out_dir, "placer_meta.txt"), "w") as f:
         f.write(
             f"pad_n = {model.PAD_N}\npad_m = {model.PAD_M}\npad_k = {model.PAD_K}\n"
-            f"inner_steps = {model.INNER_STEPS}\n"
+            f"inner_steps = {model.INNER_STEPS}\npad_b = {model.PAD_B}\n"
         )
 
     # Golden test vector: run one artifact call worth of steps in python

@@ -32,6 +32,12 @@ PAD_N = 256
 PAD_M = 512
 PAD_K = 16
 
+# Batch lanes of the vmapped `placement_steps_batch` artifact: one DSE
+# job group (all (app, seed) points of one interconnect config) solves in
+# a single PJRT dispatch. Sized to the common group shape — suite apps x
+# a couple of seeds; canal::runtime chunks larger groups.
+PAD_B = 8
+
 
 def cost_grad(xs, ys, pins, col, colm, lambda_mem, *, use_pallas=True):
     """Objective + gradient, kernel-accelerated. Returns (cost, gx, gy)."""
@@ -75,6 +81,18 @@ def placement_steps(xs, ys, vx, vy, pins, col, colm, bounds, hyper):
     return xs, ys, vx, vy
 
 
+def placement_steps_batch(xs, ys, vx, vy, pins, col, colm, bounds, hyper):
+    """INNER_STEPS optimizer steps on PAD_B independent problems at once.
+
+    A straight vmap of `placement_steps` over a leading batch axis on
+    every argument (each lane carries its own pins/bounds/hyper), so one
+    HLO execution advances a whole DSE job group. vmap adds the batch
+    dimension without reassociating the per-lane arithmetic — each lane
+    computes exactly what the scalar artifact computes.
+    """
+    return jax.vmap(placement_steps)(xs, ys, vx, vy, pins, col, colm, bounds, hyper)
+
+
 def placement_cost(xs, ys, pins, col, colm, hyper):
     """Objective value only (exported for convergence monitoring)."""
     cost, _, _ = cost_grad(xs, ys, pins, col, colm, hyper[2])
@@ -94,4 +112,11 @@ def example_args():
         jax.ShapeDtypeStruct((PAD_N,), f),  # colm
         jax.ShapeDtypeStruct((2,), f),  # bounds
         jax.ShapeDtypeStruct((3,), f),  # hyper
+    )
+
+
+def example_args_batch():
+    """ShapeDtypeStructs of `placement_steps_batch` (leading PAD_B axis)."""
+    return tuple(
+        jax.ShapeDtypeStruct((PAD_B,) + a.shape, a.dtype) for a in example_args()
     )

@@ -60,6 +60,8 @@ def test_meta_matches_model_constants():
     assert meta["pad_m"] == model.PAD_M
     assert meta["pad_k"] == model.PAD_K
     assert meta["inner_steps"] == model.INNER_STEPS
+    # pad_b is absent from pre-batching artifact sets (rust defaults to 1).
+    assert meta.get("pad_b", 1) in (1, model.PAD_B)
 
 
 @pytest.mark.skipif(

@@ -80,3 +80,42 @@ def test_example_args_cover_padded_shapes():
     assert args[0].shape == (model.PAD_N,)
     assert args[4].shape == (model.PAD_M, model.PAD_K)
     assert model.PAD_M % 128 == 0  # kernel block constraint
+
+
+def test_batch_example_args_add_leading_lane_axis():
+    scalar = model.example_args()
+    batch = model.example_args_batch()
+    assert len(batch) == len(scalar)
+    for s, b in zip(scalar, batch):
+        assert b.shape == (model.PAD_B,) + s.shape
+        assert b.dtype == s.dtype
+
+
+def test_batch_steps_match_scalar_steps_per_lane():
+    """placement_steps_batch lane l == placement_steps on problem l."""
+    bounds = jnp.array([7.0, 7.0], jnp.float32)
+    hyper = jnp.array([0.12, 0.9, 0.4], jnp.float32)
+    lanes = []
+    for seed in range(3):
+        xs, ys, pins, col, colm = small_problem(seed=seed)
+        n = len(xs)
+        pad = model.PAD_N - n
+        lanes.append(
+            (
+                np.pad(xs, (0, pad)),
+                np.pad(ys, (0, pad)),
+                np.zeros(model.PAD_N, np.float32),
+                np.zeros(model.PAD_N, np.float32),
+                np.pad(pins, ((0, model.PAD_M - pins.shape[0]), (0, model.PAD_K - pins.shape[1])), constant_values=-1),
+                np.pad(col, (0, pad)),
+                np.pad(colm, (0, pad)),
+                np.asarray(bounds),
+                np.asarray(hyper),
+            )
+        )
+    stacked = [jnp.asarray(np.stack([lane[i] for lane in lanes])) for i in range(9)]
+    batched = model.placement_steps_batch(*stacked)
+    for l, lane in enumerate(lanes):
+        scalar = model.placement_steps(*[jnp.asarray(a) for a in lane])
+        for b, s in zip(batched, scalar):
+            np.testing.assert_allclose(np.asarray(b)[l], np.asarray(s), rtol=1e-6, atol=1e-6)

@@ -23,18 +23,26 @@ pub use experiments::{
 use std::sync::mpsc;
 use std::sync::Mutex;
 
-use crate::pnr::place::{GlobalPlacer, GlobalProblem, NativePlacer};
+use crate::pnr::place::{BatchedNativePlacer, GlobalPlacer, GlobalProblem, PlacementInstance};
 
+/// One problem with owned initial positions, as shipped to the service
+/// thread.
+type OwnedProblem = (GlobalProblem, Vec<f32>, Vec<f32>);
+/// Optimized `(xs, ys)` per problem, in request order.
+type Solutions = Vec<(Vec<f32>, Vec<f32>)>;
+
+/// One request to the placer service: a whole batch of problems (a
+/// single `optimize` is a one-element batch), answered in order.
 struct Job {
-    problem: GlobalProblem,
-    xs0: Vec<f32>,
-    ys0: Vec<f32>,
-    reply: mpsc::Sender<(Vec<f32>, Vec<f32>)>,
+    batch: Vec<OwnedProblem>,
+    reply: mpsc::Sender<Solutions>,
 }
 
 /// A `Send + Sync` front for a non-`Send` placer: a dedicated worker
 /// thread owns the backend (e.g. the PJRT executable) and serves
-/// `optimize` requests over a channel. PnR threads share the service.
+/// `optimize`/`place_batch` requests over a channel. PnR threads share
+/// the service; batches cross the channel whole, so a batching backend
+/// still sees the full group in one call.
 pub struct PlacerService {
     tx: Mutex<mpsc::Sender<Job>>,
     name: &'static str,
@@ -42,32 +50,68 @@ pub struct PlacerService {
 
 impl PlacerService {
     /// Spawn a worker that constructs its backend *inside* the thread
-    /// (PJRT handles never cross threads).
-    pub fn spawn<F>(name: &'static str, factory: F) -> PlacerService
+    /// (PJRT handles never cross threads). The service reports the
+    /// *backend's* `name()` — the cache identity must reflect what
+    /// actually solved (e.g. a PJRT load failure falling back to the
+    /// native solver must not cache under the pjrt name).
+    pub fn spawn<F>(factory: F) -> PlacerService
     where
         F: FnOnce() -> Box<dyn GlobalPlacer> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<Job>();
+        let (name_tx, name_rx) = mpsc::channel();
         std::thread::spawn(move || {
             let backend = factory();
+            let _ = name_tx.send(backend.name());
             while let Ok(job) = rx.recv() {
-                let out = backend.optimize(&job.problem, &job.xs0, &job.ys0);
+                // Single-problem requests (every `optimize`) take the
+                // backend's scalar path: a batching backend must not pay
+                // a padded multi-lane dispatch for one real problem.
+                let out = if let [(p, xs0, ys0)] = job.batch.as_slice() {
+                    vec![backend.optimize(p, xs0, ys0)]
+                } else {
+                    let insts: Vec<PlacementInstance> = job
+                        .batch
+                        .iter()
+                        .map(|(p, xs0, ys0)| PlacementInstance { problem: p, xs0, ys0 })
+                        .collect();
+                    backend.place_batch(&insts)
+                };
                 let _ = job.reply.send(out);
             }
         });
+        let name = name_rx.recv().expect("placer service died during construction");
         PlacerService { tx: Mutex::new(tx), name }
+    }
+
+    fn request(&self, batch: Vec<OwnedProblem>) -> Solutions {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .lock()
+            .expect("placer service poisoned")
+            .send(Job { batch, reply })
+            .expect("placer service gone");
+        rx.recv().expect("placer service dropped reply")
     }
 }
 
 impl GlobalPlacer for PlacerService {
     fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
-        let (reply, rx) = mpsc::channel();
-        self.tx
-            .lock()
-            .expect("placer service poisoned")
-            .send(Job { problem: p.clone(), xs0: xs0.to_vec(), ys0: ys0.to_vec(), reply })
-            .expect("placer service gone");
-        rx.recv().expect("placer service dropped reply")
+        self.request(vec![(p.clone(), xs0.to_vec(), ys0.to_vec())])
+            .pop()
+            .expect("placer service returned empty batch")
+    }
+
+    fn place_batch(&self, batch: &[PlacementInstance<'_>]) -> Vec<(Vec<f32>, Vec<f32>)> {
+        if batch.is_empty() {
+            return Vec::new();
+        }
+        self.request(
+            batch
+                .iter()
+                .map(|b| (b.problem.clone(), b.xs0.to_vec(), b.ys0.to_vec()))
+                .collect(),
+        )
     }
 
     fn name(&self) -> &'static str {
@@ -77,29 +121,30 @@ impl GlobalPlacer for PlacerService {
 
 /// Best available global-placement backend: the AOT JAX/Pallas artifact
 /// (via PJRT, wrapped in a service thread) when `artifacts/` is present;
-/// the native fallback otherwise.
+/// the batched native solver otherwise (same math and cache identity as
+/// `NativePlacer`, but DSE job groups solve in one vectorized pass).
 pub fn default_placer() -> Box<dyn GlobalPlacer + Sync + Send> {
     let dir = crate::runtime::artifacts_dir();
     if dir.join("placer_step.hlo.txt").exists() {
-        Box::new(PlacerService::spawn("pjrt-jax-pallas", move || {
+        Box::new(PlacerService::spawn(move || {
             match crate::runtime::PjrtPlacer::load(&dir) {
                 Ok(p) => Box::new(p),
                 Err(e) => {
                     eprintln!("note: PJRT placer failed to load ({e}); native fallback");
-                    Box::new(NativePlacer::default())
+                    Box::new(BatchedNativePlacer::default())
                 }
             }
         }))
     } else {
         eprintln!("note: artifacts missing; run `make artifacts` for the PJRT placer");
-        Box::new(NativePlacer::default())
+        Box::new(BatchedNativePlacer::default())
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pnr::place::build_global_problem;
+    use crate::pnr::place::{build_global_problem, NativePlacer};
 
     #[test]
     fn placer_service_matches_native_directly() {
@@ -115,10 +160,41 @@ mod tests {
         let p = build_global_problem(&app, &ic);
         let (xs0, ys0) = crate::pnr::place::initial_positions(&app, &ic, 3);
         let direct = NativePlacer::default().optimize(&p, &xs0, &ys0);
-        let svc = PlacerService::spawn("native", || Box::new(NativePlacer::default()));
+        let svc = PlacerService::spawn(|| Box::new(NativePlacer::default()));
         let via = svc.optimize(&p, &xs0, &ys0);
         assert_eq!(direct, via);
-        assert_eq!(svc.name(), "native");
+        // The service reports its backend's cache identity, not a label.
+        assert_eq!(svc.name(), "native-gd");
+    }
+
+    #[test]
+    fn placer_service_forwards_batches_whole() {
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 6,
+            height: 6,
+            num_tracks: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let apps = [crate::apps::gaussian(), crate::apps::camera()];
+        let packed: Vec<_> = apps.iter().map(|a| crate::pnr::pack::pack(a).app).collect();
+        let problems: Vec<_> = packed.iter().map(|a| build_global_problem(a, &ic)).collect();
+        let inits: Vec<_> = packed
+            .iter()
+            .enumerate()
+            .map(|(i, a)| crate::pnr::place::initial_positions(a, &ic, i as u64))
+            .collect();
+        let batch: Vec<PlacementInstance> = problems
+            .iter()
+            .zip(&inits)
+            .map(|(p, (xs0, ys0))| PlacementInstance { problem: p, xs0, ys0 })
+            .collect();
+        let svc = PlacerService::spawn(|| Box::new(BatchedNativePlacer::default()));
+        let via = svc.place_batch(&batch);
+        let direct = BatchedNativePlacer::default().place_batch(&batch);
+        assert_eq!(via, direct);
+        assert!(svc.place_batch(&[]).is_empty());
     }
 
     #[test]
@@ -133,7 +209,7 @@ mod tests {
         });
         let app = crate::pnr::pack::pack(&crate::apps::camera()).app;
         let p = build_global_problem(&app, &ic);
-        let svc = PlacerService::spawn("native", || Box::new(NativePlacer::default()));
+        let svc = PlacerService::spawn(|| Box::new(NativePlacer::default()));
         std::thread::scope(|s| {
             for seed in 0..4u64 {
                 let (svc, p, app, ic) = (&svc, &p, &app, &ic);

@@ -1,18 +1,26 @@
-//! The sharded sweep executor: a fixed worker pool over per-worker job
-//! deques with work stealing. Each worker owns reusable
-//! [`RouterScratch`] buffers (PathFinder cost/visited/heap arrays
-//! allocated once, reset per route); each interconnect configuration is
-//! built — and its routing graphs frozen to immutable CSR
-//! [`crate::ir::CompiledGraph`]s — exactly once, then shared across
-//! workers via `Arc`. Results are keyed and cached through
-//! [`ResultCache`], so a warm re-run of the same spec performs zero PnR
-//! calls (observable via [`EngineStats::pnr_runs`]).
+//! The sharded sweep executor: a fixed worker pool over per-worker
+//! deques of *job groups* with work stealing. Jobs sharing an
+//! interconnect configuration form one group; a worker drains its group
+//! through one batched global-placement solve
+//! ([`GlobalPlacer::place_batch`] — N analytic problems, one solver
+//! call) before finishing each point (legalize → SA → route → STA)
+//! individually. Each worker owns reusable [`RouterScratch`] buffers
+//! (PathFinder cost/visited/heap arrays allocated once, reset per
+//! route); each interconnect configuration is built — and its routing
+//! graphs frozen to immutable CSR [`crate::ir::CompiledGraph`]s —
+//! exactly once, then shared across workers via `Arc`. Results are
+//! keyed and cached through [`ResultCache`], so a warm re-run of the
+//! same spec performs zero PnR calls (observable via
+//! [`EngineStats::pnr_runs`]).
 //!
 //! Determinism: a job's result depends only on its resolved
 //! `(config, app, seed)` content — never on the worker count, the
-//! steal pattern, or cache temperature — and the outcome lists points in
-//! the spec's canonical enumeration order, so sharded runs are
-//! bit-identical to a sequential (`workers: 1`) baseline.
+//! steal pattern, the batch grouping, or cache temperature — and the
+//! outcome lists points in the spec's canonical enumeration order, so
+//! sharded runs are bit-identical to a sequential (`workers: 1`)
+//! baseline. Batching preserves this because `place_batch` backends are
+//! contractually batch-size invariant: a problem's result bits depend
+//! only on the problem, never on what else shares its solve.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -21,7 +29,9 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::area::{area_of, AreaModel, FabricMode};
 use crate::dsl::create_uniform_interconnect;
 use crate::ir::Interconnect;
-use crate::pnr::{run_flow_scratch, GlobalPlacer, RouterScratch};
+use crate::pnr::{
+    finish_flow_scratch, prepare_point, GlobalPlacer, PlacementInstance, RouterScratch,
+};
 
 use super::cache::ResultCache;
 use super::spec::{app_by_name, AreaPoint, Job, PointResult, SweepSpec};
@@ -47,8 +57,11 @@ pub struct EngineStats {
     pub pnr_runs: u64,
     /// Interconnects built + frozen (≤ unique configs among cold jobs).
     pub configs_built: u64,
-    /// Jobs a worker took from another worker's shard.
+    /// Job groups a worker took from another worker's shard.
     pub steals: u64,
+    /// Batched global-placement solves (one `place_batch` call per cold
+    /// job group; each covers the whole group's analytic problems).
+    pub batched_solves: u64,
 }
 
 impl EngineStats {
@@ -58,6 +71,7 @@ impl EngineStats {
         self.pnr_runs += other.pnr_runs;
         self.configs_built += other.configs_built;
         self.steals += other.steals;
+        self.batched_solves += other.batched_solves;
     }
 }
 
@@ -170,13 +184,29 @@ impl DseEngine {
             }
         }
 
-        // Shard the cold jobs round-robin; idle workers steal from the
-        // back of the most-loaded victim.
+        // The cold jobs of one configuration form one *job group* — the
+        // batching unit: the group's global-placement problems all live
+        // on the same frozen fabric and solve in one `place_batch` call.
+        // `misses` is in canonical job order and configs dedup by slot,
+        // so grouping by slot preserves enumeration order within and
+        // across groups.
+        let mut group_of_slot: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for &i in &misses {
+            let g = *group_of_slot.entry(cfg_of_job[i]).or_insert_with(|| {
+                groups.push(Vec::new());
+                groups.len() - 1
+            });
+            groups[g].push(i);
+        }
+
+        // Shard the job groups round-robin; idle workers steal whole
+        // groups from the back of the most-loaded victim.
         let workers = self.worker_count();
         let shards: Vec<Mutex<VecDeque<usize>>> =
             (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-        for (k, &i) in misses.iter().enumerate() {
-            shards[k % workers].lock().expect("shard").push_back(i);
+        for k in 0..groups.len() {
+            shards[k % workers].lock().expect("shard").push_back(k);
         }
 
         let computed: Vec<OnceLock<PointResult>> =
@@ -184,11 +214,13 @@ impl DseEngine {
         let pnr_runs = AtomicU64::new(0);
         let configs_built = AtomicU64::new(0);
         let steals = AtomicU64::new(0);
+        let batched_solves = AtomicU64::new(0);
 
         if !misses.is_empty() {
             std::thread::scope(|scope| {
                 for me in 0..workers {
                     let jobs = &jobs;
+                    let groups = &groups;
                     let shards = &shards;
                     let configs = &configs;
                     let interconnects = &interconnects;
@@ -198,24 +230,63 @@ impl DseEngine {
                     let pnr_runs = &pnr_runs;
                     let configs_built = &configs_built;
                     let steals = &steals;
+                    let batched_solves = &batched_solves;
                     scope.spawn(move || {
                         let mut scratch = RouterScratch::new();
-                        while let Some(i) = next_job(shards, me, steals) {
-                            let job = &jobs[i];
-                            let slot = cfg_of_job[i];
+                        while let Some(g) = next_group(shards, me, steals) {
+                            let group = &groups[g];
+                            let slot = cfg_of_job[group[0]];
                             let ic = interconnects[slot].get_or_init(|| {
                                 configs_built.fetch_add(1, Ordering::Relaxed);
                                 Arc::new(create_uniform_interconnect(&configs[slot]))
                             });
-                            let app = &app_graphs[job.key.app.as_str()];
-                            pnr_runs.fetch_add(1, Ordering::Relaxed);
-                            let result =
-                                match run_flow_scratch(ic, app, &job.flow, placer, &mut scratch)
-                                {
+                            // Phase 1 for every job in the group: pack +
+                            // problem construction.
+                            let prepared: Vec<crate::pnr::PreparedPoint> = group
+                                .iter()
+                                .map(|&i| {
+                                    let job = &jobs[i];
+                                    let app = &app_graphs[job.key.app.as_str()];
+                                    prepare_point(ic, app, &job.flow)
+                                })
+                                .collect();
+                            // Phase 2: ONE batched global solve for the
+                            // whole group.
+                            let batch: Vec<PlacementInstance> = prepared
+                                .iter()
+                                .map(|pp| PlacementInstance {
+                                    problem: &pp.problem,
+                                    xs0: &pp.xs0,
+                                    ys0: &pp.ys0,
+                                })
+                                .collect();
+                            batched_solves.fetch_add(1, Ordering::Relaxed);
+                            let solved = placer.place_batch(&batch);
+                            assert_eq!(
+                                solved.len(),
+                                group.len(),
+                                "placer `{}` returned {} results for a {}-job group",
+                                placer.name(),
+                                solved.len(),
+                                group.len()
+                            );
+                            // Phase 3 per job: legalize → SA → route →
+                            // STA, reusing the worker's router scratch.
+                            for ((&i, pp), (xs, ys)) in group.iter().zip(&prepared).zip(&solved) {
+                                pnr_runs.fetch_add(1, Ordering::Relaxed);
+                                let result = match finish_flow_scratch(
+                                    ic,
+                                    pp,
+                                    xs,
+                                    ys,
+                                    &jobs[i].flow,
+                                    &mut scratch,
+                                ) {
                                     Ok(flow) => PointResult::from_flow(&flow),
                                     Err(_) => PointResult::unroutable(),
                                 };
-                            let _ = computed[i].set(result);
+                                let _ = computed[i].set(result);
+                            }
                         }
                     });
                 }
@@ -225,6 +296,7 @@ impl DseEngine {
         stats.pnr_runs = pnr_runs.into_inner();
         stats.configs_built = configs_built.into_inner();
         stats.steals = steals.into_inner();
+        stats.batched_solves = batched_solves.into_inner();
 
         // Merge in canonical job order; feed new results to the cache.
         let mut points = Vec::with_capacity(jobs.len());
@@ -279,10 +351,10 @@ impl DseEngine {
     }
 }
 
-/// Pop the next job: own shard front first, then steal from the back of
-/// the most-loaded victim (re-scanning on races until every shard is
-/// observed empty).
-fn next_job(shards: &[Mutex<VecDeque<usize>>], me: usize, steals: &AtomicU64) -> Option<usize> {
+/// Pop the next job group: own shard front first, then steal from the
+/// back of the most-loaded victim (re-scanning on races until every
+/// shard is observed empty).
+fn next_group(shards: &[Mutex<VecDeque<usize>>], me: usize, steals: &AtomicU64) -> Option<usize> {
     if let Some(i) = shards[me].lock().expect("shard").pop_front() {
         return Some(i);
     }
@@ -337,9 +409,12 @@ mod tests {
         assert_eq!(cold.stats.pnr_runs, 2);
         assert_eq!(cold.stats.cache_hits, 0);
         assert!(cold.stats.configs_built <= 2);
+        // Two distinct configs ⇒ two job groups ⇒ two batched solves.
+        assert_eq!(cold.stats.batched_solves, 2);
         let warm = engine.run(&quick_spec(), &NativePlacer::default()).unwrap();
         assert_eq!(warm.stats.pnr_runs, 0);
         assert_eq!(warm.stats.cache_hits, 2);
+        assert_eq!(warm.stats.batched_solves, 0);
         for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
             assert_eq!(ja.key, jb.key);
             assert_eq!(ra, rb);
@@ -361,6 +436,33 @@ mod tests {
         for ((ja, ra), (jb, rb)) in sequential.points.iter().zip(&sharded.points) {
             assert_eq!(ja.key, jb.key);
             assert_eq!(ra, rb);
+        }
+    }
+
+    #[test]
+    fn batched_placer_matches_scalar_loop_per_group() {
+        use crate::pnr::BatchedNativePlacer;
+        // NativePlacer takes the trait's default place_batch (a
+        // sequential optimize loop); BatchedNativePlacer vectorizes it.
+        // Same spec, both backends: every point must be bit-identical,
+        // and the batched run must still do one solve per config group.
+        let spec = SweepSpec {
+            apps: vec!["pointwise".into(), "gaussian".into()],
+            seeds: vec![1, 2],
+            ..quick_spec()
+        };
+        let mut scalar_engine = DseEngine::in_memory();
+        let scalar = scalar_engine.run(&spec, &NativePlacer::default()).unwrap();
+        let mut batched_engine = DseEngine::in_memory();
+        let batched = batched_engine.run(&spec, &BatchedNativePlacer::default()).unwrap();
+        assert_eq!(scalar.points.len(), 8);
+        // 2 configs ⇒ 2 groups of 4 problems each, regardless of backend.
+        assert_eq!(scalar.stats.batched_solves, 2);
+        assert_eq!(batched.stats.batched_solves, 2);
+        for ((ja, ra), (jb, rb)) in scalar.points.iter().zip(&batched.points) {
+            assert_eq!(ja.key, jb.key, "same placer name, same keys");
+            assert_eq!(ra, rb);
+            assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
         }
     }
 

@@ -7,7 +7,9 @@
 //!   output-track mode × apps × seeds — into a deduplicated job list with
 //!   stable [`ConfigDescriptor`] keys;
 //! - [`DseEngine`] (in [`exec`]) runs the jobs on a fixed worker pool:
-//!   per-worker job deques with work stealing, per-worker reusable
+//!   per-worker deques of per-config *job groups* with work stealing,
+//!   one batched global-placement solve per group
+//!   ([`crate::pnr::GlobalPlacer::place_batch`]), per-worker reusable
 //!   [`crate::pnr::RouterScratch`] buffers, and interconnects frozen once
 //!   per configuration then shared across workers via `Arc` (the
 //!   immutable CSR [`crate::ir::CompiledGraph`]s inside);

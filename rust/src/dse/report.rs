@@ -44,8 +44,8 @@ pub fn points_table(outcome: &SweepOutcome) -> Table {
     }
     let s = &outcome.stats;
     t.note(&format!(
-        "{} jobs: {} cached, {} PnR runs, {} configs built, {} steals",
-        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.steals
+        "{} jobs: {} cached, {} PnR runs, {} configs built, {} batched solves, {} steals",
+        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.batched_solves, s.steals
     ));
     t
 }
@@ -75,6 +75,7 @@ fn stats_json(s: &EngineStats) -> Json {
         ("pnr_runs".into(), Json::num_u64(s.pnr_runs)),
         ("configs_built".into(), Json::num_u64(s.configs_built)),
         ("steals".into(), Json::num_u64(s.steals)),
+        ("batched_solves".into(), Json::num_u64(s.batched_solves)),
     ])
 }
 

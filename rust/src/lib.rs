@@ -12,8 +12,9 @@
 //!   ready-valid NoC backends, Verilog emission, structural verification,
 //!   configuration-space allocation (§3.3);
 //! - [`bitstream`] — bitstream generation from PnR results;
-//! - [`pnr`] — packing, placement (analytic global + simulated-annealing
-//!   detailed) and iterative A* routing over the IR graph (§3.4);
+//! - [`pnr`] — packing, placement (analytic global — scalar and batched
+//!   solvers — + simulated-annealing detailed) and iterative A* routing
+//!   over the IR graph (§3.4);
 //! - [`sim`] — functional simulation of configured fabrics, including a
 //!   cycle-accurate ready-valid mode with FIFO backpressure;
 //! - [`apps`] — the application benchmark suite (dataflow graphs);
@@ -24,10 +25,26 @@
 //!   figure in the paper's evaluation;
 //! - [`dse`] — the sharded, cached design-space-exploration engine:
 //!   declarative sweep specs over the frozen `CompiledGraph`, a
-//!   work-stealing worker pool with per-worker router scratch, and a
+//!   work-stealing worker pool that drains each per-config job group
+//!   through one batched placement solve, and a
 //!   `(config, app, seed)`-keyed result cache with JSON persistence;
 //! - [`util`] — self-contained support code (deterministic RNG, JSON,
 //!   benchmarking, property-test harness).
+//!
+//! # Documentation map
+//!
+//! Narrative documentation lives in the repository's `docs/` directory:
+//!
+//! - `README.md` — pipeline overview, module map, quickstart;
+//! - `docs/architecture.md` — the two-representation IR, the CSR layout,
+//!   the fan-in-order = mux-select invariant, and the freeze lifecycle;
+//! - `docs/dse.md` — sweep specs, `ConfigDescriptor` keying, the batched
+//!   placement contract, and the `dse_cache.json` format;
+//! - `docs/cli.md` — the `canal` CLI reference (`canal help` prints the
+//!   same usage block).
+//!
+//! The per-module rustdoc (start at the list above) is the normative
+//! reference for invariants; the `docs/` pages are the narrative tour.
 
 pub mod apps;
 pub mod area;

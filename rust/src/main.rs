@@ -15,6 +15,7 @@
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
 //!           [--workers N] [--cache FILE] [--no-cache] [--json FILE]
 //! canal info
+//! canal help         (also: canal --help)
 //! ```
 //!
 //! `canal dse` drives the sharded, cached design-space-exploration engine
@@ -48,7 +49,7 @@ use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
 /// one of them (e.g. `canal dse --no-cache figures`) would be swallowed
 /// as its value instead of staying positional.
 const BOOL_FLAGS: &[&str] =
-    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds"];
+    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds", "help"];
 
 struct Args {
     flags: HashMap<String, String>,
@@ -398,11 +399,13 @@ fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
     println!("{}", coordinator::fig15_cb_ports_runtime_with(&o, placer.as_ref(), engine).render());
     let s = engine.lifetime_stats();
     println!(
-        "engine: {} jobs, {} cached, {} PnR runs, {} configs built, {} steals, {} cache entries",
+        "engine: {} jobs, {} cached, {} PnR runs, {} configs built, {} batched solves, \
+         {} steals, {} cache entries",
         s.jobs,
         s.cache_hits,
         s.pnr_runs,
         s.configs_built,
+        s.batched_solves,
         s.steals,
         engine.cache().len()
     );
@@ -501,17 +504,49 @@ fn cmd_info() -> Result<(), String> {
     Ok(())
 }
 
-const USAGE: &str =
-    "usage: canal <generate|pnr|bitstream|simulate|sweep|experiment|dse|info> [--flags]
-  canal dse            ad-hoc sharded sweep: --tracks/--topologies/--sb-sides/... x --apps x --seeds
-  canal dse figures    regenerate fig09/10/11/14/15 through one shared result cache
-  canal dse --smoke    CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
-see README.md and `rust/src/main.rs` docs for the full flag reference";
+/// Full usage text. Keep in lockstep with `docs/cli.md`, which embeds
+/// this block verbatim.
+const USAGE: &str = "canal — CGRA interconnect generator (Canal reproduction)
+
+usage: canal <command> [--flags]
+
+commands:
+  generate    build an interconnect and lower it to hardware
+              --spec FILE  --backend static|rv  --verilog OUT  --emit-spec OUT  --verify
+  pnr         place and route one application
+              --spec FILE  --app NAME  --seed N  --sa-moves N  --alpha-sweep
+              --placer native|pjrt|auto
+  bitstream   PnR + encode a configuration bitstream
+              --spec FILE  --app NAME  --seed N  --sa-moves N  --out FILE
+  simulate    cycle-accurate ready-valid simulation of an application
+              --app NAME  --fabric static|rv-full|rv-split  --tokens N
+  sweep       exhaustive connection sweep (configuration-space check)
+              --spec FILE
+  experiment  reproduce a paper figure or table:
+              fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|motivation|all
+              --sa-moves N  --csv-dir DIR
+  dse         sharded, cached, batch-placed design-space exploration
+              axes:   --tracks 3,4,5  --topologies wilton,disjoint,imran
+                      --sb-sides 4,3,2  --cb-sides 4,3,2  --out-tracks all,pinned
+                      --apps a,b,c  --seeds N  --seed S  --derived-seeds
+              array:  --width W  --height H  --mem-period P  --tight SLACK
+              flow:   --sa-moves N  --area
+              engine: --workers N  --cache FILE  --no-cache  --json FILE
+  dse figures  regenerate fig09/10/11/14/15 through one shared result cache
+  dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
+  info        version, PJRT artifact status, app registry
+  help        this message
+
+see docs/cli.md for the full reference and docs/dse.md for the DSE engine.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse(&argv);
     let cmd = args.positional.first().map(String::as_str).unwrap_or("");
+    if cmd == "help" || args.has("help") {
+        println!("{USAGE}");
+        return ExitCode::SUCCESS;
+    }
     let result = match cmd {
         "generate" => cmd_generate(&args),
         "pnr" => cmd_pnr(&args),

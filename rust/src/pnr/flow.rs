@@ -8,7 +8,7 @@ use super::app::AppGraph;
 use super::pack::{pack, PackedApp};
 use super::place::{
     build_global_problem, detailed_place, initial_positions, legalize, GlobalPlacer,
-    NativePlacer, Placement, SaParams,
+    GlobalProblem, NativePlacer, Placement, SaParams,
 };
 use super::route::{route_with_scratch, RouterParams, RouterScratch, RoutingFailed, RoutingResult};
 use super::timing::{analyze, TimingReport};
@@ -84,14 +84,53 @@ pub fn run_flow_scratch(
     placer: &dyn GlobalPlacer,
     scratch: &mut RouterScratch,
 ) -> Result<FlowResult, RoutingFailed> {
+    let prepared = prepare_point(ic, app, params);
+    let (xs, ys) = placer.optimize(&prepared.problem, &prepared.xs0, &prepared.ys0);
+    finish_flow_scratch(ic, &prepared, &xs, &ys, params, scratch)
+}
+
+/// Phase 1 of the flow — everything *before* the global solve: packing,
+/// the dense analytic problem, and the seeded initial spread. Split out
+/// so the DSE executor can prepare a whole per-config job group, solve it
+/// with one [`GlobalPlacer::place_batch`] call, and then
+/// [`finish_flow_scratch`] each point. `prepare` + `optimize` + `finish`
+/// is exactly [`run_flow_scratch`].
+pub struct PreparedPoint {
+    /// Packed application (Const/Reg vertices absorbed into host PEs).
+    pub packed: PackedApp,
+    /// The dense Eq. 1 problem for the packed app on this fabric.
+    pub problem: GlobalProblem,
+    /// Seeded initial x positions.
+    pub xs0: Vec<f32>,
+    /// Seeded initial y positions.
+    pub ys0: Vec<f32>,
+}
+
+/// Pack `app` and build its global-placement problem (flow stages 1-2a).
+pub fn prepare_point(ic: &Interconnect, app: &AppGraph, params: &FlowParams) -> PreparedPoint {
     // 1. Packing.
     let packed = pack(app);
-
-    // 2. Global placement (analytic; Eq. 1).
+    // 2a. Global-placement problem construction (analytic; Eq. 1).
     let (xs0, ys0) = initial_positions(&packed.app, ic, params.seed);
     let problem = build_global_problem(&packed.app, ic);
-    let (xs, ys) = placer.optimize(&problem, &xs0, &ys0);
-    let seed_placement = legalize(&packed.app, ic, &xs, &ys).map_err(|e| RoutingFailed {
+    PreparedPoint { packed, problem, xs0, ys0 }
+}
+
+/// Flow stages 2b-5: legalize the globally-placed continuous positions,
+/// then detailed placement + routing over the α sweep, then STA.
+/// Bit-identical to the tail of [`run_flow_scratch`] by construction —
+/// it *is* that tail.
+pub fn finish_flow_scratch(
+    ic: &Interconnect,
+    prepared: &PreparedPoint,
+    xs: &[f32],
+    ys: &[f32],
+    params: &FlowParams,
+    scratch: &mut RouterScratch,
+) -> Result<FlowResult, RoutingFailed> {
+    let packed = &prepared.packed;
+    // 2b. Legalization of the analytic solution.
+    let seed_placement = legalize(&packed.app, ic, xs, ys).map_err(|e| RoutingFailed {
         iterations: 0,
         overused_nodes: 0,
         detail: format!("legalization failed: {e}"),
@@ -119,7 +158,7 @@ pub fn run_flow_scratch(
         match routed {
             Ok(routing) => {
                 let timing =
-                    analyze(ic, &packed, &routing, params.bit_width, params.workload_items);
+                    analyze(ic, packed, &routing, params.bit_width, params.workload_items);
                 let better = best
                     .as_ref()
                     .map_or(true, |b| timing.critical_path_ps < b.timing.critical_path_ps);

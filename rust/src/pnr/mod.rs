@@ -14,11 +14,15 @@ pub mod route;
 pub mod timing;
 
 pub use app::{AppEdge, AppGraph, AppNode, AppNodeId, AppOp, Net};
-pub use flow::{run_flow, run_flow_scratch, run_flow_with, FlowParams, FlowResult};
+pub use flow::{
+    finish_flow_scratch, prepare_point, run_flow, run_flow_scratch, run_flow_with, FlowParams,
+    FlowResult, PreparedPoint,
+};
 pub use pack::{pack, PackedApp};
 pub use place::{
-    build_global_problem, detailed_place, global_cost_grad, initial_positions, legalize,
-    GlobalPlacer, GlobalProblem, NativePlacer, Placement, SaParams,
+    build_global_problem, detailed_place, global_cost_grad, global_cost_grad_into,
+    initial_positions, legalize, BatchedNativePlacer, GlobalPlacer, GlobalProblem, NativePlacer,
+    Placement, PlacementInstance, SaParams,
 };
 pub use route::{
     route, route_with_scratch, RouterParams, RouterScratch, RouteTree, RoutingFailed,

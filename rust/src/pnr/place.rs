@@ -118,18 +118,36 @@ pub fn global_cost_grad(
     ys: &[f32],
     lambda_mem: f32,
 ) -> (f32, Vec<f32>, Vec<f32>) {
-    let mut cost = 0.0f32;
     let mut gx = vec![0.0f32; p.n_nodes];
     let mut gy = vec![0.0f32; p.n_nodes];
+    let cost = global_cost_grad_into(p, xs, ys, lambda_mem, &mut gx, &mut gy);
+    (cost, gx, gy)
+}
+
+/// [`global_cost_grad`] writing the gradient into caller-owned buffers
+/// (zeroed here), so the optimizer loops — scalar and batched — run
+/// allocation-free. Identical arithmetic, in identical order.
+pub fn global_cost_grad_into(
+    p: &GlobalProblem,
+    xs: &[f32],
+    ys: &[f32],
+    lambda_mem: f32,
+    gx: &mut [f32],
+    gy: &mut [f32],
+) -> f32 {
+    let mut cost = 0.0f32;
+    gx[..p.n_nodes].fill(0.0);
+    gy[..p.n_nodes].fill(0.0);
     for net in &p.pins {
-        let idx: Vec<usize> = net.iter().filter(|&&i| i >= 0).map(|&i| i as usize).collect();
-        if idx.len() < 2 {
+        let pins = net.iter().filter(|&&i| i >= 0).map(|&i| i as usize);
+        let k = pins.clone().count();
+        if k < 2 {
             continue;
         }
-        let k = idx.len() as f32;
-        let cx = idx.iter().map(|&i| xs[i]).sum::<f32>() / k;
-        let cy = idx.iter().map(|&i| ys[i]).sum::<f32>() / k;
-        for &i in &idx {
+        let kf = k as f32;
+        let cx = pins.clone().map(|i| xs[i]).sum::<f32>() / kf;
+        let cy = pins.clone().map(|i| ys[i]).sum::<f32>() / kf;
+        for i in pins {
             let dx = xs[i] - cx;
             let dy = ys[i] - cy;
             cost += dx * dx + dy * dy;
@@ -146,7 +164,7 @@ pub fn global_cost_grad(
             gx[i] += lambda_mem * 2.0 * dx;
         }
     }
-    (cost, gx, gy)
+    cost
 }
 
 /// Build the dense problem from a packed app + interconnect.
@@ -192,12 +210,46 @@ pub fn build_global_problem(app: &AppGraph, ic: &Interconnect) -> GlobalProblem 
     }
 }
 
+/// One problem of a batched solve: the dense problem plus its initial
+/// continuous positions. Borrowed, so the DSE executor can batch a whole
+/// job group without copying problem data.
+#[derive(Clone, Copy, Debug)]
+pub struct PlacementInstance<'a> {
+    /// The dense analytic problem.
+    pub problem: &'a GlobalProblem,
+    /// Initial x positions (`problem.n_nodes` long).
+    pub xs0: &'a [f32],
+    /// Initial y positions (`problem.n_nodes` long).
+    pub ys0: &'a [f32],
+}
+
 /// Backend executing the global-placement optimization loop. The native
 /// implementation lives here; `crate::runtime::PjrtPlacer` implements the
 /// same trait on top of the AOT JAX/Pallas artifact.
 pub trait GlobalPlacer {
     /// Return optimized continuous positions (xs, ys).
     fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>);
+
+    /// Solve N independent problems in one call, returning one
+    /// `(xs, ys)` pair per instance, in order.
+    ///
+    /// The default implementation loops [`GlobalPlacer::optimize`], so
+    /// every backend is batchable. The contract an override must honor,
+    /// because the DSE cache and the engine's determinism both depend
+    /// on it: a problem's result bits may depend only on the problem
+    /// itself — never on batch composition or size. The struct-of-arrays
+    /// [`BatchedNativePlacer`] satisfies it in the strongest form
+    /// (bit-identical to the sequential `optimize` loop, hence its
+    /// shared `"native-gd"` name); a backend whose batched program is
+    /// numerically different from its scalar one (the batched-HLO
+    /// `PjrtPlacer` path) must instead route `optimize` and
+    /// `place_batch` through the same program *and* carry a distinct
+    /// [`GlobalPlacer::name`] so its results never alias the scalar
+    /// backend's cache entries.
+    fn place_batch(&self, batch: &[PlacementInstance<'_>]) -> Vec<(Vec<f32>, Vec<f32>)> {
+        batch.iter().map(|b| self.optimize(b.problem, b.xs0, b.ys0)).collect()
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -222,8 +274,10 @@ impl GlobalPlacer for NativePlacer {
         let mut ys = ys0.to_vec();
         let mut vx = vec![0.0f32; p.n_nodes];
         let mut vy = vec![0.0f32; p.n_nodes];
+        let mut gx = vec![0.0f32; p.n_nodes];
+        let mut gy = vec![0.0f32; p.n_nodes];
         for _ in 0..self.iters {
-            let (_, gx, gy) = global_cost_grad(p, &xs, &ys, self.lambda_mem);
+            global_cost_grad_into(p, &xs, &ys, self.lambda_mem, &mut gx, &mut gy);
             for i in 0..p.n_nodes {
                 vx[i] = self.momentum * vx[i] - self.lr * gx[i];
                 vy[i] = self.momentum * vy[i] - self.lr * gy[i];
@@ -232,6 +286,108 @@ impl GlobalPlacer for NativePlacer {
             }
         }
         (xs, ys)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-gd"
+    }
+}
+
+/// Struct-of-arrays batched variant of [`NativePlacer`]: runs the
+/// momentum-GD loop over N problems in one pass. Positions, velocities
+/// and gradients for the whole batch live in flat concatenated arrays
+/// (per-problem spans), the step rule is shared, and a per-problem
+/// convergence mask retires problems whose state has reached an exact
+/// fixed point (gradient and velocity all zero — every further scalar
+/// iteration would be a no-op, so masking cannot change the result).
+///
+/// Per problem, the arithmetic — order included — is exactly the scalar
+/// [`NativePlacer`] loop's, so `place_batch` is bit-identical to
+/// the sequential loop for any batch size. `name()` is therefore also
+/// `"native-gd"`: the DSE cache keys results by the *math* of the
+/// backend, not its execution strategy, and batched/scalar runs must
+/// share cache entries. The wrapper embeds the scalar solver — one set
+/// of hyperparameters, so the two can never drift apart.
+#[derive(Default)]
+pub struct BatchedNativePlacer(pub NativePlacer);
+
+impl GlobalPlacer for BatchedNativePlacer {
+    fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        self.0.optimize(p, xs0, ys0)
+    }
+
+    fn place_batch(&self, batch: &[PlacementInstance<'_>]) -> Vec<(Vec<f32>, Vec<f32>)> {
+        // Per-problem spans into the concatenated state arrays.
+        let mut offsets = Vec::with_capacity(batch.len() + 1);
+        let mut total = 0usize;
+        offsets.push(0);
+        for b in batch {
+            total += b.problem.n_nodes;
+            offsets.push(total);
+        }
+        let mut xs = vec![0.0f32; total];
+        let mut ys = vec![0.0f32; total];
+        for (b, inst) in batch.iter().enumerate() {
+            xs[offsets[b]..offsets[b + 1]].copy_from_slice(inst.xs0);
+            ys[offsets[b]..offsets[b + 1]].copy_from_slice(inst.ys0);
+        }
+        let mut vx = vec![0.0f32; total];
+        let mut vy = vec![0.0f32; total];
+        let mut gx = vec![0.0f32; total];
+        let mut gy = vec![0.0f32; total];
+        let mut active = vec![true; batch.len()];
+        let mut live = batch.len();
+
+        for _ in 0..self.0.iters {
+            if live == 0 {
+                break;
+            }
+            // Gradient pass: every live problem's Eq. 1 gradient, each
+            // written into its own span.
+            for (b, inst) in batch.iter().enumerate() {
+                if !active[b] {
+                    continue;
+                }
+                let s = offsets[b]..offsets[b + 1];
+                global_cost_grad_into(
+                    inst.problem,
+                    &xs[s.clone()],
+                    &ys[s.clone()],
+                    self.0.lambda_mem,
+                    &mut gx[s.clone()],
+                    &mut gy[s],
+                );
+            }
+            // Update pass: one shared momentum-GD step rule over the
+            // concatenated arrays, clamped per problem's bounds.
+            for (b, inst) in batch.iter().enumerate() {
+                if !active[b] {
+                    continue;
+                }
+                let (w, h) = (inst.problem.width - 1.0, inst.problem.height - 1.0);
+                let mut settled = true;
+                for i in offsets[b]..offsets[b + 1] {
+                    vx[i] = self.0.momentum * vx[i] - self.0.lr * gx[i];
+                    vy[i] = self.0.momentum * vy[i] - self.0.lr * gy[i];
+                    xs[i] = (xs[i] + vx[i]).clamp(0.0, w);
+                    ys[i] = (ys[i] + vy[i]).clamp(0.0, h);
+                    settled &= vx[i] == 0.0 && vy[i] == 0.0 && gx[i] == 0.0 && gy[i] == 0.0;
+                }
+                // Exact fixed point: positions are clamped copies of the
+                // previous iterate and every future step repeats this one
+                // verbatim, so retiring the problem is bit-exact.
+                if settled {
+                    active[b] = false;
+                    live -= 1;
+                }
+            }
+        }
+
+        (0..batch.len())
+            .map(|b| {
+                (xs[offsets[b]..offsets[b + 1]].to_vec(), ys[offsets[b]..offsets[b + 1]].to_vec())
+            })
+            .collect()
     }
 
     fn name(&self) -> &'static str {
@@ -715,6 +871,141 @@ mod tests {
         let c1 = st.total_cost(0.3, 1.0);
         let c2 = st.total_cost(0.3, 2.0);
         assert!(c1 > 0.0 && c2 > 0.0 && (c1 - c2).abs() > 1e-9);
+    }
+
+    #[test]
+    fn place_batch_is_bit_identical_to_sequential() {
+        let ic = ic();
+        // One problem per suite app, each with its own seed — a realistic
+        // per-config DSE job group.
+        let packed: Vec<AppGraph> = apps::suite().iter().map(|a| pack(a).app).collect();
+        let problems: Vec<GlobalProblem> =
+            packed.iter().map(|a| build_global_problem(a, &ic)).collect();
+        let inits: Vec<(Vec<f32>, Vec<f32>)> = packed
+            .iter()
+            .enumerate()
+            .map(|(i, a)| initial_positions(a, &ic, 1 + i as u64))
+            .collect();
+        let batch: Vec<PlacementInstance> = problems
+            .iter()
+            .zip(&inits)
+            .map(|(p, (xs0, ys0))| PlacementInstance { problem: p, xs0, ys0 })
+            .collect();
+        let scalar = NativePlacer::default();
+        let batched = BatchedNativePlacer::default();
+        assert_eq!(scalar.name(), batched.name(), "shared cache identity");
+        let got = batched.place_batch(&batch);
+        assert_eq!(got.len(), batch.len());
+        for (inst, (bxs, bys)) in batch.iter().zip(&got) {
+            let (sxs, sys) = scalar.optimize(inst.problem, inst.xs0, inst.ys0);
+            // Exact f32 equality: batching must not change a single bit.
+            assert_eq!(&sxs, bxs);
+            assert_eq!(&sys, bys);
+        }
+        // The default trait impl (sequential loop) agrees too.
+        let default_path = scalar.place_batch(&batch);
+        assert_eq!(default_path, got);
+    }
+
+    #[test]
+    fn place_batch_handles_empty_and_degenerate_batches() {
+        let batched = BatchedNativePlacer::default();
+        assert!(batched.place_batch(&[]).is_empty());
+        // A zero-node problem retires via the convergence mask on the
+        // first iteration and yields empty position vectors.
+        let empty = GlobalProblem {
+            n_nodes: 0,
+            pins: vec![],
+            column_pull: vec![],
+            width: 4.0,
+            height: 4.0,
+        };
+        let out = batched.place_batch(&[PlacementInstance {
+            problem: &empty,
+            xs0: &[],
+            ys0: &[],
+        }]);
+        assert_eq!(out, vec![(vec![], vec![])]);
+    }
+
+    #[test]
+    fn check_rejects_malformed_placements() {
+        let ic = ic();
+        let packed = pack(&apps::pointwise(4)).app;
+        // Wrong length.
+        let short = Placement { pos: vec![] };
+        assert!(short.check(&packed, &ic).unwrap_err().contains("size mismatch"));
+        // Start from a legal placement, then break it in each way.
+        let (xs, ys) = initial_positions(&packed, &ic, 5);
+        let p = build_global_problem(&packed, &ic);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs, &ys);
+        let legal = legalize(&packed, &ic, &xs, &ys).unwrap();
+        let mut oob = legal.clone();
+        oob.pos[0] = (ic.width, 0);
+        assert!(oob.check(&packed, &ic).unwrap_err().contains("out of bounds"));
+        let mut dup = legal.clone();
+        let pe_pair: Vec<usize> = packed
+            .iter()
+            .filter(|(_, n)| n.op.core_kind() == CoreKind::Pe)
+            .map(|(id, _)| id.index())
+            .take(2)
+            .collect();
+        dup.pos[pe_pair[1]] = dup.pos[pe_pair[0]];
+        assert!(dup.check(&packed, &ic).unwrap_err().contains("share tile"));
+        // A PE vertex forced onto a MEM column tile.
+        let mem_col = (0..ic.width).find(|&x| ic.tile(x, 0).core.kind == CoreKind::Mem).unwrap();
+        let mut wrong_kind = legal.clone();
+        wrong_kind.pos[pe_pair[0]] = (mem_col, 0);
+        // Either the MEM tile is occupied (share) or the kind mismatches.
+        assert!(wrong_kind.check(&packed, &ic).is_err());
+    }
+
+    #[test]
+    fn zero_node_app_flows_through_placement() {
+        let ic = ic();
+        let empty = pack(&AppGraph::new("empty")).app;
+        assert_eq!(empty.len(), 0);
+        let (xs0, ys0) = initial_positions(&empty, &ic, 1);
+        assert!(xs0.is_empty());
+        let p = build_global_problem(&empty, &ic);
+        let (xs, ys) = NativePlacer::default().optimize(&p, &xs0, &ys0);
+        let placement = legalize(&empty, &ic, &xs, &ys).unwrap();
+        assert!(placement.pos.is_empty());
+        placement.check(&empty, &ic).unwrap();
+        assert_eq!(placement.total_hpwl(&empty.nets()), 0.0);
+    }
+
+    #[test]
+    fn single_tile_fabric_places_one_node_and_rejects_two() {
+        let tiny = create_uniform_interconnect(&InterconnectConfig {
+            width: 1,
+            height: 1,
+            num_tracks: 1,
+            mem_column_period: 0,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let mut one = AppGraph::new("one");
+        let c = one.add("c", crate::pnr::AppOp::Const(1));
+        let a = one.alu("a", "add");
+        one.wire(c, a, 0);
+        // The constant packs into its host PE, leaving a one-vertex app.
+        let one = pack(&one).app;
+        assert_eq!(one.len(), 1);
+        let placement = legalize(&one, &tiny, &[0.0], &[0.0]).unwrap();
+        assert_eq!(placement.pos, vec![(0, 0)]);
+        placement.check(&one, &tiny).unwrap();
+
+        let mut two = AppGraph::new("two");
+        let c = two.add("c", crate::pnr::AppOp::Const(1));
+        let a = two.alu("a", "add");
+        let b = two.alu("b", "mul");
+        two.wire(c, a, 0);
+        two.wire(a, b, 0);
+        let two = pack(&two).app;
+        assert_eq!(two.len(), 2);
+        let err = legalize(&two, &tiny, &[0.0, 0.0], &[0.0, 0.0]).unwrap_err();
+        assert!(err.contains("no free"), "{err}");
     }
 
     #[test]

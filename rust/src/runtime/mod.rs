@@ -18,7 +18,7 @@
 use std::fmt;
 use std::path::{Path, PathBuf};
 
-use crate::pnr::place::{GlobalPlacer, GlobalProblem};
+use crate::pnr::place::{GlobalPlacer, GlobalProblem, PlacementInstance};
 
 /// Self-contained runtime error (the offline build carries no
 /// error-handling dependencies).
@@ -49,14 +49,18 @@ pub struct ArtifactMeta {
     pub pad_m: usize,
     pub pad_k: usize,
     pub inner_steps: usize,
+    /// Batch lanes of the vmapped `placer_batch_step` artifact. `1` when
+    /// the meta file predates the batched export (scalar-only artifacts).
+    pub pad_b: usize,
 }
 
 impl ArtifactMeta {
-    /// Parse `placer_meta.txt` (flat `key = value` lines).
+    /// Parse `placer_meta.txt` (flat `key = value` lines). `pad_b` is
+    /// optional and defaults to 1 for pre-batching artifact sets.
     pub fn from_file(path: &Path) -> Result<ArtifactMeta> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| RuntimeError::new(format!("reading {}: {e}", path.display())))?;
-        let mut meta = ArtifactMeta { pad_n: 0, pad_m: 0, pad_k: 0, inner_steps: 0 };
+        let mut meta = ArtifactMeta { pad_n: 0, pad_m: 0, pad_k: 0, inner_steps: 0, pad_b: 1 };
         for line in text.lines() {
             let Some((k, v)) = line.split_once('=') else { continue };
             let v: usize = v
@@ -68,10 +72,16 @@ impl ArtifactMeta {
                 "pad_m" => meta.pad_m = v,
                 "pad_k" => meta.pad_k = v,
                 "inner_steps" => meta.inner_steps = v,
+                "pad_b" => meta.pad_b = v,
                 _ => {}
             }
         }
-        if meta.pad_n == 0 || meta.pad_m == 0 || meta.pad_k == 0 || meta.inner_steps == 0 {
+        if meta.pad_n == 0
+            || meta.pad_m == 0
+            || meta.pad_k == 0
+            || meta.inner_steps == 0
+            || meta.pad_b == 0
+        {
             return Err(RuntimeError::new(format!(
                 "incomplete artifact meta in {}",
                 path.display()
@@ -96,6 +106,9 @@ mod pjrt_impl {
     pub struct PjrtPlacer {
         client: xla::PjRtClient,
         step_exe: xla::PjRtLoadedExecutable,
+        /// The vmapped `placer_batch_step` executable (`meta.pad_b` lanes
+        /// per dispatch), when the artifact set includes it.
+        batch_exe: Option<xla::PjRtLoadedExecutable>,
         meta: ArtifactMeta,
         /// Total optimizer iterations per `optimize` call (rounded up to a
         /// multiple of `meta.inner_steps`).
@@ -109,19 +122,40 @@ mod pjrt_impl {
     }
 
     impl PjrtPlacer {
-        /// Load and compile the step artifact from a directory.
+        fn compile_hlo(
+            client: &xla::PjRtClient,
+            path: &Path,
+        ) -> Result<xla::PjRtLoadedExecutable> {
+            let s = path.to_str().ok_or_else(|| RuntimeError::new("non-utf8 artifact path"))?;
+            let proto = xla::HloModuleProto::from_text_file(s)
+                .map_err(|e| RuntimeError::new(format!("parsing {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::new(format!("compiling {}: {e}", path.display())))
+        }
+
+        /// Load and compile the step artifact from a directory. The
+        /// batched artifact (`placer_batch_step.hlo.txt`) is optional —
+        /// without it, `place_batch` falls back to the scalar loop.
         pub fn load(dir: &Path) -> Result<PjrtPlacer> {
             let meta = ArtifactMeta::from_file(&dir.join("placer_meta.txt"))?;
             let client = xla::PjRtClient::cpu().map_err(err("creating PJRT CPU client"))?;
-            let step_path = dir.join("placer_step.hlo.txt");
-            let step_str = step_path
-                .to_str()
-                .ok_or_else(|| RuntimeError::new("non-utf8 artifact path"))?;
-            let proto = xla::HloModuleProto::from_text_file(step_str)
-                .map_err(|e| RuntimeError::new(format!("parsing {}: {e}", step_path.display())))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let step_exe = client.compile(&comp).map_err(err("compiling placer_step"))?;
-            Ok(PjrtPlacer { client, step_exe, meta, iters: 150, hyper: (0.12, 0.9, 0.4) })
+            let step_exe = Self::compile_hlo(&client, &dir.join("placer_step.hlo.txt"))?;
+            let batch_path = dir.join("placer_batch_step.hlo.txt");
+            let batch_exe = if meta.pad_b > 1 && batch_path.exists() {
+                Some(Self::compile_hlo(&client, &batch_path)?)
+            } else {
+                None
+            };
+            Ok(PjrtPlacer {
+                client,
+                step_exe,
+                batch_exe,
+                meta,
+                iters: 150,
+                hyper: (0.12, 0.9, 0.4),
+            })
         }
 
         /// Load from the default artifacts directory.
@@ -219,10 +253,89 @@ mod pjrt_impl {
                 ovy.to_vec().map_err(err("reading vy"))?,
             ))
         }
+
+        /// One batched artifact invocation: `inner_steps` optimizer steps
+        /// on `pad_b` lanes at once. All slices are row-major flattened
+        /// batch-of-lane arrays (`xs`: `[pad_b * pad_n]`, `pins`:
+        /// `[pad_b * pad_m * pad_k]`, `bounds`: `[pad_b * 2]`, `hyper`:
+        /// `[pad_b * 3]`).
+        #[allow(clippy::too_many_arguments)]
+        pub fn call_step_batch(
+            &self,
+            xs: &[f32],
+            ys: &[f32],
+            vx: &[f32],
+            vy: &[f32],
+            pins: &[i32],
+            col: &[f32],
+            colm: &[f32],
+            bounds: &[f32],
+            hyper: &[f32],
+        ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+            let m = self.meta;
+            let exe = self
+                .batch_exe
+                .as_ref()
+                .ok_or_else(|| RuntimeError::new("no placer_batch_step artifact loaded"))?;
+            let (b, n) = (m.pad_b as i64, m.pad_n as i64);
+            let lane = |v: &[f32], w: i64| {
+                xla::Literal::vec1(v).reshape(&[b, w]).map_err(err("reshaping batch input"))
+            };
+            let args = [
+                lane(xs, n)?,
+                lane(ys, n)?,
+                lane(vx, n)?,
+                lane(vy, n)?,
+                xla::Literal::vec1(pins)
+                    .reshape(&[b, m.pad_m as i64, m.pad_k as i64])
+                    .map_err(err("reshaping batch pins"))?,
+                lane(col, n)?,
+                lane(colm, n)?,
+                lane(bounds, 2)?,
+                lane(hyper, 3)?,
+            ];
+            let result = exe
+                .execute::<xla::Literal>(&args)
+                .map_err(err("executing placer_batch_step"))?[0][0]
+                .to_literal_sync()
+                .map_err(err("syncing batch result"))?;
+            let (oxs, oys, ovx, ovy) = result.to_tuple4().map_err(err("untupling batch"))?;
+            Ok((
+                oxs.to_vec().map_err(err("reading batch xs"))?,
+                oys.to_vec().map_err(err("reading batch ys"))?,
+                ovx.to_vec().map_err(err("reading batch vx"))?,
+                ovy.to_vec().map_err(err("reading batch vy"))?,
+            ))
+        }
+
+        /// Whether this placer loaded the batched executable.
+        pub fn has_batch_artifact(&self) -> bool {
+            self.batch_exe.is_some()
+        }
+
+        /// Does the problem fit the padded lane shapes of the batched
+        /// artifact?
+        fn fits_batch(&self, p: &GlobalProblem) -> bool {
+            let m = self.meta;
+            p.n_nodes <= m.pad_n
+                && p.pins.len() <= m.pad_m
+                && p.pins.iter().all(|net| net.len() <= m.pad_k)
+        }
     }
 
     impl GlobalPlacer for PjrtPlacer {
         fn optimize(&self, p: &GlobalProblem, xs0: &[f32], ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+            // With the batched executable loaded, a fitting problem
+            // ALWAYS solves through it — singleton or grouped — so the
+            // bits a (config, app, seed) point produces never depend on
+            // how the solve was batched (group composition varies with
+            // cache temperature).
+            if self.batch_exe.is_some() && self.fits_batch(p) {
+                return self
+                    .place_batch(&[PlacementInstance { problem: p, xs0, ys0 }])
+                    .pop()
+                    .expect("one result for one instance");
+            }
             let m = self.meta;
             let (pins, col, colm) =
                 self.pad_problem(p).expect("problem exceeds artifact padding");
@@ -250,8 +363,106 @@ mod pjrt_impl {
             (xs, ys)
         }
 
+        /// Batched solve: lower up to `pad_b` problems per HLO dispatch
+        /// through the vmapped `placer_batch_step` executable. Each lane
+        /// runs the per-problem computation of the scalar artifact (vmap
+        /// adds a leading axis without reassociating per-lane
+        /// arithmetic); XLA may still compile the lanes to different
+        /// instruction schedules than the scalar executable, so the
+        /// batch-capable placer carries its own `name()` and never
+        /// shares cache entries with the scalar path. The feature-gated
+        /// `pjrt_batch_size_is_bit_invariant` test asserts that batch
+        /// composition cannot change a problem's bits.
+        ///
+        /// The path a fitting problem takes depends only on its own
+        /// shape, never on what else happens to share its batch (which
+        /// varies with cache temperature), so re-runs reproduce
+        /// identical bits. A problem exceeding the padded shapes cannot
+        /// run on *either* executable (scalar and batched artifacts
+        /// share `pad_n`/`pad_m`/`pad_k`) and panics with the scalar
+        /// path's "problem exceeds artifact padding", exactly as
+        /// `optimize` always has.
+        fn place_batch(&self, batch: &[PlacementInstance<'_>]) -> Vec<(Vec<f32>, Vec<f32>)> {
+            let m = self.meta;
+            if self.batch_exe.is_none() {
+                return batch.iter().map(|b| self.optimize(b.problem, b.xs0, b.ys0)).collect();
+            }
+            let mut out: Vec<Option<(Vec<f32>, Vec<f32>)>> = vec![None; batch.len()];
+            let lanes: Vec<usize> =
+                (0..batch.len()).filter(|&i| self.fits_batch(batch[i].problem)).collect();
+            for chunk_idx in lanes.chunks(m.pad_b) {
+                let chunk: Vec<&PlacementInstance> =
+                    chunk_idx.iter().map(|&i| &batch[i]).collect();
+                // Pad each problem into its lane of the [pad_b, ...]
+                // batch arrays; unused lanes stay zero (their clamp box
+                // is degenerate but harmless — they are never read back).
+                let mut xs = vec![0f32; m.pad_b * m.pad_n];
+                let mut ys = vec![0f32; m.pad_b * m.pad_n];
+                let mut vx = vec![0f32; m.pad_b * m.pad_n];
+                let mut vy = vec![0f32; m.pad_b * m.pad_n];
+                let mut pins = vec![-1i32; m.pad_b * m.pad_m * m.pad_k];
+                let mut col = vec![0f32; m.pad_b * m.pad_n];
+                let mut colm = vec![0f32; m.pad_b * m.pad_n];
+                let mut bounds = vec![0f32; m.pad_b * 2];
+                let mut hyper = vec![0f32; m.pad_b * 3];
+                for (l, inst) in chunk.iter().enumerate() {
+                    let p = inst.problem;
+                    let (lpins, lcol, lcolm) =
+                        self.pad_problem(p).expect("problem checked against padding");
+                    xs[l * m.pad_n..l * m.pad_n + p.n_nodes].copy_from_slice(inst.xs0);
+                    ys[l * m.pad_n..l * m.pad_n + p.n_nodes].copy_from_slice(inst.ys0);
+                    pins[l * m.pad_m * m.pad_k..(l + 1) * m.pad_m * m.pad_k]
+                        .copy_from_slice(&lpins);
+                    col[l * m.pad_n..(l + 1) * m.pad_n].copy_from_slice(&lcol);
+                    colm[l * m.pad_n..(l + 1) * m.pad_n].copy_from_slice(&lcolm);
+                    bounds[l * 2] = p.width - 1.0;
+                    bounds[l * 2 + 1] = p.height - 1.0;
+                    hyper[l * 3] = self.hyper.0;
+                    hyper[l * 3 + 1] = self.hyper.1;
+                    hyper[l * 3 + 2] = self.hyper.2;
+                }
+                let calls = self.iters.div_ceil(m.inner_steps);
+                for _ in 0..calls {
+                    let (nxs, nys, nvx, nvy) = self
+                        .call_step_batch(&xs, &ys, &vx, &vy, &pins, &col, &colm, &bounds, &hyper)
+                        .expect("batched artifact execution failed");
+                    xs = nxs;
+                    ys = nys;
+                    vx = nvx;
+                    vy = nvy;
+                }
+                for (l, inst) in chunk.iter().enumerate() {
+                    let n = inst.problem.n_nodes;
+                    out[chunk_idx[l]] = Some((
+                        xs[l * m.pad_n..l * m.pad_n + n].to_vec(),
+                        ys[l * m.pad_n..l * m.pad_n + n].to_vec(),
+                    ));
+                }
+            }
+            // Oversized problems: route through `optimize`, which
+            // panics with the canonical "problem exceeds artifact
+            // padding" message (no artifact can run them).
+            for (i, slot) in out.iter_mut().enumerate() {
+                if slot.is_none() {
+                    let b = &batch[i];
+                    *slot = Some(self.optimize(b.problem, b.xs0, b.ys0));
+                }
+            }
+            out.into_iter().map(|s| s.expect("every lane solved")).collect()
+        }
+
+        /// The cache identity. A placer that loaded the batched
+        /// executable solves through a *different compiled program* than
+        /// the scalar artifact (numerically equivalent, not bit-
+        /// identical), so it carries a distinct name — scalar-path and
+        /// batch-path results must never alias under one
+        /// `ConfigDescriptor`.
         fn name(&self) -> &'static str {
-            "pjrt-jax-pallas"
+            if self.batch_exe.is_some() {
+                "pjrt-jax-pallas-batch"
+            } else {
+                "pjrt-jax-pallas"
+            }
         }
     }
 }
@@ -295,6 +506,10 @@ impl PjrtPlacer {
 #[cfg(not(feature = "pjrt"))]
 impl GlobalPlacer for PjrtPlacer {
     fn optimize(&self, _p: &GlobalProblem, _xs0: &[f32], _ys0: &[f32]) -> (Vec<f32>, Vec<f32>) {
+        unreachable!("stub PjrtPlacer cannot be constructed")
+    }
+
+    fn place_batch(&self, _batch: &[PlacementInstance<'_>]) -> Vec<(Vec<f32>, Vec<f32>)> {
         unreachable!("stub PjrtPlacer cannot be constructed")
     }
 
@@ -348,9 +563,26 @@ mod tests {
         let path = dir.join("placer_meta.txt");
         std::fs::write(&path, "pad_n = 64\npad_m = 128\n").unwrap();
         assert!(ArtifactMeta::from_file(&path).is_err());
+        // A pre-batching meta file (no pad_b line) defaults to pad_b = 1.
         std::fs::write(&path, "pad_n = 64\npad_m = 128\npad_k = 8\ninner_steps = 10\n").unwrap();
         let m = ArtifactMeta::from_file(&path).unwrap();
-        assert_eq!(m, ArtifactMeta { pad_n: 64, pad_m: 128, pad_k: 8, inner_steps: 10 });
+        assert_eq!(
+            m,
+            ArtifactMeta { pad_n: 64, pad_m: 128, pad_k: 8, inner_steps: 10, pad_b: 1 }
+        );
+        std::fs::write(
+            &path,
+            "pad_n = 64\npad_m = 128\npad_k = 8\ninner_steps = 10\npad_b = 8\n",
+        )
+        .unwrap();
+        assert_eq!(ArtifactMeta::from_file(&path).unwrap().pad_b, 8);
+        // An explicit zero is invalid, not "absent".
+        std::fs::write(
+            &path,
+            "pad_n = 64\npad_m = 128\npad_k = 8\ninner_steps = 10\npad_b = 0\n",
+        )
+        .unwrap();
+        assert!(ArtifactMeta::from_file(&path).is_err());
     }
 
     #[cfg(not(feature = "pjrt"))]
@@ -436,5 +668,52 @@ mod tests {
         // Same objective, same step rule, same budget: final costs must
         // land close (fp accumulation differences only).
         assert!((nc - pc).abs() <= 0.05 * nc.abs().max(1.0), "native {nc} vs pjrt {pc}");
+    }
+
+    #[cfg(feature = "pjrt")]
+    #[test]
+    fn pjrt_batch_size_is_bit_invariant() {
+        // The property the DSE engine's determinism rests on: how a
+        // problem is batched (full group, pairs, singleton — which is
+        // what `optimize` dispatches) cannot change a single bit of its
+        // result, because every fitting problem runs the same lanewise
+        // program and lanes are independent.
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        use crate::pnr::pack::pack;
+        use crate::pnr::place::{build_global_problem, initial_positions};
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let placer = PjrtPlacer::load_default().unwrap();
+        if !placer.has_batch_artifact() {
+            eprintln!("skipping: no placer_batch_step artifact");
+            return;
+        }
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 3,
+            mem_column_period: 3,
+            reg_density: 0,
+            ..Default::default()
+        });
+        let apps = [crate::apps::harris(), crate::apps::gaussian(), crate::apps::camera()];
+        let packed: Vec<_> = apps.iter().map(|a| pack(a).app).collect();
+        let problems: Vec<_> = packed.iter().map(|a| build_global_problem(a, &ic)).collect();
+        let inits: Vec<_> =
+            packed.iter().enumerate().map(|(i, a)| initial_positions(a, &ic, i as u64)).collect();
+        let batch: Vec<PlacementInstance> = problems
+            .iter()
+            .zip(&inits)
+            .map(|(p, (xs0, ys0))| PlacementInstance { problem: p, xs0, ys0 })
+            .collect();
+        let grouped = placer.place_batch(&batch);
+        for (inst, (gxs, gys)) in batch.iter().zip(&grouped) {
+            let (sxs, sys) = placer.optimize(inst.problem, inst.xs0, inst.ys0);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(gxs), bits(&sxs), "xs bits differ across batch sizes");
+            assert_eq!(bits(gys), bits(&sys), "ys bits differ across batch sizes");
+        }
     }
 }

@@ -8,7 +8,7 @@
 use canal::coordinator::{self, ExpOptions};
 use canal::dse::{DseEngine, EngineOptions, SweepSpec};
 use canal::dsl::InterconnectConfig;
-use canal::pnr::{FlowParams, NativePlacer, SaParams};
+use canal::pnr::{BatchedNativePlacer, FlowParams, NativePlacer, SaParams};
 
 fn small_spec() -> SweepSpec {
     SweepSpec {
@@ -45,6 +45,100 @@ fn any_worker_count_is_bit_identical_to_sequential() {
             // f64 equality above is already exact; make bit-identity explicit.
             assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
             assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+        }
+    }
+}
+
+#[test]
+fn batched_placement_is_bit_identical_for_any_batch_size_and_worker_count() {
+    // The PR-3 acceptance check: draining each per-config job group
+    // through one batched solve must change nothing. The sequential
+    // baseline is one worker with the scalar placer (the trait's default
+    // place_batch loops optimize job-by-job); against it we vary both
+    // the backend (vectorized BatchedNativePlacer) and the worker count
+    // (which changes how groups shard and steal, i.e. the effective
+    // batching pattern). Every point must be bit-identical, and the
+    // placements behind them are pinned by the flow's determinism
+    // (identical PointResults over f64-exact fields ⇒ identical
+    // Placement, routing, and timing).
+    let spec = small_spec();
+    let sequential = {
+        let mut e = DseEngine::new(EngineOptions { workers: 1, cache_path: None }).unwrap();
+        e.run(&spec, &NativePlacer::default()).unwrap()
+    };
+    assert_eq!(sequential.points.len(), 8);
+    // 2 track configs x (2 apps x 2 seeds) ⇒ 2 groups of 4 problems.
+    assert_eq!(sequential.stats.batched_solves, 2);
+    for workers in [1, 2, 4, 7] {
+        let batched = {
+            let mut e = DseEngine::new(EngineOptions { workers, cache_path: None }).unwrap();
+            e.run(&spec, &BatchedNativePlacer::default()).unwrap()
+        };
+        assert_eq!(batched.points.len(), sequential.points.len(), "workers={workers}");
+        for ((ja, ra), (jb, rb)) in sequential.points.iter().zip(&batched.points) {
+            // Same name ("native-gd") ⇒ same ConfigDescriptor ⇒ scalar
+            // and batched runs share cache entries legitimately.
+            assert_eq!(ja.key, jb.key, "workers={workers}");
+            assert_eq!(ra, rb, "workers={workers} {:?}", ja.key);
+            assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+            assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+        }
+    }
+}
+
+#[test]
+fn batched_and_sequential_flows_produce_identical_placements() {
+    // Placement-level form of the batching contract: prepare a whole
+    // group, solve it with one place_batch call, finish each point — the
+    // resulting `Placement`s must equal the per-job run_flow_scratch
+    // path exactly, for every batch size prefix.
+    use canal::dsl::create_uniform_interconnect;
+    use canal::pnr::{
+        finish_flow_scratch, prepare_point, run_flow_scratch, GlobalPlacer, PlacementInstance,
+        RouterScratch,
+    };
+    let ic = create_uniform_interconnect(&InterconnectConfig {
+        mem_column_period: 3,
+        ..Default::default()
+    });
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 10, ..Default::default() },
+        ..Default::default()
+    };
+    let apps = canal::apps::suite();
+    let prepared: Vec<_> = apps.iter().map(|a| prepare_point(&ic, a, &params)).collect();
+    let placer = BatchedNativePlacer::default();
+    for batch_size in [1, 2, apps.len()] {
+        for chunk_start in (0..apps.len()).step_by(batch_size) {
+            let chunk = &prepared[chunk_start..(chunk_start + batch_size).min(prepared.len())];
+            let batch: Vec<PlacementInstance> = chunk
+                .iter()
+                .map(|pp| PlacementInstance { problem: &pp.problem, xs0: &pp.xs0, ys0: &pp.ys0 })
+                .collect();
+            let solved = placer.place_batch(&batch);
+            for (k, (pp, (xs, ys))) in chunk.iter().zip(&solved).enumerate() {
+                let app = &apps[chunk_start + k];
+                let batched =
+                    finish_flow_scratch(&ic, pp, xs, ys, &params, &mut RouterScratch::new())
+                        .unwrap_or_else(|e| panic!("{}: {e}", app.name));
+                let sequential = run_flow_scratch(
+                    &ic,
+                    app,
+                    &params,
+                    &NativePlacer::default(),
+                    &mut RouterScratch::new(),
+                )
+                .unwrap();
+                assert_eq!(
+                    batched.placement.pos, sequential.placement.pos,
+                    "{} batch_size={batch_size}",
+                    app.name
+                );
+                assert_eq!(
+                    batched.timing.critical_path_ps.to_bits(),
+                    sequential.timing.critical_path_ps.to_bits()
+                );
+            }
         }
     }
 }
