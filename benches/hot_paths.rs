@@ -19,7 +19,7 @@ use canal::pnr::{
     build_global_problem, detailed_place, initial_positions, legalize, pack, route,
     BatchedNativePlacer, GlobalPlacer, NativePlacer, PlacementInstance, RouterParams, SaParams,
 };
-use canal::sim::{sweep_connections, RvSim, StallPattern};
+use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
 use canal::util::bench::{bench, black_box};
 
 fn main() {
@@ -65,6 +65,24 @@ fn main() {
     let s = bench("rv-sim gaussian 1024 tokens", 100, budget, || {
         let mut sim = RvSim::new(&app, &caps, input.clone());
         black_box(sim.run(1024, 10_000_000, StallPattern::None));
+    });
+    println!("{s}");
+
+    // Flattened-arena sim on *routed* capacities (what every DSE fabric
+    // point runs): harris, per-edge capacities from the registers its
+    // routed nets cross, split-FIFO model, bursty backpressure.
+    let harris = apps::harris();
+    let caps_routed = canal::sim::routed_capacities(
+        &harris,
+        &packed,
+        &ic,
+        16,
+        &routed,
+        FabricKind::RvSplitFifo,
+    );
+    let s = bench("rv-sim harris routed split-fifo 512 tokens", 100, budget, || {
+        let mut sim = RvSim::new(&harris, &caps_routed, input.clone());
+        black_box(sim.run(512, 10_000_000, StallPattern::Bursty { accept: 3, stall: 2 }));
     });
     println!("{s}");
 
@@ -150,6 +168,29 @@ fn main() {
             black_box(engine.run(&spec, &NativePlacer::default()).unwrap());
         });
         println!("{s}   [{:.0} points/s warm]", n * s.throughput_per_sec());
+
+        // Fabric-axis sweep: 3 fabrics per (config, app, seed); every
+        // routed point adds one elastic simulation on its own routing.
+        let fabric_spec = SweepSpec {
+            name: "bench_fabric_sweep".into(),
+            fabrics: vec![
+                FabricKind::Static,
+                FabricKind::RvFullFifo { depth: 2 },
+                FabricKind::RvSplitFifo,
+            ],
+            ..spec.clone()
+        };
+        let mut engine_f = DseEngine::in_memory();
+        let t0 = std::time::Instant::now();
+        let cold_f = engine_f.run(&fabric_spec, &NativePlacer::default()).unwrap();
+        let cold_f_s = t0.elapsed().as_secs_f64();
+        println!(
+            "dse fabric sweep cold ({} points, {} sims)          {:.3}s   [{:.1} points/s]",
+            cold_f.points.len(),
+            cold_f.stats.sims,
+            cold_f_s,
+            cold_f.points.len() as f64 / cold_f_s
+        );
     }
 
     // --- L2/L1: global placement backends ---------------------------------

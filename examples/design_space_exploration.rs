@@ -1,13 +1,15 @@
-//! Design-space exploration (§4.2): sweep the three axes the paper
-//! explores — switch-box topology, routing tracks, and core connection
-//! sides — and print the paper-style tables.
+//! Design-space exploration (§4.2 + §3.3): sweep the axes the paper
+//! explores — fabric (static vs ready-valid), switch-box topology,
+//! routing tracks, and core connection sides — and print the
+//! paper-style tables.
 //!
 //! The sweeps run through the sharded `canal::dse` engine: one engine
-//! instance is shared across the five engine-backed figures, so
+//! instance is shared across the seven engine-backed figures, so
 //! overlapping points are PnR'd once, and results persist in
 //! `dse_cache.json` — on a warm re-run the engine performs zero PnR
-//! calls (the fig13 area table and the alpha ablation at the end run
-//! outside the engine and recompute every time).
+//! calls and zero elastic simulations (the fig13 area table and the
+//! alpha ablation at the end run outside the engine and recompute
+//! every time).
 //!
 //! Run: `cargo run --release --example design_space_exploration`
 
@@ -23,6 +25,11 @@ fn main() {
     })
     .expect("dse engine");
 
+    println!(
+        "{}",
+        coordinator::fig07_hybrid_throughput_with(&o, placer.as_ref(), &mut engine).render()
+    );
+    println!("{}", coordinator::fig08_fifo_area_with(&mut engine).render());
     println!("{}", coordinator::fig09_topology_with(&o, &mut engine).render());
     println!("{}", coordinator::fig10_area_tracks_with(&mut engine).render());
     println!(
@@ -42,8 +49,8 @@ fn main() {
 
     let s = engine.lifetime_stats();
     println!(
-        "dse engine: {} jobs, {} cache hits, {} PnR runs, {} configs built, {} steals",
-        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.steals
+        "dse engine: {} jobs, {} cache hits, {} PnR runs, {} sims, {} configs built, {} steals",
+        s.jobs, s.cache_hits, s.pnr_runs, s.sims, s.configs_built, s.steals
     );
     println!("cache: {} entries in dse_cache.json", engine.cache().len());
 }

@@ -5,7 +5,7 @@
 //! experiment` CLI subcommand print them. DESIGN.md §5 maps experiments
 //! to modules; EXPERIMENTS.md records measured-vs-paper outcomes.
 //!
-//! The sweep-shaped figures (fig09/10/11/14/15) are thin formatters over
+//! The sweep-shaped figures (fig07/08/09/10/11/14/15) are thin formatters over
 //! the [`crate::dse`] engine: each builds a [`SweepSpec`], lets the
 //! sharded executor run (or cache-hit) the points, and lays the results
 //! out in the paper's table shape. The `figNN_*_with` variants take a
@@ -82,27 +82,127 @@ pub fn run_suite(
     })
 }
 
+/// The §3.3 static-vs-hybrid fabric axis (Figs. 7/8): the paper's three
+/// evaluated interconnect variants.
+fn hybrid_fabrics() -> Vec<FabricKind> {
+    vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }, FabricKind::RvSplitFifo]
+}
+
+/// Fig. 7 / §3.3: application throughput on the static vs the hybrid
+/// (ready-valid) interconnect — the behavioural half of the paper's
+/// static-vs-hybrid evaluation (Fig. 8 is the area half).
+pub fn fig07_hybrid_throughput(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync)) -> Table {
+    fig07_hybrid_throughput_with(o, placer, &mut DseEngine::in_memory())
+}
+
+/// [`fig07_hybrid_throughput`] on a caller-owned engine: every cell is a
+/// cached `(config, app, seed)` point whose fabric is part of the key —
+/// the executor PnRs the point and then runs the elastic simulator on
+/// its own routing under the fabric's channel-capacity model.
+pub fn fig07_hybrid_throughput_with(
+    o: &ExpOptions,
+    placer: &(dyn GlobalPlacer + Sync),
+    engine: &mut DseEngine,
+) -> Table {
+    let spec = SweepSpec {
+        name: "fig07_hybrid_throughput".into(),
+        base: base_config(o),
+        fabrics: hybrid_fabrics(),
+        apps: suite_keys(),
+        seeds: vec![o.seed],
+        flow: flow_params(o),
+        ..Default::default()
+    };
+    let out = engine.run(&spec, placer).expect("fig07 sweep");
+    let mut t = Table::new(
+        "Fig. 7 — static vs hybrid interconnect: elastic throughput (tokens/cycle)",
+        &[
+            "app",
+            "static",
+            "rv full fifo",
+            "rv split fifo",
+            "stall(static)",
+            "stall(rv-full)",
+            "stall(rv-split)",
+        ],
+    );
+    // Points arrive fabric-major, app-minor (canonical order), so each
+    // app's cells accumulate left-to-right across the fabric axis.
+    type Cells = (Vec<String>, Vec<String>);
+    let mut per_app: std::collections::BTreeMap<String, Cells> = Default::default();
+    for (job, r) in &out.points {
+        let (thpt, stalls) = per_app.entry(job.app_name.clone()).or_default();
+        if r.routed && r.sim_cycles > 0 {
+            thpt.push(format!("{:.3}", r.throughput()));
+            stalls.push(r.stall_cycles.to_string());
+        } else if r.routed {
+            // Routed entry from a pre-fabric-axis cache: never simulated
+            // (sim metrics default to 0) — don't render 0.000 as data.
+            thpt.push("-".into());
+            stalls.push("-".into());
+        } else {
+            thpt.push("unroutable".into());
+            stalls.push("-".into());
+        }
+    }
+    for (app, (thpt, stalls)) in per_app {
+        let mut row = vec![app];
+        row.extend(thpt);
+        row.extend(stalls);
+        t.row(row);
+    }
+    t.note("one PnR per (app, fabric) point; elastic capacity can only recover stalls");
+    t.note("stall = cycles the sink spent waiting (pipeline fill + unabsorbed bubbles)");
+    t
+}
+
 /// Fig. 8: SB area — static baseline vs +depth-2 FIFO vs split FIFO.
 pub fn fig08_fifo_area() -> Table {
-    let cfg = InterconnectConfig { width: 6, height: 6, mem_column_period: 0, ..Default::default() };
-    let ic = create_uniform_interconnect(&cfg);
-    let model = AreaModel::default();
-    let base = area_of(&ic, &model, FabricMode::Static).interior_tile(&ic).sb_um2;
+    fig08_fifo_area_with(&mut DseEngine::in_memory())
+}
 
+/// [`fig08_fifo_area`] on a caller-owned engine: an area-only sweep over
+/// the fabric axis (no PnR jobs), one [`crate::dse::AreaPoint`] per
+/// fabric mode. Output is byte-identical to the pre-engine formatter.
+pub fn fig08_fifo_area_with(engine: &mut DseEngine) -> Table {
+    let spec = SweepSpec {
+        name: "fig08_fifo_area".into(),
+        base: InterconnectConfig {
+            width: 6,
+            height: 6,
+            mem_column_period: 0,
+            ..Default::default()
+        },
+        fabrics: hybrid_fabrics(),
+        area: true,
+        ..Default::default()
+    };
+    let out = engine.run(&spec, &NativePlacer::default()).expect("fig08 sweep");
+    let base = out
+        .areas
+        .iter()
+        .find(|a| a.fabric == "static")
+        .expect("fig08 sweep includes the static fabric")
+        .sb_um2;
     let mut t = Table::new(
         "Fig. 8 — switch-box area: static vs ready-valid FIFOs (um^2, interior tile)",
         &["variant", "sb_area_um2", "overhead_vs_static"],
     );
-    for (name, mode) in [
-        ("static (baseline)", FabricMode::Static),
-        ("rv full depth-2 FIFO", FabricMode::ReadyValidFullFifo { fifo_depth: 2 }),
-        ("rv split FIFO", FabricMode::ReadyValidSplitFifo),
-    ] {
-        let a = area_of(&ic, &model, mode).interior_tile(&ic).sb_um2;
+    // Row labels derive from each row's own fabric, so a changed or
+    // reordered fabric axis can never mislabel (or silently drop) rows.
+    let variant = |label: &str| match label {
+        "static" => "static (baseline)".to_string(),
+        "rv-split" => "rv split FIFO".to_string(),
+        other => match other.strip_prefix("rv-full:") {
+            Some(d) => format!("rv full depth-{d} FIFO"),
+            None => other.to_string(),
+        },
+    };
+    for a in &out.areas {
         t.row(vec![
-            name.to_string(),
-            fmt(a),
-            format!("{:+.1}%", (a / base - 1.0) * 100.0),
+            variant(&a.fabric),
+            fmt(a.sb_um2),
+            format!("{:+.1}%", (a.sb_um2 / base - 1.0) * 100.0),
         ]);
     }
     t.note("paper: +54% full FIFO, +32% split FIFO (GF12 synthesis)");
@@ -626,6 +726,7 @@ pub fn motivation_shares(o: &ExpOptions) -> Table {
 /// All experiments in paper order (used by `canal experiment all`).
 pub fn all_experiments(o: &ExpOptions, placer: &(dyn GlobalPlacer + Sync)) -> Vec<Table> {
     vec![
+        fig07_hybrid_throughput(o, placer),
         fig08_fifo_area(),
         fig09_topology(o),
         fig10_area_tracks(),
@@ -648,6 +749,27 @@ mod tests {
 
     fn quick() -> ExpOptions {
         ExpOptions { sa_moves: 4, seeds: 1, ..Default::default() }
+    }
+
+    #[test]
+    fn fig07_hybrid_fabrics_never_slower_than_static() {
+        // The static-vs-hybrid behavioural claim: under identical PnR
+        // (the fabric changes only channel capacities), elastic fabrics
+        // match or beat the static fabric's throughput on every app.
+        let t = fig07_hybrid_throughput(&quick(), &NativePlacer::default());
+        assert_eq!(t.rows.len(), crate::apps::suite().len());
+        let mut compared = 0;
+        for r in &t.rows {
+            assert_eq!(r.len(), 7);
+            let cells: Vec<Option<f64>> = r[1..4].iter().map(|s| s.parse().ok()).collect();
+            if let (Some(stat), Some(full), Some(split)) = (cells[0], cells[1], cells[2]) {
+                assert!(stat > 0.0, "{}: static throughput {stat}", r[0]);
+                assert!(full + 1e-12 >= stat, "{}: full {full} < static {stat}", r[0]);
+                assert!(split + 1e-12 >= stat, "{}: split {split} < static {stat}", r[0]);
+                compared += 1;
+            }
+        }
+        assert!(compared > 0, "no routed rows to compare");
     }
 
     #[test]

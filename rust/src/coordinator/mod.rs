@@ -11,7 +11,8 @@ pub mod experiments;
 pub mod viz;
 
 pub use experiments::{
-    all_experiments, alpha_sweep, fig08_fifo_area, fig09_topology, fig09_topology_with,
+    all_experiments, alpha_sweep, fig07_hybrid_throughput, fig07_hybrid_throughput_with,
+    fig08_fifo_area, fig08_fifo_area_with, fig09_topology, fig09_topology_with,
     fig10_area_tracks, fig10_area_tracks_with, fig11_runtime_tracks, fig11_runtime_tracks_with,
     fig13_port_area, fig14_sb_ports_runtime, fig14_sb_ports_runtime_with,
     fig15_cb_ports_runtime, fig15_cb_ports_runtime_with,

@@ -10,7 +10,8 @@
 //!     { "config": "<ConfigDescriptor string>", "app": "harris", "seed": 1,
 //!       "routed": true, "critical_path_ps": 2209.0, "period_ps": 2269.0,
 //!       "latency_cycles": 14, "runtime_ns": 9378.25, "iterations": 3,
-//!       "nodes_used": 412, "alpha": 1.0 } ] }
+//!       "nodes_used": 412, "alpha": 1.0,
+//!       "sim_cycles": 532, "sim_tokens": 512, "stall_cycles": 20 } ] }
 //! ```
 //!
 //! Floats are written in Rust's shortest-round-trip form and numbers are
@@ -19,6 +20,19 @@
 //! byte-identical to the cold one. Unroutable points are cached too
 //! (`routed: false`, zero metrics) — negative results are as expensive to
 //! recompute as positive ones.
+//!
+//! ## Versioning policy
+//!
+//! The version number only changes for *incompatible* layouts. The
+//! elastic-simulation fields (`sim_cycles`, `sim_tokens`,
+//! `stall_cycles`, added with the fabric sweep axis) are **optional on
+//! read and always written**: a pre-fabric-axis cache file (entries
+//! without them) still loads — the fields default to `0`, the
+//! documented "never simulated" value — and an old reader simply
+//! ignores the extra keys. Static-fabric descriptors deliberately carry
+//! no `fabric=` token (see [`ConfigDescriptor::of`]), so such a file's
+//! PnR results stay warm; delete the cache file to backfill the
+//! simulation metrics.
 
 use std::collections::BTreeMap;
 use std::io;
@@ -131,6 +145,9 @@ fn entry_json(key: &JobKey, r: &PointResult) -> Json {
         ("iterations".into(), Json::num_u64(r.iterations)),
         ("nodes_used".into(), Json::num_u64(r.nodes_used)),
         ("alpha".into(), Json::num_f64(r.alpha)),
+        ("sim_cycles".into(), Json::num_u64(r.sim_cycles)),
+        ("sim_tokens".into(), Json::num_u64(r.sim_tokens)),
+        ("stall_cycles".into(), Json::num_u64(r.stall_cycles)),
     ])
 }
 
@@ -143,6 +160,15 @@ fn entry_from_json(v: &Json) -> Result<(JobKey, PointResult), String> {
     };
     let u64_field = |k: &str| -> Result<u64, String> {
         v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("missing `{k}`"))
+    };
+    // Fields added after version-1 files already existed in the wild:
+    // absent means "never simulated" (0), present must parse. This keeps
+    // pre-fabric-axis caches loadable without a version bump.
+    let u64_opt = |k: &str| -> Result<u64, String> {
+        match v.get(k) {
+            None => Ok(0),
+            Some(j) => j.as_u64().ok_or_else(|| format!("bad `{k}`")),
+        }
     };
     // `num_f64` writes non-finite values as `null` (JSON has no NaN/inf);
     // accept them back as NaN rather than hard-failing the whole cache —
@@ -168,6 +194,9 @@ fn entry_from_json(v: &Json) -> Result<(JobKey, PointResult), String> {
         iterations: u64_field("iterations")?,
         nodes_used: u64_field("nodes_used")?,
         alpha: f64_field("alpha")?,
+        sim_cycles: u64_opt("sim_cycles")?,
+        sim_tokens: u64_opt("sim_tokens")?,
+        stall_cycles: u64_opt("stall_cycles")?,
     };
     Ok((key, result))
 }
@@ -190,6 +219,9 @@ mod tests {
             iterations: 3,
             nodes_used: 412,
             alpha: 1.0,
+            sim_cycles: 532,
+            sim_tokens: 512,
+            stall_cycles: 20,
         }
     }
 
@@ -256,5 +288,54 @@ mod tests {
         let c = ResultCache::in_memory();
         c.save().unwrap();
         assert!(c.path().is_none());
+    }
+
+    #[test]
+    fn sim_fields_roundtrip_byte_identically() {
+        // The fabric-axis fields must survive save → load → save with
+        // the same bytes as everything else.
+        let mut c = ResultCache::in_memory();
+        let mut p = point(9378.25);
+        p.sim_cycles = 123_456_789;
+        p.sim_tokens = 4096;
+        p.stall_cycles = 123_452_693;
+        c.insert(key("harris", 1), p.clone());
+        let text = c.to_json();
+        assert!(text.contains("\"sim_cycles\":123456789"), "{text}");
+        let mut back = ResultCache::in_memory();
+        back.load_json(&text).unwrap();
+        let got = back.get(&key("harris", 1)).unwrap();
+        assert_eq!(got, &p);
+        assert_eq!(got.sim_cycles, 123_456_789);
+        assert_eq!(back.to_json(), text, "re-emission must be byte-identical");
+    }
+
+    #[test]
+    fn pre_fabric_axis_cache_loads_with_documented_defaults() {
+        // A version-1 file written before the fabric axis existed: no
+        // sim_cycles/sim_tokens/stall_cycles keys. It must load (not be
+        // invalidated), with the fields defaulting to 0 = "never
+        // simulated" and throughput() = 0.
+        let old = r#"{
+  "version": 1,
+  "entries": [
+    { "config": "cfg-A", "app": "harris", "seed": 1,
+      "routed": true, "critical_path_ps": 2209.0, "period_ps": 2269.0,
+      "latency_cycles": 14, "runtime_ns": 9378.25, "iterations": 3,
+      "nodes_used": 412, "alpha": 1.0 }
+  ]
+}"#;
+        let mut c = ResultCache::in_memory();
+        c.load_json(old).unwrap();
+        let p = c.get(&key("harris", 1)).unwrap();
+        assert!(p.routed);
+        assert_eq!(p.runtime_ns, 9378.25);
+        assert_eq!((p.sim_cycles, p.sim_tokens, p.stall_cycles), (0, 0, 0));
+        assert_eq!(p.throughput(), 0.0);
+        // Saving upgrades the entry in place: the new keys appear.
+        assert!(c.to_json().contains("\"sim_cycles\":0"));
+        // A present-but-malformed sim field is still loud.
+        let bad = old.replace("\"alpha\": 1.0", "\"alpha\": 1.0, \"sim_cycles\": \"x\"");
+        assert!(ResultCache::in_memory().load_json(&bad).is_err());
     }
 }

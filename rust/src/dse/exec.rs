@@ -13,6 +13,14 @@
 //! same spec performs zero PnR calls (observable via
 //! [`EngineStats::pnr_runs`]).
 //!
+//! Every *routed* cold point additionally runs the flattened elastic
+//! (ready-valid) simulator on the point's own routing — channel
+//! capacities derived from the registers each routed net crosses under
+//! the job's [`crate::sim::FabricKind`] — and records throughput/stall
+//! metrics in the cached [`PointResult`]. Warm points skip the
+//! simulation along with PnR ([`EngineStats::sims`] is zero on a warm
+//! re-run).
+//!
 //! Determinism: a job's result depends only on its resolved
 //! `(config, app, seed)` content — never on the worker count, the
 //! steal pattern, the batch grouping, or cache temperature — and the
@@ -20,21 +28,58 @@
 //! sharded runs are bit-identical to a sequential (`workers: 1`)
 //! baseline. Batching preserves this because `place_batch` backends are
 //! contractually batch-size invariant: a problem's result bits depend
-//! only on the problem, never on what else shares its solve.
+//! only on the problem, never on what else shares its solve. The
+//! simulation is a deterministic function of the routed flow and the
+//! fabric, both keyed content.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
-use crate::area::{area_of, AreaModel, FabricMode};
+use crate::area::{area_of, AreaModel};
 use crate::dsl::create_uniform_interconnect;
 use crate::ir::Interconnect;
 use crate::pnr::{
-    finish_flow_scratch, prepare_point, GlobalPlacer, PlacementInstance, RouterScratch,
+    finish_flow_scratch, prepare_point, AppGraph, FlowResult, GlobalPlacer, PlacementInstance,
+    RouterScratch,
 };
+use crate::sim::{routed_capacities, RvSim, StallPattern};
 
 use super::cache::ResultCache;
 use super::spec::{app_by_name, AreaPoint, Job, PointResult, SweepSpec};
+
+/// Elastic-simulation workload per point: tokens every stream sink
+/// drains. Capped below `FlowParams::workload_items` (the runtime
+/// *model*'s stream length, 4096 by default) so a sweep point's
+/// cycle-accurate simulation stays a few hundred µs; like the default
+/// linebuffer delay, the cap is part of the simulation's semantics, not
+/// of the cache key.
+pub const SIM_TOKENS_CAP: usize = 512;
+
+/// Fill `result`'s elastic-simulation fields for one routed point:
+/// simulate the *un-packed* application over channel capacities derived
+/// from the point's own routed nets under the job's fabric, free-running
+/// (no external sink stalls) — `stall_cycles` then counts exactly the
+/// bubbles the fabric's buffering could not absorb, plus pipeline fill.
+fn simulate_point(
+    app: &AppGraph,
+    flow: &FlowResult,
+    job: &Job,
+    ic: &Interconnect,
+    result: &mut PointResult,
+) {
+    let tokens = job.flow.workload_items.min(SIM_TOKENS_CAP);
+    let caps =
+        routed_capacities(app, &flow.packed, ic, job.flow.bit_width, &flow.routing, job.fabric);
+    // Deterministic input stream (same family the rv tests and benches
+    // use); a little slack beyond `tokens` covers linebuffer priming.
+    let input: Vec<i64> = (0..(tokens as i64 + 64)).map(|i| (i * 7 + 3) % 251).collect();
+    let mut sim = RvSim::new(app, &caps, input);
+    let run = sim.run(tokens, tokens * 64 + 4096, StallPattern::None);
+    result.sim_cycles = run.cycles as u64;
+    result.sim_tokens = run.tokens as u64;
+    result.stall_cycles = (run.cycles as u64).saturating_sub(run.tokens as u64);
+}
 
 /// Executor tuning.
 #[derive(Clone, Debug, Default)]
@@ -55,6 +100,9 @@ pub struct EngineStats {
     pub cache_hits: u64,
     /// Actual PnR flow executions (cold jobs). Zero on a warm re-run.
     pub pnr_runs: u64,
+    /// Elastic simulations executed (routed cold jobs only — warm
+    /// points reuse the cached metrics). Zero on a warm re-run.
+    pub sims: u64,
     /// Interconnects built + frozen (≤ unique configs among cold jobs).
     pub configs_built: u64,
     /// Job groups a worker took from another worker's shard.
@@ -69,6 +117,7 @@ impl EngineStats {
         self.jobs += other.jobs;
         self.cache_hits += other.cache_hits;
         self.pnr_runs += other.pnr_runs;
+        self.sims += other.sims;
         self.configs_built += other.configs_built;
         self.steals += other.steals;
         self.batched_solves += other.batched_solves;
@@ -212,6 +261,7 @@ impl DseEngine {
         let computed: Vec<OnceLock<PointResult>> =
             (0..jobs.len()).map(|_| OnceLock::new()).collect();
         let pnr_runs = AtomicU64::new(0);
+        let sims = AtomicU64::new(0);
         let configs_built = AtomicU64::new(0);
         let steals = AtomicU64::new(0);
         let batched_solves = AtomicU64::new(0);
@@ -228,6 +278,7 @@ impl DseEngine {
                     let cfg_of_job = &cfg_of_job;
                     let computed = &computed;
                     let pnr_runs = &pnr_runs;
+                    let sims = &sims;
                     let configs_built = &configs_built;
                     let steals = &steals;
                     let batched_solves = &batched_solves;
@@ -271,7 +322,9 @@ impl DseEngine {
                                 group.len()
                             );
                             // Phase 3 per job: legalize → SA → route →
-                            // STA, reusing the worker's router scratch.
+                            // STA, reusing the worker's router scratch;
+                            // then the elastic simulation of the routed
+                            // point under the job's fabric.
                             for ((&i, pp), (xs, ys)) in group.iter().zip(&prepared).zip(&solved) {
                                 pnr_runs.fetch_add(1, Ordering::Relaxed);
                                 let result = match finish_flow_scratch(
@@ -282,7 +335,13 @@ impl DseEngine {
                                     &jobs[i].flow,
                                     &mut scratch,
                                 ) {
-                                    Ok(flow) => PointResult::from_flow(&flow),
+                                    Ok(flow) => {
+                                        let mut r = PointResult::from_flow(&flow);
+                                        sims.fetch_add(1, Ordering::Relaxed);
+                                        let app = &app_graphs[jobs[i].key.app.as_str()];
+                                        simulate_point(app, &flow, &jobs[i], ic, &mut r);
+                                        r
+                                    }
                                     Err(_) => PointResult::unroutable(),
                                 };
                                 let _ = computed[i].set(result);
@@ -294,6 +353,7 @@ impl DseEngine {
         }
 
         stats.pnr_runs = pnr_runs.into_inner();
+        stats.sims = sims.into_inner();
         stats.configs_built = configs_built.into_inner();
         stats.steals = steals.into_inner();
         stats.batched_solves = batched_solves.into_inner();
@@ -315,10 +375,11 @@ impl DseEngine {
             self.cache.save()?;
         }
 
-        // Area metrics per unique config, in enumeration order. Cheap
-        // (no PnR), so not cached; deterministic, so warm and cold runs
-        // render identical tables. Interconnects the worker pool already
-        // froze are reused by their config descriptor.
+        // Area metrics per unique (config, fabric), config-major in
+        // enumeration order. Cheap (no PnR), so not cached;
+        // deterministic, so warm and cold runs render identical tables.
+        // Interconnects the worker pool already froze are reused by
+        // their config descriptor.
         let mut areas = Vec::new();
         if spec.area {
             let built: BTreeMap<String, Arc<Interconnect>> = configs
@@ -329,20 +390,24 @@ impl DseEngine {
                 })
                 .collect();
             let model = AreaModel::default();
+            let fabrics = spec.fabric_axis();
             for cfg in spec.configs()? {
                 let ic = match built.get(&cfg.descriptor()) {
                     Some(ic) => Arc::clone(ic),
                     None => Arc::new(create_uniform_interconnect(&cfg)),
                 };
-                let tile = area_of(&ic, &model, FabricMode::Static).interior_tile(&ic);
-                areas.push(AreaPoint {
-                    config: cfg.descriptor(),
-                    tracks: cfg.num_tracks,
-                    sb_sides: cfg.sb_core_sides.0,
-                    cb_sides: cfg.cb_core_sides.0,
-                    sb_um2: tile.sb_um2,
-                    cb_um2: tile.cb_um2,
-                });
+                for &fb in &fabrics {
+                    let tile = area_of(&ic, &model, fb.area_mode()).interior_tile(&ic);
+                    areas.push(AreaPoint {
+                        config: cfg.descriptor(),
+                        fabric: fb.label(),
+                        tracks: cfg.num_tracks,
+                        sb_sides: cfg.sb_core_sides.0,
+                        cb_sides: cfg.cb_core_sides.0,
+                        sb_um2: tile.sb_um2,
+                        cb_um2: tile.cb_um2,
+                    });
+                }
             }
         }
 
@@ -407,12 +472,14 @@ mod tests {
         let cold = engine.run(&quick_spec(), &NativePlacer::default()).unwrap();
         assert_eq!(cold.points.len(), 2);
         assert_eq!(cold.stats.pnr_runs, 2);
+        assert_eq!(cold.stats.sims, 2, "every routed cold point simulates");
         assert_eq!(cold.stats.cache_hits, 0);
         assert!(cold.stats.configs_built <= 2);
         // Two distinct configs ⇒ two job groups ⇒ two batched solves.
         assert_eq!(cold.stats.batched_solves, 2);
         let warm = engine.run(&quick_spec(), &NativePlacer::default()).unwrap();
         assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.sims, 0, "warm re-run must skip all simulations");
         assert_eq!(warm.stats.cache_hits, 2);
         assert_eq!(warm.stats.batched_solves, 0);
         for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
@@ -484,9 +551,60 @@ mod tests {
         let out = engine.run(&spec, &NativePlacer::default()).unwrap();
         assert!(out.points.is_empty());
         assert_eq!(out.stats.pnr_runs, 0);
+        assert_eq!(out.stats.sims, 0);
         assert_eq!(out.areas.len(), 3);
         assert_eq!(out.areas[0].tracks, 2);
+        assert_eq!(out.areas[0].fabric, "static");
         // More tracks ⇒ more SB area (Fig. 10's monotonicity).
         assert!(out.areas[2].sb_um2 > out.areas[0].sb_um2);
+    }
+
+    #[test]
+    fn fabric_axis_simulates_each_point_and_caches_distinctly() {
+        use crate::sim::FabricKind;
+        let spec = SweepSpec {
+            fabrics: vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }],
+            ..quick_spec()
+        };
+        let mut engine = DseEngine::in_memory();
+        let cold = engine.run(&spec, &NativePlacer::default()).unwrap();
+        // 2 tracks × 2 fabrics × 1 app × 1 seed.
+        assert_eq!(cold.points.len(), 4);
+        assert_eq!(cold.stats.pnr_runs, 4);
+        assert_eq!(cold.stats.sims, 4);
+        for (job, r) in &cold.points {
+            assert!(r.routed, "{:?}", job.key);
+            assert!(r.sim_cycles > 0 && r.sim_tokens > 0, "{:?}", job.key);
+            assert_eq!(r.stall_cycles, r.sim_cycles - r.sim_tokens);
+            assert!(r.throughput() > 0.0);
+            // Fabric rows are keyed distinctly; static stays bare.
+            assert_eq!(
+                job.key.config.0.contains("fabric="),
+                job.fabric != FabricKind::Static,
+                "{}",
+                job.key.config
+            );
+        }
+        // Points come tracks-major, fabric-minor: per track, the
+        // elastic fabric can only match or beat the static one (deeper
+        // channels never reduce throughput).
+        for pair in cold.points.chunks(2) {
+            let (stat, rv) = (&pair[0].1, &pair[1].1);
+            assert!(
+                rv.sim_cycles <= stat.sim_cycles,
+                "rv {} vs static {}",
+                rv.sim_cycles,
+                stat.sim_cycles
+            );
+        }
+        // Warm re-run: zero PnR *and* zero simulations.
+        let warm = engine.run(&spec, &NativePlacer::default()).unwrap();
+        assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.sims, 0);
+        assert_eq!(warm.stats.cache_hits, 4);
+        for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb);
+        }
     }
 }

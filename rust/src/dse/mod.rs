@@ -4,15 +4,19 @@
 //!
 //! - [`SweepSpec`] (in [`spec`]) declaratively enumerates the
 //!   cross-product of axes — tracks × SB topology × connected sides ×
-//!   output-track mode × apps × seeds — into a deduplicated job list with
-//!   stable [`ConfigDescriptor`] keys;
+//!   output-track mode × fabric (static vs ready-valid, §3.3) × apps ×
+//!   seeds — into a deduplicated job list with stable
+//!   [`ConfigDescriptor`] keys;
 //! - [`DseEngine`] (in [`exec`]) runs the jobs on a fixed worker pool:
 //!   per-worker deques of per-config *job groups* with work stealing,
 //!   one batched global-placement solve per group
 //!   ([`crate::pnr::GlobalPlacer::place_batch`]), per-worker reusable
 //!   [`crate::pnr::RouterScratch`] buffers, and interconnects frozen once
 //!   per configuration then shared across workers via `Arc` (the
-//!   immutable CSR [`crate::ir::CompiledGraph`]s inside);
+//!   immutable CSR [`crate::ir::CompiledGraph`]s inside). Every routed
+//!   point additionally runs the flattened elastic simulator
+//!   ([`crate::sim::RvSim`]) on its own routing under the job's
+//!   [`crate::sim::FabricKind`], recording throughput/stall metrics;
 //! - [`ResultCache`] (in [`cache`]) keys results by
 //!   `(config, app, seed)` and persists them to `dse_cache.json`, so
 //!   re-runs and overlapping figures skip completed PnR — a warm re-run
@@ -21,8 +25,10 @@
 //!   [`crate::util::table::Table`]s and a machine-readable JSON record.
 //!
 //! The figure drivers in [`crate::coordinator::experiments`]
-//! (fig09/10/11/14/15) are thin table-formatters over this engine, and
-//! the `canal dse` CLI subcommand exposes it for ad-hoc sweeps.
+//! (fig07/08/09/10/11/14/15 — fig07/08 are the §3.3 static-vs-hybrid
+//! comparison) are thin table-formatters over this engine, and the
+//! `canal dse` CLI subcommand exposes it for ad-hoc sweeps
+//! (`--fabric static,rv-full,rv-split` selects the fabric axis).
 //!
 //! Determinism contract: sharded results — any worker count, cache cold
 //! or warm — are bit-identical to a sequential baseline run of the same
@@ -34,7 +40,7 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{ResultCache, CACHE_VERSION};
-pub use exec::{DseEngine, EngineOptions, EngineStats, SweepOutcome};
+pub use exec::{DseEngine, EngineOptions, EngineStats, SweepOutcome, SIM_TOKENS_CAP};
 pub use report::{areas_table, outcome_json, points_table, short_config, ResultsStore};
 pub use spec::{
     app_by_name, dense_suite_keys, suite_keys, AreaPoint, ConfigDescriptor, Job, JobKey,

@@ -28,37 +28,41 @@ pub fn short_config(cfg: &InterconnectConfig) -> String {
 pub fn points_table(outcome: &SweepOutcome) -> Table {
     let mut t = Table::new(
         &format!("DSE sweep — {}", outcome.name),
-        &["config", "app", "seed", "routed", "runtime_us", "critical_ps", "iters"],
+        &["config", "fabric", "app", "seed", "routed", "runtime_us", "critical_ps", "thpt", "iters"],
     );
     for (job, r) in &outcome.points {
         let dash = || "-".to_string();
         t.row(vec![
             short_config(&job.cfg),
+            job.fabric.label(),
             job.app_name.clone(),
             job.key.seed.to_string(),
             if r.routed { "yes".into() } else { "no".into() },
             if r.routed { fmt(r.runtime_us()) } else { dash() },
             if r.routed { fmt(r.critical_path_ps) } else { dash() },
+            if r.sim_cycles > 0 { format!("{:.3}", r.throughput()) } else { dash() },
             r.iterations.to_string(),
         ]);
     }
     let s = &outcome.stats;
     t.note(&format!(
-        "{} jobs: {} cached, {} PnR runs, {} configs built, {} batched solves, {} steals",
-        s.jobs, s.cache_hits, s.pnr_runs, s.configs_built, s.batched_solves, s.steals
+        "{} jobs: {} cached, {} PnR runs, {} sims, {} configs built, {} batched solves, \
+         {} steals",
+        s.jobs, s.cache_hits, s.pnr_runs, s.sims, s.configs_built, s.batched_solves, s.steals
     ));
     t
 }
 
-/// Per-config area table for area-enabled sweeps.
+/// Per-(config, fabric) area table for area-enabled sweeps.
 pub fn areas_table(outcome: &SweepOutcome) -> Table {
     let mut t = Table::new(
         &format!("DSE areas — {}", outcome.name),
-        &["tracks", "sb_sides", "cb_sides", "sb_area_um2", "cb_area_um2"],
+        &["tracks", "fabric", "sb_sides", "cb_sides", "sb_area_um2", "cb_area_um2"],
     );
     for a in &outcome.areas {
         t.row(vec![
             a.tracks.to_string(),
+            a.fabric.clone(),
             a.sb_sides.to_string(),
             a.cb_sides.to_string(),
             fmt(a.sb_um2),
@@ -73,6 +77,7 @@ fn stats_json(s: &EngineStats) -> Json {
         ("jobs".into(), Json::num_u64(s.jobs)),
         ("cache_hits".into(), Json::num_u64(s.cache_hits)),
         ("pnr_runs".into(), Json::num_u64(s.pnr_runs)),
+        ("sims".into(), Json::num_u64(s.sims)),
         ("configs_built".into(), Json::num_u64(s.configs_built)),
         ("steals".into(), Json::num_u64(s.steals)),
         ("batched_solves".into(), Json::num_u64(s.batched_solves)),
@@ -87,6 +92,7 @@ pub fn outcome_json(outcome: &SweepOutcome) -> Json {
         .map(|(job, r)| {
             Json::Obj(vec![
                 ("config".into(), Json::str(&job.key.config.0)),
+                ("fabric".into(), Json::str(&job.fabric.label())),
                 ("app".into(), Json::str(&job.key.app)),
                 ("app_name".into(), Json::str(&job.app_name)),
                 ("seed".into(), Json::num_u64(job.key.seed)),
@@ -100,6 +106,10 @@ pub fn outcome_json(outcome: &SweepOutcome) -> Json {
                 ("iterations".into(), Json::num_u64(r.iterations)),
                 ("nodes_used".into(), Json::num_u64(r.nodes_used)),
                 ("alpha".into(), Json::num_f64(r.alpha)),
+                ("sim_cycles".into(), Json::num_u64(r.sim_cycles)),
+                ("sim_tokens".into(), Json::num_u64(r.sim_tokens)),
+                ("stall_cycles".into(), Json::num_u64(r.stall_cycles)),
+                ("throughput".into(), Json::num_f64(r.throughput())),
             ])
         })
         .collect();
@@ -109,6 +119,7 @@ pub fn outcome_json(outcome: &SweepOutcome) -> Json {
         .map(|a| {
             Json::Obj(vec![
                 ("config".into(), Json::str(&a.config)),
+                ("fabric".into(), Json::str(&a.fabric)),
                 ("tracks".into(), Json::num_u64(a.tracks as u64)),
                 ("sb_sides".into(), Json::num_u64(a.sb_sides as u64)),
                 ("cb_sides".into(), Json::num_u64(a.cb_sides as u64)),

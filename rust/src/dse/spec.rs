@@ -1,11 +1,13 @@
 //! Sweep specification: the declarative cross-product of design-space
 //! axes (tracks × SB topology × connected sides × output-track mode ×
-//! apps × seeds), compiled into a deduplicated, deterministically-ordered
-//! job list with stable [`ConfigDescriptor`] keys.
+//! fabric × apps × seeds), compiled into a deduplicated,
+//! deterministically-ordered job list with stable [`ConfigDescriptor`]
+//! keys.
 
 use crate::apps;
 use crate::dsl::{ConnectedSides, InterconnectConfig, OutputTrackMode, SbTopology};
 use crate::pnr::{AppGraph, FlowParams, FlowResult};
+use crate::sim::FabricKind;
 use crate::util::rng::derive_seed;
 
 /// Canonical key for one sweep point's *configuration*: the resolved
@@ -27,6 +29,7 @@ impl ConfigDescriptor {
         flow: &FlowParams,
         placer: &str,
         seed_mode: SeedMode,
+        fabric: FabricKind,
     ) -> ConfigDescriptor {
         let d = &cfg.delays;
         let alphas = if flow.alpha_sweep.is_empty() {
@@ -42,10 +45,18 @@ impl ConfigDescriptor {
             SeedMode::Raw => "raw",
             SeedMode::Derived => "derived",
         };
+        // The fabric joins the key only when it is not the static
+        // default: every pre-fabric-axis cache entry was (implicitly)
+        // static, so omitting the token for `Static` keeps those
+        // descriptor strings — and the cached PnR behind them — warm.
+        let fabric = match fabric {
+            FabricKind::Static => String::new(),
+            other => format!(" fabric={}", other.label()),
+        };
         ConfigDescriptor(format!(
             "{} delays={}/{}/{}/{}/{} | placer={placer} seeds={seeds} \
              sa(moves={} gamma={} cooling={}) \
-             alphas={alphas} router(iters={} pres={}x{} hist={} dw={} unused={}) items={} bw={}",
+             alphas={alphas} router(iters={} pres={}x{} hist={} dw={} unused={}) items={} bw={}{fabric}",
             cfg.descriptor(),
             d.sb_mux_ps,
             d.cb_mux_ps,
@@ -88,6 +99,9 @@ pub struct Job {
     pub cfg: InterconnectConfig,
     /// Flow parameters with the per-job seed already applied.
     pub flow: FlowParams,
+    /// Which fabric the point's elastic simulation models (also encoded
+    /// in `key.config` for every non-static kind).
+    pub fabric: FabricKind,
 }
 
 /// How the array is sized for each job.
@@ -124,6 +138,17 @@ pub struct PointResult {
     pub nodes_used: u64,
     /// α that won the flow's sweep.
     pub alpha: f64,
+    /// Cycles the elastic (ready-valid) simulation ran to drain
+    /// [`Self::sim_tokens`] through the routed fabric. Zero when the
+    /// point was never simulated (unroutable points, and entries loaded
+    /// from pre-fabric-axis cache files).
+    pub sim_cycles: u64,
+    /// Tokens drained by the slowest stream sink.
+    pub sim_tokens: u64,
+    /// Cycles the slowest sink spent *not* producing output
+    /// (`sim_cycles - sim_tokens`): pipeline fill plus every bubble the
+    /// fabric's channel capacities could not absorb.
+    pub stall_cycles: u64,
 }
 
 impl PointResult {
@@ -137,6 +162,9 @@ impl PointResult {
             iterations: 0,
             nodes_used: 0,
             alpha: 0.0,
+            sim_cycles: 0,
+            sim_tokens: 0,
+            stall_cycles: 0,
         }
     }
 
@@ -150,20 +178,35 @@ impl PointResult {
             iterations: r.routing.iterations as u64,
             nodes_used: r.routing.nodes_used as u64,
             alpha: r.alpha,
+            sim_cycles: 0,
+            sim_tokens: 0,
+            stall_cycles: 0,
         }
     }
 
     pub fn runtime_us(&self) -> f64 {
         self.runtime_ns / 1000.0
     }
+
+    /// Sustained tokens/cycle of the elastic simulation (0 when the
+    /// point carries no simulation data).
+    pub fn throughput(&self) -> f64 {
+        if self.sim_cycles == 0 {
+            0.0
+        } else {
+            self.sim_tokens as f64 / self.sim_cycles as f64
+        }
+    }
 }
 
-/// Per-config area metrics (static fabric, interior tile) for the
-/// area-vs-axis figures.
+/// Per-(config, fabric) area metrics (interior tile) for the
+/// area-vs-axis figures (Fig. 8/10/13).
 #[derive(Clone, Debug, PartialEq)]
 pub struct AreaPoint {
     /// `InterconnectConfig::descriptor()` of the measured config.
     pub config: String,
+    /// [`FabricKind::label`] of the measured fabric mode.
+    pub fabric: String,
     pub tracks: u16,
     pub sb_sides: u8,
     pub cb_sides: u8,
@@ -181,6 +224,12 @@ pub struct SweepSpec {
     pub output_tracks: Vec<OutputTrackMode>,
     pub sb_sides: Vec<u8>,
     pub cb_sides: Vec<u8>,
+    /// Fabric axis (§3.3's static-vs-hybrid evaluation); empty ⇒
+    /// [`FabricKind::Static`]. The fabric never changes the interconnect
+    /// build or the PnR result — it selects the elastic-simulation
+    /// capacity model (and, for area sweeps, the SB fabric mode) — but
+    /// non-static kinds are keyed distinctly in the cache.
+    pub fabrics: Vec<FabricKind>,
     pub sizing: Sizing,
     /// App registry keys (see [`app_by_name`]); empty ⇒ no PnR jobs
     /// (area-only sweeps).
@@ -204,6 +253,7 @@ impl Default for SweepSpec {
             output_tracks: vec![],
             sb_sides: vec![],
             cb_sides: vec![],
+            fabrics: vec![],
             sizing: Sizing::Fixed,
             apps: vec![],
             seeds: vec![1],
@@ -263,21 +313,28 @@ impl SweepSpec {
             .collect()
     }
 
+    /// The resolved fabric axis (`Static` when the axis is empty).
+    pub fn fabric_axis(&self) -> Vec<FabricKind> {
+        axis(&self.fabrics, FabricKind::Static)
+    }
+
     /// The single axis-enumeration core: calls `f` for every
-    /// (tracks, topology, output-mode, sb-sides, cb-sides) combination in
-    /// canonical order. `jobs` and `configs` both build on this, so the
-    /// PnR points and the area metrics can never enumerate different
-    /// config sets.
+    /// (tracks, topology, output-mode, sb-sides, cb-sides, fabric)
+    /// combination in canonical order. `jobs` and `configs` both build on
+    /// this, so the PnR points and the area metrics can never enumerate
+    /// different config sets.
     fn for_each_combo<F>(&self, mut f: F) -> Result<(), String>
     where
-        F: FnMut(u16, SbTopology, OutputTrackMode, u8, u8) -> Result<(), String>,
+        F: FnMut(u16, SbTopology, OutputTrackMode, u8, u8, FabricKind) -> Result<(), String>,
     {
         for &tr in &axis(&self.tracks, self.base.num_tracks) {
             for &topo in &axis(&self.topologies, self.base.sb_topology) {
                 for &om in &axis(&self.output_tracks, self.base.output_tracks) {
                     for &sb in &axis(&self.sb_sides, self.base.sb_core_sides.0) {
                         for &cb in &axis(&self.cb_sides, self.base.cb_core_sides.0) {
-                            f(tr, topo, om, sb, cb)?;
+                            for &fb in &self.fabric_axis() {
+                                f(tr, topo, om, sb, cb, fb)?;
+                            }
                         }
                     }
                 }
@@ -287,22 +344,23 @@ impl SweepSpec {
     }
 
     /// The deduplicated job list in canonical enumeration order:
-    /// tracks → topology → output-tracks → SB sides → CB sides → app →
-    /// seed. `placer` is the placement backend's name (part of the cache
-    /// key: different backends may legally produce different placements).
+    /// tracks → topology → output-tracks → SB sides → CB sides →
+    /// fabric → app → seed. `placer` is the placement backend's name
+    /// (part of the cache key: different backends may legally produce
+    /// different placements).
     pub fn jobs(&self, placer: &str) -> Result<Vec<Job>, String> {
         let apps = self.resolved_apps()?;
         let tight = matches!(self.sizing, Sizing::TightArray { .. });
         let mut seen = std::collections::BTreeSet::new();
         let mut out = Vec::new();
-        self.for_each_combo(|tr, topo, om, sb, cb| {
+        self.for_each_combo(|tr, topo, om, sb, cb, fb| {
             // Under fixed sizing every app shares one config (and one
             // descriptor) per combination.
             let shared = if tight || apps.is_empty() {
                 None
             } else {
                 let cfg = self.resolve_cfg(tr, topo, om, sb, cb, None)?;
-                let desc = ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode);
+                let desc = ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode, fb);
                 Some((cfg, desc))
             };
             for (app_key, app) in &apps {
@@ -311,7 +369,7 @@ impl SweepSpec {
                     None => {
                         let cfg = self.resolve_cfg(tr, topo, om, sb, cb, Some(app))?;
                         let desc =
-                            ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode);
+                            ConfigDescriptor::of(&cfg, &self.flow, placer, self.seed_mode, fb);
                         (cfg, desc)
                     }
                 };
@@ -333,6 +391,7 @@ impl SweepSpec {
                         app_name: app.name.clone(),
                         cfg: cfg.clone(),
                         flow,
+                        fabric: fb,
                     });
                 }
             }
@@ -359,7 +418,9 @@ impl SweepSpec {
         };
         let mut seen = std::collections::BTreeSet::new();
         let mut out = Vec::new();
-        self.for_each_combo(|tr, topo, om, sb, cb| {
+        // The fabric does not change the interconnect build, so fabric
+        // duplicates collapse here (area sweeps re-expand per fabric).
+        self.for_each_combo(|tr, topo, om, sb, cb, _fb| {
             for app in &app_axis {
                 let cfg = self.resolve_cfg(tr, topo, om, sb, cb, app.as_ref())?;
                 if seen.insert(cfg.descriptor()) {
@@ -489,18 +550,73 @@ mod tests {
     fn descriptor_separates_flow_placer_and_seed_mode_variants() {
         let cfg = InterconnectConfig::default();
         let flow = FlowParams::default();
-        let a = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Raw);
-        let b = ConfigDescriptor::of(&cfg, &flow, "pjrt-jax-pallas", SeedMode::Raw);
+        let stat = FabricKind::Static;
+        let a = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Raw, stat);
+        let b = ConfigDescriptor::of(&cfg, &flow, "pjrt-jax-pallas", SeedMode::Raw, stat);
         assert_ne!(a, b);
         // Raw and Derived runs must never alias in the cache.
-        let d = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Derived);
+        let d = ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Derived, stat);
         assert_ne!(a, d);
         let mut flow2 = flow.clone();
         flow2.sa.moves_per_node += 1;
-        assert_ne!(a, ConfigDescriptor::of(&cfg, &flow2, "native-gd", SeedMode::Raw));
+        assert_ne!(a, ConfigDescriptor::of(&cfg, &flow2, "native-gd", SeedMode::Raw, stat));
         let mut flow3 = flow.clone();
         flow3.seed = 99; // seed is keyed separately, not in the descriptor
-        assert_eq!(a, ConfigDescriptor::of(&cfg, &flow3, "native-gd", SeedMode::Raw));
+        assert_eq!(a, ConfigDescriptor::of(&cfg, &flow3, "native-gd", SeedMode::Raw, stat));
+    }
+
+    #[test]
+    fn descriptor_keys_fabrics_distinctly_but_static_stays_bare() {
+        let cfg = InterconnectConfig::default();
+        let flow = FlowParams::default();
+        let of = |f| ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Raw, f);
+        let stat = of(FabricKind::Static);
+        let full = of(FabricKind::RvFullFifo { depth: 2 });
+        let full4 = of(FabricKind::RvFullFifo { depth: 4 });
+        let split = of(FabricKind::RvSplitFifo);
+        // Static omits the token entirely — pre-fabric-axis cache
+        // entries keep matching.
+        assert!(!stat.0.contains("fabric="), "{stat}");
+        assert!(full.0.contains("fabric=rv-full:2"), "{full}");
+        assert!(split.0.contains("fabric=rv-split"), "{split}");
+        let all = [&stat, &full, &full4, &split];
+        for (i, x) in all.iter().enumerate() {
+            for y in all.iter().skip(i + 1) {
+                assert_ne!(x, y);
+            }
+        }
+    }
+
+    #[test]
+    fn fabric_axis_enumerates_between_sides_and_apps() {
+        let spec = SweepSpec {
+            tracks: vec![3, 4],
+            fabrics: vec![
+                FabricKind::Static,
+                FabricKind::RvFullFifo { depth: 2 },
+                FabricKind::RvSplitFifo,
+            ],
+            apps: vec!["gaussian".into(), "pointwise".into()],
+            seeds: vec![1],
+            ..Default::default()
+        };
+        let jobs = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs.len(), 2 * 3 * 2);
+        // fabric is inner to tracks, outer to apps.
+        assert_eq!(jobs[0].fabric, FabricKind::Static);
+        assert_eq!(jobs[0].key.app, "gaussian");
+        assert_eq!(jobs[1].key.app, "pointwise");
+        assert_eq!(jobs[2].fabric, FabricKind::RvFullFifo { depth: 2 });
+        // Every key is unique (fabrics never alias).
+        let keys: std::collections::BTreeSet<_> = jobs.iter().map(|j| j.key.clone()).collect();
+        assert_eq!(keys.len(), jobs.len());
+        // The default axis is implicit static.
+        let plain = SweepSpec { fabrics: vec![], ..spec.clone() };
+        assert!(plain.jobs("native-gd").unwrap().iter().all(|j| j.fabric == FabricKind::Static));
+        assert_eq!(spec.fabric_axis().len(), 3);
+        assert_eq!(plain.fabric_axis(), vec![FabricKind::Static]);
+        // configs() collapses the fabric axis (same interconnect build).
+        assert_eq!(spec.configs().unwrap().len(), 2);
     }
 
     #[test]

@@ -8,9 +8,10 @@
 //! canal bitstream  --spec FILE --app NAME [--out FILE]
 //! canal simulate   --app NAME [--fabric static|rv-full|rv-split] [--tokens N]
 //! canal sweep      --spec FILE           # exhaustive connection sweep
-//! canal experiment fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|all
+//! canal experiment fig7|fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|all
 //! canal dse [figures] [--smoke] [--tracks 3,4,5] [--topologies wilton,disjoint]
 //!           [--sb-sides 4,3,2] [--cb-sides 4,3,2] [--out-tracks all,pinned]
+//!           [--fabric static,rv-full,rv-split]
 //!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
 //!           [--workers N] [--cache FILE] [--no-cache] [--json FILE]
@@ -23,7 +24,7 @@
 //! cached in `dse_cache.json` (override with `--cache`, disable with
 //! `--no-cache`; the file format is documented in `dse::cache`), so
 //! re-runs and overlapping sweeps skip completed PnR. `canal dse figures`
-//! regenerates fig09/10/11/14/15 through one shared engine; `--smoke` is
+//! regenerates fig07/08/09/10/11/14/15 through one shared engine; `--smoke` is
 //! the CI end-to-end check (tiny 4x4 sweep, 2 workers, asserts a warm
 //! re-run performs zero PnR calls).
 //!
@@ -221,12 +222,9 @@ fn cmd_bitstream(args: &Args) -> Result<(), String> {
 
 fn cmd_simulate(args: &Args) -> Result<(), String> {
     let app = find_app(args.get("app").ok_or("--app required")?)?;
-    let fabric = match args.get("fabric").unwrap_or("rv-split") {
-        "static" => FabricKind::Static,
-        "rv-full" => FabricKind::RvFullFifo { depth: 2 },
-        "rv-split" => FabricKind::RvSplitFifo,
-        other => return Err(format!("unknown fabric `{other}`")),
-    };
+    let raw = args.get("fabric").unwrap_or("rv-split");
+    let fabric =
+        FabricKind::parse(raw).ok_or_else(|| format!("unknown fabric `{raw}`"))?;
     let tokens: usize = args.get("tokens").and_then(|v| v.parse().ok()).unwrap_or(64);
     let caps: HashMap<_, _> = app
         .edges()
@@ -276,6 +274,7 @@ fn cmd_experiment(args: &Args) -> Result<(), String> {
     };
     let placer = coordinator::default_placer();
     let tables = match which {
+        "fig7" => vec![coordinator::fig07_hybrid_throughput(&o, placer.as_ref())],
         "fig8" => vec![coordinator::fig08_fifo_area()],
         "fig9" => vec![coordinator::fig09_topology(&o)],
         "fig10" => vec![coordinator::fig10_area_tracks()],
@@ -392,6 +391,8 @@ fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
         ..Default::default()
     };
     let placer = coordinator::default_placer();
+    println!("{}", coordinator::fig07_hybrid_throughput_with(&o, placer.as_ref(), engine).render());
+    println!("{}", coordinator::fig08_fifo_area_with(engine).render());
     println!("{}", coordinator::fig09_topology_with(&o, engine).render());
     println!("{}", coordinator::fig10_area_tracks_with(engine).render());
     println!("{}", coordinator::fig11_runtime_tracks_with(&o, placer.as_ref(), engine).render());
@@ -399,11 +400,12 @@ fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
     println!("{}", coordinator::fig15_cb_ports_runtime_with(&o, placer.as_ref(), engine).render());
     let s = engine.lifetime_stats();
     println!(
-        "engine: {} jobs, {} cached, {} PnR runs, {} configs built, {} batched solves, \
-         {} steals, {} cache entries",
+        "engine: {} jobs, {} cached, {} PnR runs, {} sims, {} configs built, \
+         {} batched solves, {} steals, {} cache entries",
         s.jobs,
         s.cache_hits,
         s.pnr_runs,
+        s.sims,
         s.configs_built,
         s.batched_solves,
         s.steals,
@@ -448,6 +450,7 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
         output_tracks: parse_list(args, "out-tracks", OutputTrackMode::parse)?,
         sb_sides: parse_list(args, "sb-sides", |s| s.parse().ok())?,
         cb_sides: parse_list(args, "cb-sides", |s| s.parse().ok())?,
+        fabrics: parse_list(args, "fabric", FabricKind::parse)?,
         sizing: match args.get("tight").and_then(|v| v.parse().ok()) {
             Some(slack) => Sizing::TightArray { slack },
             None => Sizing::Fixed,
@@ -523,16 +526,17 @@ commands:
   sweep       exhaustive connection sweep (configuration-space check)
               --spec FILE
   experiment  reproduce a paper figure or table:
-              fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|motivation|all
+              fig7|fig8|fig9|fig10|fig11|fig13|fig14|fig15|alpha|rv|chain|density|noc|motivation|all
               --sa-moves N  --csv-dir DIR
   dse         sharded, cached, batch-placed design-space exploration
               axes:   --tracks 3,4,5  --topologies wilton,disjoint,imran
                       --sb-sides 4,3,2  --cb-sides 4,3,2  --out-tracks all,pinned
-                      --apps a,b,c  --seeds N  --seed S  --derived-seeds
+                      --fabric static,rv-full,rv-split  --apps a,b,c
+                      --seeds N  --seed S  --derived-seeds
               array:  --width W  --height H  --mem-period P  --tight SLACK
               flow:   --sa-moves N  --area
               engine: --workers N  --cache FILE  --no-cache  --json FILE
-  dse figures  regenerate fig09/10/11/14/15 through one shared result cache
+  dse figures  regenerate fig07/08/09/10/11/14/15 through one shared result cache
   dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
   info        version, PJRT artifact status, app registry
   help        this message

@@ -13,6 +13,6 @@ pub mod static_sim;
 pub mod sweep;
 
 pub use noc_sim::{hotspot_pattern, simulate_app, NocRun, NocSim};
-pub use rv_sim::{channel_capacities, FabricKind, RvSim, SimRun, StallPattern};
+pub use rv_sim::{channel_capacities, routed_capacities, FabricKind, RvSim, SimRun, StallPattern};
 pub use static_sim::{check_routing, StaticSim};
 pub use sweep::{sweep_connections, SweepReport};

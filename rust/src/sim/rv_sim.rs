@@ -7,17 +7,38 @@
 //! Vertices fire when all inputs are valid and all outputs ready, exactly
 //! the join semantics the ready/valid layers implement in hardware.
 //!
-//! Two invariants matter:
+//! Two invariants matter (tested end-to-end in `tests/rv_elasticity.rs`):
 //! - **elasticity preserves values**: any stall pattern produces the same
 //!   output *sequence* as an unconstrained run (FIFOs only retime);
 //! - **buffering recovers throughput**: unbalanced reconvergent paths and
 //!   bursty sinks run faster with deeper channels — the reason the RV
 //!   backend needs FIFOs at all (Fig. 8's motivation).
+//!
+//! ## Storage layout
+//!
+//! The simulator is the DSE engine's per-point hot loop (every fabric
+//! sweep point simulates), so it runs entirely on dense arena storage
+//! built once at construction:
+//!
+//! - **channels** are a flat array indexed by *edge index* (channel `i`
+//!   is `app.edges()[i]`), with per-channel `cap/base/head/len` arrays;
+//! - **queues** are ring-buffer windows into ONE backing `buf: Vec<i64>`
+//!   (channel `c` owns `buf[base[c] .. base[c] + cap[c]]`);
+//! - **per-vertex fan-in/fan-out** are CSR index lists (`in_start` /
+//!   `in_chan`, `out_start` / `out_chan`) mirroring `inputs_of` (sorted
+//!   by destination port) and `outputs_of` (edge order) exactly;
+//! - **ops** are pre-classified into a dense [`VertexKind`] array, so the
+//!   cycle loop never hashes a key or matches a role string.
+//!
+//! The cycle-level semantics are bit-identical to the original
+//! `HashMap`-of-`VecDeque` implementation, which is preserved under
+//! `#[cfg(test)]` as the `reference` oracle module and asserted
+//! equivalent cycle-for-cycle by the golden tests below.
 
 use std::collections::{HashMap, VecDeque};
 
 use crate::pnr::app::{AppGraph, AppNodeId, AppOp};
-use crate::pnr::RoutingResult;
+use crate::pnr::{PackedApp, RoutingResult};
 use crate::util::rng::Rng;
 
 /// Which fabric the channels model.
@@ -52,6 +73,41 @@ impl FabricKind {
             _ => 0.0,
         }
     }
+
+    /// Stable label, used by the DSE `ConfigDescriptor`, cache rows, and
+    /// the `canal dse --fabric` flag. Inverse of [`FabricKind::parse`].
+    pub fn label(self) -> String {
+        match self {
+            FabricKind::Static => "static".into(),
+            FabricKind::RvFullFifo { depth } => format!("rv-full:{depth}"),
+            FabricKind::RvSplitFifo => "rv-split".into(),
+        }
+    }
+
+    /// Parse a label: `static`, `rv-full` (depth 2), `rv-full:D`,
+    /// `rv-split`.
+    pub fn parse(s: &str) -> Option<FabricKind> {
+        match s {
+            "static" => Some(FabricKind::Static),
+            "rv-full" => Some(FabricKind::RvFullFifo { depth: 2 }),
+            "rv-split" => Some(FabricKind::RvSplitFifo),
+            other => other
+                .strip_prefix("rv-full:")
+                .and_then(|d| d.parse().ok())
+                .map(|depth| FabricKind::RvFullFifo { depth }),
+        }
+    }
+
+    /// The area model's matching fabric mode (Fig. 8's three bars).
+    pub fn area_mode(self) -> crate::area::FabricMode {
+        match self {
+            FabricKind::Static => crate::area::FabricMode::Static,
+            FabricKind::RvFullFifo { depth } => {
+                crate::area::FabricMode::ReadyValidFullFifo { fifo_depth: depth as usize }
+            }
+            FabricKind::RvSplitFifo => crate::area::FabricMode::ReadyValidSplitFifo,
+        }
+    }
 }
 
 /// Stall model applied to stream sinks (downstream backpressure).
@@ -75,6 +131,11 @@ pub struct SimRun {
 
 /// Per-edge channel capacities, derived from a routing result (registers
 /// crossed per sink path) or uniform for un-routed simulations.
+///
+/// When a routing is given, `app` must be the graph the nets were routed
+/// for (the *packed* application). For capacities on the un-packed graph
+/// use [`routed_capacities`], which maps folded constants and registers
+/// back through the packing.
 pub fn channel_capacities(
     app: &AppGraph,
     routing: Option<(&crate::ir::Interconnect, u8, &RoutingResult)>,
@@ -106,32 +167,142 @@ pub fn channel_capacities(
     caps
 }
 
-struct Channel {
-    cap: usize,
-    q: VecDeque<i64>,
-}
-
-/// The elastic dataflow simulator.
-pub struct RvSim<'a> {
-    app: &'a AppGraph,
-    /// channel index: (src, sport, dst, dport) -> Channel
-    channels: HashMap<(AppNodeId, u8, AppNodeId, u8), Channel>,
-    /// MAC accumulators and linebuffer delay lines.
-    state: HashMap<AppNodeId, VecDeque<i64>>,
-    input_stream: Vec<i64>,
-    /// Next input index per stream-in vertex.
-    in_pos: HashMap<AppNodeId, usize>,
-    /// Tokens produced this cycle, visible next cycle (1-cycle stages).
-    pending: Vec<((AppNodeId, u8, AppNodeId, u8), i64)>,
-    /// Staged push counts per channel (for capacity checks within the
-    /// current cycle).
-    staged: HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
-    /// Linebuffer depth: the row stride of the streamed image.
-    pub linebuffer_delay: usize,
+/// Per-edge channel capacities for the **un-packed** application, derived
+/// from the routed nets of its packed form: each surviving edge gets the
+/// elastic capacity of the interconnect registers its route crosses;
+/// edges folded into a PE by packing (constant immediates, packed input
+/// registers) never cross the fabric and get `fabric.capacity(0)`. An
+/// edge *into* a packed-away register maps to the routed net that lands
+/// on the register's host port.
+pub fn routed_capacities(
+    app: &AppGraph,
+    packed: &PackedApp,
+    ic: &crate::ir::Interconnect,
+    bit_width: u8,
+    routing: &RoutingResult,
+    fabric: FabricKind,
+) -> HashMap<(AppNodeId, u8, AppNodeId, u8), usize> {
+    let g = ic.compiled(bit_width);
+    // Interconnect registers crossed per routed (src, sport, dst, dport).
+    let mut regs: HashMap<(AppNodeId, u8, AppNodeId, u8), usize> = HashMap::new();
+    for tree in &routing.trees {
+        for (k, &(dst, dport)) in tree.net.sinks.iter().enumerate() {
+            let n = tree.sink_paths[k].iter().filter(|&&n| g.is_register(n)).count();
+            regs.insert((tree.net.src, tree.net.src_port, dst, dport), n);
+        }
+    }
+    let mut caps = HashMap::new();
+    for e in app.edges() {
+        let crossed = match packed.mapping.get(&e.src) {
+            // Constant immediates and packed registers live inside their
+            // host PE: this edge never crosses the fabric.
+            None => 0,
+            Some(&s) => {
+                let sink = match packed.mapping.get(&e.dst) {
+                    Some(&d) => Some((d, e.dst_port)),
+                    // `e.dst` is a packed-away Reg: the routed net lands
+                    // on its single consumer's (registered) port.
+                    None => app.outputs_of(e.dst).first().and_then(|oe| {
+                        packed.mapping.get(&oe.dst).map(|&d| (d, oe.dst_port))
+                    }),
+                };
+                sink.and_then(|(d, dport)| regs.get(&(s, e.src_port, d, dport)).copied())
+                    .unwrap_or(0)
+            }
+        };
+        caps.insert((e.src, e.src_port, e.dst, e.dst_port), fabric.capacity(crossed));
+    }
+    caps
 }
 
 /// Default linebuffer delay in tokens (a "row" of the modeled image).
 pub const DEFAULT_LINEBUFFER_DELAY: usize = 8;
+
+/// Dense per-vertex op classification, resolved once at construction so
+/// the cycle loop never matches on role/op strings.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum VertexKind {
+    StreamIn,
+    StreamOut,
+    Linebuffer,
+    /// Any other memory role: pass-through.
+    MemPass,
+    Alu(AluOp),
+    Reg,
+    Const(i64),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum AluOp {
+    Add,
+    Sub,
+    Mul,
+    Ashr,
+    Max,
+    Min,
+    Abs,
+    Mac,
+    /// Unrecognized op string: panics if it ever fires (matching the
+    /// original implementation's fire-time error).
+    Other,
+}
+
+fn classify(op: &AppOp) -> VertexKind {
+    match op {
+        AppOp::Mem(role) if role == "stream_in" => VertexKind::StreamIn,
+        AppOp::Mem(role) if role == "stream_out" => VertexKind::StreamOut,
+        AppOp::Mem(role) if role == "linebuffer" => VertexKind::Linebuffer,
+        AppOp::Mem(_) => VertexKind::MemPass,
+        AppOp::Reg => VertexKind::Reg,
+        AppOp::Const(c) => VertexKind::Const(*c),
+        AppOp::Alu(op) => VertexKind::Alu(match op.as_str() {
+            "add" => AluOp::Add,
+            "sub" => AluOp::Sub,
+            "mul" => AluOp::Mul,
+            "ashr" => AluOp::Ashr,
+            "max" => AluOp::Max,
+            "min" => AluOp::Min,
+            "abs" => AluOp::Abs,
+            "mac" => AluOp::Mac,
+            _ => AluOp::Other,
+        }),
+    }
+}
+
+/// The elastic dataflow simulator (flat arena storage; see module docs).
+pub struct RvSim<'a> {
+    app: &'a AppGraph,
+    /// Pre-classified op per vertex.
+    kinds: Vec<VertexKind>,
+    /// CSR fan-in: vertex `v`'s input channels are
+    /// `in_chan[in_start[v]..in_start[v+1]]`, sorted by destination port
+    /// (the argument order `inputs_of` defines).
+    in_start: Vec<u32>,
+    in_chan: Vec<u32>,
+    /// CSR fan-out: `out_chan[out_start[v]..out_start[v+1]]`, edge order.
+    out_start: Vec<u32>,
+    out_chan: Vec<u32>,
+    /// Per-channel ring windows into `buf`.
+    cap: Vec<u32>,
+    base: Vec<u32>,
+    head: Vec<u32>,
+    len: Vec<u32>,
+    /// Staged push counts per channel (capacity checks within a cycle).
+    staged: Vec<u32>,
+    /// Single backing buffer for every channel queue.
+    buf: Vec<i64>,
+    /// Tokens produced this cycle, visible next cycle (1-cycle stages).
+    pending: Vec<(u32, i64)>,
+    /// MAC accumulators and linebuffer delay lines, per vertex.
+    state: Vec<VecDeque<i64>>,
+    input_stream: Vec<i64>,
+    /// Next input index per stream-in vertex.
+    in_pos: Vec<usize>,
+    /// Reusable ALU argument scratch.
+    args: Vec<i64>,
+    /// Linebuffer depth: the row stride of the streamed image.
+    pub linebuffer_delay: usize,
+}
 
 impl<'a> RvSim<'a> {
     pub fn new(
@@ -139,71 +310,153 @@ impl<'a> RvSim<'a> {
         caps: &HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
         input_stream: Vec<i64>,
     ) -> Self {
-        let mut channels = HashMap::new();
-        for e in app.edges() {
-            let key = (e.src, e.src_port, e.dst, e.dst_port);
-            let cap = caps.get(&key).copied().unwrap_or(1);
-            channels.insert(key, Channel { cap, q: VecDeque::new() });
+        let nv = app.len();
+        let edges = app.edges();
+        let ne = edges.len();
+        let kinds: Vec<VertexKind> = app.iter().map(|(_, n)| classify(&n.op)).collect();
+
+        // Channel capacities and ring windows (channel i == edge i).
+        let mut cap = Vec::with_capacity(ne);
+        let mut base = Vec::with_capacity(ne);
+        let mut total = 0u32;
+        for e in edges {
+            let c = caps.get(&(e.src, e.src_port, e.dst, e.dst_port)).copied().unwrap_or(1);
+            base.push(total);
+            cap.push(c as u32);
+            total += c as u32;
         }
+
+        // CSR fan-in/fan-out, built in one counting pass + one fill pass.
+        let mut in_start = vec![0u32; nv + 1];
+        let mut out_start = vec![0u32; nv + 1];
+        for e in edges {
+            in_start[e.dst.index() + 1] += 1;
+            out_start[e.src.index() + 1] += 1;
+        }
+        for v in 0..nv {
+            in_start[v + 1] += in_start[v];
+            out_start[v + 1] += out_start[v];
+        }
+        let mut in_chan = vec![0u32; ne];
+        let mut out_chan = vec![0u32; ne];
+        let mut in_fill: Vec<u32> = in_start.clone();
+        let mut out_fill: Vec<u32> = out_start.clone();
+        for (ci, e) in edges.iter().enumerate() {
+            in_chan[in_fill[e.dst.index()] as usize] = ci as u32;
+            in_fill[e.dst.index()] += 1;
+            out_chan[out_fill[e.src.index()] as usize] = ci as u32;
+            out_fill[e.src.index()] += 1;
+        }
+        // Inputs sorted by destination port (stable on edge order —
+        // exactly `inputs_of`); outputs stay in edge order.
+        for v in 0..nv {
+            in_chan[in_start[v] as usize..in_start[v + 1] as usize]
+                .sort_by_key(|&c| edges[c as usize].dst_port);
+        }
+
         RvSim {
             app,
-            channels,
-            state: HashMap::new(),
-            input_stream,
-            in_pos: HashMap::new(),
+            kinds,
+            in_start,
+            in_chan,
+            out_start,
+            out_chan,
+            buf: vec![0; total as usize],
+            head: vec![0; ne],
+            len: vec![0; ne],
+            staged: vec![0; ne],
+            cap,
+            base,
             pending: Vec::new(),
-            staged: HashMap::new(),
+            state: vec![VecDeque::new(); nv],
+            input_stream,
+            in_pos: vec![0; nv],
+            args: Vec::new(),
             linebuffer_delay: DEFAULT_LINEBUFFER_DELAY,
         }
     }
 
-    fn stage(&mut self, key: (AppNodeId, u8, AppNodeId, u8), tok: i64) {
-        self.pending.push((key, tok));
-        *self.staged.entry(key).or_insert(0) += 1;
+    #[inline]
+    fn ins(&self, v: usize) -> std::ops::Range<usize> {
+        self.in_start[v] as usize..self.in_start[v + 1] as usize
     }
 
-    fn channel_ready(&self, key: &(AppNodeId, u8, AppNodeId, u8)) -> bool {
-        let ch = &self.channels[key];
-        ch.q.len() + self.staged.get(key).copied().unwrap_or(0) < ch.cap
+    #[inline]
+    fn outs(&self, v: usize) -> std::ops::Range<usize> {
+        self.out_start[v] as usize..self.out_start[v + 1] as usize
     }
 
-    fn out_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
-        self.app
-            .outputs_of(v)
-            .iter()
-            .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
-            .collect()
+    /// All of `v`'s input channels hold at least one token.
+    #[inline]
+    fn inputs_valid(&self, v: usize) -> bool {
+        self.ins(v).all(|i| self.len[self.in_chan[i] as usize] > 0)
     }
 
-    fn in_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
-        self.app
-            .inputs_of(v)
-            .iter()
-            .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
-            .collect()
+    /// `c` can absorb one more push this cycle (occupancy + already
+    /// staged pushes below capacity).
+    #[inline]
+    fn channel_ready(&self, c: usize) -> bool {
+        self.len[c] + self.staged[c] < self.cap[c]
+    }
+
+    #[inline]
+    fn pop(&mut self, c: usize) -> i64 {
+        debug_assert!(self.len[c] > 0);
+        let tok = self.buf[(self.base[c] + self.head[c]) as usize];
+        self.head[c] = (self.head[c] + 1) % self.cap[c];
+        self.len[c] -= 1;
+        tok
+    }
+
+    #[inline]
+    fn stage(&mut self, c: u32, tok: i64) {
+        self.pending.push((c, tok));
+        self.staged[c as usize] += 1;
+    }
+
+    /// Stage `tok` on every output channel of `v`.
+    #[inline]
+    #[allow(clippy::needless_range_loop)] // body needs &mut self
+    fn stage_outputs(&mut self, v: usize, tok: i64) {
+        for i in self.outs(v) {
+            let c = self.out_chan[i];
+            self.stage(c, tok);
+        }
+    }
+
+    /// Commit this cycle's productions: visible next cycle.
+    fn commit_pending(&mut self) {
+        let mut pending = std::mem::take(&mut self.pending);
+        for &(c, tok) in &pending {
+            let c = c as usize;
+            debug_assert!(self.len[c] < self.cap[c]);
+            let slot = (self.base[c] + (self.head[c] + self.len[c]) % self.cap[c]) as usize;
+            self.buf[slot] = tok;
+            self.len[c] += 1;
+            self.staged[c] = 0;
+        }
+        pending.clear();
+        self.pending = pending; // keep the allocation across cycles
     }
 
     /// Run until every stream-out vertex has collected `n_tokens` or
     /// `max_cycles` elapse.
+    // Index loops over the CSR channel lists are deliberate: the loop
+    // bodies call `&mut self` methods (`pop`/`stage`), so iterator
+    // borrows of `in_chan`/`out_chan` cannot be held across them.
+    #[allow(clippy::needless_range_loop)]
     pub fn run(&mut self, n_tokens: usize, max_cycles: usize, stall: StallPattern) -> SimRun {
-        let sinks: Vec<AppNodeId> = self
-            .app
-            .iter()
-            .filter(|(_, n)| matches!(&n.op, AppOp::Mem(r) if r == "stream_out"))
-            .map(|(id, _)| id)
-            .collect();
-        let mut outputs: HashMap<String, Vec<i64>> =
-            sinks.iter().map(|&s| (self.app.node(s).name.clone(), Vec::new())).collect();
+        let nv = self.kinds.len();
+        let sinks: Vec<usize> =
+            (0..nv).filter(|&v| self.kinds[v] == VertexKind::StreamOut).collect();
+        let mut collected: Vec<Vec<i64>> = vec![Vec::new(); sinks.len()];
         let mut rng = Rng::new(match stall {
             StallPattern::Random { seed, .. } => seed,
             _ => 0,
         });
 
-        let order: Vec<AppNodeId> = self.app.ids().collect();
         let mut cycles = 0usize;
-        while cycles < max_cycles
-            && outputs.values().any(|v| v.len() < n_tokens)
-        {
+        while cycles < max_cycles && collected.iter().any(|v| v.len() < n_tokens) {
             // Sink acceptance this cycle.
             let sink_ready = match stall {
                 StallPattern::None => true,
@@ -217,160 +470,435 @@ impl<'a> RvSim<'a> {
             // (Vertices read channel occupancy as of cycle start; pushes
             // land visible next cycle — modeled by draining *then*
             // firing producers in reverse topological order.)
-            for &v in order.iter() {
-                let node = self.app.node(v);
-                match &node.op {
-                    AppOp::Mem(role) if role == "stream_out" => {
-                        if !sink_ready {
-                            continue;
-                        }
-                        let keys = self.in_keys(v);
-                        if keys.is_empty() {
-                            continue;
-                        }
-                        // Accept one token per input channel per cycle.
-                        if keys.iter().all(|k| !self.channels[k].q.is_empty()) {
-                            let tok = self.channels.get_mut(&keys[0]).unwrap().q.pop_front().unwrap();
-                            for k in &keys[1..] {
-                                self.channels.get_mut(k).unwrap().q.pop_front();
-                            }
-                            outputs.get_mut(&node.name).unwrap().push(tok);
-                        }
+            if sink_ready {
+                for (si, &v) in sinks.iter().enumerate() {
+                    let ins = self.ins(v);
+                    if ins.is_empty() {
+                        continue;
                     }
-                    _ => {}
+                    // Accept one token per input channel per cycle.
+                    if self.inputs_valid(v) {
+                        let first = self.in_chan[ins.start] as usize;
+                        let tok = self.pop(first);
+                        for i in ins.start + 1..ins.end {
+                            let c = self.in_chan[i] as usize;
+                            self.pop(c);
+                        }
+                        collected[si].push(tok);
+                    }
                 }
             }
 
-            for &v in order.iter() {
-                let node = self.app.node(v);
-                let outs = self.out_keys(v);
+            for v in 0..nv {
+                let outs = self.outs(v);
                 if outs.is_empty() {
                     continue; // sinks handled above
                 }
-                let outs_ready = outs.iter().all(|k| self.channel_ready(k));
+                let outs_ready = outs.clone().all(|i| self.channel_ready(self.out_chan[i] as usize));
                 if !outs_ready {
                     continue;
                 }
-                match &node.op {
-                    AppOp::Mem(role) if role == "stream_in" => {
-                        let pos = self.in_pos.entry(v).or_insert(0);
-                        if *pos < self.input_stream.len() {
-                            let tok = self.input_stream[*pos];
-                            *pos += 1;
-                            for k in &outs {
-                                self.stage(*k, tok);
-                            }
+                match self.kinds[v] {
+                    VertexKind::StreamIn => {
+                        let pos = self.in_pos[v];
+                        if pos < self.input_stream.len() {
+                            let tok = self.input_stream[pos];
+                            self.in_pos[v] = pos + 1;
+                            self.stage_outputs(v, tok);
                         }
                     }
-                    AppOp::Mem(role) if role == "linebuffer" => {
-                        let ins = self.in_keys(v);
-                        if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
-                            let tok =
-                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
+                    VertexKind::Linebuffer => {
+                        if self.inputs_valid(v) {
+                            let ins = self.ins(v);
+                            let first = self.in_chan[ins.clone()][0] as usize;
+                            let tok = self.pop(first);
                             let delay = self.linebuffer_delay;
-                            let line = self.state.entry(v).or_default();
+                            let line = &mut self.state[v];
                             line.push_back(tok);
                             let out_tok = if line.len() > delay {
                                 line.pop_front().unwrap()
                             } else {
                                 0 // priming zeros
                             };
-                            for k in &outs {
-                                self.stage(*k, out_tok);
-                            }
+                            self.stage_outputs(v, out_tok);
                         }
                     }
-                    AppOp::Alu(op) => {
-                        let ins = self.in_keys(v);
-                        if !ins.is_empty()
-                            && ins.iter().all(|k| !self.channels[k].q.is_empty())
-                        {
-                            let args: Vec<i64> = ins
-                                .iter()
-                                .map(|k| self.channels.get_mut(k).unwrap().q.pop_front().unwrap())
-                                .collect();
-                            let val = self.eval_alu(v, op, &args);
-                            for k in &outs {
-                                self.stage(*k, val);
+                    VertexKind::Alu(op) => {
+                        let ins = self.ins(v);
+                        if !ins.is_empty() && self.inputs_valid(v) {
+                            self.args.clear();
+                            for i in ins {
+                                let c = self.in_chan[i] as usize;
+                                let tok = self.pop(c);
+                                self.args.push(tok);
                             }
+                            let val = self.eval_alu(v, op);
+                            self.stage_outputs(v, val);
                         }
                     }
-                    AppOp::Reg => {
+                    VertexKind::Reg => {
                         // A register is a 1-token delay line: out[i] =
                         // in[i-1], with a zero priming token — this is
                         // what makes stencil window registers select the
                         // previous pixel column.
-                        let ins = self.in_keys(v);
-                        if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
-                            let tok =
-                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
-                            let st = self.state.entry(v).or_default();
+                        if self.inputs_valid(v) {
+                            let ins = self.ins(v);
+                            let first = self.in_chan[ins.clone()][0] as usize;
+                            let tok = self.pop(first);
+                            let st = &mut self.state[v];
                             let prev = if st.is_empty() { 0 } else { st.pop_front().unwrap() };
                             st.push_back(tok);
-                            for k in &outs {
-                                self.stage(*k, prev);
-                            }
+                            self.stage_outputs(v, prev);
                         }
                     }
-                    AppOp::Const(c) => {
-                        let c = *c;
-                        for k in &outs {
-                            self.stage(*k, c);
-                        }
+                    VertexKind::Const(c) => {
+                        self.stage_outputs(v, c);
                     }
-                    AppOp::Mem(_) => {
-                        // other memory roles behave as pass-throughs
-                        let ins = self.in_keys(v);
-                        if !ins.is_empty()
-                            && ins.iter().all(|k| !self.channels[k].q.is_empty())
-                        {
-                            let tok =
-                                self.channels.get_mut(&ins[0]).unwrap().q.pop_front().unwrap();
-                            for k in ins.iter().skip(1) {
-                                self.channels.get_mut(k).unwrap().q.pop_front();
+                    // Other memory roles pass through; a stream-out
+                    // with outputs (never reached for normal terminal
+                    // sinks, which bail at `outs.is_empty()` above)
+                    // behaves the same way, exactly as the reference.
+                    VertexKind::MemPass | VertexKind::StreamOut => {
+                        let ins = self.ins(v);
+                        if !ins.is_empty() && self.inputs_valid(v) {
+                            let first = self.in_chan[ins.start] as usize;
+                            let tok = self.pop(first);
+                            for i in ins.start + 1..ins.end {
+                                let c = self.in_chan[i] as usize;
+                                self.pop(c);
                             }
-                            for k in &outs {
-                                self.stage(*k, tok);
-                            }
+                            self.stage_outputs(v, tok);
                         }
                     }
                 }
             }
 
-            // Commit this cycle's productions: visible next cycle.
-            for (key, tok) in self.pending.drain(..) {
-                self.channels.get_mut(&key).unwrap().q.push_back(tok);
-            }
-            self.staged.clear();
-
+            self.commit_pending();
             cycles += 1;
         }
 
+        let outputs: HashMap<String, Vec<i64>> = sinks
+            .iter()
+            .zip(collected)
+            .map(|(&v, seq)| (self.app.node(AppNodeId(v as u32)).name.clone(), seq))
+            .collect();
         let tokens = outputs.values().map(Vec::len).min().unwrap_or(0);
         SimRun { outputs, cycles, tokens }
     }
 
-    fn eval_alu(&mut self, v: AppNodeId, op: &str, args: &[i64]) -> i64 {
-        let a = args.first().copied().unwrap_or(0);
-        let b = args.get(1).copied().unwrap_or(0);
+    fn eval_alu(&mut self, v: usize, op: AluOp) -> i64 {
+        let a = self.args.first().copied().unwrap_or(0);
+        let b = self.args.get(1).copied().unwrap_or(0);
         match op {
-            "add" => a.wrapping_add(b),
-            "sub" => a.wrapping_sub(b),
-            "mul" => a.wrapping_mul(b),
-            "ashr" => a >> (b & 63),
-            "max" => a.max(b),
-            "min" => a.min(b),
-            "abs" => a.wrapping_abs(),
-            "mac" => {
-                let acc = self.state.entry(v).or_default();
+            AluOp::Add => a.wrapping_add(b),
+            AluOp::Sub => a.wrapping_sub(b),
+            AluOp::Mul => a.wrapping_mul(b),
+            AluOp::Ashr => a >> (b & 63),
+            AluOp::Max => a.max(b),
+            AluOp::Min => a.min(b),
+            AluOp::Abs => a.wrapping_abs(),
+            AluOp::Mac => {
+                let factor = if self.args.len() > 1 { b } else { 1 };
+                let acc = &mut self.state[v];
                 if acc.is_empty() {
                     acc.push_back(0);
                 }
-                let sum = acc[0].wrapping_add(a.wrapping_mul(if args.len() > 1 { b } else { 1 }));
+                let sum = acc[0].wrapping_add(a.wrapping_mul(factor));
                 acc[0] = sum;
                 sum
             }
-            other => panic!("unknown ALU op `{other}`"),
+            AluOp::Other => match &self.app.node(AppNodeId(v as u32)).op {
+                AppOp::Alu(name) => panic!("unknown ALU op `{name}`"),
+                _ => unreachable!("non-ALU vertex classified as ALU"),
+            },
+        }
+    }
+}
+
+/// The original `HashMap`-of-`VecDeque` simulator, kept verbatim as the
+/// golden oracle: the flattened [`RvSim`] must match it cycle-for-cycle
+/// on every app, fabric, and stall pattern (asserted in the tests below).
+#[cfg(test)]
+pub(crate) mod reference {
+    use super::*;
+
+    struct Channel {
+        cap: usize,
+        q: VecDeque<i64>,
+    }
+
+    pub struct ReferenceRvSim<'a> {
+        app: &'a AppGraph,
+        channels: HashMap<(AppNodeId, u8, AppNodeId, u8), Channel>,
+        state: HashMap<AppNodeId, VecDeque<i64>>,
+        input_stream: Vec<i64>,
+        in_pos: HashMap<AppNodeId, usize>,
+        pending: Vec<((AppNodeId, u8, AppNodeId, u8), i64)>,
+        staged: HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
+        pub linebuffer_delay: usize,
+    }
+
+    impl<'a> ReferenceRvSim<'a> {
+        pub fn new(
+            app: &'a AppGraph,
+            caps: &HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
+            input_stream: Vec<i64>,
+        ) -> Self {
+            let mut channels = HashMap::new();
+            for e in app.edges() {
+                let key = (e.src, e.src_port, e.dst, e.dst_port);
+                let cap = caps.get(&key).copied().unwrap_or(1);
+                channels.insert(key, Channel { cap, q: VecDeque::new() });
+            }
+            ReferenceRvSim {
+                app,
+                channels,
+                state: HashMap::new(),
+                input_stream,
+                in_pos: HashMap::new(),
+                pending: Vec::new(),
+                staged: HashMap::new(),
+                linebuffer_delay: DEFAULT_LINEBUFFER_DELAY,
+            }
+        }
+
+        fn stage(&mut self, key: (AppNodeId, u8, AppNodeId, u8), tok: i64) {
+            self.pending.push((key, tok));
+            *self.staged.entry(key).or_insert(0) += 1;
+        }
+
+        fn channel_ready(&self, key: &(AppNodeId, u8, AppNodeId, u8)) -> bool {
+            let ch = &self.channels[key];
+            ch.q.len() + self.staged.get(key).copied().unwrap_or(0) < ch.cap
+        }
+
+        fn out_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
+            self.app
+                .outputs_of(v)
+                .iter()
+                .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
+                .collect()
+        }
+
+        fn in_keys(&self, v: AppNodeId) -> Vec<(AppNodeId, u8, AppNodeId, u8)> {
+            self.app
+                .inputs_of(v)
+                .iter()
+                .map(|e| (e.src, e.src_port, e.dst, e.dst_port))
+                .collect()
+        }
+
+        pub fn run(
+            &mut self,
+            n_tokens: usize,
+            max_cycles: usize,
+            stall: StallPattern,
+        ) -> SimRun {
+            let sinks: Vec<AppNodeId> = self
+                .app
+                .iter()
+                .filter(|(_, n)| matches!(&n.op, AppOp::Mem(r) if r == "stream_out"))
+                .map(|(id, _)| id)
+                .collect();
+            let mut outputs: HashMap<String, Vec<i64>> = sinks
+                .iter()
+                .map(|&s| (self.app.node(s).name.clone(), Vec::new()))
+                .collect();
+            let mut rng = Rng::new(match stall {
+                StallPattern::Random { seed, .. } => seed,
+                _ => 0,
+            });
+
+            let order: Vec<AppNodeId> = self.app.ids().collect();
+            let mut cycles = 0usize;
+            while cycles < max_cycles && outputs.values().any(|v| v.len() < n_tokens) {
+                let sink_ready = match stall {
+                    StallPattern::None => true,
+                    StallPattern::Bursty { accept, stall } => {
+                        (cycles as u32) % (accept + stall) < accept
+                    }
+                    StallPattern::Random { p, .. } => rng.f64() >= p,
+                };
+
+                for &v in order.iter() {
+                    let node = self.app.node(v);
+                    match &node.op {
+                        AppOp::Mem(role) if role == "stream_out" => {
+                            if !sink_ready {
+                                continue;
+                            }
+                            let keys = self.in_keys(v);
+                            if keys.is_empty() {
+                                continue;
+                            }
+                            if keys.iter().all(|k| !self.channels[k].q.is_empty()) {
+                                let tok = self
+                                    .channels
+                                    .get_mut(&keys[0])
+                                    .unwrap()
+                                    .q
+                                    .pop_front()
+                                    .unwrap();
+                                for k in &keys[1..] {
+                                    self.channels.get_mut(k).unwrap().q.pop_front();
+                                }
+                                outputs.get_mut(&node.name).unwrap().push(tok);
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+
+                for &v in order.iter() {
+                    let node = self.app.node(v);
+                    let outs = self.out_keys(v);
+                    if outs.is_empty() {
+                        continue;
+                    }
+                    let outs_ready = outs.iter().all(|k| self.channel_ready(k));
+                    if !outs_ready {
+                        continue;
+                    }
+                    match &node.op {
+                        AppOp::Mem(role) if role == "stream_in" => {
+                            let pos = self.in_pos.entry(v).or_insert(0);
+                            if *pos < self.input_stream.len() {
+                                let tok = self.input_stream[*pos];
+                                *pos += 1;
+                                for k in &outs {
+                                    self.stage(*k, tok);
+                                }
+                            }
+                        }
+                        AppOp::Mem(role) if role == "linebuffer" => {
+                            let ins = self.in_keys(v);
+                            if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
+                                let tok = self
+                                    .channels
+                                    .get_mut(&ins[0])
+                                    .unwrap()
+                                    .q
+                                    .pop_front()
+                                    .unwrap();
+                                let delay = self.linebuffer_delay;
+                                let line = self.state.entry(v).or_default();
+                                line.push_back(tok);
+                                let out_tok = if line.len() > delay {
+                                    line.pop_front().unwrap()
+                                } else {
+                                    0
+                                };
+                                for k in &outs {
+                                    self.stage(*k, out_tok);
+                                }
+                            }
+                        }
+                        AppOp::Alu(op) => {
+                            let ins = self.in_keys(v);
+                            if !ins.is_empty()
+                                && ins.iter().all(|k| !self.channels[k].q.is_empty())
+                            {
+                                let args: Vec<i64> = ins
+                                    .iter()
+                                    .map(|k| {
+                                        self.channels
+                                            .get_mut(k)
+                                            .unwrap()
+                                            .q
+                                            .pop_front()
+                                            .unwrap()
+                                    })
+                                    .collect();
+                                let op = op.clone();
+                                let val = self.eval_alu(v, &op, &args);
+                                for k in &outs {
+                                    self.stage(*k, val);
+                                }
+                            }
+                        }
+                        AppOp::Reg => {
+                            let ins = self.in_keys(v);
+                            if ins.iter().all(|k| !self.channels[k].q.is_empty()) {
+                                let tok = self
+                                    .channels
+                                    .get_mut(&ins[0])
+                                    .unwrap()
+                                    .q
+                                    .pop_front()
+                                    .unwrap();
+                                let st = self.state.entry(v).or_default();
+                                let prev =
+                                    if st.is_empty() { 0 } else { st.pop_front().unwrap() };
+                                st.push_back(tok);
+                                for k in &outs {
+                                    self.stage(*k, prev);
+                                }
+                            }
+                        }
+                        AppOp::Const(c) => {
+                            let c = *c;
+                            for k in &outs {
+                                self.stage(*k, c);
+                            }
+                        }
+                        AppOp::Mem(_) => {
+                            let ins = self.in_keys(v);
+                            if !ins.is_empty()
+                                && ins.iter().all(|k| !self.channels[k].q.is_empty())
+                            {
+                                let tok = self
+                                    .channels
+                                    .get_mut(&ins[0])
+                                    .unwrap()
+                                    .q
+                                    .pop_front()
+                                    .unwrap();
+                                for k in ins.iter().skip(1) {
+                                    self.channels.get_mut(k).unwrap().q.pop_front();
+                                }
+                                for k in &outs {
+                                    self.stage(*k, tok);
+                                }
+                            }
+                        }
+                    }
+                }
+
+                for (key, tok) in self.pending.drain(..) {
+                    self.channels.get_mut(&key).unwrap().q.push_back(tok);
+                }
+                self.staged.clear();
+
+                cycles += 1;
+            }
+
+            let tokens = outputs.values().map(Vec::len).min().unwrap_or(0);
+            SimRun { outputs, cycles, tokens }
+        }
+
+        fn eval_alu(&mut self, v: AppNodeId, op: &str, args: &[i64]) -> i64 {
+            let a = args.first().copied().unwrap_or(0);
+            let b = args.get(1).copied().unwrap_or(0);
+            match op {
+                "add" => a.wrapping_add(b),
+                "sub" => a.wrapping_sub(b),
+                "mul" => a.wrapping_mul(b),
+                "ashr" => a >> (b & 63),
+                "max" => a.max(b),
+                "min" => a.min(b),
+                "abs" => a.wrapping_abs(),
+                "mac" => {
+                    let acc = self.state.entry(v).or_default();
+                    if acc.is_empty() {
+                        acc.push_back(0);
+                    }
+                    let sum = acc[0]
+                        .wrapping_add(a.wrapping_mul(if args.len() > 1 { b } else { 1 }));
+                    acc[0] = sum;
+                    sum
+                }
+                other => panic!("unknown ALU op `{other}`"),
+            }
         }
     }
 }
@@ -470,6 +998,22 @@ mod tests {
     }
 
     #[test]
+    fn fabric_labels_roundtrip() {
+        for fabric in [
+            FabricKind::Static,
+            FabricKind::RvFullFifo { depth: 2 },
+            FabricKind::RvFullFifo { depth: 4 },
+            FabricKind::RvSplitFifo,
+        ] {
+            assert_eq!(FabricKind::parse(&fabric.label()), Some(fabric));
+        }
+        // The bare CLI spelling defaults to the paper's depth-2 FIFO.
+        assert_eq!(FabricKind::parse("rv-full"), Some(FabricKind::RvFullFifo { depth: 2 }));
+        assert_eq!(FabricKind::parse("nope"), None);
+        assert_eq!(FabricKind::parse("rv-full:x"), None);
+    }
+
+    #[test]
     fn mac_accumulates() {
         let mut g = AppGraph::new("acc");
         let i = g.mem("in", "stream_in");
@@ -480,5 +1024,119 @@ mod tests {
         let caps = uniform_caps(&g, 2);
         let run = RvSim::new(&g, &caps, vec![1, 2, 3, 4]).run(4, 1000, StallPattern::None);
         assert_eq!(run.outputs["out"], vec![1, 3, 6, 10]);
+    }
+
+    /// One golden comparison: flat vs reference, full `SimRun` equality.
+    fn assert_matches_reference(
+        app: &AppGraph,
+        caps: &HashMap<(AppNodeId, u8, AppNodeId, u8), usize>,
+        input: &[i64],
+        n_tokens: usize,
+        max_cycles: usize,
+        stall: StallPattern,
+    ) {
+        let flat = RvSim::new(app, caps, input.to_vec()).run(n_tokens, max_cycles, stall);
+        let oracle = reference::ReferenceRvSim::new(app, caps, input.to_vec()).run(
+            n_tokens, max_cycles, stall,
+        );
+        assert_eq!(flat.outputs, oracle.outputs, "{}: outputs diverged ({stall:?})", app.name);
+        assert_eq!(flat.cycles, oracle.cycles, "{}: cycle count diverged ({stall:?})", app.name);
+        assert_eq!(flat.tokens, oracle.tokens, "{}: token count diverged ({stall:?})", app.name);
+    }
+
+    #[test]
+    fn golden_flat_matches_reference_on_harris_and_random_fabrics() {
+        // The tentpole contract: the arena simulator is sequence- AND
+        // cycle-identical to the original HashMap implementation, on the
+        // paper's Harris pipeline and on randomized per-edge capacities
+        // ("random fabrics": capacity = 1 + registers-crossed varies per
+        // route), under every stall family.
+        let suite = [apps::harris(), apps::gaussian(), apps::camera(), apps::pointwise(6)];
+        for app in &suite {
+            let mut rng = Rng::new(0xFAB0 ^ app.name.len() as u64);
+            for trial in 0..4u64 {
+                let caps: HashMap<_, _> = app
+                    .edges()
+                    .iter()
+                    .map(|e| {
+                        ((e.src, e.src_port, e.dst, e.dst_port), 1 + rng.below(5))
+                    })
+                    .collect();
+                for stall in [
+                    StallPattern::None,
+                    StallPattern::Bursty { accept: 2, stall: 3 },
+                    StallPattern::Random { p: 0.25, seed: 11 + trial },
+                ] {
+                    assert_matches_reference(app, &caps, &stream(96), 24, 100_000, stall);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_flat_matches_reference_cycle_for_cycle() {
+        // Truncated runs pin per-cycle equivalence, not just the final
+        // fixpoint: whatever the oracle has produced after exactly K
+        // cycles, the flat simulator has produced too.
+        let app = apps::harris();
+        let caps = uniform_caps(&app, 2);
+        for max_cycles in [1, 3, 7, 20, 55, 160] {
+            assert_matches_reference(
+                &app,
+                &caps,
+                &stream(96),
+                1_000_000, // never the binding limit
+                max_cycles,
+                StallPattern::Bursty { accept: 3, stall: 2 },
+            );
+        }
+    }
+
+    #[test]
+    fn golden_flat_matches_reference_per_fabric_kind() {
+        // The three fabric capacity models of the DSE axis.
+        let app = apps::gaussian();
+        for fabric in
+            [FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }, FabricKind::RvSplitFifo]
+        {
+            let caps = channel_capacities(&app, None, fabric);
+            assert_matches_reference(&app, &caps, &stream(96), 32, 100_000, StallPattern::None);
+        }
+    }
+
+    #[test]
+    fn routed_capacities_cover_every_unpacked_edge() {
+        use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+        use crate::pnr::{run_flow, FlowParams, SaParams};
+        let ic = create_uniform_interconnect(&InterconnectConfig {
+            width: 8,
+            height: 8,
+            num_tracks: 5,
+            mem_column_period: 3,
+            ..Default::default()
+        });
+        let app = apps::harris();
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        };
+        let flow = run_flow(&ic, &app, &params).expect("harris routes");
+        for fabric in
+            [FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }, FabricKind::RvSplitFifo]
+        {
+            let caps = routed_capacities(&app, &flow.packed, &ic, 16, &flow.routing, fabric);
+            assert_eq!(caps.len(), app.edges().len(), "one capacity per edge");
+            assert!(caps.values().all(|&c| c >= 1));
+            if fabric == FabricKind::Static {
+                assert!(caps.values().all(|&c| c == 1), "static fabric has no buffering");
+            }
+            // The simulation still computes the right values.
+            let run = RvSim::new(&app, &caps, stream(128)).run(16, 1_000_000, StallPattern::None);
+            let free = RvSim::new(&app, &channel_capacities(&app, None, fabric), stream(128))
+                .run(16, 1_000_000, StallPattern::None);
+            for (name, seq) in &free.outputs {
+                assert_eq!(&run.outputs[name][..], &seq[..], "{name} diverged on routed caps");
+            }
+        }
     }
 }

@@ -2,13 +2,14 @@
 //!
 //! Contract under test: engine results are bit-identical across worker
 //! counts and cache temperature, the cache file round-trips losslessly,
-//! and a warm re-run of the full figure suite (fig09/10/11/14/15)
+//! and a warm re-run of the full figure suite (fig07/08/09/10/11/14/15)
 //! performs zero PnR calls.
 
 use canal::coordinator::{self, ExpOptions};
 use canal::dse::{DseEngine, EngineOptions, SweepSpec};
 use canal::dsl::InterconnectConfig;
 use canal::pnr::{BatchedNativePlacer, FlowParams, NativePlacer, SaParams};
+use canal::sim::FabricKind;
 
 fn small_spec() -> SweepSpec {
     SweepSpec {
@@ -143,6 +144,89 @@ fn batched_and_sequential_flows_produce_identical_placements() {
     }
 }
 
+fn fabric_spec() -> SweepSpec {
+    SweepSpec {
+        name: "fabric-determinism".into(),
+        tracks: vec![4],
+        fabrics: vec![
+            FabricKind::Static,
+            FabricKind::RvFullFifo { depth: 2 },
+            FabricKind::RvSplitFifo,
+        ],
+        ..small_spec()
+    }
+}
+
+#[test]
+fn fabric_axis_sweeps_are_bit_identical_sharded_vs_sequential() {
+    // The fabric axis rides the same determinism contract as every
+    // other axis: the elastic simulation is a pure function of the
+    // routed flow and the fabric, so worker count changes nothing.
+    let spec = fabric_spec();
+    let sequential = run_with_workers(&spec, 1);
+    // 1 track × 3 fabrics × 2 apps × 2 seeds.
+    assert_eq!(sequential.points.len(), 12);
+    let routed = sequential.points.iter().filter(|(_, r)| r.routed).count() as u64;
+    assert!(routed > 0, "spec produced no routable points");
+    assert_eq!(sequential.stats.sims, routed, "every routed cold point simulates");
+    for workers in [2, 4, 7] {
+        let sharded = run_with_workers(&spec, workers);
+        assert_eq!(sharded.points.len(), sequential.points.len(), "workers={workers}");
+        for ((ja, ra), (jb, rb)) in sequential.points.iter().zip(&sharded.points) {
+            assert_eq!(ja.key, jb.key, "workers={workers}");
+            assert_eq!(ra, rb, "workers={workers} {:?}", ja.key);
+            assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+            assert_eq!(
+                (ra.sim_cycles, ra.sim_tokens, ra.stall_cycles),
+                (rb.sim_cycles, rb.sim_tokens, rb.stall_cycles),
+                "workers={workers} {:?}",
+                ja.key
+            );
+        }
+    }
+}
+
+#[test]
+fn fabric_axis_warm_rerun_does_zero_pnr_and_zero_sims() {
+    // File-backed acceptance check: a warm re-run of a fabric sweep
+    // performs zero PnR calls AND zero simulations, and the cache file
+    // keys fabric rows distinctly (static rows stay bare).
+    let path = std::env::temp_dir()
+        .join(format!("canal_dse_fabric_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let spec = fabric_spec();
+
+    let cold = {
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
+                .expect("engine");
+        engine.run(&spec, &NativePlacer::default()).expect("cold sweep")
+    };
+    assert_eq!(cold.stats.pnr_runs, 12);
+    let routed = cold.points.iter().filter(|(_, r)| r.routed).count() as u64;
+    assert!(routed > 0, "spec produced no routable points");
+    assert_eq!(cold.stats.sims, routed);
+
+    let text = std::fs::read_to_string(&path).expect("cache file written");
+    assert!(text.contains("fabric=rv-full:2"), "full-FIFO rows must be keyed distinctly");
+    assert!(text.contains("fabric=rv-split"), "split-FIFO rows must be keyed distinctly");
+
+    let warm = {
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
+                .expect("engine");
+        engine.run(&spec, &NativePlacer::default()).expect("warm sweep")
+    };
+    std::fs::remove_file(&path).expect("cache file removed");
+    assert_eq!(warm.stats.pnr_runs, 0, "warm re-run must skip all PnR");
+    assert_eq!(warm.stats.sims, 0, "warm re-run must skip all simulations");
+    assert_eq!(warm.stats.cache_hits, 12);
+    for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+        assert_eq!(ja.key, jb.key);
+        assert_eq!(ra, rb);
+    }
+}
+
 #[test]
 fn warm_cache_is_bit_identical_and_file_backed() {
     let path = std::env::temp_dir()
@@ -180,7 +264,7 @@ fn warm_cache_is_bit_identical_and_file_backed() {
 
 #[test]
 fn figure_suite_warm_rerun_does_zero_pnr() {
-    // The acceptance check for the engine port: render fig09/10/11/14/15
+    // The acceptance check for the engine port: render fig07-15
     // through one shared engine, then render them all again — the second
     // pass must hit the cache for every point (zero PnR runs) and produce
     // byte-identical tables.
@@ -190,6 +274,8 @@ fn figure_suite_warm_rerun_does_zero_pnr() {
 
     let render_all = |engine: &mut DseEngine| -> String {
         let mut s = String::new();
+        s.push_str(&coordinator::fig07_hybrid_throughput_with(&o, &placer, engine).render());
+        s.push_str(&coordinator::fig08_fifo_area_with(engine).render());
         s.push_str(&coordinator::fig09_topology_with(&o, engine).render());
         s.push_str(&coordinator::fig10_area_tracks_with(engine).render());
         s.push_str(&coordinator::fig11_runtime_tracks_with(&o, &placer, engine).render());
@@ -200,10 +286,14 @@ fn figure_suite_warm_rerun_does_zero_pnr() {
 
     let cold_tables = render_all(&mut engine);
     let cold_runs = engine.lifetime_stats().pnr_runs;
+    let cold_sims = engine.lifetime_stats().sims;
     assert!(cold_runs > 0, "cold figure pass must perform PnR");
+    assert!(cold_sims > 0, "cold figure pass must simulate");
 
     let warm_tables = render_all(&mut engine);
     let warm_runs = engine.lifetime_stats().pnr_runs - cold_runs;
+    let warm_sims = engine.lifetime_stats().sims - cold_sims;
     assert_eq!(warm_runs, 0, "warm figure re-run must perform zero PnR calls");
+    assert_eq!(warm_sims, 0, "warm figure re-run must perform zero simulations");
     assert_eq!(cold_tables, warm_tables, "warm tables must be byte-identical");
 }

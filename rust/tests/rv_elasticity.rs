@@ -1,0 +1,253 @@
+//! End-to-end property tests for the elastic (ready-valid) simulator's
+//! two documented invariants (`sim/rv_sim.rs` module docs):
+//!
+//! 1. **Elasticity preserves values** — on randomized app graphs, with
+//!    randomized per-edge channel capacities ("random routes": capacity
+//!    varies per edge the way registers-crossed varies per routed net),
+//!    *any* stall pattern yields exactly the output sequence of the
+//!    unconstrained run.
+//! 2. **Deeper FIFOs never reduce throughput** — for the same graph and
+//!    workload, increasing every channel's capacity never increases the
+//!    cycle count (and the output sequences stay identical).
+//!
+//! A third test grounds both invariants on *real* routes: capacities
+//! derived from an actual PnR result via `routed_capacities`.
+
+use std::collections::HashMap;
+
+use canal::pnr::{AppGraph, AppNodeId, AppOp};
+use canal::sim::{routed_capacities, FabricKind, RvSim, StallPattern};
+use canal::util::rng::Rng;
+
+type Caps = HashMap<(AppNodeId, u8, AppNodeId, u8), usize>;
+
+fn uniform_caps(app: &AppGraph, cap: usize) -> Caps {
+    app.edges().iter().map(|e| ((e.src, e.src_port, e.dst, e.dst_port), cap)).collect()
+}
+
+fn random_caps(app: &AppGraph, rng: &mut Rng, max_extra: usize) -> Caps {
+    app.edges()
+        .iter()
+        .map(|e| ((e.src, e.src_port, e.dst, e.dst_port), 1 + rng.below(max_extra + 1)))
+        .collect()
+}
+
+fn stream(n: usize) -> Vec<i64> {
+    (0..n as i64).map(|i| (i * 11 + 5) % 241).collect()
+}
+
+/// Random layered feed-forward dataflow graph. Construction guarantees
+/// the properties the simulator's completion depends on: every vertex
+/// feeds forward into the next layer (no dead ends that would absorb
+/// backpressure forever), every compute vertex has at least one input,
+/// and the final survivor drains into a stream sink. Includes the whole
+/// op/vertex menagerie: binary and unary ALUs, `mac` accumulators,
+/// explicit `Reg` delay vertices, linebuffers, and packed-style consts.
+fn random_app(seed: u64) -> AppGraph {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0xE1A5_71C0);
+    let mut g = AppGraph::new(&format!("rand{seed}"));
+    let mut uid = 0usize;
+    let fresh = |prefix: &str, uid: &mut usize| {
+        *uid += 1;
+        format!("{prefix}{uid}")
+    };
+
+    let n_inputs = 1 + rng.below(2);
+    let mut pool: Vec<AppNodeId> =
+        (0..n_inputs).map(|i| g.mem(&format!("in{i}"), "stream_in")).collect();
+    // Occasionally widen the frontier so reconvergence happens.
+    if rng.below(2) == 0 {
+        let lb = g.mem(&fresh("lb", &mut uid), "linebuffer");
+        g.wire(pool[0], lb, 0);
+        pool.push(lb);
+    }
+
+    let binary_ops = ["add", "sub", "mul", "max", "min", "ashr"];
+    let unary_ops = ["abs", "mac"];
+    let mut layers = 2 + rng.below(3);
+    while pool.len() > 1 || layers > 0 {
+        layers = layers.saturating_sub(1);
+        let mut next = Vec::new();
+        let mut i = 0;
+        while i < pool.len() {
+            // Maybe delay the left operand through an explicit register.
+            let mut a = pool[i];
+            if rng.below(4) == 0 {
+                let r = g.add(&fresh("r", &mut uid), AppOp::Reg);
+                g.wire(a, r, 0);
+                a = r;
+            }
+            if i + 1 < pool.len() {
+                // Pair-reduce two frontier nodes through a binary ALU.
+                let b = pool[i + 1];
+                let op = binary_ops[rng.below(binary_ops.len())];
+                let v = g.alu(&fresh("v", &mut uid), op);
+                g.wire(a, v, 0);
+                g.wire(b, v, 1);
+                next.push(v);
+                i += 2;
+            } else {
+                // Odd node out: unary ALU, or binary against a constant.
+                if rng.below(2) == 0 {
+                    let op = unary_ops[rng.below(unary_ops.len())];
+                    let v = g.alu(&fresh("u", &mut uid), op);
+                    g.wire(a, v, 0);
+                    next.push(v);
+                } else {
+                    let k = g.add(
+                        &fresh("k", &mut uid),
+                        AppOp::Const(1 + rng.below(7) as i64),
+                    );
+                    let op = binary_ops[rng.below(binary_ops.len())];
+                    let v = g.alu(&fresh("c", &mut uid), op);
+                    g.wire(a, v, 0);
+                    g.wire(k, v, 1);
+                    next.push(v);
+                }
+                i += 1;
+            }
+        }
+        pool = next;
+        if pool.len() == 1 && layers == 0 {
+            break;
+        }
+    }
+    let out = g.mem("out", "stream_out");
+    g.wire(pool[0], out, 0);
+    g.check().unwrap_or_else(|e| panic!("random_app({seed}) malformed: {e}"));
+    g
+}
+
+fn stall_patterns(seed: u64) -> Vec<StallPattern> {
+    vec![
+        StallPattern::Bursty { accept: 1, stall: 1 },
+        StallPattern::Bursty { accept: 3, stall: 2 },
+        StallPattern::Bursty { accept: 2, stall: 5 },
+        StallPattern::Random { p: 0.2, seed: seed ^ 0xA5 },
+        StallPattern::Random { p: 0.5, seed: seed ^ 0x5A },
+    ]
+}
+
+#[test]
+fn any_stall_pattern_yields_the_unconstrained_sequence() {
+    // Invariant 1 on random graphs × random capacities × stall families.
+    let n = 20;
+    for seed in 0..10u64 {
+        let g = random_app(seed);
+        let mut rng = Rng::new(seed ^ 0xCAB5);
+        let caps = random_caps(&g, &mut rng, 3);
+        let free = RvSim::new(&g, &caps, stream(256)).run(n, 500_000, StallPattern::None);
+        assert_eq!(free.tokens, n, "seed {seed}: unconstrained run incomplete");
+        for stall in stall_patterns(seed) {
+            let run = RvSim::new(&g, &caps, stream(256)).run(n, 500_000, stall);
+            assert_eq!(run.tokens, n, "seed {seed} {stall:?}: stalled run incomplete");
+            for (name, seq) in &free.outputs {
+                assert_eq!(
+                    &run.outputs[name], seq,
+                    "seed {seed} {stall:?}: {name} sequence diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deeper_fifos_never_reduce_throughput() {
+    // Invariant 2: same graph, same workload, uniformly deeper channels
+    // ⇒ cycle count is non-increasing, values unchanged. Checked both
+    // free-running and under bursty backpressure.
+    let n = 24;
+    for seed in 0..10u64 {
+        let g = random_app(seed);
+        for stall in [StallPattern::None, StallPattern::Bursty { accept: 2, stall: 3 }] {
+            let mut prev_cycles = usize::MAX;
+            let mut prev_out = None;
+            for cap in [1usize, 2, 3, 6] {
+                let run = RvSim::new(&g, &uniform_caps(&g, cap), stream(256))
+                    .run(n, 500_000, stall);
+                assert_eq!(run.tokens, n, "seed {seed} cap {cap} {stall:?} incomplete");
+                assert!(
+                    run.cycles <= prev_cycles,
+                    "seed {seed} {stall:?}: cap {cap} took {} cycles, shallower took {}",
+                    run.cycles,
+                    prev_cycles
+                );
+                prev_cycles = run.cycles;
+                if let Some(prev) = &prev_out {
+                    assert_eq!(prev, &run.outputs, "seed {seed} cap {cap}: values changed");
+                }
+                prev_out = Some(run.outputs);
+            }
+        }
+    }
+}
+
+#[test]
+fn fabric_capacity_models_are_ordered() {
+    // The three DSE fabric kinds on the same (randomized) register
+    // counts: rv-full(2) ⊇ rv-split ⊇ static capacity-wise, so cycle
+    // counts must order the opposite way.
+    let n = 24;
+    for seed in 0..6u64 {
+        let g = random_app(seed);
+        let mut rng = Rng::new(seed ^ 0xF00D);
+        let regs: Vec<usize> = g.edges().iter().map(|_| rng.below(3)).collect();
+        let caps_for = |fabric: FabricKind| -> Caps {
+            g.edges()
+                .iter()
+                .zip(&regs)
+                .map(|(e, &r)| ((e.src, e.src_port, e.dst, e.dst_port), fabric.capacity(r)))
+                .collect()
+        };
+        let run = |fabric: FabricKind| {
+            RvSim::new(&g, &caps_for(fabric), stream(256)).run(n, 500_000, StallPattern::None)
+        };
+        let stat = run(FabricKind::Static);
+        let split = run(FabricKind::RvSplitFifo);
+        let full = run(FabricKind::RvFullFifo { depth: 2 });
+        assert_eq!(stat.tokens, n, "seed {seed}");
+        assert!(split.cycles <= stat.cycles, "seed {seed}: split slower than static");
+        assert!(full.cycles <= split.cycles, "seed {seed}: full slower than split");
+        assert_eq!(stat.outputs, split.outputs, "seed {seed}");
+        assert_eq!(stat.outputs, full.outputs, "seed {seed}");
+    }
+}
+
+#[test]
+fn routed_fabrics_preserve_sequences_and_elasticity() {
+    // Ground the invariants on a real PnR result: capacities derived
+    // from the registers each routed net actually crosses.
+    use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
+    use canal::pnr::{run_flow, FlowParams, SaParams};
+    let ic = create_uniform_interconnect(&InterconnectConfig {
+        width: 8,
+        height: 8,
+        num_tracks: 5,
+        mem_column_period: 3,
+        ..Default::default()
+    });
+    let app = canal::apps::gaussian();
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 6, ..Default::default() },
+        ..Default::default()
+    };
+    let flow = run_flow(&ic, &app, &params).expect("gaussian routes");
+    let n = 32;
+    let caps_for = |fabric: FabricKind| {
+        routed_capacities(&app, &flow.packed, &ic, 16, &flow.routing, fabric)
+    };
+    let stat =
+        RvSim::new(&app, &caps_for(FabricKind::Static), stream(256)).run(n, 500_000, StallPattern::None);
+    assert_eq!(stat.tokens, n);
+    for fabric in [FabricKind::RvFullFifo { depth: 2 }, FabricKind::RvSplitFifo] {
+        let caps = caps_for(fabric);
+        let free = RvSim::new(&app, &caps, stream(256)).run(n, 500_000, StallPattern::None);
+        assert!(free.cycles <= stat.cycles, "{fabric:?} slower than static");
+        assert_eq!(free.outputs, stat.outputs, "{fabric:?} changed values");
+        for stall in stall_patterns(7) {
+            let run = RvSim::new(&app, &caps, stream(256)).run(n, 500_000, stall);
+            assert_eq!(run.tokens, n, "{fabric:?} {stall:?} incomplete");
+            assert_eq!(run.outputs, free.outputs, "{fabric:?} {stall:?} diverged");
+        }
+    }
+}
