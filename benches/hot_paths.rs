@@ -242,4 +242,80 @@ fn main() {
         }
         Err(e) => println!("pjrt placer unavailable: {e} (run `make artifacts`)"),
     }
+
+    // --- service: warm-request throughput ---------------------------------
+    // Load generator for the daemon: N clients × M identical warm `dse`
+    // requests against one shared SessionState (every request is zero
+    // PnR / zero sims — this measures protocol + coalescing + cache
+    // overhead, i.e. the daemon's serving floor).
+    {
+        use canal::pnr::BatchedNativePlacer as ServicePlacer;
+        use canal::service::{
+            Client, DseParams, Request, ServeOptions, Server, SessionState, StateOptions,
+        };
+        use std::sync::Arc;
+        let state = Arc::new(
+            SessionState::with_placer(
+                StateOptions { workers: 2, cache_path: None, ic_capacity: 8 },
+                Box::new(ServicePlacer::default()),
+            )
+            .unwrap(),
+        );
+        let server = Server::bind_with_state(
+            ServeOptions {
+                addr: "127.0.0.1:0".into(),
+                conn_threads: 8,
+                ..Default::default()
+            },
+            Arc::clone(&state),
+        )
+        .unwrap();
+        let addr = server.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || server.run());
+        let params = DseParams {
+            width: 4,
+            height: 4,
+            tracks: vec![2, 3],
+            apps: vec!["pointwise4".into()],
+            sa_moves: 6,
+            ..Default::default()
+        };
+        // One cold pass warms the shared cache.
+        Client::connect(&addr).unwrap().call(&Request::Dse(params.clone())).unwrap();
+
+        let (n_clients, m_requests) = (4usize, 50usize);
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|scope| {
+            for _ in 0..n_clients {
+                let (addr, params) = (&addr, &params);
+                scope.spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    for _ in 0..m_requests {
+                        black_box(c.call(&Request::Dse(params.clone())).unwrap());
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let total = (n_clients * m_requests) as f64;
+        println!(
+            "service warm dse requests ({n_clients} clients x {m_requests})   {secs:.3}s   \
+             [{:.0} requests/s]",
+            total / secs
+        );
+
+        let mut c = Client::connect(&addr).unwrap();
+        let pings = 200usize;
+        let t0 = std::time::Instant::now();
+        for _ in 0..pings {
+            black_box(c.call(&Request::Ping).unwrap());
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        println!(
+            "service ping round-trips (1 conn x {pings})   {secs:.3}s   [{:.0} rt/s]",
+            pings as f64 / secs
+        );
+        c.call(&Request::Shutdown).unwrap();
+        handle.join().unwrap().unwrap();
+    }
 }

@@ -120,6 +120,28 @@ impl GlobalPlacer for PlacerService {
     }
 }
 
+/// What [`default_placer`] would select, without constructing anything
+/// — `canal info` and service deployments report this so an operator
+/// can tell a PJRT-backed daemon from a native-fallback one before
+/// issuing work.
+pub fn backend_summary() -> String {
+    let dir = crate::runtime::artifacts_dir();
+    if dir.join("placer_step.hlo.txt").exists() {
+        if cfg!(feature = "pjrt") {
+            format!(
+                "pjrt-jax-pallas (artifacts at {}; falls back to native-gd if the \
+                 artifact fails to load)",
+                dir.display()
+            )
+        } else {
+            "native-gd (artifacts present but built without --features pjrt)".into()
+        }
+    } else {
+        "native-gd (batched native solver; no artifacts/ — run `make artifacts` for PJRT)"
+            .into()
+    }
+}
+
 /// Best available global-placement backend: the AOT JAX/Pallas artifact
 /// (via PJRT, wrapped in a service thread) when `artifacts/` is present;
 /// the batched native solver otherwise (same math and cache identity as

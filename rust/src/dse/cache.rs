@@ -90,8 +90,24 @@ impl ResultCache {
         self.map.get(key)
     }
 
+    pub fn contains(&self, key: &JobKey) -> bool {
+        self.map.contains_key(key)
+    }
+
     pub fn insert(&mut self, key: JobKey, result: PointResult) {
         self.map.insert(key, result);
+    }
+
+    /// Entries in key order (what [`Self::to_json`] serializes).
+    pub fn iter(&self) -> impl Iterator<Item = (&JobKey, &PointResult)> {
+        self.map.iter()
+    }
+
+    /// In-memory copy of the current entries, detached from any backing
+    /// file — the service's figure path runs a throwaway engine over a
+    /// snapshot, then merges new entries back into the shared cache.
+    pub fn snapshot(&self) -> ResultCache {
+        ResultCache { path: None, map: self.map.clone() }
     }
 
     /// Merge entries from cache-file text.
@@ -122,17 +138,27 @@ impl ResultCache {
     }
 
     /// Persist to the backing file (no-op for in-memory caches).
-    /// Writes a sibling temp file and renames it over the target, so an
-    /// interrupted save can never truncate an existing cache.
     pub fn save(&self) -> Result<(), String> {
-        let Some(path) = &self.path else { return Ok(()) };
+        match &self.path {
+            Some(path) => self.save_to(path),
+            None => Ok(()),
+        }
+    }
+
+    /// Persist to an explicit path — how the service writes: it
+    /// snapshots the shared cache under its request lock (a cheap map
+    /// clone) and serializes + writes *outside* it, so concurrent
+    /// sessions never block on disk I/O. Writes a sibling temp file and
+    /// renames it over the target, so an interrupted save can never
+    /// truncate an existing cache.
+    pub fn save_to(&self, path: &Path) -> Result<(), String> {
         let tmp = path.with_extension("json.tmp");
         std::fs::write(&tmp, self.to_json()).map_err(|e| format!("{}: {e}", tmp.display()))?;
         std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
     }
 }
 
-fn entry_json(key: &JobKey, r: &PointResult) -> Json {
+pub(crate) fn entry_json(key: &JobKey, r: &PointResult) -> Json {
     Json::Obj(vec![
         ("config".into(), Json::str(&key.config.0)),
         ("app".into(), Json::str(&key.app)),
@@ -151,7 +177,7 @@ fn entry_json(key: &JobKey, r: &PointResult) -> Json {
     ])
 }
 
-fn entry_from_json(v: &Json) -> Result<(JobKey, PointResult), String> {
+pub(crate) fn entry_from_json(v: &Json) -> Result<(JobKey, PointResult), String> {
     let str_field = |k: &str| -> Result<String, String> {
         v.get(k)
             .and_then(Json::as_str)

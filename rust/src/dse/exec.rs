@@ -8,10 +8,22 @@
 //! (PathFinder cost/visited/heap arrays allocated once, reset per
 //! route); each interconnect configuration is built — and its routing
 //! graphs frozen to immutable CSR [`crate::ir::CompiledGraph`]s —
-//! exactly once, then shared across workers via `Arc`. Results are
-//! keyed and cached through [`ResultCache`], so a warm re-run of the
+//! exactly once per run, then shared across workers via `Arc`. Results
+//! are keyed and cached through [`ResultCache`], so a warm re-run of the
 //! same spec performs zero PnR calls (observable via
 //! [`EngineStats::pnr_runs`]).
+//!
+//! The executor is layered so the long-lived service
+//! ([`crate::service`]) can share state across concurrent sessions:
+//!
+//! - [`execute_jobs`] is the pure cold path — run a job list, no cache
+//!   involved — parameterized over an [`InterconnectSource`] so frozen
+//!   interconnects can come from a process-wide LRU instead of being
+//!   rebuilt per request;
+//! - [`run_sweep`] is the engine *handle* form: partition against a
+//!   caller-owned [`ResultCache`], execute the misses, merge, persist;
+//! - [`DseEngine`] owns a cache and some options and delegates to
+//!   [`run_sweep`] — the one-shot CLI shape.
 //!
 //! Every *routed* cold point additionally runs the flattened elastic
 //! (ready-valid) simulator on the point's own routing — channel
@@ -30,14 +42,17 @@
 //! contractually batch-size invariant: a problem's result bits depend
 //! only on the problem, never on what else shares its solve. The
 //! simulation is a deterministic function of the routed flow and the
-//! fabric, both keyed content.
+//! fabric, both keyed content. Interconnect *reuse* preserves it too:
+//! `create_uniform_interconnect` is a pure function of the config, so a
+//! warm `Arc` from an [`InterconnectSource`] is indistinguishable from
+//! a fresh build.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::area::{area_of, AreaModel};
-use crate::dsl::create_uniform_interconnect;
+use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
 use crate::ir::Interconnect;
 use crate::pnr::{
     finish_flow_scratch, prepare_point, AppGraph, FlowResult, GlobalPlacer, PlacementInstance,
@@ -91,6 +106,16 @@ pub struct EngineOptions {
     pub cache_path: Option<std::path::PathBuf>,
 }
 
+/// Resolve a worker-count option: `0` ⇒ one per available core.
+pub fn resolve_workers(workers: usize) -> usize {
+    let configured = if workers == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        workers
+    };
+    configured.max(1)
+}
+
 /// Counters for one `run` (and, accumulated, for an engine's lifetime).
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct EngineStats {
@@ -98,12 +123,18 @@ pub struct EngineStats {
     pub jobs: u64,
     /// Jobs answered from the cache.
     pub cache_hits: u64,
+    /// Jobs answered by joining another in-flight request's computation
+    /// instead of recomputing. Always zero for `DseEngine` runs — only
+    /// the service's request coalescing ([`crate::service`]) produces
+    /// joins.
+    pub coalesced: u64,
     /// Actual PnR flow executions (cold jobs). Zero on a warm re-run.
     pub pnr_runs: u64,
     /// Elastic simulations executed (routed cold jobs only — warm
     /// points reuse the cached metrics). Zero on a warm re-run.
     pub sims: u64,
-    /// Interconnects built + frozen (≤ unique configs among cold jobs).
+    /// Interconnects built + frozen (≤ unique configs among cold jobs;
+    /// an [`InterconnectSource`] serving warm `Arc`s builds fewer).
     pub configs_built: u64,
     /// Job groups a worker took from another worker's shard.
     pub steals: u64,
@@ -113,15 +144,267 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
-    fn absorb(&mut self, other: &EngineStats) {
+    pub(crate) fn absorb(&mut self, other: &EngineStats) {
         self.jobs += other.jobs;
         self.cache_hits += other.cache_hits;
+        self.coalesced += other.coalesced;
         self.pnr_runs += other.pnr_runs;
         self.sims += other.sims;
         self.configs_built += other.configs_built;
         self.steals += other.steals;
         self.batched_solves += other.batched_solves;
     }
+}
+
+/// Where the executor gets frozen interconnects. The build is a pure
+/// function of the config, so any source is behaviorally identical to
+/// [`BuildFresh`] — sharing only changes *when* the build cost is paid.
+/// Implemented by the service's process-wide LRU
+/// ([`crate::service::state`]) so concurrent sessions share warm
+/// `CompiledGraph`s.
+pub trait InterconnectSource: Sync {
+    /// The frozen interconnect for `cfg`, plus whether this call built
+    /// it (`true`) or served a warm copy (`false`).
+    fn interconnect(&self, cfg: &InterconnectConfig) -> (Arc<Interconnect>, bool);
+}
+
+/// Default source: build and freeze on every call. The executor's
+/// per-run `OnceLock` slots still guarantee at most one call per unique
+/// configuration per run.
+pub struct BuildFresh;
+
+impl InterconnectSource for BuildFresh {
+    fn interconnect(&self, cfg: &InterconnectConfig) -> (Arc<Interconnect>, bool) {
+        (Arc::new(create_uniform_interconnect(cfg)), true)
+    }
+}
+
+/// What [`execute_jobs`] produced: one result per input job (same
+/// order), the cold-side counters, and the frozen interconnects the run
+/// touched (by `InterconnectConfig::descriptor()`, for area reuse).
+pub struct ColdOutcome {
+    pub results: Vec<PointResult>,
+    /// Only the cold counters are populated (`jobs`, `cache_hits`, and
+    /// `coalesced` stay zero — the caller owns the partition).
+    pub stats: EngineStats,
+    pub interconnects: Vec<(String, Arc<Interconnect>)>,
+}
+
+/// The pure cold path: run every job in `jobs` (no cache involved) on a
+/// worker pool of `workers` threads (`0` ⇒ one per core) and return the
+/// results in input order. Jobs sharing a `key.config` descriptor form
+/// one group, drained through one batched placement solve. The caller
+/// guarantees the job list is what it wants executed — deduplication
+/// and cache partitioning happen upstream ([`run_sweep`], or the
+/// service's coalescer).
+pub fn execute_jobs(
+    jobs: &[&Job],
+    workers: usize,
+    placer: &(dyn GlobalPlacer + Sync),
+    ics: &dyn InterconnectSource,
+) -> ColdOutcome {
+    // Unique configurations among the jobs, keyed by the full config
+    // descriptor (the grouping identity: fabric and flow variants group
+    // separately even when the interconnect build is shared). Each slot
+    // is resolved through `ics` lazily by the first worker that needs
+    // it and shared via `Arc` from then on.
+    let mut cfg_slot: BTreeMap<&str, usize> = BTreeMap::new();
+    let mut configs: Vec<&InterconnectConfig> = Vec::new();
+    let mut cfg_of_job: Vec<usize> = Vec::with_capacity(jobs.len());
+    for job in jobs {
+        let slot = *cfg_slot.entry(job.key.config.0.as_str()).or_insert_with(|| {
+            configs.push(&job.cfg);
+            configs.len() - 1
+        });
+        cfg_of_job.push(slot);
+    }
+    let interconnects: Vec<OnceLock<Arc<Interconnect>>> =
+        (0..configs.len()).map(|_| OnceLock::new()).collect();
+
+    // Resolve each distinct app generator once per run; workers share
+    // the graphs read-only (generator construction is not free).
+    let mut app_graphs: BTreeMap<String, AppGraph> = BTreeMap::new();
+    for job in jobs {
+        if !app_graphs.contains_key(job.key.app.as_str()) {
+            let app = app_by_name(&job.key.app).expect("app validated by SweepSpec::jobs");
+            app_graphs.insert(job.key.app.clone(), app);
+        }
+    }
+
+    // The jobs of one configuration form one *job group* — the batching
+    // unit: the group's global-placement problems all live on the same
+    // frozen fabric and solve in one `place_batch` call. The input is in
+    // the caller's canonical order and configs dedup by slot, so
+    // grouping by slot preserves that order within and across groups.
+    let mut group_of_slot: BTreeMap<usize, usize> = BTreeMap::new();
+    let mut groups: Vec<Vec<usize>> = Vec::new();
+    for (i, &slot) in cfg_of_job.iter().enumerate() {
+        let g = *group_of_slot.entry(slot).or_insert_with(|| {
+            groups.push(Vec::new());
+            groups.len() - 1
+        });
+        groups[g].push(i);
+    }
+
+    // Shard the job groups round-robin; idle workers steal whole
+    // groups from the back of the most-loaded victim.
+    let workers = resolve_workers(workers);
+    let shards: Vec<Mutex<VecDeque<usize>>> =
+        (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
+    for k in 0..groups.len() {
+        shards[k % workers].lock().expect("shard").push_back(k);
+    }
+
+    let computed: Vec<OnceLock<PointResult>> = (0..jobs.len()).map(|_| OnceLock::new()).collect();
+    let pnr_runs = AtomicU64::new(0);
+    let sims = AtomicU64::new(0);
+    let configs_built = AtomicU64::new(0);
+    let steals = AtomicU64::new(0);
+    let batched_solves = AtomicU64::new(0);
+
+    if !jobs.is_empty() {
+        std::thread::scope(|scope| {
+            for me in 0..workers {
+                let jobs = &jobs;
+                let groups = &groups;
+                let shards = &shards;
+                let configs = &configs;
+                let interconnects = &interconnects;
+                let app_graphs = &app_graphs;
+                let cfg_of_job = &cfg_of_job;
+                let computed = &computed;
+                let pnr_runs = &pnr_runs;
+                let sims = &sims;
+                let configs_built = &configs_built;
+                let steals = &steals;
+                let batched_solves = &batched_solves;
+                scope.spawn(move || {
+                    let mut scratch = RouterScratch::new();
+                    while let Some(g) = next_group(shards, me, steals) {
+                        let group = &groups[g];
+                        let slot = cfg_of_job[group[0]];
+                        let ic = interconnects[slot].get_or_init(|| {
+                            let (ic, built) = ics.interconnect(configs[slot]);
+                            if built {
+                                configs_built.fetch_add(1, Ordering::Relaxed);
+                            }
+                            ic
+                        });
+                        // Phase 1 for every job in the group: pack +
+                        // problem construction.
+                        let prepared: Vec<crate::pnr::PreparedPoint> = group
+                            .iter()
+                            .map(|&i| {
+                                let job = jobs[i];
+                                let app = &app_graphs[job.key.app.as_str()];
+                                prepare_point(ic, app, &job.flow)
+                            })
+                            .collect();
+                        // Phase 2: ONE batched global solve for the
+                        // whole group.
+                        let batch: Vec<PlacementInstance> = prepared
+                            .iter()
+                            .map(|pp| PlacementInstance {
+                                problem: &pp.problem,
+                                xs0: &pp.xs0,
+                                ys0: &pp.ys0,
+                            })
+                            .collect();
+                        batched_solves.fetch_add(1, Ordering::Relaxed);
+                        let solved = placer.place_batch(&batch);
+                        assert_eq!(
+                            solved.len(),
+                            group.len(),
+                            "placer `{}` returned {} results for a {}-job group",
+                            placer.name(),
+                            solved.len(),
+                            group.len()
+                        );
+                        // Phase 3 per job: legalize → SA → route →
+                        // STA, reusing the worker's router scratch;
+                        // then the elastic simulation of the routed
+                        // point under the job's fabric.
+                        for ((&i, pp), (xs, ys)) in group.iter().zip(&prepared).zip(&solved) {
+                            pnr_runs.fetch_add(1, Ordering::Relaxed);
+                            let result = match finish_flow_scratch(
+                                ic,
+                                pp,
+                                xs,
+                                ys,
+                                &jobs[i].flow,
+                                &mut scratch,
+                            ) {
+                                Ok(flow) => {
+                                    let mut r = PointResult::from_flow(&flow);
+                                    sims.fetch_add(1, Ordering::Relaxed);
+                                    let app = &app_graphs[jobs[i].key.app.as_str()];
+                                    simulate_point(app, &flow, jobs[i], ic, &mut r);
+                                    r
+                                }
+                                Err(_) => PointResult::unroutable(),
+                            };
+                            let _ = computed[i].set(result);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    let stats = EngineStats {
+        pnr_runs: pnr_runs.into_inner(),
+        sims: sims.into_inner(),
+        configs_built: configs_built.into_inner(),
+        steals: steals.into_inner(),
+        batched_solves: batched_solves.into_inner(),
+        ..Default::default()
+    };
+    let results = computed
+        .into_iter()
+        .map(|cell| cell.into_inner().expect("cold job executed"))
+        .collect();
+    let interconnects = configs
+        .iter()
+        .zip(interconnects)
+        .filter_map(|(cfg, cell)| cell.into_inner().map(|ic| (cfg.descriptor(), ic)))
+        .collect();
+    ColdOutcome { results, stats, interconnects }
+}
+
+/// Per-(config, fabric) area metrics for a spec, config-major in
+/// enumeration order. Cheap (no PnR), so never cached; deterministic,
+/// so warm and cold runs render identical tables. `prebuilt` offers
+/// interconnects a cold run already froze (by
+/// `InterconnectConfig::descriptor()`); anything else comes from `ics`.
+pub fn area_points(
+    spec: &SweepSpec,
+    prebuilt: &[(String, Arc<Interconnect>)],
+    ics: &dyn InterconnectSource,
+) -> Result<Vec<AreaPoint>, String> {
+    let built: BTreeMap<&str, &Arc<Interconnect>> =
+        prebuilt.iter().map(|(d, ic)| (d.as_str(), ic)).collect();
+    let model = AreaModel::default();
+    let fabrics = spec.fabric_axis();
+    let mut areas = Vec::new();
+    for cfg in spec.configs()? {
+        let ic = match built.get(cfg.descriptor().as_str()) {
+            Some(ic) => Arc::clone(ic),
+            None => ics.interconnect(&cfg).0,
+        };
+        for &fb in &fabrics {
+            let tile = area_of(&ic, &model, fb.area_mode()).interior_tile(&ic);
+            areas.push(AreaPoint {
+                config: cfg.descriptor(),
+                fabric: fb.label(),
+                tracks: cfg.num_tracks,
+                sb_sides: cfg.sb_core_sides.0,
+                cb_sides: cfg.cb_core_sides.0,
+                sb_um2: tile.sb_um2,
+                cb_um2: tile.cb_um2,
+            });
+        }
+    }
+    Ok(areas)
 }
 
 /// Everything one sweep produced.
@@ -133,6 +416,68 @@ pub struct SweepOutcome {
     /// Per-config area metrics (when `spec.area`), in config order.
     pub areas: Vec<AreaPoint>,
     pub stats: EngineStats,
+}
+
+/// Run one sweep against a caller-owned cache — the engine-*handle*
+/// form: partition the job list into cache hits and misses, execute the
+/// misses through [`execute_jobs`], merge in canonical order, and
+/// persist the cache if anything new was computed. [`DseEngine::run`]
+/// is exactly this over the engine's own cache and a [`BuildFresh`]
+/// source; the service calls the pieces directly so it can interleave
+/// its request coalescing between partition and execution.
+pub fn run_sweep(
+    spec: &SweepSpec,
+    placer: &(dyn GlobalPlacer + Sync),
+    workers: usize,
+    cache: &mut ResultCache,
+    ics: &dyn InterconnectSource,
+) -> Result<SweepOutcome, String> {
+    let jobs = spec.jobs(placer.name())?;
+    let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
+
+    // Partition into cache hits and cold misses.
+    let mut hits: Vec<Option<PointResult>> = Vec::with_capacity(jobs.len());
+    let mut cold_jobs: Vec<&Job> = Vec::new();
+    for job in &jobs {
+        match cache.get(&job.key) {
+            Some(r) => {
+                stats.cache_hits += 1;
+                hits.push(Some(r.clone()));
+            }
+            None => {
+                hits.push(None);
+                cold_jobs.push(job);
+            }
+        }
+    }
+
+    let cold = execute_jobs(&cold_jobs, workers, placer, ics);
+    stats.absorb(&cold.stats);
+
+    // Merge in canonical job order; feed new results to the cache.
+    // Misses appear in `cold_jobs` in job order, so results zip back by
+    // sequential take.
+    let mut cold_results = cold.results.into_iter();
+    let mut points = Vec::with_capacity(jobs.len());
+    for (i, job) in jobs.into_iter().enumerate() {
+        let result = match hits[i].take() {
+            Some(r) => r,
+            None => {
+                let r = cold_results.next().expect("one result per cold job");
+                cache.insert(job.key.clone(), r.clone());
+                r
+            }
+        };
+        points.push((job, result));
+    }
+    if stats.pnr_runs > 0 {
+        cache.save()?;
+    }
+
+    let areas =
+        if spec.area { area_points(spec, &cold.interconnects, ics)? } else { Vec::new() };
+
+    Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
 }
 
 /// The DSE engine: owns the options and the result cache, so successive
@@ -161,6 +506,14 @@ impl DseEngine {
         }
     }
 
+    /// Engine over a caller-provided cache (e.g. a
+    /// [`ResultCache::snapshot`] of the service's shared cache — the
+    /// figure drivers take `&mut DseEngine`, so the service runs them on
+    /// a snapshot-backed engine and merges new entries back).
+    pub fn with_cache(opts: EngineOptions, cache: ResultCache) -> DseEngine {
+        DseEngine { opts, cache, lifetime: EngineStats::default() }
+    }
+
     pub fn cache(&self) -> &ResultCache {
         &self.cache
     }
@@ -168,15 +521,6 @@ impl DseEngine {
     /// Counters accumulated over every `run` of this engine.
     pub fn lifetime_stats(&self) -> &EngineStats {
         &self.lifetime
-    }
-
-    fn worker_count(&self) -> usize {
-        let configured = if self.opts.workers == 0 {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-        } else {
-            self.opts.workers
-        };
-        configured.max(1)
     }
 
     /// Run one sweep. Cold points fan out over the worker pool; warm
@@ -187,232 +531,9 @@ impl DseEngine {
         spec: &SweepSpec,
         placer: &(dyn GlobalPlacer + Sync),
     ) -> Result<SweepOutcome, String> {
-        let jobs = spec.jobs(placer.name())?;
-        let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
-
-        // Partition into cache hits and cold misses.
-        let mut hits: Vec<Option<PointResult>> = Vec::with_capacity(jobs.len());
-        let mut misses: Vec<usize> = Vec::new();
-        for (i, job) in jobs.iter().enumerate() {
-            match self.cache.get(&job.key) {
-                Some(r) => {
-                    stats.cache_hits += 1;
-                    hits.push(Some(r.clone()));
-                }
-                None => {
-                    hits.push(None);
-                    misses.push(i);
-                }
-            }
-        }
-
-        // Unique configurations among the cold jobs; each is built and
-        // frozen lazily by the first worker that needs it and shared via
-        // `Arc` from then on.
-        let mut cfg_slot: BTreeMap<String, usize> = BTreeMap::new();
-        let mut configs: Vec<crate::dsl::InterconnectConfig> = Vec::new();
-        let mut cfg_of_job: Vec<usize> = vec![usize::MAX; jobs.len()];
-        for &i in &misses {
-            let slot = *cfg_slot.entry(jobs[i].key.config.0.clone()).or_insert_with(|| {
-                configs.push(jobs[i].cfg.clone());
-                configs.len() - 1
-            });
-            cfg_of_job[i] = slot;
-        }
-        let interconnects: Vec<OnceLock<Arc<Interconnect>>> =
-            (0..configs.len()).map(|_| OnceLock::new()).collect();
-
-        // Resolve each distinct app generator once per run; workers share
-        // the graphs read-only (generator construction is not free).
-        let mut app_graphs: BTreeMap<String, crate::pnr::AppGraph> = BTreeMap::new();
-        for &i in &misses {
-            let key = &jobs[i].key.app;
-            if !app_graphs.contains_key(key) {
-                let app = app_by_name(key).expect("app validated by SweepSpec::jobs");
-                app_graphs.insert(key.clone(), app);
-            }
-        }
-
-        // The cold jobs of one configuration form one *job group* — the
-        // batching unit: the group's global-placement problems all live
-        // on the same frozen fabric and solve in one `place_batch` call.
-        // `misses` is in canonical job order and configs dedup by slot,
-        // so grouping by slot preserves enumeration order within and
-        // across groups.
-        let mut group_of_slot: BTreeMap<usize, usize> = BTreeMap::new();
-        let mut groups: Vec<Vec<usize>> = Vec::new();
-        for &i in &misses {
-            let g = *group_of_slot.entry(cfg_of_job[i]).or_insert_with(|| {
-                groups.push(Vec::new());
-                groups.len() - 1
-            });
-            groups[g].push(i);
-        }
-
-        // Shard the job groups round-robin; idle workers steal whole
-        // groups from the back of the most-loaded victim.
-        let workers = self.worker_count();
-        let shards: Vec<Mutex<VecDeque<usize>>> =
-            (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-        for k in 0..groups.len() {
-            shards[k % workers].lock().expect("shard").push_back(k);
-        }
-
-        let computed: Vec<OnceLock<PointResult>> =
-            (0..jobs.len()).map(|_| OnceLock::new()).collect();
-        let pnr_runs = AtomicU64::new(0);
-        let sims = AtomicU64::new(0);
-        let configs_built = AtomicU64::new(0);
-        let steals = AtomicU64::new(0);
-        let batched_solves = AtomicU64::new(0);
-
-        if !misses.is_empty() {
-            std::thread::scope(|scope| {
-                for me in 0..workers {
-                    let jobs = &jobs;
-                    let groups = &groups;
-                    let shards = &shards;
-                    let configs = &configs;
-                    let interconnects = &interconnects;
-                    let app_graphs = &app_graphs;
-                    let cfg_of_job = &cfg_of_job;
-                    let computed = &computed;
-                    let pnr_runs = &pnr_runs;
-                    let sims = &sims;
-                    let configs_built = &configs_built;
-                    let steals = &steals;
-                    let batched_solves = &batched_solves;
-                    scope.spawn(move || {
-                        let mut scratch = RouterScratch::new();
-                        while let Some(g) = next_group(shards, me, steals) {
-                            let group = &groups[g];
-                            let slot = cfg_of_job[group[0]];
-                            let ic = interconnects[slot].get_or_init(|| {
-                                configs_built.fetch_add(1, Ordering::Relaxed);
-                                Arc::new(create_uniform_interconnect(&configs[slot]))
-                            });
-                            // Phase 1 for every job in the group: pack +
-                            // problem construction.
-                            let prepared: Vec<crate::pnr::PreparedPoint> = group
-                                .iter()
-                                .map(|&i| {
-                                    let job = &jobs[i];
-                                    let app = &app_graphs[job.key.app.as_str()];
-                                    prepare_point(ic, app, &job.flow)
-                                })
-                                .collect();
-                            // Phase 2: ONE batched global solve for the
-                            // whole group.
-                            let batch: Vec<PlacementInstance> = prepared
-                                .iter()
-                                .map(|pp| PlacementInstance {
-                                    problem: &pp.problem,
-                                    xs0: &pp.xs0,
-                                    ys0: &pp.ys0,
-                                })
-                                .collect();
-                            batched_solves.fetch_add(1, Ordering::Relaxed);
-                            let solved = placer.place_batch(&batch);
-                            assert_eq!(
-                                solved.len(),
-                                group.len(),
-                                "placer `{}` returned {} results for a {}-job group",
-                                placer.name(),
-                                solved.len(),
-                                group.len()
-                            );
-                            // Phase 3 per job: legalize → SA → route →
-                            // STA, reusing the worker's router scratch;
-                            // then the elastic simulation of the routed
-                            // point under the job's fabric.
-                            for ((&i, pp), (xs, ys)) in group.iter().zip(&prepared).zip(&solved) {
-                                pnr_runs.fetch_add(1, Ordering::Relaxed);
-                                let result = match finish_flow_scratch(
-                                    ic,
-                                    pp,
-                                    xs,
-                                    ys,
-                                    &jobs[i].flow,
-                                    &mut scratch,
-                                ) {
-                                    Ok(flow) => {
-                                        let mut r = PointResult::from_flow(&flow);
-                                        sims.fetch_add(1, Ordering::Relaxed);
-                                        let app = &app_graphs[jobs[i].key.app.as_str()];
-                                        simulate_point(app, &flow, &jobs[i], ic, &mut r);
-                                        r
-                                    }
-                                    Err(_) => PointResult::unroutable(),
-                                };
-                                let _ = computed[i].set(result);
-                            }
-                        }
-                    });
-                }
-            });
-        }
-
-        stats.pnr_runs = pnr_runs.into_inner();
-        stats.sims = sims.into_inner();
-        stats.configs_built = configs_built.into_inner();
-        stats.steals = steals.into_inner();
-        stats.batched_solves = batched_solves.into_inner();
-
-        // Merge in canonical job order; feed new results to the cache.
-        let mut points = Vec::with_capacity(jobs.len());
-        for (i, job) in jobs.into_iter().enumerate() {
-            let result = match hits[i].take() {
-                Some(r) => r,
-                None => {
-                    let r = computed[i].get().expect("cold job executed").clone();
-                    self.cache.insert(job.key.clone(), r.clone());
-                    r
-                }
-            };
-            points.push((job, result));
-        }
-        if stats.pnr_runs > 0 {
-            self.cache.save()?;
-        }
-
-        // Area metrics per unique (config, fabric), config-major in
-        // enumeration order. Cheap (no PnR), so not cached;
-        // deterministic, so warm and cold runs render identical tables.
-        // Interconnects the worker pool already froze are reused by
-        // their config descriptor.
-        let mut areas = Vec::new();
-        if spec.area {
-            let built: BTreeMap<String, Arc<Interconnect>> = configs
-                .iter()
-                .zip(&interconnects)
-                .filter_map(|(cfg, cell)| {
-                    cell.get().map(|ic| (cfg.descriptor(), Arc::clone(ic)))
-                })
-                .collect();
-            let model = AreaModel::default();
-            let fabrics = spec.fabric_axis();
-            for cfg in spec.configs()? {
-                let ic = match built.get(&cfg.descriptor()) {
-                    Some(ic) => Arc::clone(ic),
-                    None => Arc::new(create_uniform_interconnect(&cfg)),
-                };
-                for &fb in &fabrics {
-                    let tile = area_of(&ic, &model, fb.area_mode()).interior_tile(&ic);
-                    areas.push(AreaPoint {
-                        config: cfg.descriptor(),
-                        fabric: fb.label(),
-                        tracks: cfg.num_tracks,
-                        sb_sides: cfg.sb_core_sides.0,
-                        cb_sides: cfg.cb_core_sides.0,
-                        sb_um2: tile.sb_um2,
-                        cb_um2: tile.cb_um2,
-                    });
-                }
-            }
-        }
-
-        self.lifetime.absorb(&stats);
-        Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
+        let out = run_sweep(spec, placer, self.opts.workers, &mut self.cache, &BuildFresh)?;
+        self.lifetime.absorb(&out.stats);
+        Ok(out)
     }
 }
 
@@ -603,6 +724,66 @@ mod tests {
         assert_eq!(warm.stats.sims, 0);
         assert_eq!(warm.stats.cache_hits, 4);
         for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb);
+        }
+    }
+
+    /// A counting source that serves every config from one pre-frozen
+    /// `Arc` — execute_jobs must produce bit-identical results whether
+    /// interconnects are fresh or warm, and must not count warm serves
+    /// as builds.
+    struct WarmSource {
+        ic: Arc<Interconnect>,
+        serves: AtomicU64,
+    }
+
+    impl InterconnectSource for WarmSource {
+        fn interconnect(&self, cfg: &InterconnectConfig) -> (Arc<Interconnect>, bool) {
+            assert_eq!(cfg.descriptor(), self.ic.descriptor);
+            self.serves.fetch_add(1, Ordering::Relaxed);
+            (Arc::clone(&self.ic), false)
+        }
+    }
+
+    #[test]
+    fn warm_interconnect_source_is_bit_identical_and_not_counted_as_build() {
+        let spec = SweepSpec { tracks: vec![4], seeds: vec![1, 2], ..quick_spec() };
+        let jobs = spec.jobs("native-gd").unwrap();
+        let job_refs: Vec<&Job> = jobs.iter().collect();
+        let fresh = execute_jobs(&job_refs, 1, &NativePlacer::default(), &BuildFresh);
+        assert_eq!(fresh.stats.configs_built, 1);
+        assert_eq!(fresh.interconnects.len(), 1);
+
+        let warm_src = WarmSource {
+            ic: Arc::clone(&fresh.interconnects[0].1),
+            serves: AtomicU64::new(0),
+        };
+        let warm = execute_jobs(&job_refs, 2, &NativePlacer::default(), &warm_src);
+        assert_eq!(warm.stats.configs_built, 0, "warm serves are not builds");
+        assert_eq!(warm_src.serves.load(Ordering::Relaxed), 1, "one serve per unique config");
+        assert_eq!(warm.stats.pnr_runs, 2);
+        assert_eq!(fresh.results, warm.results);
+    }
+
+    #[test]
+    fn run_sweep_handle_matches_engine_over_shared_cache() {
+        // The engine-handle form against a caller-owned cache is the
+        // same computation as DseEngine::run — and a second call over
+        // the *same* borrowed cache is fully warm.
+        let spec = quick_spec();
+        let mut cache = ResultCache::in_memory();
+        let cold =
+            run_sweep(&spec, &NativePlacer::default(), 2, &mut cache, &BuildFresh).unwrap();
+        assert_eq!(cold.stats.pnr_runs, 2);
+        assert_eq!(cache.len(), 2);
+        let warm =
+            run_sweep(&spec, &NativePlacer::default(), 2, &mut cache, &BuildFresh).unwrap();
+        assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.cache_hits, 2);
+        let mut engine = DseEngine::in_memory();
+        let reference = engine.run(&spec, &NativePlacer::default()).unwrap();
+        for ((ja, ra), (jb, rb)) in reference.points.iter().zip(&warm.points) {
             assert_eq!(ja.key, jb.key);
             assert_eq!(ra, rb);
         }

@@ -33,6 +33,13 @@
 //! Determinism contract: sharded results — any worker count, cache cold
 //! or warm — are bit-identical to a sequential baseline run of the same
 //! spec (asserted in `tests/dse_determinism.rs`).
+//!
+//! The executor is decomposed so the persistent daemon
+//! ([`crate::service`]) can share warm state across concurrent
+//! sessions: [`execute_jobs`] is the cache-free cold path over an
+//! [`InterconnectSource`] (the service plugs in a process-wide LRU of
+//! frozen interconnects), and [`run_sweep`] is the engine-handle form
+//! that borrows a caller-owned [`ResultCache`] instead of owning one.
 
 pub mod cache;
 pub mod exec;
@@ -40,9 +47,14 @@ pub mod report;
 pub mod spec;
 
 pub use cache::{ResultCache, CACHE_VERSION};
-pub use exec::{DseEngine, EngineOptions, EngineStats, SweepOutcome, SIM_TOKENS_CAP};
-pub use report::{areas_table, outcome_json, points_table, short_config, ResultsStore};
+pub use exec::{
+    area_points, execute_jobs, resolve_workers, run_sweep, BuildFresh, ColdOutcome, DseEngine,
+    EngineOptions, EngineStats, InterconnectSource, SweepOutcome, SIM_TOKENS_CAP,
+};
+pub use report::{
+    areas_table, outcome_json, points_table, short_config, stats_json, ResultsStore,
+};
 pub use spec::{
-    app_by_name, dense_suite_keys, suite_keys, AreaPoint, ConfigDescriptor, Job, JobKey,
-    PointResult, SeedMode, Sizing, SweepSpec,
+    app_by_name, dense_suite_keys, registry_keys, suite_keys, AreaPoint, ConfigDescriptor, Job,
+    JobKey, PointResult, SeedMode, Sizing, SweepSpec,
 };

@@ -72,10 +72,14 @@ pub fn areas_table(outcome: &SweepOutcome) -> Table {
     t
 }
 
-fn stats_json(s: &EngineStats) -> Json {
+/// Machine-readable [`EngineStats`] (also what the service's `dse`
+/// result frames embed — the loopback tests assert warm re-runs report
+/// `pnr_runs == 0 && sims == 0` through this).
+pub fn stats_json(s: &EngineStats) -> Json {
     Json::Obj(vec![
         ("jobs".into(), Json::num_u64(s.jobs)),
         ("cache_hits".into(), Json::num_u64(s.cache_hits)),
+        ("coalesced".into(), Json::num_u64(s.coalesced)),
         ("pnr_runs".into(), Json::num_u64(s.pnr_runs)),
         ("sims".into(), Json::num_u64(s.sims)),
         ("configs_built".into(), Json::num_u64(s.configs_built)),
@@ -103,6 +107,8 @@ pub fn outcome_json(outcome: &SweepOutcome) -> Json {
                 ("routed".into(), Json::Bool(r.routed)),
                 ("runtime_ns".into(), Json::num_f64(r.runtime_ns)),
                 ("critical_path_ps".into(), Json::num_f64(r.critical_path_ps)),
+                ("period_ps".into(), Json::num_f64(r.period_ps)),
+                ("latency_cycles".into(), Json::num_u64(r.latency_cycles)),
                 ("iterations".into(), Json::num_u64(r.iterations)),
                 ("nodes_used".into(), Json::num_u64(r.nodes_used)),
                 ("alpha".into(), Json::num_f64(r.alpha)),

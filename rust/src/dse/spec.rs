@@ -433,27 +433,38 @@ impl SweepSpec {
     }
 }
 
-/// Named application registry. Keys are unique and stable even where two
+/// The named application registry: ONE table read by both
+/// [`app_by_name`] and [`registry_keys`], so the resolvable keys and
+/// the advertised keys (`canal info`, the service `info` response)
+/// cannot drift apart. Keys are unique and stable even where two
 /// generators share a display name (`matmul` = `matmul(2)` from the
 /// runtime suite, `matmul3` = `matmul(3)` from the dense suite).
+const APP_REGISTRY: &[(&str, fn() -> AppGraph)] = &[
+    ("pointwise", || apps::pointwise(8)),
+    ("pointwise4", || apps::pointwise(4)),
+    ("gaussian", apps::gaussian),
+    ("harris", apps::harris),
+    ("camera", apps::camera),
+    ("resnet", apps::resnet_block),
+    ("matmul", || apps::matmul(2)),
+    ("matmul3", || apps::matmul(3)),
+    ("conv5x5", apps::conv5x5),
+    ("unsharp", apps::unsharp),
+    ("fft8", apps::fft8),
+    ("stereo", || apps::stereo(4)),
+    ("depthwise", apps::depthwise_separable),
+    ("conv_stack3", || apps::conv_stack(3)),
+];
+
+/// Resolve one registry key to a fresh application graph.
 pub fn app_by_name(key: &str) -> Option<AppGraph> {
-    Some(match key {
-        "pointwise" => apps::pointwise(8),
-        "pointwise4" => apps::pointwise(4),
-        "gaussian" => apps::gaussian(),
-        "harris" => apps::harris(),
-        "camera" => apps::camera(),
-        "resnet" => apps::resnet_block(),
-        "matmul" => apps::matmul(2),
-        "matmul3" => apps::matmul(3),
-        "conv5x5" => apps::conv5x5(),
-        "unsharp" => apps::unsharp(),
-        "fft8" => apps::fft8(),
-        "stereo" => apps::stereo(4),
-        "depthwise" => apps::depthwise_separable(),
-        "conv_stack3" => apps::conv_stack(3),
-        _ => return None,
-    })
+    APP_REGISTRY.iter().find(|(k, _)| *k == key).map(|(_, ctor)| ctor())
+}
+
+/// Every key [`app_by_name`] resolves, in registry order — what
+/// `canal info` and the service's `info` response enumerate.
+pub fn registry_keys() -> Vec<&'static str> {
+    APP_REGISTRY.iter().map(|(k, _)| *k).collect()
 }
 
 /// Registry keys matching [`apps::suite`] element-for-element.
@@ -475,6 +486,22 @@ pub fn dense_suite_keys() -> Vec<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn registry_keys_all_resolve_and_are_complete() {
+        // One table backs both functions, so resolvable ⇔ advertised by
+        // construction; what is left to check is uniqueness and that
+        // both suites stay inside the registry.
+        let keys = registry_keys();
+        let unique: std::collections::BTreeSet<_> = keys.iter().collect();
+        assert_eq!(unique.len(), keys.len(), "registry keys must be unique");
+        for k in &keys {
+            assert!(app_by_name(k).is_some(), "registry key `{k}` does not resolve");
+        }
+        for k in suite_keys().iter().chain(dense_suite_keys().iter()) {
+            assert!(keys.contains(&k.as_str()), "suite key `{k}` missing from registry");
+        }
+    }
 
     #[test]
     fn registry_covers_both_suites() {

@@ -28,6 +28,11 @@
 //!   work-stealing worker pool that drains each per-config job group
 //!   through one batched placement solve, and a
 //!   `(config, app, seed)`-keyed result cache with JSON persistence;
+//! - [`service`] — the persistent daemon (`canal serve`): a TCP server
+//!   with a newline-delimited JSON protocol, concurrent sessions over
+//!   one shared warm state (LRU of frozen interconnects, one result
+//!   cache, one placer backend), and coalescing of overlapping in-flight
+//!   `dse` requests;
 //! - [`util`] — self-contained support code (deterministic RNG, JSON,
 //!   benchmarking, property-test harness).
 //!
@@ -41,7 +46,9 @@
 //! - `docs/dse.md` — sweep specs, `ConfigDescriptor` keying, the batched
 //!   placement contract, and the `dse_cache.json` format;
 //! - `docs/cli.md` — the `canal` CLI reference (`canal help` prints the
-//!   same usage block).
+//!   same usage block);
+//! - `docs/service.md` — the daemon: protocol frames, state-sharing and
+//!   coalescing rules, shutdown semantics.
 //!
 //! The per-module rustdoc (start at the list above) is the normative
 //! reference for invariants; the `docs/` pages are the narrative tour.
@@ -56,5 +63,6 @@ pub mod hw;
 pub mod ir;
 pub mod pnr;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod util;

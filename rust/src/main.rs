@@ -15,6 +15,10 @@
 //!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
 //!           [--workers N] [--cache FILE] [--no-cache] [--json FILE]
+//! canal serve [--addr HOST:PORT] [--workers N] [--conn-threads N]
+//!             [--cache FILE] [--no-cache] [--ic-cap N] [--port-file FILE]
+//! canal client --addr HOST:PORT ping|info|stats|shutdown|dse|area|pnr|simulate
+//!             |generate|figure [--flags]
 //! canal info
 //! canal help         (also: canal --help)
 //! ```
@@ -37,14 +41,16 @@ use std::process::ExitCode;
 use canal::apps;
 use canal::bitstream::{encode, Configuration};
 use canal::coordinator::{self, ExpOptions};
-use canal::dse::{
-    points_table, DseEngine, EngineOptions, ResultsStore, SeedMode, Sizing, SweepSpec,
-};
+use canal::dse::{points_table, DseEngine, EngineOptions, ResultsStore, SweepSpec};
 use canal::dsl::spec::{emit_spec, parse_spec};
 use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMode, SbTopology};
 use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
 use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams};
+use canal::service::{
+    Client, DseParams, GenParams, Request, ServeOptions, Server, SimParams, StateOptions,
+};
 use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
+use canal::util::json::Json;
 
 /// Flags that never take a value — without this list, a bare word after
 /// one of them (e.g. `canal dse --no-cache figures`) would be swallowed
@@ -323,6 +329,32 @@ fn parse_list<T, F: Fn(&str) -> Option<T>>(
     }
 }
 
+/// The shared axis-flag → sweep-parameter mapping. `canal dse` turns
+/// the result into a spec locally; `canal client dse` ships it to a
+/// daemon — same flags, same semantics, same results.
+fn dse_params_from_args(args: &Args) -> Result<DseParams, String> {
+    let d = DseParams::default();
+    Ok(DseParams {
+        name: d.name,
+        width: args.get("width").and_then(|v| v.parse().ok()).unwrap_or(d.width),
+        height: args.get("height").and_then(|v| v.parse().ok()).unwrap_or(d.height),
+        mem_period: args.get("mem-period").and_then(|v| v.parse().ok()).unwrap_or(d.mem_period),
+        tracks: parse_list(args, "tracks", |s| s.parse().ok())?,
+        topologies: parse_list(args, "topologies", SbTopology::parse)?,
+        out_tracks: parse_list(args, "out-tracks", OutputTrackMode::parse)?,
+        sb_sides: parse_list(args, "sb-sides", |s| s.parse().ok())?,
+        cb_sides: parse_list(args, "cb-sides", |s| s.parse().ok())?,
+        fabrics: parse_list(args, "fabric", FabricKind::parse)?,
+        apps: parse_list(args, "apps", |s| Some(s.to_string()))?,
+        seed: args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(d.seed),
+        seeds: args.get("seeds").and_then(|v| v.parse().ok()).unwrap_or(d.seeds),
+        derived_seeds: args.has("derived-seeds"),
+        tight: args.get("tight").and_then(|v| v.parse().ok()),
+        sa_moves: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(d.sa_moves),
+        area: args.has("area"),
+    })
+}
+
 /// `canal dse --smoke`: the CI end-to-end check. A tiny 4x4 sweep on two
 /// workers, run cold then warm against a throwaway cache file; fails if
 /// the warm pass performs any PnR.
@@ -430,43 +462,11 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
         return dse_figures(args, &mut engine);
     }
 
-    // Ad-hoc sweep from axis flags.
-    let seed0: u64 = args.get("seed").and_then(|v| v.parse().ok()).unwrap_or(1);
-    let n_seeds: u64 = args.get("seeds").and_then(|v| v.parse().ok()).unwrap_or(1);
-    let mut base = InterconnectConfig {
-        width: args.get("width").and_then(|v| v.parse().ok()).unwrap_or(8),
-        height: args.get("height").and_then(|v| v.parse().ok()).unwrap_or(8),
-        mem_column_period: 3,
-        ..Default::default()
-    };
-    if let Some(period) = args.get("mem-period").and_then(|v| v.parse().ok()) {
-        base.mem_column_period = period;
-    }
-    let spec = SweepSpec {
-        name: "cli".into(),
-        base,
-        tracks: parse_list(args, "tracks", |s| s.parse().ok())?,
-        topologies: parse_list(args, "topologies", SbTopology::parse)?,
-        output_tracks: parse_list(args, "out-tracks", OutputTrackMode::parse)?,
-        sb_sides: parse_list(args, "sb-sides", |s| s.parse().ok())?,
-        cb_sides: parse_list(args, "cb-sides", |s| s.parse().ok())?,
-        fabrics: parse_list(args, "fabric", FabricKind::parse)?,
-        sizing: match args.get("tight").and_then(|v| v.parse().ok()) {
-            Some(slack) => Sizing::TightArray { slack },
-            None => Sizing::Fixed,
-        },
-        apps: parse_list(args, "apps", |s| Some(s.to_string()))?,
-        seeds: (0..n_seeds).map(|i| seed0 + i).collect(),
-        seed_mode: if args.has("derived-seeds") { SeedMode::Derived } else { SeedMode::Raw },
-        flow: canal::pnr::FlowParams {
-            sa: SaParams {
-                moves_per_node: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
-                ..Default::default()
-            },
-            ..Default::default()
-        },
-        area: args.has("area"),
-    };
+    // Ad-hoc sweep from axis flags. `DseParams` is the service
+    // protocol's sweep-request type; building the CLI spec through it
+    // keeps `canal dse` and a daemon `dse` request on ONE construction
+    // path — the bit-identity contract between the two depends on that.
+    let spec = dse_params_from_args(args)?.to_spec();
     if spec.apps.is_empty() && !spec.area {
         return Err("nothing to do: pass --apps a,b,c and/or --area".into());
     }
@@ -489,6 +489,10 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
 
 fn cmd_info() -> Result<(), String> {
     println!("canal {} — CGRA interconnect generator", env!("CARGO_PKG_VERSION"));
+    // Compiled feature flags + the placement backend `auto` would pick:
+    // what a service deployment needs to know before issuing work.
+    println!("  features: pjrt={}", if cfg!(feature = "pjrt") { "on" } else { "off" });
+    println!("  placer backend: {}", coordinator::backend_summary());
     match canal::runtime::PjrtPlacer::load_default() {
         Ok(p) => {
             let m = p.meta();
@@ -503,7 +507,106 @@ fn cmd_info() -> Result<(), String> {
         }
         Err(e) => println!("  pjrt: unavailable ({e})"),
     }
-    println!("  apps: pointwise gaussian harris camera resnet matmul");
+    println!("  apps: {}", canal::dse::registry_keys().join(" "));
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let cache_path = if args.has("no-cache") {
+        None
+    } else {
+        Some(args.get("cache").unwrap_or("dse_cache.json").into())
+    };
+    let opts = ServeOptions {
+        addr: args.get("addr").unwrap_or("127.0.0.1:9000").to_string(),
+        conn_threads: args.get("conn-threads").and_then(|v| v.parse().ok()).unwrap_or(0),
+        state: StateOptions {
+            workers: args.get("workers").and_then(|v| v.parse().ok()).unwrap_or(0),
+            cache_path,
+            ic_capacity: args.get("ic-cap").and_then(|v| v.parse().ok()).unwrap_or(32),
+        },
+        port_file: args.get("port-file").map(Into::into),
+    };
+    let server = Server::bind(opts)?;
+    let addr = server.local_addr()?;
+    println!("canal serve: listening on {addr}");
+    println!("  placer backend: {}", server.state().placer_name());
+    server.run()?;
+    println!("canal serve: drained and flushed, exiting");
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<(), String> {
+    let addr = args.get("addr").ok_or("--addr HOST:PORT required")?;
+    let sub = args.positional.get(1).map(String::as_str).ok_or(
+        "client: missing command \
+         (ping|info|stats|generate|pnr|simulate|dse|area|figure|shutdown)",
+    )?;
+    let req = match sub {
+        "ping" => Request::Ping,
+        "info" => Request::Info,
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        "dse" => Request::Dse(dse_params_from_args(args)?),
+        "area" => Request::Area(dse_params_from_args(args)?),
+        "pnr" => {
+            let app = args.get("app").ok_or("--app required")?;
+            let mut p = dse_params_from_args(args)?;
+            p.apps = vec![app.to_string()];
+            Request::Pnr(p)
+        }
+        "simulate" => {
+            let raw = args.get("fabric").unwrap_or("rv-split");
+            Request::Simulate(SimParams {
+                app: args.get("app").ok_or("--app required")?.to_string(),
+                fabric: FabricKind::parse(raw)
+                    .ok_or_else(|| format!("unknown fabric `{raw}`"))?,
+                tokens: args.get("tokens").and_then(|v| v.parse().ok()).unwrap_or(64),
+            })
+        }
+        "generate" => {
+            let d = GenParams::default();
+            Request::Generate(GenParams {
+                width: args.get("width").and_then(|v| v.parse().ok()).unwrap_or(d.width),
+                height: args.get("height").and_then(|v| v.parse().ok()).unwrap_or(d.height),
+                mem_period: args
+                    .get("mem-period")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(d.mem_period),
+                tracks: args.get("tracks").and_then(|v| v.parse().ok()),
+                topology: match args.get("topology") {
+                    None => None,
+                    Some(s) => Some(
+                        SbTopology::parse(s).ok_or_else(|| format!("unknown topology `{s}`"))?,
+                    ),
+                },
+                backend: args.get("backend").unwrap_or("static").to_string(),
+            })
+        }
+        "figure" => Request::Figure {
+            which: args
+                .positional
+                .get(2)
+                .cloned()
+                .ok_or("client figure: name one of fig7|fig8|fig9|fig10|fig11|fig14|fig15")?,
+            sa_moves: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(12),
+        },
+        other => return Err(format!("unknown client command `{other}`")),
+    };
+    let mut client = Client::connect(addr)?;
+    let data = client.call_with(&req, |msg| eprintln!("… {msg}"))?;
+    // Prefer server-rendered tables; fall back to the raw JSON record.
+    if let Some(table) = data.get("table").and_then(Json::as_str) {
+        if let Some(at) = data.get("areas_table").and_then(Json::as_str) {
+            println!("{at}");
+        }
+        println!("{table}");
+        if let Some(stats) = data.get("stats") {
+            println!("stats: {}", stats.render_line());
+        }
+    } else {
+        println!("{}", data.render_line());
+    }
     Ok(())
 }
 
@@ -538,10 +641,20 @@ commands:
               engine: --workers N  --cache FILE  --no-cache  --json FILE
   dse figures  regenerate fig07/08/09/10/11/14/15 through one shared result cache
   dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
-  info        version, PJRT artifact status, app registry
+  serve       persistent daemon: concurrent sessions, one shared warm cache,
+              coalesced in-flight sweeps (newline-delimited JSON over TCP)
+              --addr HOST:PORT  --workers N  --conn-threads N  --cache FILE
+              --no-cache  --ic-cap N  --port-file FILE
+  client      one scripted request against a running daemon
+              --addr HOST:PORT  then: ping|info|stats|shutdown
+              dse|area [dse axis flags]   pnr --app NAME   figure figN
+              simulate --app NAME --fabric F --tokens N
+              generate --width W --height H --tracks T --topology T --backend static|rv
+  info        version, compiled features, active placer backend, app registry
   help        this message
 
-see docs/cli.md for the full reference and docs/dse.md for the DSE engine.";
+see docs/cli.md for the full reference, docs/dse.md for the DSE engine,
+and docs/service.md for the daemon protocol.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -559,6 +672,8 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "experiment" => cmd_experiment(&args),
         "dse" => cmd_dse(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
         "info" => cmd_info(),
         _ => {
             eprintln!("{USAGE}");

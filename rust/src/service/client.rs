@@ -1,0 +1,71 @@
+//! Thin blocking client for the Canal daemon: one TCP connection,
+//! strictly sequential request/response exchanges in the NDJSON framing
+//! of [`super::proto`]. Powers `canal client` and the loopback tests;
+//! scripted callers can equally speak the protocol with `nc`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::proto::{self, Frame, Request};
+
+/// How long a client waits for the next frame before giving up — long,
+/// because a cold `dse` request legitimately computes for a while, but
+/// finite, so a dead server cannot hang a script forever.
+const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// One connection to a running daemon.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client, String> {
+        let stream = TcpStream::connect(addr).map_err(|e| format!("connect {addr}: {e}"))?;
+        stream
+            .set_read_timeout(Some(DEFAULT_READ_TIMEOUT))
+            .map_err(|e| e.to_string())?;
+        let reader = BufReader::new(stream.try_clone().map_err(|e| e.to_string())?);
+        Ok(Client { writer: stream, reader, next_id: 0 })
+    }
+
+    /// Send one request and block for its terminal frame, discarding
+    /// progress.
+    pub fn call(&mut self, req: &Request) -> Result<Json, String> {
+        self.call_with(req, |_| {})
+    }
+
+    /// Send one request; stream progress messages into `on_progress`;
+    /// return the result data, or the server's error as `Err`.
+    pub fn call_with<F: FnMut(&str)>(
+        &mut self,
+        req: &Request,
+        mut on_progress: F,
+    ) -> Result<Json, String> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let mut line = proto::request_line(id, req);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        loop {
+            match self.read_frame()? {
+                Frame::Progress { message, .. } => on_progress(&message),
+                Frame::Result { data, .. } => return Ok(data),
+                Frame::Error { error, .. } => return Err(error),
+            }
+        }
+    }
+
+    fn read_frame(&mut self) -> Result<Frame, String> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line).map_err(|e| format!("recv: {e}"))?;
+        if n == 0 {
+            return Err("connection closed by server".into());
+        }
+        Frame::parse(line.trim_end_matches(['\n', '\r']))
+    }
+}

@@ -1,0 +1,46 @@
+//! The persistent Canal daemon (`canal serve`): concurrent sessions,
+//! shared warm caches, and request coalescing over the DSE engine.
+//!
+//! Every other entry point in this crate is a one-shot process: it
+//! rebuilds interconnects, pays the CSR freeze cost, loads the result
+//! cache from disk, and throws all of it away on exit. Automated CGRA
+//! design-space exploration is the opposite workload — many small
+//! queries against one model — so this module keeps the model resident:
+//!
+//! - [`state`] — the process-wide [`SessionState`]: an LRU of frozen
+//!   interconnects, ONE result cache with periodic persistence, ONE
+//!   placement backend, and the in-flight table that coalesces
+//!   overlapping `dse` requests (each `(config, app, seed)` point is
+//!   computed at most once per daemon lifetime, whatever the
+//!   concurrency);
+//! - [`proto`] — the newline-delimited JSON protocol: typed requests
+//!   (`generate`, `pnr`, `simulate`, `dse`, `area`, `figure`, plus
+//!   `ping`/`info`/`stats`/`shutdown`) and streamed response frames
+//!   (progress events, then one terminal result or error);
+//! - [`server`] — `std::net::TcpListener` + a connection worker pool,
+//!   with graceful drain on `shutdown` requests and SIGTERM/SIGINT
+//!   (in-flight jobs finish, the cache is flushed, exit is clean);
+//! - [`client`] — the thin blocking client behind `canal client`.
+//!
+//! Everything is `std`-only, consistent with the crate's offline
+//! dependency set.
+//!
+//! Contract (asserted by `tests/service_e2e.rs`): results served by the
+//! daemon are **bit-identical** to the sequential `canal dse` path for
+//! the same parameters — [`proto::DseParams::to_spec`] is the shared
+//! spec construction, and the shared-state executor is the same
+//! deterministic [`crate::dse`] machinery — and a repeated identical
+//! request performs zero PnR calls and zero simulations, observable
+//! through the `stats` frames.
+//!
+//! The narrative protocol reference lives in `docs/service.md`.
+
+pub mod client;
+pub mod proto;
+pub mod server;
+pub mod state;
+
+pub use client::Client;
+pub use proto::{DseParams, Frame, GenParams, Request, SimParams, PROTO_VERSION};
+pub use server::{signaled, ServeOptions, Server};
+pub use state::{IcLru, ServiceStats, SessionState, StateOptions};

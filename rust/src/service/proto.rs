@@ -1,0 +1,706 @@
+//! The wire protocol of the Canal daemon: newline-delimited JSON
+//! ("NDJSON") frames over a TCP stream.
+//!
+//! ## Framing
+//!
+//! Every frame — request or response — is exactly one line: a JSON
+//! object rendered by [`Json::render_line`] (which guarantees no
+//! embedded `\n`/`\r` byte) followed by one `\n`. A reader therefore
+//! splits on `\n` and parses each line independently; no length
+//! prefixes, no continuation state.
+//!
+//! ## Requests
+//!
+//! `{"id": <u64>, "cmd": "<name>", ...params}` — the `id` is chosen by
+//! the client and echoed on every response frame, so a client can match
+//! responses even though the server handles one request per connection
+//! at a time. Commands: `ping`, `info`, `stats`, `generate`, `pnr`,
+//! `simulate`, `dse`, `area`, `figure`, `shutdown` (see [`Request`]).
+//!
+//! ## Responses
+//!
+//! A request produces zero or more *progress* frames followed by
+//! exactly one terminal frame — *result* or *error*:
+//!
+//! ```json
+//! {"id":7,"frame":"progress","message":"12 jobs: 8 cached, 4 cold"}
+//! {"id":7,"frame":"result","data":{...}}
+//! {"id":7,"frame":"error","error":"unknown app `nope`"}
+//! ```
+//!
+//! A line the server cannot parse at all is answered with an error
+//! frame carrying `id: 0`, after which the server closes the
+//! connection (framing state is no longer trustworthy).
+//!
+//! ## Sweep parameters
+//!
+//! [`DseParams`] is the wire form of a sweep request. Its fields mirror
+//! the `canal dse` CLI flags one-for-one and `to_spec` is the single
+//! construction path shared by the CLI and the daemon — which is what
+//! makes daemon responses bit-identical to the one-shot `canal dse`
+//! path for the same parameters.
+
+use crate::dse::{PointResult, SeedMode, Sizing, SweepSpec};
+use crate::dsl::{InterconnectConfig, OutputTrackMode, SbTopology};
+use crate::pnr::{FlowParams, SaParams};
+use crate::sim::FabricKind;
+use crate::util::json::Json;
+
+/// Protocol schema version, reported by `ping` and `info`.
+pub const PROTO_VERSION: u64 = 1;
+
+/// One parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Liveness check; returns `{"pong":true,"proto":1}`.
+    Ping,
+    /// Server build/configuration report (version, features, placer
+    /// backend, app registry).
+    Info,
+    /// Cumulative [`service-wide counters`](super::state::ServiceStats)
+    /// plus cache occupancy.
+    Stats,
+    /// Build an interconnect and report its shape.
+    Generate(GenParams),
+    /// Place-and-route a single application: a one-job sweep through
+    /// the shared cache (`params.apps` must name exactly one app).
+    Pnr(DseParams),
+    /// Cycle-accurate elastic simulation of one application graph.
+    Simulate(SimParams),
+    /// A full design-space sweep.
+    Dse(DseParams),
+    /// Area-only sweep (`params.area` is implied; `apps` ignored).
+    Area(DseParams),
+    /// Regenerate one engine-backed paper figure through the shared
+    /// cache.
+    Figure { which: String, sa_moves: usize },
+    /// Graceful drain: finish in-flight work, flush the cache, exit.
+    Shutdown,
+}
+
+/// `generate` request parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenParams {
+    pub width: u16,
+    pub height: u16,
+    pub mem_period: u16,
+    pub tracks: Option<u16>,
+    pub topology: Option<SbTopology>,
+    /// `static` or `rv` (the two hardware lowering backends).
+    pub backend: String,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            width: 8,
+            height: 8,
+            mem_period: 3,
+            tracks: None,
+            topology: None,
+            backend: "static".into(),
+        }
+    }
+}
+
+impl GenParams {
+    pub fn config(&self) -> InterconnectConfig {
+        let mut cfg = InterconnectConfig {
+            width: self.width,
+            height: self.height,
+            mem_column_period: self.mem_period,
+            ..Default::default()
+        };
+        if let Some(t) = self.tracks {
+            cfg.num_tracks = t;
+        }
+        if let Some(topo) = self.topology {
+            cfg.sb_topology = topo;
+        }
+        cfg
+    }
+}
+
+/// `simulate` request parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SimParams {
+    pub app: String,
+    pub fabric: FabricKind,
+    pub tokens: usize,
+}
+
+impl Default for SimParams {
+    fn default() -> Self {
+        SimParams { app: String::new(), fabric: FabricKind::RvSplitFifo, tokens: 64 }
+    }
+}
+
+/// Wire form of one sweep request. Field-for-field the `canal dse` CLI
+/// flags; [`DseParams::to_spec`] is the shared construction path, so a
+/// daemon request and a CLI invocation with the same values produce the
+/// same [`SweepSpec`] — and therefore the same job keys and results.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DseParams {
+    pub name: String,
+    pub width: u16,
+    pub height: u16,
+    pub mem_period: u16,
+    pub tracks: Vec<u16>,
+    pub topologies: Vec<SbTopology>,
+    pub out_tracks: Vec<OutputTrackMode>,
+    pub sb_sides: Vec<u8>,
+    pub cb_sides: Vec<u8>,
+    pub fabrics: Vec<FabricKind>,
+    pub apps: Vec<String>,
+    /// First logical seed; the axis is `seed .. seed + seeds`.
+    pub seed: u64,
+    pub seeds: u64,
+    pub derived_seeds: bool,
+    pub tight: Option<f64>,
+    pub sa_moves: usize,
+    pub area: bool,
+}
+
+impl Default for DseParams {
+    fn default() -> Self {
+        DseParams {
+            name: "cli".into(),
+            width: 8,
+            height: 8,
+            mem_period: 3,
+            tracks: vec![],
+            topologies: vec![],
+            out_tracks: vec![],
+            sb_sides: vec![],
+            cb_sides: vec![],
+            fabrics: vec![],
+            apps: vec![],
+            seed: 1,
+            seeds: 1,
+            derived_seeds: false,
+            tight: None,
+            sa_moves: 12,
+            area: false,
+        }
+    }
+}
+
+impl DseParams {
+    /// The resolved sweep spec — identical construction to `canal dse`.
+    pub fn to_spec(&self) -> SweepSpec {
+        SweepSpec {
+            name: self.name.clone(),
+            base: InterconnectConfig {
+                width: self.width,
+                height: self.height,
+                mem_column_period: self.mem_period,
+                ..Default::default()
+            },
+            tracks: self.tracks.clone(),
+            topologies: self.topologies.clone(),
+            output_tracks: self.out_tracks.clone(),
+            sb_sides: self.sb_sides.clone(),
+            cb_sides: self.cb_sides.clone(),
+            fabrics: self.fabrics.clone(),
+            sizing: match self.tight {
+                Some(slack) => Sizing::TightArray { slack },
+                None => Sizing::Fixed,
+            },
+            apps: self.apps.clone(),
+            seeds: (0..self.seeds).map(|i| self.seed + i).collect(),
+            seed_mode: if self.derived_seeds { SeedMode::Derived } else { SeedMode::Raw },
+            flow: FlowParams {
+                sa: SaParams { moves_per_node: self.sa_moves, ..Default::default() },
+                ..Default::default()
+            },
+            area: self.area,
+        }
+    }
+
+    fn to_members(&self) -> Vec<(String, Json)> {
+        vec![
+            ("name".into(), Json::str(&self.name)),
+            ("width".into(), Json::num_u64(self.width as u64)),
+            ("height".into(), Json::num_u64(self.height as u64)),
+            ("mem_period".into(), Json::num_u64(self.mem_period as u64)),
+            ("tracks".into(), num_list(self.tracks.iter().map(|&t| t as u64))),
+            (
+                "topologies".into(),
+                str_list(self.topologies.iter().map(|t| t.name().to_string())),
+            ),
+            (
+                "out_tracks".into(),
+                str_list(self.out_tracks.iter().map(|m| m.name().to_string())),
+            ),
+            ("sb_sides".into(), num_list(self.sb_sides.iter().map(|&s| s as u64))),
+            ("cb_sides".into(), num_list(self.cb_sides.iter().map(|&s| s as u64))),
+            ("fabrics".into(), str_list(self.fabrics.iter().map(|f| f.label()))),
+            ("apps".into(), str_list(self.apps.iter().cloned())),
+            ("seed".into(), Json::num_u64(self.seed)),
+            ("seeds".into(), Json::num_u64(self.seeds)),
+            ("derived_seeds".into(), Json::Bool(self.derived_seeds)),
+            (
+                "tight".into(),
+                match self.tight {
+                    Some(s) => Json::num_f64(s),
+                    None => Json::Null,
+                },
+            ),
+            ("sa_moves".into(), Json::num_u64(self.sa_moves as u64)),
+            ("area".into(), Json::Bool(self.area)),
+        ]
+    }
+
+    /// Read the params out of a request object; absent fields take the
+    /// CLI defaults, present-but-malformed fields are loud.
+    pub fn from_json(v: &Json) -> Result<DseParams, String> {
+        let d = DseParams::default();
+        Ok(DseParams {
+            name: opt_str(v, "name")?.unwrap_or(d.name),
+            width: opt_u16(v, "width")?.unwrap_or(d.width),
+            height: opt_u16(v, "height")?.unwrap_or(d.height),
+            mem_period: opt_u16(v, "mem_period")?.unwrap_or(d.mem_period),
+            tracks: opt_num_list(v, "tracks", |n| u16::try_from(n).ok())?,
+            topologies: opt_parsed_list(v, "topologies", SbTopology::parse)?,
+            out_tracks: opt_parsed_list(v, "out_tracks", OutputTrackMode::parse)?,
+            sb_sides: opt_num_list(v, "sb_sides", |n| u8::try_from(n).ok())?,
+            cb_sides: opt_num_list(v, "cb_sides", |n| u8::try_from(n).ok())?,
+            fabrics: opt_parsed_list(v, "fabrics", FabricKind::parse)?,
+            apps: opt_parsed_list(v, "apps", |s| Some(s.to_string()))?,
+            seed: opt_u64(v, "seed")?.unwrap_or(d.seed),
+            seeds: opt_u64(v, "seeds")?.unwrap_or(d.seeds),
+            derived_seeds: opt_bool(v, "derived_seeds")?.unwrap_or(d.derived_seeds),
+            tight: opt_f64(v, "tight")?,
+            sa_moves: opt_u64(v, "sa_moves")?.map(|n| n as usize).unwrap_or(d.sa_moves),
+            area: opt_bool(v, "area")?.unwrap_or(d.area),
+        })
+    }
+}
+
+/// Serialize one request as a single frame line (no trailing newline).
+pub fn request_line(id: u64, req: &Request) -> String {
+    let mut members = vec![("id".to_string(), Json::num_u64(id))];
+    let cmd = |members: &mut Vec<(String, Json)>, name: &str| {
+        members.push(("cmd".into(), Json::str(name)));
+    };
+    match req {
+        Request::Ping => cmd(&mut members, "ping"),
+        Request::Info => cmd(&mut members, "info"),
+        Request::Stats => cmd(&mut members, "stats"),
+        Request::Shutdown => cmd(&mut members, "shutdown"),
+        Request::Generate(g) => {
+            cmd(&mut members, "generate");
+            members.push(("width".into(), Json::num_u64(g.width as u64)));
+            members.push(("height".into(), Json::num_u64(g.height as u64)));
+            members.push(("mem_period".into(), Json::num_u64(g.mem_period as u64)));
+            if let Some(t) = g.tracks {
+                members.push(("tracks".into(), Json::num_u64(t as u64)));
+            }
+            if let Some(topo) = g.topology {
+                members.push(("topology".into(), Json::str(topo.name())));
+            }
+            members.push(("backend".into(), Json::str(&g.backend)));
+        }
+        Request::Simulate(s) => {
+            cmd(&mut members, "simulate");
+            members.push(("app".into(), Json::str(&s.app)));
+            members.push(("fabric".into(), Json::str(&s.fabric.label())));
+            members.push(("tokens".into(), Json::num_u64(s.tokens as u64)));
+        }
+        Request::Pnr(p) => {
+            cmd(&mut members, "pnr");
+            members.extend(p.to_members());
+        }
+        Request::Dse(p) => {
+            cmd(&mut members, "dse");
+            members.extend(p.to_members());
+        }
+        Request::Area(p) => {
+            cmd(&mut members, "area");
+            members.extend(p.to_members());
+        }
+        Request::Figure { which, sa_moves } => {
+            cmd(&mut members, "figure");
+            members.push(("which".into(), Json::str(which)));
+            members.push(("sa_moves".into(), Json::num_u64(*sa_moves as u64)));
+        }
+    }
+    Json::Obj(members).render_line()
+}
+
+/// Parse one request line into `(id, request)`.
+pub fn parse_request(line: &str) -> Result<(u64, Request), String> {
+    let v = Json::parse(line)?;
+    let id = v.get("id").and_then(Json::as_u64).ok_or("missing `id`")?;
+    let cmd = v.get("cmd").and_then(Json::as_str).ok_or("missing `cmd`")?;
+    let req = match cmd {
+        "ping" => Request::Ping,
+        "info" => Request::Info,
+        "stats" => Request::Stats,
+        "shutdown" => Request::Shutdown,
+        "generate" => {
+            let d = GenParams::default();
+            Request::Generate(GenParams {
+                width: opt_u16(&v, "width")?.unwrap_or(d.width),
+                height: opt_u16(&v, "height")?.unwrap_or(d.height),
+                mem_period: opt_u16(&v, "mem_period")?.unwrap_or(d.mem_period),
+                tracks: opt_u16(&v, "tracks")?,
+                topology: match opt_str(&v, "topology")? {
+                    None => None,
+                    Some(s) => {
+                        Some(SbTopology::parse(&s).ok_or_else(|| format!("bad topology `{s}`"))?)
+                    }
+                },
+                backend: opt_str(&v, "backend")?.unwrap_or(d.backend),
+            })
+        }
+        "simulate" => {
+            let d = SimParams::default();
+            Request::Simulate(SimParams {
+                app: opt_str(&v, "app")?.ok_or("simulate: missing `app`")?,
+                fabric: match opt_str(&v, "fabric")? {
+                    None => d.fabric,
+                    Some(s) => {
+                        FabricKind::parse(&s).ok_or_else(|| format!("bad fabric `{s}`"))?
+                    }
+                },
+                tokens: opt_u64(&v, "tokens")?.map(|n| n as usize).unwrap_or(d.tokens),
+            })
+        }
+        "pnr" => Request::Pnr(DseParams::from_json(&v)?),
+        "dse" => Request::Dse(DseParams::from_json(&v)?),
+        "area" => Request::Area(DseParams::from_json(&v)?),
+        "figure" => Request::Figure {
+            which: opt_str(&v, "which")?.ok_or("figure: missing `which`")?,
+            sa_moves: opt_u64(&v, "sa_moves")?.map(|n| n as usize).unwrap_or(12),
+        },
+        other => return Err(format!("unknown cmd `{other}`")),
+    };
+    Ok((id, req))
+}
+
+/// One server→client frame.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Progress { id: u64, message: String },
+    Result { id: u64, data: Json },
+    Error { id: u64, error: String },
+}
+
+impl Frame {
+    pub fn id(&self) -> u64 {
+        match self {
+            Frame::Progress { id, .. } | Frame::Result { id, .. } | Frame::Error { id, .. } => {
+                *id
+            }
+        }
+    }
+
+    /// `true` for the frame that ends a request (result or error).
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, Frame::Progress { .. })
+    }
+
+    /// Serialize as a single line (no trailing newline). The
+    /// [`Json::render_line`] guarantee is what keeps arbitrary error
+    /// text and table content from breaking the framing.
+    pub fn to_line(&self) -> String {
+        let v = match self {
+            Frame::Progress { id, message } => Json::Obj(vec![
+                ("id".into(), Json::num_u64(*id)),
+                ("frame".into(), Json::str("progress")),
+                ("message".into(), Json::str(message)),
+            ]),
+            Frame::Result { id, data } => Json::Obj(vec![
+                ("id".into(), Json::num_u64(*id)),
+                ("frame".into(), Json::str("result")),
+                ("data".into(), data.clone()),
+            ]),
+            Frame::Error { id, error } => Json::Obj(vec![
+                ("id".into(), Json::num_u64(*id)),
+                ("frame".into(), Json::str("error")),
+                ("error".into(), Json::str(error)),
+            ]),
+        };
+        v.render_line()
+    }
+
+    pub fn parse(line: &str) -> Result<Frame, String> {
+        let v = Json::parse(line)?;
+        let id = v.get("id").and_then(Json::as_u64).ok_or("frame: missing `id`")?;
+        match v.get("frame").and_then(Json::as_str) {
+            Some("progress") => Ok(Frame::Progress {
+                id,
+                message: v
+                    .get("message")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+            }),
+            Some("result") => {
+                Ok(Frame::Result { id, data: v.get("data").cloned().unwrap_or(Json::Null) })
+            }
+            Some("error") => Ok(Frame::Error {
+                id,
+                error: v
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified error")
+                    .to_string(),
+            }),
+            _ => Err("frame: missing or unknown `frame` kind".into()),
+        }
+    }
+}
+
+/// Parse one `points[]` element of a `dse`/`pnr` result (the
+/// [`crate::dse::outcome_json`] point shape) back into the exact
+/// [`PointResult`] — floats bit-exact, which is what lets the loopback
+/// tests assert daemon results are bit-identical to the in-process
+/// engine.
+pub fn point_result_from_json(v: &Json) -> Result<PointResult, String> {
+    let u64_field = |k: &str| -> Result<u64, String> {
+        v.get(k).and_then(Json::as_u64).ok_or_else(|| format!("point: missing `{k}`"))
+    };
+    // `num_f64` writes non-finite values as null; accept them back as
+    // NaN (mirrors the cache reader).
+    let f64_field = |k: &str| -> Result<f64, String> {
+        match v.get(k) {
+            Some(Json::Null) => Ok(f64::NAN),
+            Some(j) => j.as_f64().ok_or_else(|| format!("point: bad `{k}`")),
+            None => Err(format!("point: missing `{k}`")),
+        }
+    };
+    Ok(PointResult {
+        routed: v.get("routed").and_then(Json::as_bool).ok_or("point: missing `routed`")?,
+        critical_path_ps: f64_field("critical_path_ps")?,
+        period_ps: f64_field("period_ps")?,
+        latency_cycles: u64_field("latency_cycles")?,
+        runtime_ns: f64_field("runtime_ns")?,
+        iterations: u64_field("iterations")?,
+        nodes_used: u64_field("nodes_used")?,
+        alpha: f64_field("alpha")?,
+        sim_cycles: u64_field("sim_cycles")?,
+        sim_tokens: u64_field("sim_tokens")?,
+        stall_cycles: u64_field("stall_cycles")?,
+    })
+}
+
+fn num_list<I: Iterator<Item = u64>>(items: I) -> Json {
+    Json::Arr(items.map(Json::num_u64).collect())
+}
+
+fn str_list<I: Iterator<Item = String>>(items: I) -> Json {
+    Json::Arr(items.map(Json::Str).collect())
+}
+
+fn opt_str(v: &Json, k: &str) -> Result<Option<String>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| format!("bad `{k}`: expected string")),
+    }
+}
+
+fn opt_bool(v: &Json, k: &str) -> Result<Option<bool>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j.as_bool().map(Some).ok_or_else(|| format!("bad `{k}`: expected bool")),
+    }
+}
+
+fn opt_u64(v: &Json, k: &str) -> Result<Option<u64>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j.as_u64().map(Some).ok_or_else(|| format!("bad `{k}`: expected integer")),
+    }
+}
+
+fn opt_f64(v: &Json, k: &str) -> Result<Option<f64>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(None),
+        Some(j) => j.as_f64().map(Some).ok_or_else(|| format!("bad `{k}`: expected number")),
+    }
+}
+
+fn opt_u16(v: &Json, k: &str) -> Result<Option<u16>, String> {
+    match opt_u64(v, k)? {
+        None => Ok(None),
+        Some(n) => u16::try_from(n)
+            .map(Some)
+            .map_err(|_| format!("bad `{k}`: {n} out of range")),
+    }
+}
+
+fn opt_num_list<T, F: Fn(u64) -> Option<T>>(
+    v: &Json,
+    k: &str,
+    convert: F,
+) -> Result<Vec<T>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(vec![]),
+        Some(j) => j
+            .as_arr()
+            .ok_or_else(|| format!("bad `{k}`: expected array"))?
+            .iter()
+            .map(|item| {
+                item.as_u64()
+                    .and_then(&convert)
+                    .ok_or_else(|| format!("bad `{k}` element"))
+            })
+            .collect(),
+    }
+}
+
+fn opt_parsed_list<T, F: Fn(&str) -> Option<T>>(
+    v: &Json,
+    k: &str,
+    parse: F,
+) -> Result<Vec<T>, String> {
+    match v.get(k) {
+        None | Some(Json::Null) => Ok(vec![]),
+        Some(j) => j
+            .as_arr()
+            .ok_or_else(|| format!("bad `{k}`: expected array"))?
+            .iter()
+            .map(|item| {
+                let s = item.as_str().ok_or_else(|| format!("bad `{k}` element"))?;
+                parse(s).ok_or_else(|| format!("bad `{k}` value `{s}`"))
+            })
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrips_through_the_wire_form() {
+        let reqs = vec![
+            Request::Ping,
+            Request::Info,
+            Request::Stats,
+            Request::Shutdown,
+            Request::Generate(GenParams {
+                tracks: Some(4),
+                topology: Some(SbTopology::Disjoint),
+                backend: "rv".into(),
+                ..Default::default()
+            }),
+            Request::Simulate(SimParams {
+                app: "gaussian".into(),
+                fabric: FabricKind::RvFullFifo { depth: 4 },
+                tokens: 128,
+            }),
+            Request::Dse(DseParams {
+                tracks: vec![3, 4],
+                topologies: vec![SbTopology::Wilton, SbTopology::Disjoint],
+                fabrics: vec![FabricKind::Static, FabricKind::RvSplitFifo],
+                apps: vec!["pointwise4".into()],
+                seeds: 2,
+                derived_seeds: true,
+                tight: Some(1.25),
+                area: true,
+                ..Default::default()
+            }),
+            Request::Pnr(DseParams { apps: vec!["harris".into()], ..Default::default() }),
+            Request::Area(DseParams { tracks: vec![2, 3], area: true, ..Default::default() }),
+            Request::Figure { which: "fig10".into(), sa_moves: 6 },
+        ];
+        for (i, req) in reqs.into_iter().enumerate() {
+            let line = request_line(i as u64 + 1, &req);
+            assert!(!line.contains('\n'), "{line}");
+            let (id, back) = parse_request(&line).unwrap();
+            assert_eq!(id, i as u64 + 1);
+            assert_eq!(back, req, "roundtrip of {line}");
+        }
+    }
+
+    #[test]
+    fn absent_fields_take_cli_defaults_and_bad_fields_are_loud() {
+        let (_, req) = parse_request(r#"{"id":1,"cmd":"dse"}"#).unwrap();
+        assert_eq!(req, Request::Dse(DseParams::default()));
+        assert!(parse_request(r#"{"cmd":"ping"}"#).is_err(), "id is required");
+        assert!(parse_request(r#"{"id":1}"#).is_err(), "cmd is required");
+        assert!(parse_request(r#"{"id":1,"cmd":"warp"}"#).is_err(), "unknown cmd");
+        assert!(parse_request(r#"{"id":1,"cmd":"dse","tracks":"3"}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"cmd":"dse","fabrics":["warp"]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"cmd":"simulate"}"#).is_err(), "app required");
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn to_spec_matches_the_cli_construction() {
+        let p = DseParams {
+            tracks: vec![3, 4],
+            apps: vec!["gaussian".into()],
+            seed: 5,
+            seeds: 2,
+            sa_moves: 4,
+            ..Default::default()
+        };
+        let spec = p.to_spec();
+        assert_eq!(spec.name, "cli");
+        assert_eq!(spec.base.width, 8);
+        assert_eq!(spec.base.mem_column_period, 3);
+        assert_eq!(spec.seeds, vec![5, 6]);
+        assert_eq!(spec.flow.sa.moves_per_node, 4);
+        assert!(matches!(spec.sizing, Sizing::Fixed));
+        assert_eq!(spec.seed_mode, SeedMode::Raw);
+        // Same job keys as a spec built by hand the way cmd_dse does.
+        let jobs = spec.jobs("native-gd").unwrap();
+        assert_eq!(jobs.len(), 4);
+        let tight = DseParams { tight: Some(1.5), ..p }.to_spec();
+        assert!(matches!(tight.sizing, Sizing::TightArray { slack } if slack == 1.5));
+    }
+
+    #[test]
+    fn frames_roundtrip_and_stay_single_line() {
+        let frames = vec![
+            Frame::Progress { id: 3, message: "multi\nline\rmessage".into() },
+            Frame::Result {
+                id: 4,
+                data: Json::Obj(vec![("table".into(), Json::str("a | b\nc | d\n"))]),
+            },
+            Frame::Error { id: 5, error: "bad\nthing".into() },
+        ];
+        for f in frames {
+            let line = f.to_line();
+            assert!(!line.bytes().any(|b| b == b'\n' || b == b'\r'), "{line:?}");
+            assert_eq!(Frame::parse(&line).unwrap(), f);
+        }
+        assert!(Frame::parse(r#"{"id":1}"#).is_err());
+        assert!(Frame::parse(r#"{"id":1,"frame":"warp"}"#).is_err());
+        assert!(Frame::Error { id: 1, error: "x".into() }.is_terminal());
+        assert!(!Frame::Progress { id: 1, message: "x".into() }.is_terminal());
+    }
+
+    #[test]
+    fn point_results_roundtrip_bit_exactly_through_outcome_json() {
+        use crate::dse::{outcome_json, DseEngine, SweepSpec};
+        use crate::pnr::NativePlacer;
+        let spec = SweepSpec {
+            base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+            apps: vec!["pointwise".into()],
+            flow: FlowParams {
+                sa: SaParams { moves_per_node: 4, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let mut engine = DseEngine::in_memory();
+        let out = engine.run(&spec, &NativePlacer::default()).unwrap();
+        let doc = Json::parse(&outcome_json(&out).render_line()).unwrap();
+        let points = doc.get("points").and_then(Json::as_arr).unwrap();
+        assert_eq!(points.len(), out.points.len());
+        for (wire, (_, direct)) in points.iter().zip(&out.points) {
+            let back = point_result_from_json(wire).unwrap();
+            assert_eq!(&back, direct);
+            assert_eq!(back.runtime_ns.to_bits(), direct.runtime_ns.to_bits());
+            assert_eq!(back.critical_path_ps.to_bits(), direct.critical_path_ps.to_bits());
+        }
+    }
+}

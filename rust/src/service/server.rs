@@ -1,0 +1,623 @@
+//! The Canal daemon: a TCP listener and a fixed pool of connection
+//! worker threads serving the NDJSON protocol ([`super::proto`]) over
+//! one process-wide [`SessionState`].
+//!
+//! ## Lifecycle
+//!
+//! [`Server::bind`] binds the listener (an `--addr 127.0.0.1:0` bind
+//! picks an ephemeral port; the resolved address is written to
+//! `port_file` when configured, which is how scripted callers find it),
+//! then [`Server::run`] blocks: an accept loop hands connections to the
+//! worker pool, each worker serving one connection at a time, requests
+//! on a connection strictly in order.
+//!
+//! ## Shutdown semantics (graceful drain)
+//!
+//! A `shutdown` request — or SIGTERM/SIGINT on unix — flips one flag:
+//!
+//! 1. the accept loop stops accepting and exits;
+//! 2. workers finish the request they are currently serving (in-flight
+//!    jobs complete and enter the shared cache), then close their
+//!    connection instead of reading further requests;
+//! 3. queued-but-unserved connections are closed without service;
+//! 4. the shared result cache is flushed to its backing file;
+//! 5. [`Server::run`] returns `Ok` — `canal serve` exits 0.
+//!
+//! Nothing is ever aborted mid-PnR: drain means "stop taking work",
+//! not "stop working".
+//!
+//! ## Error containment
+//!
+//! A request-level failure (unknown app, invalid spec…) produces an
+//! error frame and the connection keeps serving. A *framing* failure —
+//! a line that does not parse as a request — produces an error frame
+//! with `id: 0` and closes the connection, since byte-stream alignment
+//! can no longer be trusted. A client that disconnects mid-request
+//! costs nothing but the wasted write: the computation still completes
+//! and its results stay in the shared cache for the next session.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use crate::dse::{app_by_name, areas_table, outcome_json, points_table, stats_json};
+use crate::dse::InterconnectSource;
+use crate::hw::{allocate, lower_ready_valid, lower_static, RvOptions};
+use crate::sim::{RvSim, StallPattern};
+use crate::util::json::Json;
+
+use super::proto::{self, DseParams, Frame, GenParams, Request, SimParams, PROTO_VERSION};
+use super::state::{SessionState, StateOptions};
+
+/// Upper bound on one request line; a client exceeding it is cut off
+/// (protects the daemon from unframed garbage).
+const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
+
+/// How long a blocked read waits before re-checking the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(500);
+
+/// Heartbeat period during long computations: well under the client's
+/// read timeout, so a silent stretch only ever means a dead server.
+const HEARTBEAT_EVERY: Duration = Duration::from_secs(15);
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Bind address; port `0` picks an ephemeral port.
+    pub addr: String,
+    /// Connection worker threads; `0` ⇒ 8.
+    pub conn_threads: usize,
+    /// Shared-state tuning (engine workers, cache file, LRU capacity).
+    pub state: StateOptions,
+    /// When set, the resolved `host:port` is written here after bind —
+    /// the handshake scripted callers use with ephemeral ports.
+    pub port_file: Option<PathBuf>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:9000".into(),
+            conn_threads: 0,
+            state: StateOptions::default(),
+            port_file: None,
+        }
+    }
+}
+
+/// A bound (not yet running) daemon.
+pub struct Server {
+    listener: TcpListener,
+    state: Arc<SessionState>,
+    shutdown: Arc<AtomicBool>,
+    conn_threads: usize,
+}
+
+impl Server {
+    /// Bind with a fresh [`SessionState`] (default placement backend).
+    pub fn bind(opts: ServeOptions) -> Result<Server, String> {
+        let state = Arc::new(SessionState::new(opts.state.clone())?);
+        Server::bind_with_state(opts, state)
+    }
+
+    /// Bind over an existing state — tests pin the placement backend,
+    /// and embedders can share the state with in-process work.
+    pub fn bind_with_state(
+        opts: ServeOptions,
+        state: Arc<SessionState>,
+    ) -> Result<Server, String> {
+        let listener =
+            TcpListener::bind(&opts.addr).map_err(|e| format!("bind {}: {e}", opts.addr))?;
+        let local = listener.local_addr().map_err(|e| e.to_string())?;
+        if let Some(path) = &opts.port_file {
+            std::fs::write(path, format!("{local}\n"))
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+        }
+        let conn_threads = if opts.conn_threads == 0 { 8 } else { opts.conn_threads };
+        Ok(Server {
+            listener,
+            state,
+            shutdown: Arc::new(AtomicBool::new(false)),
+            conn_threads,
+        })
+    }
+
+    /// The resolved bind address (meaningful after an ephemeral bind).
+    pub fn local_addr(&self) -> Result<SocketAddr, String> {
+        self.listener.local_addr().map_err(|e| e.to_string())
+    }
+
+    pub fn state(&self) -> &Arc<SessionState> {
+        &self.state
+    }
+
+    /// The drain flag; storing `true` stops the accept loop (same
+    /// effect as a `shutdown` request, minus the response frame).
+    pub fn shutdown_flag(&self) -> Arc<AtomicBool> {
+        Arc::clone(&self.shutdown)
+    }
+
+    /// Serve until shutdown, then drain and flush. See the module docs
+    /// for the exact drain semantics.
+    pub fn run(self) -> Result<(), String> {
+        install_signal_handlers();
+        self.listener
+            .set_nonblocking(true)
+            .map_err(|e| format!("listener nonblocking: {e}"))?;
+
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = Vec::with_capacity(self.conn_threads);
+        for _ in 0..self.conn_threads {
+            let rx = Arc::clone(&rx);
+            let state = Arc::clone(&self.state);
+            let shutdown = Arc::clone(&self.shutdown);
+            workers.push(std::thread::spawn(move || loop {
+                // Classic handoff queue: one worker at a time parks in
+                // `recv`; the channel closing (accept loop gone) ends
+                // the pool.
+                let next = {
+                    let rx = rx.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                    rx.recv()
+                };
+                match next {
+                    Ok(stream) => {
+                        if shutdown.load(Ordering::SeqCst) {
+                            // Drain mode: queued connections are closed
+                            // without service.
+                            continue;
+                        }
+                        // A panicking handler must cost one connection,
+                        // not one pool thread: a worker that died on a
+                        // panic would silently shrink the pool until
+                        // accepted connections are never served.
+                        let outcome = catch_unwind(AssertUnwindSafe(|| {
+                            handle_conn(stream, &state, &shutdown)
+                        }));
+                        if outcome.is_err() {
+                            state.stats().errors.fetch_add(1, Ordering::Relaxed);
+                            eprintln!(
+                                "canal serve: connection handler panicked; worker recovered"
+                            );
+                        }
+                    }
+                    Err(_) => break,
+                }
+            }));
+        }
+
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) || signaled() {
+                self.shutdown.store(true, Ordering::SeqCst);
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let _ = stream.set_nonblocking(false);
+                    self.state.stats().connections.fetch_add(1, Ordering::Relaxed);
+                    if tx.send(stream).is_err() {
+                        break;
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => {
+                    // Transient accept failures (e.g. EMFILE) must not
+                    // kill the daemon; back off and keep serving.
+                    eprintln!("canal serve: accept error: {e}");
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        }
+
+        drop(tx);
+        for w in workers {
+            let _ = w.join();
+        }
+        self.state.flush()?;
+        Ok(())
+    }
+}
+
+/// Serve one connection: requests strictly in order until EOF, a
+/// framing error, or drain.
+fn handle_conn(stream: TcpStream, state: &Arc<SessionState>, shutdown: &Arc<AtomicBool>) {
+    let _ = stream.set_read_timeout(Some(READ_POLL));
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = LineReader { stream: read_half, pending: Vec::new() };
+    let mut writer = stream;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let line = match reader.read_line(shutdown) {
+            Ok(Some(line)) => line,
+            Ok(None) | Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        state.stats().requests.fetch_add(1, Ordering::Relaxed);
+        let (id, req) = match proto::parse_request(&line) {
+            Ok(parsed) => parsed,
+            Err(e) => {
+                state.stats().errors.fetch_add(1, Ordering::Relaxed);
+                let _ = write_frame(
+                    &mut writer,
+                    &Frame::Error { id: 0, error: format!("malformed request: {e}") },
+                );
+                // Framing can no longer be trusted on this stream.
+                break;
+            }
+        };
+        let is_shutdown = matches!(req, Request::Shutdown);
+        if let Err(e) = handle_request(id, req, state, &mut writer, shutdown) {
+            state.stats().errors.fetch_add(1, Ordering::Relaxed);
+            let _ = write_frame(&mut writer, &Frame::Error { id, error: e });
+        }
+        if is_shutdown {
+            break;
+        }
+    }
+}
+
+/// Serve one request. `Ok` means the terminal result frame was emitted
+/// (write failures are deliberately ignored — see the module docs on
+/// disconnects); `Err` asks the caller to emit the error frame.
+fn handle_request(
+    id: u64,
+    req: Request,
+    state: &Arc<SessionState>,
+    w: &mut TcpStream,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<(), String> {
+    match req {
+        Request::Ping => respond(
+            w,
+            id,
+            Json::Obj(vec![
+                ("pong".into(), Json::Bool(true)),
+                ("proto".into(), Json::num_u64(PROTO_VERSION)),
+            ]),
+        ),
+        Request::Info => respond(w, id, info_json(state)),
+        Request::Stats => respond(w, id, state.stats_json()),
+        Request::Shutdown => {
+            shutdown.store(true, Ordering::SeqCst);
+            let flushed = state.flush().is_ok();
+            respond(
+                w,
+                id,
+                Json::Obj(vec![
+                    ("ok".into(), Json::Bool(true)),
+                    ("flushed".into(), Json::Bool(flushed)),
+                ]),
+            )
+        }
+        Request::Generate(g) => generate_request(id, &g, state, w),
+        Request::Simulate(s) => simulate_request(id, &s, w),
+        Request::Dse(p) => dse_request(id, &p, state, w),
+        Request::Area(p) => {
+            let p = DseParams { area: true, apps: vec![], ..p };
+            dse_request(id, &p, state, w)
+        }
+        Request::Pnr(p) => {
+            if p.apps.len() != 1 {
+                return Err(format!(
+                    "pnr: exactly one app required, got {}",
+                    p.apps.len()
+                ));
+            }
+            dse_request(id, &p, state, w)
+        }
+        Request::Figure { which, sa_moves } => {
+            let _ = write_frame(
+                w,
+                &Frame::Progress {
+                    id,
+                    message: format!("regenerating {which} through the shared cache"),
+                },
+            );
+            let (table, stats) =
+                with_heartbeat(w, id, || state.run_figure(&which, sa_moves))?;
+            respond(
+                w,
+                id,
+                Json::Obj(vec![
+                    ("which".into(), Json::str(&which)),
+                    ("table".into(), Json::str(&table.render())),
+                    ("csv".into(), Json::str(&table.to_csv())),
+                    ("stats".into(), stats_json(&stats)),
+                ]),
+            )
+        }
+    }
+}
+
+/// Run `f` while a sibling thread emits a heartbeat progress frame
+/// every [`HEARTBEAT_EVERY`], so the client's read timeout only ever
+/// catches a dead server — never a legitimately long computation. The
+/// heartbeat thread is the sole writer while `f` runs and is stopped
+/// (condvar, so zero added latency on fast requests) and joined before
+/// the caller writes its next frame.
+fn with_heartbeat<T: Send>(w: &TcpStream, id: u64, f: impl FnOnce() -> T + Send) -> T {
+    let hb_stream = w.try_clone();
+    let stop = Mutex::new(false);
+    let cv = Condvar::new();
+    std::thread::scope(|scope| {
+        if let Ok(mut hb) = hb_stream {
+            let (stop, cv) = (&stop, &cv);
+            scope.spawn(move || {
+                let mut stopped =
+                    stop.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                loop {
+                    let (guard, timeout) = cv
+                        .wait_timeout(stopped, HEARTBEAT_EVERY)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                    stopped = guard;
+                    if *stopped {
+                        break;
+                    }
+                    if timeout.timed_out() {
+                        let _ = write_frame(
+                            &mut hb,
+                            &Frame::Progress { id, message: "still working".into() },
+                        );
+                    }
+                }
+            });
+        }
+        // Stop via a drop guard: if `f` panics, `thread::scope` joins
+        // the heartbeat thread before propagating — without the guard
+        // the flag would never be set and the join would hang forever.
+        struct StopGuard<'a> {
+            stop: &'a Mutex<bool>,
+            cv: &'a Condvar,
+        }
+        impl Drop for StopGuard<'_> {
+            fn drop(&mut self) {
+                *self.stop.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = true;
+                self.cv.notify_all();
+            }
+        }
+        let _stop_on_exit = StopGuard { stop: &stop, cv: &cv };
+        f()
+    })
+}
+
+fn dse_request(
+    id: u64,
+    p: &DseParams,
+    state: &Arc<SessionState>,
+    w: &mut TcpStream,
+) -> Result<(), String> {
+    let spec = p.to_spec();
+    if spec.apps.is_empty() && !spec.area {
+        return Err("nothing to do: pass apps and/or area".into());
+    }
+    let _ = write_frame(
+        w,
+        &Frame::Progress { id, message: format!("sweep `{}`: resolving jobs", spec.name) },
+    );
+    let out = with_heartbeat(w, id, || state.run_dse(&spec))?;
+    let s = &out.stats;
+    let _ = write_frame(
+        w,
+        &Frame::Progress {
+            id,
+            message: format!(
+                "{} jobs: {} cached, {} coalesced, {} PnR runs, {} sims",
+                s.jobs, s.cache_hits, s.coalesced, s.pnr_runs, s.sims
+            ),
+        },
+    );
+    // The machine-readable record plus rendered tables, so thin clients
+    // print without reimplementing the formatting.
+    let Json::Obj(mut members) = outcome_json(&out) else {
+        unreachable!("outcome_json returns an object")
+    };
+    members.push(("table".into(), Json::str(&points_table(&out).render())));
+    if spec.area {
+        members.push(("areas_table".into(), Json::str(&areas_table(&out).render())));
+    }
+    respond(w, id, Json::Obj(members))
+}
+
+fn generate_request(
+    id: u64,
+    g: &GenParams,
+    state: &Arc<SessionState>,
+    w: &mut TcpStream,
+) -> Result<(), String> {
+    let cfg = g.config();
+    cfg.validate()?;
+    let (ic, _) = state.ic_lru().interconnect(&cfg);
+    let lowered = match g.backend.as_str() {
+        "static" => lower_static(&ic),
+        "rv" => lower_ready_valid(&ic, &RvOptions::default()),
+        other => return Err(format!("unknown backend `{other}`")),
+    };
+    let mut kinds: Vec<(&'static str, usize)> =
+        lowered.netlist.histogram().into_iter().collect();
+    kinds.sort();
+    let modules = Json::Obj(
+        kinds.into_iter().map(|(k, v)| (k.to_string(), Json::num_u64(v as u64))).collect(),
+    );
+    let cs = allocate(&ic);
+    let total_bits: u32 = cs.bits_per_tile().values().sum();
+    respond(
+        w,
+        id,
+        Json::Obj(vec![
+            ("descriptor".into(), Json::str(&ic.descriptor)),
+            ("backend".into(), Json::str(&g.backend)),
+            ("nodes".into(), Json::num_u64(ic.node_count() as u64)),
+            ("edges".into(), Json::num_u64(ic.edge_count() as u64)),
+            ("config_bits".into(), Json::num_u64(total_bits as u64)),
+            ("modules".into(), modules),
+        ]),
+    )
+}
+
+fn simulate_request(id: u64, s: &SimParams, w: &mut TcpStream) -> Result<(), String> {
+    let app =
+        app_by_name(&s.app).ok_or_else(|| format!("unknown app `{}` (see `info`)", s.app))?;
+    let caps: std::collections::HashMap<_, _> = app
+        .edges()
+        .iter()
+        .map(|e| ((e.src, e.src_port, e.dst, e.dst_port), s.fabric.capacity(1)))
+        .collect();
+    let input: Vec<i64> =
+        (0..(s.tokens as i64 * 4)).map(|i| (i * 13 + 5) % 199).collect();
+    let stall = StallPattern::Bursty { accept: 3, stall: 2 };
+    let mut sim = RvSim::new(&app, &caps, input);
+    let run = sim.run(s.tokens, 10_000_000, stall);
+    let mut names: Vec<_> = run.outputs.keys().collect();
+    names.sort();
+    let outputs = Json::Obj(
+        names
+            .into_iter()
+            .map(|name| {
+                let seq = &run.outputs[name];
+                (
+                    name.clone(),
+                    Json::Obj(vec![
+                        (
+                            "head".into(),
+                            Json::Arr(
+                                seq.iter().take(8).map(|&v| Json::Num(v.to_string())).collect(),
+                            ),
+                        ),
+                        ("tokens".into(), Json::num_u64(seq.len() as u64)),
+                    ]),
+                )
+            })
+            .collect(),
+    );
+    respond(
+        w,
+        id,
+        Json::Obj(vec![
+            ("app".into(), Json::str(&app.name)),
+            ("fabric".into(), Json::str(&s.fabric.label())),
+            ("cycles".into(), Json::num_u64(run.cycles as u64)),
+            ("tokens".into(), Json::num_u64(run.tokens as u64)),
+            ("outputs".into(), outputs),
+        ]),
+    )
+}
+
+fn info_json(state: &Arc<SessionState>) -> Json {
+    Json::Obj(vec![
+        ("version".into(), Json::str(env!("CARGO_PKG_VERSION"))),
+        ("proto".into(), Json::num_u64(PROTO_VERSION)),
+        ("pjrt_feature".into(), Json::Bool(cfg!(feature = "pjrt"))),
+        ("placer".into(), Json::str(state.placer_name())),
+        (
+            "apps".into(),
+            Json::Arr(crate::dse::registry_keys().iter().map(|k| Json::str(k)).collect()),
+        ),
+    ])
+}
+
+/// Emit the terminal result frame. Write failures are swallowed: the
+/// work is done and cached; only this session lost its answer.
+fn respond(w: &mut TcpStream, id: u64, data: Json) -> Result<(), String> {
+    let _ = write_frame(w, &Frame::Result { id, data });
+    Ok(())
+}
+
+fn write_frame(w: &mut TcpStream, frame: &Frame) -> std::io::Result<()> {
+    let mut line = frame.to_line();
+    line.push('\n');
+    w.write_all(line.as_bytes())
+}
+
+/// Newline framing over a read-timeout socket: partial reads accumulate
+/// in `pending` (a `BufReader` would lose its buffer on `WouldBlock`
+/// mid-line), and every timeout re-checks the drain flag.
+struct LineReader {
+    stream: TcpStream,
+    pending: Vec<u8>,
+}
+
+impl LineReader {
+    /// `Ok(None)` = clean end (EOF, or drain while idle).
+    fn read_line(&mut self, shutdown: &AtomicBool) -> std::io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.pending.iter().position(|&b| b == b'\n') {
+                let rest = self.pending.split_off(pos + 1);
+                let mut line = std::mem::replace(&mut self.pending, rest);
+                line.pop();
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return match String::from_utf8(line) {
+                    Ok(s) => Ok(Some(s)),
+                    Err(_) => Err(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "non-utf8 frame",
+                    )),
+                };
+            }
+            if self.pending.len() > MAX_FRAME_BYTES {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    "frame exceeds 16 MiB",
+                ));
+            }
+            let mut buf = [0u8; 4096];
+            match self.stream.read(&mut buf) {
+                Ok(0) => return Ok(None),
+                Ok(n) => self.pending.extend_from_slice(&buf[..n]),
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                    ) =>
+                {
+                    if shutdown.load(Ordering::SeqCst) {
+                        return Ok(None);
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+static SIGNALED: AtomicBool = AtomicBool::new(false);
+
+/// `true` once SIGTERM or SIGINT arrived (always `false` off unix).
+pub fn signaled() -> bool {
+    SIGNALED.load(Ordering::SeqCst)
+}
+
+/// Route SIGTERM/SIGINT into the drain flag. No external crates: the
+/// raw libc `signal` entry point every Rust binary on unix already
+/// links against.
+#[cfg(unix)]
+fn install_signal_handlers() {
+    extern "C" fn on_signal(_sig: i32) {
+        SIGNALED.store(true, Ordering::SeqCst);
+    }
+    type Handler = extern "C" fn(i32);
+    extern "C" {
+        fn signal(signum: i32, handler: Handler) -> usize;
+    }
+    // SAFETY: the handler performs exactly one atomic store
+    // (async-signal-safe); registration itself has no preconditions.
+    unsafe {
+        let _ = signal(15, on_signal); // SIGTERM: orchestrated stop
+        let _ = signal(2, on_signal); // SIGINT: interactive ^C
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}

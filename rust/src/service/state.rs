@@ -1,0 +1,692 @@
+//! Process-wide session state of the Canal daemon: the assets every
+//! connection shares, and the coalescing rules that keep concurrent
+//! sessions from duplicating work.
+//!
+//! One [`SessionState`] owns, for the whole process:
+//!
+//! - an **LRU of frozen interconnects** ([`IcLru`]) keyed by
+//!   `InterconnectConfig::descriptor()` — the expensive
+//!   build-and-freeze (CSR [`crate::ir::CompiledGraph`]s) is paid once
+//!   per configuration across *all* connections, not once per request;
+//! - one **result cache** ([`ResultCache`]) with its backing file —
+//!   every request partitions against it and feeds new results back,
+//!   persisted after each request that computed anything and once more
+//!   on shutdown;
+//! - one **placement backend** — constructed once (the PJRT service
+//!   thread, when available, is a process-wide singleton exactly like
+//!   the one-shot CLI's);
+//! - the **in-flight table**: `JobKey → cell` for every job some
+//!   request is currently computing.
+//!
+//! ## Coalescing
+//!
+//! A `dse` request resolves each of its (deduplicated, canonically
+//! ordered) jobs to one of three sources under a single lock:
+//! *hit* (already cached), *join* (another request is computing it —
+//! wait on its cell), or *mine* (claim it). Claimed jobs run through
+//! [`crate::dse::execute_jobs`] — grouped per configuration and drained
+//! through one batched placement solve per group, exactly like the
+//! one-shot engine — then fill their cells and enter the cache. The
+//! result: however many concurrent sessions ask for overlapping sweeps,
+//! each `(config, app, seed)` point is placed-and-routed **at most
+//! once** per daemon lifetime, and every session still receives points
+//! bit-identical to a sequential `canal dse` run (same job keys, same
+//! deterministic executor).
+//!
+//! If a computing request unwinds, its claims are released and the
+//! cells are failed (never left pending), so joiners error out instead
+//! of hanging.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::coordinator;
+use crate::dse::{
+    area_points, execute_jobs, DseEngine, EngineOptions, EngineStats, InterconnectSource,
+    JobKey, PointResult, ResultCache, SweepOutcome, SweepSpec,
+};
+use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
+use crate::ir::Interconnect;
+use crate::pnr::GlobalPlacer;
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// Session-state tuning.
+#[derive(Clone, Debug)]
+pub struct StateOptions {
+    /// Worker threads per request's cold execution; `0` ⇒ one per core.
+    pub workers: usize,
+    /// Result-cache backing file; `None` ⇒ in-memory only.
+    pub cache_path: Option<PathBuf>,
+    /// Frozen interconnects kept warm (LRU; at least 1).
+    pub ic_capacity: usize,
+}
+
+impl Default for StateOptions {
+    fn default() -> Self {
+        StateOptions { workers: 0, cache_path: None, ic_capacity: 32 }
+    }
+}
+
+/// LRU cache of frozen interconnects keyed by
+/// `InterconnectConfig::descriptor()`. The build is a pure function of
+/// the config, so serving a warm `Arc` is behaviorally identical to
+/// rebuilding — only the freeze cost disappears. Doubles as the
+/// executor's [`InterconnectSource`].
+pub struct IcLru {
+    inner: Mutex<IcLruInner>,
+    hits: AtomicU64,
+    builds: AtomicU64,
+    evictions: AtomicU64,
+}
+
+struct IcLruInner {
+    map: HashMap<String, (Arc<Interconnect>, u64)>,
+    /// Monotonic access clock (recency stamp).
+    tick: u64,
+    capacity: usize,
+}
+
+impl IcLru {
+    pub fn new(capacity: usize) -> IcLru {
+        IcLru {
+            inner: Mutex::new(IcLruInner {
+                map: HashMap::new(),
+                tick: 0,
+                capacity: capacity.max(1),
+            }),
+            hits: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        lock_ignore_poison(&self.inner).map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+}
+
+impl InterconnectSource for IcLru {
+    fn interconnect(&self, cfg: &InterconnectConfig) -> (Arc<Interconnect>, bool) {
+        let key = cfg.descriptor();
+        {
+            let mut inner = lock_ignore_poison(&self.inner);
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some((ic, last)) = inner.map.get_mut(&key) {
+                *last = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return (Arc::clone(ic), false);
+            }
+        }
+        // Build outside the lock: freezing is the expensive part, and a
+        // miss on config A must not serialize behind a build of config
+        // B. Two requests racing on the same cold config may both
+        // build; the loser's copy is dropped on insert (the builds are
+        // identical — pure function of the config) and the executor's
+        // per-run `OnceLock` makes the race rare in practice.
+        let built = Arc::new(create_uniform_interconnect(cfg));
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        let mut inner = lock_ignore_poison(&self.inner);
+        inner.tick += 1;
+        let tick = inner.tick;
+        let ic = match inner.map.get_mut(&key) {
+            Some((winner, last)) => {
+                *last = tick;
+                Arc::clone(winner)
+            }
+            None => {
+                inner.map.insert(key, (Arc::clone(&built), tick));
+                built
+            }
+        };
+        while inner.map.len() > inner.capacity {
+            // O(n) recency scan — capacities are tens, not thousands.
+            let oldest =
+                inner.map.iter().min_by_key(|(_, (_, t))| *t).map(|(k, _)| k.clone());
+            match oldest {
+                Some(k) => {
+                    inner.map.remove(&k);
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                }
+                None => break,
+            }
+        }
+        (ic, true)
+    }
+}
+
+/// Cumulative daemon counters, exposed through the `stats` request.
+/// Engine-shaped fields aggregate over every request served.
+#[derive(Default)]
+pub struct ServiceStats {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub dse_requests: AtomicU64,
+    pub figure_requests: AtomicU64,
+    pub jobs: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub coalesced: AtomicU64,
+    pub pnr_runs: AtomicU64,
+    pub sims: AtomicU64,
+    pub configs_built: AtomicU64,
+    pub batched_solves: AtomicU64,
+    pub steals: AtomicU64,
+    pub flushes: AtomicU64,
+}
+
+impl ServiceStats {
+    fn absorb_engine(&self, s: &EngineStats) {
+        self.jobs.fetch_add(s.jobs, Ordering::Relaxed);
+        self.cache_hits.fetch_add(s.cache_hits, Ordering::Relaxed);
+        self.coalesced.fetch_add(s.coalesced, Ordering::Relaxed);
+        self.pnr_runs.fetch_add(s.pnr_runs, Ordering::Relaxed);
+        self.sims.fetch_add(s.sims, Ordering::Relaxed);
+        self.configs_built.fetch_add(s.configs_built, Ordering::Relaxed);
+        self.batched_solves.fetch_add(s.batched_solves, Ordering::Relaxed);
+        self.steals.fetch_add(s.steals, Ordering::Relaxed);
+    }
+}
+
+/// A coalescing cell: one in-flight job's eventual result, waited on by
+/// every request that joined it.
+struct JobCell {
+    state: Mutex<CellState>,
+    cv: Condvar,
+}
+
+enum CellState {
+    Pending,
+    Done(PointResult),
+    Failed(String),
+}
+
+impl JobCell {
+    fn new() -> JobCell {
+        JobCell { state: Mutex::new(CellState::Pending), cv: Condvar::new() }
+    }
+
+    fn fill(&self, outcome: Result<PointResult, String>) {
+        let mut s = lock_ignore_poison(&self.state);
+        *s = match outcome {
+            Ok(r) => CellState::Done(r),
+            Err(e) => CellState::Failed(e),
+        };
+        self.cv.notify_all();
+    }
+
+    fn wait(&self) -> Result<PointResult, String> {
+        let mut s = lock_ignore_poison(&self.state);
+        loop {
+            match &*s {
+                CellState::Pending => {
+                    s = self
+                        .cv
+                        .wait(s)
+                        .unwrap_or_else(std::sync::PoisonError::into_inner);
+                }
+                CellState::Done(r) => return Ok(r.clone()),
+                CellState::Failed(e) => return Err(e.clone()),
+            }
+        }
+    }
+}
+
+/// The cache and the in-flight table live under ONE lock: a request's
+/// hit/join/claim partition must be atomic, or two requests could both
+/// claim (or both miss) the same job.
+struct SharedDse {
+    cache: ResultCache,
+    inflight: HashMap<JobKey, Arc<JobCell>>,
+}
+
+/// A mutex whose poison flag we deliberately ignore: every critical
+/// section here leaves the data consistent at each statement (maps and
+/// counters), and a daemon must keep serving other sessions after one
+/// request thread panics.
+fn lock_ignore_poison<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// Releases a request's claims if its cold execution unwinds: removes
+/// them from the in-flight table and fails their cells so joiners
+/// error out instead of waiting forever.
+struct ClaimGuard<'a> {
+    shared: &'a Mutex<SharedDse>,
+    claims: Vec<(JobKey, Arc<JobCell>)>,
+    armed: bool,
+}
+
+impl ClaimGuard<'_> {
+    fn defuse(mut self) {
+        self.armed = false;
+    }
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut shared = lock_ignore_poison(self.shared);
+        for (key, cell) in &self.claims {
+            shared.inflight.remove(key);
+            cell.fill(Err("in-flight computation aborted".into()));
+        }
+    }
+}
+
+/// The daemon's shared session state. See the module docs for what it
+/// owns and the coalescing contract.
+pub struct SessionState {
+    opts: StateOptions,
+    placer: Box<dyn GlobalPlacer + Sync + Send>,
+    shared: Mutex<SharedDse>,
+    ics: IcLru,
+    stats: ServiceStats,
+    /// Serializes cache-file writers among themselves (never held
+    /// together with `shared` during I/O — see [`Self::flush`]).
+    flush_lock: Mutex<()>,
+}
+
+impl SessionState {
+    /// State with the best available placement backend (same selection
+    /// as the one-shot CLI: PJRT artifact when present, batched native
+    /// otherwise).
+    pub fn new(opts: StateOptions) -> Result<SessionState, String> {
+        let placer = coordinator::default_placer();
+        SessionState::with_placer(opts, placer)
+    }
+
+    /// State over an explicit backend (tests pin the native solver so
+    /// daemon results compare against in-process references).
+    pub fn with_placer(
+        opts: StateOptions,
+        placer: Box<dyn GlobalPlacer + Sync + Send>,
+    ) -> Result<SessionState, String> {
+        let cache = match &opts.cache_path {
+            Some(path) => ResultCache::at(path)?,
+            None => ResultCache::in_memory(),
+        };
+        let ic_capacity = opts.ic_capacity;
+        Ok(SessionState {
+            opts,
+            placer,
+            shared: Mutex::new(SharedDse { cache, inflight: HashMap::new() }),
+            ics: IcLru::new(ic_capacity),
+            stats: ServiceStats::default(),
+            flush_lock: Mutex::new(()),
+        })
+    }
+
+    /// Cache identity of the placement backend every request solves on.
+    pub fn placer_name(&self) -> &'static str {
+        self.placer.name()
+    }
+
+    pub fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    pub fn ic_lru(&self) -> &IcLru {
+        &self.ics
+    }
+
+    pub fn cache_len(&self) -> usize {
+        lock_ignore_poison(&self.shared).cache.len()
+    }
+
+    /// Persist the shared cache (no-op when in-memory). The request
+    /// lock is held only for a cheap map snapshot; serialization and
+    /// file I/O happen outside it (writers serialize among themselves
+    /// on `flush_lock`, so concurrent flushes cannot interleave on the
+    /// temp file), keeping concurrent sessions off the disk's latency.
+    pub fn flush(&self) -> Result<(), String> {
+        let _writer = lock_ignore_poison(&self.flush_lock);
+        let (snapshot, path) = {
+            let shared = lock_ignore_poison(&self.shared);
+            (shared.cache.snapshot(), shared.cache.path().map(std::path::Path::to_path_buf))
+        };
+        if let Some(path) = &path {
+            snapshot.save_to(path)?;
+        }
+        self.stats.flushes.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Run one sweep through the shared state. Jobs resolve to cache
+    /// hits, joins on other requests' in-flight cells, or claims this
+    /// request computes; the outcome is indistinguishable from
+    /// [`DseEngine::run`] on a same-temperature cache — canonical
+    /// order, bit-identical points — with `stats.coalesced` counting
+    /// the joins.
+    pub fn run_dse(&self, spec: &SweepSpec) -> Result<SweepOutcome, String> {
+        self.stats.dse_requests.fetch_add(1, Ordering::Relaxed);
+        let jobs = spec.jobs(self.placer.name())?;
+        let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
+
+        enum Source {
+            Hit(PointResult),
+            Join(Arc<JobCell>),
+            Mine(usize),
+        }
+
+        let mut sources: Vec<Source> = Vec::with_capacity(jobs.len());
+        let mut claimed: Vec<&crate::dse::Job> = Vec::new();
+        let mut claimed_cells: Vec<Arc<JobCell>> = Vec::new();
+        {
+            let mut shared = lock_ignore_poison(&self.shared);
+            for job in &jobs {
+                if let Some(r) = shared.cache.get(&job.key) {
+                    stats.cache_hits += 1;
+                    sources.push(Source::Hit(r.clone()));
+                } else if let Some(cell) = shared.inflight.get(&job.key) {
+                    stats.coalesced += 1;
+                    sources.push(Source::Join(Arc::clone(cell)));
+                } else {
+                    let cell = Arc::new(JobCell::new());
+                    shared.inflight.insert(job.key.clone(), Arc::clone(&cell));
+                    sources.push(Source::Mine(claimed.len()));
+                    claimed.push(job);
+                    claimed_cells.push(cell);
+                }
+            }
+        }
+
+        let guard = ClaimGuard {
+            shared: &self.shared,
+            claims: claimed
+                .iter()
+                .map(|j| j.key.clone())
+                .zip(claimed_cells.iter().map(Arc::clone))
+                .collect(),
+            armed: true,
+        };
+
+        let cold = execute_jobs(&claimed, self.opts.workers, self.placer.as_ref(), &self.ics);
+        stats.absorb(&cold.stats);
+
+        {
+            let mut shared = lock_ignore_poison(&self.shared);
+            for ((job, cell), result) in
+                claimed.iter().zip(&claimed_cells).zip(&cold.results)
+            {
+                shared.cache.insert(job.key.clone(), result.clone());
+                shared.inflight.remove(&job.key);
+                cell.fill(Ok(result.clone()));
+            }
+        }
+        guard.defuse();
+        if cold.stats.pnr_runs > 0 {
+            self.flush()?;
+        }
+
+        let areas =
+            if spec.area { area_points(spec, &cold.interconnects, &self.ics)? } else { vec![] };
+
+        // Assemble in canonical order. Joins block here — outside every
+        // lock — until the computing request fills their cells.
+        drop(claimed);
+        let mut points = Vec::with_capacity(jobs.len());
+        for (job, src) in jobs.into_iter().zip(sources) {
+            let r = match src {
+                Source::Hit(r) => r,
+                Source::Mine(i) => cold.results[i].clone(),
+                Source::Join(cell) => cell
+                    .wait()
+                    .map_err(|e| format!("coalesced job failed in another session: {e}"))?,
+            };
+            points.push((job, r));
+        }
+
+        self.stats.absorb_engine(&stats);
+        Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
+    }
+
+    /// Regenerate one engine-backed paper figure against the shared
+    /// cache: the figure drivers take a `&mut DseEngine`, so the run
+    /// happens on a snapshot-backed engine and new entries merge back
+    /// afterwards. Figure requests coalesce with concurrent work only
+    /// through the warm cache (no in-flight joining) — a deliberate
+    /// simplification documented in `docs/service.md`.
+    pub fn run_figure(
+        &self,
+        which: &str,
+        sa_moves: usize,
+    ) -> Result<(Table, EngineStats), String> {
+        self.stats.figure_requests.fetch_add(1, Ordering::Relaxed);
+        let o = coordinator::ExpOptions { sa_moves, ..Default::default() };
+        let snapshot = lock_ignore_poison(&self.shared).cache.snapshot();
+        let mut engine = DseEngine::with_cache(
+            EngineOptions { workers: self.opts.workers, cache_path: None },
+            snapshot,
+        );
+        let placer: &(dyn GlobalPlacer + Sync) = self.placer.as_ref();
+        let table = match which {
+            "fig7" | "fig07" => coordinator::fig07_hybrid_throughput_with(&o, placer, &mut engine),
+            "fig8" | "fig08" => coordinator::fig08_fifo_area_with(&mut engine),
+            "fig9" | "fig09" => coordinator::fig09_topology_with(&o, &mut engine),
+            "fig10" => coordinator::fig10_area_tracks_with(&mut engine),
+            "fig11" => coordinator::fig11_runtime_tracks_with(&o, placer, &mut engine),
+            "fig14" => coordinator::fig14_sb_ports_runtime_with(&o, placer, &mut engine),
+            "fig15" => coordinator::fig15_cb_ports_runtime_with(&o, placer, &mut engine),
+            other => {
+                return Err(format!(
+                    "unknown figure `{other}` (fig7|fig8|fig9|fig10|fig11|fig14|fig15)"
+                ))
+            }
+        };
+        let stats = engine.lifetime_stats().clone();
+        {
+            let mut shared = lock_ignore_poison(&self.shared);
+            for (k, r) in engine.cache().iter() {
+                if !shared.cache.contains(k) {
+                    shared.cache.insert(k.clone(), r.clone());
+                }
+            }
+        }
+        if stats.pnr_runs > 0 {
+            self.flush()?;
+        }
+        self.stats.absorb_engine(&stats);
+        Ok((table, stats))
+    }
+
+    /// The `stats` response body: cumulative counters plus current
+    /// occupancy of both shared caches.
+    pub fn stats_json(&self) -> Json {
+        let s = &self.stats;
+        let get = |a: &AtomicU64| Json::num_u64(a.load(Ordering::Relaxed));
+        Json::Obj(vec![
+            ("connections".into(), get(&s.connections)),
+            ("requests".into(), get(&s.requests)),
+            ("errors".into(), get(&s.errors)),
+            ("dse_requests".into(), get(&s.dse_requests)),
+            ("figure_requests".into(), get(&s.figure_requests)),
+            ("jobs".into(), get(&s.jobs)),
+            ("cache_hits".into(), get(&s.cache_hits)),
+            ("coalesced".into(), get(&s.coalesced)),
+            ("pnr_runs".into(), get(&s.pnr_runs)),
+            ("sims".into(), get(&s.sims)),
+            ("configs_built".into(), get(&s.configs_built)),
+            ("batched_solves".into(), get(&s.batched_solves)),
+            ("steals".into(), get(&s.steals)),
+            ("flushes".into(), get(&s.flushes)),
+            ("cache_entries".into(), Json::num_u64(self.cache_len() as u64)),
+            ("interconnects_cached".into(), Json::num_u64(self.ics.len() as u64)),
+            ("ic_hits".into(), Json::num_u64(self.ics.hits())),
+            ("ic_builds".into(), Json::num_u64(self.ics.builds())),
+            ("ic_evictions".into(), Json::num_u64(self.ics.evictions())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pnr::{BatchedNativePlacer, FlowParams, NativePlacer, SaParams};
+
+    fn tiny_spec(name: &str) -> SweepSpec {
+        SweepSpec {
+            name: name.into(),
+            base: InterconnectConfig {
+                width: 4,
+                height: 4,
+                mem_column_period: 3,
+                ..Default::default()
+            },
+            tracks: vec![2, 3],
+            apps: vec!["pointwise4".into()],
+            seeds: vec![1],
+            flow: FlowParams {
+                sa: SaParams { moves_per_node: 4, ..Default::default() },
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    fn state() -> SessionState {
+        SessionState::with_placer(
+            StateOptions { workers: 2, ..Default::default() },
+            Box::new(BatchedNativePlacer::default()),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ic_lru_shares_warm_graphs_and_evicts_least_recent() {
+        let lru = IcLru::new(2);
+        let cfg = |tracks| InterconnectConfig {
+            width: 4,
+            height: 4,
+            num_tracks: tracks,
+            mem_column_period: 0,
+            ..Default::default()
+        };
+        let (a1, built) = lru.interconnect(&cfg(2));
+        assert!(built);
+        let (a2, built) = lru.interconnect(&cfg(2));
+        assert!(!built, "second request must be a warm serve");
+        assert!(Arc::ptr_eq(&a1, &a2), "warm serves share the frozen Arc");
+        lru.interconnect(&cfg(3));
+        // Touch tracks=2 so tracks=3 is the eviction victim.
+        lru.interconnect(&cfg(2));
+        lru.interconnect(&cfg(4));
+        assert_eq!(lru.len(), 2);
+        assert_eq!(lru.evictions(), 1);
+        let (_, built) = lru.interconnect(&cfg(2));
+        assert!(!built, "recently-used entry must have survived");
+        let (_, built) = lru.interconnect(&cfg(3));
+        assert!(built, "least-recently-used entry was evicted");
+        assert_eq!(lru.builds(), 4);
+        assert!(lru.hits() >= 3);
+    }
+
+    #[test]
+    fn run_dse_matches_engine_and_second_pass_is_all_hits() {
+        let st = state();
+        let spec = tiny_spec("state-test");
+        let cold = st.run_dse(&spec).unwrap();
+        assert_eq!(cold.stats.pnr_runs, 2);
+        assert_eq!(cold.stats.coalesced, 0);
+        let warm = st.run_dse(&spec).unwrap();
+        assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.sims, 0);
+        assert_eq!(warm.stats.cache_hits, 2);
+        // Reference: the one-shot engine on the same spec and backend.
+        let mut engine = DseEngine::in_memory();
+        let reference = engine.run(&spec, &BatchedNativePlacer::default()).unwrap();
+        for ((ja, ra), (jb, rb)) in reference.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb);
+        }
+        assert_eq!(st.stats.pnr_runs.load(Ordering::Relaxed), 2);
+        assert_eq!(st.stats.dse_requests.load(Ordering::Relaxed), 2);
+        // The frozen interconnects stayed warm in the LRU.
+        assert_eq!(st.ic_lru().len(), 2);
+    }
+
+    #[test]
+    fn concurrent_overlapping_requests_never_duplicate_pnr() {
+        let st = state();
+        let spec = tiny_spec("coalesce-test");
+        let barrier = std::sync::Barrier::new(4);
+        std::thread::scope(|scope| {
+            for _ in 0..4 {
+                let (st, spec, barrier) = (&st, &spec, &barrier);
+                scope.spawn(move || {
+                    barrier.wait();
+                    let out = st.run_dse(spec).unwrap();
+                    assert_eq!(out.points.len(), 2);
+                    for (_, r) in &out.points {
+                        assert!(r.routed);
+                    }
+                    out
+                });
+            }
+        });
+        // However the four requests interleaved — all coalesced, all
+        // raced to claim, or fully serialized — each unique job was
+        // computed exactly once.
+        assert_eq!(st.stats.pnr_runs.load(Ordering::Relaxed), 2);
+        assert_eq!(st.stats.sims.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            st.stats.cache_hits.load(Ordering::Relaxed)
+                + st.stats.coalesced.load(Ordering::Relaxed),
+            4 * 2 - 2
+        );
+        // And a straggler sees plain cache hits.
+        let warm = st.run_dse(&spec).unwrap();
+        assert_eq!(warm.stats.cache_hits, 2);
+        let mut engine = DseEngine::in_memory();
+        let reference = engine.run(&spec, &NativePlacer::default()).unwrap();
+        for ((ja, ra), (jb, rb)) in reference.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key);
+            assert_eq!(ra, rb, "coalesced daemon results must match the sequential engine");
+        }
+    }
+
+    #[test]
+    fn area_requests_reuse_the_lru_and_run_no_pnr() {
+        let st = state();
+        let spec = SweepSpec { area: true, apps: vec![], ..tiny_spec("area") };
+        let out = st.run_dse(&spec).unwrap();
+        assert_eq!(out.stats.pnr_runs, 0);
+        assert_eq!(out.areas.len(), 2);
+        assert_eq!(st.ic_lru().builds(), 2);
+        let again = st.run_dse(&spec).unwrap();
+        assert_eq!(again.areas, out.areas);
+        assert_eq!(st.ic_lru().builds(), 2, "area re-run must serve warm interconnects");
+    }
+
+    #[test]
+    fn figure_requests_share_the_cache_both_ways() {
+        let st = state();
+        // fig10 is area-only (zero PnR) — a cheap end-to-end check that
+        // the snapshot engine runs and its stats flow back.
+        let (table, stats) = st.run_figure("fig10", 4).unwrap();
+        assert!(table.render().contains("Fig. 10"), "{}", table.title);
+        assert_eq!(stats.pnr_runs, 0);
+        assert!(st.run_figure("fig99", 4).is_err());
+    }
+}

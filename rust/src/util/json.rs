@@ -87,6 +87,28 @@ impl Json {
         out
     }
 
+    /// Compact rendering with a *framing guarantee*: the returned string
+    /// contains no `\n` or `\r` byte, so it is always exactly one line.
+    /// This is what the service protocol's newline-delimited framing
+    /// (`service::proto`) builds on.
+    ///
+    /// The guarantee holds by construction — the string escaper emits
+    /// `\n`/`\r` (and every other control character) escaped, the
+    /// renderer emits no whitespace between tokens, and number literals
+    /// cannot contain whitespace: a parsed [`Json::Num`] keeps only
+    /// bytes matched by the number scanner (digits, sign, `.`, `e`), and
+    /// the `num_*` constructors format from numeric types. The
+    /// debug-build assertion below audits that reasoning; release builds
+    /// pay nothing.
+    pub fn render_line(&self) -> String {
+        let out = self.render();
+        debug_assert!(
+            !out.bytes().any(|b| b == b'\n' || b == b'\r'),
+            "render_line produced an embedded newline: {out:?}"
+        );
+        out
+    }
+
     fn render_into(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -377,6 +399,39 @@ mod tests {
         assert_eq!(back.as_str(), Some("a\"b\\c\nd\te — µ"));
         let surrogate = r#""😀""#;
         assert_eq!(Json::parse(surrogate).unwrap().as_str(), Some("😀"));
+    }
+
+    #[test]
+    fn render_line_never_embeds_newlines() {
+        // Escape-path audit: every place a raw `\n`/`\r` could sneak
+        // into the output — string values, object keys, nested
+        // structures, parsed-and-re-emitted documents — must come out
+        // escaped. The framed service protocol depends on this.
+        let hostile = "a\nb\rc\r\nd\u{85}e\u{2028}f\u{2029}g\th\u{0}i";
+        let v = Json::Obj(vec![
+            ("k\ney".into(), Json::str(hostile)),
+            ("arr".into(), Json::Arr(vec![Json::str("\n"), Json::str("\r\n")])),
+            (
+                "nested".into(),
+                Json::Obj(vec![("inner\r".into(), Json::Arr(vec![Json::str(hostile)]))]),
+            ),
+            ("n".into(), Json::num_f64(1.5e-300)),
+        ]);
+        let line = v.render_line();
+        assert!(!line.bytes().any(|b| b == b'\n' || b == b'\r'), "{line:?}");
+        // Still a faithful encoding: parsing the line restores the
+        // hostile content exactly.
+        let back = Json::parse(&line).unwrap();
+        assert_eq!(back.get("k\ney").and_then(Json::as_str), Some(hostile));
+        assert_eq!(back, v);
+        // NEL / LS / PS are not ASCII newline bytes in UTF-8, so they
+        // pass through raw — and contain no 0x0A/0x0D byte.
+        assert!(line.contains('\u{2028}'));
+        // A parsed document re-renders to one line too (numbers keep
+        // their literal text; the scanner admits no whitespace bytes).
+        let reparsed = Json::parse("{ \"a\" : [ 1.5e3 ,\n -2 ] }").unwrap();
+        let line2 = reparsed.render_line();
+        assert_eq!(line2, r#"{"a":[1.5e3,-2]}"#);
     }
 
     #[test]

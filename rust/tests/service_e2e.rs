@@ -1,0 +1,288 @@
+//! Loopback end-to-end tests of the Canal daemon: a real TCP server on
+//! an ephemeral port, real clients, real frames.
+//!
+//! The acceptance contract asserted here:
+//! - K concurrent clients issuing overlapping `dse` sweeps receive
+//!   results **bit-identical** to the sequential in-process engine;
+//! - however the requests interleave, each unique `(config, app, seed)`
+//!   job is placed-and-routed at most once per daemon lifetime;
+//! - a repeated identical request performs **zero PnR calls and zero
+//!   simulations**, observable through the per-request stats embedded
+//!   in the result frame AND the cumulative `stats` frame;
+//! - malformed frames and mid-request disconnects are contained to
+//!   their connection — the daemon keeps serving;
+//! - `shutdown` drains gracefully and flushes the shared cache file.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use canal::dse::{DseEngine, ResultCache, SweepOutcome};
+use canal::pnr::BatchedNativePlacer;
+use canal::service::proto::{point_result_from_json, request_line};
+use canal::service::{
+    Client, DseParams, Frame, GenParams, Request, ServeOptions, Server, SessionState,
+    SimParams, StateOptions, PROTO_VERSION,
+};
+use canal::util::json::Json;
+
+/// Bind a daemon on an ephemeral loopback port with a pinned native
+/// placer (so references computed in-process share the cache identity).
+fn spawn_server(
+    cache_path: Option<std::path::PathBuf>,
+) -> (std::net::SocketAddr, Arc<SessionState>, std::thread::JoinHandle<Result<(), String>>) {
+    let state = Arc::new(
+        SessionState::with_placer(
+            StateOptions { workers: 2, cache_path, ic_capacity: 8 },
+            Box::new(BatchedNativePlacer::default()),
+        )
+        .unwrap(),
+    );
+    let server = Server::bind_with_state(
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: 6,
+            ..Default::default()
+        },
+        Arc::clone(&state),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+    (addr, state, handle)
+}
+
+/// The standard tiny sweep: 2 configs × 1 app × 1 seed on a 4x4 array.
+fn tiny_params() -> DseParams {
+    DseParams {
+        width: 4,
+        height: 4,
+        tracks: vec![2, 3],
+        apps: vec!["pointwise4".into()],
+        sa_moves: 4,
+        ..Default::default()
+    }
+}
+
+/// In-process reference for a parameter set — the sequential CLI path.
+fn reference_for(params: &DseParams) -> SweepOutcome {
+    let mut engine = DseEngine::in_memory();
+    engine.run(&params.to_spec(), &BatchedNativePlacer::default()).unwrap()
+}
+
+/// Every wire point must match the reference bit-for-bit.
+fn assert_points_match(data: &Json, reference: &SweepOutcome) {
+    let points = data.get("points").and_then(Json::as_arr).expect("points array");
+    assert_eq!(points.len(), reference.points.len());
+    for (wire, (job, direct)) in points.iter().zip(&reference.points) {
+        assert_eq!(
+            wire.get("config").and_then(Json::as_str),
+            Some(job.key.config.0.as_str())
+        );
+        assert_eq!(wire.get("app").and_then(Json::as_str), Some(job.key.app.as_str()));
+        assert_eq!(wire.get("seed").and_then(Json::as_u64), Some(job.key.seed));
+        let r = point_result_from_json(wire).unwrap();
+        assert_eq!(&r, direct, "daemon point must be bit-identical to the engine");
+        assert_eq!(r.runtime_ns.to_bits(), direct.runtime_ns.to_bits());
+        assert_eq!(r.critical_path_ps.to_bits(), direct.critical_path_ps.to_bits());
+    }
+}
+
+#[test]
+fn concurrent_clients_bit_identical_then_warm_rerun_zero_pnr_zero_sims() {
+    let (addr, state, handle) = spawn_server(None);
+    let params = tiny_params();
+    let reference = reference_for(&params);
+
+    // Phase 1: 4 concurrent clients fire the same sweep at once.
+    let results: Vec<Json> = std::thread::scope(|scope| {
+        let barrier = std::sync::Barrier::new(4);
+        let mut joins = Vec::new();
+        for _ in 0..4 {
+            let (barrier, params) = (&barrier, &params);
+            joins.push(scope.spawn(move || {
+                let mut c = Client::connect(&addr.to_string()).unwrap();
+                barrier.wait();
+                c.call(&Request::Dse(params.clone())).unwrap()
+            }));
+        }
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    for data in &results {
+        assert_points_match(data, &reference);
+    }
+    // All sessions together computed each unique job exactly once.
+    assert_eq!(state.stats().pnr_runs.load(Ordering::Relaxed), 2);
+    assert_eq!(state.stats().sims.load(Ordering::Relaxed), 2);
+
+    // Phase 2: a repeated identical request is served entirely from the
+    // warm SessionState — the result frame's own stats prove it.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let warm = c.call(&Request::Dse(params.clone())).unwrap();
+    let stats = warm.get("stats").expect("per-request stats");
+    assert_eq!(stats.get("pnr_runs").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("sims").and_then(Json::as_u64), Some(0));
+    assert_eq!(stats.get("cache_hits").and_then(Json::as_u64), Some(2));
+    assert_points_match(&warm, &reference);
+
+    // ...and so does the cumulative stats frame.
+    let global = c.call(&Request::Stats).unwrap();
+    assert_eq!(global.get("pnr_runs").and_then(Json::as_u64), Some(2));
+    assert_eq!(global.get("sims").and_then(Json::as_u64), Some(2));
+    assert!(global.get("cache_entries").and_then(Json::as_u64) >= Some(2));
+
+    let bye = c.call(&Request::Shutdown).unwrap();
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn malformed_frames_and_mid_request_disconnects_are_contained() {
+    use std::io::{BufRead, BufReader, Write};
+    let (addr, state, handle) = spawn_server(None);
+
+    // A malformed line gets an id-0 error frame and closes THAT
+    // connection only.
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"this is not a frame\n").unwrap();
+        let mut reader = BufReader::new(s.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        match Frame::parse(line.trim_end()).unwrap() {
+            Frame::Error { id, error } => {
+                assert_eq!(id, 0);
+                assert!(error.contains("malformed"), "{error}");
+            }
+            other => panic!("expected an error frame, got {other:?}"),
+        }
+        line.clear();
+        assert_eq!(reader.read_line(&mut line).unwrap(), 0, "connection must be closed");
+    }
+
+    // Mid-request disconnect: fire a cold sweep and hang up before any
+    // frame comes back. The daemon finishes the work and caches it.
+    {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        let line = format!("{}\n", request_line(1, &Request::Dse(tiny_params())));
+        s.write_all(line.as_bytes()).unwrap();
+        drop(s);
+    }
+
+    // A fresh session asking for the same sweep gets correct, complete
+    // results — by joining the abandoned computation or hitting its
+    // cached output, never by recomputing.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let data = c.call(&Request::Dse(tiny_params())).unwrap();
+    assert_points_match(&data, &reference_for(&tiny_params()));
+    // The abandoned request absorbs its counters asynchronously; poll
+    // briefly, then assert nothing was computed twice.
+    for _ in 0..200 {
+        if state.stats().pnr_runs.load(Ordering::Relaxed) >= 2 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert_eq!(state.stats().pnr_runs.load(Ordering::Relaxed), 2);
+
+    // The daemon is still healthy.
+    let pong = c.call(&Request::Ping).unwrap();
+    assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn full_request_surface_roundtrips_on_one_connection() {
+    let (addr, _state, handle) = spawn_server(None);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+
+    let pong = c.call(&Request::Ping).unwrap();
+    assert_eq!(pong.get("proto").and_then(Json::as_u64), Some(PROTO_VERSION));
+
+    let info = c.call(&Request::Info).unwrap();
+    assert_eq!(info.get("placer").and_then(Json::as_str), Some("native-gd"));
+    assert!(info.get("apps").and_then(Json::as_arr).unwrap().len() >= 6);
+
+    let gen = c
+        .call(&Request::Generate(GenParams { width: 4, height: 4, ..Default::default() }))
+        .unwrap();
+    assert!(gen.get("nodes").and_then(Json::as_u64).unwrap() > 0);
+    assert!(gen.get("config_bits").and_then(Json::as_u64).unwrap() > 0);
+    assert!(gen.get("modules").and_then(|m| m.get("mux")).is_some());
+
+    let sim = c
+        .call(&Request::Simulate(SimParams {
+            app: "gaussian".into(),
+            tokens: 32,
+            ..Default::default()
+        }))
+        .unwrap();
+    assert_eq!(sim.get("tokens").and_then(Json::as_u64), Some(32));
+    assert!(sim.get("cycles").and_then(Json::as_u64).unwrap() >= 32);
+
+    // `pnr` is a one-job sweep through the shared cache.
+    let pnr = c
+        .call(&Request::Pnr(DseParams { apps: vec!["pointwise4".into()], ..tiny_params() }))
+        .unwrap();
+    let points = pnr.get("points").and_then(Json::as_arr).unwrap();
+    assert_eq!(points.len(), 2, "tiny_params sweeps two track counts");
+    assert_eq!(points[0].get("routed").and_then(Json::as_bool), Some(true));
+
+    // Request-level errors keep the connection serving.
+    assert!(c.call(&Request::Pnr(DseParams::default())).is_err());
+    assert!(c.call(&Request::Dse(DseParams::default())).is_err(), "nothing to do");
+    assert!(c
+        .call(&Request::Simulate(SimParams { app: "nope".into(), ..Default::default() }))
+        .is_err());
+
+    let area = c
+        .call(&Request::Area(DseParams {
+            width: 4,
+            height: 4,
+            tracks: vec![2, 3],
+            ..Default::default()
+        }))
+        .unwrap();
+    assert_eq!(area.get("areas").and_then(Json::as_arr).unwrap().len(), 2);
+    assert!(area
+        .get("areas_table")
+        .and_then(Json::as_str)
+        .unwrap()
+        .contains("sb_area_um2"));
+
+    // fig10 is area-only: a cheap end-to-end figure regeneration.
+    let fig = c.call(&Request::Figure { which: "fig10".into(), sa_moves: 4 }).unwrap();
+    assert!(fig.get("table").and_then(Json::as_str).unwrap().contains("Fig. 10"));
+    assert!(c.call(&Request::Figure { which: "fig99".into(), sa_moves: 4 }).is_err());
+
+    // Progress frames stream ahead of the terminal result.
+    let mut progress = Vec::new();
+    let _ = c
+        .call_with(&Request::Dse(tiny_params()), |m| progress.push(m.to_string()))
+        .unwrap();
+    assert!(!progress.is_empty(), "dse requests must stream progress");
+    assert!(progress.iter().any(|m| m.contains("jobs")), "{progress:?}");
+
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn shutdown_drains_and_flushes_the_shared_cache_file() {
+    let path = std::env::temp_dir()
+        .join(format!("canal_service_e2e_{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let (addr, _state, handle) = spawn_server(Some(path.clone()));
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.call(&Request::Dse(tiny_params())).unwrap();
+    let bye = c.call(&Request::Shutdown).unwrap();
+    assert_eq!(bye.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(bye.get("flushed").and_then(Json::as_bool), Some(true));
+    handle.join().unwrap().unwrap();
+
+    // The flushed file holds every computed point and a fresh daemon
+    // would come up warm from it.
+    let cache = ResultCache::at(&path).unwrap();
+    assert_eq!(cache.len(), 2);
+    std::fs::remove_file(&path).unwrap();
+}

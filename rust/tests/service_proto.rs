@@ -1,0 +1,174 @@
+//! Protocol-level tests of the daemon wire format, from the outside
+//! (integration view): the CLI↔wire lockstep of sweep parameters, the
+//! single-line framing guarantee under hostile content, and exact
+//! result reconstruction.
+
+use canal::dse::{
+    outcome_json, stats_json, DseEngine, EngineStats, PointResult, SeedMode, Sizing, SweepSpec,
+};
+use canal::dsl::{InterconnectConfig, OutputTrackMode, SbTopology};
+use canal::pnr::{FlowParams, NativePlacer, SaParams};
+use canal::service::proto::{parse_request, point_result_from_json, request_line};
+use canal::service::{DseParams, Frame, Request};
+use canal::sim::FabricKind;
+use canal::util::json::Json;
+
+/// The spec a pre-service `canal dse` would have built from
+/// `--tracks 3,4 --topologies wilton,disjoint --apps gaussian
+///  --seeds 2 --seed 5 --sa-moves 6 --derived-seeds --area`,
+/// constructed by hand the way the old CLI code did.
+fn hand_built_cli_spec() -> SweepSpec {
+    SweepSpec {
+        name: "cli".into(),
+        base: InterconnectConfig {
+            width: 8,
+            height: 8,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks: vec![3, 4],
+        topologies: vec![SbTopology::Wilton, SbTopology::Disjoint],
+        output_tracks: vec![],
+        sb_sides: vec![],
+        cb_sides: vec![],
+        fabrics: vec![],
+        sizing: Sizing::Fixed,
+        apps: vec!["gaussian".into()],
+        seeds: vec![5, 6],
+        seed_mode: SeedMode::Derived,
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 6, ..Default::default() },
+            ..Default::default()
+        },
+        area: true,
+    }
+}
+
+fn equivalent_params() -> DseParams {
+    DseParams {
+        tracks: vec![3, 4],
+        topologies: vec![SbTopology::Wilton, SbTopology::Disjoint],
+        apps: vec!["gaussian".into()],
+        seed: 5,
+        seeds: 2,
+        derived_seeds: true,
+        sa_moves: 6,
+        area: true,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn wire_params_build_the_same_jobs_as_the_cli_spec() {
+    let direct = hand_built_cli_spec().jobs("native-gd").unwrap();
+    let via_params = equivalent_params().to_spec().jobs("native-gd").unwrap();
+    assert_eq!(direct.len(), via_params.len());
+    for (a, b) in direct.iter().zip(&via_params) {
+        assert_eq!(a.key, b.key, "CLI and wire construction must agree on job keys");
+        assert_eq!(a.flow.seed, b.flow.seed, "derived seed streams must agree");
+        assert_eq!(a.fabric, b.fabric);
+    }
+}
+
+#[test]
+fn params_survive_the_wire_with_jobs_intact() {
+    // params → request line → parsed request → to_spec must preserve
+    // the exact job list (the daemon sees what the client meant).
+    let p = DseParams {
+        fabrics: vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 3 }],
+        out_tracks: vec![OutputTrackMode::AllTracks, OutputTrackMode::Pinned],
+        sb_sides: vec![4, 3],
+        tight: Some(1.25),
+        ..equivalent_params()
+    };
+    let line = request_line(9, &Request::Dse(p.clone()));
+    let (id, parsed) = parse_request(&line).unwrap();
+    assert_eq!(id, 9);
+    let Request::Dse(back) = parsed else { panic!("wrong request kind") };
+    assert_eq!(back, p);
+    let a = p.to_spec().jobs("native-gd").unwrap();
+    let b = back.to_spec().jobs("native-gd").unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.key, y.key);
+    }
+}
+
+#[test]
+fn frames_survive_hostile_table_content() {
+    // Rendered tables are full of newlines and box-drawing characters;
+    // error strings can contain anything a config descriptor can. None
+    // of it may break the one-line framing.
+    let hostile_table = "Fig. X — results\n| a | b |\n|---|---|\n| 1 | \"q\\u{7}\" |\n";
+    let frames = [
+        Frame::Result {
+            id: 1,
+            data: Json::Obj(vec![("table".into(), Json::str(hostile_table))]),
+        },
+        Frame::Error { id: 2, error: "descriptor `8x8 t=5\nfabric=rv-full:2`".into() },
+        Frame::Progress { id: 3, message: "phase\r\ndone".into() },
+    ];
+    for f in &frames {
+        let line = f.to_line();
+        assert!(
+            !line.bytes().any(|b| b == b'\n' || b == b'\r'),
+            "frame embeds a newline: {line:?}"
+        );
+        assert_eq!(&Frame::parse(&line).unwrap(), f);
+    }
+    // And a full NDJSON exchange splits back into exactly 3 frames.
+    let stream: String = frames.iter().map(|f| f.to_line() + "\n").collect();
+    let parsed: Vec<Frame> =
+        stream.lines().map(|l| Frame::parse(l).unwrap()).collect();
+    assert_eq!(parsed.len(), 3);
+    assert_eq!(&parsed[..], &frames[..]);
+}
+
+#[test]
+fn unroutable_and_nan_points_reconstruct_exactly() {
+    // An unroutable cached point (all-zero metrics) and a NaN metric
+    // (written as null) must both survive the wire.
+    let spec = SweepSpec {
+        base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+        apps: vec!["pointwise".into()],
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut engine = DseEngine::in_memory();
+    let mut out = engine.run(&spec, &NativePlacer::default()).unwrap();
+    out.points[0].1 = PointResult::unroutable();
+    let doc = Json::parse(&outcome_json(&out).render_line()).unwrap();
+    let wire = &doc.get("points").and_then(Json::as_arr).unwrap()[0];
+    let back = point_result_from_json(wire).unwrap();
+    assert_eq!(back, PointResult::unroutable());
+
+    let mut nan_point = PointResult::unroutable();
+    nan_point.routed = true;
+    nan_point.runtime_ns = f64::NAN;
+    out.points[0].1 = nan_point;
+    let doc = Json::parse(&outcome_json(&out).render_line()).unwrap();
+    let wire = &doc.get("points").and_then(Json::as_arr).unwrap()[0];
+    let back = point_result_from_json(wire).unwrap();
+    assert!(back.runtime_ns.is_nan(), "null metric must come back as NaN");
+}
+
+#[test]
+fn engine_stats_serialize_with_the_coalesced_counter() {
+    let s = EngineStats {
+        jobs: 10,
+        cache_hits: 4,
+        coalesced: 3,
+        pnr_runs: 3,
+        sims: 3,
+        ..Default::default()
+    };
+    let j = stats_json(&s);
+    assert_eq!(j.get("jobs").and_then(Json::as_u64), Some(10));
+    assert_eq!(j.get("coalesced").and_then(Json::as_u64), Some(3));
+    assert_eq!(j.get("pnr_runs").and_then(Json::as_u64), Some(3));
+    // Single-line by construction — frames embed this object.
+    assert!(!j.render_line().contains('\n'));
+}
