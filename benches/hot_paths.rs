@@ -191,6 +191,47 @@ fn main() {
             cold_f_s,
             cold_f.points.len() as f64 / cold_f_s
         );
+
+        // Incremental PnR: the same tracks × fabric neighborhood sweep,
+        // cold-scratch vs warm-started (`EngineOptions::warm_start`) —
+        // warm points skip global placement and replay donor route
+        // trees, so this pair is the feature's headline perf line.
+        use canal::dse::EngineOptions;
+        let neighbor_spec = SweepSpec {
+            name: "bench_warm_neighbors".into(),
+            fabrics: vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }],
+            seeds: vec![1],
+            ..spec.clone()
+        };
+        let mut engine_scratch = DseEngine::in_memory();
+        let t0 = std::time::Instant::now();
+        let scratch_out = engine_scratch.run(&neighbor_spec, &NativePlacer::default()).unwrap();
+        let scratch_s = t0.elapsed().as_secs_f64();
+        let np = scratch_out.points.len() as f64;
+        println!(
+            "dse neighbor sweep cold-scratch ({} points)         {:.3}s   [{:.1} points/s]",
+            scratch_out.points.len(),
+            scratch_s,
+            np / scratch_s
+        );
+        let mut engine_warm = DseEngine::new(EngineOptions {
+            workers: 0,
+            cache_path: None,
+            warm_start: true,
+        })
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let warm_out = engine_warm.run(&neighbor_spec, &NativePlacer::default()).unwrap();
+        let warm_s = t0.elapsed().as_secs_f64();
+        println!(
+            "dse neighbor sweep warm-start ({} warm starts, {} nets reused, {} rerouted) \
+             {:.3}s   [{:.1} points/s]",
+            warm_out.stats.warm_starts,
+            warm_out.stats.nets_reused,
+            warm_out.stats.nets_rerouted,
+            warm_s,
+            np / warm_s
+        );
     }
 
     // --- L2/L1: global placement backends ---------------------------------

@@ -22,6 +22,7 @@ fn main() {
     let mut engine = DseEngine::new(EngineOptions {
         workers: 0, // one per core
         cache_path: Some("dse_cache.json".into()),
+        warm_start: false,
     })
     .expect("dse engine");
 

@@ -1,0 +1,452 @@
+//! PnR artifact cache for incremental warm-starts: per
+//! `(ConfigDescriptor, app, seed)` it keeps the *solution* — the
+//! legalized placement and every routed sink path — not just the
+//! metrics the [`super::cache::ResultCache`] stores. A neighboring sweep
+//! point (small [`AxisDelta`] distance) replays the donor placement and
+//! trees and repairs only what its axis change invalidated.
+//!
+//! ## File format (`*_artifacts.json`, version 1)
+//!
+//! ```json
+//! { "version": 1,
+//!   "entries": [
+//!     { "config": "<ConfigDescriptor string>", "app": "harris", "seed": 1,
+//!       "placement": [[0,1],[2,3]],
+//!       "nets": [[["1,1,port,out,data_out_0","1,1,sb,east,out,0", "..."]]] } ] }
+//! ```
+//!
+//! `placement` is tile coordinates in packed-vertex order. `nets` is one
+//! entry per net (packed-app net order), each a list of sink paths, each
+//! path a list of *logical node tokens*. `NodeId`s are per-graph arena
+//! indices and mean nothing across configurations, so nodes are stored
+//! by identity — `(x, y, kind)` — and re-resolved against the target
+//! graph with [`crate::ir::RoutingGraph::find`]; a token with no
+//! counterpart (e.g. a track removed by the axis change) voids that
+//! net's seed. Every value is an integer or string, so a load → save
+//! cycle is byte-identical (asserted by the warm smoke).
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::ir::{NodeId, NodeKind, RoutingGraph, SbIo, Side};
+use crate::util::json::Json;
+
+use super::spec::{ConfigDescriptor, JobKey};
+
+/// Artifact file schema version.
+pub const ARTIFACT_VERSION: u64 = 1;
+
+/// The reusable outcome of one PnR run.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct PnrArtifact {
+    /// Final legalized tile coordinates, packed-vertex order.
+    pub placement: Vec<(u16, u16)>,
+    /// Per net (packed-app net order): per sink, the routed path as
+    /// logical node tokens (see [`encode_node`]).
+    pub nets: Vec<Vec<Vec<String>>>,
+}
+
+impl PnrArtifact {
+    /// Re-resolve the stored sink paths against a target graph. Per net:
+    /// `Some(paths)` when *every* node on every path exists in `rg`,
+    /// `None` when the axis change removed any of them — that net is
+    /// rerouted from scratch.
+    pub fn resolve(&self, rg: &RoutingGraph) -> Vec<Option<Vec<Vec<NodeId>>>> {
+        self.nets
+            .iter()
+            .map(|paths| {
+                paths
+                    .iter()
+                    .map(|p| p.iter().map(|tok| decode_node(rg, tok)).collect::<Option<Vec<_>>>())
+                    .collect::<Option<Vec<_>>>()
+            })
+            .collect()
+    }
+}
+
+/// Encode a node by logical identity: `x,y,<kind...>`. Stable across
+/// configurations — the uniform interconnect keeps `(x, y, kind)` node
+/// identity under track growth and side changes.
+pub fn encode_node(rg: &RoutingGraph, id: NodeId) -> String {
+    let n = rg.node(id);
+    match &n.kind {
+        NodeKind::SwitchBox { side, io, track } => {
+            format!("{},{},sb,{},{},{}", n.x, n.y, side.name(), io.name(), track)
+        }
+        NodeKind::Port { name, input } => {
+            format!("{},{},port,{},{}", n.x, n.y, if *input { "in" } else { "out" }, name)
+        }
+        NodeKind::Register { side, track } => {
+            format!("{},{},reg,{},{}", n.x, n.y, side.name(), track)
+        }
+        NodeKind::RegMux { side, track } => {
+            format!("{},{},rmux,{},{}", n.x, n.y, side.name(), track)
+        }
+    }
+}
+
+fn parse_side(s: &str) -> Option<Side> {
+    Side::ALL.into_iter().find(|side| side.name() == s)
+}
+
+/// Decode a [`encode_node`] token against `rg`; `None` when the node
+/// does not exist there (or the token is malformed).
+pub fn decode_node(rg: &RoutingGraph, token: &str) -> Option<NodeId> {
+    let mut parts = token.splitn(4, ',');
+    let x: u16 = parts.next()?.parse().ok()?;
+    let y: u16 = parts.next()?.parse().ok()?;
+    let tag = parts.next()?;
+    let tail = parts.next()?;
+    let kind = match tag {
+        "sb" => {
+            let (side, rest) = tail.split_once(',')?;
+            let (io, track) = rest.split_once(',')?;
+            let io = match io {
+                "in" => SbIo::In,
+                "out" => SbIo::Out,
+                _ => return None,
+            };
+            NodeKind::SwitchBox { side: parse_side(side)?, io, track: track.parse().ok()? }
+        }
+        "port" => {
+            let (dir, name) = tail.split_once(',')?;
+            NodeKind::Port { name: name.to_string(), input: dir == "in" }
+        }
+        "reg" => {
+            let (side, track) = tail.split_once(',')?;
+            NodeKind::Register { side: parse_side(side)?, track: track.parse().ok()? }
+        }
+        "rmux" => {
+            let (side, track) = tail.split_once(',')?;
+            NodeKind::RegMux { side: parse_side(side)?, track: track.parse().ok()? }
+        }
+        _ => return None,
+    };
+    rg.find(x, y, &kind)
+}
+
+/// Sibling path for the artifact store: `dse_cache.json` →
+/// `dse_cache_artifacts.json`.
+pub fn artifact_path_for(cache: &Path) -> PathBuf {
+    let stem = cache.file_stem().and_then(|s| s.to_str()).unwrap_or("dse_cache");
+    cache.with_file_name(format!("{stem}_artifacts.json"))
+}
+
+/// Thread-safe artifact store, optionally backed by a JSON file.
+/// Workers insert artifacts *during* a sweep (later groups seed from
+/// earlier ones in the same run), so unlike [`super::ResultCache`] the
+/// map sits behind a mutex and all methods take `&self`.
+#[derive(Default)]
+pub struct PnrArtifactCache {
+    path: Option<PathBuf>,
+    map: Mutex<BTreeMap<JobKey, Arc<PnrArtifact>>>,
+}
+
+impl PnrArtifactCache {
+    /// Unbacked store (donors live only within this engine's lifetime).
+    pub fn in_memory() -> PnrArtifactCache {
+        PnrArtifactCache::default()
+    }
+
+    /// Store backed by `path` — same contract as `ResultCache::at`:
+    /// missing file = empty store (created immediately, so an unwritable
+    /// path fails before any PnR is spent), corrupt file = loud error.
+    pub fn at(path: &Path) -> Result<PnrArtifactCache, String> {
+        let cache = PnrArtifactCache {
+            path: Some(path.to_path_buf()),
+            map: Mutex::new(BTreeMap::new()),
+        };
+        match std::fs::read_to_string(path) {
+            Ok(text) => cache.load_json(&text).map_err(|e| format!("{}: {e}", path.display()))?,
+            Err(e) if e.kind() == io::ErrorKind::NotFound => cache.save()?,
+            Err(e) => return Err(format!("{}: {e}", path.display())),
+        }
+        Ok(cache)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn get(&self, key: &JobKey) -> Option<Arc<PnrArtifact>> {
+        self.map.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn insert(&self, key: JobKey, artifact: PnrArtifact) {
+        self.map.lock().unwrap().insert(key, Arc::new(artifact));
+    }
+
+    /// Best donor for `key`: the compatible entry (same app, same seed,
+    /// matching non-axis descriptor parts) with the smallest
+    /// [`AxisDelta`](super::spec::AxisDelta) distance ≤ `max_distance`.
+    /// Ties resolve to the first in `BTreeMap` key order, so donor
+    /// choice is deterministic for a given store content.
+    pub fn best_donor(
+        &self,
+        key: &JobKey,
+        max_distance: u32,
+    ) -> Option<(u32, ConfigDescriptor, Arc<PnrArtifact>)> {
+        let map = self.map.lock().unwrap();
+        let mut best: Option<(u32, &JobKey, &Arc<PnrArtifact>)> = None;
+        for (k, art) in map.iter() {
+            if k.app != key.app || k.seed != key.seed {
+                continue;
+            }
+            let Some(d) = key.config.reuse_distance(&k.config) else { continue };
+            if d > max_distance {
+                continue;
+            }
+            if best.map(|(bd, _, _)| d < bd).unwrap_or(true) {
+                best = Some((d, k, art));
+            }
+        }
+        best.map(|(d, k, art)| (d, k.config.clone(), Arc::clone(art)))
+    }
+
+    /// Merge entries from artifact-file text.
+    pub fn load_json(&self, text: &str) -> Result<(), String> {
+        let doc = Json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_u64).ok_or("missing version")?;
+        if version != ARTIFACT_VERSION {
+            return Err(format!("unsupported artifact version {version}"));
+        }
+        let entries = doc.get("entries").and_then(Json::as_arr).ok_or("missing entries")?;
+        let mut map = self.map.lock().unwrap();
+        for (i, entry) in entries.iter().enumerate() {
+            let (key, art) = entry_from_json(entry).map_err(|e| format!("entry {i}: {e}"))?;
+            map.insert(key, Arc::new(art));
+        }
+        Ok(())
+    }
+
+    /// Full store as JSON text (entries in key order — stable).
+    pub fn to_json(&self) -> String {
+        let map = self.map.lock().unwrap();
+        let entries: Vec<Json> = map.iter().map(|(k, a)| entry_json(k, a)).collect();
+        Json::Obj(vec![
+            ("version".into(), Json::num_u64(ARTIFACT_VERSION)),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+        .render()
+    }
+
+    /// Persist to the backing file (no-op for in-memory stores). Same
+    /// temp-file + rename discipline as the result cache.
+    pub fn save(&self) -> Result<(), String> {
+        match &self.path {
+            Some(path) => self.save_to(path),
+            None => Ok(()),
+        }
+    }
+
+    pub fn save_to(&self, path: &Path) -> Result<(), String> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json()).map_err(|e| format!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn entry_json(key: &JobKey, a: &PnrArtifact) -> Json {
+    let placement: Vec<Json> = a
+        .placement
+        .iter()
+        .map(|&(x, y)| Json::Arr(vec![Json::num_u64(x as u64), Json::num_u64(y as u64)]))
+        .collect();
+    let nets: Vec<Json> = a
+        .nets
+        .iter()
+        .map(|paths| {
+            Json::Arr(
+                paths
+                    .iter()
+                    .map(|p| Json::Arr(p.iter().map(|t| Json::str(t)).collect()))
+                    .collect(),
+            )
+        })
+        .collect();
+    Json::Obj(vec![
+        ("config".into(), Json::str(&key.config.0)),
+        ("app".into(), Json::str(&key.app)),
+        ("seed".into(), Json::num_u64(key.seed)),
+        ("placement".into(), Json::Arr(placement)),
+        ("nets".into(), Json::Arr(nets)),
+    ])
+}
+
+fn entry_from_json(v: &Json) -> Result<(JobKey, PnrArtifact), String> {
+    let str_field = |k: &str| -> Result<String, String> {
+        v.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing `{k}`"))
+    };
+    let key = JobKey {
+        config: ConfigDescriptor(str_field("config")?),
+        app: str_field("app")?,
+        seed: v.get("seed").and_then(Json::as_u64).ok_or("missing `seed`")?,
+    };
+    let placement = v
+        .get("placement")
+        .and_then(Json::as_arr)
+        .ok_or("missing `placement`")?
+        .iter()
+        .map(|p| {
+            let xy = p.as_arr().filter(|a| a.len() == 2).ok_or("bad placement entry")?;
+            let coord = |j: &Json| -> Result<u16, String> {
+                j.as_u64()
+                    .and_then(|n| u16::try_from(n).ok())
+                    .ok_or_else(|| "bad placement coordinate".to_string())
+            };
+            Ok((coord(&xy[0])?, coord(&xy[1])?))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    let nets = v
+        .get("nets")
+        .and_then(Json::as_arr)
+        .ok_or("missing `nets`")?
+        .iter()
+        .map(|paths| {
+            paths
+                .as_arr()
+                .ok_or("bad net entry")?
+                .iter()
+                .map(|p| {
+                    p.as_arr()
+                        .ok_or("bad path entry")?
+                        .iter()
+                        .map(|t| {
+                            t.as_str().map(str::to_string).ok_or_else(|| "bad node token".into())
+                        })
+                        .collect::<Result<Vec<String>, String>>()
+                })
+                .collect::<Result<Vec<_>, String>>()
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok((key, PnrArtifact { placement, nets }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{InterconnectConfig, SbTopology};
+
+    fn key(config: &str, app: &str, seed: u64) -> JobKey {
+        JobKey { config: ConfigDescriptor(config.into()), app: app.into(), seed }
+    }
+
+    fn art() -> PnrArtifact {
+        PnrArtifact {
+            placement: vec![(0, 1), (2, 3)],
+            nets: vec![vec![vec![
+                "1,1,port,out,data_out_0".into(),
+                "1,1,sb,east,out,0".into(),
+                "2,1,sb,west,in,0".into(),
+                "2,1,port,in,data_in_0".into(),
+            ]]],
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_byte_identical() {
+        let c = PnrArtifactCache::in_memory();
+        c.insert(key("cfg-A", "harris", 1), art());
+        c.insert(key("cfg-B", "harris", 1), PnrArtifact { placement: vec![], nets: vec![] });
+        let text = c.to_json();
+        let back = PnrArtifactCache::in_memory();
+        back.load_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(*back.get(&key("cfg-A", "harris", 1)).unwrap(), art());
+        assert_eq!(back.to_json(), text, "re-emission must be byte-identical");
+    }
+
+    #[test]
+    fn file_backing_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("canal_artifacts_test_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let c = PnrArtifactCache::at(&path).unwrap();
+            assert!(c.is_empty());
+            c.insert(key("cfg-A", "harris", 7), art());
+            c.save().unwrap();
+        }
+        let c = PnrArtifactCache::at(&path).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(*c.get(&key("cfg-A", "harris", 7)).unwrap(), art());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_versioned_files_are_loud() {
+        let c = PnrArtifactCache::in_memory();
+        assert!(c.load_json("{not json").is_err());
+        assert!(c.load_json(r#"{"version": 99, "entries": []}"#).is_err());
+        assert!(c.load_json(r#"{"version": 1, "entries": [{"config": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn node_tokens_resolve_by_identity_across_track_growth() {
+        let cfg3 = InterconnectConfig {
+            width: 4,
+            height: 4,
+            num_tracks: 3,
+            sb_topology: SbTopology::Wilton,
+            mem_column_period: 3,
+            ..Default::default()
+        };
+        let cfg4 = InterconnectConfig { num_tracks: 4, ..cfg3.clone() };
+        let ic3 = crate::dsl::create_uniform_interconnect(&cfg3);
+        let ic4 = crate::dsl::create_uniform_interconnect(&cfg4);
+        let g3 = ic3.graph(16);
+        let g4 = ic4.graph(16);
+        // Every node of the 3-track graph encodes to a token that
+        // resolves in the 4-track graph (node identity is preserved by
+        // construction of the uniform interconnect)...
+        for id in g3.ids() {
+            let tok = encode_node(g3, id);
+            let there = decode_node(g4, &tok).expect("identity preserved under track growth");
+            assert_eq!(g3.node(id).kind, g4.node(there).kind);
+        }
+        // ...and a track-3 token does not resolve in the 3-track graph
+        // but does in the 4-track one.
+        let tok = "1,1,sb,north,in,3";
+        assert_eq!(decode_node(g3, tok), None);
+        assert!(decode_node(g4, tok).is_some());
+    }
+
+    #[test]
+    fn best_donor_picks_nearest_compatible_entry() {
+        use crate::pnr::FlowParams;
+        use crate::sim::FabricKind;
+        use crate::dse::SeedMode;
+        let flow = FlowParams::default();
+        let of = |tracks: u16| {
+            let cfg = InterconnectConfig { num_tracks: tracks, ..Default::default() };
+            ConfigDescriptor::of(&cfg, &flow, "native-gd", SeedMode::Raw, FabricKind::Static)
+        };
+        let c = PnrArtifactCache::in_memory();
+        let mk = |cfg: ConfigDescriptor, seed| JobKey { config: cfg, app: "a".into(), seed };
+        c.insert(mk(of(3), 1), art());
+        c.insert(mk(of(6), 1), PnrArtifact { placement: vec![(9, 9)], nets: vec![] });
+        c.insert(mk(of(5), 2), art()); // wrong seed — never a donor
+        let (d, donor_cfg, donor) = c.best_donor(&mk(of(4), 1), 12).expect("donor");
+        assert_eq!(d, 1);
+        assert_eq!(donor_cfg, of(3));
+        assert_eq!(*donor, art());
+        // Nothing within range.
+        assert!(c.best_donor(&mk(of(4), 1), 0).is_none());
+        // Wrong app.
+        let other = JobKey { config: of(4), app: "b".into(), seed: 1 };
+        assert!(c.best_donor(&other, 12).is_none());
+    }
+}

@@ -25,6 +25,20 @@
 //! - [`DseEngine`] owns a cache and some options and delegates to
 //!   [`run_sweep`] — the one-shot CLI shape.
 //!
+//! With [`EngineOptions::warm_start`] on, the executor additionally
+//! threads a [`PnrArtifactCache`] through the run ([`execute_jobs_with`]
+//! / [`run_sweep_with`]): job groups are reordered along a greedy
+//! nearest-neighbor chain over [`super::spec::AxisDelta`] reuse
+//! distance and sharded in contiguous blocks (so a group usually runs
+//! right after its best donor finished), and every job first looks for
+//! a donor artifact within [`MAX_DONOR_DISTANCE`] — found ⇒ the point
+//! runs [`crate::pnr::run_flow_warm`] (seeded placement + routed-tree
+//! replay) instead of the batched scratch pipeline, falling back to a
+//! scratch solve when the seed cannot converge. Warm-started numbers
+//! are *not* bit-identical to scratch (and the set of warm starts can
+//! depend on the worker schedule through in-run donor visibility);
+//! only the flag-off path carries the determinism contract below.
+//!
 //! Every *routed* cold point additionally runs the flattened elastic
 //! (ready-valid) simulator on the point's own routing — channel
 //! capacities derived from the registers each routed net crosses under
@@ -55,13 +69,14 @@ use crate::area::{area_of, AreaModel};
 use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
 use crate::ir::Interconnect;
 use crate::pnr::{
-    finish_flow_scratch, prepare_point, AppGraph, FlowResult, GlobalPlacer, PlacementInstance,
-    RouterScratch,
+    finish_flow_scratch, prepare_point, run_flow_warm, AppGraph, FlowResult, GlobalPlacer,
+    PlacementInstance, RouterScratch, WarmSeed,
 };
 use crate::sim::{routed_capacities, RvSim, StallPattern};
 
+use super::artifacts::{artifact_path_for, encode_node, PnrArtifact, PnrArtifactCache};
 use super::cache::ResultCache;
-use super::spec::{app_by_name, AreaPoint, Job, PointResult, SweepSpec};
+use super::spec::{app_by_name, AreaPoint, Job, PointResult, SweepSpec, MAX_DONOR_DISTANCE};
 
 /// Elastic-simulation workload per point: tokens every stream sink
 /// drains. Capped below `FlowParams::workload_items` (the runtime
@@ -104,6 +119,14 @@ pub struct EngineOptions {
     /// JSON cache backing file (`dse_cache.json` by convention); `None`
     /// ⇒ in-memory cache only.
     pub cache_path: Option<std::path::PathBuf>,
+    /// Incremental PnR (off by default): keep a [`PnrArtifactCache`] of
+    /// legalized placements and routed trees (persisted next to
+    /// `cache_path` when file-backed, see [`artifact_path_for`]) and
+    /// warm-start each point from its nearest axis-delta donor, with
+    /// delta-aware job-group ordering. Flag-off runs are bit-identical
+    /// to the executor without this feature; flag-on results stay legal
+    /// but are not bit-identical to scratch.
+    pub warm_start: bool,
 }
 
 /// Resolve a worker-count option: `0` ⇒ one per available core.
@@ -141,6 +164,17 @@ pub struct EngineStats {
     /// Batched global-placement solves (one `place_batch` call per cold
     /// job group; each covers the whole group's analytic problems).
     pub batched_solves: u64,
+    /// Points warm-started from a donor artifact (seeded placement +
+    /// routed-tree replay). Always zero unless
+    /// [`EngineOptions::warm_start`] is on.
+    pub warm_starts: u64,
+    /// Donor sink-path trees replayed verbatim across all warm-started
+    /// points (counted per net).
+    pub nets_reused: u64,
+    /// Nets PathFinder re-routed inside warm-started points: invalid or
+    /// conflicting donor trees, plus every net of a point that fell
+    /// back to scratch routing.
+    pub nets_rerouted: u64,
 }
 
 impl EngineStats {
@@ -153,6 +187,9 @@ impl EngineStats {
         self.configs_built += other.configs_built;
         self.steals += other.steals;
         self.batched_solves += other.batched_solves;
+        self.warm_starts += other.warm_starts;
+        self.nets_reused += other.nets_reused;
+        self.nets_rerouted += other.nets_rerouted;
     }
 }
 
@@ -203,6 +240,46 @@ pub fn execute_jobs(
     placer: &(dyn GlobalPlacer + Sync),
     ics: &dyn InterconnectSource,
 ) -> ColdOutcome {
+    execute_jobs_with(jobs, workers, placer, ics, None)
+}
+
+/// Snapshot one finished flow for the warm-start store: the legalized
+/// placement plus every routed sink path encoded as graph-independent
+/// node tokens (re-resolved per target fabric on reuse).
+fn artifact_of(ic: &Interconnect, bit_width: u8, flow: &FlowResult) -> PnrArtifact {
+    let rg = ic.graph(bit_width);
+    PnrArtifact {
+        placement: flow.placement.pos.clone(),
+        nets: flow
+            .routing
+            .trees
+            .iter()
+            .map(|t| {
+                t.sink_paths
+                    .iter()
+                    .map(|p| p.iter().map(|&n| encode_node(rg, n)).collect())
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+/// [`execute_jobs`], optionally threading a warm-start artifact store
+/// through the run. `warm: None` is byte-for-byte the plain cold path
+/// (same grouping, same round-robin sharding, same batched solves —
+/// [`execute_jobs`] simply delegates here). `warm: Some(..)` enables
+/// incremental PnR: groups are chained nearest-neighbor by axis delta,
+/// sharded in contiguous blocks, and each job tries
+/// [`PnrArtifactCache::best_donor`] before falling into the batched
+/// scratch pipeline; every successfully routed point (warm or cold)
+/// deposits its own artifact for later neighbors.
+pub fn execute_jobs_with(
+    jobs: &[&Job],
+    workers: usize,
+    placer: &(dyn GlobalPlacer + Sync),
+    ics: &dyn InterconnectSource,
+    warm: Option<&PnrArtifactCache>,
+) -> ColdOutcome {
     // Unique configurations among the jobs, keyed by the full config
     // descriptor (the grouping identity: fabric and flow variants group
     // separately even when the interconnect build is shared). Each slot
@@ -246,13 +323,54 @@ pub fn execute_jobs(
         groups[g].push(i);
     }
 
-    // Shard the job groups round-robin; idle workers steal whole
-    // groups from the back of the most-loaded victim.
+    // Delta-aware sweep ordering (warm runs only): chain the job groups
+    // greedily by nearest axis-delta reuse distance — start at the first
+    // group, then always hop to the closest unvisited neighbor (ties to
+    // the lowest index; incomparable descriptors sort last). Each group
+    // then executes right after the group most likely to have deposited
+    // its best donor artifacts.
+    if warm.is_some() && groups.len() > 1 {
+        let rep: Vec<_> = groups.iter().map(|g| &jobs[g[0]].key.config).collect();
+        let mut order: Vec<usize> = Vec::with_capacity(groups.len());
+        let mut taken = vec![false; groups.len()];
+        let mut cur = 0usize;
+        order.push(cur);
+        taken[cur] = true;
+        while order.len() < groups.len() {
+            let mut best: Option<(u32, usize)> = None;
+            for (cand, cand_taken) in taken.iter().enumerate() {
+                if *cand_taken {
+                    continue;
+                }
+                let d = rep[cur].reuse_distance(rep[cand]).unwrap_or(u32::MAX - 1);
+                if best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                    best = Some((d, cand));
+                }
+            }
+            let (_, next) = best.expect("unvisited group remains");
+            order.push(next);
+            taken[next] = true;
+            cur = next;
+        }
+        groups = order.into_iter().map(|gi| std::mem::take(&mut groups[gi])).collect();
+    }
+
+    // Shard the job groups; idle workers steal whole groups from the
+    // back of the most-loaded victim. Cold runs shard round-robin
+    // (unchanged); warm runs shard the nearest-neighbor chain in
+    // contiguous blocks so chain neighbors stay on the same worker.
     let workers = resolve_workers(workers);
     let shards: Vec<Mutex<VecDeque<usize>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
-    for k in 0..groups.len() {
-        shards[k % workers].lock().expect("shard").push_back(k);
+    if warm.is_some() {
+        let per = (groups.len() + workers - 1) / workers;
+        for k in 0..groups.len() {
+            shards[(k / per.max(1)).min(workers - 1)].lock().expect("shard").push_back(k);
+        }
+    } else {
+        for k in 0..groups.len() {
+            shards[k % workers].lock().expect("shard").push_back(k);
+        }
     }
 
     let computed: Vec<OnceLock<PointResult>> = (0..jobs.len()).map(|_| OnceLock::new()).collect();
@@ -261,6 +379,9 @@ pub fn execute_jobs(
     let configs_built = AtomicU64::new(0);
     let steals = AtomicU64::new(0);
     let batched_solves = AtomicU64::new(0);
+    let warm_starts = AtomicU64::new(0);
+    let nets_reused = AtomicU64::new(0);
+    let nets_rerouted = AtomicU64::new(0);
 
     if !jobs.is_empty() {
         std::thread::scope(|scope| {
@@ -278,6 +399,9 @@ pub fn execute_jobs(
                 let configs_built = &configs_built;
                 let steals = &steals;
                 let batched_solves = &batched_solves;
+                let warm_starts = &warm_starts;
+                let nets_reused = &nets_reused;
+                let nets_rerouted = &nets_rerouted;
                 scope.spawn(move || {
                     let mut scratch = RouterScratch::new();
                     while let Some(g) = next_group(shards, me, steals) {
@@ -290,9 +414,29 @@ pub fn execute_jobs(
                             }
                             ic
                         });
-                        // Phase 1 for every job in the group: pack +
-                        // problem construction.
-                        let prepared: Vec<crate::pnr::PreparedPoint> = group
+                        // Warm runs only: look up each job's nearest
+                        // donor artifact up front, so the cold
+                        // remainder still shares one batched solve. On
+                        // a cold run every slot is `None` and the group
+                        // takes exactly the historical path.
+                        let donors: Vec<Option<Arc<PnrArtifact>>> = group
+                            .iter()
+                            .map(|&i| {
+                                warm.and_then(|w| {
+                                    w.best_donor(&jobs[i].key, MAX_DONOR_DISTANCE)
+                                        .map(|(_, _, art)| art)
+                                })
+                            })
+                            .collect();
+                        let cold_members: Vec<usize> = group
+                            .iter()
+                            .zip(&donors)
+                            .filter(|(_, donor)| donor.is_none())
+                            .map(|(&i, _)| i)
+                            .collect();
+                        // Phase 1 for every cold job in the group: pack
+                        // + problem construction.
+                        let prepared: Vec<crate::pnr::PreparedPoint> = cold_members
                             .iter()
                             .map(|&i| {
                                 let job = jobs[i];
@@ -301,44 +445,106 @@ pub fn execute_jobs(
                             })
                             .collect();
                         // Phase 2: ONE batched global solve for the
-                        // whole group.
-                        let batch: Vec<PlacementInstance> = prepared
-                            .iter()
-                            .map(|pp| PlacementInstance {
-                                problem: &pp.problem,
-                                xs0: &pp.xs0,
-                                ys0: &pp.ys0,
-                            })
-                            .collect();
-                        batched_solves.fetch_add(1, Ordering::Relaxed);
-                        let solved = placer.place_batch(&batch);
-                        assert_eq!(
-                            solved.len(),
-                            group.len(),
-                            "placer `{}` returned {} results for a {}-job group",
-                            placer.name(),
-                            solved.len(),
-                            group.len()
-                        );
-                        // Phase 3 per job: legalize → SA → route →
-                        // STA, reusing the worker's router scratch;
-                        // then the elastic simulation of the routed
-                        // point under the job's fabric.
-                        for ((&i, pp), (xs, ys)) in group.iter().zip(&prepared).zip(&solved) {
+                        // group's cold remainder (skipped entirely when
+                        // every member found a donor).
+                        let solved = if prepared.is_empty() {
+                            Vec::new()
+                        } else {
+                            let batch: Vec<PlacementInstance> = prepared
+                                .iter()
+                                .map(|pp| PlacementInstance {
+                                    problem: &pp.problem,
+                                    xs0: &pp.xs0,
+                                    ys0: &pp.ys0,
+                                })
+                                .collect();
+                            batched_solves.fetch_add(1, Ordering::Relaxed);
+                            let solved = placer.place_batch(&batch);
+                            assert_eq!(
+                                solved.len(),
+                                cold_members.len(),
+                                "placer `{}` returned {} results for a {}-job batch",
+                                placer.name(),
+                                solved.len(),
+                                cold_members.len()
+                            );
+                            solved
+                        };
+                        // Phase 3 per job, in group order. Cold jobs:
+                        // legalize → SA → route → STA, reusing the
+                        // worker's router scratch. Warm jobs: seeded
+                        // placement + routed-tree replay
+                        // (`run_flow_warm`), with a private scratch
+                        // solve as fallback. Then the elastic
+                        // simulation of the routed point under the
+                        // job's fabric; routed points deposit their own
+                        // artifact for later neighbors.
+                        let mut cold_iter = prepared.iter().zip(&solved);
+                        for (&i, donor) in group.iter().zip(&donors) {
+                            let job = jobs[i];
+                            let app = &app_graphs[job.key.app.as_str()];
                             pnr_runs.fetch_add(1, Ordering::Relaxed);
-                            let result = match finish_flow_scratch(
-                                ic,
-                                pp,
-                                xs,
-                                ys,
-                                &jobs[i].flow,
-                                &mut scratch,
-                            ) {
+                            let flow = match donor {
+                                Some(art) => {
+                                    let net_paths = art.resolve(ic.graph(job.flow.bit_width));
+                                    let seed =
+                                        WarmSeed { placement: &art.placement, net_paths };
+                                    match run_flow_warm(ic, app, &job.flow, &seed, &mut scratch)
+                                    {
+                                        Ok((flow, reuse)) => {
+                                            warm_starts.fetch_add(1, Ordering::Relaxed);
+                                            nets_reused.fetch_add(
+                                                reuse.nets_reused as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                            nets_rerouted.fetch_add(
+                                                reuse.nets_rerouted as u64,
+                                                Ordering::Relaxed,
+                                            );
+                                            Ok(flow)
+                                        }
+                                        // Donor unusable (e.g. the
+                                        // array shrank below the app,
+                                        // or replay could not
+                                        // converge): full scratch
+                                        // solve, not counted as a warm
+                                        // start.
+                                        Err(_) => {
+                                            let pp = prepare_point(ic, app, &job.flow);
+                                            batched_solves.fetch_add(1, Ordering::Relaxed);
+                                            let solo = placer.place_batch(&[PlacementInstance {
+                                                problem: &pp.problem,
+                                                xs0: &pp.xs0,
+                                                ys0: &pp.ys0,
+                                            }]);
+                                            finish_flow_scratch(
+                                                ic,
+                                                &pp,
+                                                &solo[0].0,
+                                                &solo[0].1,
+                                                &job.flow,
+                                                &mut scratch,
+                                            )
+                                        }
+                                    }
+                                }
+                                None => {
+                                    let (pp, (xs, ys)) =
+                                        cold_iter.next().expect("one solve per cold member");
+                                    finish_flow_scratch(ic, pp, xs, ys, &job.flow, &mut scratch)
+                                }
+                            };
+                            let result = match flow {
                                 Ok(flow) => {
                                     let mut r = PointResult::from_flow(&flow);
                                     sims.fetch_add(1, Ordering::Relaxed);
-                                    let app = &app_graphs[jobs[i].key.app.as_str()];
-                                    simulate_point(app, &flow, jobs[i], ic, &mut r);
+                                    simulate_point(app, &flow, job, ic, &mut r);
+                                    if let Some(w) = warm {
+                                        w.insert(
+                                            job.key.clone(),
+                                            artifact_of(ic, job.flow.bit_width, &flow),
+                                        );
+                                    }
                                     r
                                 }
                                 Err(_) => PointResult::unroutable(),
@@ -357,6 +563,9 @@ pub fn execute_jobs(
         configs_built: configs_built.into_inner(),
         steals: steals.into_inner(),
         batched_solves: batched_solves.into_inner(),
+        warm_starts: warm_starts.into_inner(),
+        nets_reused: nets_reused.into_inner(),
+        nets_rerouted: nets_rerouted.into_inner(),
         ..Default::default()
     };
     let results = computed
@@ -432,6 +641,22 @@ pub fn run_sweep(
     cache: &mut ResultCache,
     ics: &dyn InterconnectSource,
 ) -> Result<SweepOutcome, String> {
+    run_sweep_with(spec, placer, workers, cache, ics, None)
+}
+
+/// [`run_sweep`], optionally threading a warm-start artifact store
+/// through the cold execution ([`execute_jobs_with`]). `warm: None` is
+/// exactly [`run_sweep`]; `warm: Some(..)` warm-starts cold points from
+/// their nearest donors and persists the (possibly grown) artifact
+/// store alongside the result cache whenever new PnR ran.
+pub fn run_sweep_with(
+    spec: &SweepSpec,
+    placer: &(dyn GlobalPlacer + Sync),
+    workers: usize,
+    cache: &mut ResultCache,
+    ics: &dyn InterconnectSource,
+    warm: Option<&PnrArtifactCache>,
+) -> Result<SweepOutcome, String> {
     let jobs = spec.jobs(placer.name())?;
     let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
 
@@ -451,7 +676,7 @@ pub fn run_sweep(
         }
     }
 
-    let cold = execute_jobs(&cold_jobs, workers, placer, ics);
+    let cold = execute_jobs_with(&cold_jobs, workers, placer, ics, warm);
     stats.absorb(&cold.stats);
 
     // Merge in canonical job order; feed new results to the cache.
@@ -472,6 +697,9 @@ pub fn run_sweep(
     }
     if stats.pnr_runs > 0 {
         cache.save()?;
+        if let Some(w) = warm {
+            w.save()?;
+        }
     }
 
     let areas =
@@ -485,7 +713,22 @@ pub fn run_sweep(
 pub struct DseEngine {
     opts: EngineOptions,
     cache: ResultCache,
+    /// Warm-start artifact store; `Some` iff `opts.warm_start`.
+    artifacts: Option<PnrArtifactCache>,
     lifetime: EngineStats,
+}
+
+/// The engine's artifact store for its options: file-backed next to the
+/// result cache when both `warm_start` and `cache_path` are set,
+/// in-memory when only `warm_start` is, absent otherwise.
+fn artifacts_for(opts: &EngineOptions) -> Result<Option<PnrArtifactCache>, String> {
+    if !opts.warm_start {
+        return Ok(None);
+    }
+    Ok(Some(match &opts.cache_path {
+        Some(path) => PnrArtifactCache::at(&artifact_path_for(path))?,
+        None => PnrArtifactCache::in_memory(),
+    }))
 }
 
 impl DseEngine {
@@ -494,7 +737,8 @@ impl DseEngine {
             Some(path) => ResultCache::at(path)?,
             None => ResultCache::in_memory(),
         };
-        Ok(DseEngine { opts, cache, lifetime: EngineStats::default() })
+        let artifacts = artifacts_for(&opts)?;
+        Ok(DseEngine { opts, cache, artifacts, lifetime: EngineStats::default() })
     }
 
     /// Engine with default options and an unbacked cache.
@@ -502,6 +746,7 @@ impl DseEngine {
         DseEngine {
             opts: EngineOptions::default(),
             cache: ResultCache::in_memory(),
+            artifacts: None,
             lifetime: EngineStats::default(),
         }
     }
@@ -509,13 +754,21 @@ impl DseEngine {
     /// Engine over a caller-provided cache (e.g. a
     /// [`ResultCache::snapshot`] of the service's shared cache — the
     /// figure drivers take `&mut DseEngine`, so the service runs them on
-    /// a snapshot-backed engine and merges new entries back).
+    /// a snapshot-backed engine and merges new entries back). The
+    /// artifact store (if `opts.warm_start`) stays in-memory here: a
+    /// snapshot-backed engine must not race the owner's artifact file.
     pub fn with_cache(opts: EngineOptions, cache: ResultCache) -> DseEngine {
-        DseEngine { opts, cache, lifetime: EngineStats::default() }
+        let artifacts = opts.warm_start.then(PnrArtifactCache::in_memory);
+        DseEngine { opts, cache, artifacts, lifetime: EngineStats::default() }
     }
 
     pub fn cache(&self) -> &ResultCache {
         &self.cache
+    }
+
+    /// The warm-start artifact store, when `opts.warm_start` is on.
+    pub fn artifacts(&self) -> Option<&PnrArtifactCache> {
+        self.artifacts.as_ref()
     }
 
     /// Counters accumulated over every `run` of this engine.
@@ -531,7 +784,14 @@ impl DseEngine {
         spec: &SweepSpec,
         placer: &(dyn GlobalPlacer + Sync),
     ) -> Result<SweepOutcome, String> {
-        let out = run_sweep(spec, placer, self.opts.workers, &mut self.cache, &BuildFresh)?;
+        let out = run_sweep_with(
+            spec,
+            placer,
+            self.opts.workers,
+            &mut self.cache,
+            &BuildFresh,
+            self.artifacts.as_ref(),
+        )?;
         self.lifetime.absorb(&out.stats);
         Ok(out)
     }
@@ -615,7 +875,12 @@ mod tests {
     fn worker_count_does_not_change_results() {
         let spec = quick_spec();
         let run_with = |workers: usize| {
-            let mut e = DseEngine::new(EngineOptions { workers, cache_path: None }).unwrap();
+            let mut e = DseEngine::new(EngineOptions {
+                workers,
+                cache_path: None,
+                warm_start: false,
+            })
+            .unwrap();
             e.run(&spec, &NativePlacer::default()).unwrap()
         };
         let sequential = run_with(1);
@@ -764,6 +1029,47 @@ mod tests {
         assert_eq!(warm_src.serves.load(Ordering::Relaxed), 1, "one serve per unique config");
         assert_eq!(warm.stats.pnr_runs, 2);
         assert_eq!(fresh.results, warm.results);
+    }
+
+    #[test]
+    fn warm_start_sweep_reuses_neighbor_artifacts_and_stays_close() {
+        use crate::sim::FabricKind;
+        // Tracks × fabric axes: the fabric neighbor is the *same* PnR
+        // problem (distance 1), so the nearest-neighbor chain guarantees
+        // at least one full-replay warm start; tracks neighbors reuse
+        // partially (Wilton's track permutation shifts through-SB
+        // paths).
+        let spec = SweepSpec {
+            fabrics: vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }],
+            ..quick_spec()
+        };
+        let mut cold_engine = DseEngine::in_memory();
+        let cold = cold_engine.run(&spec, &NativePlacer::default()).unwrap();
+        let mut warm_engine = DseEngine::new(EngineOptions {
+            workers: 1,
+            cache_path: None,
+            warm_start: true,
+        })
+        .unwrap();
+        let warm = warm_engine.run(&spec, &NativePlacer::default()).unwrap();
+        assert_eq!(warm.points.len(), cold.points.len());
+        assert!(warm.stats.warm_starts > 0, "neighbors must warm-start: {:?}", warm.stats);
+        assert!(warm.stats.nets_reused > 0, "fabric twin must replay trees: {:?}", warm.stats);
+        assert_eq!(warm.stats.pnr_runs, 4, "warm starts still count as PnR runs");
+        assert_eq!(warm_engine.artifacts().unwrap().len(), 4, "every routed point deposits");
+        for ((ja, ra), (jb, rb)) in cold.points.iter().zip(&warm.points) {
+            assert_eq!(ja.key, jb.key, "warm-start must not reorder the outcome");
+            assert!(rb.routed, "{:?}", jb.key);
+            // Acceptance bar: a warm-started point's critical path stays
+            // within 5% of the scratch result for the same key.
+            assert!(
+                rb.critical_path_ps <= ra.critical_path_ps * 1.05,
+                "{:?}: warm {} vs scratch {}",
+                jb.key,
+                rb.critical_path_ps,
+                ra.critical_path_ps
+            );
+        }
     }
 
     #[test]

@@ -41,20 +41,35 @@
 //! frozen interconnects), and [`run_sweep`] is the engine-handle form
 //! that borrows a caller-owned [`ResultCache`] instead of owning one.
 
+//!
+//! Incremental PnR (`EngineOptions::warm_start`, off by default): a
+//! [`PnrArtifactCache`] (in [`artifacts`]) keeps each point's legalized
+//! placement and routed sink paths; neighboring points (small
+//! [`AxisDelta`] reuse distance) are warm-started from the nearest
+//! donor — seeded placement plus [`crate::pnr::route_with_seed`] tree
+//! replay — and job groups are ordered along a nearest-neighbor chain
+//! so each group runs right after its best donor. See
+//! `docs/dse.md § Incremental PnR`.
+
+pub mod artifacts;
 pub mod cache;
 pub mod exec;
 pub mod report;
 pub mod spec;
 
+pub use artifacts::{
+    artifact_path_for, decode_node, encode_node, PnrArtifact, PnrArtifactCache, ARTIFACT_VERSION,
+};
 pub use cache::{ResultCache, CACHE_VERSION};
 pub use exec::{
-    area_points, execute_jobs, resolve_workers, run_sweep, BuildFresh, ColdOutcome, DseEngine,
-    EngineOptions, EngineStats, InterconnectSource, SweepOutcome, SIM_TOKENS_CAP,
+    area_points, execute_jobs, execute_jobs_with, resolve_workers, run_sweep, run_sweep_with,
+    BuildFresh, ColdOutcome, DseEngine, EngineOptions, EngineStats, InterconnectSource,
+    SweepOutcome, SIM_TOKENS_CAP,
 };
 pub use report::{
     areas_table, outcome_json, points_table, short_config, stats_json, ResultsStore,
 };
 pub use spec::{
-    app_by_name, dense_suite_keys, registry_keys, suite_keys, AreaPoint, ConfigDescriptor, Job,
-    JobKey, PointResult, SeedMode, Sizing, SweepSpec,
+    app_by_name, dense_suite_keys, registry_keys, suite_keys, AreaPoint, AxisDelta, AxisTokens,
+    ConfigDescriptor, Job, JobKey, PointResult, SeedMode, Sizing, SweepSpec, MAX_DONOR_DISTANCE,
 };

@@ -45,11 +45,18 @@ pub fn points_table(outcome: &SweepOutcome) -> Table {
         ]);
     }
     let s = &outcome.stats;
-    t.note(&format!(
+    let mut note = format!(
         "{} jobs: {} cached, {} PnR runs, {} sims, {} configs built, {} batched solves, \
          {} steals",
         s.jobs, s.cache_hits, s.pnr_runs, s.sims, s.configs_built, s.batched_solves, s.steals
-    ));
+    );
+    if s.warm_starts > 0 {
+        note.push_str(&format!(
+            ", {} warm starts ({} nets reused, {} rerouted)",
+            s.warm_starts, s.nets_reused, s.nets_rerouted
+        ));
+    }
+    t.note(&note);
     t
 }
 
@@ -85,6 +92,9 @@ pub fn stats_json(s: &EngineStats) -> Json {
         ("configs_built".into(), Json::num_u64(s.configs_built)),
         ("steals".into(), Json::num_u64(s.steals)),
         ("batched_solves".into(), Json::num_u64(s.batched_solves)),
+        ("warm_starts".into(), Json::num_u64(s.warm_starts)),
+        ("nets_reused".into(), Json::num_u64(s.nets_reused)),
+        ("nets_rerouted".into(), Json::num_u64(s.nets_rerouted)),
     ])
 }
 

@@ -78,6 +78,143 @@ impl ConfigDescriptor {
     }
 }
 
+/// Donor-eligibility radius for incremental PnR: a cached artifact whose
+/// [`AxisDelta::distance`] from the target exceeds this is too different
+/// to seed from, and the point falls back to the scratch flow.
+pub const MAX_DONOR_DISTANCE: u32 = 12;
+
+/// The sweep-axis tokens of a [`ConfigDescriptor`], parsed back out of
+/// the descriptor string. `rest` is the descriptor with those axis
+/// *values* removed — the delay model, placer, and every flow knob. Two
+/// points are reuse-compatible only when their `rest` strings match
+/// exactly; everything else is captured by [`AxisDelta`].
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct AxisTokens {
+    pub width: u16,
+    pub height: u16,
+    pub tracks: u16,
+    pub topology: String,
+    pub sb_sides: u8,
+    pub cb_sides: u8,
+    pub out_tracks: String,
+    /// Fabric label; "static" when the descriptor carries no fabric
+    /// token (the pre-fabric-axis default).
+    pub fabric: String,
+    pub rest: String,
+}
+
+/// Typed difference between two descriptors' axis tokens: how far apart
+/// two sweep points sit for placement/routing reuse. The weights order
+/// axes by how much of a routed solution each one invalidates — a track
+/// added keeps every old node and most edges, a topology swap rewires
+/// every switch box, a fabric change does not touch PnR at all.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct AxisDelta {
+    pub d_width: u32,
+    pub d_height: u32,
+    pub d_tracks: u32,
+    pub topology_changed: bool,
+    pub d_sb_sides: u32,
+    pub d_cb_sides: u32,
+    pub out_tracks_changed: bool,
+    pub fabric_changed: bool,
+}
+
+impl AxisDelta {
+    /// Reuse distance: 0 means the two points run an identical PnR
+    /// problem. Compared against [`MAX_DONOR_DISTANCE`].
+    pub fn distance(&self) -> u32 {
+        self.d_tracks
+            + 2 * (self.d_sb_sides + self.d_cb_sides)
+            + if self.topology_changed { 6 } else { 0 }
+            + if self.out_tracks_changed { 4 } else { 0 }
+            + if self.fabric_changed { 1 } else { 0 }
+            + 4 * (self.d_width + self.d_height)
+    }
+}
+
+/// Extract `marker`'s value (up to the next space) and the byte range
+/// the value occupies, searching from the start of `s`.
+fn axis_value<'s>(s: &'s str, marker: &str) -> Option<(std::ops::Range<usize>, &'s str)> {
+    let at = s.find(marker)?;
+    let start = at + marker.len();
+    let end = s[start..].find(' ').map(|i| start + i).unwrap_or(s.len());
+    Some((start..end, &s[start..end]))
+}
+
+impl ConfigDescriptor {
+    /// Parse the axis tokens back out of the descriptor string. Returns
+    /// `None` for descriptors this version cannot interpret (so unknown
+    /// formats are simply never used as donors).
+    pub fn axes(&self) -> Option<AxisTokens> {
+        let s = self.0.as_str();
+        let (r_dims, dims) = axis_value(s, "uniform ")?;
+        let (w, h) = dims.split_once('x')?;
+        let (r_topo, topo) = axis_value(s, " sb=")?;
+        let (r_tracks, tracks) = axis_value(s, " tracks=")?;
+        let (r_sb, sb_sides) = axis_value(s, " sb_sides=")?;
+        let (r_cb, cb_sides) = axis_value(s, " cb_sides=")?;
+        let (r_out, out_tracks) = axis_value(s, " out_tracks=")?;
+        // The fabric token is optional and, unlike the others, its
+        // *marker* is spliced out of `rest` too — otherwise a static
+        // descriptor (no token at all) could never match a fabric one.
+        let fabric = axis_value(s, " fabric=");
+        let mut ranges = vec![r_dims, r_topo, r_tracks, r_sb, r_cb, r_out];
+        let fabric_label = match &fabric {
+            Some((r, label)) => {
+                ranges.push(r.start - " fabric=".len()..r.end);
+                label.to_string()
+            }
+            None => "static".to_string(),
+        };
+        ranges.sort_by_key(|r| r.start);
+        let mut rest = String::with_capacity(s.len());
+        let mut at = 0;
+        for r in &ranges {
+            rest.push_str(&s[at..r.start]);
+            at = r.end;
+        }
+        rest.push_str(&s[at..]);
+        Some(AxisTokens {
+            width: w.parse().ok()?,
+            height: h.parse().ok()?,
+            tracks: tracks.parse().ok()?,
+            topology: topo.to_string(),
+            sb_sides: sb_sides.parse().ok()?,
+            cb_sides: cb_sides.parse().ok()?,
+            out_tracks: out_tracks.to_string(),
+            fabric: fabric_label,
+            rest,
+        })
+    }
+
+    /// Axis-wise difference to `other`, or `None` when either descriptor
+    /// is unparseable or the non-axis parts differ (different delay
+    /// model, flow knobs, placer, … — never reuse across those).
+    pub fn delta(&self, other: &ConfigDescriptor) -> Option<AxisDelta> {
+        let a = self.axes()?;
+        let b = other.axes()?;
+        if a.rest != b.rest {
+            return None;
+        }
+        Some(AxisDelta {
+            d_width: a.width.abs_diff(b.width) as u32,
+            d_height: a.height.abs_diff(b.height) as u32,
+            d_tracks: a.tracks.abs_diff(b.tracks) as u32,
+            topology_changed: a.topology != b.topology,
+            d_sb_sides: a.sb_sides.abs_diff(b.sb_sides) as u32,
+            d_cb_sides: a.cb_sides.abs_diff(b.cb_sides) as u32,
+            out_tracks_changed: a.out_tracks != b.out_tracks,
+            fabric_changed: a.fabric != b.fabric,
+        })
+    }
+
+    /// [`AxisDelta::distance`] to `other`, or `None` when incompatible.
+    pub fn reuse_distance(&self, other: &ConfigDescriptor) -> Option<u32> {
+        self.delta(other).map(|d| d.distance())
+    }
+}
+
 /// Cache key of one PnR job.
 #[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
 pub struct JobKey {
@@ -644,6 +781,52 @@ mod tests {
         assert_eq!(plain.fabric_axis(), vec![FabricKind::Static]);
         // configs() collapses the fabric axis (same interconnect build).
         assert_eq!(spec.configs().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn axis_tokens_round_trip_and_delta_weights() {
+        let flow = FlowParams::default();
+        let of = |cfg: &InterconnectConfig, f| {
+            ConfigDescriptor::of(cfg, &flow, "native-gd", SeedMode::Raw, f)
+        };
+        let base = InterconnectConfig::default();
+        let a = of(&base, FabricKind::Static);
+        let t = a.axes().expect("parseable");
+        assert_eq!(t.width, base.width);
+        assert_eq!(t.height, base.height);
+        assert_eq!(t.tracks, base.num_tracks);
+        assert_eq!(t.topology, base.sb_topology.name());
+        assert_eq!(t.sb_sides, base.sb_core_sides.0);
+        assert_eq!(t.cb_sides, base.cb_core_sides.0);
+        assert_eq!(t.out_tracks, base.output_tracks.name());
+        assert_eq!(t.fabric, "static");
+        // Identity delta.
+        let d = a.delta(&a).unwrap();
+        assert_eq!(d.distance(), 0);
+        // Tracks ±1 is the closest neighbor.
+        let tr = InterconnectConfig { num_tracks: base.num_tracks + 1, ..base.clone() };
+        assert_eq!(a.reuse_distance(&of(&tr, FabricKind::Static)), Some(1));
+        // A fabric change leaves the PnR problem untouched: distance 1,
+        // and the static descriptor (no fabric token) still parses
+        // compatibly against a fabric-tagged one.
+        let fb = of(&base, FabricKind::RvFullFifo { depth: 2 });
+        assert_eq!(fb.axes().unwrap().fabric, "rv-full:2");
+        assert_eq!(a.reuse_distance(&fb), Some(1));
+        // Sides, output mode, topology carry their weights.
+        let sb = InterconnectConfig { sb_core_sides: ConnectedSides(3), ..base.clone() };
+        assert_eq!(a.reuse_distance(&of(&sb, FabricKind::Static)), Some(2));
+        let ot =
+            InterconnectConfig { output_tracks: OutputTrackMode::Pinned, ..base.clone() };
+        assert_eq!(a.reuse_distance(&of(&ot, FabricKind::Static)), Some(4));
+        let topo = InterconnectConfig { sb_topology: SbTopology::Disjoint, ..base.clone() };
+        assert_eq!(a.reuse_distance(&of(&topo, FabricKind::Static)), Some(6));
+        // A delay-model (non-axis) difference is never reuse-compatible.
+        let mut slow = base.clone();
+        slow.delays.wire_ps += 10;
+        assert_eq!(a.reuse_distance(&of(&slow, FabricKind::Static)), None);
+        // ... and neither is a different placer.
+        let other = ConfigDescriptor::of(&base, &flow, "other", SeedMode::Raw, FabricKind::Static);
+        assert_eq!(a.reuse_distance(&other), None);
     }
 
     #[test]

@@ -14,7 +14,7 @@
 //!           [--fabric static,rv-full,rv-split]
 //!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
-//!           [--workers N] [--cache FILE] [--no-cache] [--json FILE]
+//!           [--workers N] [--cache FILE] [--no-cache] [--warm-start] [--json FILE]
 //! canal serve [--addr HOST:PORT] [--workers N] [--conn-threads N]
 //!             [--cache FILE] [--no-cache] [--ic-cap N] [--port-file FILE]
 //! canal client --addr HOST:PORT ping|info|stats|shutdown|dse|area|pnr|simulate
@@ -30,7 +30,10 @@
 //! re-runs and overlapping sweeps skip completed PnR. `canal dse figures`
 //! regenerates fig07/08/09/10/11/14/15 through one shared engine; `--smoke` is
 //! the CI end-to-end check (tiny 4x4 sweep, 2 workers, asserts a warm
-//! re-run performs zero PnR calls).
+//! re-run performs zero PnR calls). `--warm-start` turns on incremental
+//! PnR (`dse::artifacts`): neighboring points warm-start from cached
+//! placements and routed trees, with delta-aware sweep ordering;
+//! `--smoke --warm-start` is its own end-to-end check.
 //!
 //! Argument parsing is hand-rolled (clap is unavailable in the offline
 //! vendor set); flags are positional-order-independent `--key value`.
@@ -41,7 +44,10 @@ use std::process::ExitCode;
 use canal::apps;
 use canal::bitstream::{encode, Configuration};
 use canal::coordinator::{self, ExpOptions};
-use canal::dse::{points_table, DseEngine, EngineOptions, ResultsStore, SweepSpec};
+use canal::dse::{
+    artifact_path_for, points_table, DseEngine, EngineOptions, PnrArtifactCache, ResultsStore,
+    SweepSpec,
+};
 use canal::dsl::spec::{emit_spec, parse_spec};
 use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMode, SbTopology};
 use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
@@ -56,7 +62,7 @@ use canal::util::json::Json;
 /// one of them (e.g. `canal dse --no-cache figures`) would be swallowed
 /// as its value instead of staying positional.
 const BOOL_FLAGS: &[&str] =
-    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds", "help"];
+    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds", "warm-start", "help"];
 
 struct Args {
     flags: HashMap<String, String>,
@@ -383,8 +389,11 @@ fn dse_smoke() -> Result<(), String> {
     let run = |label: &str| -> Result<canal::dse::SweepOutcome, String> {
         // A fresh engine per pass: warm hits must come through the cache
         // *file*, proving persistence end-to-end.
-        let mut engine =
-            DseEngine::new(EngineOptions { workers: 2, cache_path: Some(cache.clone()) })?;
+        let mut engine = DseEngine::new(EngineOptions {
+            workers: 2,
+            cache_path: Some(cache.clone()),
+            warm_start: false,
+        })?;
         let out = engine.run(&spec, &placer)?;
         let s = &out.stats;
         println!(
@@ -412,6 +421,102 @@ fn dse_smoke() -> Result<(), String> {
         }
     }
     println!("smoke: PASS (warm re-run did zero PnR, results bit-identical)");
+    Ok(())
+}
+
+/// `canal dse --smoke --warm-start` — the incremental-PnR end-to-end
+/// check: seed one corner point, then sweep its tracks × fabric
+/// neighborhood through file-backed caches with warm starts on. The
+/// fabric neighbor is the *same* PnR problem (reuse distance 1), so the
+/// sweep must report `warm_starts > 0` and `nets_reused > 0`; the
+/// persisted artifact store must survive a load → re-emit round trip
+/// byte-identically.
+fn dse_smoke_warm() -> Result<(), String> {
+    let cache = std::env::temp_dir()
+        .join(format!("canal_dse_smoke_warm_{}.json", std::process::id()));
+    let artifacts = artifact_path_for(&cache);
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&artifacts);
+    let spec = |name: &str, tracks: Vec<u16>, fabrics: Vec<FabricKind>| SweepSpec {
+        name: name.into(),
+        base: InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks,
+        fabrics,
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1],
+        flow: canal::pnr::FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let placer = NativePlacer::default();
+    let engine_at = || {
+        DseEngine::new(EngineOptions {
+            workers: 2,
+            cache_path: Some(cache.clone()),
+            warm_start: true,
+        })
+    };
+    // Pass 1: seed the donor corner (tracks=2, static fabric).
+    let mut seed_engine = engine_at()?;
+    let seeded = seed_engine.run(&spec("warm-seed", vec![2], vec![]), &placer)?;
+    println!(
+        "smoke warm seed: {} jobs, {} PnR runs, {} artifacts",
+        seeded.stats.jobs,
+        seeded.stats.pnr_runs,
+        seed_engine.artifacts().map(|a| a.len()).unwrap_or(0)
+    );
+    // Pass 2: a FRESH engine over the same files sweeps the tracks ×
+    // fabric neighborhood — donors must come through the artifact file.
+    let mut engine = engine_at()?;
+    let out = engine.run(
+        &spec(
+            "warm-sweep",
+            vec![2, 3],
+            vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }],
+        ),
+        &placer,
+    )?;
+    let s = &out.stats;
+    println!(
+        "smoke warm sweep: {} jobs, {} cached, {} PnR runs",
+        s.jobs, s.cache_hits, s.pnr_runs
+    );
+    println!(
+        "warm_starts={} nets_reused={} nets_rerouted={}",
+        s.warm_starts, s.nets_reused, s.nets_rerouted
+    );
+    println!("{}", points_table(&out).render());
+    // Artifact round-trip: reload the persisted store and re-emit it.
+    let text = std::fs::read_to_string(&artifacts)
+        .map_err(|e| format!("{}: {e}", artifacts.display()))?;
+    let reloaded = PnrArtifactCache::in_memory();
+    let loaded = reloaded.load_json(&text);
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&artifacts);
+    loaded?;
+    if reloaded.to_json() != text {
+        return Err("smoke: artifact cache round-trip is not byte-identical".into());
+    }
+    println!("artifact cache round-trip: OK");
+    for (job, r) in &out.points {
+        if !r.routed {
+            return Err(format!("smoke: warm point failed to route: {:?}", job.key));
+        }
+    }
+    if s.warm_starts == 0 {
+        return Err("smoke: no warm starts in a neighbor sweep".into());
+    }
+    if s.nets_reused == 0 {
+        return Err("smoke: no routed trees reused across fabric twins".into());
+    }
+    println!("smoke: PASS (warm starts engaged, trees reused, artifacts persisted)");
     Ok(())
 }
 
@@ -448,7 +553,7 @@ fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
 
 fn cmd_dse(args: &Args) -> Result<(), String> {
     if args.has("smoke") {
-        return dse_smoke();
+        return if args.has("warm-start") { dse_smoke_warm() } else { dse_smoke() };
     }
     let workers = args.get("workers").and_then(|v| v.parse().ok()).unwrap_or(0);
     let cache_path = if args.has("no-cache") {
@@ -456,7 +561,8 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
     } else {
         Some(args.get("cache").unwrap_or("dse_cache.json").into())
     };
-    let mut engine = DseEngine::new(EngineOptions { workers, cache_path })?;
+    let warm_start = args.has("warm-start");
+    let mut engine = DseEngine::new(EngineOptions { workers, cache_path, warm_start })?;
 
     if args.positional.get(1).map(String::as_str) == Some("figures") {
         return dse_figures(args, &mut engine);
@@ -638,9 +744,13 @@ commands:
                       --seeds N  --seed S  --derived-seeds
               array:  --width W  --height H  --mem-period P  --tight SLACK
               flow:   --sa-moves N  --area
-              engine: --workers N  --cache FILE  --no-cache  --json FILE
+              engine: --workers N  --cache FILE  --no-cache  --warm-start  --json FILE
+              (--warm-start: incremental PnR — warm-start neighboring points from
+               cached placements + routed trees, delta-aware sweep ordering)
   dse figures  regenerate fig07/08/09/10/11/14/15 through one shared result cache
   dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
+               with --warm-start: incremental-PnR check (warm_starts > 0,
+               nets_reused > 0, artifact store round-trips byte-identically)
   serve       persistent daemon: concurrent sessions, one shared warm cache,
               coalesced in-flight sweeps (newline-delimited JSON over TCP)
               --addr HOST:PORT  --workers N  --conn-threads N  --cache FILE

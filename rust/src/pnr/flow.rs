@@ -2,15 +2,18 @@
 //! → detailed place → route → STA, with the α-sweep the paper describes
 //! ("sweeping α from 1 to 20 and choosing the best result post-routing").
 
-use crate::ir::Interconnect;
+use crate::ir::{Interconnect, NodeId};
 
 use super::app::AppGraph;
 use super::pack::{pack, PackedApp};
 use super::place::{
-    build_global_problem, detailed_place, initial_positions, legalize, GlobalPlacer,
-    GlobalProblem, NativePlacer, Placement, SaParams,
+    build_global_problem, detailed_place, initial_positions, legalize, refine_place,
+    seed_placement, GlobalPlacer, GlobalProblem, NativePlacer, Placement, SaParams,
 };
-use super::route::{route_with_scratch, RouterParams, RouterScratch, RoutingFailed, RoutingResult};
+use super::route::{
+    route_with_scratch, route_with_seed, RouteReuse, RouterParams, RouterScratch, RoutingFailed,
+    RoutingResult,
+};
 use super::timing::{analyze, TimingReport};
 
 /// Flow-level options.
@@ -186,6 +189,125 @@ pub fn finish_flow_scratch(
     })
 }
 
+/// Refinement temperature for warm-started detailed placement (see
+/// [`refine_place`]): low enough that the donor placement — already the
+/// output of a full anneal on a neighboring configuration — survives
+/// mostly intact, so its routed trees keep their terminals.
+pub const REFINE_TEMP0: f64 = 0.05;
+
+/// A donor's solution, resolved onto the target fabric: the final
+/// placement (packed-vertex order) and, per net (packed-app net order),
+/// the routed sink paths re-resolved to this graph's node ids — `None`
+/// where the axis change removed any node
+/// (see [`crate::dse::PnrArtifact::resolve`]).
+pub struct WarmSeed<'a> {
+    pub placement: &'a [(u16, u16)],
+    pub net_paths: Vec<Option<Vec<Vec<NodeId>>>>,
+}
+
+/// The warm-started flow: pack, map the donor placement onto this
+/// fabric ([`seed_placement`]), polish it with a low-temperature anneal
+/// ([`refine_place`] — the donor fulfills the global stage's role, so
+/// GD is skipped), then replay the donor's routed trees and repair the
+/// rest ([`route_with_seed`]). When tree replay cannot converge, the
+/// routing falls back to scratch PathFinder on the refined placement
+/// (all nets counted as rerouted); a donor that cannot even seed the
+/// placement (e.g. the target array shrank below the app) is an error —
+/// callers fall back to the full scratch flow.
+pub fn run_flow_warm(
+    ic: &Interconnect,
+    app: &AppGraph,
+    params: &FlowParams,
+    seed: &WarmSeed,
+    scratch: &mut RouterScratch,
+) -> Result<(FlowResult, RouteReuse), RoutingFailed> {
+    let packed = pack(app);
+    let start = seed_placement(&packed.app, ic, seed.placement).map_err(|e| RoutingFailed {
+        iterations: 0,
+        overused_nodes: 0,
+        detail: format!("warm-start legalization failed: {e}"),
+    })?;
+    let nets = packed.app.nets();
+    if seed.net_paths.len() != nets.len() {
+        return Err(RoutingFailed {
+            iterations: 0,
+            overused_nodes: 0,
+            detail: format!(
+                "donor has {} nets, app has {}",
+                seed.net_paths.len(),
+                nets.len()
+            ),
+        });
+    }
+
+    let alphas: Vec<f64> =
+        if params.alpha_sweep.is_empty() { vec![params.sa.alpha] } else { params.alpha_sweep.clone() };
+
+    let mut best: Option<(FlowResult, RouteReuse)> = None;
+    let mut last_err: Option<RoutingFailed> = None;
+    for &alpha in &alphas {
+        let sa = SaParams { alpha, seed: params.seed ^ alpha.to_bits(), ..params.sa };
+        let (placement, placement_cost) =
+            refine_place(&packed.app, ic, &nets, start.clone(), &sa, REFINE_TEMP0);
+        let routed = route_with_seed(
+            ic,
+            &packed.app,
+            &placement,
+            params.bit_width,
+            &params.router,
+            scratch,
+            &seed.net_paths,
+        );
+        let (routing, reuse) = match routed {
+            Ok(x) => x,
+            // Seed replay could not converge — negotiate everything from
+            // scratch on the refined placement before giving up.
+            Err(_) => match route_with_scratch(
+                ic,
+                &packed.app,
+                &placement,
+                params.bit_width,
+                &params.router,
+                scratch,
+            ) {
+                Ok(r) => {
+                    let n = r.trees.len();
+                    (r, RouteReuse { nets_reused: 0, nets_rerouted: n })
+                }
+                Err(e) => {
+                    last_err = Some(e);
+                    continue;
+                }
+            },
+        };
+        let timing = analyze(ic, &packed, &routing, params.bit_width, params.workload_items);
+        let better = best
+            .as_ref()
+            .map_or(true, |(b, _)| timing.critical_path_ps < b.timing.critical_path_ps);
+        if better {
+            best = Some((
+                FlowResult {
+                    packed: packed.clone(),
+                    placement,
+                    routing,
+                    timing,
+                    alpha,
+                    placement_cost,
+                },
+                reuse,
+            ));
+        }
+    }
+
+    best.ok_or_else(|| {
+        last_err.unwrap_or(RoutingFailed {
+            iterations: 0,
+            overused_nodes: 0,
+            detail: "no alpha produced a routable warm-started placement".into(),
+        })
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,6 +355,31 @@ mod tests {
         )
         .unwrap();
         assert!(swept.timing.critical_path_ps <= single.timing.critical_path_ps + 1e-9);
+    }
+
+    #[test]
+    fn warm_flow_reuses_own_solution_and_stays_legal() {
+        let ic = ic();
+        let app = apps::gaussian();
+        let params = FlowParams {
+            sa: SaParams { moves_per_node: 8, ..Default::default() },
+            ..Default::default()
+        };
+        let donor = run_flow(&ic, &app, &params).unwrap();
+        let seed = WarmSeed {
+            placement: &donor.placement.pos,
+            net_paths: donor.routing.trees.iter().map(|t| Some(t.sink_paths.clone())).collect(),
+        };
+        let mut scratch = RouterScratch::new();
+        let (warm, reuse) = run_flow_warm(&ic, &app, &params, &seed, &mut scratch).unwrap();
+        warm.placement.check(&warm.packed.app, &ic).unwrap();
+        assert_eq!(reuse.nets_reused + reuse.nets_rerouted, warm.routing.trees.len());
+        assert!(reuse.nets_reused > 0, "self-seed must reuse trees");
+        assert!(warm.timing.critical_path_ps > 0.0);
+        // A donor whose vertex count cannot match the app is a loud
+        // error (callers fall back to the scratch flow).
+        let bad = WarmSeed { placement: &donor.placement.pos[1..], net_paths: vec![] };
+        assert!(run_flow_warm(&ic, &app, &params, &bad, &mut scratch).is_err());
     }
 
     #[test]

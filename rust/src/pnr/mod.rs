@@ -15,17 +15,17 @@ pub mod timing;
 
 pub use app::{AppEdge, AppGraph, AppNode, AppNodeId, AppOp, Net};
 pub use flow::{
-    finish_flow_scratch, prepare_point, run_flow, run_flow_scratch, run_flow_with, FlowParams,
-    FlowResult, PreparedPoint,
+    finish_flow_scratch, prepare_point, run_flow, run_flow_scratch, run_flow_warm, run_flow_with,
+    FlowParams, FlowResult, PreparedPoint, WarmSeed, REFINE_TEMP0,
 };
 pub use pack::{pack, PackedApp};
 pub use place::{
     build_global_problem, detailed_place, global_cost_grad, global_cost_grad_into,
-    initial_positions, legalize, BatchedNativePlacer, GlobalPlacer, GlobalProblem, NativePlacer,
-    Placement, PlacementInstance, SaParams,
+    initial_positions, legalize, refine_place, seed_placement, BatchedNativePlacer, GlobalPlacer,
+    GlobalProblem, NativePlacer, Placement, PlacementInstance, SaParams,
 };
 pub use route::{
-    route, route_with_scratch, RouterParams, RouterScratch, RouteTree, RoutingFailed,
-    RoutingResult,
+    route, route_with_scratch, route_with_seed, RouteReuse, RouterParams, RouterScratch,
+    RouteTree, RoutingFailed, RoutingResult,
 };
 pub use timing::{analyze, TimingReport};

@@ -654,6 +654,58 @@ pub fn detailed_place(
     initial: Placement,
     params: &SaParams,
 ) -> (Placement, f64) {
+    anneal(app, ic, nets, initial, params, None)
+}
+
+/// Low-temperature refinement for warm-started points: the same Eq. 2
+/// annealer, but started at `temp0` instead of the cost-derived initial
+/// temperature. A donor placement is already the *output* of a full
+/// anneal on a neighboring configuration, so re-heating it would walk
+/// away from the very solution the routed-tree reuse depends on; a cold
+/// start only polishes it with (near-)downhill moves, keeping most net
+/// terminals where the donor's routed trees expect them.
+pub fn refine_place(
+    app: &AppGraph,
+    ic: &Interconnect,
+    nets: &[Net],
+    initial: Placement,
+    params: &SaParams,
+    temp0: f64,
+) -> (Placement, f64) {
+    anneal(app, ic, nets, initial, params, Some(temp0))
+}
+
+/// Map a donor placement onto `ic`: clamp tile coordinates into bounds,
+/// then snap every vertex to the nearest free compatible site via
+/// [`legalize`]. When the donor comes from a same-sized neighbor (the
+/// common case — track/side axes do not move tiles), each vertex's own
+/// tile is free and compatible at distance 0, so legalization returns
+/// the donor placement exactly.
+pub fn seed_placement(
+    app: &AppGraph,
+    ic: &Interconnect,
+    donor: &[(u16, u16)],
+) -> Result<Placement, String> {
+    if donor.len() != app.len() {
+        return Err(format!(
+            "donor placement has {} vertices, app has {}",
+            donor.len(),
+            app.len()
+        ));
+    }
+    let xs: Vec<f32> = donor.iter().map(|&(x, _)| x.min(ic.width - 1) as f32).collect();
+    let ys: Vec<f32> = donor.iter().map(|&(_, y)| y.min(ic.height - 1) as f32).collect();
+    legalize(app, ic, &xs, &ys)
+}
+
+fn anneal(
+    app: &AppGraph,
+    ic: &Interconnect,
+    nets: &[Net],
+    initial: Placement,
+    params: &SaParams,
+    temp0: Option<f64>,
+) -> (Placement, f64) {
     initial.check(app, ic).expect("detailed placement needs a legal start");
     let mut grid = vec![None; ic.width as usize * ic.height as usize];
     for (id, _) in app.iter() {
@@ -666,8 +718,9 @@ pub fn detailed_place(
     let n = app.len().max(1);
     st.rebuild_caches(params.gamma, params.alpha);
     let mut cost: f64 = st.net_cost_cache.iter().sum();
-    // Initial temperature: accept ~85% of average uphill moves early on.
-    let mut temp = (cost / nets.len().max(1) as f64).max(1.0);
+    // Initial temperature: accept ~85% of average uphill moves early on
+    // (or the caller's explicit refinement temperature).
+    let mut temp = temp0.unwrap_or_else(|| (cost / nets.len().max(1) as f64).max(1.0));
     let moves = params.moves_per_node * n;
 
     while temp > 1e-3 {
@@ -1017,5 +1070,42 @@ mod tests {
                 assert_eq!(ic.tile(x, 0).core.kind, CoreKind::Mem);
             }
         }
+    }
+
+    #[test]
+    fn seed_placement_returns_legal_donor_exactly() {
+        let (packed, ic, placement) = place_app("gaussian");
+        // A legal donor on the same fabric maps back to itself: every
+        // vertex's own tile is free and compatible at distance 0.
+        let seeded = seed_placement(&packed, &ic, &placement.pos).unwrap();
+        assert_eq!(seeded.pos, placement.pos);
+        // Out-of-bounds donor coordinates are clamped, then legalized.
+        let far: Vec<(u16, u16)> = placement.pos.iter().map(|&(x, y)| (x + 100, y)).collect();
+        let clamped = seed_placement(&packed, &ic, &far).unwrap();
+        clamped.check(&packed, &ic).unwrap();
+        // Wrong vertex count is a loud error, not a misaligned seed.
+        assert!(seed_placement(&packed, &ic, &placement.pos[1..]).is_err());
+    }
+
+    #[test]
+    fn refine_place_stays_legal_and_close_to_start() {
+        let (packed, ic, placement) = place_app("gaussian");
+        let nets = packed.nets();
+        let params = SaParams { moves_per_node: 4, ..Default::default() };
+        let (full, full_cost) = detailed_place(&packed, &ic, &nets, placement.clone(), &params);
+        full.check(&packed, &ic).unwrap();
+        // temp0 below the annealer's cutoff: zero moves, placement and
+        // cost come back untouched — the donor survives verbatim.
+        let (same, same_cost) = refine_place(&packed, &ic, &nets, full.clone(), &params, 1e-4);
+        assert_eq!(same.pos, full.pos);
+        assert_eq!(same_cost, full_cost);
+        // A real refinement temperature keeps legality and only improves
+        // an already-annealed start (all accepted moves are ~downhill).
+        let (refined, refined_cost) =
+            refine_place(&packed, &ic, &nets, full.clone(), &params, 0.05);
+        refined.check(&packed, &ic).unwrap();
+        // Low-temperature acceptance can take small uphill steps, but it
+        // must stay in the donor's neighborhood, never re-heat.
+        assert!(refined_cost <= full_cost + 2.0, "{refined_cost} vs {full_cost}");
     }
 }

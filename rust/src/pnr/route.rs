@@ -30,6 +30,12 @@ pub struct RouterParams {
     /// Extra cost discouraging routes through tiles no app vertex uses
     /// (the §3.4 "discourage the use of unused tiles" wire-cost shaping).
     pub unused_tile_penalty: f64,
+    /// Use the bucketed priority queue for the A* frontier instead of the
+    /// binary heap. An execution strategy, not a result knob: pop order
+    /// is bit-identical to the heap (asserted by a golden test), so —
+    /// like batching or scratch reuse — it is deliberately *not* part of
+    /// the [`crate::dse::ConfigDescriptor`] cache key.
+    pub bucket_queue: bool,
 }
 
 impl Default for RouterParams {
@@ -41,6 +47,7 @@ impl Default for RouterParams {
             hist_incr: 0.35,
             delay_weight: 1.0,
             unused_tile_penalty: 0.15,
+            bucket_queue: false,
         }
     }
 }
@@ -155,6 +162,107 @@ impl Ord for Cost {
     }
 }
 
+/// f-cost quantum of the bucketed frontier. Node base costs are ≥ 1.0,
+/// so a quarter-hop bucket keeps buckets small without many of them.
+const BUCKET_WIDTH: f64 = 0.25;
+/// Entries above this f-cost share one overflow bucket (still correct —
+/// the bucket is min-scanned — just slower; reachable path costs in our
+/// graphs never get near it).
+const BUCKET_OVERFLOW: usize = 4095;
+
+/// Monotone bucketed priority queue over A* f-costs — the ROADMAP's
+/// "bucket/radix queue" router variant. Pop order is *exactly* the
+/// binary heap's: globally minimal f (total order on f64), ties broken
+/// toward the larger [`NodeId`], which is what the max-heap over
+/// `(Reverse(Cost), NodeId)` yields. The lowest non-empty bucket must
+/// contain the global minimum (bucket index is monotone in f), and a
+/// linear min-scan inside it reproduces the heap's tie-break.
+#[derive(Default)]
+struct BucketQueue {
+    buckets: Vec<Vec<(f64, NodeId)>>,
+    /// Lowest possibly-non-empty bucket (entries pushed below it move
+    /// the cursor back — the heuristic is not strictly consistent).
+    cursor: usize,
+    len: usize,
+}
+
+impl BucketQueue {
+    fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.cursor = 0;
+        self.len = 0;
+    }
+
+    fn push(&mut self, f: f64, n: NodeId) {
+        let idx = ((f / BUCKET_WIDTH) as usize).min(BUCKET_OVERFLOW);
+        if idx >= self.buckets.len() {
+            self.buckets.resize_with(idx + 1, Vec::new);
+        }
+        self.buckets[idx].push((f, n));
+        if idx < self.cursor {
+            self.cursor = idx;
+        }
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(f64, NodeId)> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+        }
+        let b = &mut self.buckets[self.cursor];
+        let mut best = 0;
+        for i in 1..b.len() {
+            let (f, n) = b[i];
+            let (bf, bn) = b[best];
+            match f.total_cmp(&bf) {
+                std::cmp::Ordering::Less => best = i,
+                std::cmp::Ordering::Equal if n > bn => best = i,
+                _ => {}
+            }
+        }
+        self.len -= 1;
+        Some(b.swap_remove(best))
+    }
+}
+
+/// The A* frontier: implemented by the binary heap and the bucketed
+/// queue. Both pop in the same total order, so the search is
+/// bit-identical either way (golden-tested below).
+trait Frontier {
+    fn fclear(&mut self);
+    fn fpush(&mut self, f: f64, n: NodeId);
+    fn fpop(&mut self) -> Option<(f64, NodeId)>;
+}
+
+impl Frontier for std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)> {
+    fn fclear(&mut self) {
+        self.clear();
+    }
+    fn fpush(&mut self, f: f64, n: NodeId) {
+        self.push((std::cmp::Reverse(Cost(f)), n));
+    }
+    fn fpop(&mut self) -> Option<(f64, NodeId)> {
+        self.pop().map(|(std::cmp::Reverse(Cost(f)), n)| (f, n))
+    }
+}
+
+impl Frontier for BucketQueue {
+    fn fclear(&mut self) {
+        self.clear();
+    }
+    fn fpush(&mut self, f: f64, n: NodeId) {
+        self.push(f, n);
+    }
+    fn fpop(&mut self) -> Option<(f64, NodeId)> {
+        self.pop()
+    }
+}
+
 /// Reusable PathFinder buffers: every per-route allocation — occupancy,
 /// history, base costs, the flat coordinate lookups, the A* arenas and
 /// the frontier heap — lives here so repeat callers stop paying
@@ -188,8 +296,13 @@ pub struct RouterScratch {
     in_tree: Vec<bool>,
     /// Nodes whose scratch entries need resetting after this search.
     touched: Vec<u32>,
+    /// Per-node "already counted" bitmap for tree-occupancy marking
+    /// (dedup without the per-net sort+dedup allocation).
+    seen: Vec<bool>,
     /// Reusable A* frontier (cleared per search, capacity persists).
     pq: std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>,
+    /// Alternative bucketed frontier (see [`RouterParams::bucket_queue`]).
+    bq: BucketQueue,
 }
 
 impl RouterScratch {
@@ -225,7 +338,31 @@ impl RouterScratch {
         self.in_tree.clear();
         self.in_tree.resize(n, false);
         self.touched.clear();
+        self.seen.clear();
+        self.seen.resize(n, false);
         self.pq.clear();
+        self.bq.clear();
+    }
+
+    /// Count each distinct node of `paths` into `occ` exactly once,
+    /// using the `seen` bitmap instead of a sort+dedup allocation.
+    /// Cleared on exit; equivalent to iterating the deduplicated node
+    /// set (addition is order-independent).
+    fn mark_tree_occupancy(&mut self, paths: &[Vec<NodeId>]) {
+        for p in paths {
+            for &n in p {
+                let i = n.index();
+                if !self.seen[i] {
+                    self.seen[i] = true;
+                    self.occ[i] += 1;
+                }
+            }
+        }
+        for p in paths {
+            for &n in p {
+                self.seen[n.index()] = false;
+            }
+        }
     }
 }
 
@@ -333,9 +470,7 @@ pub fn route_with_scratch(
                 RoutingFailed { iterations: iter, overused_nodes: 0, detail }
             })?;
             // Mark occupancy for this net's nodes (once per net).
-            for &n in &tree_nodes(&tree) {
-                st.s.occ[n.index()] += 1;
-            }
+            st.s.mark_tree_occupancy(&tree);
             trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
         }
 
@@ -383,16 +518,183 @@ pub fn route_with_scratch(
     })
 }
 
+/// How much of a seeded routing was replayed vs repaired.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RouteReuse {
+    /// Donor trees accepted verbatim (every node exists, endpoints match
+    /// the current placement, no conflicts).
+    pub nets_reused: usize,
+    /// Nets routed by PathFinder (invalid or absent seeds).
+    pub nets_rerouted: usize,
+}
+
+/// Incremental routing: replay donor sink-path trees, keep every tree
+/// that is still valid on this graph and placement, and run negotiated
+/// PathFinder only over the rest. `seed_paths` is one entry per net
+/// (same order as `app.nets()`): `Some(paths)` with one path per sink,
+/// or `None` for "no seed, route from scratch".
+///
+/// A donor tree is accepted only when every path starts at the net's
+/// current source terminal and ends at its sink terminal, every
+/// consecutive pair is an edge of this graph, and no node is already
+/// claimed by another accepted tree — so accepted trees are legal by
+/// construction and hold through the final overuse check (their
+/// occupancy is frozen into every PathFinder iteration's baseline).
+/// Trees are considered in the same big-nets-first order PathFinder
+/// routes in, making acceptance (and therefore the result)
+/// deterministic for given seeds.
+pub fn route_with_seed(
+    ic: &Interconnect,
+    app: &AppGraph,
+    placement: &Placement,
+    bit_width: u8,
+    params: &RouterParams,
+    scratch: &mut RouterScratch,
+    seed_paths: &[Option<Vec<Vec<NodeId>>>],
+) -> Result<(RoutingResult, RouteReuse), RoutingFailed> {
+    let g = ic.compiled(bit_width);
+    let rg = ic.graph(bit_width);
+    let nets = app.nets();
+    if seed_paths.len() != nets.len() {
+        return Err(RoutingFailed {
+            iterations: 0,
+            overused_nodes: 0,
+            detail: format!(
+                "seed has {} nets, app has {}",
+                seed_paths.len(),
+                nets.len()
+            ),
+        });
+    }
+
+    let mut terminals: Vec<(NodeId, Vec<NodeId>)> = Vec::with_capacity(nets.len());
+    for net in &nets {
+        let src = terminal_node(rg, app, placement, net.src, net.src_port, false)
+            .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
+        let sinks = net
+            .sinks
+            .iter()
+            .map(|&(s, p)| terminal_node(rg, app, placement, s, p, true))
+            .collect::<Result<Vec<_>, _>>()
+            .map_err(|e| RoutingFailed { iterations: 0, overused_nodes: 0, detail: e })?;
+        terminals.push((src, sinks));
+    }
+
+    scratch.prepare(g, ic.width as usize * ic.height as usize, ic.width as u32, params);
+    for (id, _) in app.iter() {
+        let (x, y) = placement.of(id);
+        scratch.used_tiles[y as usize * ic.width as usize + x as usize] = true;
+    }
+
+    let mut order: Vec<usize> = (0..nets.len()).collect();
+    order.sort_by_key(|&i| std::cmp::Reverse(nets[i].sinks.len()));
+
+    // Accept valid donor trees, claiming occupancy as we go so a later
+    // seed conflicting with an earlier one is rejected, not overlaid.
+    let mut trees: Vec<Option<RouteTree>> = vec![None; nets.len()];
+    let mut reused = 0usize;
+    for &ni in &order {
+        let Some(paths) = &seed_paths[ni] else { continue };
+        let (src, sinks) = &terminals[ni];
+        if paths.len() != sinks.len() {
+            continue;
+        }
+        let endpoints_ok = paths.iter().zip(sinks).all(|(p, &sk)| {
+            p.first() == Some(src)
+                && p.last() == Some(&sk)
+                && p.windows(2).all(|w| g.fan_out(w[0]).contains(&w[1]))
+        });
+        if !endpoints_ok {
+            continue;
+        }
+        let conflict =
+            paths.iter().flatten().any(|&n| scratch.occ[n.index()] > 0);
+        if conflict {
+            continue;
+        }
+        scratch.mark_tree_occupancy(paths);
+        trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: paths.clone() });
+        reused += 1;
+    }
+
+    let pending: Vec<usize> = order.iter().copied().filter(|&ni| trees[ni].is_none()).collect();
+    let reuse = RouteReuse { nets_reused: reused, nets_rerouted: pending.len() };
+
+    let finish = |trees: Vec<Option<RouteTree>>, iterations: usize| {
+        let trees: Vec<RouteTree> = trees.into_iter().map(Option::unwrap).collect();
+        let nodes_used = trees.iter().map(|t| t.nodes().len()).sum();
+        RoutingResult { trees, iterations, nodes_used }
+    };
+    if pending.is_empty() {
+        // Everything replayed: no PathFinder iterations at all.
+        return Ok((finish(trees, 0), reuse));
+    }
+
+    // Accepted trees are frozen: their occupancy is the rip-up baseline
+    // of every iteration, so PathFinder negotiates the pending nets
+    // around them (a seeded node costs like any occupied node).
+    let seeded_occ = scratch.occ.clone();
+    let mut st = RouterState {
+        g,
+        names: rg,
+        params: *params,
+        pres_fac: params.pres_fac_init,
+        s: scratch,
+    };
+    let mut crit = vec![0.0f64; nets.len()];
+
+    for iter in 0..params.max_iterations {
+        st.s.occ.copy_from_slice(&seeded_occ);
+
+        for &ni in &pending {
+            let (src, sinks) = &terminals[ni];
+            let tree = route_net(&mut st, *src, sinks, crit[ni]).map_err(|detail| {
+                RoutingFailed { iterations: iter, overused_nodes: 0, detail }
+            })?;
+            st.s.mark_tree_occupancy(&tree);
+            trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
+        }
+
+        let overused: Vec<usize> = (0..g.len()).filter(|&i| st.s.occ[i] > 1).collect();
+        if overused.is_empty() {
+            return Ok((finish(trees, iter + 1), reuse));
+        }
+
+        for &i in &overused {
+            st.s.hist[i] += params.hist_incr * (st.s.occ[i] as f64 - 1.0);
+        }
+        st.pres_fac *= params.pres_fac_mult;
+
+        let delays: Vec<f64> = trees
+            .iter()
+            .map(|t| {
+                t.as_ref()
+                    .map(|t| {
+                        t.sink_paths
+                            .iter()
+                            .map(|p| path_delay(g, p))
+                            .fold(0.0f64, f64::max)
+                    })
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        let dmax = delays.iter().copied().fold(1e-9, f64::max);
+        for i in 0..nets.len() {
+            crit[i] = (delays[i] / dmax).clamp(0.0, 0.95);
+        }
+    }
+
+    let overused = st.s.occ.iter().filter(|&&o| o > 1).count();
+    Err(RoutingFailed {
+        iterations: params.max_iterations,
+        overused_nodes: overused,
+        detail: "congestion did not resolve around seeded trees".into(),
+    })
+}
+
 /// Delay along one path (node delays + wire delays), on the frozen graph.
 pub fn path_delay(g: &CompiledGraph, path: &[NodeId]) -> f64 {
     g.path_delay(path)
-}
-
-fn tree_nodes(paths: &[Vec<NodeId>]) -> Vec<NodeId> {
-    let mut v: Vec<NodeId> = paths.iter().flatten().copied().collect();
-    v.sort();
-    v.dedup();
-    v
 }
 
 /// Route one net: grow a Steiner tree by A*-ing from the current tree to
@@ -449,10 +751,29 @@ fn route_net(
 }
 
 /// A* from any node of `tree` (cost 0) to `sink`, using (and resetting)
-/// the arena scratch in `st`.
+/// the arena scratch in `st`. Dispatches to the heap or bucketed
+/// frontier; both pop in the same order, so the result is identical.
 fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Option<Vec<NodeId>> {
-    use std::cmp::Reverse;
+    if st.params.bucket_queue {
+        let mut q = std::mem::take(&mut st.s.bq);
+        let path = astar_with(st, tree, sink, crit, &mut q);
+        st.s.bq = q;
+        path
+    } else {
+        let mut q = std::mem::take(&mut st.s.pq);
+        let path = astar_with(st, tree, sink, crit, &mut q);
+        st.s.pq = q;
+        path
+    }
+}
 
+fn astar_with<F: Frontier>(
+    st: &mut RouterState,
+    tree: &[NodeId],
+    sink: NodeId,
+    crit: f64,
+    pq: &mut F,
+) -> Option<Vec<NodeId>> {
     let g = st.g;
     let (tx, ty) = (st.s.nx[sink.index()], st.s.ny[sink.index()]);
     // Admissible-ish heuristic: manhattan distance x a conservative
@@ -461,17 +782,16 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
         ((s.nx[n.index()] - tx).abs() + (s.ny[n.index()] - ty).abs()) as f64 * 0.9
     }
 
-    let mut pq = std::mem::take(&mut st.s.pq);
-    pq.clear();
+    pq.fclear();
     for &t in tree {
         st.s.dist[t.index()] = 0.0;
         st.s.prev[t.index()] = u32::MAX;
         st.s.touched.push(t.0);
-        pq.push((Reverse(Cost(h(st.s, t, tx, ty))), t));
+        pq.fpush(h(st.s, t, tx, ty), t);
     }
 
     let mut found = false;
-    while let Some((Reverse(Cost(f)), n)) = pq.pop() {
+    while let Some((f, n)) = pq.fpop() {
         let d = st.s.dist[n.index()];
         if f > d + h(st.s, n, tx, ty) + 1e-9 {
             continue; // stale entry
@@ -494,7 +814,7 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
                 }
                 st.s.dist[si] = nd;
                 st.s.prev[si] = n.0;
-                pq.push((Reverse(Cost(nd + h(st.s, succ, tx, ty))), succ));
+                pq.fpush(nd + h(st.s, succ, tx, ty), succ);
             }
         }
     }
@@ -513,13 +833,12 @@ fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Opti
         None
     };
 
-    // Reset scratch for the next search; return the heap's capacity.
+    // Reset scratch for the next search.
     for &t in &st.s.touched {
         st.s.dist[t as usize] = f64::INFINITY;
         st.s.prev[t as usize] = u32::MAX;
     }
     st.s.touched.clear();
-    st.s.pq = pq;
     path
 }
 
@@ -687,6 +1006,96 @@ mod tests {
         assert_eq!(paths(&r2), paths(&fresh));
         assert_eq!(r1.iterations, fresh.iterations);
         assert_eq!(r2.nodes_used, fresh.nodes_used);
+    }
+
+    #[test]
+    fn bucket_queue_is_golden_bit_identical_to_heap() {
+        // The bucketed frontier must reproduce the BinaryHeap's pop
+        // order exactly — same paths, same iteration count — across
+        // topologies and congestion levels (few tracks = many
+        // negotiation iterations).
+        let heap = RouterParams::default();
+        let bucket = RouterParams { bucket_queue: true, ..heap };
+        let paths = |r: &RoutingResult| -> Vec<Vec<Vec<NodeId>>> {
+            r.trees.iter().map(|t| t.sink_paths.clone()).collect()
+        };
+        for (topo, tracks, app_name) in [
+            (SbTopology::Wilton, 3, "pointwise"),
+            (SbTopology::Wilton, 4, "gaussian"),
+            (SbTopology::Imran, 4, "harris"),
+        ] {
+            let ic = ic_with(topo, tracks);
+            let (app, placement) = place(app_name, &ic);
+            let a = route(&ic, &app, &placement, 16, &heap).unwrap();
+            let b = route(&ic, &app, &placement, 16, &bucket).unwrap();
+            assert_eq!(paths(&a), paths(&b), "{app_name} paths diverge");
+            assert_eq!(a.iterations, b.iterations, "{app_name} iterations diverge");
+            assert_eq!(a.nodes_used, b.nodes_used);
+        }
+    }
+
+    #[test]
+    fn seeded_route_replays_own_solution_verbatim() {
+        // Seeding a routing back onto the identical problem reuses every
+        // net and runs zero PathFinder iterations.
+        let ic = ic_with(SbTopology::Wilton, 4);
+        let (app, placement) = place("gaussian", &ic);
+        let params = RouterParams::default();
+        let donor = route(&ic, &app, &placement, 16, &params).unwrap();
+        let seeds: Vec<Option<Vec<Vec<NodeId>>>> =
+            donor.trees.iter().map(|t| Some(t.sink_paths.clone())).collect();
+        let mut scratch = RouterScratch::new();
+        let (r, reuse) =
+            route_with_seed(&ic, &app, &placement, 16, &params, &mut scratch, &seeds).unwrap();
+        assert_eq!(reuse.nets_reused, donor.trees.len());
+        assert_eq!(reuse.nets_rerouted, 0);
+        assert_eq!(r.iterations, 0);
+        let paths = |r: &RoutingResult| -> Vec<Vec<Vec<NodeId>>> {
+            r.trees.iter().map(|t| t.sink_paths.clone()).collect()
+        };
+        assert_eq!(paths(&r), paths(&donor));
+    }
+
+    #[test]
+    fn seeded_route_repairs_invalid_seeds_and_stays_disjoint() {
+        let ic = ic_with(SbTopology::Wilton, 4);
+        let (app, placement) = place("gaussian", &ic);
+        let params = RouterParams::default();
+        let donor = route(&ic, &app, &placement, 16, &params).unwrap();
+        // Break half the seeds: drop one (None) and corrupt another's
+        // endpoint so validation rejects it.
+        let mut seeds: Vec<Option<Vec<Vec<NodeId>>>> =
+            donor.trees.iter().map(|t| Some(t.sink_paths.clone())).collect();
+        let n = seeds.len();
+        assert!(n >= 2, "gaussian has multiple nets");
+        seeds[0] = None;
+        if let Some(paths) = &mut seeds[1] {
+            paths[0].truncate(paths[0].len().saturating_sub(1));
+        }
+        let mut scratch = RouterScratch::new();
+        let (r, reuse) =
+            route_with_seed(&ic, &app, &placement, 16, &params, &mut scratch, &seeds).unwrap();
+        assert_eq!(reuse.nets_reused + reuse.nets_rerouted, n);
+        assert!(reuse.nets_rerouted >= 2, "both broken seeds rerouted");
+        assert!(reuse.nets_reused > 0, "intact seeds replayed");
+        // The repaired result is legal: node-disjoint, endpoints right.
+        let g = ic.graph(16);
+        let mut seen: HashMap<NodeId, usize> = HashMap::new();
+        for (i, t) in r.trees.iter().enumerate() {
+            for node in t.nodes() {
+                if let Some(&j) = seen.get(&node) {
+                    panic!("node {node} shared by nets {i} and {j}");
+                }
+                seen.insert(node, i);
+            }
+            for p in &t.sink_paths {
+                assert!(g.node(*p.first().unwrap()).kind.is_port());
+                assert!(g.node(*p.last().unwrap()).kind.is_port());
+                for w in p.windows(2) {
+                    assert!(g.fan_out(w[0]).contains(&w[1]), "non-edge in path");
+                }
+            }
+        }
     }
 
     #[test]

@@ -191,6 +191,9 @@ pub struct ServiceStats {
     pub configs_built: AtomicU64,
     pub batched_solves: AtomicU64,
     pub steals: AtomicU64,
+    pub warm_starts: AtomicU64,
+    pub nets_reused: AtomicU64,
+    pub nets_rerouted: AtomicU64,
     pub flushes: AtomicU64,
 }
 
@@ -204,6 +207,9 @@ impl ServiceStats {
         self.configs_built.fetch_add(s.configs_built, Ordering::Relaxed);
         self.batched_solves.fetch_add(s.batched_solves, Ordering::Relaxed);
         self.steals.fetch_add(s.steals, Ordering::Relaxed);
+        self.warm_starts.fetch_add(s.warm_starts, Ordering::Relaxed);
+        self.nets_reused.fetch_add(s.nets_reused, Ordering::Relaxed);
+        self.nets_rerouted.fetch_add(s.nets_rerouted, Ordering::Relaxed);
     }
 }
 
@@ -477,7 +483,7 @@ impl SessionState {
         let o = coordinator::ExpOptions { sa_moves, ..Default::default() };
         let snapshot = lock_ignore_poison(&self.shared).cache.snapshot();
         let mut engine = DseEngine::with_cache(
-            EngineOptions { workers: self.opts.workers, cache_path: None },
+            EngineOptions { workers: self.opts.workers, cache_path: None, warm_start: false },
             snapshot,
         );
         let placer: &(dyn GlobalPlacer + Sync) = self.placer.as_ref();
@@ -530,6 +536,9 @@ impl SessionState {
             ("configs_built".into(), get(&s.configs_built)),
             ("batched_solves".into(), get(&s.batched_solves)),
             ("steals".into(), get(&s.steals)),
+            ("warm_starts".into(), get(&s.warm_starts)),
+            ("nets_reused".into(), get(&s.nets_reused)),
+            ("nets_rerouted".into(), get(&s.nets_rerouted)),
             ("flushes".into(), get(&s.flushes)),
             ("cache_entries".into(), Json::num_u64(self.cache_len() as u64)),
             ("interconnects_cached".into(), Json::num_u64(self.ics.len() as u64)),

@@ -3,7 +3,10 @@
 //! Contract under test: engine results are bit-identical across worker
 //! counts and cache temperature, the cache file round-trips losslessly,
 //! and a warm re-run of the full figure suite (fig07/08/09/10/11/14/15)
-//! performs zero PnR calls.
+//! performs zero PnR calls. The incremental-PnR flag adds two more:
+//! `warm_start: false` is bit-identical to an engine that predates the
+//! feature, and `warm_start: true` neighbor sweeps stay legal with
+//! every critical path within 5% of the scratch result.
 
 use canal::coordinator::{self, ExpOptions};
 use canal::dse::{DseEngine, EngineOptions, SweepSpec};
@@ -28,7 +31,8 @@ fn small_spec() -> SweepSpec {
 
 fn run_with_workers(spec: &SweepSpec, workers: usize) -> canal::dse::SweepOutcome {
     let mut engine =
-        DseEngine::new(EngineOptions { workers, cache_path: None }).expect("engine");
+        DseEngine::new(EngineOptions { workers, cache_path: None, warm_start: false })
+            .expect("engine");
     engine.run(spec, &NativePlacer::default()).expect("sweep")
 }
 
@@ -64,7 +68,9 @@ fn batched_placement_is_bit_identical_for_any_batch_size_and_worker_count() {
     // Placement, routing, and timing).
     let spec = small_spec();
     let sequential = {
-        let mut e = DseEngine::new(EngineOptions { workers: 1, cache_path: None }).unwrap();
+        let mut e =
+            DseEngine::new(EngineOptions { workers: 1, cache_path: None, warm_start: false })
+                .unwrap();
         e.run(&spec, &NativePlacer::default()).unwrap()
     };
     assert_eq!(sequential.points.len(), 8);
@@ -72,7 +78,9 @@ fn batched_placement_is_bit_identical_for_any_batch_size_and_worker_count() {
     assert_eq!(sequential.stats.batched_solves, 2);
     for workers in [1, 2, 4, 7] {
         let batched = {
-            let mut e = DseEngine::new(EngineOptions { workers, cache_path: None }).unwrap();
+            let mut e =
+                DseEngine::new(EngineOptions { workers, cache_path: None, warm_start: false })
+                    .unwrap();
             e.run(&spec, &BatchedNativePlacer::default()).unwrap()
         };
         assert_eq!(batched.points.len(), sequential.points.len(), "workers={workers}");
@@ -198,8 +206,12 @@ fn fabric_axis_warm_rerun_does_zero_pnr_and_zero_sims() {
 
     let cold = {
         let mut engine =
-            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
-                .expect("engine");
+            DseEngine::new(EngineOptions {
+                workers: 3,
+                cache_path: Some(path.clone()),
+                warm_start: false,
+            })
+            .expect("engine");
         engine.run(&spec, &NativePlacer::default()).expect("cold sweep")
     };
     assert_eq!(cold.stats.pnr_runs, 12);
@@ -213,8 +225,12 @@ fn fabric_axis_warm_rerun_does_zero_pnr_and_zero_sims() {
 
     let warm = {
         let mut engine =
-            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
-                .expect("engine");
+            DseEngine::new(EngineOptions {
+                workers: 3,
+                cache_path: Some(path.clone()),
+                warm_start: false,
+            })
+            .expect("engine");
         engine.run(&spec, &NativePlacer::default()).expect("warm sweep")
     };
     std::fs::remove_file(&path).expect("cache file removed");
@@ -236,8 +252,12 @@ fn warm_cache_is_bit_identical_and_file_backed() {
 
     let cold = {
         let mut engine =
-            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
-                .expect("engine");
+            DseEngine::new(EngineOptions {
+                workers: 3,
+                cache_path: Some(path.clone()),
+                warm_start: false,
+            })
+            .expect("engine");
         engine.run(&spec, &NativePlacer::default()).expect("cold sweep")
     };
     assert_eq!(cold.stats.pnr_runs, cold.points.len() as u64);
@@ -247,8 +267,12 @@ fn warm_cache_is_bit_identical_and_file_backed() {
     // disk, bit-identical.
     let warm = {
         let mut engine =
-            DseEngine::new(EngineOptions { workers: 3, cache_path: Some(path.clone()) })
-                .expect("engine");
+            DseEngine::new(EngineOptions {
+                workers: 3,
+                cache_path: Some(path.clone()),
+                warm_start: false,
+            })
+            .expect("engine");
         engine.run(&spec, &NativePlacer::default()).expect("warm sweep")
     };
     std::fs::remove_file(&path).expect("cache file written");
@@ -259,6 +283,94 @@ fn warm_cache_is_bit_identical_and_file_backed() {
         assert_eq!(ja.key, jb.key);
         assert_eq!(ra, rb);
         assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+    }
+}
+
+#[test]
+fn warm_start_off_is_bit_identical_to_default_engine() {
+    // The incremental-PnR flag-off contract: an engine constructed with
+    // an explicit `warm_start: false` is byte-for-byte the engine that
+    // predates the feature — same points (f64-exact), same stats (zero
+    // warm counters), same serialized cache.
+    let spec = small_spec();
+    let mut default_engine = DseEngine::in_memory();
+    let baseline = default_engine.run(&spec, &NativePlacer::default()).expect("baseline");
+    let mut flag_off =
+        DseEngine::new(EngineOptions { workers: 3, cache_path: None, warm_start: false })
+            .expect("engine");
+    let off = flag_off.run(&spec, &NativePlacer::default()).expect("flag-off sweep");
+    assert!(flag_off.artifacts().is_none(), "flag-off engines carry no artifact store");
+    assert_eq!(off.stats.warm_starts, 0);
+    assert_eq!(off.stats.nets_reused, 0);
+    assert_eq!(off.stats.nets_rerouted, 0);
+    assert_eq!(off.points.len(), baseline.points.len());
+    for ((ja, ra), (jb, rb)) in baseline.points.iter().zip(&off.points) {
+        assert_eq!(ja.key, jb.key);
+        assert_eq!(ra, rb, "{:?}", ja.key);
+        assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+        assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+    }
+    assert_eq!(
+        default_engine.cache().to_json(),
+        flag_off.cache().to_json(),
+        "flag-off cache serialization must be byte-identical"
+    );
+}
+
+#[test]
+fn warm_start_neighbor_sweep_reuses_trees_and_stays_within_5_percent() {
+    // The incremental-PnR flag-on acceptance: sweep a tracks × fabric
+    // neighborhood with warm starts on (artifact store file-backed) —
+    // neighbors must actually warm-start and replay donor trees, every
+    // warm point must still route, and no critical path may degrade
+    // more than 5% against the scratch engine's result for the same key.
+    let path = std::env::temp_dir()
+        .join(format!("canal_dse_warm_start_{}.json", std::process::id()));
+    let artifacts = canal::dse::artifact_path_for(&path);
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&artifacts);
+    let spec = SweepSpec {
+        name: "warm-neighbors".into(),
+        tracks: vec![3, 4],
+        fabrics: vec![FabricKind::Static, FabricKind::RvFullFifo { depth: 2 }],
+        apps: vec!["pointwise".into()],
+        seeds: vec![1],
+        ..small_spec()
+    };
+    let mut scratch_engine = DseEngine::in_memory();
+    let scratch = scratch_engine.run(&spec, &NativePlacer::default()).expect("scratch sweep");
+
+    let warm = {
+        let mut engine = DseEngine::new(EngineOptions {
+            workers: 1,
+            cache_path: Some(path.clone()),
+            warm_start: true,
+        })
+        .expect("engine");
+        engine.run(&spec, &NativePlacer::default()).expect("warm sweep")
+    };
+    let artifact_text = std::fs::read_to_string(&artifacts).expect("artifact store persisted");
+    std::fs::remove_file(&path).expect("cache file written");
+    std::fs::remove_file(&artifacts).expect("artifact file written");
+    assert!(artifact_text.contains("\"version\""), "artifact store must be versioned");
+
+    assert!(warm.stats.warm_starts > 0, "neighbors must warm-start: {:?}", warm.stats);
+    assert!(
+        warm.stats.nets_reused > 0,
+        "the fabric twin is the same PnR problem — trees must replay: {:?}",
+        warm.stats
+    );
+    assert_eq!(warm.points.len(), scratch.points.len());
+    for ((ja, ra), (jb, rb)) in scratch.points.iter().zip(&warm.points) {
+        assert_eq!(ja.key, jb.key, "warm-start must not reorder the outcome");
+        assert!(rb.routed, "warm point must stay routable: {:?}", jb.key);
+        assert!(
+            rb.critical_path_ps <= ra.critical_path_ps * 1.05,
+            "{:?}: warm {} vs scratch {} exceeds the 5% bar",
+            jb.key,
+            rb.critical_path_ps,
+            ra.critical_path_ps
+        );
     }
 }
 

@@ -1,0 +1,150 @@
+//! Property test for incremental PnR (`run_flow_warm`): over randomized
+//! neighbor pairs of interconnect configurations — tracks ±1, or one
+//! connected side toggled — a point warm-started from its neighbor's
+//! artifacts must always produce a *legal* result: placement passes
+//! `Placement::check`, every net routes, routed trees are node-disjoint,
+//! and the reuse counters account for every net exactly once.
+//!
+//! The pair generator is a fixed-seed LCG, so the "random" pairs are
+//! reproducible; no external proptest crate is involved.
+
+use std::collections::HashMap;
+
+use canal::apps;
+use canal::dse::{encode_node, PnrArtifact};
+use canal::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig};
+use canal::ir::{Interconnect, NodeId};
+use canal::pnr::{run_flow, run_flow_warm, FlowParams, FlowResult, RouterScratch, SaParams, WarmSeed};
+
+/// Deterministic 64-bit LCG (Knuth's MMIX constants); top bits only.
+fn next(state: &mut u64) -> u64 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    *state >> 33
+}
+
+/// Snapshot a finished flow the way the DSE executor does: legalized
+/// placement plus routed sink paths as logical node tokens.
+fn artifact_of(ic: &Interconnect, flow: &FlowResult) -> PnrArtifact {
+    let rg = ic.graph(16);
+    PnrArtifact {
+        placement: flow.placement.pos.clone(),
+        nets: flow
+            .routing
+            .trees
+            .iter()
+            .map(|t| {
+                t.sink_paths
+                    .iter()
+                    .map(|p| p.iter().map(|&n| encode_node(rg, n)).collect())
+                    .collect()
+            })
+            .collect(),
+    }
+}
+
+/// One axis mutation: tracks ±1 (floored at 2) or one connected-side
+/// toggle (4 ↔ 3) — exactly the neighborhoods the sweep executor
+/// warm-starts across.
+fn neighbor_of(base: &InterconnectConfig, pick: u64) -> InterconnectConfig {
+    let mut cfg = base.clone();
+    match pick % 4 {
+        0 => cfg.num_tracks += 1,
+        1 => cfg.num_tracks = (cfg.num_tracks - 1).max(2),
+        2 => {
+            cfg.sb_core_sides =
+                if cfg.sb_core_sides.0 == 4 { ConnectedSides::THREE } else { ConnectedSides::FOUR }
+        }
+        _ => {
+            cfg.cb_core_sides =
+                if cfg.cb_core_sides.0 == 4 { ConnectedSides::THREE } else { ConnectedSides::FOUR }
+        }
+    }
+    cfg
+}
+
+#[test]
+fn random_neighbor_pairs_warm_start_to_legal_disjoint_routing() {
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let mut rng = 0xC0FFEEu64;
+    let mut scratch = RouterScratch::new();
+    for trial in 0..6 {
+        let app = if next(&mut rng) % 2 == 0 { apps::pointwise(6) } else { apps::gaussian() };
+        let donor_cfg = InterconnectConfig {
+            width: 6,
+            height: 6,
+            num_tracks: 3 + (next(&mut rng) % 2) as u16,
+            mem_column_period: 3,
+            ..Default::default()
+        };
+        let target_cfg = neighbor_of(&donor_cfg, next(&mut rng));
+        let donor_ic = create_uniform_interconnect(&donor_cfg);
+        let target_ic = create_uniform_interconnect(&target_cfg);
+
+        // Scratch flow on the donor config supplies the artifacts.
+        let donor_flow = run_flow(&donor_ic, &app, &params)
+            .unwrap_or_else(|e| panic!("trial {trial}: donor flow failed: {e:?}"));
+        let art = artifact_of(&donor_ic, &donor_flow);
+
+        // Warm-start the neighbor from them.
+        let net_paths = art.resolve(target_ic.graph(16));
+        let seed = WarmSeed { placement: &art.placement, net_paths };
+        let (flow, reuse) = run_flow_warm(&target_ic, &app, &params, &seed, &mut scratch)
+            .unwrap_or_else(|e| {
+                panic!(
+                    "trial {trial}: warm flow failed ({} -> {}): {e:?}",
+                    donor_ic.descriptor, target_ic.descriptor
+                )
+            });
+
+        // Legal placement on the TARGET fabric.
+        flow.placement
+            .check(&flow.packed.app, &target_ic)
+            .unwrap_or_else(|e| panic!("trial {trial}: illegal warm placement: {e}"));
+
+        // Every net routed; reuse counters account for each exactly once.
+        assert_eq!(flow.routing.trees.len(), flow.packed.app.nets().len(), "trial {trial}");
+        assert_eq!(
+            reuse.nets_reused + reuse.nets_rerouted,
+            flow.routing.trees.len(),
+            "trial {trial}: every net is either reused or rerouted"
+        );
+
+        // Node-disjoint routing: no routing-graph node serves two nets.
+        let mut owner: HashMap<NodeId, usize> = HashMap::new();
+        for (ni, tree) in flow.routing.trees.iter().enumerate() {
+            assert!(!tree.sink_paths.is_empty(), "trial {trial}: net {ni} has no paths");
+            for n in tree.nodes() {
+                match owner.get(&n) {
+                    Some(&other) => panic!(
+                        "trial {trial}: node {n:?} shared by nets {other} and {ni} \
+                         ({} -> {})",
+                        donor_ic.descriptor, target_ic.descriptor
+                    ),
+                    None => {
+                        owner.insert(n, ni);
+                    }
+                }
+            }
+        }
+
+        // Every path's edges must exist in the target graph (the donor
+        // trees came from a *different* graph — replay must never smuggle
+        // in an edge the target fabric doesn't have).
+        let g = target_ic.graph(16);
+        for tree in &flow.routing.trees {
+            for path in &tree.sink_paths {
+                for w in path.windows(2) {
+                    assert!(
+                        g.fan_out(w[0]).contains(&w[1]),
+                        "trial {trial}: edge {:?} -> {:?} absent from target graph",
+                        w[0],
+                        w[1]
+                    );
+                }
+            }
+        }
+    }
+}
