@@ -232,6 +232,37 @@ fn main() {
             warm_s,
             np / warm_s
         );
+
+        // Observability overhead: the same cold sweep untraced vs with
+        // the full gate open (spans + metrics). Best-of-3 each to damp
+        // scheduler noise; the design budget is < 5% overhead.
+        use canal::obs::ObsOptions;
+        let cold_run = |label: &str| -> f64 {
+            (0..3)
+                .map(|i| {
+                    let mut e = DseEngine::in_memory();
+                    let gated_spec =
+                        SweepSpec { name: format!("bench_obs_{label}_{i}"), ..spec.clone() };
+                    let t0 = std::time::Instant::now();
+                    black_box(e.run(&gated_spec, &NativePlacer::default()).unwrap());
+                    t0.elapsed().as_secs_f64()
+                })
+                .fold(f64::INFINITY, f64::min)
+        };
+        ObsOptions::disabled().apply();
+        let untraced_s = cold_run("off");
+        ObsOptions::full().apply();
+        let traced_s = cold_run("on");
+        ObsOptions::disabled().apply();
+        let overhead_pct = (traced_s / untraced_s - 1.0) * 100.0;
+        println!(
+            "dse cold sweep untraced {untraced_s:.3}s vs traced {traced_s:.3}s   \
+             [obs overhead {overhead_pct:+.1}%]"
+        );
+        assert!(
+            overhead_pct < 5.0,
+            "observability overhead {overhead_pct:.1}% blows the 5% budget"
+        );
     }
 
     // --- L2/L1: global placement backends ---------------------------------

@@ -250,9 +250,7 @@ impl PnrArtifactCache {
     }
 
     pub fn save_to(&self, path: &Path) -> Result<(), String> {
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json()).map_err(|e| format!("{}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+        super::cache::atomic_write(path, &self.to_json())
     }
 }
 

@@ -152,10 +152,32 @@ impl ResultCache {
     /// renames it over the target, so an interrupted save can never
     /// truncate an existing cache.
     pub fn save_to(&self, path: &Path) -> Result<(), String> {
-        let tmp = path.with_extension("json.tmp");
-        std::fs::write(&tmp, self.to_json()).map_err(|e| format!("{}: {e}", tmp.display()))?;
-        std::fs::rename(&tmp, path).map_err(|e| format!("{}: {e}", path.display()))
+        atomic_write(path, &self.to_json())
     }
+}
+
+/// Write `text` to `path` atomically: write a uniquely-named sibling
+/// temp file, then rename it over the target. The temp name carries the
+/// pid and a process-global sequence number so concurrent writers (two
+/// engines saving next to the same cache file, or a service writing
+/// while a CLI run saves) never scribble over each other's temp file —
+/// last rename wins, but every rename installs a *complete* file. A
+/// failed write or rename removes the temp file instead of leaking it.
+pub(crate) fn atomic_write(path: &Path, text: &str) -> Result<(), String> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let seq = SEQ.fetch_add(1, Ordering::Relaxed);
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(format!(".{}.{}.tmp", std::process::id(), seq));
+    let tmp = path.with_file_name(name);
+    std::fs::write(&tmp, text).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("{}: {e}", tmp.display())
+    })?;
+    std::fs::rename(&tmp, path).map_err(|e| {
+        let _ = std::fs::remove_file(&tmp);
+        format!("{}: {e}", path.display())
+    })
 }
 
 pub(crate) fn entry_json(key: &JobKey, r: &PointResult) -> Json {
@@ -307,6 +329,59 @@ mod tests {
         assert!(c
             .load_json(r#"{"version": 1, "entries": [{"config": "x"}]}"#)
             .is_err());
+    }
+
+    #[test]
+    fn atomic_write_unique_tmp_and_error_cleanup() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("canal_atomic_write_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        atomic_write(&path, "one").unwrap();
+        atomic_write(&path, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "two");
+        // Every temp file was renamed or removed — none leak beside the
+        // target.
+        let stem = path.file_name().unwrap().to_string_lossy().into_owned();
+        let leftovers: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .filter(|n| n.starts_with(&stem) && n.ends_with(".tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "stray temp files: {leftovers:?}");
+        std::fs::remove_file(&path).unwrap();
+        // A target in a missing directory fails loudly (and has nothing
+        // to leak: the temp file shares the missing parent).
+        let bad =
+            dir.join(format!("canal_missing_dir_{}", std::process::id())).join("x.json");
+        assert!(atomic_write(&bad, "x").is_err());
+    }
+
+    #[test]
+    fn concurrent_save_to_never_installs_a_torn_file() {
+        // Two caches racing save_to on one path: whichever rename lands
+        // last wins, but the installed file is always one writer's
+        // complete JSON (the old single-name temp scheme could rename a
+        // half-written file the other writer was still filling).
+        let path = std::env::temp_dir()
+            .join(format!("canal_cache_race_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let mut a = ResultCache::in_memory();
+        a.insert(key("harris", 1), point(1.0));
+        let mut b = ResultCache::in_memory();
+        b.insert(key("gaussian", 2), point(2.0));
+        std::thread::scope(|s| {
+            for c in [&a, &b] {
+                s.spawn(move || {
+                    for _ in 0..32 {
+                        c.save_to(&path).unwrap();
+                    }
+                });
+            }
+        });
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text == a.to_json() || text == b.to_json(), "torn file: {text}");
+        std::fs::remove_file(&path).unwrap();
     }
 
     #[test]

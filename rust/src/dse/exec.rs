@@ -68,6 +68,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use crate::area::{area_of, AreaModel};
 use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
 use crate::ir::Interconnect;
+use crate::obs;
+use crate::obs::span::names as spans;
 use crate::pnr::{
     finish_flow_scratch, prepare_point, run_flow_warm, AppGraph, FlowResult, GlobalPlacer,
     PlacementInstance, RouterScratch, WarmSeed,
@@ -193,6 +195,135 @@ impl EngineStats {
     }
 }
 
+/// Live counters for one in-flight sweep, shared between the executor's
+/// workers and an observer (the daemon's heartbeat thread, which
+/// renders [`SweepProgress::snapshot`] into each progress frame).
+/// Totals are set once at partition time ([`SweepProgress::begin`]);
+/// per-job counters tick as workers finish points. Purely
+/// observational: nothing ever reads it back into the computation, so
+/// threading it through changes no result bits.
+#[derive(Debug, Default)]
+pub struct SweepProgress {
+    jobs_total: AtomicU64,
+    /// Jobs answered on any path: cache hits + coalesced joins up
+    /// front, then cold completions as they land.
+    jobs_done: AtomicU64,
+    cache_hits: AtomicU64,
+    coalesced: AtomicU64,
+    cold_total: AtomicU64,
+    cold_done: AtomicU64,
+    warm_starts: AtomicU64,
+    start_ns: AtomicU64,
+    /// Busy nanoseconds per executor worker (index = worker id).
+    worker_busy_ns: Mutex<Vec<u64>>,
+}
+
+impl SweepProgress {
+    pub fn new() -> SweepProgress {
+        let p = SweepProgress::default();
+        p.start_ns.store(obs::now_ns(), Ordering::Relaxed);
+        p
+    }
+
+    /// Record the partition: `total` jobs, of which `hits` came from the
+    /// cache and `coalesced` joined another request's computation (both
+    /// count as done immediately — the coalesced jobs' own compute is
+    /// tracked by the claiming request's progress).
+    pub fn begin(&self, total: u64, hits: u64, coalesced: u64) {
+        self.jobs_total.store(total, Ordering::Relaxed);
+        self.cache_hits.store(hits, Ordering::Relaxed);
+        self.coalesced.store(coalesced, Ordering::Relaxed);
+        self.jobs_done.store(hits + coalesced, Ordering::Relaxed);
+        self.cold_total.store(total.saturating_sub(hits + coalesced), Ordering::Relaxed);
+    }
+
+    fn ensure_workers(&self, n: usize) {
+        let mut busy = self.worker_busy_ns.lock().unwrap_or_else(|p| p.into_inner());
+        if busy.len() < n {
+            busy.resize(n, 0);
+        }
+    }
+
+    fn add_busy(&self, worker: usize, ns: u64) {
+        let mut busy = self.worker_busy_ns.lock().unwrap_or_else(|p| p.into_inner());
+        if worker >= busy.len() {
+            busy.resize(worker + 1, 0);
+        }
+        busy[worker] += ns;
+    }
+
+    fn job_finished(&self, warm: bool) {
+        self.jobs_done.fetch_add(1, Ordering::Relaxed);
+        self.cold_done.fetch_add(1, Ordering::Relaxed);
+        if warm {
+            self.warm_starts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> ProgressSnapshot {
+        ProgressSnapshot {
+            jobs_total: self.jobs_total.load(Ordering::Relaxed),
+            jobs_done: self.jobs_done.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+            cold_total: self.cold_total.load(Ordering::Relaxed),
+            cold_done: self.cold_done.load(Ordering::Relaxed),
+            warm_starts: self.warm_starts.load(Ordering::Relaxed),
+            elapsed_ns: obs::now_ns()
+                .saturating_sub(self.start_ns.load(Ordering::Relaxed))
+                .max(1),
+            worker_busy_ns: self
+                .worker_busy_ns
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .clone(),
+        }
+    }
+}
+
+/// One point-in-time view of a [`SweepProgress`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProgressSnapshot {
+    pub jobs_total: u64,
+    pub jobs_done: u64,
+    pub cache_hits: u64,
+    pub coalesced: u64,
+    pub cold_total: u64,
+    pub cold_done: u64,
+    pub warm_starts: u64,
+    pub elapsed_ns: u64,
+    pub worker_busy_ns: Vec<u64>,
+}
+
+impl ProgressSnapshot {
+    /// The human-readable heartbeat line, e.g.
+    /// `progress: 12/40 jobs (10 cached, 1 coalesced, 1/29 cold, 3
+    /// warm-started), util w0=93% w1=88%`.
+    pub fn message(&self) -> String {
+        let mut s = format!(
+            "progress: {}/{} jobs ({} cached, {} coalesced, {}/{} cold",
+            self.jobs_done,
+            self.jobs_total,
+            self.cache_hits,
+            self.coalesced,
+            self.cold_done,
+            self.cold_total,
+        );
+        if self.warm_starts > 0 {
+            s.push_str(&format!(", {} warm-started", self.warm_starts));
+        }
+        s.push(')');
+        if !self.worker_busy_ns.is_empty() {
+            s.push_str(", util");
+            for (w, &busy) in self.worker_busy_ns.iter().enumerate() {
+                let pct = (busy as f64 / self.elapsed_ns as f64 * 100.0).min(100.0);
+                s.push_str(&format!(" w{w}={pct:.0}%"));
+            }
+        }
+        s
+    }
+}
+
 /// Where the executor gets frozen interconnects. The build is a pure
 /// function of the config, so any source is behaviorally identical to
 /// [`BuildFresh`] — sharing only changes *when* the build cost is paid.
@@ -280,6 +411,22 @@ pub fn execute_jobs_with(
     ics: &dyn InterconnectSource,
     warm: Option<&PnrArtifactCache>,
 ) -> ColdOutcome {
+    execute_jobs_obs(jobs, workers, placer, ics, warm, None)
+}
+
+/// [`execute_jobs_with`], optionally ticking a live [`SweepProgress`]
+/// as workers finish points (the daemon threads one through so its
+/// heartbeat frames can report mid-sweep state). `progress` is written,
+/// never read — all delegating forms pass `None` and compute the same
+/// bits.
+pub fn execute_jobs_obs(
+    jobs: &[&Job],
+    workers: usize,
+    placer: &(dyn GlobalPlacer + Sync),
+    ics: &dyn InterconnectSource,
+    warm: Option<&PnrArtifactCache>,
+    progress: Option<&SweepProgress>,
+) -> ColdOutcome {
     // Unique configurations among the jobs, keyed by the full config
     // descriptor (the grouping identity: fabric and flow variants group
     // separately even when the interconnect build is shared). Each slot
@@ -360,6 +507,9 @@ pub fn execute_jobs_with(
     // (unchanged); warm runs shard the nearest-neighbor chain in
     // contiguous blocks so chain neighbors stay on the same worker.
     let workers = resolve_workers(workers);
+    if let Some(p) = progress {
+        p.ensure_workers(workers);
+    }
     let shards: Vec<Mutex<VecDeque<usize>>> =
         (0..workers).map(|_| Mutex::new(VecDeque::new())).collect();
     if warm.is_some() {
@@ -403,8 +553,12 @@ pub fn execute_jobs_with(
                 let nets_reused = &nets_reused;
                 let nets_rerouted = &nets_rerouted;
                 scope.spawn(move || {
+                    if obs::trace_on() {
+                        obs::span::label_thread(&format!("dse-worker-{me}"));
+                    }
                     let mut scratch = RouterScratch::new();
                     while let Some(g) = next_group(shards, me, steals) {
+                        let group_t0 = progress.map(|_| obs::now_ns());
                         let group = &groups[g];
                         let slot = cfg_of_job[group[0]];
                         let ic = interconnects[slot].get_or_init(|| {
@@ -423,8 +577,12 @@ pub fn execute_jobs_with(
                             .iter()
                             .map(|&i| {
                                 warm.and_then(|w| {
-                                    w.best_donor(&jobs[i].key, MAX_DONOR_DISTANCE)
-                                        .map(|(_, _, art)| art)
+                                    w.best_donor(&jobs[i].key, MAX_DONOR_DISTANCE).map(
+                                        |(d, _, art)| {
+                                            obs::event(spans::DONOR_PICK, d as u64, i as u64);
+                                            art
+                                        },
+                                    )
                                 })
                             })
                             .collect();
@@ -434,6 +592,11 @@ pub fn execute_jobs_with(
                             .filter(|(_, donor)| donor.is_none())
                             .map(|(&i, _)| i)
                             .collect();
+                        obs::event(
+                            spans::PLACE_BATCH,
+                            group.len() as u64,
+                            cold_members.len() as u64,
+                        );
                         // Phase 1 for every cold job in the group: pack
                         // + problem construction.
                         let prepared: Vec<crate::pnr::PreparedPoint> = cold_members
@@ -459,6 +622,8 @@ pub fn execute_jobs_with(
                                 })
                                 .collect();
                             batched_solves.fetch_add(1, Ordering::Relaxed);
+                            let mut _gp = obs::stage(spans::GLOBAL_PLACE);
+                            _gp.args(batch.len() as u64, 0);
                             let solved = placer.place_batch(&batch);
                             assert_eq!(
                                 solved.len(),
@@ -483,15 +648,22 @@ pub fn execute_jobs_with(
                         for (&i, donor) in group.iter().zip(&donors) {
                             let job = jobs[i];
                             let app = &app_graphs[job.key.app.as_str()];
+                            let mut _job_span = obs::span(spans::JOB);
+                            _job_span.args(i as u64, donor.is_some() as u64);
+                            let mut warmed = false;
                             pnr_runs.fetch_add(1, Ordering::Relaxed);
                             let flow = match donor {
                                 Some(art) => {
-                                    let net_paths = art.resolve(ic.graph(job.flow.bit_width));
+                                    let net_paths = {
+                                        let _s = obs::span(spans::ARTIFACT_RESOLVE);
+                                        art.resolve(ic.graph(job.flow.bit_width))
+                                    };
                                     let seed =
                                         WarmSeed { placement: &art.placement, net_paths };
                                     match run_flow_warm(ic, app, &job.flow, &seed, &mut scratch)
                                     {
                                         Ok((flow, reuse)) => {
+                                            warmed = true;
                                             warm_starts.fetch_add(1, Ordering::Relaxed);
                                             nets_reused.fetch_add(
                                                 reuse.nets_reused as u64,
@@ -512,11 +684,15 @@ pub fn execute_jobs_with(
                                         Err(_) => {
                                             let pp = prepare_point(ic, app, &job.flow);
                                             batched_solves.fetch_add(1, Ordering::Relaxed);
-                                            let solo = placer.place_batch(&[PlacementInstance {
-                                                problem: &pp.problem,
-                                                xs0: &pp.xs0,
-                                                ys0: &pp.ys0,
-                                            }]);
+                                            let solo = {
+                                                let mut _gp = obs::stage(spans::GLOBAL_PLACE);
+                                                _gp.args(1, 1);
+                                                placer.place_batch(&[PlacementInstance {
+                                                    problem: &pp.problem,
+                                                    xs0: &pp.xs0,
+                                                    ys0: &pp.ys0,
+                                                }])
+                                            };
                                             finish_flow_scratch(
                                                 ic,
                                                 &pp,
@@ -538,7 +714,10 @@ pub fn execute_jobs_with(
                                 Ok(flow) => {
                                     let mut r = PointResult::from_flow(&flow);
                                     sims.fetch_add(1, Ordering::Relaxed);
-                                    simulate_point(app, &flow, job, ic, &mut r);
+                                    {
+                                        let _s = obs::stage(spans::SIM);
+                                        simulate_point(app, &flow, job, ic, &mut r);
+                                    }
                                     if let Some(w) = warm {
                                         w.insert(
                                             job.key.clone(),
@@ -550,6 +729,12 @@ pub fn execute_jobs_with(
                                 Err(_) => PointResult::unroutable(),
                             };
                             let _ = computed[i].set(result);
+                            if let Some(p) = progress {
+                                p.job_finished(warmed);
+                            }
+                        }
+                        if let (Some(p), Some(t0)) = (progress, group_t0) {
+                            p.add_busy(me, obs::now_ns().saturating_sub(t0));
                         }
                     }
                 });
@@ -663,13 +848,15 @@ pub fn run_sweep_with(
     // Partition into cache hits and cold misses.
     let mut hits: Vec<Option<PointResult>> = Vec::with_capacity(jobs.len());
     let mut cold_jobs: Vec<&Job> = Vec::new();
-    for job in &jobs {
+    for (idx, job) in jobs.iter().enumerate() {
         match cache.get(&job.key) {
             Some(r) => {
                 stats.cache_hits += 1;
+                obs::event(spans::CACHE_HIT, idx as u64, 0);
                 hits.push(Some(r.clone()));
             }
             None => {
+                obs::event(spans::CACHE_MISS, idx as u64, 0);
                 hits.push(None);
                 cold_jobs.push(job);
             }
@@ -705,6 +892,9 @@ pub fn run_sweep_with(
     let areas =
         if spec.area { area_points(spec, &cold.interconnects, ics)? } else { Vec::new() };
 
+    if obs::metrics_on() {
+        super::report::publish_engine_stats(&stats);
+    }
     Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
 }
 
@@ -1070,6 +1260,50 @@ mod tests {
                 ra.critical_path_ps
             );
         }
+    }
+
+    #[test]
+    fn sweep_progress_tracks_cold_completions() {
+        let spec = quick_spec();
+        let jobs = spec.jobs("native-gd").unwrap();
+        let job_refs: Vec<&Job> = jobs.iter().collect();
+        let progress = SweepProgress::new();
+        progress.begin(jobs.len() as u64, 0, 0);
+        let out = execute_jobs_obs(
+            &job_refs,
+            2,
+            &NativePlacer::default(),
+            &BuildFresh,
+            None,
+            Some(&progress),
+        );
+        assert_eq!(out.results.len(), jobs.len());
+        let snap = progress.snapshot();
+        assert_eq!(snap.jobs_total, 2);
+        assert_eq!(snap.jobs_done, 2);
+        assert_eq!(snap.cold_total, 2);
+        assert_eq!(snap.cold_done, 2);
+        assert_eq!(snap.cache_hits, 0);
+        assert_eq!(snap.warm_starts, 0);
+        assert_eq!(snap.worker_busy_ns.len(), 2);
+        assert!(snap.worker_busy_ns.iter().sum::<u64>() > 0, "workers were busy");
+        let msg = snap.message();
+        assert!(msg.starts_with("progress: 2/2 jobs (0 cached, 0 coalesced, 2/2 cold)"), "{msg}");
+        assert!(msg.contains("util w0="), "{msg}");
+    }
+
+    #[test]
+    fn progress_message_counts_hits_and_warm_starts() {
+        let p = SweepProgress::new();
+        p.begin(10, 4, 1);
+        p.job_finished(true);
+        p.job_finished(false);
+        let snap = p.snapshot();
+        assert_eq!(snap.jobs_done, 7);
+        assert_eq!(snap.cold_total, 5);
+        assert_eq!(snap.cold_done, 2);
+        let msg = snap.message();
+        assert_eq!(msg, "progress: 7/10 jobs (4 cached, 1 coalesced, 2/5 cold, 1 warm-started)");
     }
 
     #[test]

@@ -62,12 +62,13 @@ pub use artifacts::{
 };
 pub use cache::{ResultCache, CACHE_VERSION};
 pub use exec::{
-    area_points, execute_jobs, execute_jobs_with, resolve_workers, run_sweep, run_sweep_with,
-    BuildFresh, ColdOutcome, DseEngine, EngineOptions, EngineStats, InterconnectSource,
-    SweepOutcome, SIM_TOKENS_CAP,
+    area_points, execute_jobs, execute_jobs_obs, execute_jobs_with, resolve_workers, run_sweep,
+    run_sweep_with, BuildFresh, ColdOutcome, DseEngine, EngineOptions, EngineStats,
+    InterconnectSource, ProgressSnapshot, SweepOutcome, SweepProgress, SIM_TOKENS_CAP,
 };
 pub use report::{
-    areas_table, outcome_json, points_table, short_config, stats_json, ResultsStore,
+    areas_table, outcome_json, points_table, publish_engine_stats, short_config, stats_json,
+    ResultsStore,
 };
 pub use spec::{
     app_by_name, dense_suite_keys, registry_keys, suite_keys, AreaPoint, AxisDelta, AxisTokens,

@@ -98,6 +98,29 @@ pub fn stats_json(s: &EngineStats) -> Json {
     ])
 }
 
+/// Mirror one run's [`EngineStats`] into the process-wide metrics
+/// registry as monotonic `engine.*` counters, so the registry view
+/// accumulates across runs while the struct stays the per-run report.
+/// Called by the executor at the end of every sweep when metrics are
+/// enabled; cheap enough to call unconditionally, but gated on
+/// [`crate::obs::metrics_on`] upstream so the disabled path stays
+/// zero-cost.
+pub fn publish_engine_stats(s: &EngineStats) {
+    use crate::obs::metrics::counter;
+    counter("engine.jobs").add(s.jobs);
+    counter("engine.cache_hits").add(s.cache_hits);
+    counter("engine.coalesced").add(s.coalesced);
+    counter("engine.pnr_runs").add(s.pnr_runs);
+    counter("engine.sims").add(s.sims);
+    counter("engine.configs_built").add(s.configs_built);
+    counter("engine.steals").add(s.steals);
+    counter("engine.batched_solves").add(s.batched_solves);
+    counter("engine.warm_starts").add(s.warm_starts);
+    counter("engine.nets_reused").add(s.nets_reused);
+    counter("engine.nets_rerouted").add(s.nets_rerouted);
+    counter("engine.sweeps").inc();
+}
+
 /// Machine-readable record of one sweep (points + areas + stats).
 pub fn outcome_json(outcome: &SweepOutcome) -> Json {
     let points: Vec<Json> = outcome

@@ -33,6 +33,10 @@
 //!   one shared warm state (LRU of frozen interconnects, one result
 //!   cache, one placer backend), and coalescing of overlapping in-flight
 //!   `dse` requests;
+//! - [`obs`] — observability: span tracing into per-worker ring
+//!   buffers, a process-wide metrics registry (counters / gauges /
+//!   log-bucketed histograms), and Chrome-trace + NDJSON export —
+//!   zero-cost behind an atomic gate when disabled;
 //! - [`util`] — self-contained support code (deterministic RNG, JSON,
 //!   benchmarking, property-test harness).
 //!
@@ -48,7 +52,9 @@
 //! - `docs/cli.md` — the `canal` CLI reference (`canal help` prints the
 //!   same usage block);
 //! - `docs/service.md` — the daemon: protocol frames, state-sharing and
-//!   coalescing rules, shutdown semantics.
+//!   coalescing rules, shutdown semantics;
+//! - `docs/observability.md` — span taxonomy, metric names, trace file
+//!   format, and how to open a trace in Perfetto.
 //!
 //! The per-module rustdoc (start at the list above) is the normative
 //! reference for invariants; the `docs/` pages are the narrative tour.
@@ -61,6 +67,7 @@ pub mod dse;
 pub mod dsl;
 pub mod hw;
 pub mod ir;
+pub mod obs;
 pub mod pnr;
 pub mod runtime;
 pub mod service;

@@ -15,10 +15,12 @@
 //!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
 //!           [--workers N] [--cache FILE] [--no-cache] [--warm-start] [--json FILE]
+//!           [--trace FILE]
 //! canal serve [--addr HOST:PORT] [--workers N] [--conn-threads N]
 //!             [--cache FILE] [--no-cache] [--ic-cap N] [--port-file FILE]
-//! canal client --addr HOST:PORT ping|info|stats|shutdown|dse|area|pnr|simulate
-//!             |generate|figure [--flags]
+//!             [--read-poll MS] [--heartbeat MS]
+//! canal client --addr HOST:PORT ping|info|stats|metrics|shutdown|dse|area|pnr
+//!             |simulate|generate|figure [--flags] [--watch]
 //! canal info
 //! canal help         (also: canal --help)
 //! ```
@@ -61,8 +63,17 @@ use canal::util::json::Json;
 /// Flags that never take a value — without this list, a bare word after
 /// one of them (e.g. `canal dse --no-cache figures`) would be swallowed
 /// as its value instead of staying positional.
-const BOOL_FLAGS: &[&str] =
-    &["verify", "alpha-sweep", "smoke", "no-cache", "area", "derived-seeds", "warm-start", "help"];
+const BOOL_FLAGS: &[&str] = &[
+    "verify",
+    "alpha-sweep",
+    "smoke",
+    "no-cache",
+    "area",
+    "derived-seeds",
+    "warm-start",
+    "watch",
+    "help",
+];
 
 struct Args {
     flags: HashMap<String, String>,
@@ -551,7 +562,27 @@ fn dse_figures(args: &Args, engine: &mut DseEngine) -> Result<(), String> {
     Ok(())
 }
 
+/// `canal dse --trace FILE`: run the sweep with the observability gate
+/// fully open, then write the merged Chrome trace and print the metrics
+/// snapshot (NDJSON, one metric per line) to stdout. Works with every
+/// dse form, `--smoke` included — that pairing is the CI trace check.
 fn cmd_dse(args: &Args) -> Result<(), String> {
+    let trace = args.get("trace").map(std::path::PathBuf::from);
+    if trace.is_some() {
+        canal::obs::ObsOptions::full().apply();
+    }
+    let result = cmd_dse_untraced(args);
+    if let Some(path) = &trace {
+        // Export even when the sweep failed: a partial trace of a
+        // failing run is exactly what you want to look at.
+        canal::obs::export::write_chrome_trace(path)?;
+        println!("wrote trace {}", path.display());
+        print!("{}", canal::obs::export::metrics_ndjson());
+    }
+    result
+}
+
+fn cmd_dse_untraced(args: &Args) -> Result<(), String> {
     if args.has("smoke") {
         return if args.has("warm-start") { dse_smoke_warm() } else { dse_smoke() };
     }
@@ -623,6 +654,13 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     } else {
         Some(args.get("cache").unwrap_or("dse_cache.json").into())
     };
+    let d = ServeOptions::default();
+    let millis = |key: &str, fallback: std::time::Duration| {
+        args.get(key)
+            .and_then(|v| v.parse().ok())
+            .map(std::time::Duration::from_millis)
+            .unwrap_or(fallback)
+    };
     let opts = ServeOptions {
         addr: args.get("addr").unwrap_or("127.0.0.1:9000").to_string(),
         conn_threads: args.get("conn-threads").and_then(|v| v.parse().ok()).unwrap_or(0),
@@ -632,6 +670,8 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
             ic_capacity: args.get("ic-cap").and_then(|v| v.parse().ok()).unwrap_or(32),
         },
         port_file: args.get("port-file").map(Into::into),
+        read_poll: millis("read-poll", d.read_poll),
+        heartbeat: millis("heartbeat", d.heartbeat),
     };
     let server = Server::bind(opts)?;
     let addr = server.local_addr()?;
@@ -646,12 +686,13 @@ fn cmd_client(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").ok_or("--addr HOST:PORT required")?;
     let sub = args.positional.get(1).map(String::as_str).ok_or(
         "client: missing command \
-         (ping|info|stats|generate|pnr|simulate|dse|area|figure|shutdown)",
+         (ping|info|stats|metrics|generate|pnr|simulate|dse|area|figure|shutdown)",
     )?;
     let req = match sub {
         "ping" => Request::Ping,
         "info" => Request::Info,
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics,
         "shutdown" => Request::Shutdown,
         "dse" => Request::Dse(dse_params_from_args(args)?),
         "area" => Request::Area(dse_params_from_args(args)?),
@@ -700,7 +741,25 @@ fn cmd_client(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown client command `{other}`")),
     };
     let mut client = Client::connect(addr)?;
-    let data = client.call_with(&req, |msg| eprintln!("… {msg}"))?;
+    // `--watch` promotes progress frames to stdout: during a long sweep
+    // the daemon heartbeats live progress (jobs done/total, cache hits,
+    // coalesced joins, per-worker utilization) every `--heartbeat`.
+    let watch = args.has("watch");
+    let data = client.call_with(&req, |msg| {
+        if watch {
+            println!("{msg}");
+        } else {
+            eprintln!("… {msg}");
+        }
+    })?;
+    // `metrics` prints one metric object per line (same shape as the
+    // NDJSON snapshot `canal dse --trace` emits) — grep-friendly.
+    if let Some(Json::Arr(metrics)) = data.get("metrics") {
+        for m in metrics {
+            println!("{}", m.render_line());
+        }
+        return Ok(());
+    }
     // Prefer server-rendered tables; fall back to the raw JSON record.
     if let Some(table) = data.get("table").and_then(Json::as_str) {
         if let Some(at) = data.get("areas_table").and_then(Json::as_str) {
@@ -747,24 +806,32 @@ commands:
               engine: --workers N  --cache FILE  --no-cache  --warm-start  --json FILE
               (--warm-start: incremental PnR — warm-start neighboring points from
                cached placements + routed trees, delta-aware sweep ordering)
+              --trace FILE: record the run, write a Chrome trace-event file
+               (loads in Perfetto, one track per worker), print metrics NDJSON
   dse figures  regenerate fig07/08/09/10/11/14/15 through one shared result cache
   dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
                with --warm-start: incremental-PnR check (warm_starts > 0,
                nets_reused > 0, artifact store round-trips byte-identically)
+               with --trace FILE: the CI trace check (span + metric coverage)
   serve       persistent daemon: concurrent sessions, one shared warm cache,
               coalesced in-flight sweeps (newline-delimited JSON over TCP)
               --addr HOST:PORT  --workers N  --conn-threads N  --cache FILE
               --no-cache  --ic-cap N  --port-file FILE
+              --read-poll MS (idle read poll, default 500)
+              --heartbeat MS (progress frame period, default 15000)
   client      one scripted request against a running daemon
-              --addr HOST:PORT  then: ping|info|stats|shutdown
+              --addr HOST:PORT  then: ping|info|stats|metrics|shutdown
               dse|area [dse axis flags]   pnr --app NAME   figure figN
               simulate --app NAME --fabric F --tokens N
               generate --width W --height H --tracks T --topology T --backend static|rv
+              --watch: print live progress frames (heartbeats carry jobs
+               done/total, cache hits, coalesced joins, worker utilization)
   info        version, compiled features, active placer backend, app registry
   help        this message
 
 see docs/cli.md for the full reference, docs/dse.md for the DSE engine,
-and docs/service.md for the daemon protocol.";
+docs/service.md for the daemon protocol, and docs/observability.md for
+spans, metrics, and trace files.";
 
 fn main() -> ExitCode {
     let argv: Vec<String> = std::env::args().skip(1).collect();

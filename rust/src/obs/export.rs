@@ -1,0 +1,208 @@
+//! Trace and metrics export: Chrome trace-event JSON and NDJSON
+//! metrics snapshots.
+//!
+//! The trace format is the Chrome trace-event "JSON object format"
+//! (`{"traceEvents": [...]}`): load the file in <https://ui.perfetto.dev>
+//! or `chrome://tracing` and every instrumented thread appears as its
+//! own named track. Timestamps are microseconds (fractional — the ring
+//! records nanoseconds) on one shared epoch, complete spans are `ph:"X"`
+//! events, instants are `ph:"i"`.
+//!
+//! The metrics snapshot is NDJSON: one [`crate::util::json`] object per
+//! line, one line per registered metric, sorted by name, plus two
+//! `obs.span.*` lines accounting for the ring buffers themselves.
+
+use std::path::Path;
+
+use super::{metrics, span};
+use crate::util::json::Json;
+
+/// Build the Chrome trace document for a set of collected events.
+///
+/// One `pid` (the process), one `tid` per worker ring, a `thread_name`
+/// metadata record per track, and events sorted by timestamp so the
+/// file streams into Perfetto without a sort pass.
+pub fn chrome_trace(events: &[span::SpanEvent], labels: &[(u32, String)]) -> Json {
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + labels.len());
+    for (worker, label) in labels {
+        out.push(Json::Obj(vec![
+            ("name".into(), Json::str("thread_name")),
+            ("ph".into(), Json::str("M")),
+            ("pid".into(), Json::num_u64(1)),
+            ("tid".into(), Json::num_u64(*worker as u64)),
+            ("args".into(), Json::Obj(vec![("name".into(), Json::str(label))])),
+        ]));
+    }
+    let mut sorted: Vec<&span::SpanEvent> = events.iter().collect();
+    sorted.sort_by_key(|ev| (ev.start_ns, ev.worker));
+    for ev in sorted {
+        let ts_us = ev.start_ns as f64 / 1000.0;
+        let mut obj = vec![
+            ("name".into(), Json::str(ev.name)),
+            ("cat".into(), Json::str("canal")),
+            (
+                "ph".into(),
+                Json::str(match ev.kind {
+                    span::SpanKind::Span => "X",
+                    span::SpanKind::Instant => "i",
+                }),
+            ),
+            ("pid".into(), Json::num_u64(1)),
+            ("tid".into(), Json::num_u64(ev.worker as u64)),
+            ("ts".into(), Json::num_f64(ts_us)),
+        ];
+        match ev.kind {
+            span::SpanKind::Span => {
+                obj.push(("dur".into(), Json::num_f64(ev.dur_ns as f64 / 1000.0)));
+            }
+            span::SpanKind::Instant => {
+                // Thread-scoped instant marker.
+                obj.push(("s".into(), Json::str("t")));
+            }
+        }
+        if ev.arg0 != 0 || ev.arg1 != 0 {
+            obj.push((
+                "args".into(),
+                Json::Obj(vec![
+                    ("arg0".into(), Json::num_u64(ev.arg0)),
+                    ("arg1".into(), Json::num_u64(ev.arg1)),
+                ]),
+            ));
+        }
+        out.push(Json::Obj(obj));
+    }
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(out)),
+        ("displayTimeUnit".into(), Json::str("ms")),
+    ])
+}
+
+/// Collect every ring and write the Chrome trace to `path`.
+pub fn write_chrome_trace(path: &Path) -> Result<(), String> {
+    let doc = chrome_trace(&span::collect(), &span::track_labels());
+    std::fs::write(path, doc.render()).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn metric_obj(name: &str, value: &metrics::MetricValue) -> Json {
+    match value {
+        metrics::MetricValue::Counter(v) => Json::Obj(vec![
+            ("metric".into(), Json::str(name)),
+            ("type".into(), Json::str("counter")),
+            ("value".into(), Json::num_u64(*v)),
+        ]),
+        metrics::MetricValue::Gauge(v) => Json::Obj(vec![
+            ("metric".into(), Json::str(name)),
+            ("type".into(), Json::str("gauge")),
+            ("value".into(), Json::Num(v.to_string())),
+        ]),
+        metrics::MetricValue::Histogram(s) => Json::Obj(vec![
+            ("metric".into(), Json::str(name)),
+            ("type".into(), Json::str("histogram")),
+            ("count".into(), Json::num_u64(s.count)),
+            ("sum".into(), Json::num_u64(s.sum)),
+            ("min".into(), Json::num_u64(s.min)),
+            ("max".into(), Json::num_u64(s.max)),
+            ("p50".into(), Json::num_f64(s.p50)),
+            ("p90".into(), Json::num_f64(s.p90)),
+            ("p99".into(), Json::num_f64(s.p99)),
+        ]),
+    }
+}
+
+/// Every registered metric plus the span-layer's own accounting, as a
+/// list of one-object-per-metric JSON values (sorted by name; the
+/// `obs.span.*` lines come last).
+pub fn metric_objects() -> Vec<Json> {
+    let mut out: Vec<Json> =
+        metrics::snapshot().iter().map(|(n, v)| metric_obj(n, v)).collect();
+    let (pushed, dropped) = span::totals();
+    out.push(metric_obj("obs.span.dropped_events", &metrics::MetricValue::Counter(dropped)));
+    out.push(metric_obj("obs.span.recorded", &metrics::MetricValue::Counter(pushed)));
+    out
+}
+
+/// The metrics snapshot as NDJSON (one line per metric, `\n`-terminated).
+pub fn metrics_ndjson() -> String {
+    let mut out = String::new();
+    for obj in metric_objects() {
+        out.push_str(&obj.render_line());
+        out.push('\n');
+    }
+    out
+}
+
+/// The metrics snapshot as one JSON document (what the daemon's
+/// `metrics` request returns): `{"metrics": [...]}`.
+pub fn metrics_json() -> Json {
+    Json::Obj(vec![("metrics".into(), Json::Arr(metric_objects()))])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{SpanEvent, SpanKind};
+
+    fn sample_events() -> Vec<SpanEvent> {
+        vec![
+            SpanEvent {
+                name: "pnr.route",
+                kind: SpanKind::Span,
+                worker: 1,
+                start_ns: 2500,
+                dur_ns: 1500,
+                arg0: 3,
+                arg1: 0,
+            },
+            SpanEvent {
+                name: "dse.cache.hit",
+                kind: SpanKind::Instant,
+                worker: 0,
+                start_ns: 1000,
+                dur_ns: 0,
+                arg0: 0,
+                arg1: 0,
+            },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_order() {
+        let labels = vec![(0u32, "worker-0".to_string()), (1u32, "dse-worker-1".to_string())];
+        let doc = chrome_trace(&sample_events(), &labels);
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(evs.len(), 4, "2 metadata + 2 events");
+        // Metadata first, then events sorted by ts regardless of input order.
+        assert_eq!(evs[0].get("ph").and_then(|v| v.as_str()), Some("M"));
+        assert_eq!(evs[1].get("ph").and_then(|v| v.as_str()), Some("M"));
+        assert_eq!(evs[2].get("name").and_then(|v| v.as_str()), Some("dse.cache.hit"));
+        assert_eq!(evs[2].get("ph").and_then(|v| v.as_str()), Some("i"));
+        assert_eq!(evs[2].get("s").and_then(|v| v.as_str()), Some("t"));
+        let x = &evs[3];
+        assert_eq!(x.get("ph").and_then(|v| v.as_str()), Some("X"));
+        assert_eq!(x.get("ts").and_then(|v| v.as_f64()), Some(2.5));
+        assert_eq!(x.get("dur").and_then(|v| v.as_f64()), Some(1.5));
+        assert_eq!(x.get("tid").and_then(|v| v.as_u64()), Some(1));
+        let args = x.get("args").unwrap();
+        assert_eq!(args.get("arg0").and_then(|v| v.as_u64()), Some(3));
+        // The rendered document parses back (structural validity).
+        let parsed = Json::parse(&doc.render()).unwrap();
+        assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn metrics_ndjson_lines_parse() {
+        metrics::counter("test.export.lines").add(2);
+        let nd = metrics_ndjson();
+        let mut saw = false;
+        for line in nd.lines() {
+            let j = Json::parse(line).expect("every NDJSON line parses");
+            assert!(j.get("metric").is_some() && j.get("type").is_some());
+            if j.get("metric").and_then(|v| v.as_str()) == Some("test.export.lines") {
+                assert!(j.get("value").and_then(|v| v.as_u64()).unwrap_or(0) >= 2);
+                saw = true;
+            }
+        }
+        assert!(saw);
+        assert!(nd.contains("obs.span.dropped_events"));
+    }
+}

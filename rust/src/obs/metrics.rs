@@ -1,0 +1,349 @@
+//! A process-wide metrics registry: counters, gauges, and log-bucketed
+//! histograms.
+//!
+//! Handles are `Arc`s to lock-free atomics — the registry mutex is only
+//! taken on first registration and at snapshot time, never on the
+//! record path. Histograms bucket by `ceil(log2(v))` (64 buckets cover
+//! the full `u64` range), which gives p50/p90/p99 estimates with ≤ 2×
+//! relative error and no HDR dependency — plenty for "where do the
+//! nanoseconds go" questions.
+//!
+//! Naming convention (full table in `docs/observability.md`):
+//! dot-separated lowercase, `<stage>.count` / `<stage>.ns` for flow
+//! stages (e.g. `pnr.route.count`), `engine.<field>` for the
+//! [`crate::dse::EngineStats`] mirror, `service.*` for the daemon.
+//!
+//! [`crate::dse::EngineStats`] remains the per-run value returned by
+//! the engine; `crate::dse::report::publish_engine_stats` mirrors every
+//! run's fields into this registry, so the registry is the cumulative
+//! process view and `stats_json` stays byte-compatible.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time signed value (queue depths, utilization, ...).
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+const BUCKETS: usize = 64;
+
+/// A log₂-bucketed histogram of `u64` samples.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    min: AtomicU64,
+    max: AtomicU64,
+    /// `buckets[k]` counts samples with `ceil(log2(v)) == k` (v = 0 and
+    /// v = 1 land in bucket 0).
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+            buckets: [(); BUCKETS].map(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+fn bucket_of(v: u64) -> usize {
+    if v <= 1 {
+        0
+    } else {
+        // Values ≥ 2^63 collapse into the top bucket.
+        ((64 - (v - 1).leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Upper bound of bucket `k` (inclusive): the largest value it can hold.
+fn bucket_hi(k: usize) -> u64 {
+    if k >= 64 {
+        u64::MAX
+    } else {
+        1u64 << k
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Estimate the `q`-quantile (`0.0 ..= 1.0`) from the buckets:
+    /// linear interpolation inside the bucket that crosses the target
+    /// rank, so the estimate is within the bucket's 2× span.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = q.clamp(0.0, 1.0) * total as f64;
+        let mut seen = 0u64;
+        for (k, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = seen + c;
+            if next as f64 >= target {
+                let lo = if k == 0 { 0 } else { bucket_hi(k - 1) } as f64;
+                let hi = bucket_hi(k) as f64;
+                let frac = if c == 0 { 0.0 } else { (target - seen as f64) / c as f64 };
+                let est = lo + (hi - lo) * frac.clamp(0.0, 1.0);
+                // Clamp to the observed range so tiny histograms don't
+                // report an upper bound no sample ever reached.
+                let min = self.min.load(Ordering::Relaxed) as f64;
+                let max = self.max.load(Ordering::Relaxed) as f64;
+                return est.clamp(min, max);
+            }
+            seen = next;
+        }
+        self.max.load(Ordering::Relaxed) as f64
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let count = self.count();
+        HistSnapshot {
+            count,
+            sum: self.sum.load(Ordering::Relaxed),
+            min: if count == 0 { 0 } else { self.min.load(Ordering::Relaxed) },
+            max: self.max.load(Ordering::Relaxed),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+        }
+    }
+}
+
+/// A point-in-time histogram summary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HistSnapshot {
+    pub count: u64,
+    pub sum: u64,
+    pub min: u64,
+    pub max: u64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// One metric's snapshotted value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(HistSnapshot),
+}
+
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Metric>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Get-or-register the named counter. If the name is already taken by a
+/// different metric kind (a programming error), a detached handle is
+/// returned so the caller still works — the registered metric wins in
+/// snapshots.
+pub fn counter(name: &str) -> Arc<Counter> {
+    let mut map = registry().lock().unwrap_or_else(|p| p.into_inner());
+    match map.get(name) {
+        Some(Metric::Counter(c)) => Arc::clone(c),
+        Some(_) => Arc::new(Counter::default()),
+        None => {
+            let c = Arc::new(Counter::default());
+            map.insert(name.to_string(), Metric::Counter(Arc::clone(&c)));
+            c
+        }
+    }
+}
+
+/// Get-or-register the named gauge (same kind-mismatch policy as
+/// [`counter`]).
+pub fn gauge(name: &str) -> Arc<Gauge> {
+    let mut map = registry().lock().unwrap_or_else(|p| p.into_inner());
+    match map.get(name) {
+        Some(Metric::Gauge(g)) => Arc::clone(g),
+        Some(_) => Arc::new(Gauge::default()),
+        None => {
+            let g = Arc::new(Gauge::default());
+            map.insert(name.to_string(), Metric::Gauge(Arc::clone(&g)));
+            g
+        }
+    }
+}
+
+/// Get-or-register the named histogram (same kind-mismatch policy as
+/// [`counter`]).
+pub fn histogram(name: &str) -> Arc<Histogram> {
+    let mut map = registry().lock().unwrap_or_else(|p| p.into_inner());
+    match map.get(name) {
+        Some(Metric::Histogram(h)) => Arc::clone(h),
+        Some(_) => Arc::new(Histogram::default()),
+        None => {
+            let h = Arc::new(Histogram::default());
+            map.insert(name.to_string(), Metric::Histogram(Arc::clone(&h)));
+            h
+        }
+    }
+}
+
+/// Snapshot one metric by name.
+pub fn get(name: &str) -> Option<MetricValue> {
+    let map = registry().lock().unwrap_or_else(|p| p.into_inner());
+    map.get(name).map(|m| match m {
+        Metric::Counter(c) => MetricValue::Counter(c.get()),
+        Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+        Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+    })
+}
+
+/// Snapshot every registered metric, sorted by name.
+pub fn snapshot() -> Vec<(String, MetricValue)> {
+    let map = registry().lock().unwrap_or_else(|p| p.into_inner());
+    map.iter()
+        .map(|(name, m)| {
+            let v = match m {
+                Metric::Counter(c) => MetricValue::Counter(c.get()),
+                Metric::Gauge(g) => MetricValue::Gauge(g.get()),
+                Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+            };
+            (name.clone(), v)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let c = counter("test.metrics.counter");
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(counter("test.metrics.counter").get(), before + 5);
+
+        let g = gauge("test.metrics.gauge");
+        g.set(7);
+        g.add(-3);
+        assert_eq!(gauge("test.metrics.gauge").get(), 4);
+
+        match get("test.metrics.gauge") {
+            Some(MetricValue::Gauge(4)) => {}
+            other => panic!("unexpected snapshot: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn kind_mismatch_returns_detached_handle() {
+        counter("test.metrics.kind").inc();
+        // Asking for the same name as a gauge must not panic or clobber.
+        let g = gauge("test.metrics.kind");
+        g.set(99);
+        match get("test.metrics.kind") {
+            Some(MetricValue::Counter(n)) => assert!(n >= 1),
+            other => panic!("registered kind must win: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        assert_eq!(bucket_of(0), 0);
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(1025), 11);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1, "huge values collapse into the top bucket");
+
+        let h = Histogram::default();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile is 0");
+        for v in 1..=1000u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 1000);
+        assert_eq!(s.sum, 500_500);
+        assert_eq!((s.min, s.max), (1, 1000));
+        // Log buckets give ≤ 2× relative error: p50 of 1..=1000 is 500,
+        // so the estimate must land within its bucket's (256, 1000] span.
+        assert!(s.p50 > 250.0 && s.p50 <= 1000.0, "p50 estimate {} out of range", s.p50);
+        assert!(s.p90 >= s.p50 && s.p99 >= s.p90, "quantiles must be monotone");
+        assert!(s.p99 <= 1000.0, "clamped to the observed max");
+    }
+
+    #[test]
+    fn histogram_single_sample_is_exact() {
+        let h = Histogram::default();
+        h.record(777);
+        let s = h.snapshot();
+        assert_eq!((s.count, s.min, s.max), (1, 777, 777));
+        assert_eq!(s.p50, 777.0, "clamping makes single-sample quantiles exact");
+        assert_eq!(s.p99, 777.0);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_by_name() {
+        counter("test.metrics.zzz").inc();
+        counter("test.metrics.aaa").inc();
+        let names: Vec<String> = snapshot().into_iter().map(|(n, _)| n).collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+}

@@ -1,0 +1,155 @@
+//! Observability: span tracing, a metrics registry, and trace export.
+//!
+//! The layer is std-only (JSON via [`crate::util::json`], no serde/HDR
+//! deps) and split in three:
+//!
+//! - [`span`] — lightweight span tracing into per-thread lock-free ring
+//!   buffers (fixed capacity, drop-oldest, merged at collection time);
+//! - [`metrics`] — a process-wide registry of counters, gauges, and
+//!   log-bucketed histograms (p50/p90/p99 without external deps);
+//! - [`export`] — Chrome trace-event JSON (one track per worker, loads
+//!   directly in Perfetto / `chrome://tracing`) and an NDJSON metrics
+//!   snapshot.
+//!
+//! # The gate
+//!
+//! Everything is off by default and **zero-cost when disabled**: every
+//! recording path starts with a single relaxed atomic load of a
+//! process-wide gate byte ([`metrics_on`] / [`trace_on`]) and returns
+//! immediately when the corresponding bit is clear. Recording never
+//! feeds back into any algorithm — results are bit-identical with the
+//! gate on or off (`tests/dse_determinism.rs` proves it).
+//!
+//! [`ObsOptions`] is the configuration surface: `canal dse --trace F`
+//! enables both bits for the run and writes the Chrome trace to `F`;
+//! `canal serve` enables metrics so the daemon's `metrics` request has
+//! live data; everything else leaves the gate at zero.
+//!
+//! Span taxonomy, metric names, and file formats are documented in
+//! `docs/observability.md`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+pub use export::{chrome_trace, metrics_json, metrics_ndjson, write_chrome_trace};
+pub use metrics::{Counter, Gauge, Histogram, MetricValue};
+pub use span::{event, span, stage, SpanEvent, SpanGuard, SpanKind, StageGuard};
+
+const METRICS_BIT: u8 = 1;
+const TRACE_BIT: u8 = 2;
+
+static GATE: AtomicU8 = AtomicU8::new(0);
+
+/// Runtime configuration of the observability layer.
+///
+/// Plain data — call [`ObsOptions::apply`] to install it process-wide.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ObsOptions {
+    /// Record stage counters/histograms into the global registry.
+    pub metrics: bool,
+    /// Record spans into the per-thread ring buffers.
+    pub trace: bool,
+}
+
+impl ObsOptions {
+    /// Everything off (the default; recording paths cost one atomic load).
+    pub fn disabled() -> ObsOptions {
+        ObsOptions { metrics: false, trace: false }
+    }
+
+    /// Metrics + spans (what `canal dse --trace` uses).
+    pub fn full() -> ObsOptions {
+        ObsOptions { metrics: true, trace: true }
+    }
+
+    /// Counters/histograms only — what the daemon runs with so the
+    /// `metrics` request has data without paying for span recording.
+    pub fn metrics_only() -> ObsOptions {
+        ObsOptions { metrics: true, trace: false }
+    }
+
+    /// Install process-wide (a single atomic store).
+    pub fn apply(self) {
+        let mut bits = 0;
+        if self.metrics {
+            bits |= METRICS_BIT;
+        }
+        if self.trace {
+            bits |= TRACE_BIT;
+        }
+        GATE.store(bits, Ordering::Relaxed);
+    }
+
+    /// The currently-installed options.
+    pub fn current() -> ObsOptions {
+        let bits = GATE.load(Ordering::Relaxed);
+        ObsOptions { metrics: bits & METRICS_BIT != 0, trace: bits & TRACE_BIT != 0 }
+    }
+}
+
+/// Fast-path check: is metric recording enabled?
+#[inline]
+pub fn metrics_on() -> bool {
+    GATE.load(Ordering::Relaxed) & METRICS_BIT != 0
+}
+
+/// Fast-path check: is span recording enabled?
+#[inline]
+pub fn trace_on() -> bool {
+    GATE.load(Ordering::Relaxed) & TRACE_BIT != 0
+}
+
+/// Is anything enabled at all? (One load; the common disabled path.)
+#[inline]
+pub fn enabled() -> bool {
+    GATE.load(Ordering::Relaxed) != 0
+}
+
+/// Nanoseconds since the process-wide observability epoch (first call).
+///
+/// All spans from all threads share this epoch, which is what makes the
+/// merged trace's timestamps comparable across tracks.
+#[inline]
+pub fn now_ns() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Serializes unit tests that flip the process-global gate, so one
+/// test's `disabled` window can't race another's `trace` window.
+#[cfg(test)]
+pub(crate) fn test_gate_lock() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_bits_round_trip() {
+        let _gate = test_gate_lock();
+        let prev = ObsOptions::current();
+        ObsOptions::disabled().apply();
+        assert!(!metrics_on() && !trace_on() && !enabled());
+        ObsOptions::metrics_only().apply();
+        assert!(metrics_on() && !trace_on() && enabled());
+        ObsOptions::full().apply();
+        assert!(metrics_on() && trace_on() && enabled());
+        assert_eq!(ObsOptions::current(), ObsOptions::full());
+        prev.apply();
+    }
+
+    #[test]
+    fn now_ns_is_monotonic() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(b >= a);
+    }
+}

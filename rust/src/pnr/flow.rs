@@ -3,6 +3,8 @@
 //! ("sweeping α from 1 to 20 and choosing the best result post-routing").
 
 use crate::ir::{Interconnect, NodeId};
+use crate::obs;
+use crate::obs::span::names as spans;
 
 use super::app::AppGraph;
 use super::pack::{pack, PackedApp};
@@ -88,7 +90,11 @@ pub fn run_flow_scratch(
     scratch: &mut RouterScratch,
 ) -> Result<FlowResult, RoutingFailed> {
     let prepared = prepare_point(ic, app, params);
-    let (xs, ys) = placer.optimize(&prepared.problem, &prepared.xs0, &prepared.ys0);
+    let (xs, ys) = {
+        let mut g = obs::stage(spans::GLOBAL_PLACE);
+        g.args(1, 0); // scalar path: batch of one
+        placer.optimize(&prepared.problem, &prepared.xs0, &prepared.ys0)
+    };
     finish_flow_scratch(ic, &prepared, &xs, &ys, params, scratch)
 }
 
@@ -112,7 +118,10 @@ pub struct PreparedPoint {
 /// Pack `app` and build its global-placement problem (flow stages 1-2a).
 pub fn prepare_point(ic: &Interconnect, app: &AppGraph, params: &FlowParams) -> PreparedPoint {
     // 1. Packing.
-    let packed = pack(app);
+    let packed = {
+        let _s = obs::stage(spans::PACK);
+        pack(app)
+    };
     // 2a. Global-placement problem construction (analytic; Eq. 1).
     let (xs0, ys0) = initial_positions(&packed.app, ic, params.seed);
     let problem = build_global_problem(&packed.app, ic);
@@ -132,7 +141,8 @@ pub fn finish_flow_scratch(
     scratch: &mut RouterScratch,
 ) -> Result<FlowResult, RoutingFailed> {
     let packed = &prepared.packed;
-    // 2b. Legalization of the analytic solution.
+    // 2b. Legalization of the analytic solution (the `pnr.legalize`
+    // span is recorded inside `legalize` itself).
     let seed_placement = legalize(&packed.app, ic, xs, ys).map_err(|e| RoutingFailed {
         iterations: 0,
         overused_nodes: 0,
@@ -160,8 +170,10 @@ pub fn finish_flow_scratch(
         );
         match routed {
             Ok(routing) => {
-                let timing =
-                    analyze(ic, packed, &routing, params.bit_width, params.workload_items);
+                let timing = {
+                    let _s = obs::stage(spans::STA);
+                    analyze(ic, packed, &routing, params.bit_width, params.workload_items)
+                };
                 let better = best
                     .as_ref()
                     .map_or(true, |b| timing.critical_path_ps < b.timing.critical_path_ps);
@@ -221,7 +233,10 @@ pub fn run_flow_warm(
     seed: &WarmSeed,
     scratch: &mut RouterScratch,
 ) -> Result<(FlowResult, RouteReuse), RoutingFailed> {
-    let packed = pack(app);
+    let packed = {
+        let _s = obs::stage(spans::PACK);
+        pack(app)
+    };
     let start = seed_placement(&packed.app, ic, seed.placement).map_err(|e| RoutingFailed {
         iterations: 0,
         overused_nodes: 0,
@@ -280,7 +295,10 @@ pub fn run_flow_warm(
                 }
             },
         };
-        let timing = analyze(ic, &packed, &routing, params.bit_width, params.workload_items);
+        let timing = {
+            let _s = obs::stage(spans::STA);
+            analyze(ic, &packed, &routing, params.bit_width, params.workload_items)
+        };
         let better = best
             .as_ref()
             .map_or(true, |(b, _)| timing.critical_path_ps < b.timing.critical_path_ps);

@@ -423,6 +423,7 @@ pub fn legalize(
     xs: &[f32],
     ys: &[f32],
 ) -> Result<Placement, String> {
+    let _span = crate::obs::stage(crate::obs::span::names::LEGALIZE);
     let mut used = vec![false; ic.width as usize * ic.height as usize];
     let mut pos = vec![(0u16, 0u16); app.len()];
     // Place in order of "constrainedness": MEM first (fewer sites).
@@ -706,6 +707,8 @@ fn anneal(
     params: &SaParams,
     temp0: Option<f64>,
 ) -> (Placement, f64) {
+    let mut _span = crate::obs::stage(crate::obs::span::names::SA);
+    _span.args(params.moves_per_node as u64, temp0.is_some() as u64);
     initial.check(app, ic).expect("detailed placement needs a legal start");
     let mut grid = vec![None; ic.width as usize * ic.height as usize];
     for (id, _) in app.iter() {

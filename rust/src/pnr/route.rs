@@ -422,6 +422,8 @@ pub fn route_with_scratch(
     let g = ic.compiled(bit_width);
     let rg = ic.graph(bit_width);
     let nets = app.nets();
+    let mut _span = crate::obs::stage(crate::obs::span::names::ROUTE);
+    _span.args(nets.len() as u64, 0);
 
     // Pre-resolve terminals.
     let mut terminals: Vec<(NodeId, Vec<NodeId>)> = Vec::with_capacity(nets.len());
@@ -555,6 +557,8 @@ pub fn route_with_seed(
     let g = ic.compiled(bit_width);
     let rg = ic.graph(bit_width);
     let nets = app.nets();
+    let mut _span = crate::obs::stage(crate::obs::span::names::ROUTE);
+    _span.args(nets.len() as u64, 1); // arg1 = seeded (warm) route
     if seed_paths.len() != nets.len() {
         return Err(RoutingFailed {
             iterations: 0,

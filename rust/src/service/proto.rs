@@ -14,8 +14,9 @@
 //! `{"id": <u64>, "cmd": "<name>", ...params}` — the `id` is chosen by
 //! the client and echoed on every response frame, so a client can match
 //! responses even though the server handles one request per connection
-//! at a time. Commands: `ping`, `info`, `stats`, `generate`, `pnr`,
-//! `simulate`, `dse`, `area`, `figure`, `shutdown` (see [`Request`]).
+//! at a time. Commands: `ping`, `info`, `stats`, `metrics`, `generate`,
+//! `pnr`, `simulate`, `dse`, `area`, `figure`, `shutdown` (see
+//! [`Request`]).
 //!
 //! ## Responses
 //!
@@ -60,6 +61,10 @@ pub enum Request {
     /// Cumulative [`service-wide counters`](super::state::ServiceStats)
     /// plus cache occupancy.
     Stats,
+    /// Snapshot of the process-wide observability registry
+    /// ([`crate::obs::metrics`]): every counter/gauge/histogram the
+    /// daemon has recorded, as `{"metrics":[...]}`.
+    Metrics,
     /// Build an interconnect and report its shape.
     Generate(GenParams),
     /// Place-and-route a single application: a one-job sweep through
@@ -287,6 +292,7 @@ pub fn request_line(id: u64, req: &Request) -> String {
         Request::Ping => cmd(&mut members, "ping"),
         Request::Info => cmd(&mut members, "info"),
         Request::Stats => cmd(&mut members, "stats"),
+        Request::Metrics => cmd(&mut members, "metrics"),
         Request::Shutdown => cmd(&mut members, "shutdown"),
         Request::Generate(g) => {
             cmd(&mut members, "generate");
@@ -337,6 +343,7 @@ pub fn parse_request(line: &str) -> Result<(u64, Request), String> {
         "ping" => Request::Ping,
         "info" => Request::Info,
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics,
         "shutdown" => Request::Shutdown,
         "generate" => {
             let d = GenParams::default();
@@ -583,6 +590,7 @@ mod tests {
             Request::Ping,
             Request::Info,
             Request::Stats,
+            Request::Metrics,
             Request::Shutdown,
             Request::Generate(GenParams {
                 tracks: Some(4),

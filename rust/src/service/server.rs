@@ -44,9 +44,14 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::dse::{app_by_name, areas_table, outcome_json, points_table, stats_json};
+use crate::dse::{
+    app_by_name, areas_table, outcome_json, points_table, stats_json, SweepProgress,
+};
 use crate::dse::InterconnectSource;
 use crate::hw::{allocate, lower_ready_valid, lower_static, RvOptions};
+use crate::obs;
+use crate::obs::metrics::{counter, gauge, histogram, Counter};
+use crate::obs::span::names as spans;
 use crate::sim::{RvSim, StallPattern};
 use crate::util::json::Json;
 
@@ -57,11 +62,16 @@ use super::state::{SessionState, StateOptions};
 /// (protects the daemon from unframed garbage).
 const MAX_FRAME_BYTES: usize = 16 * 1024 * 1024;
 
-/// How long a blocked read waits before re-checking the shutdown flag.
+/// Default for [`ServeOptions::read_poll`].
 const READ_POLL: Duration = Duration::from_millis(500);
 
-/// Heartbeat period during long computations: well under the client's
-/// read timeout, so a silent stretch only ever means a dead server.
+/// Idle connections back their poll timeout off exponentially up to
+/// this multiple of [`ServeOptions::read_poll`] (resets on data), so a
+/// parked client costs a fraction of the wakeups while drain latency
+/// stays bounded.
+const READ_POLL_BACKOFF_MAX: u32 = 4;
+
+/// Default for [`ServeOptions::heartbeat`].
 const HEARTBEAT_EVERY: Duration = Duration::from_secs(15);
 
 /// Server configuration.
@@ -76,6 +86,14 @@ pub struct ServeOptions {
     /// When set, the resolved `host:port` is written here after bind —
     /// the handshake scripted callers use with ephemeral ports.
     pub port_file: Option<PathBuf>,
+    /// How long a blocked read waits before re-checking the shutdown
+    /// flag (the *base* of the idle backoff). Bounds drain latency for
+    /// idle connections at `read_poll * READ_POLL_BACKOFF_MAX`.
+    pub read_poll: Duration,
+    /// Heartbeat period during long computations: well under the
+    /// client's read timeout, so a silent stretch only ever means a
+    /// dead server. Tests shrink it to observe mid-sweep progress.
+    pub heartbeat: Duration,
 }
 
 impl Default for ServeOptions {
@@ -85,6 +103,8 @@ impl Default for ServeOptions {
             conn_threads: 0,
             state: StateOptions::default(),
             port_file: None,
+            read_poll: READ_POLL,
+            heartbeat: HEARTBEAT_EVERY,
         }
     }
 }
@@ -95,6 +115,8 @@ pub struct Server {
     state: Arc<SessionState>,
     shutdown: Arc<AtomicBool>,
     conn_threads: usize,
+    read_poll: Duration,
+    heartbeat: Duration,
 }
 
 impl Server {
@@ -118,11 +140,17 @@ impl Server {
                 .map_err(|e| format!("{}: {e}", path.display()))?;
         }
         let conn_threads = if opts.conn_threads == 0 { 8 } else { opts.conn_threads };
+        // The daemon always collects metrics (the `metrics` request
+        // serves them); span tracing stays off unless a caller enabled
+        // it before binding.
+        obs::ObsOptions { metrics: true, trace: obs::trace_on() }.apply();
         Ok(Server {
             listener,
             state,
             shutdown: Arc::new(AtomicBool::new(false)),
             conn_threads,
+            read_poll: opts.read_poll.max(Duration::from_millis(1)),
+            heartbeat: opts.heartbeat.max(Duration::from_millis(1)),
         })
     }
 
@@ -152,10 +180,13 @@ impl Server {
         let (tx, rx) = mpsc::channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
         let mut workers = Vec::with_capacity(self.conn_threads);
+        let (read_poll, heartbeat) = (self.read_poll, self.heartbeat);
+        let queue_depth = obs::metrics_on().then(|| gauge("service.queue.depth"));
         for _ in 0..self.conn_threads {
             let rx = Arc::clone(&rx);
             let state = Arc::clone(&self.state);
             let shutdown = Arc::clone(&self.shutdown);
+            let queue_depth = queue_depth.clone();
             workers.push(std::thread::spawn(move || loop {
                 // Classic handoff queue: one worker at a time parks in
                 // `recv`; the channel closing (accept loop gone) ends
@@ -166,6 +197,9 @@ impl Server {
                 };
                 match next {
                     Ok(stream) => {
+                        if let Some(g) = &queue_depth {
+                            g.add(-1);
+                        }
                         if shutdown.load(Ordering::SeqCst) {
                             // Drain mode: queued connections are closed
                             // without service.
@@ -176,7 +210,7 @@ impl Server {
                         // panic would silently shrink the pool until
                         // accepted connections are never served.
                         let outcome = catch_unwind(AssertUnwindSafe(|| {
-                            handle_conn(stream, &state, &shutdown)
+                            handle_conn(stream, &state, &shutdown, read_poll, heartbeat)
                         }));
                         if outcome.is_err() {
                             state.stats().errors.fetch_add(1, Ordering::Relaxed);
@@ -199,6 +233,9 @@ impl Server {
                 Ok((stream, _)) => {
                     let _ = stream.set_nonblocking(false);
                     self.state.stats().connections.fetch_add(1, Ordering::Relaxed);
+                    if let Some(g) = &queue_depth {
+                        g.add(1);
+                    }
                     if tx.send(stream).is_err() {
                         break;
                     }
@@ -226,10 +263,15 @@ impl Server {
 
 /// Serve one connection: requests strictly in order until EOF, a
 /// framing error, or drain.
-fn handle_conn(stream: TcpStream, state: &Arc<SessionState>, shutdown: &Arc<AtomicBool>) {
-    let _ = stream.set_read_timeout(Some(READ_POLL));
+fn handle_conn(
+    stream: TcpStream,
+    state: &Arc<SessionState>,
+    shutdown: &Arc<AtomicBool>,
+    read_poll: Duration,
+    heartbeat: Duration,
+) {
     let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = LineReader { stream: read_half, pending: Vec::new() };
+    let mut reader = LineReader::new(read_half, read_poll);
     let mut writer = stream;
     loop {
         if shutdown.load(Ordering::SeqCst) {
@@ -256,13 +298,42 @@ fn handle_conn(stream: TcpStream, state: &Arc<SessionState>, shutdown: &Arc<Atom
             }
         };
         let is_shutdown = matches!(req, Request::Shutdown);
-        if let Err(e) = handle_request(id, req, state, &mut writer, shutdown) {
+        let cmd = cmd_name(&req);
+        let t0 = obs::metrics_on().then(obs::now_ns);
+        let outcome = {
+            let mut _req = obs::span(spans::REQUEST);
+            _req.args(id, 0);
+            handle_request(id, req, state, &mut writer, shutdown, heartbeat)
+        };
+        if let Some(t0) = t0 {
+            let dur = obs::now_ns().saturating_sub(t0);
+            counter(&format!("service.request.{cmd}")).inc();
+            histogram("service.request.latency_us").record(dur / 1_000);
+        }
+        if let Err(e) = outcome {
             state.stats().errors.fetch_add(1, Ordering::Relaxed);
             let _ = write_frame(&mut writer, &Frame::Error { id, error: e });
         }
         if is_shutdown {
             break;
         }
+    }
+}
+
+/// Metric label for one request kind (`service.request.<cmd>`).
+fn cmd_name(req: &Request) -> &'static str {
+    match req {
+        Request::Ping => "ping",
+        Request::Info => "info",
+        Request::Stats => "stats",
+        Request::Metrics => "metrics",
+        Request::Generate(_) => "generate",
+        Request::Simulate(_) => "simulate",
+        Request::Pnr(_) => "pnr",
+        Request::Dse(_) => "dse",
+        Request::Area(_) => "area",
+        Request::Figure { .. } => "figure",
+        Request::Shutdown => "shutdown",
     }
 }
 
@@ -275,6 +346,7 @@ fn handle_request(
     state: &Arc<SessionState>,
     w: &mut TcpStream,
     shutdown: &Arc<AtomicBool>,
+    heartbeat: Duration,
 ) -> Result<(), String> {
     match req {
         Request::Ping => respond(
@@ -287,6 +359,7 @@ fn handle_request(
         ),
         Request::Info => respond(w, id, info_json(state)),
         Request::Stats => respond(w, id, state.stats_json()),
+        Request::Metrics => respond(w, id, obs::export::metrics_json()),
         Request::Shutdown => {
             shutdown.store(true, Ordering::SeqCst);
             let flushed = state.flush().is_ok();
@@ -301,10 +374,10 @@ fn handle_request(
         }
         Request::Generate(g) => generate_request(id, &g, state, w),
         Request::Simulate(s) => simulate_request(id, &s, w),
-        Request::Dse(p) => dse_request(id, &p, state, w),
+        Request::Dse(p) => dse_request(id, &p, state, w, heartbeat),
         Request::Area(p) => {
             let p = DseParams { area: true, apps: vec![], ..p };
-            dse_request(id, &p, state, w)
+            dse_request(id, &p, state, w, heartbeat)
         }
         Request::Pnr(p) => {
             if p.apps.len() != 1 {
@@ -313,7 +386,7 @@ fn handle_request(
                     p.apps.len()
                 ));
             }
-            dse_request(id, &p, state, w)
+            dse_request(id, &p, state, w, heartbeat)
         }
         Request::Figure { which, sa_moves } => {
             let _ = write_frame(
@@ -324,7 +397,7 @@ fn handle_request(
                 },
             );
             let (table, stats) =
-                with_heartbeat(w, id, || state.run_figure(&which, sa_moves))?;
+                with_heartbeat(w, id, heartbeat, None, || state.run_figure(&which, sa_moves))?;
             respond(
                 w,
                 id,
@@ -340,12 +413,21 @@ fn handle_request(
 }
 
 /// Run `f` while a sibling thread emits a heartbeat progress frame
-/// every [`HEARTBEAT_EVERY`], so the client's read timeout only ever
-/// catches a dead server — never a legitimately long computation. The
-/// heartbeat thread is the sole writer while `f` runs and is stopped
-/// (condvar, so zero added latency on fast requests) and joined before
-/// the caller writes its next frame.
-fn with_heartbeat<T: Send>(w: &TcpStream, id: u64, f: impl FnOnce() -> T + Send) -> T {
+/// every `every`, so the client's read timeout only ever catches a dead
+/// server — never a legitimately long computation. With a
+/// [`SweepProgress`], each heartbeat carries the live sweep state
+/// (jobs done/total, warm/cold split, per-worker utilization — what
+/// `canal client --watch` renders) instead of a bare "still working".
+/// The heartbeat thread is the sole writer while `f` runs and is
+/// stopped (condvar, so zero added latency on fast requests) and joined
+/// before the caller writes its next frame.
+fn with_heartbeat<T: Send>(
+    w: &TcpStream,
+    id: u64,
+    every: Duration,
+    progress: Option<&SweepProgress>,
+    f: impl FnOnce() -> T + Send,
+) -> T {
     let hb_stream = w.try_clone();
     let stop = Mutex::new(false);
     let cv = Condvar::new();
@@ -357,17 +439,21 @@ fn with_heartbeat<T: Send>(w: &TcpStream, id: u64, f: impl FnOnce() -> T + Send)
                     stop.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
                 loop {
                     let (guard, timeout) = cv
-                        .wait_timeout(stopped, HEARTBEAT_EVERY)
+                        .wait_timeout(stopped, every)
                         .unwrap_or_else(std::sync::PoisonError::into_inner);
                     stopped = guard;
                     if *stopped {
                         break;
                     }
                     if timeout.timed_out() {
-                        let _ = write_frame(
-                            &mut hb,
-                            &Frame::Progress { id, message: "still working".into() },
-                        );
+                        if obs::metrics_on() {
+                            counter("service.heartbeats").inc();
+                        }
+                        let message = match progress {
+                            Some(p) => p.snapshot().message(),
+                            None => "still working".into(),
+                        };
+                        let _ = write_frame(&mut hb, &Frame::Progress { id, message });
                     }
                 }
             });
@@ -395,6 +481,7 @@ fn dse_request(
     p: &DseParams,
     state: &Arc<SessionState>,
     w: &mut TcpStream,
+    heartbeat: Duration,
 ) -> Result<(), String> {
     let spec = p.to_spec();
     if spec.apps.is_empty() && !spec.area {
@@ -404,7 +491,10 @@ fn dse_request(
         w,
         &Frame::Progress { id, message: format!("sweep `{}`: resolving jobs", spec.name) },
     );
-    let out = with_heartbeat(w, id, || state.run_dse(&spec))?;
+    let progress = SweepProgress::new();
+    let out = with_heartbeat(w, id, heartbeat, Some(&progress), || {
+        state.run_dse_with_progress(&spec, Some(&progress))
+    })?;
     let s = &out.stats;
     let _ = write_frame(
         w,
@@ -541,12 +631,50 @@ fn write_frame(w: &mut TcpStream, frame: &Frame) -> std::io::Result<()> {
 /// Newline framing over a read-timeout socket: partial reads accumulate
 /// in `pending` (a `BufReader` would lose its buffer on `WouldBlock`
 /// mid-line), and every timeout re-checks the drain flag.
+///
+/// The poll timeout starts at the configured base and doubles on each
+/// consecutive timeout up to [`READ_POLL_BACKOFF_MAX`]× the base,
+/// resetting the moment bytes arrive — an idle connection burns a
+/// fraction of the wakeups (observable via
+/// `service.conn.poll_wakeups`) while an active one keeps the snappy
+/// base poll.
 struct LineReader {
     stream: TcpStream,
     pending: Vec<u8>,
+    base_poll: Duration,
+    /// Current backoff multiplier (power of two, ≤ READ_POLL_BACKOFF_MAX).
+    poll_mult: u32,
+    /// Metric handles, resolved once per connection (`None` when
+    /// metrics are disabled — the hot loop then touches no registry).
+    poll_wakeups: Option<Arc<Counter>>,
+    bytes_read: Option<Arc<Counter>>,
 }
 
 impl LineReader {
+    fn new(stream: TcpStream, base_poll: Duration) -> LineReader {
+        let _ = stream.set_read_timeout(Some(base_poll));
+        let (poll_wakeups, bytes_read) = if obs::metrics_on() {
+            (Some(counter("service.conn.poll_wakeups")), Some(counter("service.conn.bytes_read")))
+        } else {
+            (None, None)
+        };
+        LineReader {
+            stream,
+            pending: Vec::new(),
+            base_poll,
+            poll_mult: 1,
+            poll_wakeups,
+            bytes_read,
+        }
+    }
+
+    fn set_poll_mult(&mut self, mult: u32) {
+        if mult != self.poll_mult {
+            self.poll_mult = mult;
+            let _ = self.stream.set_read_timeout(Some(self.base_poll * mult));
+        }
+    }
+
     /// `Ok(None)` = clean end (EOF, or drain while idle).
     fn read_line(&mut self, shutdown: &AtomicBool) -> std::io::Result<Option<String>> {
         loop {
@@ -574,16 +702,27 @@ impl LineReader {
             let mut buf = [0u8; 4096];
             match self.stream.read(&mut buf) {
                 Ok(0) => return Ok(None),
-                Ok(n) => self.pending.extend_from_slice(&buf[..n]),
+                Ok(n) => {
+                    if let Some(c) = &self.bytes_read {
+                        c.add(n as u64);
+                    }
+                    self.set_poll_mult(1);
+                    self.pending.extend_from_slice(&buf[..n]);
+                }
                 Err(e)
                     if matches!(
                         e.kind(),
                         std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
                     ) =>
                 {
+                    if let Some(c) = &self.poll_wakeups {
+                        c.inc();
+                    }
                     if shutdown.load(Ordering::SeqCst) {
                         return Ok(None);
                     }
+                    let next = (self.poll_mult * 2).min(READ_POLL_BACKOFF_MAX);
+                    self.set_poll_mult(next);
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => return Err(e),

@@ -44,9 +44,12 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::coordinator;
 use crate::dse::{
-    area_points, execute_jobs, DseEngine, EngineOptions, EngineStats, InterconnectSource,
-    JobKey, PointResult, ResultCache, SweepOutcome, SweepSpec,
+    area_points, execute_jobs_obs, publish_engine_stats, DseEngine, EngineOptions, EngineStats,
+    InterconnectSource, JobKey, PointResult, ResultCache, SweepOutcome, SweepProgress,
+    SweepSpec,
 };
+use crate::obs;
+use crate::obs::span::names as spans;
 use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
 use crate::ir::Interconnect;
 use crate::pnr::GlobalPlacer;
@@ -386,6 +389,18 @@ impl SessionState {
     /// order, bit-identical points — with `stats.coalesced` counting
     /// the joins.
     pub fn run_dse(&self, spec: &SweepSpec) -> Result<SweepOutcome, String> {
+        self.run_dse_with_progress(spec, None)
+    }
+
+    /// [`Self::run_dse`], optionally ticking a live [`SweepProgress`]
+    /// the server's heartbeat thread renders into progress frames.
+    /// `progress` is written, never read — passing `None` computes the
+    /// same bits.
+    pub fn run_dse_with_progress(
+        &self,
+        spec: &SweepSpec,
+        progress: Option<&SweepProgress>,
+    ) -> Result<SweepOutcome, String> {
         self.stats.dse_requests.fetch_add(1, Ordering::Relaxed);
         let jobs = spec.jobs(self.placer.name())?;
         let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
@@ -401,21 +416,27 @@ impl SessionState {
         let mut claimed_cells: Vec<Arc<JobCell>> = Vec::new();
         {
             let mut shared = lock_ignore_poison(&self.shared);
-            for job in &jobs {
+            for (idx, job) in jobs.iter().enumerate() {
                 if let Some(r) = shared.cache.get(&job.key) {
                     stats.cache_hits += 1;
+                    obs::event(spans::DSE_HIT, idx as u64, 0);
                     sources.push(Source::Hit(r.clone()));
                 } else if let Some(cell) = shared.inflight.get(&job.key) {
                     stats.coalesced += 1;
+                    obs::event(spans::DSE_JOIN, idx as u64, 0);
                     sources.push(Source::Join(Arc::clone(cell)));
                 } else {
                     let cell = Arc::new(JobCell::new());
                     shared.inflight.insert(job.key.clone(), Arc::clone(&cell));
+                    obs::event(spans::DSE_CLAIM, idx as u64, 0);
                     sources.push(Source::Mine(claimed.len()));
                     claimed.push(job);
                     claimed_cells.push(cell);
                 }
             }
+        }
+        if let Some(p) = progress {
+            p.begin(jobs.len() as u64, stats.cache_hits, stats.coalesced);
         }
 
         let guard = ClaimGuard {
@@ -428,7 +449,14 @@ impl SessionState {
             armed: true,
         };
 
-        let cold = execute_jobs(&claimed, self.opts.workers, self.placer.as_ref(), &self.ics);
+        let cold = execute_jobs_obs(
+            &claimed,
+            self.opts.workers,
+            self.placer.as_ref(),
+            &self.ics,
+            None,
+            progress,
+        );
         stats.absorb(&cold.stats);
 
         {
@@ -465,6 +493,9 @@ impl SessionState {
         }
 
         self.stats.absorb_engine(&stats);
+        if obs::metrics_on() {
+            publish_engine_stats(&stats);
+        }
         Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
     }
 

@@ -375,6 +375,38 @@ fn warm_start_neighbor_sweep_reuses_trees_and_stays_within_5_percent() {
 }
 
 #[test]
+fn trace_on_is_bit_identical_to_trace_off() {
+    // The observability zero-feedback contract: opening the gate fully
+    // (spans + metrics recording on every pack/place/route/sta/sim
+    // stage and engine event) changes no result bit. Recording is
+    // write-only — nothing in the flow ever reads a metric or span —
+    // so this holds by construction; the test pins it against
+    // regression. The gate is process-global: concurrent tests in this
+    // binary may record spans during the `full()` window, which is
+    // harmless precisely because of the contract under test.
+    use canal::obs::ObsOptions;
+    let spec = fabric_spec();
+    ObsOptions::disabled().apply();
+    let off = run_with_workers(&spec, 3);
+    ObsOptions::full().apply();
+    let on = run_with_workers(&spec, 3);
+    ObsOptions::disabled().apply();
+    assert_eq!(on.points.len(), off.points.len());
+    for ((ja, ra), (jb, rb)) in off.points.iter().zip(&on.points) {
+        assert_eq!(ja.key, jb.key);
+        assert_eq!(ra, rb, "traced run diverged at {:?}", ja.key);
+        assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+        assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+        assert_eq!(
+            (ra.sim_cycles, ra.sim_tokens, ra.stall_cycles),
+            (rb.sim_cycles, rb.sim_tokens, rb.stall_cycles)
+        );
+    }
+    assert_eq!(on.stats.pnr_runs, off.stats.pnr_runs);
+    assert_eq!(on.stats.batched_solves, off.stats.batched_solves);
+}
+
+#[test]
 fn figure_suite_warm_rerun_does_zero_pnr() {
     // The acceptance check for the engine port: render fig07-15
     // through one shared engine, then render them all again — the second

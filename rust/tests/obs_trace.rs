@@ -1,0 +1,125 @@
+//! End-to-end validity of the observability layer over a real sweep:
+//! a fully-gated DSE run must leave behind (a) a Chrome trace file that
+//! parses back and covers every flow stage, and (b) a metrics snapshot
+//! whose NDJSON lines parse and whose stage counters are consistent
+//! with the engine's own stats.
+//!
+//! All assertions are lower-bound / filter style — the span rings and
+//! the metrics registry are process-global, so a concurrent test (or a
+//! second sweep in this file) may add events; nothing here assumes it
+//! was the only writer.
+
+use canal::dse::{DseEngine, EngineOptions, SweepSpec};
+use canal::dsl::InterconnectConfig;
+use canal::obs::span::names;
+use canal::obs::{self, ObsOptions};
+use canal::pnr::{FlowParams, NativePlacer, SaParams};
+use canal::util::json::Json;
+
+fn tiny_spec() -> SweepSpec {
+    SweepSpec {
+        name: "obs-trace".into(),
+        base: InterconnectConfig { width: 4, height: 4, mem_column_period: 3, ..Default::default() },
+        tracks: vec![2, 3],
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1],
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn traced_sweep_exports_a_valid_chrome_trace_and_metrics_snapshot() {
+    ObsOptions::full().apply();
+    let spec = tiny_spec();
+    let mut engine =
+        DseEngine::new(EngineOptions { workers: 2, cache_path: None, warm_start: false })
+            .expect("engine");
+    let cold = engine.run(&spec, &NativePlacer::default()).expect("cold sweep");
+    // Same engine, same spec: the re-run is all cache hits, so the trace
+    // additionally covers the hit path.
+    let warm = engine.run(&spec, &NativePlacer::default()).expect("warm sweep");
+    ObsOptions::disabled().apply();
+    assert_eq!(cold.stats.pnr_runs, cold.points.len() as u64);
+    assert_eq!(warm.stats.cache_hits, warm.points.len() as u64);
+
+    // --- span coverage -----------------------------------------------
+    let events = obs::span::collect();
+    for name in [
+        names::PACK,
+        names::GLOBAL_PLACE,
+        names::LEGALIZE,
+        names::SA,
+        names::ROUTE,
+        names::STA,
+        names::SIM,
+        names::JOB,
+        names::PLACE_BATCH,
+        names::CACHE_MISS,
+        names::CACHE_HIT,
+    ] {
+        assert!(
+            events.iter().any(|e| e.name == name),
+            "traced sweep recorded no `{name}` span/event"
+        );
+    }
+    let routes = events.iter().filter(|e| e.name == names::ROUTE).count() as u64;
+    assert!(routes >= cold.stats.pnr_runs, "one route span per cold PnR, minimum");
+    // Worker threads label their tracks; the merged stream is
+    // (start_ns, worker)-ordered by construction.
+    assert!(obs::span::track_labels()
+        .iter()
+        .any(|(_, label)| label.starts_with("dse-worker-")));
+    assert!(events.windows(2).all(|w| w[0].start_ns <= w[1].start_ns));
+
+    // --- the trace file ----------------------------------------------
+    let path = std::env::temp_dir()
+        .join(format!("canal_obs_trace_{}.json", std::process::id()));
+    obs::export::write_chrome_trace(&path).expect("trace written");
+    let text = std::fs::read_to_string(&path).expect("trace readable");
+    std::fs::remove_file(&path).expect("trace removed");
+    let doc = Json::parse(&text).expect("trace file is valid JSON");
+    let evs = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .expect("Chrome object format: top-level traceEvents array");
+    assert!(evs.len() >= events.len(), "file covers every collected event");
+    let mut last_ts = f64::NEG_INFINITY;
+    for ev in evs {
+        let ph = ev.get("ph").and_then(|v| v.as_str()).expect("every record has ph");
+        if ph == "M" {
+            continue; // thread_name metadata
+        }
+        assert!(matches!(ph, "X" | "i"), "only complete spans and instants: {ph}");
+        assert!(ev.get("name").and_then(|v| v.as_str()).is_some());
+        assert!(ev.get("tid").and_then(|v| v.as_u64()).is_some());
+        let ts = ev.get("ts").and_then(|v| v.as_f64()).expect("ts in microseconds");
+        assert!(ts >= last_ts, "events stream in timestamp order");
+        last_ts = ts;
+        if ph == "X" {
+            assert!(ev.get("dur").and_then(|v| v.as_f64()).is_some());
+        }
+    }
+
+    // --- the metrics snapshot ----------------------------------------
+    let nd = obs::export::metrics_ndjson();
+    let mut route_count = 0;
+    for line in nd.lines() {
+        let j = Json::parse(line).expect("every NDJSON line parses");
+        assert!(j.get("metric").is_some() && j.get("type").is_some());
+        if j.get("metric").and_then(Json::as_str) == Some("pnr.route.count") {
+            route_count = j.get("value").and_then(|v| v.as_u64()).unwrap_or(0);
+        }
+    }
+    assert!(
+        route_count >= cold.stats.pnr_runs,
+        "pnr.route.count ({route_count}) must cover the sweep's {} PnR runs",
+        cold.stats.pnr_runs
+    );
+    assert!(nd.contains("\"pnr.route.ns\""), "stage duration histogram registered");
+    assert!(nd.contains("\"engine.jobs\""), "engine stats mirrored into the registry");
+    assert!(nd.contains("\"obs.span.recorded\""), "ring accounting present");
+}

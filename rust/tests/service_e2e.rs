@@ -268,6 +268,108 @@ fn full_request_surface_roundtrips_on_one_connection() {
 }
 
 #[test]
+fn metrics_request_reflects_engine_and_service_activity() {
+    // The daemon enables the metrics gate at bind, so a `metrics`
+    // request after a sweep must show both layers: `engine.*` counters
+    // mirrored from the sweep's stats and `service.request.*` counters
+    // from the request accounting. The registry is process-global and
+    // other tests in this binary run concurrently — every assertion is
+    // a lower bound, never an exact count.
+    let (addr, _state, handle) = spawn_server(None);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.call(&Request::Dse(tiny_params())).unwrap();
+
+    // Same connection ⇒ the dse request's counters land before the
+    // metrics request is read.
+    let data = c.call(&Request::Metrics).unwrap();
+    let metrics = data.get("metrics").and_then(Json::as_arr).expect("metrics array");
+    let counter = |name: &str| -> Option<u64> {
+        metrics
+            .iter()
+            .find(|m| m.get("metric").and_then(Json::as_str) == Some(name))
+            .and_then(|m| m.get("value").and_then(Json::as_u64))
+    };
+    assert!(counter("engine.jobs") >= Some(2), "sweep stats mirrored: {:?}", counter("engine.jobs"));
+    assert!(counter("engine.sweeps") >= Some(1));
+    assert!(counter("service.request.dse") >= Some(1), "per-command request counter");
+    assert!(
+        metrics
+            .iter()
+            .any(|m| m.get("metric").and_then(Json::as_str) == Some("service.request.latency_us")
+                && m.get("count").and_then(Json::as_u64) >= Some(1)),
+        "request latency histogram populated"
+    );
+    assert!(counter("service.conn.bytes_read") >= Some(1), "connection read accounting");
+
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn heartbeats_carry_live_sweep_progress_mid_sweep() {
+    // Shrink the heartbeat far below the sweep duration: the progress
+    // frames streamed during the cold sweep must include live
+    // heartbeats in the `progress: done/total jobs (...)` format fed by
+    // the executor's SweepProgress — not just the bare begin/end frames.
+    let state = Arc::new(
+        SessionState::with_placer(
+            StateOptions { workers: 2, cache_path: None, ic_capacity: 8 },
+            Box::new(BatchedNativePlacer::default()),
+        )
+        .unwrap(),
+    );
+    let server = Server::bind_with_state(
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            conn_threads: 2,
+            heartbeat: std::time::Duration::from_millis(1),
+            ..Default::default()
+        },
+        Arc::clone(&state),
+    )
+    .unwrap();
+    let addr = server.local_addr().unwrap();
+    let handle = std::thread::spawn(move || server.run());
+
+    // Enough work to straddle many 1ms heartbeats.
+    let params = DseParams { seeds: 2, sa_moves: 200, ..tiny_params() };
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let mut frames = Vec::new();
+    let data = c
+        .call_with(&Request::Dse(params.clone()), |m| frames.push(m.to_string()))
+        .unwrap();
+    assert_points_match(&data, &reference_for(&params));
+
+    let live: Vec<&String> =
+        frames.iter().filter(|m| m.starts_with("progress: ")).collect();
+    assert!(!live.is_empty(), "no live heartbeat among {frames:?}");
+    for m in &live {
+        // "progress: D/T jobs (H cached, C coalesced, d/t cold...)[, util ...]"
+        assert!(m.contains(" jobs ("), "malformed heartbeat: {m}");
+        assert!(m.contains(" cold"), "cold split missing: {m}");
+    }
+    // Utilization appears once workers have registered — a heartbeat
+    // can legitimately fire earlier, but not ALL of them may.
+    assert!(
+        live.iter().any(|m| m.contains("util w")),
+        "no heartbeat carried per-worker utilization: {live:?}"
+    );
+    // The final heartbeat seen can never overshoot the job total.
+    let total = 4; // 2 tracks × 1 app × 2 seeds
+    for m in &live {
+        let done: u64 = m["progress: ".len()..]
+            .split('/')
+            .next()
+            .and_then(|s| s.parse().ok())
+            .expect("parsable done count");
+        assert!(done <= total, "{m}");
+    }
+
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
 fn shutdown_drains_and_flushes_the_shared_cache_file() {
     let path = std::env::temp_dir()
         .join(format!("canal_service_e2e_{}.json", std::process::id()));
