@@ -40,6 +40,104 @@ fn main() {
     });
     println!("{s}   [{:.0} net-routes/s]", n_nets * s.throughput_per_sec());
 
+    // --- L3: router search cores + Steiner sharing -------------------------
+    {
+        use canal::pnr::SearchCore;
+        let baseline =
+            route(&ic, &packed.app, &placement, 16, &RouterParams::default()).unwrap();
+        for core in SearchCore::ALL {
+            let params = RouterParams { search_core: core, ..Default::default() };
+            let r = route(&ic, &packed.app, &placement, 16, &params).unwrap();
+            if !core.changes_results() {
+                assert_eq!(
+                    r.route_expansions, baseline.route_expansions,
+                    "core {} must pop exactly like the binary heap",
+                    core.name()
+                );
+                for (a, b) in r.trees.iter().zip(&baseline.trees) {
+                    assert_eq!(
+                        a.sink_paths,
+                        b.sink_paths,
+                        "core {} must be bit-identical to the binary heap",
+                        core.name()
+                    );
+                }
+            }
+            let s = bench(&format!("route harris core={} (8x8x5)", core.name()), 200, budget, || {
+                black_box(route(&ic, &packed.app, &placement, 16, &params).unwrap());
+            });
+            println!(
+                "{s}   [route_expansions={} wirelength={}]",
+                r.route_expansions,
+                r.wirelength()
+            );
+        }
+
+        // Steiner sharing vs independent per-sink routing, on every
+        // multi-fanout app in the suite: shared subtrees must cost less
+        // wire AND less search work on each of them, strictly less in
+        // aggregate. An app whose independent-sink routing cannot even
+        // converge is the strongest win and scores as 2x the shared cost.
+        let indep = RouterParams { steiner: false, ..Default::default() };
+        let (mut shared_wl, mut indep_wl) = (0usize, 0usize);
+        let (mut shared_ex, mut indep_ex) = (0u64, 0u64);
+        for app in apps::suite() {
+            let p = pack(&app);
+            if !p.app.nets().iter().any(|n| n.sinks.len() > 1) {
+                continue;
+            }
+            let problem = build_global_problem(&p.app, &ic);
+            let (xs0, ys0) = initial_positions(&p.app, &ic, 1);
+            let (xs, ys) = NativePlacer::default().optimize(&problem, &xs0, &ys0);
+            let pl = match legalize(&p.app, &ic, &xs, &ys) {
+                Ok(pl) => pl,
+                Err(_) => continue,
+            };
+            let shared = route(&ic, &p.app, &pl, 16, &RouterParams::default()).unwrap();
+            shared_wl += shared.wirelength();
+            shared_ex += shared.route_expansions;
+            match route(&ic, &p.app, &pl, 16, &indep) {
+                Ok(ind) => {
+                    println!(
+                        "steiner {}: wirelength {} vs {} independent, \
+                         route_expansions {} vs {}",
+                        app.name,
+                        shared.wirelength(),
+                        ind.wirelength(),
+                        shared.route_expansions,
+                        ind.route_expansions
+                    );
+                    assert!(
+                        shared.wirelength() <= ind.wirelength(),
+                        "{}: Steiner sharing must not cost more wire",
+                        app.name
+                    );
+                    assert!(
+                        shared.route_expansions < ind.route_expansions,
+                        "{}: Steiner sharing must reduce search work",
+                        app.name
+                    );
+                    indep_wl += ind.wirelength();
+                    indep_ex += ind.route_expansions;
+                }
+                Err(e) => {
+                    println!("steiner {}: independent-sink routing FAILED ({e})", app.name);
+                    indep_wl += 2 * shared.wirelength();
+                    indep_ex += 2 * shared.route_expansions;
+                }
+            }
+        }
+        assert!(
+            shared_wl < indep_wl && shared_ex < indep_ex,
+            "Steiner sharing must win in aggregate: \
+             wirelength {shared_wl} vs {indep_wl}, expansions {shared_ex} vs {indep_ex}"
+        );
+        println!(
+            "steiner aggregate: wirelength {shared_wl} vs {indep_wl} independent, \
+             route_expansions {shared_ex} vs {indep_ex}"
+        );
+    }
+
     // --- L3: STA ----------------------------------------------------------
     let routed = route(&ic, &packed.app, &placement, 16, &RouterParams::default()).unwrap();
     let s = bench("STA harris (8x8x5)", 2000, budget, || {

@@ -177,6 +177,11 @@ pub struct EngineStats {
     /// conflicting donor trees, plus every net of a point that fell
     /// back to scratch routing.
     pub nets_rerouted: u64,
+    /// Search-frontier pops summed over every routed flow (cold and
+    /// warm-started). The router-variant cost metric: bucket/radix/A*/
+    /// bidir cores and Steiner sharing all move this number without
+    /// touching `pnr_runs`.
+    pub route_expansions: u64,
 }
 
 impl EngineStats {
@@ -192,6 +197,7 @@ impl EngineStats {
         self.warm_starts += other.warm_starts;
         self.nets_reused += other.nets_reused;
         self.nets_rerouted += other.nets_rerouted;
+        self.route_expansions += other.route_expansions;
     }
 }
 
@@ -532,6 +538,7 @@ pub fn execute_jobs_obs(
     let warm_starts = AtomicU64::new(0);
     let nets_reused = AtomicU64::new(0);
     let nets_rerouted = AtomicU64::new(0);
+    let route_expansions = AtomicU64::new(0);
 
     if !jobs.is_empty() {
         std::thread::scope(|scope| {
@@ -552,6 +559,7 @@ pub fn execute_jobs_obs(
                 let warm_starts = &warm_starts;
                 let nets_reused = &nets_reused;
                 let nets_rerouted = &nets_rerouted;
+                let route_expansions = &route_expansions;
                 scope.spawn(move || {
                     if obs::trace_on() {
                         obs::span::label_thread(&format!("dse-worker-{me}"));
@@ -712,6 +720,10 @@ pub fn execute_jobs_obs(
                             };
                             let result = match flow {
                                 Ok(flow) => {
+                                    route_expansions.fetch_add(
+                                        flow.routing.route_expansions,
+                                        Ordering::Relaxed,
+                                    );
                                     let mut r = PointResult::from_flow(&flow);
                                     sims.fetch_add(1, Ordering::Relaxed);
                                     {
@@ -751,6 +763,7 @@ pub fn execute_jobs_obs(
         warm_starts: warm_starts.into_inner(),
         nets_reused: nets_reused.into_inner(),
         nets_rerouted: nets_rerouted.into_inner(),
+        route_expansions: route_expansions.into_inner(),
         ..Default::default()
     };
     let results = computed

@@ -95,6 +95,7 @@ pub fn stats_json(s: &EngineStats) -> Json {
         ("warm_starts".into(), Json::num_u64(s.warm_starts)),
         ("nets_reused".into(), Json::num_u64(s.nets_reused)),
         ("nets_rerouted".into(), Json::num_u64(s.nets_rerouted)),
+        ("route_expansions".into(), Json::num_u64(s.route_expansions)),
     ])
 }
 
@@ -118,6 +119,7 @@ pub fn publish_engine_stats(s: &EngineStats) {
     counter("engine.warm_starts").add(s.warm_starts);
     counter("engine.nets_reused").add(s.nets_reused);
     counter("engine.nets_rerouted").add(s.nets_rerouted);
+    counter("engine.route_expansions").add(s.route_expansions);
     counter("engine.sweeps").inc();
 }
 

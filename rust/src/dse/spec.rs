@@ -53,10 +53,25 @@ impl ConfigDescriptor {
             FabricKind::Static => String::new(),
             other => format!(" fabric={}", other.label()),
         };
+        // Router-variant tokens follow the same warm-cache rule as the
+        // fabric token: only result-changing settings join the key.
+        // Bucket/radix frontiers are pure execution strategies (bit-
+        // identical output), so they — like every default — emit
+        // nothing, keeping pre-variant descriptor strings intact.
+        let mut rvar = String::new();
+        if r.search_core.changes_results() {
+            rvar.push_str(&format!(" rcore={}", r.search_core.name()));
+        }
+        if r.slack_order {
+            rvar.push_str(" rorder=slack");
+        }
+        if !r.steiner {
+            rvar.push_str(" rsinks=independent");
+        }
         ConfigDescriptor(format!(
             "{} delays={}/{}/{}/{}/{} | placer={placer} seeds={seeds} \
              sa(moves={} gamma={} cooling={}) \
-             alphas={alphas} router(iters={} pres={}x{} hist={} dw={} unused={}) items={} bw={}{fabric}",
+             alphas={alphas} router(iters={} pres={}x{} hist={} dw={} unused={}) items={} bw={}{fabric}{rvar}",
             cfg.descriptor(),
             d.sb_mux_ps,
             d.cb_mux_ps,
@@ -749,6 +764,54 @@ mod tests {
                 assert_ne!(x, y);
             }
         }
+    }
+
+    #[test]
+    fn descriptor_keys_only_result_changing_router_variants() {
+        use crate::pnr::SearchCore;
+        let cfg = InterconnectConfig::default();
+        let of = |f: &FlowParams| {
+            ConfigDescriptor::of(&cfg, f, "native-gd", SeedMode::Raw, FabricKind::Static)
+        };
+        let base = of(&FlowParams::default());
+        // Defaults carry no variant tokens: pre-PR cache entries stay warm.
+        for tok in ["rcore=", "rorder=", "rsinks="] {
+            assert!(!base.0.contains(tok), "{base}");
+        }
+        // Bucket/radix frontiers are bit-identical execution strategies —
+        // they must alias the default descriptor.
+        for core in [SearchCore::Bucket, SearchCore::Radix] {
+            let mut f = FlowParams::default();
+            f.router.search_core = core;
+            assert_eq!(base, of(&f), "{} must not fork the cache key", core.name());
+        }
+        // A*/bidir can pick different equal-cost paths, slack ordering
+        // reorders negotiation, and independent-sink mode changes trees:
+        // all three fork the key.
+        let mut astar = FlowParams::default();
+        astar.router.search_core = SearchCore::AStar;
+        let a = of(&astar);
+        assert!(a.0.contains(" rcore=astar"), "{a}");
+        let mut bidir = FlowParams::default();
+        bidir.router.search_core = SearchCore::Bidir;
+        assert!(of(&bidir).0.contains(" rcore=bidir"));
+        let mut slack = FlowParams::default();
+        slack.router.slack_order = true;
+        assert!(of(&slack).0.contains(" rorder=slack"));
+        let mut indep = FlowParams::default();
+        indep.router.steiner = false;
+        assert!(of(&indep).0.contains(" rsinks=independent"));
+        let all = [&base, &a, &of(&bidir), &of(&slack), &of(&indep)];
+        for (i, x) in all.iter().enumerate() {
+            for y in all.iter().skip(i + 1) {
+                assert_ne!(x, y);
+            }
+        }
+        // Variant tokens land in `rest`, so axis parsing still works and
+        // variant points never donate artifacts to default points.
+        let t = a.axes().expect("parseable with variant tokens");
+        assert!(t.rest.contains("rcore=astar"));
+        assert_ne!(t.rest, base.axes().unwrap().rest);
     }
 
     #[test]

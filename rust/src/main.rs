@@ -14,6 +14,7 @@
 //!           [--fabric static,rv-full,rv-split]
 //!           [--apps a,b,c] [--seeds N] [--seed S] [--derived-seeds] [--tight SLACK]
 //!           [--width W] [--height H] [--mem-period P] [--sa-moves N] [--area]
+//!           [--search-core binary-heap|bucket|radix|astar|bidir] [--slack-order]
 //!           [--workers N] [--cache FILE] [--no-cache] [--warm-start] [--json FILE]
 //!           [--trace FILE]
 //! canal serve [--addr HOST:PORT] [--workers N] [--conn-threads N]
@@ -53,7 +54,7 @@ use canal::dse::{
 use canal::dsl::spec::{emit_spec, parse_spec};
 use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMode, SbTopology};
 use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
-use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams};
+use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams, SearchCore};
 use canal::service::{
     Client, DseParams, GenParams, Request, ServeOptions, Server, SimParams, StateOptions,
 };
@@ -71,6 +72,7 @@ const BOOL_FLAGS: &[&str] = &[
     "area",
     "derived-seeds",
     "warm-start",
+    "slack-order",
     "watch",
     "help",
 ];
@@ -368,6 +370,16 @@ fn dse_params_from_args(args: &Args) -> Result<DseParams, String> {
         derived_seeds: args.has("derived-seeds"),
         tight: args.get("tight").and_then(|v| v.parse().ok()),
         sa_moves: args.get("sa-moves").and_then(|v| v.parse().ok()).unwrap_or(d.sa_moves),
+        search_core: match args.get("search-core") {
+            None => d.search_core,
+            Some(raw) => SearchCore::parse(raw)
+                .ok_or_else(|| {
+                    format!("--search-core: bad value `{raw}` (binary-heap|bucket|radix|astar|bidir)")
+                })?
+                .name()
+                .into(),
+        },
+        slack_order: args.has("slack-order"),
         area: args.has("area"),
     })
 }
@@ -500,8 +512,8 @@ fn dse_smoke_warm() -> Result<(), String> {
         s.jobs, s.cache_hits, s.pnr_runs
     );
     println!(
-        "warm_starts={} nets_reused={} nets_rerouted={}",
-        s.warm_starts, s.nets_reused, s.nets_rerouted
+        "warm_starts={} nets_reused={} nets_rerouted={} route_expansions={}",
+        s.warm_starts, s.nets_reused, s.nets_rerouted, s.route_expansions
     );
     println!("{}", points_table(&out).render());
     // Artifact round-trip: reload the persisted store and re-emit it.
@@ -528,6 +540,100 @@ fn dse_smoke_warm() -> Result<(), String> {
         return Err("smoke: no routed trees reused across fabric twins".into());
     }
     println!("smoke: PASS (warm starts engaged, trees reused, artifacts persisted)");
+    Ok(())
+}
+
+/// `canal dse --smoke --search-core a,b,c` — the router-variant
+/// end-to-end check. Runs the smoke sweep once per named core (plus the
+/// `binary-heap` baseline) on fresh in-memory engines, then asserts:
+/// every point routes under every core, cores that promise bit-identity
+/// (`bucket`, `radix`) match the baseline point-for-point AND pop-for-pop,
+/// and every core reports a nonzero `route_expansions` counter.
+fn dse_smoke_variants(cores: &str) -> Result<(), String> {
+    let spec_for = |core: SearchCore| SweepSpec {
+        name: format!("smoke-{}", core.name()),
+        base: InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks: vec![2, 3],
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1, 2],
+        flow: canal::pnr::FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            router: canal::pnr::RouterParams { search_core: core, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let placer = NativePlacer::default();
+    let run = |core: SearchCore| -> Result<canal::dse::SweepOutcome, String> {
+        // Fresh uncached engine per core: a shared cache would answer
+        // bit-identical cores from the baseline's entries and the core
+        // under test would never execute.
+        let mut engine = DseEngine::in_memory();
+        let out = engine.run(&spec_for(core), &placer)?;
+        let s = &out.stats;
+        println!(
+            "smoke variant: core={} jobs={} pnr_runs={} route_expansions={}",
+            core.name(),
+            s.jobs,
+            s.pnr_runs,
+            s.route_expansions
+        );
+        if s.route_expansions == 0 {
+            return Err(format!("smoke: core `{}` reported zero route_expansions", core.name()));
+        }
+        for (job, r) in &out.points {
+            if !r.routed {
+                return Err(format!(
+                    "smoke: core `{}` failed to route {:?}",
+                    core.name(),
+                    job.key
+                ));
+            }
+        }
+        Ok(out)
+    };
+    let base = run(SearchCore::BinaryHeap)?;
+    let mut identical: Vec<&'static str> = Vec::new();
+    let mut routed: Vec<&'static str> = vec![SearchCore::BinaryHeap.name()];
+    for raw in cores.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let core = SearchCore::parse(raw)
+            .ok_or_else(|| format!("--search-core: bad value `{raw}`"))?;
+        if core == SearchCore::BinaryHeap {
+            continue; // already the baseline
+        }
+        let out = run(core)?;
+        if !core.changes_results() {
+            if out.stats.route_expansions != base.stats.route_expansions {
+                return Err(format!(
+                    "smoke: core `{}` expansions {} != baseline {}",
+                    core.name(),
+                    out.stats.route_expansions,
+                    base.stats.route_expansions
+                ));
+            }
+            for ((ja, ra), (jb, rb)) in base.points.iter().zip(&out.points) {
+                if ja.key.config != jb.key.config || ra != rb {
+                    return Err(format!(
+                        "smoke: core `{}` diverged from binary-heap on {:?}",
+                        core.name(),
+                        ja.key
+                    ));
+                }
+            }
+            identical.push(core.name());
+        }
+        routed.push(core.name());
+    }
+    println!(
+        "smoke variants: PASS (bit-identity holds for [{}] vs binary-heap; cores routed: {})",
+        identical.join(","),
+        routed.join(",")
+    );
     Ok(())
 }
 
@@ -584,7 +690,13 @@ fn cmd_dse(args: &Args) -> Result<(), String> {
 
 fn cmd_dse_untraced(args: &Args) -> Result<(), String> {
     if args.has("smoke") {
-        return if args.has("warm-start") { dse_smoke_warm() } else { dse_smoke() };
+        if args.has("warm-start") {
+            return dse_smoke_warm();
+        }
+        if let Some(cores) = args.get("search-core") {
+            return dse_smoke_variants(cores);
+        }
+        return dse_smoke();
     }
     let workers = args.get("workers").and_then(|v| v.parse().ok()).unwrap_or(0);
     let cache_path = if args.has("no-cache") {
@@ -803,6 +915,8 @@ commands:
                       --seeds N  --seed S  --derived-seeds
               array:  --width W  --height H  --mem-period P  --tight SLACK
               flow:   --sa-moves N  --area
+              router: --search-core binary-heap|bucket|radix|astar|bidir
+                      --slack-order (STA-driven net order between router iterations)
               engine: --workers N  --cache FILE  --no-cache  --warm-start  --json FILE
               (--warm-start: incremental PnR — warm-start neighboring points from
                cached placements + routed trees, delta-aware sweep ordering)
@@ -812,6 +926,9 @@ commands:
   dse --smoke  CI end-to-end check (tiny 4x4 sweep, 2 workers, warm re-run = 0 PnR)
                with --warm-start: incremental-PnR check (warm_starts > 0,
                nets_reused > 0, artifact store round-trips byte-identically)
+               with --search-core a,b,c: router-variant check (every core routes
+               every point, bucket/radix stay bit-identical to binary-heap,
+               route_expansions counters are live)
                with --trace FILE: the CI trace check (span + metric coverage)
   serve       persistent daemon: concurrent sessions, one shared warm cache,
               coalesced in-flight sweeps (newline-delimited JSON over TCP)

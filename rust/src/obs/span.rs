@@ -69,6 +69,21 @@ pub mod names {
     /// Instant: a daemon `dse` job was claimed for cold execution.
     pub const DSE_CLAIM: &str = "svc.dse.claim";
 
+    // Per-search-core routing spans (one per `RouterParams::search_core`
+    // variant, nested inside [`ROUTE`]); `arg0` = frontier expansions.
+    // Appended after the PR 7 taxonomy so existing interned ids are
+    // unchanged (ids index `WELL_KNOWN`).
+    /// Routing with the default binary-heap frontier.
+    pub const ROUTE_BINARY_HEAP: &str = "pnr.route.binary-heap";
+    /// Routing with the bucketed frontier (PR 6's `bucket_queue`).
+    pub const ROUTE_BUCKET: &str = "pnr.route.bucket";
+    /// Routing with the radix (IEEE-bits bucketed) frontier.
+    pub const ROUTE_RADIX: &str = "pnr.route.radix";
+    /// Routing with the full-strength admissible A* heuristic.
+    pub const ROUTE_ASTAR: &str = "pnr.route.astar";
+    /// Routing with the bidirectional Dijkstra core.
+    pub const ROUTE_BIDIR: &str = "pnr.route.bidir";
+
     /// Every name above, in id order (ids index this table).
     pub const WELL_KNOWN: &[&str] = &[
         PACK,
@@ -88,6 +103,11 @@ pub mod names {
         DSE_HIT,
         DSE_JOIN,
         DSE_CLAIM,
+        ROUTE_BINARY_HEAP,
+        ROUTE_BUCKET,
+        ROUTE_RADIX,
+        ROUTE_ASTAR,
+        ROUTE_BIDIR,
     ];
 }
 

@@ -1,6 +1,11 @@
 //! The end-to-end PnR flow (Fig. 2 right-hand path): pack → global place
 //! → detailed place → route → STA, with the α-sweep the paper describes
 //! ("sweeping α from 1 to 20 and choosing the best result post-routing").
+//!
+//! The router knobs ride along in [`FlowParams::router`]: Steiner-tree
+//! multi-sink routing, the pluggable search core, and slack-driven net
+//! ordering (see [`RouterParams`]) all apply to every route of the α
+//! sweep and to the warm-started replay path alike.
 
 use crate::ir::{Interconnect, NodeId};
 use crate::obs;
@@ -398,6 +403,30 @@ mod tests {
         // error (callers fall back to the scratch flow).
         let bad = WarmSeed { placement: &donor.placement.pos[1..], net_paths: vec![] };
         assert!(run_flow_warm(&ic, &app, &params, &bad, &mut scratch).is_err());
+    }
+
+    #[test]
+    fn flow_runs_under_every_search_core() {
+        // End-to-end coverage for the result-changing cores: the whole
+        // flow (place + route + STA) must succeed and stay self-
+        // consistent whatever frontier drives PathFinder. (Bit-identity
+        // of the execution-strategy cores is golden-tested in route.rs
+        // and tests/router_variants.rs.)
+        use crate::pnr::route::SearchCore;
+        let ic = ic();
+        let app = apps::gaussian();
+        for core in SearchCore::ALL {
+            let params = FlowParams {
+                sa: SaParams { moves_per_node: 8, ..Default::default() },
+                router: RouterParams { search_core: core, ..Default::default() },
+                ..Default::default()
+            };
+            let r = run_flow(&ic, &app, &params)
+                .unwrap_or_else(|e| panic!("{} failed: {e}", core.name()));
+            assert!(r.timing.critical_path_ps > 0.0, "{}", core.name());
+            assert_eq!(r.routing.trees.len(), r.packed.app.nets().len());
+            assert!(r.routing.route_expansions > 0, "{}", core.name());
+        }
     }
 
     #[test]

@@ -26,6 +26,6 @@ pub use place::{
 };
 pub use route::{
     route, route_with_scratch, route_with_seed, RouteReuse, RouterParams, RouterScratch,
-    RouteTree, RoutingFailed, RoutingResult,
+    RouteTree, RoutingFailed, RoutingResult, SearchCore,
 };
 pub use timing::{analyze, TimingReport};

@@ -1,13 +1,26 @@
 //! Iteration-based negotiated-congestion routing (§3.4, stage 4).
 //!
-//! PathFinder-style: each iteration routes every net with A* over the
-//! routing graph; node costs combine base (delay) cost, present
+//! PathFinder-style: each iteration routes every net with a graph search
+//! over the routing graph; node costs combine base (delay) cost, present
 //! congestion, and accumulated history. Timing criticality re-weights
 //! nets between iterations ("we compute the slack on a net and determine
 //! how critical it is given global timing information"). Routing finishes
 //! when a legal (overuse-free) result is produced, or fails after
 //! `max_iterations` — which is how the Disjoint topology's unroutability
 //! manifests in Fig. 9's experiment.
+//!
+//! Multi-fanout nets route as **shared-subtree Steiner trees**: sinks are
+//! visited in geometric-distance order and every search starts from the
+//! whole tree built so far (zero-cost re-entry at any tree node), so a
+//! branch to a new sink pays only for the nodes it adds. The search core
+//! behind that is pluggable ([`RouterParams::search_core`]): the default
+//! binary heap, two execution-strategy frontiers that pop in the exact
+//! same order (bucket and radix queues), a full-strength admissible A*,
+//! and a bidirectional Dijkstra. [`RouterParams::slack_order`] feeds an
+//! STA pass between PathFinder iterations back into the net order so
+//! critical nets route first. Every knob's default reproduces the
+//! pre-variant router bit-for-bit (locked down by
+//! `tests/router_variants.rs`).
 
 use std::collections::HashMap;
 
@@ -15,6 +28,88 @@ use crate::ir::{CompiledGraph, CoreKind, Interconnect, NodeId, RoutingGraph};
 
 use super::app::{AppGraph, AppNodeId, Net};
 use super::place::Placement;
+
+/// The pluggable PathFinder search core (ROADMAP's "smarter PathFinder
+/// search over the CSR graph").
+///
+/// `Bucket` and `Radix` are pure execution strategies: they pop the
+/// frontier in the binary heap's exact total order (golden-tested), so
+/// results are bit-identical and they are deliberately **not** part of
+/// the [`crate::dse::ConfigDescriptor`] cache key. `AStar` and `Bidir`
+/// legitimately change which (equally legal) paths are found, so they
+/// *are* descriptor-visible (`rcore=` token) — see
+/// [`SearchCore::changes_results`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchCore {
+    /// `BinaryHeap<(Reverse(cost), NodeId)>` — the original frontier.
+    #[default]
+    BinaryHeap,
+    /// Fixed-width bucketed frontier (PR 6's `bucket_queue`, graduated).
+    Bucket,
+    /// Radix frontier: buckets indexed by the IEEE-754 bit pattern of
+    /// the f-cost (monotone for non-negative doubles), 32 buckets per
+    /// octave. Same pop order as the heap.
+    Radix,
+    /// A* with the full-strength admissible geometric lower bound
+    /// (manhattan distance × 1.0 — every hop moves at most one tile and
+    /// every node's base cost is ≥ 1.0).
+    AStar,
+    /// Bidirectional Dijkstra: forward from the net's tree, backward
+    /// from the sink over the fan-in CSR, meeting in the middle.
+    Bidir,
+}
+
+impl SearchCore {
+    /// Every core, in flag order.
+    pub const ALL: [SearchCore; 5] = [
+        SearchCore::BinaryHeap,
+        SearchCore::Bucket,
+        SearchCore::Radix,
+        SearchCore::AStar,
+        SearchCore::Bidir,
+    ];
+
+    /// Parse a CLI spelling (`--search-core <name>`).
+    pub fn parse(s: &str) -> Option<SearchCore> {
+        match s.trim() {
+            "binary-heap" | "heap" => Some(SearchCore::BinaryHeap),
+            "bucket" => Some(SearchCore::Bucket),
+            "radix" => Some(SearchCore::Radix),
+            "astar" | "a-star" => Some(SearchCore::AStar),
+            "bidir" | "bidirectional" => Some(SearchCore::Bidir),
+            _ => None,
+        }
+    }
+
+    /// Canonical CLI / report name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SearchCore::BinaryHeap => "binary-heap",
+            SearchCore::Bucket => "bucket",
+            SearchCore::Radix => "radix",
+            SearchCore::AStar => "astar",
+            SearchCore::Bidir => "bidir",
+        }
+    }
+
+    /// The `pnr.route.<core>` span recorded around every routing call.
+    pub fn span_name(self) -> &'static str {
+        match self {
+            SearchCore::BinaryHeap => crate::obs::span::names::ROUTE_BINARY_HEAP,
+            SearchCore::Bucket => crate::obs::span::names::ROUTE_BUCKET,
+            SearchCore::Radix => crate::obs::span::names::ROUTE_RADIX,
+            SearchCore::AStar => crate::obs::span::names::ROUTE_ASTAR,
+            SearchCore::Bidir => crate::obs::span::names::ROUTE_BIDIR,
+        }
+    }
+
+    /// Does this core change routing results (vs. the binary heap)?
+    /// Execution strategies (`Bucket`, `Radix`) cannot; result-changing
+    /// cores get a `rcore=` token in the config descriptor.
+    pub fn changes_results(self) -> bool {
+        matches!(self, SearchCore::AStar | SearchCore::Bidir)
+    }
+}
 
 /// Router tuning knobs.
 #[derive(Clone, Copy, Debug)]
@@ -30,12 +125,20 @@ pub struct RouterParams {
     /// Extra cost discouraging routes through tiles no app vertex uses
     /// (the §3.4 "discourage the use of unused tiles" wire-cost shaping).
     pub unused_tile_penalty: f64,
-    /// Use the bucketed priority queue for the A* frontier instead of the
-    /// binary heap. An execution strategy, not a result knob: pop order
-    /// is bit-identical to the heap (asserted by a golden test), so —
-    /// like batching or scratch reuse — it is deliberately *not* part of
-    /// the [`crate::dse::ConfigDescriptor`] cache key.
-    pub bucket_queue: bool,
+    /// Which frontier/search drives PathFinder (see [`SearchCore`]).
+    /// The default is bit-identical to the pre-variant router.
+    pub search_core: SearchCore,
+    /// Re-order nets between PathFinder iterations by STA slack
+    /// (most-critical first) instead of keeping the static big-fanout-
+    /// first order. Off by default (bit-identical); descriptor-visible
+    /// (`rorder=slack`) because it changes results.
+    pub slack_order: bool,
+    /// Route multi-fanout nets as shared-subtree Steiner trees (every
+    /// sink search may re-enter the already-built tree at zero cost).
+    /// `false` routes each sink independently from the source — the
+    /// measurable baseline the Steiner sharing is benched against.
+    /// Descriptor-visible when disabled (`rsinks=independent`).
+    pub steiner: bool,
 }
 
 impl Default for RouterParams {
@@ -47,7 +150,9 @@ impl Default for RouterParams {
             hist_incr: 0.35,
             delay_weight: 1.0,
             unused_tile_penalty: 0.15,
-            bucket_queue: false,
+            search_core: SearchCore::BinaryHeap,
+            slack_order: false,
+            steiner: true,
         }
     }
 }
@@ -91,6 +196,17 @@ pub struct RoutingResult {
     pub iterations: usize,
     /// Total routing-graph nodes used (wirelength proxy).
     pub nodes_used: usize,
+    /// Frontier pops across every search of every iteration — the
+    /// router's unit of work, comparable across search cores.
+    pub route_expansions: u64,
+}
+
+impl RoutingResult {
+    /// Total distinct directed edges across all trees (the routed
+    /// wirelength the Steiner sharing is benched on).
+    pub fn wirelength(&self) -> usize {
+        self.trees.iter().map(|t| t.edges().len()).sum()
+    }
 }
 
 /// Routing failure: congestion never resolved.
@@ -170,13 +286,28 @@ const BUCKET_WIDTH: f64 = 0.25;
 /// graphs never get near it).
 const BUCKET_OVERFLOW: usize = 4095;
 
-/// Monotone bucketed priority queue over A* f-costs — the ROADMAP's
-/// "bucket/radix queue" router variant. Pop order is *exactly* the
-/// binary heap's: globally minimal f (total order on f64), ties broken
-/// toward the larger [`NodeId`], which is what the max-heap over
-/// `(Reverse(Cost), NodeId)` yields. The lowest non-empty bucket must
-/// contain the global minimum (bucket index is monotone in f), and a
-/// linear min-scan inside it reproduces the heap's tie-break.
+/// Min-scan a bucket and remove the entry the binary heap would pop:
+/// globally minimal f under `total_cmp`, ties broken toward the larger
+/// [`NodeId`] (what the max-heap over `(Reverse(Cost), NodeId)` yields).
+fn min_scan_pop(b: &mut Vec<(f64, NodeId)>) -> (f64, NodeId) {
+    let mut best = 0;
+    for i in 1..b.len() {
+        let (f, n) = b[i];
+        let (bf, bn) = b[best];
+        match f.total_cmp(&bf) {
+            std::cmp::Ordering::Less => best = i,
+            std::cmp::Ordering::Equal if n > bn => best = i,
+            _ => {}
+        }
+    }
+    b.swap_remove(best)
+}
+
+/// Monotone bucketed priority queue over f-costs — the ROADMAP's "bucket
+/// queue" router variant. Pop order is *exactly* the binary heap's: the
+/// lowest non-empty bucket must contain the global minimum (bucket index
+/// is monotone in f), and [`min_scan_pop`] inside it reproduces the
+/// heap's tie-break.
 #[derive(Default)]
 struct BucketQueue {
     buckets: Vec<Vec<(f64, NodeId)>>,
@@ -214,25 +345,71 @@ impl BucketQueue {
         while self.buckets[self.cursor].is_empty() {
             self.cursor += 1;
         }
-        let b = &mut self.buckets[self.cursor];
-        let mut best = 0;
-        for i in 1..b.len() {
-            let (f, n) = b[i];
-            let (bf, bn) = b[best];
-            match f.total_cmp(&bf) {
-                std::cmp::Ordering::Less => best = i,
-                std::cmp::Ordering::Equal if n > bn => best = i,
-                _ => {}
-            }
-        }
         self.len -= 1;
-        Some(b.swap_remove(best))
+        Some(min_scan_pop(&mut self.buckets[self.cursor]))
     }
 }
 
-/// The A* frontier: implemented by the binary heap and the bucketed
-/// queue. Both pop in the same total order, so the search is
-/// bit-identical either way (golden-tested below).
+/// Bucket index of the radix frontier: the top 17 bits of the f-cost's
+/// IEEE-754 pattern (sign + exponent + 5 mantissa bits), rebased so
+/// everything below 0.5 shares bucket 0. For non-negative finite
+/// doubles the bit pattern is monotone in value, so the index is
+/// monotone in f and the lowest non-empty bucket holds the global
+/// minimum — 32 buckets per octave, resolution scaling with magnitude.
+const RADIX_BASE: usize = 0x7FC0; // 0.5f64.to_bits() >> 47
+const RADIX_OVERFLOW: usize = 1023;
+
+fn radix_index(f: f64) -> usize {
+    ((f.max(0.0).to_bits() >> 47) as usize).saturating_sub(RADIX_BASE).min(RADIX_OVERFLOW)
+}
+
+/// Radix priority queue: like [`BucketQueue`] but with exponent-scaled
+/// buckets ([`radix_index`]), so no tuning constant and no giant linear
+/// overflow bucket for large f. Pop order is the heap's exactly (same
+/// [`min_scan_pop`] tie-break), golden-tested.
+#[derive(Default)]
+struct RadixQueue {
+    buckets: Vec<Vec<(f64, NodeId)>>,
+    cursor: usize,
+    len: usize,
+}
+
+impl RadixQueue {
+    fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.cursor = 0;
+        self.len = 0;
+    }
+
+    fn push(&mut self, f: f64, n: NodeId) {
+        let idx = radix_index(f);
+        if idx >= self.buckets.len() {
+            self.buckets.resize_with(idx + 1, Vec::new);
+        }
+        self.buckets[idx].push((f, n));
+        if idx < self.cursor {
+            self.cursor = idx;
+        }
+        self.len += 1;
+    }
+
+    fn pop(&mut self) -> Option<(f64, NodeId)> {
+        if self.len == 0 {
+            return None;
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+        }
+        self.len -= 1;
+        Some(min_scan_pop(&mut self.buckets[self.cursor]))
+    }
+}
+
+/// The search frontier: implemented by the binary heap and both bucketed
+/// queues. All three pop in the same total order, so the search is
+/// bit-identical whichever backs it (golden-tested below).
 trait Frontier {
     fn fclear(&mut self);
     fn fpush(&mut self, f: f64, n: NodeId);
@@ -263,13 +440,26 @@ impl Frontier for BucketQueue {
     }
 }
 
+impl Frontier for RadixQueue {
+    fn fclear(&mut self) {
+        self.clear();
+    }
+    fn fpush(&mut self, f: f64, n: NodeId) {
+        self.push(f, n);
+    }
+    fn fpop(&mut self) -> Option<(f64, NodeId)> {
+        self.pop()
+    }
+}
+
 /// Reusable PathFinder buffers: every per-route allocation — occupancy,
-/// history, base costs, the flat coordinate lookups, the A* arenas and
-/// the frontier heap — lives here so repeat callers stop paying
-/// malloc/free per route. The α sweep inside one flow reuses one, and the
-/// DSE engine gives each worker its own, carried across thousands of
-/// sweep points. Reuse never changes results: [`route_with_scratch`]
-/// resets every array to exactly the state a fresh allocation would have.
+/// history, base costs, the flat coordinate lookups, the search arenas
+/// (forward and backward) and the frontiers — lives here so repeat
+/// callers stop paying malloc/free per route. The α sweep inside one
+/// flow reuses one, and the DSE engine gives each worker its own,
+/// carried across thousands of sweep points. Reuse never changes
+/// results: [`route_with_scratch`] resets every array to exactly the
+/// state a fresh allocation would have.
 #[derive(Default)]
 pub struct RouterScratch {
     /// Present occupancy per node (net count).
@@ -287,22 +477,34 @@ pub struct RouterScratch {
     tile_of: Vec<u32>,
     /// Tiles occupied by app vertices (for the unused-tile penalty).
     used_tiles: Vec<bool>,
-    // --- A* scratch arenas (allocated once, reset via `touched`) -------
+    // --- search scratch arenas (allocated once, reset via `touched`) ---
     /// Tentative cost per node (`f64::INFINITY` = unvisited).
     dist: Vec<f64>,
     /// Predecessor per node (u32::MAX = none / search root).
     prev: Vec<u32>,
+    /// Backward-search tentative cost (`bidir` core only).
+    bdist: Vec<f64>,
+    /// Backward-search successor pointer (toward the sink).
+    bprev: Vec<u32>,
     /// Is this node part of the current net's tree?
     in_tree: Vec<bool>,
-    /// Nodes whose scratch entries need resetting after this search.
+    /// Nodes whose forward scratch entries need resetting after a search.
     touched: Vec<u32>,
+    /// Nodes whose backward scratch entries need resetting.
+    btouched: Vec<u32>,
     /// Per-node "already counted" bitmap for tree-occupancy marking
     /// (dedup without the per-net sort+dedup allocation).
     seen: Vec<bool>,
-    /// Reusable A* frontier (cleared per search, capacity persists).
+    /// Frontier pops this routing call (all searches, all iterations).
+    expansions: u64,
+    /// Reusable forward frontier (cleared per search, capacity persists).
     pq: std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>,
-    /// Alternative bucketed frontier (see [`RouterParams::bucket_queue`]).
+    /// Backward frontier for the `bidir` core.
+    bpq: std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>,
+    /// Alternative bucketed frontier (see [`SearchCore::Bucket`]).
     bq: BucketQueue,
+    /// Alternative radix frontier (see [`SearchCore::Radix`]).
+    rq: RadixQueue,
 }
 
 impl RouterScratch {
@@ -335,13 +537,21 @@ impl RouterScratch {
         self.dist.resize(n, f64::INFINITY);
         self.prev.clear();
         self.prev.resize(n, u32::MAX);
+        self.bdist.clear();
+        self.bdist.resize(n, f64::INFINITY);
+        self.bprev.clear();
+        self.bprev.resize(n, u32::MAX);
         self.in_tree.clear();
         self.in_tree.resize(n, false);
         self.touched.clear();
+        self.btouched.clear();
         self.seen.clear();
         self.seen.resize(n, false);
+        self.expansions = 0;
         self.pq.clear();
+        self.bpq.clear();
         self.bq.clear();
+        self.rq.clear();
     }
 
     /// Count each distinct node of `paths` into `occ` exactly once,
@@ -394,6 +604,18 @@ impl<'a> RouterState<'a> {
         let delay_share = self.s.base[i];
         crit * delay_share + (1.0 - crit) * cong_share
     }
+}
+
+/// Re-sort a net order most-critical-first from per-net STA slack.
+/// Ties fall back to the static big-fanout-first order (then index), so
+/// the sort is total and deterministic.
+fn slack_sort(order: &mut [usize], nets: &[Net], slack: &[f64]) {
+    order.sort_by(|&a, &b| {
+        slack[a]
+            .total_cmp(&slack[b])
+            .then_with(|| nets[b].sinks.len().cmp(&nets[a].sinks.len()))
+            .then_with(|| a.cmp(&b))
+    });
 }
 
 /// Route all nets of a placed application on the `bit_width` layer.
@@ -452,8 +674,10 @@ pub fn route_with_scratch(
         pres_fac: params.pres_fac_init,
         s: scratch,
     };
+    let mut core_span = crate::obs::span::span(params.search_core.span_name());
 
-    // Route-order: big nets first (more sinks, larger bbox).
+    // Route-order: big nets first (more sinks, larger bbox). With
+    // `slack_order` the STA pass below re-sorts this between iterations.
     let mut order: Vec<usize> = (0..nets.len()).collect();
     order.sort_by_key(|&i| std::cmp::Reverse(nets[i].sinks.len()));
 
@@ -468,9 +692,13 @@ pub fn route_with_scratch(
 
         for &ni in &order {
             let (src, sinks) = &terminals[ni];
-            let tree = route_net(&mut st, *src, sinks, crit[ni]).map_err(|detail| {
-                RoutingFailed { iterations: iter, overused_nodes: 0, detail }
-            })?;
+            let tree = match route_net(&mut st, *src, sinks, crit[ni]) {
+                Ok(t) => t,
+                Err(detail) => {
+                    core_span.arg0(st.s.expansions);
+                    return Err(RoutingFailed { iterations: iter, overused_nodes: 0, detail });
+                }
+            };
             // Mark occupancy for this net's nodes (once per net).
             st.s.mark_tree_occupancy(&tree);
             trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
@@ -483,7 +711,13 @@ pub fn route_with_scratch(
         if overused.is_empty() {
             let trees: Vec<RouteTree> = trees.into_iter().map(Option::unwrap).collect();
             let nodes_used = trees.iter().map(|t| t.nodes().len()).sum();
-            return Ok(RoutingResult { trees, iterations: iter + 1, nodes_used });
+            core_span.arg0(st.s.expansions);
+            return Ok(RoutingResult {
+                trees,
+                iterations: iter + 1,
+                nodes_used,
+                route_expansions: st.s.expansions,
+            });
         }
 
         // Negotiate: bump history on overused nodes, raise pressure.
@@ -510,9 +744,18 @@ pub fn route_with_scratch(
         for i in 0..nets.len() {
             crit[i] = (delays[i] / dmax).clamp(0.0, 0.95);
         }
+
+        // Slack-driven ordering: an STA pass over the app DAG with the
+        // just-measured route delays; tightest-slack nets route first
+        // next iteration so critical nets get first pick of resources.
+        if params.slack_order {
+            let slack = super::timing::net_slacks(app, &nets, &delays);
+            slack_sort(&mut order, &nets, &slack);
+        }
     }
 
     let overused = st.s.occ.iter().filter(|&&o| o > 1).count();
+    core_span.arg0(st.s.expansions);
     Err(RoutingFailed {
         iterations: params.max_iterations,
         overused_nodes: overused,
@@ -543,8 +786,9 @@ pub struct RouteReuse {
 /// construction and hold through the final overuse check (their
 /// occupancy is frozen into every PathFinder iteration's baseline).
 /// Trees are considered in the same big-nets-first order PathFinder
-/// routes in, making acceptance (and therefore the result)
-/// deterministic for given seeds.
+/// starts in, making acceptance (and therefore the result)
+/// deterministic for given seeds — seed validation is order-stable even
+/// under `slack_order`, which only reorders the repair iterations.
 pub fn route_with_seed(
     ic: &Interconnect,
     app: &AppGraph,
@@ -621,17 +865,18 @@ pub fn route_with_seed(
         reused += 1;
     }
 
-    let pending: Vec<usize> = order.iter().copied().filter(|&ni| trees[ni].is_none()).collect();
+    let mut pending: Vec<usize> =
+        order.iter().copied().filter(|&ni| trees[ni].is_none()).collect();
     let reuse = RouteReuse { nets_reused: reused, nets_rerouted: pending.len() };
 
-    let finish = |trees: Vec<Option<RouteTree>>, iterations: usize| {
+    let finish = |trees: Vec<Option<RouteTree>>, iterations: usize, expansions: u64| {
         let trees: Vec<RouteTree> = trees.into_iter().map(Option::unwrap).collect();
         let nodes_used = trees.iter().map(|t| t.nodes().len()).sum();
-        RoutingResult { trees, iterations, nodes_used }
+        RoutingResult { trees, iterations, nodes_used, route_expansions: expansions }
     };
     if pending.is_empty() {
         // Everything replayed: no PathFinder iterations at all.
-        return Ok((finish(trees, 0), reuse));
+        return Ok((finish(trees, 0, 0), reuse));
     }
 
     // Accepted trees are frozen: their occupancy is the rip-up baseline
@@ -645,6 +890,7 @@ pub fn route_with_seed(
         pres_fac: params.pres_fac_init,
         s: scratch,
     };
+    let mut core_span = crate::obs::span::span(params.search_core.span_name());
     let mut crit = vec![0.0f64; nets.len()];
 
     for iter in 0..params.max_iterations {
@@ -652,16 +898,22 @@ pub fn route_with_seed(
 
         for &ni in &pending {
             let (src, sinks) = &terminals[ni];
-            let tree = route_net(&mut st, *src, sinks, crit[ni]).map_err(|detail| {
-                RoutingFailed { iterations: iter, overused_nodes: 0, detail }
-            })?;
+            let tree = match route_net(&mut st, *src, sinks, crit[ni]) {
+                Ok(t) => t,
+                Err(detail) => {
+                    core_span.arg0(st.s.expansions);
+                    return Err(RoutingFailed { iterations: iter, overused_nodes: 0, detail });
+                }
+            };
             st.s.mark_tree_occupancy(&tree);
             trees[ni] = Some(RouteTree { net: nets[ni].clone(), sink_paths: tree });
         }
 
         let overused: Vec<usize> = (0..g.len()).filter(|&i| st.s.occ[i] > 1).collect();
         if overused.is_empty() {
-            return Ok((finish(trees, iter + 1), reuse));
+            let expansions = st.s.expansions;
+            core_span.arg0(expansions);
+            return Ok((finish(trees, iter + 1, expansions), reuse));
         }
 
         for &i in &overused {
@@ -686,9 +938,17 @@ pub fn route_with_seed(
         for i in 0..nets.len() {
             crit[i] = (delays[i] / dmax).clamp(0.0, 0.95);
         }
+
+        // Only the repaired (pending) nets reorder — accepted seeds stay
+        // frozen whatever their slack.
+        if params.slack_order {
+            let slack = super::timing::net_slacks(app, &nets, &delays);
+            slack_sort(&mut pending, &nets, &slack);
+        }
     }
 
     let overused = st.s.occ.iter().filter(|&&o| o > 1).count();
+    core_span.arg0(st.s.expansions);
     Err(RoutingFailed {
         iterations: params.max_iterations,
         overused_nodes: overused,
@@ -701,8 +961,12 @@ pub fn path_delay(g: &CompiledGraph, path: &[NodeId]) -> f64 {
     g.path_delay(path)
 }
 
-/// Route one net: grow a Steiner tree by A*-ing from the current tree to
-/// each sink (nearest sink first). Uses the arena scratch in
+/// Route one net. In Steiner mode (the default) the net grows a shared
+/// subtree: each sink searches from the *whole* tree built so far
+/// (every tree node seeds at cost 0 — zero-cost re-entry), nearest sink
+/// first, so a branch pays only for the nodes it adds. With
+/// `steiner: false` every sink searches from the source alone — the
+/// independent-paths baseline. Uses the arena scratch in
 /// [`RouterState`] — no per-net allocation beyond the result paths.
 fn route_net(
     st: &mut RouterState,
@@ -719,6 +983,7 @@ fn route_net(
         (g.x(s) as i32 - sx).abs() + (g.y(s) as i32 - sy).abs()
     });
 
+    let steiner = st.params.steiner;
     let mut tree: Vec<NodeId> = vec![src];
     st.s.in_tree[src.index()] = true;
     let mut paths: Vec<Vec<NodeId>> = vec![Vec::new(); sinks.len()];
@@ -726,12 +991,14 @@ fn route_net(
     let mut result = Ok(());
     for &si in &order {
         let sink = sinks[si];
-        match astar(st, &tree, sink, crit) {
+        match search(st, &tree, sink, crit) {
             Some(path) => {
-                for &n in &path {
-                    if !st.s.in_tree[n.index()] {
-                        st.s.in_tree[n.index()] = true;
-                        tree.push(n);
+                if steiner {
+                    for &n in &path {
+                        if !st.s.in_tree[n.index()] {
+                            st.s.in_tree[n.index()] = true;
+                            tree.push(n);
+                        }
                     }
                 }
                 paths[si] = path;
@@ -749,41 +1016,68 @@ fn route_net(
     }
     result?;
 
-    // Rebuild each sink path so it starts at the net source (A* from the
-    // tree may start mid-tree; graft with recorded prefixes).
-    Ok(stitch_paths(src, sinks, paths))
-}
-
-/// A* from any node of `tree` (cost 0) to `sink`, using (and resetting)
-/// the arena scratch in `st`. Dispatches to the heap or bucketed
-/// frontier; both pop in the same order, so the result is identical.
-fn astar(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Option<Vec<NodeId>> {
-    if st.params.bucket_queue {
-        let mut q = std::mem::take(&mut st.s.bq);
-        let path = astar_with(st, tree, sink, crit, &mut q);
-        st.s.bq = q;
-        path
+    if steiner {
+        // Rebuild each sink path so it starts at the net source (the
+        // search from the tree may start mid-tree; graft with recorded
+        // prefixes).
+        Ok(stitch_paths(src, sinks, paths))
     } else {
-        let mut q = std::mem::take(&mut st.s.pq);
-        let path = astar_with(st, tree, sink, crit, &mut q);
-        st.s.pq = q;
-        path
+        // Independent paths can overlap each other arbitrarily; merge
+        // them onto one driver per node so the net still encodes as a
+        // proper tree (one mux select per node — the PR 1 invariant).
+        Ok(merge_independent_paths(src, &order, paths))
     }
 }
 
+/// Dispatch one tree→sink search to the configured core.
+fn search(st: &mut RouterState, tree: &[NodeId], sink: NodeId, crit: f64) -> Option<Vec<NodeId>> {
+    match st.params.search_core {
+        SearchCore::BinaryHeap => {
+            let mut q = std::mem::take(&mut st.s.pq);
+            let path = astar_with(st, tree, sink, crit, &mut q, 0.9);
+            st.s.pq = q;
+            path
+        }
+        SearchCore::Bucket => {
+            let mut q = std::mem::take(&mut st.s.bq);
+            let path = astar_with(st, tree, sink, crit, &mut q, 0.9);
+            st.s.bq = q;
+            path
+        }
+        SearchCore::Radix => {
+            let mut q = std::mem::take(&mut st.s.rq);
+            let path = astar_with(st, tree, sink, crit, &mut q, 0.9);
+            st.s.rq = q;
+            path
+        }
+        SearchCore::AStar => {
+            let mut q = std::mem::take(&mut st.s.pq);
+            let path = astar_with(st, tree, sink, crit, &mut q, 1.0);
+            st.s.pq = q;
+            path
+        }
+        SearchCore::Bidir => bidir_search(st, tree, sink, crit),
+    }
+}
+
+/// A* from any node of `tree` (cost 0) to `sink`, using (and resetting)
+/// the arena scratch in `st`. `hfac` scales the manhattan lower bound:
+/// 0.9 is the historical default (kept bit-identical), 1.0 is the
+/// full-strength admissible bound of the `astar` core — every hop moves
+/// at most one tile and every node's base cost is ≥ 1.0, so remaining
+/// cost ≥ remaining manhattan distance.
 fn astar_with<F: Frontier>(
     st: &mut RouterState,
     tree: &[NodeId],
     sink: NodeId,
     crit: f64,
     pq: &mut F,
+    hfac: f64,
 ) -> Option<Vec<NodeId>> {
     let g = st.g;
     let (tx, ty) = (st.s.nx[sink.index()], st.s.ny[sink.index()]);
-    // Admissible-ish heuristic: manhattan distance x a conservative
-    // per-hop lower bound (all node base costs are >= 1.0).
-    fn h(s: &RouterScratch, n: NodeId, tx: f32, ty: f32) -> f64 {
-        ((s.nx[n.index()] - tx).abs() + (s.ny[n.index()] - ty).abs()) as f64 * 0.9
+    fn h(s: &RouterScratch, n: NodeId, tx: f32, ty: f32, hfac: f64) -> f64 {
+        ((s.nx[n.index()] - tx).abs() + (s.ny[n.index()] - ty).abs()) as f64 * hfac
     }
 
     pq.fclear();
@@ -791,15 +1085,16 @@ fn astar_with<F: Frontier>(
         st.s.dist[t.index()] = 0.0;
         st.s.prev[t.index()] = u32::MAX;
         st.s.touched.push(t.0);
-        pq.fpush(h(st.s, t, tx, ty), t);
+        pq.fpush(h(st.s, t, tx, ty, hfac), t);
     }
 
     let mut found = false;
     while let Some((f, n)) = pq.fpop() {
         let d = st.s.dist[n.index()];
-        if f > d + h(st.s, n, tx, ty) + 1e-9 {
+        if f > d + h(st.s, n, tx, ty, hfac) + 1e-9 {
             continue; // stale entry
         }
+        st.s.expansions += 1;
         if n == sink {
             found = true;
             break;
@@ -818,7 +1113,7 @@ fn astar_with<F: Frontier>(
                 }
                 st.s.dist[si] = nd;
                 st.s.prev[si] = n.0;
-                pq.fpush(nd + h(st.s, succ, tx, ty), succ);
+                pq.fpush(nd + h(st.s, succ, tx, ty, hfac), succ);
             }
         }
     }
@@ -843,6 +1138,184 @@ fn astar_with<F: Frontier>(
         st.s.prev[t as usize] = u32::MAX;
     }
     st.s.touched.clear();
+    path
+}
+
+/// Minimum key in a binary-heap frontier (∞ when empty).
+fn heap_top(q: &std::collections::BinaryHeap<(std::cmp::Reverse<Cost>, NodeId)>) -> f64 {
+    q.peek().map(|&(std::cmp::Reverse(Cost(f)), _)| f).unwrap_or(f64::INFINITY)
+}
+
+/// Bidirectional Dijkstra from the net tree to `sink`.
+///
+/// Node costs map onto edge lengths — entering node `v` over any edge
+/// costs `node_cost(v)` — so the backward half is plain Dijkstra on the
+/// reversed CSR (`fan_in`) with the same length function: `bdist[v]` =
+/// cost of `v → … → sink` *excluding* `v` itself, seeded with
+/// `bdist[sink] = 0`. A meeting node `m` then yields a complete path of
+/// cost `dist[m] + bdist[m]` (forward labels include `m` unless it is a
+/// free tree seed — exactly the forward metric's semantics). The search
+/// expands whichever frontier has the smaller top and stops at the
+/// classic bound `ftop + btop ≥ best`.
+///
+/// Port discipline mirrors the forward search: backward never steps
+/// onto a port that is not the sink or already in the tree, and never
+/// expands *through* a tree node (meeting there is the goal). The two
+/// half-paths come from independent searches and may overlap, so any
+/// revisited node cuts the loop between its two occurrences before the
+/// path is returned.
+fn bidir_search(
+    st: &mut RouterState,
+    tree: &[NodeId],
+    sink: NodeId,
+    crit: f64,
+) -> Option<Vec<NodeId>> {
+    let g = st.g;
+    let mut fq = std::mem::take(&mut st.s.pq);
+    let mut bq = std::mem::take(&mut st.s.bpq);
+    fq.clear();
+    bq.clear();
+
+    for &t in tree {
+        st.s.dist[t.index()] = 0.0;
+        st.s.prev[t.index()] = u32::MAX;
+        st.s.touched.push(t.0);
+        Frontier::fpush(&mut fq, 0.0, t);
+    }
+    st.s.bdist[sink.index()] = 0.0;
+    st.s.bprev[sink.index()] = u32::MAX;
+    st.s.btouched.push(sink.0);
+    Frontier::fpush(&mut bq, 0.0, sink);
+
+    let mut best = f64::INFINITY;
+    let mut meet: Option<NodeId> = None;
+
+    loop {
+        let ftop = heap_top(&fq);
+        let btop = heap_top(&bq);
+        if ftop + btop >= best - 1e-12 {
+            break;
+        }
+        if ftop <= btop {
+            let Some((f, n)) = Frontier::fpop(&mut fq) else { break };
+            let d = st.s.dist[n.index()];
+            if f > d + 1e-9 {
+                continue; // stale
+            }
+            st.s.expansions += 1;
+            if n == sink {
+                // Direct arrival; candidate already recorded at relax
+                // time (bdist[sink] = 0), and sinks are never expanded.
+                continue;
+            }
+            for &succ in g.fan_out(n) {
+                if g.is_port(succ) && succ != sink {
+                    continue;
+                }
+                let nd = d + st.node_cost(succ, crit);
+                let si = succ.index();
+                if nd < st.s.dist[si] - 1e-12 {
+                    if st.s.dist[si].is_infinite() {
+                        st.s.touched.push(succ.0);
+                    }
+                    st.s.dist[si] = nd;
+                    st.s.prev[si] = n.0;
+                    Frontier::fpush(&mut fq, nd, succ);
+                    if st.s.bdist[si].is_finite() {
+                        let total = nd + st.s.bdist[si];
+                        if total < best - 1e-12 {
+                            best = total;
+                            meet = Some(succ);
+                        }
+                    }
+                }
+            }
+        } else {
+            let Some((f, v)) = Frontier::fpop(&mut bq) else { break };
+            let vi = v.index();
+            let bd = st.s.bdist[vi];
+            if f > bd + 1e-9 {
+                continue; // stale
+            }
+            st.s.expansions += 1;
+            if st.s.in_tree[vi] {
+                continue; // met the tree; candidate recorded at relax
+            }
+            let vc = st.node_cost(v, crit);
+            for &p in g.fan_in(v) {
+                // `p` becomes an interior node of the final path: ports
+                // are only allowed if they are the net's own tree (the
+                // source port, or an already-routed branch).
+                if g.is_port(p) && !st.s.in_tree[p.index()] {
+                    continue;
+                }
+                let nb = bd + vc;
+                let pi = p.index();
+                if nb < st.s.bdist[pi] - 1e-12 {
+                    if st.s.bdist[pi].is_infinite() {
+                        st.s.btouched.push(p.0);
+                    }
+                    st.s.bdist[pi] = nb;
+                    st.s.bprev[pi] = v.0;
+                    Frontier::fpush(&mut bq, nb, p);
+                    if st.s.dist[pi].is_finite() {
+                        let total = st.s.dist[pi] + nb;
+                        if total < best - 1e-12 {
+                            best = total;
+                            meet = Some(p);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    let path = meet.map(|m| {
+        // Forward half: seed … m.
+        let mut path = vec![m];
+        let mut cur = m;
+        while st.s.prev[cur.index()] != u32::MAX {
+            cur = NodeId(st.s.prev[cur.index()]);
+            path.push(cur);
+        }
+        path.reverse();
+        // Backward half: m … sink (bprev points toward the sink).
+        let mut cur = m;
+        while st.s.bprev[cur.index()] != u32::MAX {
+            cur = NodeId(st.s.bprev[cur.index()]);
+            path.push(cur);
+        }
+        // The halves may overlap; cut any loop between a node's two
+        // occurrences (junction pairs were consecutive in the original
+        // sequence, so every remaining pair is still a graph edge).
+        let mut pos: HashMap<NodeId, usize> = HashMap::new();
+        let mut clean: Vec<NodeId> = Vec::new();
+        for &n in &path {
+            if let Some(&i) = pos.get(&n) {
+                for d in clean.drain(i + 1..) {
+                    pos.remove(&d);
+                }
+            } else {
+                pos.insert(n, clean.len());
+                clean.push(n);
+            }
+        }
+        clean
+    });
+
+    for &t in &st.s.touched {
+        st.s.dist[t as usize] = f64::INFINITY;
+        st.s.prev[t as usize] = u32::MAX;
+    }
+    st.s.touched.clear();
+    for &t in &st.s.btouched {
+        st.s.bdist[t as usize] = f64::INFINITY;
+        st.s.bprev[t as usize] = u32::MAX;
+    }
+    st.s.btouched.clear();
+
+    st.s.pq = fq;
+    st.s.bpq = bq;
     path
 }
 
@@ -873,6 +1346,50 @@ fn stitch_paths(src: NodeId, sinks: &[NodeId], paths: Vec<Vec<NodeId>>) -> Vec<V
             path
         })
         .collect()
+}
+
+/// Merge independently-searched sink paths (all starting at `src`) onto
+/// one driver per node. Processed in routing order: when a later path
+/// touches a node an earlier path already claimed, it adopts the
+/// existing chain `src → node` and keeps only its own suffix past the
+/// *last* such node — so every node has exactly one in-net predecessor
+/// and the net encodes as a proper tree (one mux select per node),
+/// while the search effort measured stays fully independent.
+fn merge_independent_paths(
+    src: NodeId,
+    order: &[usize],
+    paths: Vec<Vec<NodeId>>,
+) -> Vec<Vec<NodeId>> {
+    let mut parent: HashMap<NodeId, NodeId> = HashMap::new();
+    let mut known: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+    known.insert(src);
+    let mut out = vec![Vec::new(); paths.len()];
+    for &si in order {
+        let p = &paths[si];
+        // Last node already claimed by this net (index 0 = src always).
+        let mut j = 0;
+        for (i, n) in p.iter().enumerate() {
+            if known.contains(n) {
+                j = i;
+            }
+        }
+        // Existing chain src → p[j] …
+        let mut pref = vec![p[j]];
+        let mut cur = p[j];
+        while cur != src {
+            cur = parent[&cur];
+            pref.push(cur);
+        }
+        pref.reverse();
+        // … then claim the fresh suffix.
+        for w in p[j..].windows(2) {
+            parent.insert(w[1], w[0]);
+            known.insert(w[1]);
+        }
+        pref.extend_from_slice(&p[j + 1..]);
+        out[si] = pref;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -907,12 +1424,33 @@ mod tests {
         (packed, placement)
     }
 
+    fn assert_legal(ic: &Interconnect, r: &RoutingResult) {
+        let g = ic.graph(16);
+        let mut seen: HashMap<NodeId, usize> = HashMap::new();
+        for (i, t) in r.trees.iter().enumerate() {
+            for n in t.nodes() {
+                if let Some(&j) = seen.get(&n) {
+                    panic!("node {n} shared by nets {i} and {j}");
+                }
+                seen.insert(n, i);
+            }
+            for p in &t.sink_paths {
+                assert!(g.node(*p.first().unwrap()).kind.is_port());
+                assert!(g.node(*p.last().unwrap()).kind.is_port());
+                for w in p.windows(2) {
+                    assert!(g.fan_out(w[0]).contains(&w[1]), "non-edge in path");
+                }
+            }
+        }
+    }
+
     #[test]
     fn routes_pointwise_on_wilton() {
         let ic = ic_with(SbTopology::Wilton, 3);
         let (app, placement) = place("pointwise", &ic);
         let r = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
         assert_eq!(r.trees.len(), app.nets().len());
+        assert!(r.route_expansions > 0, "expansion accounting engaged");
         // Every sink path starts at a source port and ends at a sink port.
         let g = ic.graph(16);
         for t in &r.trees {
@@ -1010,16 +1548,17 @@ mod tests {
         assert_eq!(paths(&r2), paths(&fresh));
         assert_eq!(r1.iterations, fresh.iterations);
         assert_eq!(r2.nodes_used, fresh.nodes_used);
+        assert_eq!(r1.route_expansions, fresh.route_expansions);
+        assert_eq!(r2.route_expansions, fresh.route_expansions);
     }
 
     #[test]
-    fn bucket_queue_is_golden_bit_identical_to_heap() {
-        // The bucketed frontier must reproduce the BinaryHeap's pop
-        // order exactly — same paths, same iteration count — across
-        // topologies and congestion levels (few tracks = many
-        // negotiation iterations).
+    fn bucket_and_radix_frontiers_are_golden_bit_identical_to_heap() {
+        // The bucketed and radix frontiers must reproduce the
+        // BinaryHeap's pop order exactly — same paths, same iteration
+        // count, same expansion count — across topologies and
+        // congestion levels (few tracks = many negotiation iterations).
         let heap = RouterParams::default();
-        let bucket = RouterParams { bucket_queue: true, ..heap };
         let paths = |r: &RoutingResult| -> Vec<Vec<Vec<NodeId>>> {
             r.trees.iter().map(|t| t.sink_paths.clone()).collect()
         };
@@ -1031,11 +1570,107 @@ mod tests {
             let ic = ic_with(topo, tracks);
             let (app, placement) = place(app_name, &ic);
             let a = route(&ic, &app, &placement, 16, &heap).unwrap();
-            let b = route(&ic, &app, &placement, 16, &bucket).unwrap();
-            assert_eq!(paths(&a), paths(&b), "{app_name} paths diverge");
-            assert_eq!(a.iterations, b.iterations, "{app_name} iterations diverge");
-            assert_eq!(a.nodes_used, b.nodes_used);
+            for core in [SearchCore::Bucket, SearchCore::Radix] {
+                let b = route(
+                    &ic,
+                    &app,
+                    &placement,
+                    16,
+                    &RouterParams { search_core: core, ..heap },
+                )
+                .unwrap();
+                let tag = core.name();
+                assert_eq!(paths(&a), paths(&b), "{app_name}/{tag} paths diverge");
+                assert_eq!(a.iterations, b.iterations, "{app_name}/{tag} iterations diverge");
+                assert_eq!(a.nodes_used, b.nodes_used);
+                assert_eq!(
+                    a.route_expansions, b.route_expansions,
+                    "{app_name}/{tag} expansions diverge"
+                );
+            }
         }
+    }
+
+    #[test]
+    fn radix_index_is_monotone_in_f() {
+        let samples = [
+            0.0, 1e-9, 0.1, 0.25, 0.49, 0.5, 0.51, 0.9, 1.0, 1.5, 2.0, 3.7, 8.0, 100.0,
+            1234.5, 1e6, 1e9, 1e12, f64::INFINITY,
+        ];
+        for w in samples.windows(2) {
+            assert!(
+                radix_index(w[0]) <= radix_index(w[1]),
+                "radix_index not monotone at {} vs {}",
+                w[0],
+                w[1]
+            );
+        }
+        assert_eq!(radix_index(0.0), 0);
+        assert_eq!(radix_index(0.49), 0, "everything below 0.5 shares bucket 0");
+        assert!(radix_index(f64::INFINITY) == RADIX_OVERFLOW);
+    }
+
+    #[test]
+    fn astar_and_bidir_cores_route_legally() {
+        // Result-changing cores: no bit-identity promise, but every
+        // routing they produce must be as legal as the default's.
+        for (topo, tracks, app_name) in [
+            (SbTopology::Wilton, 4, "gaussian"),
+            (SbTopology::Wilton, 5, "harris"),
+            (SbTopology::Imran, 4, "gaussian"),
+        ] {
+            let ic = ic_with(topo, tracks);
+            let (app, placement) = place(app_name, &ic);
+            for core in [SearchCore::AStar, SearchCore::Bidir] {
+                let params = RouterParams { search_core: core, ..Default::default() };
+                let r = route(&ic, &app, &placement, 16, &params)
+                    .unwrap_or_else(|e| panic!("{}/{app_name}: {e}", core.name()));
+                assert_eq!(r.trees.len(), app.nets().len());
+                assert!(r.route_expansions > 0);
+                assert_legal(&ic, &r);
+            }
+        }
+    }
+
+    #[test]
+    fn independent_sinks_route_legally_and_merge_to_one_driver() {
+        // The Steiner-off baseline still yields a proper tree per net:
+        // node-disjoint across nets, one driver per node within a net.
+        let ic = ic_with(SbTopology::Wilton, 5);
+        let (app, placement) = place("harris", &ic);
+        let params = RouterParams { steiner: false, ..Default::default() };
+        let r = route(&ic, &app, &placement, 16, &params).unwrap();
+        assert_legal(&ic, &r);
+        for t in &r.trees {
+            let mut driver: HashMap<NodeId, NodeId> = HashMap::new();
+            for p in &t.sink_paths {
+                for w in p.windows(2) {
+                    if let Some(&d) = driver.get(&w[1]) {
+                        assert_eq!(d, w[0], "two drivers for one node in a net");
+                    }
+                    driver.insert(w[1], w[0]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn slack_order_routes_legally() {
+        // Congested fabric (few tracks → several negotiation rounds):
+        // the reordered router must still produce a legal result and
+        // cannot be catastrophically slower than the static order.
+        let ic = ic_with(SbTopology::Wilton, 3);
+        let (app, placement) = place("harris", &ic);
+        let base = route(&ic, &app, &placement, 16, &RouterParams::default()).unwrap();
+        let params = RouterParams { slack_order: true, ..Default::default() };
+        let r = route(&ic, &app, &placement, 16, &params).unwrap();
+        assert_legal(&ic, &r);
+        assert!(
+            r.iterations <= base.iterations + 3,
+            "slack order {} vs static {}",
+            r.iterations,
+            base.iterations
+        );
     }
 
     #[test]
@@ -1054,6 +1689,7 @@ mod tests {
         assert_eq!(reuse.nets_reused, donor.trees.len());
         assert_eq!(reuse.nets_rerouted, 0);
         assert_eq!(r.iterations, 0);
+        assert_eq!(r.route_expansions, 0, "full replay searches nothing");
         let paths = |r: &RoutingResult| -> Vec<Vec<Vec<NodeId>>> {
             r.trees.iter().map(|t| t.sink_paths.clone()).collect()
         };
@@ -1083,23 +1719,7 @@ mod tests {
         assert!(reuse.nets_rerouted >= 2, "both broken seeds rerouted");
         assert!(reuse.nets_reused > 0, "intact seeds replayed");
         // The repaired result is legal: node-disjoint, endpoints right.
-        let g = ic.graph(16);
-        let mut seen: HashMap<NodeId, usize> = HashMap::new();
-        for (i, t) in r.trees.iter().enumerate() {
-            for node in t.nodes() {
-                if let Some(&j) = seen.get(&node) {
-                    panic!("node {node} shared by nets {i} and {j}");
-                }
-                seen.insert(node, i);
-            }
-            for p in &t.sink_paths {
-                assert!(g.node(*p.first().unwrap()).kind.is_port());
-                assert!(g.node(*p.last().unwrap()).kind.is_port());
-                for w in p.windows(2) {
-                    assert!(g.fan_out(w[0]).contains(&w[1]), "non-edge in path");
-                }
-            }
-        }
+        assert_legal(&ic, &r);
     }
 
     #[test]
@@ -1115,5 +1735,19 @@ mod tests {
         let manual: f64 = p.iter().map(|&n| g.node(n).delay_ps as f64).sum::<f64>()
             + p.windows(2).map(|w| g.wire_delay(w[0], w[1]) as f64).sum::<f64>();
         assert_eq!(d, manual);
+    }
+
+    #[test]
+    fn search_core_parses_all_names() {
+        for core in SearchCore::ALL {
+            assert_eq!(SearchCore::parse(core.name()), Some(core));
+        }
+        assert_eq!(SearchCore::parse("heap"), Some(SearchCore::BinaryHeap));
+        assert_eq!(SearchCore::parse("bidirectional"), Some(SearchCore::Bidir));
+        assert_eq!(SearchCore::parse("bogus"), None);
+        assert!(!SearchCore::Bucket.changes_results());
+        assert!(!SearchCore::Radix.changes_results());
+        assert!(SearchCore::AStar.changes_results());
+        assert!(SearchCore::Bidir.changes_results());
     }
 }

@@ -11,7 +11,7 @@ use std::collections::HashMap;
 
 use crate::ir::Interconnect;
 
-use super::app::{AppGraph, AppNodeId, AppOp};
+use super::app::{AppGraph, AppNodeId, AppOp, Net};
 use super::pack::PackedApp;
 use super::route::{path_delay, RoutingResult};
 
@@ -132,6 +132,91 @@ pub fn analyze(
     }
 }
 
+/// Per-net slack from a lightweight STA pass over the app DAG, using the
+/// router's per-net routed delays (max over a net's sink paths — exactly
+/// what PathFinder measures between iterations).
+///
+/// This is the feed for [`crate::pnr::route::RouterParams::slack_order`]:
+/// it deliberately models only interconnect delay (no core delays, no
+/// packed-register pin breaks — those need the full [`analyze`] inputs),
+/// because all the ordering needs is a *relative* criticality that is
+/// cheap and allocation-light inside the negotiation loop. Sequential
+/// vertices break paths (launch fresh at 0); `Tmax` anchors at the worst
+/// endpoint arrival, so slacks are non-negative and the critical path's
+/// nets come back with slack exactly 0.
+pub fn net_slacks(app: &AppGraph, nets: &[Net], net_delays: &[f64]) -> Vec<f64> {
+    assert_eq!(nets.len(), net_delays.len());
+    let order = topo_order(app);
+
+    // Net fan-in/fan-out per vertex.
+    let mut out_nets: Vec<Vec<usize>> = vec![Vec::new(); app.len()];
+    let mut in_nets: Vec<Vec<usize>> = vec![Vec::new(); app.len()];
+    for (i, net) in nets.iter().enumerate() {
+        out_nets[net.src.index()].push(i);
+        for &(dst, _) in &net.sinks {
+            in_nets[dst.index()].push(i);
+        }
+    }
+
+    // Forward: worst-case arrival at each vertex's output.
+    let mut arrival = vec![0.0f64; app.len()];
+    for &v in &order {
+        if is_sequential(&app.node(v).op) {
+            continue; // launches fresh; arrival stays 0
+        }
+        let mut a = 0.0f64;
+        for &i in &in_nets[v.index()] {
+            a = a.max(arrival[nets[i].src.index()] + net_delays[i]);
+        }
+        arrival[v.index()] = a;
+    }
+
+    // Tmax: worst endpoint arrival — combinational arrivals dominate
+    // transitively, sequential D-pin arrivals are checked explicitly
+    // (the vertex's own arrival resets to 0).
+    let mut tmax = arrival.iter().copied().fold(0.0f64, f64::max);
+    for (i, net) in nets.iter().enumerate() {
+        for &(dst, _) in &net.sinks {
+            if is_sequential(&app.node(dst).op) {
+                tmax = tmax.max(arrival[net.src.index()] + net_delays[i]);
+            }
+        }
+    }
+
+    // Backward: latest time each vertex's output may launch.
+    let mut required = vec![tmax; app.len()];
+    for &v in order.iter().rev() {
+        let mut req = tmax;
+        for &i in &out_nets[v.index()] {
+            for &(dst, _) in &nets[i].sinks {
+                let end_req = if is_sequential(&app.node(dst).op) {
+                    tmax
+                } else {
+                    required[dst.index()]
+                };
+                req = req.min(end_req - net_delays[i]);
+            }
+        }
+        required[v.index()] = req;
+    }
+
+    nets.iter()
+        .enumerate()
+        .map(|(i, net)| {
+            let mut end = tmax;
+            for &(dst, _) in &net.sinks {
+                let end_req = if is_sequential(&app.node(dst).op) {
+                    tmax
+                } else {
+                    required[dst.index()]
+                };
+                end = end.min(end_req);
+            }
+            end - net_delays[i] - arrival[net.src.index()]
+        })
+        .collect()
+}
+
 fn core_delay(ic: &Interconnect, node: &super::app::AppNode) -> f64 {
     // Core delays are tile attributes; use the spec of the core kind (all
     // tiles of a kind share a spec in uniform interconnects).
@@ -234,6 +319,45 @@ mod tests {
         // gaussian has linebuffer chains and register windows: at least
         // a few sequential stages.
         assert!(t.latency_cycles >= 2, "{}", t.latency_cycles);
+    }
+
+    #[test]
+    fn net_slacks_are_nonnegative_with_zero_on_critical_path() {
+        // Tmax anchors at the worst endpoint arrival computed from the
+        // same delays, so every slack is ≥ 0 and the critical path's
+        // nets sit at exactly 0.
+        let (_, packed, _) = pnr("gaussian");
+        let app = &packed.app;
+        let nets = app.nets();
+        for scale in [1.0, 37.5] {
+            let delays: Vec<f64> =
+                (0..nets.len()).map(|i| scale * (1.0 + (i % 5) as f64)).collect();
+            let slack = net_slacks(app, &nets, &delays);
+            assert_eq!(slack.len(), nets.len());
+            let min = slack.iter().copied().fold(f64::INFINITY, f64::min);
+            assert!(min >= -1e-9, "negative slack {min}");
+            assert!(min.abs() < 1e-6, "critical path slack should be 0, got {min}");
+        }
+    }
+
+    #[test]
+    fn raising_a_net_delay_never_raises_its_slack() {
+        let (_, packed, _) = pnr("gaussian");
+        let app = &packed.app;
+        let nets = app.nets();
+        let delays: Vec<f64> = (0..nets.len()).map(|i| 50.0 + (i % 3) as f64 * 20.0).collect();
+        let base = net_slacks(app, &nets, &delays);
+        for bump_i in 0..nets.len().min(6) {
+            let mut d = delays.clone();
+            d[bump_i] += 500.0;
+            let bumped = net_slacks(app, &nets, &d);
+            assert!(
+                bumped[bump_i] <= base[bump_i] + 1e-9,
+                "net {bump_i}: slack rose from {} to {}",
+                base[bump_i],
+                bumped[bump_i]
+            );
+        }
     }
 
     #[test]

@@ -43,7 +43,7 @@
 
 use crate::dse::{PointResult, SeedMode, Sizing, SweepSpec};
 use crate::dsl::{InterconnectConfig, OutputTrackMode, SbTopology};
-use crate::pnr::{FlowParams, SaParams};
+use crate::pnr::{FlowParams, RouterParams, SaParams, SearchCore};
 use crate::sim::FabricKind;
 use crate::util::json::Json;
 
@@ -163,6 +163,11 @@ pub struct DseParams {
     pub derived_seeds: bool,
     pub tight: Option<f64>,
     pub sa_moves: usize,
+    /// Router search core, by [`SearchCore::parse`] name
+    /// (`binary-heap` default).
+    pub search_core: String,
+    /// Slack-driven net ordering between PathFinder iterations.
+    pub slack_order: bool,
     pub area: bool,
 }
 
@@ -185,6 +190,8 @@ impl Default for DseParams {
             derived_seeds: false,
             tight: None,
             sa_moves: 12,
+            search_core: SearchCore::BinaryHeap.name().into(),
+            slack_order: false,
             area: false,
         }
     }
@@ -216,6 +223,14 @@ impl DseParams {
             seed_mode: if self.derived_seeds { SeedMode::Derived } else { SeedMode::Raw },
             flow: FlowParams {
                 sa: SaParams { moves_per_node: self.sa_moves, ..Default::default() },
+                router: RouterParams {
+                    // Validated on parse ([`DseParams::from_json`]) and
+                    // by the CLI, so a miss here can only come from a
+                    // hand-built struct; fall back to the default core.
+                    search_core: SearchCore::parse(&self.search_core).unwrap_or_default(),
+                    slack_order: self.slack_order,
+                    ..Default::default()
+                },
                 ..Default::default()
             },
             area: self.area,
@@ -252,6 +267,8 @@ impl DseParams {
                 },
             ),
             ("sa_moves".into(), Json::num_u64(self.sa_moves as u64)),
+            ("search_core".into(), Json::str(&self.search_core)),
+            ("slack_order".into(), Json::Bool(self.slack_order)),
             ("area".into(), Json::Bool(self.area)),
         ]
     }
@@ -277,6 +294,17 @@ impl DseParams {
             derived_seeds: opt_bool(v, "derived_seeds")?.unwrap_or(d.derived_seeds),
             tight: opt_f64(v, "tight")?,
             sa_moves: opt_u64(v, "sa_moves")?.map(|n| n as usize).unwrap_or(d.sa_moves),
+            search_core: match opt_str(v, "search_core")? {
+                None => d.search_core,
+                Some(s) => {
+                    let core = SearchCore::parse(&s)
+                        .ok_or_else(|| format!("bad `search_core` value `{s}`"))?;
+                    // Canonicalize so aliases ("heap", "a-star") share
+                    // the wire form with their canonical spelling.
+                    core.name().into()
+                }
+            },
+            slack_order: opt_bool(v, "slack_order")?.unwrap_or(d.slack_order),
             area: opt_bool(v, "area")?.unwrap_or(d.area),
         })
     }
@@ -611,6 +639,8 @@ mod tests {
                 seeds: 2,
                 derived_seeds: true,
                 tight: Some(1.25),
+                search_core: "astar".into(),
+                slack_order: true,
                 area: true,
                 ..Default::default()
             }),
@@ -636,6 +666,14 @@ mod tests {
         assert!(parse_request(r#"{"id":1,"cmd":"warp"}"#).is_err(), "unknown cmd");
         assert!(parse_request(r#"{"id":1,"cmd":"dse","tracks":"3"}"#).is_err());
         assert!(parse_request(r#"{"id":1,"cmd":"dse","fabrics":["warp"]}"#).is_err());
+        assert!(parse_request(r#"{"id":1,"cmd":"dse","search_core":"warp"}"#).is_err());
+        // Aliases canonicalize on parse, so wire forms never fork keys.
+        let (_, req) =
+            parse_request(r#"{"id":1,"cmd":"dse","search_core":"a-star"}"#).unwrap();
+        match req {
+            Request::Dse(p) => assert_eq!(p.search_core, "astar"),
+            other => panic!("expected dse, got {other:?}"),
+        }
         assert!(parse_request(r#"{"id":1,"cmd":"simulate"}"#).is_err(), "app required");
         assert!(parse_request("not json").is_err());
     }
@@ -658,6 +696,16 @@ mod tests {
         assert_eq!(spec.flow.sa.moves_per_node, 4);
         assert!(matches!(spec.sizing, Sizing::Fixed));
         assert_eq!(spec.seed_mode, SeedMode::Raw);
+        assert_eq!(spec.flow.router.search_core, SearchCore::BinaryHeap);
+        assert!(!spec.flow.router.slack_order);
+        let variant = DseParams {
+            search_core: "bidir".into(),
+            slack_order: true,
+            ..DseParams::default()
+        }
+        .to_spec();
+        assert_eq!(variant.flow.router.search_core, SearchCore::Bidir);
+        assert!(variant.flow.router.slack_order);
         // Same job keys as a spec built by hand the way cmd_dse does.
         let jobs = spec.jobs("native-gd").unwrap();
         assert_eq!(jobs.len(), 4);

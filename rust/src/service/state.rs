@@ -197,6 +197,7 @@ pub struct ServiceStats {
     pub warm_starts: AtomicU64,
     pub nets_reused: AtomicU64,
     pub nets_rerouted: AtomicU64,
+    pub route_expansions: AtomicU64,
     pub flushes: AtomicU64,
 }
 
@@ -213,6 +214,7 @@ impl ServiceStats {
         self.warm_starts.fetch_add(s.warm_starts, Ordering::Relaxed);
         self.nets_reused.fetch_add(s.nets_reused, Ordering::Relaxed);
         self.nets_rerouted.fetch_add(s.nets_rerouted, Ordering::Relaxed);
+        self.route_expansions.fetch_add(s.route_expansions, Ordering::Relaxed);
     }
 }
 
@@ -570,6 +572,7 @@ impl SessionState {
             ("warm_starts".into(), get(&s.warm_starts)),
             ("nets_reused".into(), get(&s.nets_reused)),
             ("nets_rerouted".into(), get(&s.nets_rerouted)),
+            ("route_expansions".into(), get(&s.route_expansions)),
             ("flushes".into(), get(&s.flushes)),
             ("cache_entries".into(), Json::num_u64(self.cache_len() as u64)),
             ("interconnects_cached".into(), Json::num_u64(self.ics.len() as u64)),

@@ -1,0 +1,6 @@
+//! Shared helpers for the integration-test suite. Each test binary that
+//! wants them declares `mod common;` — the directory is not itself a
+//! test crate, so the helpers compile once per consumer and nothing
+//! here runs as a test.
+
+pub mod route_check;

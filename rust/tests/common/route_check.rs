@@ -1,0 +1,119 @@
+//! The one route-legality checker every routing test shares.
+//!
+//! Before this module, warm_start.rs, prop_invariants.rs, and
+//! dse_determinism.rs each carried their own partial copy of "is this
+//! routing legal" — node-disjointness here, edge-existence there, the
+//! fan-in-order mux-select invariant only in the e2e bitstream test.
+//! [`assert_routing_legal`] is the union of all of them, so every
+//! consumer checks every invariant for free:
+//!
+//! 1. every net routed, every sink reached (one path per sink);
+//! 2. each tree is a connected subtree containing the source: all of a
+//!    net's paths start at one source node, and no node in the tree has
+//!    two different drivers (the Steiner-sharing invariant);
+//! 3. every path step is a real edge of the routing graph;
+//! 4. no routing-graph node serves two different nets (capacity 1);
+//! 5. fan-in-order mux-select encoding (the PR 1 invariant): for every
+//!    multi-input node a route drives, `select_of` names an index whose
+//!    fan-in entry is exactly the driving node, and the bitstream
+//!    `Configuration` built from the routing encodes that same index.
+
+use std::collections::HashMap;
+
+use canal::bitstream::Configuration;
+use canal::ir::{Interconnect, NodeId};
+use canal::pnr::RoutingResult;
+
+/// Assert every routing invariant the suite knows about. `expect_nets`
+/// is the net count of the packed app (every net must have routed);
+/// `ctx` prefixes panic messages so property tests can report their
+/// case/seed.
+pub fn assert_routing_legal(
+    ic: &Interconnect,
+    bit_width: u8,
+    routing: &RoutingResult,
+    expect_nets: usize,
+    ctx: &str,
+) {
+    let g = ic.graph(bit_width);
+    assert_eq!(routing.trees.len(), expect_nets, "{ctx}: not every net routed");
+
+    // Cross-net capacity: each node belongs to at most one net.
+    let mut owner: HashMap<NodeId, usize> = HashMap::new();
+    // Within-net driver: each node is entered from at most one
+    // predecessor (a tree, not a DAG).
+    let mut driver: HashMap<NodeId, NodeId> = HashMap::new();
+
+    for (ni, tree) in routing.trees.iter().enumerate() {
+        assert!(!tree.sink_paths.is_empty(), "{ctx}: net {ni} has no paths");
+        assert_eq!(
+            tree.sink_paths.len(),
+            tree.net.sinks.len(),
+            "{ctx}: net {ni} missed a sink"
+        );
+        let src = tree.sink_paths[0][0];
+        driver.clear();
+        for (si, path) in tree.sink_paths.iter().enumerate() {
+            assert!(path.len() >= 2, "{ctx}: net {ni} sink {si}: degenerate path");
+            assert_eq!(
+                path[0], src,
+                "{ctx}: net {ni} sink {si} does not start at the net source"
+            );
+            for w in path.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                assert!(
+                    g.fan_out(a).contains(&b),
+                    "{ctx}: net {ni} sink {si}: {a:?} -> {b:?} is not an edge"
+                );
+                match driver.get(&b) {
+                    Some(&prev) => assert_eq!(
+                        prev, a,
+                        "{ctx}: net {ni}: node {b:?} driven from two predecessors"
+                    ),
+                    None => {
+                        driver.insert(b, a);
+                    }
+                }
+            }
+        }
+        for n in tree.nodes() {
+            match owner.get(&n) {
+                Some(&other) => {
+                    panic!("{ctx}: node {n:?} shared by nets {other} and {ni}")
+                }
+                None => {
+                    owner.insert(n, ni);
+                }
+            }
+        }
+    }
+
+    // Fan-in-order mux-select encoding, checked two ways: the builder
+    // graph's select index must point back at the driving edge, and the
+    // bitstream configuration built from this routing must encode
+    // exactly that index for every driven mux.
+    let config = Configuration::from_routing(ic, bit_width, routing)
+        .unwrap_or_else(|e| panic!("{ctx}: configuration rejected legal routing: {e}"));
+    for tree in &routing.trees {
+        for path in &tree.sink_paths {
+            for w in path.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                if g.fan_in(b).len() > 1 {
+                    let sel = g
+                        .select_of(b, a)
+                        .unwrap_or_else(|| panic!("{ctx}: no select for {a:?} -> {b:?}"));
+                    assert_eq!(
+                        g.fan_in(b)[sel],
+                        a,
+                        "{ctx}: select {sel} of {b:?} is not fan-in-ordered"
+                    );
+                    assert_eq!(
+                        config.selects.get(&(bit_width, b)),
+                        Some(&(sel as u32)),
+                        "{ctx}: bitstream select for {b:?} disagrees with fan-in order"
+                    );
+                }
+            }
+        }
+    }
+}

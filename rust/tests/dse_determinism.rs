@@ -8,11 +8,15 @@
 //! feature, and `warm_start: true` neighbor sweeps stay legal with
 //! every critical path within 5% of the scratch result.
 
+mod common;
+
 use canal::coordinator::{self, ExpOptions};
 use canal::dse::{DseEngine, EngineOptions, SweepSpec};
 use canal::dsl::InterconnectConfig;
 use canal::pnr::{BatchedNativePlacer, FlowParams, NativePlacer, SaParams};
 use canal::sim::FabricKind;
+
+use common::route_check::assert_routing_legal;
 
 fn small_spec() -> SweepSpec {
     SweepSpec {
@@ -147,6 +151,12 @@ fn batched_and_sequential_flows_produce_identical_placements() {
                     batched.timing.critical_path_ps.to_bits(),
                     sequential.timing.critical_path_ps.to_bits()
                 );
+                // Both paths must also produce *legal* routing — the
+                // shared suite checks disjointness, tree connectivity,
+                // and fan-in-order mux selects.
+                let nets = batched.packed.app.nets().len();
+                assert_routing_legal(&ic, 16, &batched.routing, nets, &app.name);
+                assert_routing_legal(&ic, 16, &sequential.routing, nets, &app.name);
             }
         }
     }

@@ -5,14 +5,18 @@
 //! (with printed seeds for reproduction) — same discipline: random
 //! structure in, invariant checked, seed reported on failure.
 
+mod common;
+
 use canal::bitstream::{decode, encode, Configuration};
 use canal::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig, SbTopology};
 use canal::hw::allocate;
-use canal::ir::{validate, NodeId};
+use canal::ir::validate;
 use canal::pnr::{
     detailed_place, legalize, pack, route, AppGraph, AppOp, Placement, RouterParams, SaParams,
 };
 use canal::util::rng::Rng;
+
+use common::route_check::assert_routing_legal;
 
 /// Random interconnect config within the supported envelope.
 fn random_config(rng: &mut Rng) -> InterconnectConfig {
@@ -164,13 +168,14 @@ fn prop_sa_preserves_legality() {
     }
 }
 
-/// Property: successful routings are node-disjoint and edge-respecting.
+/// Property: successful routings pass the full shared legality suite —
+/// node-disjoint, edge-respecting, connected Steiner subtrees, and
+/// fan-in-ordered mux selects (`common::route_check`).
 #[test]
 fn prop_routes_disjoint_and_valid() {
     let mut rng = Rng::new(0xAB1E);
     let cfg = InterconnectConfig::paper_baseline(8, 8);
     let ic = create_uniform_interconnect(&cfg);
-    let g = ic.graph(16);
     for case in 0..20 {
         let max_nodes = 8 + rng.below(16);
         let app = random_app(&mut rng, max_nodes);
@@ -182,23 +187,7 @@ fn prop_routes_disjoint_and_valid() {
         let Ok(result) = route(&ic, &packed, &placement, 16, &RouterParams::default()) else {
             continue;
         };
-        let mut owner: std::collections::HashMap<NodeId, usize> = Default::default();
-        for (i, tree) in result.trees.iter().enumerate() {
-            for path in &tree.sink_paths {
-                for w in path.windows(2) {
-                    assert!(
-                        g.fan_out(w[0]).contains(&w[1]),
-                        "case {case}: non-edge in route"
-                    );
-                }
-                for &node in path {
-                    if let Some(&j) = owner.get(&node) {
-                        assert_eq!(j, i, "case {case}: node shared across nets {j}/{i}");
-                    }
-                    owner.insert(node, i);
-                }
-            }
-        }
+        assert_routing_legal(&ic, 16, &result, packed.nets().len(), &format!("case {case}"));
     }
 }
 

@@ -1,0 +1,376 @@
+//! Router-variant equivalence suite — the lockdown for the pluggable
+//! search cores and Steiner-tree routing (PR 8).
+//!
+//! The contract under test, from strongest to weakest:
+//!
+//! * **Pure cores are bit-identical.** `bucket` and `radix` are
+//!   execution strategies for the same wavefront: on every random
+//!   fabric × app × flag combination they must reproduce the
+//!   binary-heap router's trees, iteration count, and expansion count
+//!   exactly — and therefore its bitstream, its engine `PointResult`s,
+//!   and its cache keys.
+//! * **Every variant is legal.** `astar`, `bidir`, `slack_order`, and
+//!   independent-sink mode may pick different routes, but whatever they
+//!   produce must pass the full shared legality suite
+//!   (`common::route_check`): every sink reached, connected Steiner
+//!   subtrees, node-disjoint nets, fan-in-ordered mux selects.
+//! * **Flags off means exactly the old router.** The default
+//!   `RouterParams` carries no descriptor tokens, so pre-variant cache
+//!   entries keep answering, and the default engine run is the
+//!   PathFinder baseline bit-for-bit.
+//! * **Slack ordering never loses.** Re-sorting nets by STA slack
+//!   between iterations must not slow convergence in aggregate and must
+//!   keep every fixture's critical path within the warm-start bar.
+//!
+//! Random structure comes from the crate's deterministic RNG (the
+//! layered-DAG generator mirrors `rv_elasticity.rs`), so failures
+//! reproduce from the printed case index.
+
+mod common;
+
+use canal::bitstream::{encode, Configuration};
+use canal::dse::{DseEngine, EngineOptions, SweepSpec};
+use canal::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig, SbTopology};
+use canal::hw::allocate;
+use canal::pnr::{
+    analyze, legalize, pack, route, run_flow, AppGraph, AppNodeId, AppOp, FlowParams,
+    NativePlacer, RouterParams, RoutingResult, SaParams, SearchCore,
+};
+use canal::util::rng::Rng;
+
+use common::route_check::assert_routing_legal;
+
+/// Random layered feed-forward DAG, same shape discipline as the
+/// `rv_elasticity.rs` generator: every vertex feeds forward, compute
+/// vertices always have inputs, the survivor drains to a stream sink.
+/// Register insertion and constant operands vary the net mix; frontier
+/// reuse (the linebuffer branch and pair reduction) produces the
+/// multi-fanout nets the Steiner invariants need.
+fn random_app(seed: u64) -> AppGraph {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9) ^ 0xE1A5_71C0);
+    let mut g = AppGraph::new(&format!("rand{seed}"));
+    let mut uid = 0usize;
+    let fresh = |prefix: &str, uid: &mut usize| {
+        *uid += 1;
+        format!("{prefix}{uid}")
+    };
+
+    let n_inputs = 1 + rng.below(2);
+    let mut pool: Vec<AppNodeId> =
+        (0..n_inputs).map(|i| g.mem(&format!("in{i}"), "stream_in")).collect();
+    // Widen the frontier off the first input so it fans out.
+    if rng.below(2) == 0 {
+        let lb = g.mem(&fresh("lb", &mut uid), "linebuffer");
+        g.wire(pool[0], lb, 0);
+        pool.push(lb);
+    }
+
+    let binary_ops = ["add", "sub", "mul", "max", "min"];
+    let mut layers = 2 + rng.below(3);
+    while pool.len() > 1 || layers > 0 {
+        layers = layers.saturating_sub(1);
+        let mut next = Vec::new();
+        let mut i = 0;
+        while i < pool.len() {
+            let mut a = pool[i];
+            if rng.below(4) == 0 {
+                let r = g.add(&fresh("r", &mut uid), AppOp::Reg);
+                g.wire(a, r, 0);
+                a = r;
+            }
+            if i + 1 < pool.len() {
+                let b = pool[i + 1];
+                let op = binary_ops[rng.below(binary_ops.len())];
+                let v = g.alu(&fresh("v", &mut uid), op);
+                g.wire(a, v, 0);
+                g.wire(b, v, 1);
+                next.push(v);
+                i += 2;
+            } else {
+                let k =
+                    g.add(&fresh("k", &mut uid), AppOp::Const(1 + rng.below(7) as i64));
+                let op = binary_ops[rng.below(binary_ops.len())];
+                let v = g.alu(&fresh("c", &mut uid), op);
+                g.wire(a, v, 0);
+                g.wire(k, v, 1);
+                next.push(v);
+                i += 1;
+            }
+        }
+        pool = next;
+        if pool.len() == 1 && layers == 0 {
+            break;
+        }
+    }
+    let out = g.mem("out", "stream_out");
+    g.wire(pool[0], out, 0);
+    g.check().unwrap_or_else(|e| panic!("random_app({seed}) malformed: {e}"));
+    g
+}
+
+/// Random interconnect over the variant envelope the issue names:
+/// tracks 2–5, all three switch-box topologies, 2–4 connected sides.
+fn random_config(rng: &mut Rng) -> InterconnectConfig {
+    InterconnectConfig {
+        width: 5 + rng.below(2) as u16,
+        height: 5 + rng.below(2) as u16,
+        num_tracks: 2 + rng.below(4) as u16,
+        sb_topology: [SbTopology::Wilton, SbTopology::Disjoint, SbTopology::Imran]
+            [rng.below(3)],
+        sb_core_sides: ConnectedSides(2 + rng.below(3) as u8),
+        cb_core_sides: ConnectedSides(2 + rng.below(3) as u8),
+        mem_column_period: 3,
+        ..Default::default()
+    }
+}
+
+fn trees_identical(a: &RoutingResult, b: &RoutingResult, ctx: &str) {
+    assert_eq!(a.trees.len(), b.trees.len(), "{ctx}: tree count");
+    for (i, (ta, tb)) in a.trees.iter().zip(&b.trees).enumerate() {
+        assert_eq!(ta.sink_paths, tb.sink_paths, "{ctx}: net {i} routed differently");
+    }
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iteration count");
+    assert_eq!(a.nodes_used, b.nodes_used, "{ctx}: nodes used");
+    assert_eq!(a.route_expansions, b.route_expansions, "{ctx}: expansion count");
+}
+
+/// The core property: random fabric × random layered DAG × every
+/// `(search core, steiner, slack_order)` combination. Successful routes
+/// pass the full legality suite; `bucket`/`radix` reproduce the
+/// binary-heap result exactly under every flag setting (including
+/// whether routing succeeds at all).
+#[test]
+fn every_core_and_flag_combination_is_legal_and_pure_cores_are_bit_identical() {
+    let mut rng = Rng::new(0x8_0075);
+    for case in 0..8u64 {
+        let cfg = random_config(&mut rng);
+        let ic = create_uniform_interconnect(&cfg);
+        let packed = pack(&random_app(case + 1)).app;
+        let n = packed.len();
+        let w = cfg.width as f64 - 1.0;
+        let h = cfg.height as f64 - 1.0;
+        let xs: Vec<f32> = (0..n).map(|_| (rng.f64() * w) as f32).collect();
+        let ys: Vec<f32> = (0..n).map(|_| (rng.f64() * h) as f32).collect();
+        let Ok(placement) = legalize(&packed, &ic, &xs, &ys) else { continue };
+
+        for steiner in [true, false] {
+            for slack_order in [true, false] {
+                // Binary-heap first: it is the reference the pure cores
+                // must reproduce under these same flags.
+                let heap = route(
+                    &ic,
+                    &packed,
+                    &placement,
+                    16,
+                    &RouterParams {
+                        search_core: SearchCore::BinaryHeap,
+                        steiner,
+                        slack_order,
+                        ..Default::default()
+                    },
+                );
+                for core in SearchCore::ALL {
+                    let ctx = format!(
+                        "case {case} core={} steiner={steiner} slack={slack_order}",
+                        core.name()
+                    );
+                    let params = RouterParams {
+                        search_core: core,
+                        steiner,
+                        slack_order,
+                        ..Default::default()
+                    };
+                    let result = route(&ic, &packed, &placement, 16, &params);
+                    if let Ok(r) = &result {
+                        assert_routing_legal(&ic, 16, r, packed.nets().len(), &ctx);
+                    }
+                    if !core.changes_results() {
+                        assert_eq!(
+                            result.is_ok(),
+                            heap.is_ok(),
+                            "{ctx}: pure core diverged on routability"
+                        );
+                        if let (Ok(r), Ok(hr)) = (&result, &heap) {
+                            trees_identical(r, hr, &ctx);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Bitstream-level identity for the pure cores on a real app: the
+/// encoded text a `bucket` or `radix` route produces is byte-for-byte
+/// the binary-heap bitstream. (Tree identity implies this, but the
+/// bitstream is the artifact that leaves the toolchain — lock it
+/// directly.)
+#[test]
+fn flags_off_bitstream_is_bit_identical_across_pure_cores() {
+    let ic = create_uniform_interconnect(&InterconnectConfig::paper_baseline(8, 8));
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let flow = run_flow(&ic, &canal::apps::gaussian(), &params).expect("baseline flow");
+    let cs = allocate(&ic);
+    let bitstream_of = |core: SearchCore| -> String {
+        let r = route(
+            &ic,
+            &flow.packed.app,
+            &flow.placement,
+            16,
+            &RouterParams { search_core: core, ..Default::default() },
+        )
+        .unwrap_or_else(|e| panic!("{}: {e:?}", core.name()));
+        let config = Configuration::from_routing(&ic, 16, &r).expect("legal routing encodes");
+        encode(&config, &cs).to_text()
+    };
+    let reference = bitstream_of(SearchCore::BinaryHeap);
+    assert!(!reference.is_empty());
+    for core in [SearchCore::Bucket, SearchCore::Radix] {
+        assert_eq!(
+            bitstream_of(core),
+            reference,
+            "{} bitstream must be bit-identical to binary-heap",
+            core.name()
+        );
+    }
+}
+
+/// Engine-level identity: a sweep run with `bucket`/`radix` produces
+/// the same `JobKey`s (the descriptor must not fork — pre-variant cache
+/// entries keep answering) and f64-bit-identical `PointResult`s as the
+/// default run, with the same total `route_expansions`. `astar` forks
+/// every key with an ` rcore=astar` token.
+#[test]
+fn flags_off_engine_points_are_bit_identical_and_share_cache_keys() {
+    let spec_with = |core: SearchCore| SweepSpec {
+        name: "router-variants".into(),
+        base: InterconnectConfig { mem_column_period: 3, ..Default::default() },
+        tracks: vec![3, 4],
+        apps: vec!["pointwise".into(), "gaussian".into()],
+        seeds: vec![1, 2],
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            router: RouterParams { search_core: core, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let run = |core: SearchCore| {
+        let mut engine =
+            DseEngine::new(EngineOptions { workers: 2, cache_path: None, warm_start: false })
+                .expect("engine");
+        engine.run(&spec_with(core), &NativePlacer::default()).expect("sweep")
+    };
+
+    let default_run = run(SearchCore::BinaryHeap);
+    assert_eq!(default_run.points.len(), 8);
+    assert!(default_run.stats.route_expansions > 0, "expansion counter is live");
+    for (job, _) in &default_run.points {
+        for tok in ["rcore=", "rorder=", "rsinks="] {
+            assert!(
+                !job.key.config.0.contains(tok),
+                "default descriptor must carry no variant tokens: {}",
+                job.key.config.0
+            );
+        }
+    }
+
+    for core in [SearchCore::Bucket, SearchCore::Radix] {
+        let variant = run(core);
+        assert_eq!(variant.points.len(), default_run.points.len());
+        assert_eq!(
+            variant.stats.route_expansions, default_run.stats.route_expansions,
+            "{}: pure core changed the search effort",
+            core.name()
+        );
+        for ((ja, ra), (jb, rb)) in default_run.points.iter().zip(&variant.points) {
+            assert_eq!(ja.key, jb.key, "{}: cache key forked", core.name());
+            assert_eq!(ra, rb, "{} {:?}", core.name(), ja.key);
+            assert_eq!(ra.runtime_ns.to_bits(), rb.runtime_ns.to_bits());
+            assert_eq!(ra.critical_path_ps.to_bits(), rb.critical_path_ps.to_bits());
+        }
+    }
+
+    let astar = run(SearchCore::AStar);
+    for ((ja, _), (jb, _)) in default_run.points.iter().zip(&astar.points) {
+        assert!(
+            jb.key.config.0.contains(" rcore=astar"),
+            "astar must fork the cache key: {}",
+            jb.key.config.0
+        );
+        assert_ne!(ja.key.config, jb.key.config);
+    }
+}
+
+/// Slack-ordering golden regression. Ordering is only re-sorted *after*
+/// an unresolved iteration, so on fixtures that route congestion-free in
+/// one pass the flag must change nothing at all (checked bit-for-bit);
+/// across the whole fixture family — sized to include congested points —
+/// it must not slow aggregate convergence, and per fixture the critical
+/// path stays within the warm-start 5% bar.
+#[test]
+fn slack_ordering_converges_no_slower_and_preserves_critical_path() {
+    let fixtures: &[(&str, u16)] =
+        &[("harris", 3), ("harris", 4), ("gaussian", 2), ("gaussian", 3), ("pointwise", 2)];
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let mut routed = 0usize;
+    let mut iters_default = 0usize;
+    let mut iters_slack = 0usize;
+    for &(name, tracks) in fixtures {
+        let cfg = InterconnectConfig {
+            num_tracks: tracks,
+            ..InterconnectConfig::paper_baseline(8, 8)
+        };
+        let ic = create_uniform_interconnect(&cfg);
+        let app = match name {
+            "harris" => canal::apps::harris(),
+            "gaussian" => canal::apps::gaussian(),
+            _ => canal::apps::pointwise(8),
+        };
+        // One placement per fixture; both orderings route the same one.
+        let Ok(flow) = run_flow(&ic, &app, &params) else { continue };
+        let base = route(&ic, &flow.packed.app, &flow.placement, 16, &RouterParams::default())
+            .expect("default router succeeded inside run_flow");
+        let slack = route(
+            &ic,
+            &flow.packed.app,
+            &flow.placement,
+            16,
+            &RouterParams { slack_order: true, ..Default::default() },
+        )
+        .unwrap_or_else(|e| panic!("{name}@{tracks}: slack ordering broke a routable fixture: {e:?}"));
+        assert_routing_legal(
+            &ic,
+            16,
+            &slack,
+            flow.packed.app.nets().len(),
+            &format!("{name}@{tracks} slack"),
+        );
+
+        if base.iterations == 1 {
+            // No negotiation happened, so the re-sort never ran: the
+            // flag must be a bit-level no-op here.
+            trees_identical(&slack, &base, &format!("{name}@{tracks} uncongested"));
+        }
+        let cp_base = analyze(&ic, &flow.packed, &base, 16, 256).critical_path_ps;
+        let cp_slack = analyze(&ic, &flow.packed, &slack, 16, 256).critical_path_ps;
+        assert!(
+            cp_slack <= cp_base * 1.05,
+            "{name}@{tracks}: slack ordering worsened STA: {cp_slack} vs {cp_base}"
+        );
+        routed += 1;
+        iters_default += base.iterations;
+        iters_slack += slack.iterations;
+    }
+    assert!(routed >= 2, "fixture family collapsed — widen it");
+    assert!(
+        iters_slack <= iters_default,
+        "slack ordering slowed aggregate convergence: {iters_slack} vs {iters_default}"
+    );
+}

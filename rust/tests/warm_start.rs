@@ -2,19 +2,26 @@
 //! neighbor pairs of interconnect configurations — tracks ±1, or one
 //! connected side toggled — a point warm-started from its neighbor's
 //! artifacts must always produce a *legal* result: placement passes
-//! `Placement::check`, every net routes, routed trees are node-disjoint,
-//! and the reuse counters account for every net exactly once.
+//! `Placement::check`, routing passes the shared legality suite
+//! (`common::route_check`), and the reuse counters account for every
+//! net exactly once. A second test locks down the Steiner-artifact
+//! replay contract: multi-fanout trees round-trip through the
+//! `PnrArtifactCache` token encoding and replay verbatim.
 //!
 //! The pair generator is a fixed-seed LCG, so the "random" pairs are
 //! reproducible; no external proptest crate is involved.
 
-use std::collections::HashMap;
+mod common;
 
 use canal::apps;
-use canal::dse::{encode_node, PnrArtifact};
+use canal::dse::{encode_node, JobKey, PnrArtifact, PnrArtifactCache};
+use canal::dse::{ConfigDescriptor, SeedMode};
 use canal::dsl::{create_uniform_interconnect, ConnectedSides, InterconnectConfig};
-use canal::ir::{Interconnect, NodeId};
+use canal::ir::Interconnect;
 use canal::pnr::{run_flow, run_flow_warm, FlowParams, FlowResult, RouterScratch, SaParams, WarmSeed};
+use canal::sim::FabricKind;
+
+use common::route_check::assert_routing_legal;
 
 /// Deterministic 64-bit LCG (Knuth's MMIX constants); top bits only.
 fn next(state: &mut u64) -> u64 {
@@ -104,47 +111,118 @@ fn random_neighbor_pairs_warm_start_to_legal_disjoint_routing() {
             .check(&flow.packed.app, &target_ic)
             .unwrap_or_else(|e| panic!("trial {trial}: illegal warm placement: {e}"));
 
-        // Every net routed; reuse counters account for each exactly once.
-        assert_eq!(flow.routing.trees.len(), flow.packed.app.nets().len(), "trial {trial}");
+        // Reuse counters account for each net exactly once.
         assert_eq!(
             reuse.nets_reused + reuse.nets_rerouted,
             flow.routing.trees.len(),
             "trial {trial}: every net is either reused or rerouted"
         );
 
-        // Node-disjoint routing: no routing-graph node serves two nets.
-        let mut owner: HashMap<NodeId, usize> = HashMap::new();
-        for (ni, tree) in flow.routing.trees.iter().enumerate() {
-            assert!(!tree.sink_paths.is_empty(), "trial {trial}: net {ni} has no paths");
-            for n in tree.nodes() {
-                match owner.get(&n) {
-                    Some(&other) => panic!(
-                        "trial {trial}: node {n:?} shared by nets {other} and {ni} \
-                         ({} -> {})",
-                        donor_ic.descriptor, target_ic.descriptor
-                    ),
-                    None => {
-                        owner.insert(n, ni);
-                    }
-                }
-            }
-        }
-
-        // Every path's edges must exist in the target graph (the donor
+        // Full shared legality suite against the TARGET graph (the donor
         // trees came from a *different* graph — replay must never smuggle
         // in an edge the target fabric doesn't have).
-        let g = target_ic.graph(16);
-        for tree in &flow.routing.trees {
-            for path in &tree.sink_paths {
-                for w in path.windows(2) {
-                    assert!(
-                        g.fan_out(w[0]).contains(&w[1]),
-                        "trial {trial}: edge {:?} -> {:?} absent from target graph",
-                        w[0],
-                        w[1]
-                    );
-                }
-            }
-        }
+        assert_routing_legal(
+            &target_ic,
+            16,
+            &flow.routing,
+            flow.packed.app.nets().len(),
+            &format!(
+                "trial {trial} ({} -> {})",
+                donor_ic.descriptor, target_ic.descriptor
+            ),
+        );
     }
+}
+
+/// The Steiner-artifact replay contract: a multi-fanout flow's routed
+/// trees survive the `PnrArtifactCache` round-trip (struct → JSON text →
+/// struct → token resolution) byte-for-byte, and warm-starting the SAME
+/// configuration from them replays every tree verbatim — zero router
+/// iterations, zero search expansions, `nets_reused == nets`. Corrupting
+/// one net's seed flips exactly that net into `nets_rerouted` while the
+/// result stays legal.
+#[test]
+fn steiner_artifacts_roundtrip_and_replay_verbatim() {
+    let params = FlowParams {
+        sa: SaParams { moves_per_node: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let cfg = InterconnectConfig {
+        width: 6,
+        height: 6,
+        num_tracks: 4,
+        mem_column_period: 3,
+        ..Default::default()
+    };
+    let ic = create_uniform_interconnect(&cfg);
+    let app = apps::gaussian();
+    let mut scratch = RouterScratch::new();
+
+    let flow = run_flow(&ic, &app, &params).expect("cold flow");
+    let fanout = flow
+        .routing
+        .trees
+        .iter()
+        .filter(|t| t.net.sinks.len() > 1)
+        .count();
+    assert!(fanout > 0, "fixture must exercise multi-fanout Steiner trees");
+    let art = artifact_of(&ic, &flow);
+
+    // Round-trip through the artifact cache's JSON encoding, exactly as
+    // a persisted sweep would.
+    let key = JobKey {
+        config: ConfigDescriptor::of(&cfg, &params, "native-gd", SeedMode::Raw, FabricKind::Static),
+        app: "gaussian".into(),
+        seed: 1,
+    };
+    let store = PnrArtifactCache::in_memory();
+    store.insert(key.clone(), art.clone());
+    let reloaded = PnrArtifactCache::in_memory();
+    reloaded.load_json(&store.to_json()).expect("artifact JSON round-trip");
+    let back = reloaded.get(&key).expect("entry survives the round-trip");
+    assert_eq!(*back, art, "token encoding must be lossless");
+
+    // Verbatim replay on the same fabric: every tree reused, the router
+    // never iterates, the search cores never pop a node.
+    let net_paths = back.resolve(ic.graph(16));
+    assert!(
+        net_paths.iter().all(Option::is_some),
+        "every token resolves on the graph it came from"
+    );
+    let seed = WarmSeed { placement: &back.placement, net_paths };
+    let (warm, reuse) =
+        run_flow_warm(&ic, &app, &params, &seed, &mut scratch).expect("warm flow");
+    assert_eq!(reuse.nets_reused, warm.routing.trees.len(), "all nets replay");
+    assert_eq!(reuse.nets_rerouted, 0);
+    assert_eq!(warm.routing.iterations, 0, "verbatim replay skips PathFinder");
+    assert_eq!(warm.routing.route_expansions, 0, "verbatim replay searches nothing");
+    for (a, b) in warm.routing.trees.iter().zip(&flow.routing.trees) {
+        assert_eq!(a.sink_paths, b.sink_paths, "replayed tree differs from donor");
+    }
+    assert_routing_legal(&ic, 16, &warm.routing, warm.packed.app.nets().len(), "replay");
+
+    // Corrupt the largest multi-fanout net's seed: that net (and only
+    // that net) must fall into the rerouted bucket, and the result must
+    // still pass the full legality suite.
+    let (victim, _) = flow
+        .routing
+        .trees
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, t)| t.net.sinks.len())
+        .expect("at least one net");
+    let mut net_paths = back.resolve(ic.graph(16));
+    net_paths[victim] = None;
+    let seed = WarmSeed { placement: &back.placement, net_paths };
+    let (warm, reuse) =
+        run_flow_warm(&ic, &app, &params, &seed, &mut scratch).expect("warm flow after corruption");
+    assert_eq!(
+        reuse.nets_reused + reuse.nets_rerouted,
+        warm.routing.trees.len(),
+        "accounting stays exact under corruption"
+    );
+    assert!(reuse.nets_rerouted >= 1, "the voided net was rerouted");
+    assert!(reuse.nets_reused > 0, "intact seeds still replay");
+    assert!(warm.routing.route_expansions > 0, "rerouting the victim costs expansions");
+    assert_routing_legal(&ic, 16, &warm.routing, warm.packed.app.nets().len(), "corrupted seed");
 }
