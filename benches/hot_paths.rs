@@ -361,6 +361,122 @@ fn main() {
             overhead_pct < 5.0,
             "observability overhead {overhead_pct:.1}% blows the 5% budget"
         );
+
+        // Tuned search vs full enumeration: `canal tune` walks the same
+        // space as the exhaustive sweep but prunes on a cheap area/delay
+        // model and drops dominated candidates between seed rounds, so
+        // it must recover the exact Pareto frontier with strictly fewer
+        // cold evaluations than the cross-product.
+        {
+            use canal::area::{area_of, AreaModel};
+            use canal::dse::{
+                objectives_of, pareto_frontier, run_tune, BuildFresh, ParetoArchive,
+                ParetoEntry, TuneOptions,
+            };
+            let tune_spec = SweepSpec {
+                name: "bench_tune".into(),
+                base: InterconnectConfig {
+                    width: 4,
+                    height: 4,
+                    mem_column_period: 3,
+                    ..Default::default()
+                },
+                tracks: vec![2, 3, 4],
+                apps: vec!["pointwise4".into()],
+                seeds: vec![1, 2],
+                flow: canal::pnr::FlowParams {
+                    sa: SaParams { moves_per_node: 4, ..Default::default() },
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let placer = NativePlacer::default();
+            let mut archive = ParetoArchive::in_memory();
+            let mut engine_t = DseEngine::in_memory();
+            let t0 = std::time::Instant::now();
+            let tuned = run_tune(
+                &tune_spec,
+                placer.name(),
+                &BuildFresh,
+                &mut archive,
+                &TuneOptions::default(),
+                &mut |s| engine_t.run(s, &placer),
+            )
+            .unwrap();
+            let tuned_s = t0.elapsed().as_secs_f64();
+            let mut engine_full = DseEngine::in_memory();
+            let t0 = std::time::Instant::now();
+            let full = engine_full.run(&tune_spec, &placer).unwrap();
+            let full_s = t0.elapsed().as_secs_f64();
+            println!(
+                "dse tuned search ({} evals, {} pnr runs) {:.3}s vs \
+                 full sweep ({} points, {} pnr runs) {:.3}s",
+                tuned.evaluated,
+                tuned.stats.pnr_runs,
+                tuned_s,
+                full.points.len(),
+                full.stats.pnr_runs,
+                full_s
+            );
+            assert!(
+                tuned.evaluated < tuned.cross_product,
+                "tuned search must beat enumeration: {} evals vs {} cross-product",
+                tuned.evaluated,
+                tuned.cross_product
+            );
+
+            // Fold the full sweep into the exhaustive reference frontier
+            // with the same area model and objective extraction the
+            // tuner uses, then demand exact agreement.
+            let model = AreaModel::default();
+            let mut areas: std::collections::HashMap<String, f64> = Default::default();
+            let mut agg: std::collections::BTreeMap<(String, String), ParetoEntry> =
+                Default::default();
+            for (job, r) in &full.points {
+                // Keyed by the FULL descriptor: area depends on the
+                // fabric mode too, and the descriptor is the only
+                // string that carries both.
+                let area = *areas.entry(job.key.config.0.clone()).or_insert_with(|| {
+                    let ic = create_uniform_interconnect(&job.cfg);
+                    area_of(&ic, &model, job.fabric.area_mode()).interior_tile(&ic).total()
+                });
+                let o = objectives_of(r, area);
+                let key = (job.key.config.0.clone(), job.key.app.clone());
+                match agg.get_mut(&key) {
+                    Some(e) => {
+                        e.objectives.fold(&o);
+                        if let Err(at) = e.seeds.binary_search(&job.key.seed) {
+                            e.seeds.insert(at, job.key.seed);
+                        }
+                    }
+                    None => {
+                        agg.insert(
+                            key,
+                            ParetoEntry {
+                                config: job.key.config.0.clone(),
+                                app: job.key.app.clone(),
+                                fabric: job.fabric.label(),
+                                objectives: o,
+                                seeds: vec![job.key.seed],
+                            },
+                        );
+                    }
+                }
+            }
+            let entries: Vec<ParetoEntry> =
+                agg.into_values().filter(|e| e.objectives.is_finite()).collect();
+            let reference = pareto_frontier(&entries);
+            assert_eq!(
+                tuned.frontier, reference,
+                "tuned frontier must equal the exhaustive sweep's frontier"
+            );
+            println!(
+                "dse tune frontier: {} entries, searched {} of {} cross-product",
+                tuned.frontier.len(),
+                tuned.evaluated,
+                tuned.cross_product
+            );
+        }
     }
 
     // --- L2/L1: global placement backends ---------------------------------

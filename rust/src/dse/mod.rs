@@ -51,11 +51,23 @@
 //! so each group runs right after its best donor. See
 //! `docs/dse.md § Incremental PnR`.
 
+//!
+//! Search, not enumeration (`canal tune`): [`run_tune`] (in [`tune`])
+//! finds the (area × period × throughput) Pareto frontier of a spec
+//! without visiting the cross-product — cheap-model pre-pruning (exact
+//! area + a wire-delay period lower bound, no PnR), successive halving
+//! across seeds with NaN-safe strict-dominance checks, and a persisted
+//! [`ParetoArchive`] whose incumbents re-anchor future searches. Every
+//! real evaluation is a one-candidate spec through the machinery above,
+//! so the cache keys line up and revisited points are free. See
+//! `docs/tune.md`.
+
 pub mod artifacts;
 pub mod cache;
 pub mod exec;
 pub mod report;
 pub mod spec;
+pub mod tune;
 
 pub use artifacts::{
     artifact_path_for, decode_node, encode_node, PnrArtifact, PnrArtifactCache, ARTIFACT_VERSION,
@@ -73,4 +85,9 @@ pub use report::{
 pub use spec::{
     app_by_name, dense_suite_keys, registry_keys, suite_keys, AreaPoint, AxisDelta, AxisTokens,
     ConfigDescriptor, Job, JobKey, PointResult, SeedMode, Sizing, SweepSpec, MAX_DONOR_DISTANCE,
+};
+pub use tune::{
+    archive_path_for, dominates, frontier_table, objectives_of, pareto_frontier,
+    period_lower_bound_ps, run_tune, tune_json, ArchiveKey, Objectives, ParetoArchive,
+    ParetoEntry, TuneOptions, TuneOutcome, TUNE_VERSION,
 };

@@ -32,14 +32,19 @@ pub fn points_table(outcome: &SweepOutcome) -> Table {
     );
     for (job, r) in &outcome.points {
         let dash = || "-".to_string();
+        // Metric cells gate on `has_finite_metrics`, not `routed`: a
+        // routed point loaded from a warm cache can carry NaN metrics
+        // (JSON `null` round trip) and must render as data-less rather
+        // than printing "NaN".
+        let finite = r.has_finite_metrics();
         t.row(vec![
             short_config(&job.cfg),
             job.fabric.label(),
             job.app_name.clone(),
             job.key.seed.to_string(),
             if r.routed { "yes".into() } else { "no".into() },
-            if r.routed { fmt(r.runtime_us()) } else { dash() },
-            if r.routed { fmt(r.critical_path_ps) } else { dash() },
+            if finite { fmt(r.runtime_us()) } else { dash() },
+            if finite { fmt(r.critical_path_ps) } else { dash() },
             if r.sim_cycles > 0 { format!("{:.3}", r.throughput()) } else { dash() },
             r.iterations.to_string(),
         ]);

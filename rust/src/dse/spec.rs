@@ -340,6 +340,24 @@ impl PointResult {
         self.runtime_ns / 1000.0
     }
 
+    /// Did this point route *and* carry finite timing metrics?
+    ///
+    /// `Json::num_f64` writes non-finite floats as `null` and the cache
+    /// and wire decoders read `null` back as NaN (see
+    /// [`super::cache`], `service/proto.rs`), so a routed point loaded
+    /// from a warm cache can legally carry NaN metrics. Every consumer
+    /// that sorts, mins, or dominance-compares point metrics must gate
+    /// on this instead of `routed` alone — NaN poisons `partial_cmp`
+    /// orderings silently (it is unequal to everything, so a NaN point
+    /// can "win" or "lose" a comparison depending on operand order).
+    pub fn has_finite_metrics(&self) -> bool {
+        self.routed
+            && self.critical_path_ps.is_finite()
+            && self.period_ps.is_finite()
+            && self.runtime_ns.is_finite()
+            && self.alpha.is_finite()
+    }
+
     /// Sustained tokens/cycle of the elastic simulation (0 when the
     /// point carries no simulation data).
     pub fn throughput(&self) -> f64 {

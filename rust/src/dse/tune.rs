@@ -1,0 +1,939 @@
+//! `canal tune`: a multi-objective Pareto autotuner over the cached DSE
+//! engine — search, not enumeration (see `docs/tune.md`).
+//!
+//! The tuner finds the (area × critical-path period × simulated
+//! throughput) Pareto frontier of a [`SweepSpec`]'s design space without
+//! visiting the full cross-product:
+//!
+//! 1. **Cheap-model pre-pruning.** Every candidate is scored before any
+//!    PnR with the *exact* interior-tile area (the area model never needs
+//!    a placement) and a wire-delay lower bound on the achievable period
+//!    read off the frozen [`crate::ir::CompiledGraph`]
+//!    ([`period_lower_bound_ps`]). A candidate is discarded only when a
+//!    same-app rival is strictly better on *both* cheap scores — a
+//!    conservative heuristic: under a shared delay model the delay bound
+//!    is constant across axis values, so pruning engages only where the
+//!    candidate space actually varies the delay landscape.
+//! 2. **Successive halving across seeds.** Seeds are spent one round at
+//!    a time; after each round a candidate is dropped when another
+//!    survivor's aggregate (or an archive incumbent) strictly dominates
+//!    its own. Every real evaluation is a one-candidate [`SweepSpec`]
+//!    routed through the caller's evaluator — the engine's
+//!    `ResultCache`/coalescing/warm-start machinery — and reproduces the
+//!    candidate's exact [`ConfigDescriptor`], so revisited points are
+//!    free and pre-tuner caches stay warm.
+//! 3. **A persisted Pareto archive.** Routed aggregates merge into a
+//!    versioned, atomically-written [`ParetoArchive`]
+//!    (`pareto_archive.json`); the archive is pruned to its own frontier
+//!    and its incumbents join the next search's dominance checks, so the
+//!    tuner gets monotonically cheaper per session.
+//!
+//! Determinism: candidates, rounds, and dominance checks all iterate
+//! BTree-ordered state and consume results in the spec's canonical
+//! order, so for a fixed cache temperature the archive bytes are
+//! identical across worker counts (asserted in `tests/tune.rs`).
+//!
+//! NaN discipline: unroutable points — including routed points whose
+//! metrics round-tripped through JSON `null` as NaN (see
+//! [`PointResult::has_finite_metrics`]) — never dominate anything and
+//! never enter the archive; any finite same-app rival dominates them.
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::area::{area_of, AreaModel};
+use crate::ir::Interconnect;
+use crate::obs;
+use crate::obs::span::names as spans;
+use crate::sim::FabricKind;
+use crate::util::json::Json;
+
+use super::exec::{EngineStats, InterconnectSource, SweepOutcome};
+use super::spec::{ConfigDescriptor, PointResult, Sizing, SweepSpec};
+
+/// Archive file schema version.
+pub const TUNE_VERSION: u64 = 1;
+
+/// One point in objective space: minimize `area_um2` and `period_ps`,
+/// maximize `throughput`. Non-finite values mean "unroutable" (or
+/// metrics lost to a JSON `null` round trip) — see [`dominates`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    /// Interior-tile interconnect area (µm²) under the entry's fabric
+    /// mode — exact, placement-independent.
+    pub area_um2: f64,
+    /// Best (minimum) achieved clock period over the evaluated seeds.
+    pub period_ps: f64,
+    /// Best (maximum) simulated tokens/cycle over the evaluated seeds.
+    pub throughput: f64,
+}
+
+impl Objectives {
+    pub fn is_finite(&self) -> bool {
+        self.area_um2.is_finite() && self.period_ps.is_finite() && self.throughput.is_finite()
+    }
+
+    /// The unroutable sentinel: dominated by every finite point,
+    /// dominating nothing.
+    pub fn unroutable() -> Objectives {
+        Objectives { area_um2: f64::NAN, period_ps: f64::NAN, throughput: f64::NAN }
+    }
+
+    /// Fold one evaluated seed into the aggregate: area is
+    /// seed-independent, period takes the min, throughput the max. A
+    /// non-finite aggregate is replaced outright by a finite point (one
+    /// routable seed makes the candidate routable); a non-finite point
+    /// leaves a finite aggregate untouched.
+    pub fn fold(&mut self, other: &Objectives) {
+        if !other.is_finite() {
+            return;
+        }
+        if !self.is_finite() {
+            *self = *other;
+            return;
+        }
+        self.period_ps = self.period_ps.min(other.period_ps);
+        self.throughput = self.throughput.max(other.throughput);
+    }
+}
+
+/// Strict Pareto dominance, NaN-safe by construction: `a` dominates `b`
+/// iff `a` is finite and either `b` is not (routable beats unroutable)
+/// or `a` is no worse on every objective and strictly better on at
+/// least one. A non-finite `a` dominates nothing — NaN can never
+/// silently "win" a comparison — and `dominates(x, x)` is always false,
+/// so ties survive to the frontier. Comparisons go through `total_cmp`,
+/// never `partial_cmp(..).unwrap()`.
+pub fn dominates(a: &Objectives, b: &Objectives) -> bool {
+    use std::cmp::Ordering::{Greater, Less};
+    if !a.is_finite() {
+        return false;
+    }
+    if !b.is_finite() {
+        return true;
+    }
+    let le = |x: f64, y: f64| x.total_cmp(&y) != Greater;
+    let ge = |x: f64, y: f64| x.total_cmp(&y) != Less;
+    let no_worse = le(a.area_um2, b.area_um2)
+        && le(a.period_ps, b.period_ps)
+        && ge(a.throughput, b.throughput);
+    let better = a.area_um2.total_cmp(&b.area_um2) == Less
+        || a.period_ps.total_cmp(&b.period_ps) == Less
+        || a.throughput.total_cmp(&b.throughput) == Greater;
+    no_worse && better
+}
+
+/// Archive key: one entry per (full config descriptor, app registry
+/// key). Dominance is only meaningful within one app.
+#[derive(Clone, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub struct ArchiveKey {
+    pub config: String,
+    pub app: String,
+}
+
+/// One archived frontier point: a routed (config, app) aggregate.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParetoEntry {
+    /// Full [`ConfigDescriptor`] string of the point.
+    pub config: String,
+    /// App registry key.
+    pub app: String,
+    /// [`FabricKind::label`] of the point's fabric.
+    pub fabric: String,
+    pub objectives: Objectives,
+    /// Logical seeds folded into the aggregate, sorted ascending.
+    pub seeds: Vec<u64>,
+}
+
+impl ParetoEntry {
+    fn key(&self) -> ArchiveKey {
+        ArchiveKey { config: self.config.clone(), app: self.app.clone() }
+    }
+
+    /// Merge a newer aggregate for the same key: period min, throughput
+    /// max, seed union; area comes from the newer entry (the model is a
+    /// pure function of the config, so they agree anyway).
+    fn merge(&mut self, other: &ParetoEntry) {
+        self.objectives.area_um2 = other.objectives.area_um2;
+        self.objectives.fold(&other.objectives);
+        for &s in &other.seeds {
+            if let Err(at) = self.seeds.binary_search(&s) {
+                self.seeds.insert(at, s);
+            }
+        }
+    }
+}
+
+/// Per-app strict-dominance filter: the entries no other same-app entry
+/// [`dominates`], in input order. Ties (equal objectives on distinct
+/// configs) all survive — the exhaustive and tuned searches must agree
+/// on exactly this set.
+pub fn pareto_frontier(entries: &[ParetoEntry]) -> Vec<ParetoEntry> {
+    entries
+        .iter()
+        .filter(|e| {
+            !entries
+                .iter()
+                .any(|o| o.app == e.app && dominates(&o.objectives, &e.objectives))
+        })
+        .cloned()
+        .collect()
+}
+
+/// Sibling path for the archive: `dse_cache.json` →
+/// `dse_cache_pareto.json` (same convention as
+/// [`super::artifacts::artifact_path_for`]).
+pub fn archive_path_for(cache: &Path) -> PathBuf {
+    let stem = cache.file_stem().and_then(|s| s.to_str()).unwrap_or("dse_cache");
+    cache.with_file_name(format!("{stem}_pareto.json"))
+}
+
+/// Persisted Pareto archive, optionally backed by a JSON file.
+/// BTree-ordered, so [`Self::to_json`] is byte-stable; writes go through
+/// the shared atomic temp-file + rename path.
+#[derive(Default)]
+pub struct ParetoArchive {
+    path: Option<PathBuf>,
+    map: BTreeMap<ArchiveKey, ParetoEntry>,
+}
+
+impl ParetoArchive {
+    /// Unbacked archive (lives for one search only).
+    pub fn in_memory() -> ParetoArchive {
+        ParetoArchive::default()
+    }
+
+    /// Archive backed by `path` — same contract as
+    /// [`super::ResultCache::at`]: missing file = empty archive (created
+    /// immediately, so an unwritable path fails before any PnR is
+    /// spent), corrupt file = loud error.
+    pub fn at(path: &Path) -> Result<ParetoArchive, String> {
+        let mut archive =
+            ParetoArchive { path: Some(path.to_path_buf()), map: BTreeMap::new() };
+        match std::fs::read_to_string(path) {
+            Ok(text) => {
+                archive.load_json(&text).map_err(|e| format!("{}: {e}", path.display()))?
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => archive.save()?,
+            Err(e) => return Err(format!("{}: {e}", path.display())),
+        }
+        Ok(archive)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    /// Entries in key order.
+    pub fn entries(&self) -> impl Iterator<Item = &ParetoEntry> {
+        self.map.values()
+    }
+
+    /// Merge one routed aggregate in (period min / throughput max / seed
+    /// union on an existing key). Non-finite entries are rejected — the
+    /// archive holds frontier candidates, never NaN.
+    pub fn merge(&mut self, entry: ParetoEntry) {
+        if !entry.objectives.is_finite() {
+            return;
+        }
+        match self.map.get_mut(&entry.key()) {
+            Some(have) => have.merge(&entry),
+            None => {
+                self.map.insert(entry.key(), entry);
+            }
+        }
+    }
+
+    /// Drop every entry another same-app entry strictly dominates,
+    /// keeping the archive exactly its own Pareto frontier.
+    pub fn prune_to_frontier(&mut self) {
+        let all: Vec<ParetoEntry> = self.map.values().cloned().collect();
+        let keep = pareto_frontier(&all);
+        self.map = keep.into_iter().map(|e| (e.key(), e)).collect();
+    }
+
+    /// Merge entries from archive-file text.
+    pub fn load_json(&mut self, text: &str) -> Result<(), String> {
+        let doc = Json::parse(text)?;
+        let version = doc.get("version").and_then(Json::as_u64).ok_or("missing version")?;
+        if version != TUNE_VERSION {
+            return Err(format!("unsupported archive version {version}"));
+        }
+        let entries = doc.get("entries").and_then(Json::as_arr).ok_or("missing entries")?;
+        for (i, entry) in entries.iter().enumerate() {
+            let e = entry_from_json(entry).map_err(|e| format!("entry {i}: {e}"))?;
+            self.map.insert(e.key(), e);
+        }
+        Ok(())
+    }
+
+    /// Full archive as JSON text (entries in key order — stable, so a
+    /// load → save cycle is byte-identical).
+    pub fn to_json(&self) -> String {
+        let entries: Vec<Json> = self.map.values().map(entry_json).collect();
+        Json::Obj(vec![
+            ("version".into(), Json::num_u64(TUNE_VERSION)),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+        .render()
+    }
+
+    /// Persist to the backing file (no-op for in-memory archives).
+    pub fn save(&self) -> Result<(), String> {
+        match &self.path {
+            Some(path) => self.save_to(path),
+            None => Ok(()),
+        }
+    }
+
+    pub fn save_to(&self, path: &Path) -> Result<(), String> {
+        super::cache::atomic_write(path, &self.to_json())
+    }
+}
+
+fn entry_json(e: &ParetoEntry) -> Json {
+    Json::Obj(vec![
+        ("config".into(), Json::str(&e.config)),
+        ("app".into(), Json::str(&e.app)),
+        ("fabric".into(), Json::str(&e.fabric)),
+        ("area_um2".into(), Json::num_f64(e.objectives.area_um2)),
+        ("period_ps".into(), Json::num_f64(e.objectives.period_ps)),
+        ("throughput".into(), Json::num_f64(e.objectives.throughput)),
+        ("seeds".into(), Json::Arr(e.seeds.iter().map(|&s| Json::num_u64(s)).collect())),
+    ])
+}
+
+fn entry_from_json(v: &Json) -> Result<ParetoEntry, String> {
+    let str_field = |k: &str| -> Result<String, String> {
+        v.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("missing `{k}`"))
+    };
+    // Unlike the result cache, the archive never holds NaN: a `null`
+    // (non-finite) objective in the file is corruption, not data.
+    let f64_field = |k: &str| -> Result<f64, String> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .filter(|x| x.is_finite())
+            .ok_or_else(|| format!("bad `{k}`"))
+    };
+    let seeds: Vec<u64> = v
+        .get("seeds")
+        .and_then(Json::as_arr)
+        .ok_or("missing `seeds`")?
+        .iter()
+        .map(|s| s.as_u64().ok_or_else(|| "bad seed".to_string()))
+        .collect::<Result<_, _>>()?;
+    Ok(ParetoEntry {
+        config: str_field("config")?,
+        app: str_field("app")?,
+        fabric: str_field("fabric")?,
+        objectives: Objectives {
+            area_um2: f64_field("area_um2")?,
+            period_ps: f64_field("period_ps")?,
+            throughput: f64_field("throughput")?,
+        },
+        seeds,
+    })
+}
+
+/// A wire-delay lower bound (ps) on any achievable clock period of the
+/// frozen graph: every routed net must leave some driving core port
+/// through one of its fan-out hops, so the cheapest port-adjacent hop —
+/// `min` over ported mux inputs of `node_delay(port) + wire_delay +
+/// node_delay(driver)` — bounds the critical path from below. Exact
+/// enough to separate delay-model variants, constant across track/
+/// topology counts under one model (every candidate shares the same
+/// cheapest hop), and free: one linear scan of the CSR arrays, no PnR.
+pub fn period_lower_bound_ps(ic: &Interconnect, bit_width: u8) -> f64 {
+    let g = ic.compiled(bit_width);
+    let mut best: Option<u64> = None;
+    for id in g.ids() {
+        if !g.is_port(id) {
+            continue;
+        }
+        let sources = g.fan_in(id);
+        if sources.is_empty() {
+            continue;
+        }
+        let own = g.node_delay_ps(id) as u64;
+        for (i, &src) in sources.iter().enumerate() {
+            let hop = own + g.in_wire_delays(id)[i] as u64 + g.node_delay_ps(src) as u64;
+            best = Some(best.map_or(hop, |b| b.min(hop)));
+        }
+    }
+    best.unwrap_or(0) as f64
+}
+
+/// One searchable design point: a unique (config, app) pair of the
+/// spec's cross-product, carrying everything needed to re-issue it as a
+/// one-candidate spec with the exact same [`ConfigDescriptor`].
+#[derive(Clone, Debug)]
+struct Candidate {
+    desc: ConfigDescriptor,
+    cfg: crate::dsl::InterconnectConfig,
+    fabric: FabricKind,
+    app_key: String,
+    /// Cheap scores (pre-PnR): exact area, and the wire-delay period
+    /// lower bound.
+    est_area_um2: f64,
+    est_period_lb_ps: f64,
+    /// Real aggregate over the seeds evaluated so far.
+    agg: Objectives,
+    seeds_run: Vec<u64>,
+}
+
+impl Candidate {
+    /// The one-candidate spec for one seed. Empty axes resolve to the
+    /// base config's own values and `Sizing::Fixed` keeps the (already
+    /// resolved — tight sizing included) dimensions, so
+    /// `SweepSpec::jobs` reproduces `self.desc` exactly and the
+    /// engine's cache keys line up with a full enumerating sweep's.
+    fn spec_for_seed(&self, spec: &SweepSpec, seed: u64) -> SweepSpec {
+        SweepSpec {
+            name: spec.name.clone(),
+            base: self.cfg.clone(),
+            tracks: vec![],
+            topologies: vec![],
+            output_tracks: vec![],
+            sb_sides: vec![],
+            cb_sides: vec![],
+            fabrics: vec![self.fabric],
+            sizing: Sizing::Fixed,
+            apps: vec![self.app_key.clone()],
+            seeds: vec![seed],
+            seed_mode: spec.seed_mode,
+            flow: spec.flow.clone(),
+            area: false,
+        }
+    }
+}
+
+/// Tuner knobs.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Cheap-model pre-pruning (on by default); `false` sends every
+    /// candidate into round 0.
+    pub prune: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions { prune: true }
+    }
+}
+
+/// What one tune run produced.
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub name: String,
+    /// The archive's frontier for this run's apps, in key order.
+    pub frontier: Vec<ParetoEntry>,
+    /// Single-point evaluations issued (cache hits included — strictly
+    /// fewer than `cross_product` whenever search beat enumeration).
+    pub evaluated: u64,
+    /// Candidates discarded by cheap-model pre-pruning.
+    pub pruned: u64,
+    /// Candidates dropped by dominance checks between rounds.
+    pub dropped: u64,
+    /// Successive-halving rounds run (= seeds spent per finalist).
+    pub rounds: u64,
+    /// Jobs a full enumerating sweep of the spec would run.
+    pub cross_product: u64,
+    /// Engine counters absorbed over every evaluation
+    /// (`stats.pnr_runs` / `stats.sims` are zero on a warm re-tune).
+    pub stats: EngineStats,
+}
+
+/// Run the search. `placer_name` must match the evaluator's placement
+/// backend (it keys the [`ConfigDescriptor`]s); `ics` serves frozen
+/// interconnects for the cheap scores (the service plugs in its shared
+/// LRU, the CLI builds fresh); `eval` runs one one-candidate spec
+/// through the real engine — [`super::DseEngine::run`], or the
+/// service's coalescing path. The archive is updated, pruned to its
+/// frontier, and saved before returning.
+pub fn run_tune(
+    spec: &SweepSpec,
+    placer_name: &str,
+    ics: &dyn InterconnectSource,
+    archive: &mut ParetoArchive,
+    opts: &TuneOptions,
+    eval: &mut dyn FnMut(&SweepSpec) -> Result<SweepOutcome, String>,
+) -> Result<TuneOutcome, String> {
+    if spec.apps.is_empty() {
+        return Err(format!("tune `{}`: need at least one app", spec.name));
+    }
+    let jobs = spec.jobs(placer_name)?;
+    let cross_product = jobs.len() as u64;
+    let mut _tune_span = obs::span(spans::DSE_TUNE);
+    _tune_span.args(cross_product, 0);
+
+    // Unique (config, app) candidates in canonical job order, scored
+    // with the cheap models. One frozen interconnect per unique config
+    // serves both scores (and is shared across fabrics/apps).
+    let area_model = AreaModel::default();
+    let mut ic_cache: BTreeMap<String, std::sync::Arc<Interconnect>> = BTreeMap::new();
+    let mut candidates: Vec<Candidate> = Vec::new();
+    let mut seen: std::collections::BTreeSet<(ConfigDescriptor, String)> =
+        std::collections::BTreeSet::new();
+    for job in &jobs {
+        if !seen.insert((job.key.config.clone(), job.key.app.clone())) {
+            continue;
+        }
+        let ic = std::sync::Arc::clone(
+            ic_cache
+                .entry(job.cfg.descriptor())
+                .or_insert_with(|| ics.interconnect(&job.cfg).0),
+        );
+        let tile = area_of(&ic, &area_model, job.fabric.area_mode()).interior_tile(&ic);
+        candidates.push(Candidate {
+            desc: job.key.config.clone(),
+            cfg: job.cfg.clone(),
+            fabric: job.fabric,
+            app_key: job.key.app.clone(),
+            est_area_um2: tile.total(),
+            est_period_lb_ps: period_lower_bound_ps(&ic, job.flow.bit_width),
+            agg: Objectives::unroutable(),
+            seeds_run: Vec::new(),
+        });
+    }
+    drop(ic_cache);
+
+    // Phase 1: cheap-model pre-pruning. Discard a candidate only when a
+    // same-app rival beats it strictly on BOTH the exact area and the
+    // period lower bound — a lower bound cannot prove real dominance, so
+    // the rule is deliberately strict-in-both (and a no-op wherever the
+    // delay model is shared across the space).
+    let candidates_in = candidates.len() as u64;
+    let mut pruned = 0u64;
+    if opts.prune {
+        let scores: Vec<(String, f64, f64)> = candidates
+            .iter()
+            .map(|c| (c.app_key.clone(), c.est_area_um2, c.est_period_lb_ps))
+            .collect();
+        candidates.retain(|c| {
+            let beaten = scores.iter().any(|(app, area, lb)| {
+                *app == c.app_key
+                    && area.total_cmp(&c.est_area_um2) == std::cmp::Ordering::Less
+                    && lb.total_cmp(&c.est_period_lb_ps) == std::cmp::Ordering::Less
+            });
+            if beaten {
+                pruned += 1;
+            }
+            !beaten
+        });
+    }
+    obs::event(spans::TUNE_PRUNE, candidates_in, pruned);
+    if obs::metrics_on() {
+        obs::metrics::counter("tune.pruned").add(pruned);
+    }
+
+    // Phase 2: successive halving across seeds. Every candidate shares
+    // the spec's seed list (they all come from one cross-product), so
+    // round r spends seeds[r] on each survivor, then drops survivors
+    // strictly dominated by another survivor's aggregate or an archive
+    // incumbent of the same app.
+    let mut stats = EngineStats::default();
+    let mut evaluated = 0u64;
+    let mut dropped = 0u64;
+    let mut rounds = 0u64;
+    for (r, &seed) in spec.seeds.iter().enumerate() {
+        if candidates.is_empty() {
+            break;
+        }
+        let mut _round = obs::span(spans::TUNE_ROUND);
+        _round.args(r as u64, candidates.len() as u64);
+        rounds += 1;
+        for cand in candidates.iter_mut() {
+            if cand.seeds_run.contains(&seed) {
+                continue; // duplicate seed value in the axis
+            }
+            let out = eval(&cand.spec_for_seed(spec, seed))?;
+            stats.absorb(&out.stats);
+            evaluated += 1;
+            let (_, point) = out
+                .points
+                .first()
+                .ok_or_else(|| format!("tune `{}`: empty evaluation", spec.name))?;
+            cand.agg.fold(&objectives_of(point, cand.est_area_um2));
+            cand.seeds_run.push(seed);
+        }
+        if obs::metrics_on() {
+            obs::metrics::counter("tune.evaluations").add(candidates.len() as u64);
+        }
+        // Halving: aggregates only improve with more seeds (period min,
+        // throughput max, area constant), so a dominator stays a
+        // dominator; the dropped candidate's unseen seeds are the one
+        // heuristic leap, traded for the saved evaluations.
+        let aggs: Vec<(String, Objectives, ConfigDescriptor)> = candidates
+            .iter()
+            .map(|c| (c.app_key.clone(), c.agg, c.desc.clone()))
+            .collect();
+        candidates.retain(|c| {
+            let by_survivor = aggs.iter().any(|(app, agg, desc)| {
+                *app == c.app_key && *desc != c.desc && dominates(agg, &c.agg)
+            });
+            let by_incumbent = archive.entries().any(|e| {
+                e.app == c.app_key
+                    && e.config != c.desc.0
+                    && dominates(&e.objectives, &c.agg)
+            });
+            let out = by_survivor || by_incumbent;
+            if out {
+                dropped += 1;
+            }
+            !out
+        });
+    }
+
+    // Phase 3: fold the finalists into the archive, prune it to its own
+    // frontier, persist. Unroutable finalists never enter.
+    for cand in &candidates {
+        if !cand.agg.is_finite() {
+            continue;
+        }
+        let mut seeds = cand.seeds_run.clone();
+        seeds.sort_unstable();
+        archive.merge(ParetoEntry {
+            config: cand.desc.0.clone(),
+            app: cand.app_key.clone(),
+            fabric: cand.fabric.label(),
+            objectives: cand.agg,
+            seeds,
+        });
+    }
+    archive.prune_to_frontier();
+    archive.save()?;
+
+    let frontier: Vec<ParetoEntry> =
+        archive.entries().filter(|e| spec.apps.contains(&e.app)).cloned().collect();
+    Ok(TuneOutcome {
+        name: spec.name.clone(),
+        frontier,
+        evaluated,
+        pruned,
+        dropped,
+        rounds,
+        cross_product,
+        stats,
+    })
+}
+
+/// A point's objectives under a known exact area. Gated on
+/// [`PointResult::has_finite_metrics`], so a NaN-metric "routed" point
+/// classifies as unroutable instead of poisoning the dominance order.
+pub fn objectives_of(r: &PointResult, area_um2: f64) -> Objectives {
+    if !r.has_finite_metrics() {
+        return Objectives::unroutable();
+    }
+    Objectives { area_um2, period_ps: r.period_ps, throughput: r.throughput() }
+}
+
+/// The frontier table `canal tune` and the service's `tune` responses
+/// render.
+pub fn frontier_table(out: &TuneOutcome) -> crate::util::table::Table {
+    use crate::util::table::{fmt, Table};
+    let mut t = Table::new(
+        &format!("Pareto frontier — {}", out.name),
+        &["config", "fabric", "app", "area_um2", "period_ps", "thpt", "seeds"],
+    );
+    for e in &out.frontier {
+        let short = e
+            .config
+            .split(" delays=")
+            .next()
+            .unwrap_or(&e.config)
+            .to_string();
+        let seeds: Vec<String> = e.seeds.iter().map(u64::to_string).collect();
+        t.row(vec![
+            short,
+            e.fabric.clone(),
+            e.app.clone(),
+            fmt(e.objectives.area_um2),
+            fmt(e.objectives.period_ps),
+            format!("{:.3}", e.objectives.throughput),
+            seeds.join(","),
+        ]);
+    }
+    t.note(&format!(
+        "{} evaluations ({} cross-product): {} pruned, {} dropped, {} rounds; \
+         {} PnR runs, {} sims, {} cache hits",
+        out.evaluated,
+        out.cross_product,
+        out.pruned,
+        out.dropped,
+        out.rounds,
+        out.stats.pnr_runs,
+        out.stats.sims,
+        out.stats.cache_hits
+    ));
+    t
+}
+
+/// Machine-readable record of one tune run (what the service's `tune`
+/// result frames embed).
+pub fn tune_json(out: &TuneOutcome) -> Json {
+    let frontier: Vec<Json> = out
+        .frontier
+        .iter()
+        .map(|e| {
+            Json::Obj(vec![
+                ("config".into(), Json::str(&e.config)),
+                ("app".into(), Json::str(&e.app)),
+                ("fabric".into(), Json::str(&e.fabric)),
+                ("area_um2".into(), Json::num_f64(e.objectives.area_um2)),
+                ("period_ps".into(), Json::num_f64(e.objectives.period_ps)),
+                ("throughput".into(), Json::num_f64(e.objectives.throughput)),
+                (
+                    "seeds".into(),
+                    Json::Arr(e.seeds.iter().map(|&s| Json::num_u64(s)).collect()),
+                ),
+            ])
+        })
+        .collect();
+    Json::Obj(vec![
+        ("name".into(), Json::str(&out.name)),
+        ("evaluated".into(), Json::num_u64(out.evaluated)),
+        ("pruned".into(), Json::num_u64(out.pruned)),
+        ("dropped".into(), Json::num_u64(out.dropped)),
+        ("rounds".into(), Json::num_u64(out.rounds)),
+        ("cross_product".into(), Json::num_u64(out.cross_product)),
+        ("stats".into(), super::report::stats_json(&out.stats)),
+        ("frontier".into(), Json::Arr(frontier)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(area: f64, period: f64, thpt: f64) -> Objectives {
+        Objectives { area_um2: area, period_ps: period, throughput: thpt }
+    }
+
+    fn entry(config: &str, app: &str, o: Objectives) -> ParetoEntry {
+        ParetoEntry {
+            config: config.into(),
+            app: app.into(),
+            fabric: "static".into(),
+            objectives: o,
+            seeds: vec![1],
+        }
+    }
+
+    #[test]
+    fn dominance_is_strict_and_irreflexive() {
+        let a = obj(10.0, 100.0, 0.5);
+        let better_area = obj(9.0, 100.0, 0.5);
+        let better_all = obj(9.0, 90.0, 0.6);
+        let tradeoff = obj(9.0, 110.0, 0.5);
+        assert!(dominates(&better_area, &a));
+        assert!(dominates(&better_all, &a));
+        assert!(!dominates(&a, &better_area));
+        // A trade-off dominates in neither direction.
+        assert!(!dominates(&tradeoff, &a));
+        assert!(!dominates(&a, &tradeoff));
+        // Irreflexive: equal points never dominate each other, so ties
+        // survive to the frontier.
+        assert!(!dominates(&a, &a));
+    }
+
+    #[test]
+    fn dominance_is_antisymmetric() {
+        let pts = [
+            obj(10.0, 100.0, 0.5),
+            obj(9.0, 100.0, 0.5),
+            obj(9.0, 90.0, 0.6),
+            obj(11.0, 80.0, 0.9),
+            Objectives::unroutable(),
+        ];
+        for x in &pts {
+            for y in &pts {
+                assert!(
+                    !(dominates(x, y) && dominates(y, x)),
+                    "both dominate: {x:?} vs {y:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nan_never_dominates_and_always_loses_to_finite() {
+        let nan = Objectives::unroutable();
+        let one_nan = obj(10.0, f64::NAN, 0.5);
+        let fin = obj(1e12, 1e12, 0.0); // terrible but finite
+        for bad in [&nan, &one_nan] {
+            assert!(!dominates(bad, &fin), "NaN dominated a finite point");
+            assert!(!dominates(bad, bad));
+            assert!(dominates(&fin, bad), "finite must beat unroutable");
+        }
+    }
+
+    #[test]
+    fn fold_aggregates_min_period_max_throughput() {
+        let mut a = Objectives::unroutable();
+        a.fold(&obj(10.0, 100.0, 0.5));
+        assert_eq!(a, obj(10.0, 100.0, 0.5));
+        a.fold(&obj(10.0, 90.0, 0.4));
+        assert_eq!(a, obj(10.0, 90.0, 0.5));
+        // A NaN seed leaves a finite aggregate untouched.
+        a.fold(&Objectives::unroutable());
+        assert_eq!(a, obj(10.0, 90.0, 0.5));
+    }
+
+    #[test]
+    fn frontier_keeps_nondominated_and_ties_per_app() {
+        let entries = vec![
+            entry("a", "app1", obj(10.0, 100.0, 0.5)),
+            entry("b", "app1", obj(9.0, 100.0, 0.5)), // dominates a
+            entry("c", "app1", obj(11.0, 80.0, 0.9)), // trade-off
+            entry("d", "app1", obj(9.0, 100.0, 0.5)), // ties b
+            entry("e", "app2", obj(1000.0, 1000.0, 0.1)), // other app
+        ];
+        let f = pareto_frontier(&entries);
+        let names: Vec<&str> = f.iter().map(|e| e.config.as_str()).collect();
+        assert_eq!(names, vec!["b", "c", "d", "e"]);
+    }
+
+    #[test]
+    fn nan_point_result_classifies_as_unroutable() {
+        // The regression at the heart of the NaN satellite: a routed
+        // point whose runtime round-tripped through JSON null.
+        let mut p = PointResult::unroutable();
+        p.routed = true;
+        p.critical_path_ps = 100.0;
+        p.period_ps = 120.0;
+        p.runtime_ns = f64::NAN;
+        assert!(!p.has_finite_metrics());
+        assert!(!objectives_of(&p, 10.0).is_finite());
+        let fine = PointResult {
+            routed: true,
+            critical_path_ps: 100.0,
+            period_ps: 120.0,
+            latency_cycles: 4,
+            runtime_ns: 480.0,
+            iterations: 1,
+            nodes_used: 8,
+            alpha: 1.0,
+            sim_cycles: 100,
+            sim_tokens: 90,
+            stall_cycles: 10,
+        };
+        assert!(fine.has_finite_metrics());
+        let o = objectives_of(&fine, 10.0);
+        assert_eq!(o, obj(10.0, 120.0, 0.9));
+        assert!(dominates(&o, &objectives_of(&p, 1.0)));
+    }
+
+    #[test]
+    fn archive_roundtrip_is_byte_identical_and_loud_on_corruption() {
+        let mut a = ParetoArchive::in_memory();
+        a.merge(entry("cfg-b", "app1", obj(9.0, 100.0 / 3.0, 0.5)));
+        a.merge(entry("cfg-a", "app1", obj(10.0, 100.0, 0.5)));
+        let text = a.to_json();
+        let mut back = ParetoArchive::in_memory();
+        back.load_json(&text).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.to_json(), text, "re-emission must be byte-identical");
+        // Corrupt / versioned / non-finite files are loud.
+        assert!(ParetoArchive::in_memory().load_json("{not json").is_err());
+        assert!(ParetoArchive::in_memory()
+            .load_json(r#"{"version": 99, "entries": []}"#)
+            .is_err());
+        assert!(ParetoArchive::in_memory()
+            .load_json(r#"{"version": 1, "entries": [{"config": "x"}]}"#)
+            .is_err());
+        // A non-finite objective (the `null` a NaN would serialize to)
+        // is corruption here, not data — the archive never holds NaN.
+        let nan = r#"{"version": 1, "entries": [
+            {"config": "c", "app": "a", "fabric": "static",
+             "area_um2": 1.0, "period_ps": null, "throughput": 0.5,
+             "seeds": [1]}]}"#;
+        assert!(ParetoArchive::in_memory().load_json(nan).is_err());
+    }
+
+    #[test]
+    fn archive_merge_unions_seeds_and_improves_objectives() {
+        let mut a = ParetoArchive::in_memory();
+        let mut first = entry("cfg", "app", obj(10.0, 100.0, 0.5));
+        first.seeds = vec![1, 3];
+        a.merge(first);
+        let mut second = entry("cfg", "app", obj(10.0, 90.0, 0.4));
+        second.seeds = vec![2, 3];
+        a.merge(second);
+        let e = a.entries().next().unwrap();
+        assert_eq!(e.objectives, obj(10.0, 90.0, 0.5));
+        assert_eq!(e.seeds, vec![1, 2, 3]);
+        // NaN entries never enter.
+        a.merge(entry("cfg2", "app", Objectives::unroutable()));
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn archive_prunes_to_its_own_frontier() {
+        let mut a = ParetoArchive::in_memory();
+        a.merge(entry("big", "app", obj(10.0, 100.0, 0.5)));
+        a.merge(entry("small", "app", obj(9.0, 100.0, 0.5)));
+        a.merge(entry("fast", "app", obj(11.0, 80.0, 0.9)));
+        a.prune_to_frontier();
+        let names: Vec<&str> = a.entries().map(|e| e.config.as_str()).collect();
+        assert_eq!(names, vec!["fast", "small"]);
+    }
+
+    #[test]
+    fn archive_path_sits_next_to_the_cache() {
+        let p = archive_path_for(Path::new("/x/dse_cache.json"));
+        assert_eq!(p, Path::new("/x/dse_cache_pareto.json"));
+    }
+
+    #[test]
+    fn file_backed_archive_roundtrip() {
+        let path = std::env::temp_dir()
+            .join(format!("canal_tune_archive_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut a = ParetoArchive::at(&path).unwrap();
+            assert!(a.is_empty());
+            a.merge(entry("cfg", "app", obj(10.0, 100.0, 0.5)));
+            a.save().unwrap();
+        }
+        let a = ParetoArchive::at(&path).unwrap();
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.entries().next().unwrap().objectives, obj(10.0, 100.0, 0.5));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn period_lower_bound_is_positive_and_model_sensitive() {
+        let base = crate::dsl::InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        };
+        let ic = crate::dsl::create_uniform_interconnect(&base);
+        let lb = period_lower_bound_ps(&ic, base.track_widths[0]);
+        assert!(lb > 0.0, "a real graph has at least one ported hop");
+        // Same model, more tracks: the cheapest hop is unchanged — this
+        // is exactly why the pre-prune is a no-op across track counts.
+        let wide =
+            crate::dsl::InterconnectConfig { num_tracks: base.num_tracks + 1, ..base.clone() };
+        let wic = crate::dsl::create_uniform_interconnect(&wide);
+        assert_eq!(lb, period_lower_bound_ps(&wic, wide.track_widths[0]));
+        // A slower wire model raises the bound.
+        let mut slow = base.clone();
+        slow.delays.wire_ps += 100;
+        let sic = crate::dsl::create_uniform_interconnect(&slow);
+        assert!(period_lower_bound_ps(&sic, slow.track_widths[0]) > lb);
+    }
+}

@@ -17,11 +17,14 @@
 //!           [--search-core binary-heap|bucket|radix|astar|bidir] [--slack-order]
 //!           [--workers N] [--cache FILE] [--no-cache] [--warm-start] [--json FILE]
 //!           [--trace FILE]
+//! canal tune [--smoke] [dse axis/array/flow/router/engine flags]
+//!           [--archive FILE] [--no-archive] [--no-prune] [--json FILE]
+//!           [--trace FILE]
 //! canal serve [--addr HOST:PORT] [--workers N] [--conn-threads N]
 //!             [--cache FILE] [--no-cache] [--ic-cap N] [--port-file FILE]
 //!             [--read-poll MS] [--heartbeat MS]
 //! canal client --addr HOST:PORT ping|info|stats|metrics|shutdown|dse|area|pnr
-//!             |simulate|generate|figure [--flags] [--watch]
+//!             |tune|simulate|generate|figure [--flags] [--watch]
 //! canal info
 //! canal help         (also: canal --help)
 //! ```
@@ -38,6 +41,16 @@
 //! placements and routed trees, with delta-aware sweep ordering;
 //! `--smoke --warm-start` is its own end-to-end check.
 //!
+//! `canal tune` is search where `canal dse` is enumeration: the same
+//! axis flags declare the space, but the multi-objective autotuner
+//! (`canal::dse::tune`) finds its (area × period × throughput) Pareto
+//! frontier with strictly fewer evaluations than the cross-product —
+//! cheap-model pre-pruning, successive halving across seeds, and a
+//! persisted Pareto archive (`--archive`, default sibling of the
+//! result cache) that re-anchors future searches. Every evaluation
+//! goes through the same cached engine, so tune and dse warm each
+//! other. `canal tune --smoke` is the CI check.
+//!
 //! Argument parsing is hand-rolled (clap is unavailable in the offline
 //! vendor set); flags are positional-order-independent `--key value`.
 
@@ -45,11 +58,13 @@ use std::collections::HashMap;
 use std::process::ExitCode;
 
 use canal::apps;
+use canal::area::{area_of, AreaModel};
 use canal::bitstream::{encode, Configuration};
 use canal::coordinator::{self, ExpOptions};
 use canal::dse::{
-    artifact_path_for, points_table, DseEngine, EngineOptions, PnrArtifactCache, ResultsStore,
-    SweepSpec,
+    archive_path_for, artifact_path_for, frontier_table, objectives_of, pareto_frontier,
+    points_table, run_tune, tune_json, BuildFresh, DseEngine, EngineOptions, ParetoArchive,
+    ParetoEntry, PnrArtifactCache, ResultsStore, SweepSpec, TuneOptions, TuneOutcome,
 };
 use canal::dsl::spec::{emit_spec, parse_spec};
 use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMode, SbTopology};
@@ -73,6 +88,8 @@ const BOOL_FLAGS: &[&str] = &[
     "derived-seeds",
     "warm-start",
     "slack-order",
+    "no-archive",
+    "no-prune",
     "watch",
     "help",
 ];
@@ -736,6 +753,239 @@ fn cmd_dse_untraced(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// `canal tune`: the multi-objective Pareto autotuner over the cached
+/// DSE engine. Same axis flags as `canal dse` (the spec IS the search
+/// space), plus the archive knobs; `--trace FILE` composes exactly as
+/// it does for `dse`.
+fn cmd_tune(args: &Args) -> Result<(), String> {
+    let trace = args.get("trace").map(std::path::PathBuf::from);
+    if trace.is_some() {
+        canal::obs::ObsOptions::full().apply();
+    }
+    let result = cmd_tune_untraced(args);
+    if let Some(path) = &trace {
+        canal::obs::export::write_chrome_trace(path)?;
+        println!("wrote trace {}", path.display());
+        print!("{}", canal::obs::export::metrics_ndjson());
+    }
+    result
+}
+
+fn cmd_tune_untraced(args: &Args) -> Result<(), String> {
+    if args.has("smoke") {
+        return tune_smoke();
+    }
+    let workers = args.get("workers").and_then(|v| v.parse().ok()).unwrap_or(0);
+    let cache_path: Option<std::path::PathBuf> = if args.has("no-cache") {
+        None
+    } else {
+        Some(args.get("cache").unwrap_or("dse_cache.json").into())
+    };
+    // Archive resolution: explicit `--archive FILE` wins; otherwise it
+    // sits next to the result cache (`dse_cache_pareto.json`), or at
+    // `pareto_archive.json` when the cache is off; `--no-archive`
+    // searches from scratch and persists nothing.
+    let mut archive = if args.has("no-archive") {
+        ParetoArchive::in_memory()
+    } else {
+        let path = match args.get("archive") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => match &cache_path {
+                Some(cache) => archive_path_for(cache),
+                None => std::path::PathBuf::from("pareto_archive.json"),
+            },
+        };
+        ParetoArchive::at(&path)?
+    };
+    let spec = dse_params_from_args(args)?.to_spec();
+    if spec.apps.is_empty() {
+        return Err("nothing to tune: pass --apps a,b,c".into());
+    }
+    let mut engine = DseEngine::new(EngineOptions {
+        workers,
+        cache_path,
+        warm_start: args.has("warm-start"),
+    })?;
+    let placer = coordinator::default_placer();
+    let opts = TuneOptions { prune: !args.has("no-prune") };
+    let out = run_tune(&spec, placer.name(), &BuildFresh, &mut archive, &opts, &mut |s| {
+        engine.run(s, placer.as_ref())
+    })?;
+    println!("{}", frontier_table(&out).render());
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, tune_json(&out).render())
+            .map_err(|e| format!("{path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Fold one full enumerating sweep into per-(config, app) aggregates
+/// and filter to the Pareto frontier — the exhaustive reference
+/// [`tune_smoke`] checks the search against.
+fn exhaustive_frontier(out: &canal::dse::SweepOutcome) -> Vec<ParetoEntry> {
+    let model = AreaModel::default();
+    let mut areas: HashMap<String, f64> = HashMap::new();
+    let mut agg: std::collections::BTreeMap<(String, String), ParetoEntry> =
+        std::collections::BTreeMap::new();
+    for (job, r) in &out.points {
+        // Keyed by the FULL descriptor: area depends on the fabric mode
+        // too, and the descriptor is the only string that carries both.
+        let area = *areas.entry(job.key.config.0.clone()).or_insert_with(|| {
+            let ic = create_uniform_interconnect(&job.cfg);
+            area_of(&ic, &model, job.fabric.area_mode()).interior_tile(&ic).total()
+        });
+        let o = objectives_of(r, area);
+        let key = (job.key.config.0.clone(), job.key.app.clone());
+        match agg.get_mut(&key) {
+            Some(e) => {
+                e.objectives.fold(&o);
+                if let Err(at) = e.seeds.binary_search(&job.key.seed) {
+                    e.seeds.insert(at, job.key.seed);
+                }
+            }
+            None => {
+                agg.insert(
+                    key,
+                    ParetoEntry {
+                        config: job.key.config.0.clone(),
+                        app: job.key.app.clone(),
+                        fabric: job.fabric.label(),
+                        objectives: o,
+                        seeds: vec![job.key.seed],
+                    },
+                );
+            }
+        }
+    }
+    let entries: Vec<ParetoEntry> =
+        agg.into_values().filter(|e| e.objectives.is_finite()).collect();
+    pareto_frontier(&entries)
+}
+
+/// `canal tune --smoke`: the CI search-beats-enumeration check. One
+/// tiny tracks-axis space, cold-tuned through a throwaway cache +
+/// archive, then checked on three contracts: the tuned frontier equals
+/// the exhaustive sweep's frontier exactly; the search evaluated
+/// strictly fewer points than the cross-product; and a warm re-tune
+/// performs zero PnR and zero sims. The printed `evaluations=`/
+/// `cross_product=` lines are what CI greps.
+fn tune_smoke() -> Result<(), String> {
+    let cache =
+        std::env::temp_dir().join(format!("canal_tune_smoke_{}.json", std::process::id()));
+    let archive_path = archive_path_for(&cache);
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&archive_path);
+    let spec = SweepSpec {
+        name: "tune-smoke".into(),
+        base: InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks: vec![2, 3],
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1, 2],
+        flow: canal::pnr::FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let placer = NativePlacer::default();
+    let run = |label: &str| -> Result<TuneOutcome, String> {
+        // Fresh engine + freshly loaded archive per pass: warmth must
+        // come through the files, proving persistence end-to-end.
+        let mut engine = DseEngine::new(EngineOptions {
+            workers: 2,
+            cache_path: Some(cache.clone()),
+            warm_start: false,
+        })?;
+        let mut archive = ParetoArchive::at(&archive_path)?;
+        let out = run_tune(
+            &spec,
+            placer.name(),
+            &BuildFresh,
+            &mut archive,
+            &TuneOptions::default(),
+            &mut |s| engine.run(s, &placer),
+        )?;
+        println!(
+            "tune smoke {label}: evaluations={} cross_product={} pruned={} dropped={} \
+             rounds={} pnr_runs={} sims={} cache_hits={}",
+            out.evaluated,
+            out.cross_product,
+            out.pruned,
+            out.dropped,
+            out.rounds,
+            out.stats.pnr_runs,
+            out.stats.sims,
+            out.stats.cache_hits
+        );
+        Ok(out)
+    };
+    let check = (|| -> Result<(), String> {
+        let cold = run("cold")?;
+        println!("{}", frontier_table(&cold).render());
+        if cold.evaluated >= cold.cross_product {
+            return Err(format!(
+                "tune smoke: search did not beat enumeration ({} evaluations vs {} \
+                 cross-product)",
+                cold.evaluated, cold.cross_product
+            ));
+        }
+        if cold.frontier.is_empty() {
+            return Err("tune smoke: empty frontier".into());
+        }
+        // Exhaustive reference over the same (now-warm) cache file: the
+        // tuned frontier must be exactly the full sweep's frontier.
+        let mut engine = DseEngine::new(EngineOptions {
+            workers: 2,
+            cache_path: Some(cache.clone()),
+            warm_start: false,
+        })?;
+        let full = engine.run(&spec, &placer)?;
+        let reference = exhaustive_frontier(&full);
+        if cold.frontier != reference {
+            return Err(format!(
+                "tune smoke: tuned frontier ({} entries) differs from the exhaustive \
+                 frontier ({} entries)",
+                cold.frontier.len(),
+                reference.len()
+            ));
+        }
+        // The persisted archive parses back byte-identically.
+        let text = std::fs::read_to_string(&archive_path)
+            .map_err(|e| format!("{}: {e}", archive_path.display()))?;
+        let mut reloaded = ParetoArchive::in_memory();
+        reloaded.load_json(&text)?;
+        if reloaded.to_json() != text {
+            return Err("tune smoke: archive round-trip is not byte-identical".into());
+        }
+        // Warm re-tune: every evaluation is a cache hit.
+        let warm = run("warm")?;
+        if warm.stats.pnr_runs != 0 || warm.stats.sims != 0 {
+            return Err(format!(
+                "tune smoke: warm re-tune ran {} PnR calls and {} sims",
+                warm.stats.pnr_runs, warm.stats.sims
+            ));
+        }
+        if warm.frontier != cold.frontier {
+            return Err("tune smoke: warm frontier differs from cold".into());
+        }
+        Ok(())
+    })();
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&archive_path);
+    check?;
+    println!(
+        "tune smoke: PASS (frontier exact, search beat enumeration, warm re-tune did \
+         zero PnR, archive round-trips)"
+    );
+    Ok(())
+}
+
 fn cmd_info() -> Result<(), String> {
     println!("canal {} — CGRA interconnect generator", env!("CARGO_PKG_VERSION"));
     // Compiled feature flags + the placement backend `auto` would pick:
@@ -798,7 +1048,7 @@ fn cmd_client(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").ok_or("--addr HOST:PORT required")?;
     let sub = args.positional.get(1).map(String::as_str).ok_or(
         "client: missing command \
-         (ping|info|stats|metrics|generate|pnr|simulate|dse|area|figure|shutdown)",
+         (ping|info|stats|metrics|generate|pnr|simulate|dse|area|tune|figure|shutdown)",
     )?;
     let req = match sub {
         "ping" => Request::Ping,
@@ -808,6 +1058,7 @@ fn cmd_client(args: &Args) -> Result<(), String> {
         "shutdown" => Request::Shutdown,
         "dse" => Request::Dse(dse_params_from_args(args)?),
         "area" => Request::Area(dse_params_from_args(args)?),
+        "tune" => Request::Tune(dse_params_from_args(args)?),
         "pnr" => {
             let app = args.get("app").ok_or("--app required")?;
             let mut p = dse_params_from_args(args)?;
@@ -930,6 +1181,20 @@ commands:
                every point, bucket/radix stay bit-identical to binary-heap,
                route_expansions counters are live)
                with --trace FILE: the CI trace check (span + metric coverage)
+  tune        multi-objective Pareto autotuner: search, not enumeration — finds
+              the (area x period x throughput) frontier of the same axis space
+              `dse` would enumerate, with strictly fewer evaluations
+              (cheap-model pre-pruning, successive halving across seeds,
+              persisted Pareto archive re-anchoring future searches)
+              axes/array/flow/router/engine flags: exactly as `dse`
+              --archive FILE  (default: `_pareto` sibling of the result cache)
+              --no-archive    search from scratch, persist nothing
+              --no-prune      disable cheap-model pre-pruning
+              --json FILE     machine-readable frontier + search stats
+              --trace FILE    record the run (same contract as `dse --trace`)
+  tune --smoke CI search-beats-enumeration check: tuned frontier == exhaustive
+               frontier, evaluations < cross-product, warm re-tune = 0 PnR,
+               archive round-trips byte-identically
   serve       persistent daemon: concurrent sessions, one shared warm cache,
               coalesced in-flight sweeps (newline-delimited JSON over TCP)
               --addr HOST:PORT  --workers N  --conn-threads N  --cache FILE
@@ -938,7 +1203,7 @@ commands:
               --heartbeat MS (progress frame period, default 15000)
   client      one scripted request against a running daemon
               --addr HOST:PORT  then: ping|info|stats|metrics|shutdown
-              dse|area [dse axis flags]   pnr --app NAME   figure figN
+              dse|area|tune [dse axis flags]   pnr --app NAME   figure figN
               simulate --app NAME --fabric F --tokens N
               generate --width W --height H --tracks T --topology T --backend static|rv
               --watch: print live progress frames (heartbeats carry jobs
@@ -966,6 +1231,7 @@ fn main() -> ExitCode {
         "sweep" => cmd_sweep(&args),
         "experiment" => cmd_experiment(&args),
         "dse" => cmd_dse(&args),
+        "tune" => cmd_tune(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
         "info" => cmd_info(),

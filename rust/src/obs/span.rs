@@ -84,6 +84,18 @@ pub mod names {
     /// Routing with the bidirectional Dijkstra core.
     pub const ROUTE_BIDIR: &str = "pnr.route.bidir";
 
+    // Autotuner spans (one family per `canal tune` run). Appended after
+    // the PR 8 taxonomy so existing interned ids are unchanged (ids
+    // index `WELL_KNOWN`).
+    /// One `canal tune` search end-to-end; `arg0` = cross-product size.
+    pub const DSE_TUNE: &str = "dse.tune";
+    /// Cheap-model pre-pruning pass; `arg0` = candidates in, `arg1` =
+    /// candidates discarded.
+    pub const TUNE_PRUNE: &str = "dse.tune.prune";
+    /// One successive-halving round; `arg0` = round index, `arg1` =
+    /// survivors entering the round.
+    pub const TUNE_ROUND: &str = "dse.tune.round";
+
     /// Every name above, in id order (ids index this table).
     pub const WELL_KNOWN: &[&str] = &[
         PACK,
@@ -108,6 +120,9 @@ pub mod names {
         ROUTE_RADIX,
         ROUTE_ASTAR,
         ROUTE_BIDIR,
+        DSE_TUNE,
+        TUNE_PRUNE,
+        TUNE_ROUND,
     ];
 }
 

@@ -180,11 +180,15 @@ pub fn build_global_problem(app: &AppGraph, ic: &Interconnect) -> GlobalProblem 
                 // optimizer refines via the quadratic well, legalization
                 // snaps to the actual nearest column.
                 let mid = ic.width as f32 / 2.0;
+                // `total_cmp`, not `partial_cmp(..).unwrap()`: the
+                // distances here cannot be NaN today, but a panic-free
+                // total order costs nothing and the float-ordering lint
+                // in CI bans the fallible form outright.
                 let col = mem_cols
                     .iter()
                     .copied()
                     .min_by(|a, b| {
-                        (*a as f32 - mid).abs().partial_cmp(&(*b as f32 - mid).abs()).unwrap()
+                        (*a as f32 - mid).abs().total_cmp(&(*b as f32 - mid).abs())
                     })
                     .unwrap();
                 Some(col as f32)

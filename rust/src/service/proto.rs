@@ -15,7 +15,7 @@
 //! the client and echoed on every response frame, so a client can match
 //! responses even though the server handles one request per connection
 //! at a time. Commands: `ping`, `info`, `stats`, `metrics`, `generate`,
-//! `pnr`, `simulate`, `dse`, `area`, `figure`, `shutdown` (see
+//! `pnr`, `simulate`, `dse`, `tune`, `area`, `figure`, `shutdown` (see
 //! [`Request`]).
 //!
 //! ## Responses
@@ -74,6 +74,12 @@ pub enum Request {
     Simulate(SimParams),
     /// A full design-space sweep.
     Dse(DseParams),
+    /// Pareto autotune over the same parameter space: search instead of
+    /// enumeration ([`crate::dse::run_tune`]). Shares [`DseParams`]
+    /// wholesale — the axes define the candidate space, the seeds the
+    /// successive-halving rounds — so a `tune` request warms exactly
+    /// the cache entries a `dse` of the same params would.
+    Tune(DseParams),
     /// Area-only sweep (`params.area` is implied; `apps` ignored).
     Area(DseParams),
     /// Regenerate one engine-backed paper figure through the shared
@@ -349,6 +355,10 @@ pub fn request_line(id: u64, req: &Request) -> String {
             cmd(&mut members, "dse");
             members.extend(p.to_members());
         }
+        Request::Tune(p) => {
+            cmd(&mut members, "tune");
+            members.extend(p.to_members());
+        }
         Request::Area(p) => {
             cmd(&mut members, "area");
             members.extend(p.to_members());
@@ -404,6 +414,7 @@ pub fn parse_request(line: &str) -> Result<(u64, Request), String> {
         }
         "pnr" => Request::Pnr(DseParams::from_json(&v)?),
         "dse" => Request::Dse(DseParams::from_json(&v)?),
+        "tune" => Request::Tune(DseParams::from_json(&v)?),
         "area" => Request::Area(DseParams::from_json(&v)?),
         "figure" => Request::Figure {
             which: opt_str(&v, "which")?.ok_or("figure: missing `which`")?,
@@ -645,6 +656,12 @@ mod tests {
                 ..Default::default()
             }),
             Request::Pnr(DseParams { apps: vec!["harris".into()], ..Default::default() }),
+            Request::Tune(DseParams {
+                tracks: vec![2, 3, 4],
+                apps: vec!["pointwise4".into()],
+                seeds: 2,
+                ..Default::default()
+            }),
             Request::Area(DseParams { tracks: vec![2, 3], area: true, ..Default::default() }),
             Request::Figure { which: "fig10".into(), sa_moves: 6 },
         ];

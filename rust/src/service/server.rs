@@ -45,7 +45,8 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::Duration;
 
 use crate::dse::{
-    app_by_name, areas_table, outcome_json, points_table, stats_json, SweepProgress,
+    app_by_name, areas_table, frontier_table, outcome_json, points_table, stats_json, tune_json,
+    SweepProgress, TuneOptions,
 };
 use crate::dse::InterconnectSource;
 use crate::hw::{allocate, lower_ready_valid, lower_static, RvOptions};
@@ -331,6 +332,7 @@ fn cmd_name(req: &Request) -> &'static str {
         Request::Simulate(_) => "simulate",
         Request::Pnr(_) => "pnr",
         Request::Dse(_) => "dse",
+        Request::Tune(_) => "tune",
         Request::Area(_) => "area",
         Request::Figure { .. } => "figure",
         Request::Shutdown => "shutdown",
@@ -375,6 +377,7 @@ fn handle_request(
         Request::Generate(g) => generate_request(id, &g, state, w),
         Request::Simulate(s) => simulate_request(id, &s, w),
         Request::Dse(p) => dse_request(id, &p, state, w, heartbeat),
+        Request::Tune(p) => tune_request(id, &p, state, w, heartbeat),
         Request::Area(p) => {
             let p = DseParams { area: true, apps: vec![], ..p };
             dse_request(id, &p, state, w, heartbeat)
@@ -515,6 +518,49 @@ fn dse_request(
     if spec.area {
         members.push(("areas_table".into(), Json::str(&areas_table(&out).render())));
     }
+    respond(w, id, Json::Obj(members))
+}
+
+/// `tune`: the Pareto autotuner over the daemon's shared cache. Takes
+/// the same params as `dse` (the spec IS the search space); pruning
+/// stays at its default (on) over the wire — the `--no-prune` escape
+/// hatch is a CLI debugging aid, not a protocol feature.
+fn tune_request(
+    id: u64,
+    p: &DseParams,
+    state: &Arc<SessionState>,
+    w: &mut TcpStream,
+    heartbeat: Duration,
+) -> Result<(), String> {
+    let spec = p.to_spec();
+    if spec.apps.is_empty() {
+        return Err("tune: need at least one app".into());
+    }
+    let _ = write_frame(
+        w,
+        &Frame::Progress {
+            id,
+            message: format!("tune `{}`: searching the design space", spec.name),
+        },
+    );
+    let progress = SweepProgress::new();
+    let out = with_heartbeat(w, id, heartbeat, Some(&progress), || {
+        state.run_tune_with_progress(&spec, &TuneOptions::default(), Some(&progress))
+    })?;
+    let _ = write_frame(
+        w,
+        &Frame::Progress {
+            id,
+            message: format!(
+                "{} evaluations ({} cross-product): {} pruned, {} dropped, {} rounds",
+                out.evaluated, out.cross_product, out.pruned, out.dropped, out.rounds
+            ),
+        },
+    );
+    let Json::Obj(mut members) = tune_json(&out) else {
+        unreachable!("tune_json returns an object")
+    };
+    members.push(("table".into(), Json::str(&frontier_table(&out).render())));
     respond(w, id, Json::Obj(members))
 }
 

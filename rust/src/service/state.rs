@@ -44,9 +44,9 @@ use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::coordinator;
 use crate::dse::{
-    area_points, execute_jobs_obs, publish_engine_stats, DseEngine, EngineOptions, EngineStats,
-    InterconnectSource, JobKey, PointResult, ResultCache, SweepOutcome, SweepProgress,
-    SweepSpec,
+    archive_path_for, area_points, execute_jobs_obs, publish_engine_stats, run_tune, DseEngine,
+    EngineOptions, EngineStats, InterconnectSource, JobKey, ParetoArchive, PointResult,
+    ResultCache, SweepOutcome, SweepProgress, SweepSpec, TuneOptions, TuneOutcome,
 };
 use crate::obs;
 use crate::obs::span::names as spans;
@@ -186,6 +186,7 @@ pub struct ServiceStats {
     pub errors: AtomicU64,
     pub dse_requests: AtomicU64,
     pub figure_requests: AtomicU64,
+    pub tune_requests: AtomicU64,
     pub jobs: AtomicU64,
     pub cache_hits: AtomicU64,
     pub coalesced: AtomicU64,
@@ -317,6 +318,14 @@ pub struct SessionState {
     /// Serializes cache-file writers among themselves (never held
     /// together with `shared` during I/O — see [`Self::flush`]).
     flush_lock: Mutex<()>,
+    /// Serializes `tune` requests among themselves: each tune is a
+    /// read-merge-write transaction on the Pareto archive file, and two
+    /// interleaved transactions could silently drop each other's
+    /// incumbents. Held across the whole search — the underlying
+    /// single-point evaluations still coalesce with concurrent `dse`
+    /// requests through [`Self::run_dse`]'s shared path, so this costs
+    /// nothing but archive consistency.
+    tune_lock: Mutex<()>,
 }
 
 impl SessionState {
@@ -346,6 +355,7 @@ impl SessionState {
             ics: IcLru::new(ic_capacity),
             stats: ServiceStats::default(),
             flush_lock: Mutex::new(()),
+            tune_lock: Mutex::new(()),
         })
     }
 
@@ -404,6 +414,19 @@ impl SessionState {
         progress: Option<&SweepProgress>,
     ) -> Result<SweepOutcome, String> {
         self.stats.dse_requests.fetch_add(1, Ordering::Relaxed);
+        self.run_dse_inner(spec, progress)
+    }
+
+    /// The sweep body without the `dse_requests` bump: `tune` issues
+    /// many one-candidate sweeps through this same hit/join/claim path
+    /// (so its points warm, and are warmed by, every other session),
+    /// but the daemon's request counters must say "one tune", not
+    /// "N dse requests".
+    fn run_dse_inner(
+        &self,
+        spec: &SweepSpec,
+        progress: Option<&SweepProgress>,
+    ) -> Result<SweepOutcome, String> {
         let jobs = spec.jobs(self.placer.name())?;
         let mut stats = EngineStats { jobs: jobs.len() as u64, ..Default::default() };
 
@@ -501,6 +524,50 @@ impl SessionState {
         Ok(SweepOutcome { name: spec.name.clone(), points, areas, stats })
     }
 
+    /// Run one Pareto-autotuner search ([`crate::dse::run_tune`])
+    /// through the shared state. Every real evaluation is a
+    /// one-candidate spec routed through [`Self::run_dse`]'s
+    /// hit/join/claim partition, so tune points coalesce with (and
+    /// warm) concurrent `dse` sweeps of overlapping specs. The archive
+    /// lives next to the shared result cache
+    /// ([`crate::dse::archive_path_for`]) when the daemon is
+    /// file-backed, and is per-request in-memory otherwise; tune
+    /// requests serialize among themselves on [`Self::tune_lock`].
+    pub fn run_tune(
+        &self,
+        spec: &SweepSpec,
+        opts: &TuneOptions,
+    ) -> Result<TuneOutcome, String> {
+        self.run_tune_with_progress(spec, opts, None)
+    }
+
+    /// [`Self::run_tune`] with a live [`SweepProgress`]: each
+    /// single-point evaluation re-`begin`s the tracker, so the
+    /// heartbeat renders per-evaluation progress rather than a global
+    /// fraction (the search's total is unknowable up front — that is
+    /// the point of searching).
+    pub fn run_tune_with_progress(
+        &self,
+        spec: &SweepSpec,
+        opts: &TuneOptions,
+        progress: Option<&SweepProgress>,
+    ) -> Result<TuneOutcome, String> {
+        self.stats.tune_requests.fetch_add(1, Ordering::Relaxed);
+        let _tune = lock_ignore_poison(&self.tune_lock);
+        let mut archive = match &self.opts.cache_path {
+            Some(path) => ParetoArchive::at(&archive_path_for(path))?,
+            None => ParetoArchive::in_memory(),
+        };
+        run_tune(
+            spec,
+            self.placer.name(),
+            &self.ics,
+            &mut archive,
+            opts,
+            &mut |s| self.run_dse_inner(s, progress),
+        )
+    }
+
     /// Regenerate one engine-backed paper figure against the shared
     /// cache: the figure drivers take a `&mut DseEngine`, so the run
     /// happens on a snapshot-backed engine and new entries merge back
@@ -561,6 +628,7 @@ impl SessionState {
             ("errors".into(), get(&s.errors)),
             ("dse_requests".into(), get(&s.dse_requests)),
             ("figure_requests".into(), get(&s.figure_requests)),
+            ("tune_requests".into(), get(&s.tune_requests)),
             ("jobs".into(), get(&s.jobs)),
             ("cache_hits".into(), get(&s.cache_hits)),
             ("coalesced".into(), get(&s.coalesced)),
@@ -720,6 +788,32 @@ mod tests {
         let again = st.run_dse(&spec).unwrap();
         assert_eq!(again.areas, out.areas);
         assert_eq!(st.ic_lru().builds(), 2, "area re-run must serve warm interconnects");
+    }
+
+    #[test]
+    fn tune_requests_coalesce_through_the_shared_cache() {
+        let st = state();
+        let spec = SweepSpec { seeds: vec![1, 2], ..tiny_spec("state-tune") };
+        let cold = st.run_tune(&spec, &TuneOptions::default()).unwrap();
+        assert!(cold.evaluated >= 1);
+        assert!(cold.evaluated <= cold.cross_product);
+        assert!(!cold.frontier.is_empty());
+        assert!(cold.stats.pnr_runs > 0, "cold tune must run real PnR");
+        // A warm re-tune revisits only cached points: zero PnR, zero
+        // sims, same frontier.
+        let warm = st.run_tune(&spec, &TuneOptions::default()).unwrap();
+        assert_eq!(warm.stats.pnr_runs, 0);
+        assert_eq!(warm.stats.sims, 0);
+        assert_eq!(warm.frontier.len(), cold.frontier.len());
+        // Tune evaluations are not dse requests: the daemon counters
+        // say "two tunes", zero sweeps.
+        assert_eq!(st.stats.tune_requests.load(Ordering::Relaxed), 2);
+        assert_eq!(st.stats.dse_requests.load(Ordering::Relaxed), 0);
+        // Descriptor alignment: a plain dse of the same spec finds
+        // every tuner-evaluated point already cached — the tuner's
+        // one-candidate specs produced identical ConfigDescriptor keys.
+        let dse = st.run_dse(&spec).unwrap();
+        assert_eq!(dse.stats.cache_hits, cold.evaluated);
     }
 
     #[test]

@@ -1,0 +1,301 @@
+//! Acceptance tests for the `canal tune` Pareto autotuner.
+//!
+//! Contracts under test: the tuned search recovers exactly the Pareto
+//! frontier an exhaustive `canal dse` enumeration yields, with strictly
+//! fewer cold PnR evaluations than the cross-product; the persisted
+//! archive is bit-identical across worker counts; a warm re-tune
+//! performs zero PnR and zero sims; and NaN-metric cache entries (the
+//! JSON `null` round trip of unroutable or legacy points) classify as
+//! unroutable instead of poisoning dominance ordering or table output.
+
+use canal::area::{area_of, AreaModel};
+use canal::dse::{
+    archive_path_for, dominates, objectives_of, pareto_frontier, points_table, run_tune,
+    DseEngine, EngineOptions, Objectives, ParetoArchive, ParetoEntry, PointResult, ResultCache,
+    SweepOutcome, SweepSpec, TuneOptions, TuneOutcome,
+};
+use canal::dsl::{create_uniform_interconnect, InterconnectConfig};
+use canal::pnr::{FlowParams, GlobalPlacer, NativePlacer, SaParams};
+
+/// The search space every test tunes: a tracks-only axis on a tiny 4x4
+/// static array. Area strictly increases with tracks while the routed
+/// period and simulated throughput do not improve, so the higher-track
+/// candidates are strictly dominated after the first seed round — the
+/// successive-halving drop must fire, which is what makes
+/// `evaluated < cross_product` achievable at all.
+fn tune_spec(name: &str, tracks: Vec<u16>) -> SweepSpec {
+    SweepSpec {
+        name: name.into(),
+        base: InterconnectConfig {
+            width: 4,
+            height: 4,
+            mem_column_period: 3,
+            ..Default::default()
+        },
+        tracks,
+        apps: vec!["pointwise4".into()],
+        seeds: vec![1, 2],
+        flow: FlowParams {
+            sa: SaParams { moves_per_node: 4, ..Default::default() },
+            ..Default::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// Exhaustive reference: fold a full enumerating sweep into
+/// per-(config, app) aggregates — same area model, same objective
+/// extraction as the tuner — and filter to the Pareto frontier.
+fn exhaustive_frontier(out: &SweepOutcome) -> Vec<ParetoEntry> {
+    let model = AreaModel::default();
+    let mut areas: std::collections::HashMap<String, f64> = std::collections::HashMap::new();
+    let mut agg: std::collections::BTreeMap<(String, String), ParetoEntry> =
+        std::collections::BTreeMap::new();
+    for (job, r) in &out.points {
+        let area = *areas.entry(job.key.config.0.clone()).or_insert_with(|| {
+            let ic = create_uniform_interconnect(&job.cfg);
+            area_of(&ic, &model, job.fabric.area_mode()).interior_tile(&ic).total()
+        });
+        let o = objectives_of(r, area);
+        let key = (job.key.config.0.clone(), job.key.app.clone());
+        match agg.get_mut(&key) {
+            Some(e) => {
+                e.objectives.fold(&o);
+                if let Err(at) = e.seeds.binary_search(&job.key.seed) {
+                    e.seeds.insert(at, job.key.seed);
+                }
+            }
+            None => {
+                agg.insert(
+                    key,
+                    ParetoEntry {
+                        config: job.key.config.0.clone(),
+                        app: job.key.app.clone(),
+                        fabric: job.fabric.label(),
+                        objectives: o,
+                        seeds: vec![job.key.seed],
+                    },
+                );
+            }
+        }
+    }
+    let entries: Vec<ParetoEntry> =
+        agg.into_values().filter(|e| e.objectives.is_finite()).collect();
+    pareto_frontier(&entries)
+}
+
+fn run_tune_with_workers(
+    spec: &SweepSpec,
+    workers: usize,
+    archive: &mut ParetoArchive,
+) -> TuneOutcome {
+    let mut engine =
+        DseEngine::new(EngineOptions { workers, cache_path: None, warm_start: false })
+            .expect("engine");
+    let placer = NativePlacer::default();
+    run_tune(spec, placer.name(), &canal::dse::BuildFresh, archive, &TuneOptions::default(), &mut |s| {
+        engine.run(s, &placer)
+    })
+    .expect("tune")
+}
+
+#[test]
+fn tuned_search_recovers_the_exhaustive_frontier_with_fewer_evaluations() {
+    // The headline acceptance criterion: exact frontier, strictly fewer
+    // cold PnR evaluations than the 3 tracks × 1 app × 2 seeds = 6-job
+    // cross-product.
+    let spec = tune_spec("tune-acceptance", vec![2, 3, 4]);
+    let mut archive = ParetoArchive::in_memory();
+    let tuned = run_tune_with_workers(&spec, 2, &mut archive);
+    assert_eq!(tuned.cross_product, 6);
+    assert!(
+        tuned.evaluated < tuned.cross_product,
+        "search must beat enumeration: {} evaluations vs {} cross-product",
+        tuned.evaluated,
+        tuned.cross_product
+    );
+    assert!(
+        tuned.stats.pnr_runs < tuned.cross_product,
+        "cold search must run strictly fewer PnR calls than the cross-product \
+         ({} vs {})",
+        tuned.stats.pnr_runs,
+        tuned.cross_product
+    );
+    assert!(tuned.dropped > 0, "the halving drop must fire on this space");
+    assert!(!tuned.frontier.is_empty());
+
+    let mut engine = DseEngine::in_memory();
+    let full = engine.run(&spec, &NativePlacer::default()).expect("exhaustive sweep");
+    assert_eq!(full.points.len(), 6);
+    let reference = exhaustive_frontier(&full);
+    assert_eq!(
+        tuned.frontier, reference,
+        "tuned frontier must equal the exhaustive sweep's frontier exactly"
+    );
+    // Frontier objectives are bit-exact against the reference, not just
+    // PartialEq-equal.
+    for (t, r) in tuned.frontier.iter().zip(&reference) {
+        assert_eq!(t.objectives.area_um2.to_bits(), r.objectives.area_um2.to_bits());
+        assert_eq!(t.objectives.period_ps.to_bits(), r.objectives.period_ps.to_bits());
+        assert_eq!(t.objectives.throughput.to_bits(), r.objectives.throughput.to_bits());
+    }
+}
+
+#[test]
+fn archive_bytes_are_identical_across_worker_counts() {
+    // Determinism contract: candidates, rounds, and merges iterate
+    // BTree-ordered state in canonical spec order, so for a fixed cache
+    // temperature the archive serialization is a pure function of the
+    // spec — any worker count, same bytes.
+    let spec = tune_spec("tune-workers", vec![2, 3, 4]);
+    let baseline = {
+        let mut archive = ParetoArchive::in_memory();
+        run_tune_with_workers(&spec, 1, &mut archive);
+        archive.to_json()
+    };
+    assert!(baseline.contains("\"version\""), "archive must be versioned");
+    for workers in [2, 4, 7] {
+        let sharded = {
+            let mut archive = ParetoArchive::in_memory();
+            run_tune_with_workers(&spec, workers, &mut archive);
+            archive.to_json()
+        };
+        assert_eq!(baseline, sharded, "archive bytes diverged at workers={workers}");
+    }
+}
+
+#[test]
+fn warm_retune_runs_zero_pnr_and_zero_sims_through_the_files() {
+    // Persistence end-to-end: a fresh engine + freshly loaded archive
+    // over the same backing files must answer every evaluation from the
+    // result cache and reproduce the same frontier.
+    let cache = std::env::temp_dir()
+        .join(format!("canal_tune_warm_{}.json", std::process::id()));
+    let archive_file = archive_path_for(&cache);
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&archive_file);
+    let spec = tune_spec("tune-warm", vec![2, 3]);
+    let placer = NativePlacer::default();
+    let pass = || -> TuneOutcome {
+        let mut engine = DseEngine::new(EngineOptions {
+            workers: 2,
+            cache_path: Some(cache.clone()),
+            warm_start: false,
+        })
+        .expect("engine");
+        let mut archive = ParetoArchive::at(&archive_file).expect("archive");
+        run_tune(
+            &spec,
+            placer.name(),
+            &canal::dse::BuildFresh,
+            &mut archive,
+            &TuneOptions::default(),
+            &mut |s| engine.run(s, &placer),
+        )
+        .expect("tune")
+    };
+    let cold = pass();
+    let archive_bytes = std::fs::read_to_string(&archive_file).expect("archive persisted");
+    let warm = pass();
+    let warm_bytes = std::fs::read_to_string(&archive_file).expect("archive persisted");
+    let _ = std::fs::remove_file(&cache);
+    let _ = std::fs::remove_file(&archive_file);
+    assert!(cold.stats.pnr_runs > 0, "cold tune must run real PnR");
+    assert_eq!(warm.stats.pnr_runs, 0, "warm re-tune must skip all PnR");
+    assert_eq!(warm.stats.sims, 0, "warm re-tune must skip all simulations");
+    assert!(warm.stats.cache_hits > 0);
+    assert_eq!(warm.frontier, cold.frontier);
+    assert_eq!(archive_bytes, warm_bytes, "a warm re-tune must not change the archive");
+}
+
+#[test]
+fn nan_metrics_in_a_warm_cache_never_poison_the_search() {
+    // The NaN-ordering regression: `Json::num_f64` persists non-finite
+    // metrics as `null` and the cache decoder reads them back as NaN, so
+    // a warm cache can serve a "routed" point whose runtime/period are
+    // NaN. The tuner must classify it as unroutable (it never enters the
+    // archive, never dominates anything) and the report table must
+    // render dashes, not "NaN".
+    let spec = tune_spec("tune-nan", vec![2, 3]);
+    let placer = NativePlacer::default();
+    let jobs = spec.jobs(placer.name()).expect("jobs");
+    assert_eq!(jobs.len(), 4);
+    // Poison every seed of the lowest-track config — the candidate that
+    // would otherwise win on area.
+    let poisoned: Vec<_> =
+        jobs.iter().filter(|j| j.cfg.num_tracks == 2).map(|j| j.key.clone()).collect();
+    assert_eq!(poisoned.len(), 2);
+    let nan_point = PointResult {
+        routed: true,
+        critical_path_ps: f64::NAN,
+        period_ps: f64::NAN,
+        runtime_ns: f64::NAN,
+        alpha: f64::NAN,
+        ..PointResult::unroutable()
+    };
+    let mut cache = ResultCache::in_memory();
+    for key in &poisoned {
+        cache.insert(key.clone(), nan_point.clone());
+    }
+    let mut engine = DseEngine::with_cache(
+        EngineOptions { workers: 2, cache_path: None, warm_start: false },
+        cache,
+    );
+    let mut archive = ParetoArchive::in_memory();
+    let tuned = run_tune(
+        &spec,
+        placer.name(),
+        &canal::dse::BuildFresh,
+        &mut archive,
+        &TuneOptions::default(),
+        &mut |s| engine.run(s, &placer),
+    )
+    .expect("tune must survive NaN cache entries");
+    assert!(!tuned.frontier.is_empty(), "the healthy candidate must make the frontier");
+    let poisoned_config = &poisoned[0].config.0;
+    for e in &tuned.frontier {
+        assert_ne!(
+            &e.config, poisoned_config,
+            "a NaN-metric candidate must never enter the frontier"
+        );
+        assert!(e.objectives.is_finite());
+    }
+    // And the rendered sweep table shows the NaN point as data-less.
+    let out = engine.run(&spec, &placer).expect("sweep over the poisoned cache");
+    let rendered = points_table(&out).render();
+    assert!(
+        !rendered.contains("NaN"),
+        "points table must render NaN metrics as dashes:\n{rendered}"
+    );
+}
+
+#[test]
+fn dominance_is_strict_antisymmetric_and_nan_safe() {
+    // Property sweep over a small objective grid (finite values and
+    // NaN): dominance is irreflexive, antisymmetric, and NaN never
+    // dominates while any finite point dominates a NaN one.
+    let vals = [1.0, 2.0, f64::NAN];
+    let mut points = Vec::new();
+    for &a in &vals {
+        for &p in &vals {
+            for &t in &vals {
+                points.push(Objectives { area_um2: a, period_ps: p, throughput: t });
+            }
+        }
+    }
+    for x in &points {
+        assert!(!dominates(x, x), "irreflexive: {x:?}");
+        for y in &points {
+            assert!(
+                !(dominates(x, y) && dominates(y, x)),
+                "antisymmetric: {x:?} vs {y:?}"
+            );
+            if !x.is_finite() {
+                assert!(!dominates(x, y), "NaN never dominates: {x:?} vs {y:?}");
+            }
+            if x.is_finite() && !y.is_finite() {
+                assert!(dominates(x, y), "finite beats NaN: {x:?} vs {y:?}");
+            }
+        }
+    }
+}
