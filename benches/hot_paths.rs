@@ -362,6 +362,34 @@ fn main() {
             "observability overhead {overhead_pct:.1}% blows the 5% budget"
         );
 
+        // History-sampler overhead: the daemon records the metrics
+        // registry into the history ring while sweeps run, and the
+        // sampler thread must be invisible to the flow. Same best-of-3
+        // cold sweep with the metrics gate open, without vs with a live
+        // sampler at 100 ms (10x the daemon's default rate); the design
+        // budget is < 2%.
+        {
+            use canal::obs::{HistorySampler, MetricsHistory};
+            ObsOptions { metrics: true, trace: false }.apply();
+            let plain_s = cold_run("hist_off");
+            let sampler = HistorySampler::spawn(
+                std::sync::Arc::new(MetricsHistory::new(512, Duration::from_millis(100))),
+                || None,
+            );
+            let sampled_s = cold_run("hist_on");
+            drop(sampler);
+            ObsOptions::disabled().apply();
+            let hist_pct = (sampled_s / plain_s - 1.0) * 100.0;
+            println!(
+                "dse cold sweep history-off {plain_s:.3}s vs history-on {sampled_s:.3}s   \
+                 [sampler overhead {hist_pct:+.1}%]"
+            );
+            assert!(
+                hist_pct < 2.0,
+                "history sampler overhead {hist_pct:.1}% blows the 2% budget"
+            );
+        }
+
         // Tuned search vs full enumeration: `canal tune` walks the same
         // space as the exhaustive sweep but prunes on a cheap area/delay
         // model and drops dominated candidates between seed rounds, so

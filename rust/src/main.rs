@@ -71,7 +71,8 @@ use canal::dsl::{create_uniform_interconnect, InterconnectConfig, OutputTrackMod
 use canal::hw::{allocate, emit, lower_ready_valid, lower_static, verify_rtl, RvOptions};
 use canal::pnr::{run_flow_with, FlowParams, NativePlacer, SaParams, SearchCore};
 use canal::service::{
-    Client, DseParams, GenParams, Request, ServeOptions, Server, SimParams, StateOptions,
+    Client, DseParams, Frame, GenParams, Request, ServeOptions, Server, SimParams,
+    StateOptions,
 };
 use canal::sim::{sweep_connections, FabricKind, RvSim, StallPattern};
 use canal::util::json::Json;
@@ -91,6 +92,7 @@ const BOOL_FLAGS: &[&str] = &[
     "no-archive",
     "no-prune",
     "watch",
+    "dash",
     "help",
 ];
 
@@ -1046,15 +1048,26 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
 
 fn cmd_client(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").ok_or("--addr HOST:PORT required")?;
-    let sub = args.positional.get(1).map(String::as_str).ok_or(
-        "client: missing command \
-         (ping|info|stats|metrics|generate|pnr|simulate|dse|area|tune|figure|shutdown)",
-    )?;
+    let dash = args.has("dash");
+    // `--dash` with no subcommand is the terminal dashboard: a `watch`
+    // stream rendered as sparklines.
+    let sub = match args.positional.get(1).map(String::as_str) {
+        Some(s) => s,
+        None if dash => "watch",
+        None => {
+            return Err("client: missing command \
+                 (ping|info|stats|metrics|history|watch|generate|pnr|simulate|dse|area|\
+                 tune|figure|shutdown)"
+                .into())
+        }
+    };
     let req = match sub {
         "ping" => Request::Ping,
         "info" => Request::Info,
         "stats" => Request::Stats,
         "metrics" => Request::Metrics,
+        "history" => Request::History,
+        "watch" => Request::Watch,
         "shutdown" => Request::Shutdown,
         "dse" => Request::Dse(dse_params_from_args(args)?),
         "area" => Request::Area(dse_params_from_args(args)?),
@@ -1104,6 +1117,9 @@ fn cmd_client(args: &Args) -> Result<(), String> {
         other => return Err(format!("unknown client command `{other}`")),
     };
     let mut client = Client::connect(addr)?;
+    if matches!(req, Request::Watch) {
+        return client_watch(&mut client, dash);
+    }
     // `--watch` promotes progress frames to stdout: during a long sweep
     // the daemon heartbeats live progress (jobs done/total, cache hits,
     // coalesced joins, per-worker utilization) every `--heartbeat`.
@@ -1116,10 +1132,14 @@ fn cmd_client(args: &Args) -> Result<(), String> {
         }
     })?;
     // `metrics` prints one metric object per line (same shape as the
-    // NDJSON snapshot `canal dse --trace` emits) — grep-friendly.
+    // NDJSON snapshot `canal dse --trace` emits) — grep-friendly — then
+    // a derived one-liner (latency quantiles + cache hit rate).
     if let Some(Json::Arr(metrics)) = data.get("metrics") {
         for m in metrics {
             println!("{}", m.render_line());
+        }
+        if let Some(summary) = metrics_summary(metrics) {
+            println!("{summary}");
         }
         return Ok(());
     }
@@ -1134,8 +1154,170 @@ fn cmd_client(args: &Args) -> Result<(), String> {
         }
     } else {
         println!("{}", data.render_line());
+        if sub == "stats" {
+            if let Some(summary) = stats_summary(&data) {
+                println!("{summary}");
+            }
+        }
     }
     Ok(())
+}
+
+/// How many points each `--dash` sparkline keeps (one terminal line).
+const DASH_POINTS: usize = 24;
+
+/// Stream `watch` frames until the daemon closes the connection.
+/// Plain `watch` prints each history sample as an NDJSON line; `--dash`
+/// renders a live sparkline line per sample instead.
+fn client_watch(client: &mut Client, dash: bool) -> Result<(), String> {
+    let mut req_series: Vec<f64> = Vec::new();
+    let mut p50_series: Vec<f64> = Vec::new();
+    let mut hit_series: Vec<f64> = Vec::new();
+    let outcome = client.call_frames(&Request::Watch, |frame| {
+        let Frame::History { data, .. } = frame else { return true };
+        let Some(Json::Arr(samples)) = data.get("samples") else { return true };
+        for s in samples {
+            if !dash {
+                println!("{}", s.render_line());
+                continue;
+            }
+            let counters = s.get("counters");
+            let req = sum_counter_prefix(counters, "service.request.");
+            let hits = sum_counter_prefix(counters, "engine.cache_hits");
+            let jobs = sum_counter_prefix(counters, "engine.jobs");
+            let p50 = s
+                .get("quantiles")
+                .and_then(|q| q.get("service.request.latency_us"))
+                .and_then(|h| h.get("p50"))
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0);
+            push_capped(&mut req_series, req);
+            push_capped(&mut p50_series, p50);
+            push_capped(&mut hit_series, if jobs > 0.0 { hits / jobs * 100.0 } else { 0.0 });
+            let live =
+                s.get("progress").map(progress_cell).unwrap_or_else(|| "idle".into());
+            println!(
+                "req {} {:>4} │ p50µs {} {:>6.0} │ hit% {} {:>3.0} │ {live}",
+                sparkline(&req_series),
+                req,
+                sparkline(&p50_series),
+                p50,
+                sparkline(&hit_series),
+                hit_series.last().copied().unwrap_or(0.0),
+            );
+        }
+        true
+    });
+    match outcome {
+        Ok(Some(Frame::Error { error, .. })) => Err(error),
+        Ok(_) => Ok(()),
+        // The stream's clean end IS a disconnect: the daemon drained.
+        Err(e) if e.contains("connection closed") => {
+            eprintln!("watch: daemon closed the connection");
+            Ok(())
+        }
+        Err(e) => Err(e),
+    }
+}
+
+fn push_capped(series: &mut Vec<f64>, v: f64) {
+    series.push(v);
+    if series.len() > DASH_POINTS {
+        series.remove(0);
+    }
+}
+
+/// Unicode sparkline scaled to the series' own maximum.
+fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let max = values.iter().copied().filter(|v| v.is_finite()).fold(0.0f64, f64::max);
+    values
+        .iter()
+        .map(|&v| {
+            if max <= 0.0 || !v.is_finite() || v <= 0.0 {
+                BARS[0]
+            } else {
+                BARS[((v / max * 7.0).round() as usize).min(7)]
+            }
+        })
+        .collect()
+}
+
+/// Sum of the counter-delta fields of one history sample whose name
+/// starts with `prefix`.
+fn sum_counter_prefix(counters: Option<&Json>, prefix: &str) -> f64 {
+    match counters {
+        Some(Json::Obj(members)) => members
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .filter_map(|(_, v)| v.as_f64())
+            .sum(),
+        _ => 0.0,
+    }
+}
+
+/// The live-sweep cell of one `--dash` line.
+fn progress_cell(p: &Json) -> String {
+    let g = |k: &str| p.get(k).and_then(Json::as_u64).unwrap_or(0);
+    let mut s = format!("jobs {}/{}", g("jobs_done"), g("jobs_total"));
+    if let Some(Json::Arr(util)) = p.get("util") {
+        for (i, u) in util.iter().enumerate() {
+            s.push_str(&format!(" w{i}={}%", u.as_u64().unwrap_or(0)));
+        }
+    }
+    s
+}
+
+/// Derived one-liner under `canal client metrics`: request-latency
+/// quantiles and the lifetime DSE cache hit rate.
+fn metrics_summary(metrics: &[Json]) -> Option<String> {
+    let find = |name: &str| {
+        metrics.iter().find(|m| m.get("metric").and_then(Json::as_str) == Some(name))
+    };
+    let mut parts: Vec<String> = Vec::new();
+    if let Some(h) = find("service.request.latency_us") {
+        let q = |k: &str| h.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        parts.push(format!(
+            "latency µs p50={:.0} p90={:.0} p99={:.0} (n={})",
+            q("p50"),
+            q("p90"),
+            q("p99"),
+            h.get("count").and_then(Json::as_u64).unwrap_or(0)
+        ));
+    }
+    let counter_of = |name: &str| {
+        find(name).and_then(|m| m.get("value")).and_then(Json::as_u64).unwrap_or(0)
+    };
+    let (hits, jobs) = (counter_of("engine.cache_hits"), counter_of("engine.jobs"));
+    if jobs > 0 {
+        parts.push(format!(
+            "cache hit rate {:.1}% ({hits}/{jobs})",
+            hits as f64 / jobs as f64 * 100.0
+        ));
+    }
+    if parts.is_empty() {
+        None
+    } else {
+        Some(format!("summary: {}", parts.join(" · ")))
+    }
+}
+
+/// Derived one-liner under `canal client stats`.
+fn stats_summary(data: &Json) -> Option<String> {
+    let g = |k: &str| data.get(k).and_then(Json::as_u64);
+    let jobs = g("jobs")?;
+    if jobs == 0 {
+        return None;
+    }
+    let hits = g("cache_hits").unwrap_or(0);
+    Some(format!(
+        "summary: cache hit rate {:.1}% ({hits}/{jobs} jobs) · {} coalesced · {} PnR \
+         runs · {} warm starts",
+        hits as f64 / jobs as f64 * 100.0,
+        g("coalesced").unwrap_or(0),
+        g("pnr_runs").unwrap_or(0),
+        g("warm_starts").unwrap_or(0),
+    ))
 }
 
 /// Full usage text. Keep in lockstep with `docs/cli.md`, which embeds
@@ -1196,18 +1378,26 @@ commands:
                frontier, evaluations < cross-product, warm re-tune = 0 PnR,
                archive round-trips byte-identically
   serve       persistent daemon: concurrent sessions, one shared warm cache,
-              coalesced in-flight sweeps (newline-delimited JSON over TCP)
+              coalesced in-flight sweeps (newline-delimited JSON over TCP),
+              embedded dashboard on the same port for HTTP clients:
+              GET /dash (self-contained HTML+SVG), /metrics.json,
+              /history.json, /archive.json
               --addr HOST:PORT  --workers N  --conn-threads N  --cache FILE
               --no-cache  --ic-cap N  --port-file FILE
               --read-poll MS (idle read poll, default 500)
               --heartbeat MS (progress frame period, default 15000)
   client      one scripted request against a running daemon
-              --addr HOST:PORT  then: ping|info|stats|metrics|shutdown
+              --addr HOST:PORT  then: ping|info|stats|metrics|history|shutdown
               dse|area|tune [dse axis flags]   pnr --app NAME   figure figN
               simulate --app NAME --fabric F --tokens N
               generate --width W --height H --tracks T --topology T --backend static|rv
+              watch: stream timestamped history delta frames (NDJSON, one
+               sample per line) until the daemon closes the connection
               --watch: print live progress frames (heartbeats carry jobs
-               done/total, cache hits, coalesced joins, worker utilization)
+               done/total, cache hits, coalesced joins, worker utilization);
+               stats/metrics also print a latency-quantile + hit-rate summary
+              --dash: terminal dashboard over `watch` — sparklines of request
+               rate, latency p50, cache hit rate, plus live sweep + worker util
   info        version, compiled features, active placer backend, app registry
   help        this message
 

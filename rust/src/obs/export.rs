@@ -23,8 +23,27 @@ use crate::util::json::Json;
 /// metadata record per track, and events sorted by timestamp so the
 /// file streams into Perfetto without a sort pass.
 pub fn chrome_trace(events: &[span::SpanEvent], labels: &[(u32, String)]) -> Json {
-    let mut out: Vec<Json> = Vec::with_capacity(events.len() + labels.len());
-    for (worker, label) in labels {
+    // Workers can record events without ever labelling their track
+    // (e.g. a thread that only hits instrumented library code), so the
+    // label table is not authoritative: synthesize a `worker-<n>` row
+    // for any worker present in the events but absent from `labels`,
+    // instead of leaving its track unnamed.
+    let mut tracks: Vec<(u32, &str)> =
+        labels.iter().map(|(w, l)| (*w, l.as_str())).collect();
+    let mut extra: Vec<u32> = events
+        .iter()
+        .map(|ev| ev.worker)
+        .filter(|w| !labels.iter().any(|(lw, _)| lw == w))
+        .collect();
+    extra.sort_unstable();
+    extra.dedup();
+    let synthesized: Vec<(u32, String)> =
+        extra.into_iter().map(|w| (w, format!("worker-{w}"))).collect();
+    tracks.extend(synthesized.iter().map(|(w, l)| (*w, l.as_str())));
+    tracks.sort_by_key(|(w, _)| *w);
+
+    let mut out: Vec<Json> = Vec::with_capacity(events.len() + tracks.len());
+    for (worker, label) in &tracks {
         out.push(Json::Obj(vec![
             ("name".into(), Json::str("thread_name")),
             ("ph".into(), Json::str("M")),
@@ -132,9 +151,16 @@ pub fn metrics_ndjson() -> String {
 }
 
 /// The metrics snapshot as one JSON document (what the daemon's
-/// `metrics` request returns): `{"metrics": [...]}`.
+/// `metrics` request and `GET /metrics.json` return):
+/// `{"ts_ms": ..., "mono_ns": ..., "metrics": [...]}` — the timestamp
+/// pair says *when* the snapshot was taken, so two snapshots can be
+/// turned into rates.
 pub fn metrics_json() -> Json {
-    Json::Obj(vec![("metrics".into(), Json::Arr(metric_objects()))])
+    Json::Obj(vec![
+        ("ts_ms".into(), Json::num_u64(super::now_ms())),
+        ("mono_ns".into(), Json::num_u64(super::now_ns())),
+        ("metrics".into(), Json::Arr(metric_objects())),
+    ])
 }
 
 #[cfg(test)]
@@ -187,6 +213,36 @@ mod tests {
         // The rendered document parses back (structural validity).
         let parsed = Json::parse(&doc.render()).unwrap();
         assert_eq!(parsed, doc);
+    }
+
+    #[test]
+    fn chrome_trace_synthesizes_missing_worker_labels() {
+        // Only worker 1 is labelled; worker 0's track must still get a
+        // thread_name row instead of being dropped.
+        let labels = vec![(1u32, "dse-worker-1".to_string())];
+        let doc = chrome_trace(&sample_events(), &labels);
+        let evs = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(evs.len(), 4, "2 metadata (one synthesized) + 2 events");
+        let meta_names: Vec<(u64, &str)> = evs
+            .iter()
+            .filter(|e| e.get("ph").and_then(|v| v.as_str()) == Some("M"))
+            .map(|e| {
+                (
+                    e.get("tid").and_then(|v| v.as_u64()).unwrap(),
+                    e.get("args").and_then(|a| a.get("name")).and_then(|v| v.as_str()).unwrap(),
+                )
+            })
+            .collect();
+        assert_eq!(meta_names, vec![(0, "worker-0"), (1, "dse-worker-1")]);
+    }
+
+    #[test]
+    fn metrics_json_is_timestamped() {
+        metrics::counter("test.export.ts").inc();
+        let doc = metrics_json();
+        assert!(doc.get("ts_ms").and_then(|v| v.as_u64()).unwrap_or(0) > 0);
+        assert!(doc.get("mono_ns").and_then(|v| v.as_u64()).is_some());
+        assert!(doc.get("metrics").and_then(|v| v.as_arr()).is_some());
     }
 
     #[test]

@@ -1,0 +1,436 @@
+//! Metrics history: a bounded time series over the metrics registry.
+//!
+//! [`MetricsHistory`] is the daemon-side substrate of `canal dash`: a
+//! fixed-capacity ring of timestamped [`HistorySample`]s, each one
+//! snapshot of the process-wide registry ([`super::metrics`]) plus —
+//! when a sweep is running — a rendered-down live-progress sample.
+//! A background [`HistorySampler`] thread records one sample per
+//! period; the ring drops its oldest sample once full, so memory is
+//! bounded no matter how long the daemon lives.
+//!
+//! Storage convention (mirrored in the JSON forms):
+//!
+//! - **counters** are stored as per-interval *deltas* (zero deltas are
+//!   omitted — an absent counter means "nothing happened this tick"),
+//!   so rates fall out of `delta / interval` without client-side
+//!   bookkeeping;
+//! - **gauges** and **histogram quantiles** are stored as *points*
+//!   (their value at sample time); a histogram additionally carries its
+//!   count delta so "how many observations landed in this tick" stays
+//!   answerable;
+//! - every sample carries a `ts_ms` wall-clock / `mono_ns` monotonic
+//!   timestamp pair and a strictly increasing `seq` number that
+//!   survives ring eviction, which is what lets a `watch` client
+//!   request "everything since sample N".
+//!
+//! The history is purely observational: it only ever *reads* the
+//! registry and never feeds anything back, preserving the module-wide
+//! guarantee that observability cannot change results.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::metrics::{self, MetricValue};
+use crate::util::json::Json;
+
+/// Samples kept before the ring drops its oldest (~8.5 minutes at the
+/// default period).
+pub const DEFAULT_HISTORY_CAPACITY: usize = 512;
+
+/// Default sampling period of the daemon's background sampler.
+pub const DEFAULT_HISTORY_PERIOD: Duration = Duration::from_millis(1000);
+
+/// Live sweep state folded into one history sample.
+///
+/// This is a rendered-down `crate::dse::SweepProgress` snapshot; the
+/// indirection keeps `obs` free of `dse` types (the dependency runs the
+/// other way). The service layer does the conversion.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProgressSample {
+    pub jobs_total: u64,
+    pub jobs_done: u64,
+    pub cache_hits: u64,
+    pub coalesced: u64,
+    pub cold_total: u64,
+    pub cold_done: u64,
+    pub warm_starts: u64,
+    /// Per-worker busy percentage over the sweep so far (`0..=100`).
+    pub worker_util_pct: Vec<u8>,
+}
+
+impl ProgressSample {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("jobs_total".into(), Json::num_u64(self.jobs_total)),
+            ("jobs_done".into(), Json::num_u64(self.jobs_done)),
+            ("cache_hits".into(), Json::num_u64(self.cache_hits)),
+            ("coalesced".into(), Json::num_u64(self.coalesced)),
+            ("cold_total".into(), Json::num_u64(self.cold_total)),
+            ("cold_done".into(), Json::num_u64(self.cold_done)),
+            ("warm_starts".into(), Json::num_u64(self.warm_starts)),
+            (
+                "util".into(),
+                Json::Arr(
+                    self.worker_util_pct.iter().map(|&p| Json::num_u64(u64::from(p))).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// A histogram's point-in-time quantiles plus its count delta.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantilePoint {
+    /// Observations recorded since the previous sample.
+    pub count_delta: u64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+}
+
+/// One timestamped observation of the registry (+ live sweep, if any).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistorySample {
+    /// Strictly increasing sample number; survives ring eviction.
+    pub seq: u64,
+    /// Wall-clock milliseconds since the unix epoch at sample time.
+    pub ts_ms: u64,
+    /// Monotonic nanoseconds ([`super::now_ns`]) at sample time.
+    pub mono_ns: u64,
+    /// Counter deltas since the previous sample (zero deltas omitted),
+    /// sorted by name.
+    pub counters: Vec<(String, u64)>,
+    /// Gauge values at sample time, sorted by name.
+    pub gauges: Vec<(String, i64)>,
+    /// Histogram quantile points at sample time, sorted by name.
+    pub quantiles: Vec<(String, QuantilePoint)>,
+    /// Live sweep progress, when one was running at sample time.
+    pub progress: Option<ProgressSample>,
+}
+
+impl HistorySample {
+    /// The sample as one JSON object (the wire/history-file form).
+    pub fn to_json(&self) -> Json {
+        let counters =
+            self.counters.iter().map(|(n, d)| (n.clone(), Json::num_u64(*d))).collect();
+        let gauges = self
+            .gauges
+            .iter()
+            .map(|(n, v)| (n.clone(), Json::Num(v.to_string())))
+            .collect();
+        let quantiles = self
+            .quantiles
+            .iter()
+            .map(|(n, q)| {
+                (
+                    n.clone(),
+                    Json::Obj(vec![
+                        ("count".into(), Json::num_u64(q.count_delta)),
+                        ("p50".into(), Json::num_f64(q.p50)),
+                        ("p90".into(), Json::num_f64(q.p90)),
+                        ("p99".into(), Json::num_f64(q.p99)),
+                    ]),
+                )
+            })
+            .collect();
+        let mut members = vec![
+            ("seq".into(), Json::num_u64(self.seq)),
+            ("ts_ms".into(), Json::num_u64(self.ts_ms)),
+            ("mono_ns".into(), Json::num_u64(self.mono_ns)),
+            ("counters".into(), Json::Obj(counters)),
+            ("gauges".into(), Json::Obj(gauges)),
+            ("quantiles".into(), Json::Obj(quantiles)),
+        ];
+        if let Some(p) = &self.progress {
+            members.push(("progress".into(), p.to_json()));
+        }
+        Json::Obj(members)
+    }
+}
+
+struct Inner {
+    samples: VecDeque<HistorySample>,
+    /// Last-seen cumulative counts (counters and histogram counts; the
+    /// registry guarantees one kind per name so one map serves both).
+    last_counts: HashMap<String, u64>,
+    next_seq: u64,
+}
+
+/// The ring of [`HistorySample`]s plus the delta state between samples.
+///
+/// Thread-safe; the daemon shares one instance between the sampler
+/// thread, `watch`/`history` request handlers, and the HTTP dashboard.
+pub struct MetricsHistory {
+    capacity: usize,
+    period: Duration,
+    inner: Mutex<Inner>,
+}
+
+impl MetricsHistory {
+    pub fn new(capacity: usize, period: Duration) -> MetricsHistory {
+        MetricsHistory {
+            capacity: capacity.max(1),
+            period,
+            inner: Mutex::new(Inner {
+                samples: VecDeque::new(),
+                last_counts: HashMap::new(),
+                next_seq: 0,
+            }),
+        }
+    }
+
+    /// The daemon's defaults: [`DEFAULT_HISTORY_CAPACITY`] samples at
+    /// [`DEFAULT_HISTORY_PERIOD`].
+    pub fn with_defaults() -> MetricsHistory {
+        MetricsHistory::new(DEFAULT_HISTORY_CAPACITY, DEFAULT_HISTORY_PERIOD)
+    }
+
+    pub fn period(&self) -> Duration {
+        self.period
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lock(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Take one sample now: snapshot the registry, diff counters
+    /// against the previous sample, and push (dropping the oldest
+    /// sample if the ring is full).
+    pub fn record(&self, progress: Option<ProgressSample>) {
+        let ts_ms = super::now_ms();
+        let mono_ns = super::now_ns();
+        let snap = metrics::snapshot();
+        let mut inner = self.lock();
+        let mut counters = Vec::new();
+        let mut gauges = Vec::new();
+        let mut quantiles = Vec::new();
+        for (name, value) in snap {
+            match value {
+                MetricValue::Counter(c) => {
+                    let prev = inner.last_counts.insert(name.clone(), c).unwrap_or(0);
+                    let delta = c.saturating_sub(prev);
+                    if delta > 0 {
+                        counters.push((name, delta));
+                    }
+                }
+                MetricValue::Gauge(g) => gauges.push((name, g)),
+                MetricValue::Histogram(h) => {
+                    let prev = inner.last_counts.insert(name.clone(), h.count).unwrap_or(0);
+                    quantiles.push((
+                        name,
+                        QuantilePoint {
+                            count_delta: h.count.saturating_sub(prev),
+                            p50: h.p50,
+                            p90: h.p90,
+                            p99: h.p99,
+                        },
+                    ));
+                }
+            }
+        }
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.samples.push_back(HistorySample {
+            seq,
+            ts_ms,
+            mono_ns,
+            counters,
+            gauges,
+            quantiles,
+            progress,
+        });
+        while inner.samples.len() > self.capacity {
+            inner.samples.pop_front();
+        }
+    }
+
+    /// Every sample currently in the ring, oldest first.
+    pub fn samples(&self) -> Vec<HistorySample> {
+        self.lock().samples.iter().cloned().collect()
+    }
+
+    /// Samples with `seq >= from`, oldest first, plus the cursor to
+    /// pass as `from` next time (`next_seq`). `since(0)` returns the
+    /// whole ring.
+    pub fn since(&self, from: u64) -> (u64, Vec<HistorySample>) {
+        let inner = self.lock();
+        let out = inner.samples.iter().filter(|s| s.seq >= from).cloned().collect();
+        (inner.next_seq, out)
+    }
+
+    /// The whole history as one JSON document:
+    /// `{"period_ms", "capacity", "next_seq", "samples": [...]}`.
+    pub fn to_json(&self) -> Json {
+        let inner = self.lock();
+        let samples = inner.samples.iter().map(HistorySample::to_json).collect();
+        Json::Obj(vec![
+            ("period_ms".into(), Json::num_u64(self.period.as_millis() as u64)),
+            ("capacity".into(), Json::num_u64(self.capacity as u64)),
+            ("next_seq".into(), Json::num_u64(inner.next_seq)),
+            ("samples".into(), Json::Arr(samples)),
+        ])
+    }
+}
+
+/// A background thread recording one [`MetricsHistory`] sample per
+/// period. Stops (and joins) on drop, so owning it scopes the sampling.
+pub struct HistorySampler {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HistorySampler {
+    /// Spawn the sampler. `progress` is polled once per sample and
+    /// should return the live sweep state when one is running (the
+    /// daemon wires it to the request currently holding the progress
+    /// slot; `|| None` is fine for history without sweep context).
+    pub fn spawn<F>(history: Arc<MetricsHistory>, progress: F) -> HistorySampler
+    where
+        F: Fn() -> Option<ProgressSample> + Send + 'static,
+    {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_thread = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("canal-history".into())
+            .spawn(move || {
+                while !stop_thread.load(Ordering::Relaxed) {
+                    history.record(progress());
+                    sleep_unless_stopped(history.period(), &stop_thread);
+                }
+            })
+            .expect("spawn history sampler thread");
+        HistorySampler { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for HistorySampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Sleep up to `total`, waking early (within one 25 ms chunk) when
+/// `stop` flips — keeps sampler shutdown prompt at any period.
+fn sleep_unless_stopped(total: Duration, stop: &AtomicBool) {
+    const CHUNK: Duration = Duration::from_millis(25);
+    let deadline = Instant::now() + total;
+    while !stop.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        std::thread::sleep((deadline - now).min(CHUNK));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_become_deltas_between_samples() {
+        let h = MetricsHistory::new(8, Duration::from_millis(10));
+        let c = metrics::counter("test.history.delta");
+        c.add(5);
+        h.record(None);
+        c.add(2);
+        h.record(None);
+        h.record(None);
+        let samples = h.samples();
+        assert_eq!(samples.len(), 3);
+        let delta_of = |s: &HistorySample| {
+            s.counters.iter().find(|(n, _)| n == "test.history.delta").map(|(_, d)| *d)
+        };
+        assert_eq!(delta_of(&samples[0]), Some(5), "first sample baselines at zero");
+        assert_eq!(delta_of(&samples[1]), Some(2));
+        assert_eq!(delta_of(&samples[2]), None, "zero deltas are omitted");
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_seq_survives_eviction() {
+        let h = MetricsHistory::new(3, Duration::from_millis(10));
+        for _ in 0..5 {
+            h.record(None);
+        }
+        let samples = h.samples();
+        assert_eq!(samples.len(), 3);
+        assert_eq!(samples[0].seq, 2, "oldest two were evicted");
+        assert_eq!(samples[2].seq, 4);
+        let (next, since) = h.since(3);
+        assert_eq!(next, 5);
+        assert_eq!(since.iter().map(|s| s.seq).collect::<Vec<_>>(), vec![3, 4]);
+    }
+
+    #[test]
+    fn samples_carry_monotone_timestamps() {
+        let h = MetricsHistory::new(4, Duration::from_millis(10));
+        h.record(None);
+        h.record(None);
+        let s = h.samples();
+        assert!(s[0].ts_ms > 0, "wall clock must be stamped");
+        assert!(s[1].mono_ns > s[0].mono_ns, "monotonic clock must advance");
+    }
+
+    #[test]
+    fn quantiles_and_progress_serialize() {
+        let h = MetricsHistory::new(4, Duration::from_millis(10));
+        metrics::histogram("test.history.hist").record(100);
+        metrics::gauge("test.history.gauge").set(-3);
+        h.record(Some(ProgressSample {
+            jobs_total: 4,
+            jobs_done: 2,
+            cold_total: 3,
+            cold_done: 1,
+            worker_util_pct: vec![93, 88],
+            ..Default::default()
+        }));
+        let doc = h.to_json();
+        let line = doc.render_line();
+        let parsed = Json::parse(&line).expect("history JSON must parse");
+        let samples = parsed.get("samples").and_then(Json::as_arr).unwrap();
+        let s = samples.last().unwrap();
+        let q = s.get("quantiles").and_then(|q| q.get("test.history.hist")).unwrap();
+        assert_eq!(q.get("count").and_then(Json::as_u64), Some(1));
+        assert_eq!(q.get("p50").and_then(Json::as_f64), Some(100.0));
+        let g = s.get("gauges").and_then(|g| g.get("test.history.gauge"));
+        assert_eq!(g.and_then(Json::as_f64), Some(-3.0));
+        let p = s.get("progress").unwrap();
+        assert_eq!(p.get("jobs_done").and_then(Json::as_u64), Some(2));
+        let util = p.get("util").and_then(Json::as_arr).unwrap();
+        assert_eq!(util.len(), 2);
+        assert_eq!(parsed.get("period_ms").and_then(Json::as_u64), Some(10));
+    }
+
+    #[test]
+    fn sampler_thread_records_and_stops_on_drop() {
+        let h = Arc::new(MetricsHistory::new(16, Duration::from_millis(5)));
+        let sampler = HistorySampler::spawn(Arc::clone(&h), || None);
+        let t0 = Instant::now();
+        while h.is_empty() && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!h.is_empty(), "sampler never recorded a sample");
+        drop(sampler);
+        let n = h.len();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(h.len(), n, "sampler must stop recording once dropped");
+    }
+}

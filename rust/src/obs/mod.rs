@@ -9,7 +9,10 @@
 //!   log-bucketed histograms (p50/p90/p99 without external deps);
 //! - [`export`] — Chrome trace-event JSON (one track per worker, loads
 //!   directly in Perfetto / `chrome://tracing`) and an NDJSON metrics
-//!   snapshot.
+//!   snapshot;
+//! - [`history`] — a fixed-capacity ring of timestamped registry
+//!   samples (counters as deltas, gauges/quantiles as points) recorded
+//!   by a background sampler thread — the data source of `canal dash`.
 //!
 //! # The gate
 //!
@@ -29,6 +32,7 @@
 //! `docs/observability.md`.
 
 pub mod export;
+pub mod history;
 pub mod metrics;
 pub mod span;
 
@@ -37,6 +41,7 @@ use std::sync::OnceLock;
 use std::time::Instant;
 
 pub use export::{chrome_trace, metrics_json, metrics_ndjson, write_chrome_trace};
+pub use history::{HistorySample, HistorySampler, MetricsHistory, ProgressSample};
 pub use metrics::{Counter, Gauge, Histogram, MetricValue};
 pub use span::{event, span, stage, SpanEvent, SpanGuard, SpanKind, StageGuard};
 
@@ -118,6 +123,15 @@ pub fn enabled() -> bool {
 pub fn now_ns() -> u64 {
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+/// Wall-clock milliseconds since the unix epoch (0 if the system clock
+/// sits before it). Paired with [`now_ns`] on every timestamped frame
+/// and history sample: `ts_ms` anchors the series to human time,
+/// `mono_ns` makes intervals trustworthy under clock steps.
+pub fn now_ms() -> u64 {
+    use std::time::{SystemTime, UNIX_EPOCH};
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_millis() as u64).unwrap_or(0)
 }
 
 /// Serializes unit tests that flip the process-global gate, so one

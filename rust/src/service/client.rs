@@ -54,8 +54,41 @@ impl Client {
         loop {
             match self.read_frame()? {
                 Frame::Progress { message, .. } => on_progress(&message),
+                // History frames only flow on `watch` connections (use
+                // `call_frames` for those); tolerate one anywhere.
+                Frame::History { .. } => {}
                 Frame::Result { data, .. } => return Ok(data),
                 Frame::Error { error, .. } => return Err(error),
+            }
+        }
+    }
+
+    /// Send one request and stream **every** frame — progress, history,
+    /// result, error — into `on_frame` until it returns `false`, the
+    /// request reaches a terminal frame, or the connection drops.
+    ///
+    /// This is the `watch` entry point: a `watch` request never sends a
+    /// terminal frame, so the callback's return value (or disconnect)
+    /// is what ends the stream. `Ok` carries the terminal frame when
+    /// one arrived, `None` when the callback stopped the stream first.
+    pub fn call_frames<F: FnMut(&Frame) -> bool>(
+        &mut self,
+        req: &Request,
+        mut on_frame: F,
+    ) -> Result<Option<Frame>, String> {
+        self.next_id += 1;
+        let id = self.next_id;
+        let mut line = proto::request_line(id, req);
+        line.push('\n');
+        self.writer.write_all(line.as_bytes()).map_err(|e| format!("send: {e}"))?;
+        loop {
+            let frame = self.read_frame()?;
+            let keep_going = on_frame(&frame);
+            if frame.is_terminal() {
+                return Ok(Some(frame));
+            }
+            if !keep_going {
+                return Ok(None);
             }
         }
     }

@@ -1,0 +1,485 @@
+//! The `/dash` page: one self-contained HTML document with inline SVG
+//! charts over the daemon's [`MetricsHistory`] ring, the current
+//! metrics snapshot, and the persisted Pareto archive.
+//!
+//! Self-contained is the contract: no external JS, CSS, fonts, or
+//! images — the page is a single `String` a browser renders offline,
+//! so `curl http://daemon/dash > dash.html` is a complete artifact of
+//! a run. Charts are plain SVG polylines/rects/circles computed here;
+//! there is no client-side code at all (reload for fresh data — the
+//! live view is `canal client --watch`/`--dash`).
+//!
+//! [`MetricsHistory`]: crate::obs::MetricsHistory
+
+use crate::obs;
+use crate::obs::metrics::MetricValue;
+use crate::obs::HistorySample;
+use crate::util::json::Json;
+
+/// Chart canvas size (one size fits every panel; the page scales them
+/// with CSS width).
+const CHART_W: f64 = 560.0;
+const CHART_H: f64 = 120.0;
+/// Inset so strokes at the extremes stay visible.
+const PAD: f64 = 4.0;
+
+/// Escape a string for HTML text/attribute context.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Compact human number (charts and table cells).
+fn fmt_num(v: f64) -> String {
+    if !v.is_finite() {
+        return "-".into();
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+/// Map `values` onto an SVG polyline `points` attribute, y-flipped
+/// (SVG grows downward) and scaled to `[vmin, vmax]`. Non-finite
+/// values clamp to `vmin` rather than poisoning the path.
+fn polyline_points(values: &[f64], vmin: f64, vmax: f64) -> String {
+    let n = values.len();
+    if n == 0 {
+        return String::new();
+    }
+    let span = (vmax - vmin).max(1e-9);
+    let dx = if n > 1 { (CHART_W - 2.0 * PAD) / (n - 1) as f64 } else { 0.0 };
+    let mut out = String::new();
+    for (i, &v) in values.iter().enumerate() {
+        let v = if v.is_finite() { v.clamp(vmin, vmax) } else { vmin };
+        let x = PAD + dx * i as f64;
+        let y = CHART_H - PAD - (v - vmin) / span * (CHART_H - 2.0 * PAD);
+        if i > 0 {
+            out.push(' ');
+        }
+        out.push_str(&format!("{x:.1},{y:.1}"));
+    }
+    out
+}
+
+/// One `<svg>` line chart with any number of named series on a shared
+/// y-scale (computed from the data, floored at zero).
+fn line_chart(title: &str, series: &[(&str, &str, Vec<f64>)]) -> String {
+    let mut vmax = 0.0f64;
+    for (_, _, values) in series {
+        for &v in values {
+            if v.is_finite() {
+                vmax = vmax.max(v);
+            }
+        }
+    }
+    let vmax = if vmax > 0.0 { vmax } else { 1.0 };
+    let mut svg = format!(
+        "<svg viewBox=\"0 0 {CHART_W} {CHART_H}\" role=\"img\" aria-label=\"{}\">\
+         <rect x=\"0\" y=\"0\" width=\"{CHART_W}\" height=\"{CHART_H}\" class=\"bg\"/>",
+        esc(title)
+    );
+    for (_, color, values) in series {
+        let pts = polyline_points(values, 0.0, vmax);
+        if !pts.is_empty() {
+            svg.push_str(&format!(
+                "<polyline fill=\"none\" stroke=\"{color}\" stroke-width=\"1.5\" points=\"{pts}\"/>"
+            ));
+        }
+    }
+    svg.push_str("</svg>");
+    let legend: Vec<String> = series
+        .iter()
+        .map(|(name, color, values)| {
+            let last = values.iter().rev().find(|v| v.is_finite()).copied().unwrap_or(0.0);
+            format!(
+                "<span class=\"key\"><span class=\"swatch\" style=\"background:{color}\"></span>{} {}</span>",
+                esc(name),
+                fmt_num(last)
+            )
+        })
+        .collect();
+    format!(
+        "<section><h2>{}</h2>{svg}<p class=\"legend\">peak {} · {}</p></section>",
+        esc(title),
+        fmt_num(vmax),
+        legend.join(" ")
+    )
+}
+
+/// Per-sample deltas summed over every counter whose name starts with
+/// `prefix`.
+fn counter_delta_series(samples: &[HistorySample], prefix: &str) -> Vec<f64> {
+    samples
+        .iter()
+        .map(|s| {
+            s.counters
+                .iter()
+                .filter(|(n, _)| n.starts_with(prefix))
+                .map(|(_, d)| *d as f64)
+                .sum()
+        })
+        .collect()
+}
+
+/// One quantile field of a named histogram across the samples
+/// (`f64::NAN` where the histogram is absent — the polyline clamps).
+fn quantile_series(
+    samples: &[HistorySample],
+    name: &str,
+    pick: impl Fn(&crate::obs::history::QuantilePoint) -> f64,
+) -> Vec<f64> {
+    samples
+        .iter()
+        .map(|s| {
+            s.quantiles
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, q)| pick(q))
+                .unwrap_or(f64::NAN)
+        })
+        .collect()
+}
+
+/// The per-worker utilization timeline: one polyline per worker over
+/// every sample that carried live-sweep progress (gaps between sweeps
+/// read as 0%).
+fn utilization_chart(samples: &[HistorySample]) -> String {
+    let workers = samples
+        .iter()
+        .filter_map(|s| s.progress.as_ref())
+        .map(|p| p.worker_util_pct.len())
+        .max()
+        .unwrap_or(0);
+    if workers == 0 {
+        return "<section><h2>worker utilization</h2><p class=\"empty\">no sweep has run \
+                yet — utilization appears while a sweep is live</p></section>"
+            .into();
+    }
+    const PALETTE: [&str; 6] =
+        ["#2f6fde", "#d9822b", "#2e9e44", "#c43d56", "#7b51c9", "#1d9e9e"];
+    let mut series: Vec<(String, &str, Vec<f64>)> = Vec::with_capacity(workers);
+    for w in 0..workers {
+        let values: Vec<f64> = samples
+            .iter()
+            .map(|s| {
+                s.progress
+                    .as_ref()
+                    .and_then(|p| p.worker_util_pct.get(w))
+                    .map(|&pct| f64::from(pct))
+                    .unwrap_or(0.0)
+            })
+            .collect();
+        series.push((format!("w{w}"), PALETTE[w % PALETTE.len()], values));
+    }
+    let named: Vec<(&str, &str, Vec<f64>)> =
+        series.iter().map(|(n, c, v)| (n.as_str(), *c, v.clone())).collect();
+    line_chart("worker utilization (%)", &named)
+}
+
+/// The live (or most recent) sweep as progress bars.
+fn progress_section(samples: &[HistorySample]) -> String {
+    let Some(p) = samples.iter().rev().find_map(|s| s.progress.as_ref()) else {
+        return String::new();
+    };
+    let bar = |label: &str, done: u64, total: u64| {
+        let frac = if total > 0 { done as f64 / total as f64 } else { 0.0 };
+        let w = (CHART_W - 2.0 * PAD) * frac.clamp(0.0, 1.0);
+        format!(
+            "<p class=\"barlabel\">{label}: {done}/{total}</p>\
+             <svg viewBox=\"0 0 {CHART_W} 14\"><rect x=\"{PAD}\" y=\"2\" \
+             width=\"{:.1}\" height=\"10\" class=\"bg\"/><rect x=\"{PAD}\" y=\"2\" \
+             width=\"{w:.1}\" height=\"10\" fill=\"#2e9e44\"/></svg>",
+            CHART_W - 2.0 * PAD
+        )
+    };
+    format!(
+        "<section><h2>sweep progress</h2>{}{}<p class=\"legend\">{} cached · {} \
+         coalesced · {} warm-started</p></section>",
+        bar("jobs", p.jobs_done, p.jobs_total),
+        bar("cold points", p.cold_done, p.cold_total),
+        p.cache_hits,
+        p.coalesced,
+        p.warm_starts
+    )
+}
+
+/// The Pareto frontier as an area×period scatter (one circle per
+/// archive entry).
+fn frontier_chart(archive: &Json) -> String {
+    let entries = archive.get("entries").and_then(Json::as_arr);
+    let points: Vec<(f64, f64, String)> = entries
+        .map(|es| {
+            es.iter()
+                .filter_map(|e| {
+                    let area = e.get("area_um2").and_then(Json::as_f64)?;
+                    let period = e.get("period_ps").and_then(Json::as_f64)?;
+                    if !area.is_finite() || !period.is_finite() {
+                        return None;
+                    }
+                    let label = e.get("config").and_then(Json::as_str).unwrap_or("?");
+                    Some((area, period, label.to_string()))
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    if points.is_empty() {
+        return "<section><h2>pareto frontier</h2><p class=\"empty\">archive is empty — \
+                run <code>canal client tune</code> against a file-backed daemon</p>\
+                </section>"
+            .into();
+    }
+    let (mut amin, mut amax, mut pmin, mut pmax) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for (a, p, _) in &points {
+        amin = amin.min(*a);
+        amax = amax.max(*a);
+        pmin = pmin.min(*p);
+        pmax = pmax.max(*p);
+    }
+    let aspan = (amax - amin).max(1e-9);
+    let pspan = (pmax - pmin).max(1e-9);
+    let mut svg = format!(
+        "<svg viewBox=\"0 0 {CHART_W} {CHART_H}\" role=\"img\" aria-label=\"pareto \
+         frontier\"><rect x=\"0\" y=\"0\" width=\"{CHART_W}\" height=\"{CHART_H}\" \
+         class=\"bg\"/>"
+    );
+    for (a, p, label) in &points {
+        let x = PAD + (a - amin) / aspan * (CHART_W - 2.0 * PAD);
+        let y = CHART_H - PAD - (p - pmin) / pspan * (CHART_H - 2.0 * PAD);
+        svg.push_str(&format!(
+            "<circle cx=\"{x:.1}\" cy=\"{y:.1}\" r=\"3.5\" fill=\"#2f6fde\">\
+             <title>{}: {} µm² × {} ps</title></circle>",
+            esc(label),
+            fmt_num(*a),
+            fmt_num(*p)
+        ));
+    }
+    svg.push_str("</svg>");
+    format!(
+        "<section><h2>pareto frontier</h2>{svg}<p class=\"legend\">{} entries · area \
+         {}–{} µm² · period {}–{} ps</p></section>",
+        points.len(),
+        fmt_num(amin),
+        fmt_num(amax),
+        fmt_num(pmin),
+        fmt_num(pmax)
+    )
+}
+
+/// The current registry snapshot as a table (the page's "live counter
+/// values" — what smoke tests grep for).
+fn metrics_table(metrics: &[(String, MetricValue)]) -> String {
+    let mut rows = String::new();
+    for (name, value) in metrics {
+        let (kind, rendered) = match value {
+            MetricValue::Counter(v) => ("counter", fmt_num(*v as f64)),
+            MetricValue::Gauge(v) => ("gauge", v.to_string()),
+            MetricValue::Histogram(h) => (
+                "histogram",
+                format!(
+                    "n={} p50={} p90={} p99={}",
+                    h.count,
+                    fmt_num(h.p50),
+                    fmt_num(h.p90),
+                    fmt_num(h.p99)
+                ),
+            ),
+        };
+        rows.push_str(&format!(
+            "<tr><td>{}</td><td>{kind}</td><td>{rendered}</td></tr>",
+            esc(name)
+        ));
+    }
+    format!(
+        "<section><h2>metrics</h2><table><thead><tr><th>metric</th><th>type</th>\
+         <th>value</th></tr></thead><tbody>{rows}</tbody></table></section>"
+    )
+}
+
+/// Render the whole dashboard page.
+///
+/// Pure function of its inputs (plus the "generated at" stamp), so unit
+/// tests drive it without a socket; the server calls it with the live
+/// ring, the live registry snapshot, and the archive file's contents.
+pub fn dash_page(
+    samples: &[HistorySample],
+    metrics: &[(String, MetricValue)],
+    archive: &Json,
+) -> String {
+    let requests = counter_delta_series(samples, "service.request.");
+    let latency = vec![
+        (
+            "p50",
+            "#2e9e44",
+            quantile_series(samples, "service.request.latency_us", |q| q.p50),
+        ),
+        (
+            "p90",
+            "#d9822b",
+            quantile_series(samples, "service.request.latency_us", |q| q.p90),
+        ),
+        (
+            "p99",
+            "#c43d56",
+            quantile_series(samples, "service.request.latency_us", |q| q.p99),
+        ),
+    ];
+    let hits = counter_delta_series(samples, "engine.cache_hits");
+    let jobs = counter_delta_series(samples, "engine.jobs");
+    let hit_rate: Vec<f64> = hits
+        .iter()
+        .zip(&jobs)
+        .map(|(&h, &j)| if j > 0.0 { h / j * 100.0 } else { 0.0 })
+        .collect();
+    let (total_hits, total_jobs) = metrics.iter().fold((0u64, 0u64), |acc, (n, v)| {
+        match (n.as_str(), v) {
+            ("engine.cache_hits", MetricValue::Counter(c)) => (acc.0 + c, acc.1),
+            ("engine.jobs", MetricValue::Counter(c)) => (acc.0, acc.1 + c),
+            _ => acc,
+        }
+    });
+    let lifetime_rate = if total_jobs > 0 {
+        format!("{:.1}% lifetime ({total_hits}/{total_jobs})", total_hits as f64
+            / total_jobs as f64
+            * 100.0)
+    } else {
+        "no jobs yet".into()
+    };
+
+    let mut body = String::new();
+    body.push_str(&line_chart(
+        "requests per sample",
+        &[("requests", "#2f6fde", requests)],
+    ));
+    body.push_str(&line_chart("request latency (µs)", &latency));
+    body.push_str(&line_chart(
+        "dse cache hit rate (%)",
+        &[("hit rate", "#7b51c9", hit_rate)],
+    ));
+    body.push_str(&format!("<p class=\"legend\">{}</p>", esc(&lifetime_rate)));
+    body.push_str(&progress_section(samples));
+    body.push_str(&utilization_chart(samples));
+    body.push_str(&frontier_chart(archive));
+    body.push_str(&metrics_table(metrics));
+
+    let style = "body{font-family:ui-monospace,monospace;margin:1.5rem auto;max-width:620px;\
+                 color:#222;background:#fdfdfc}h1{font-size:1.3rem}h2{font-size:0.95rem;\
+                 margin:1.2rem 0 0.3rem}svg{width:100%;height:auto;display:block}\
+                 .bg{fill:#f0f0ee}.legend{font-size:0.75rem;color:#666;margin:0.2rem 0}\
+                 .key{margin-right:0.8rem}.swatch{display:inline-block;width:0.7em;\
+                 height:0.7em;margin-right:0.25em}.barlabel{font-size:0.75rem;margin:0.4rem 0 0.1rem}\
+                 .empty{font-size:0.8rem;color:#888}table{border-collapse:collapse;\
+                 font-size:0.75rem;width:100%}th,td{text-align:left;padding:0.15rem 0.5rem;\
+                 border-bottom:1px solid #eee}";
+    format!(
+        "<!DOCTYPE html><html lang=\"en\"><head><meta charset=\"utf-8\">\
+         <title>canal dash</title><style>{style}</style></head><body>\
+         <h1>canal dash</h1><p class=\"legend\">generated at ts_ms {} · mono_ns {} · \
+         {} history samples · reload for fresh data</p>{body}</body></html>",
+        obs::now_ms(),
+        obs::now_ns(),
+        samples.len()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::history::{ProgressSample, QuantilePoint};
+
+    fn sample(seq: u64, with_progress: bool) -> HistorySample {
+        HistorySample {
+            seq,
+            ts_ms: 1_754_640_000_000 + seq,
+            mono_ns: seq * 1_000_000,
+            counters: vec![
+                ("engine.cache_hits".into(), 3),
+                ("engine.jobs".into(), 4),
+                ("service.request.dse".into(), 2),
+            ],
+            gauges: vec![("service.queue.depth".into(), 1)],
+            quantiles: vec![(
+                "service.request.latency_us".into(),
+                QuantilePoint { count_delta: 2, p50: 120.0, p90: 300.0, p99: 900.0 },
+            )],
+            progress: with_progress.then(|| ProgressSample {
+                jobs_total: 8,
+                jobs_done: 4,
+                cache_hits: 2,
+                cold_total: 6,
+                cold_done: 2,
+                worker_util_pct: vec![93, 88],
+                ..Default::default()
+            }),
+        }
+    }
+
+    fn archive() -> Json {
+        Json::parse(
+            "{\"version\":1,\"entries\":[{\"config\":\"t2\",\"area_um2\":1200.5,\
+             \"period_ps\":850.0},{\"config\":\"t4\",\"area_um2\":2400.0,\
+             \"period_ps\":610.0}]}",
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn page_is_self_contained_html_with_charts() {
+        let samples = vec![sample(0, false), sample(1, true), sample(2, true)];
+        let metrics = vec![
+            ("engine.cache_hits".into(), MetricValue::Counter(9)),
+            ("engine.jobs".into(), MetricValue::Counter(12)),
+            ("service.request.dse".into(), MetricValue::Counter(6)),
+        ];
+        let page = dash_page(&samples, &metrics, &archive());
+        assert!(page.starts_with("<!DOCTYPE html>"));
+        assert!(page.contains("<svg"), "charts must be inline SVG");
+        assert!(page.contains("polyline"), "line charts present");
+        assert!(page.contains("service.request.dse"), "live counters in the table");
+        assert!(page.contains("worker utilization"), "util timeline present");
+        assert!(page.contains("pareto frontier"));
+        assert!(page.contains("<circle"), "frontier scatter has points");
+        assert!(page.contains("75.0% lifetime (9/12)"));
+        // Self-contained: no external fetches of any kind.
+        assert!(!page.contains("<script"));
+        assert!(!page.contains("<link"));
+        assert!(!page.contains("http://") && !page.contains("https://"));
+    }
+
+    #[test]
+    fn empty_inputs_render_a_valid_page() {
+        let page = dash_page(&[], &[], &Json::Obj(vec![]));
+        assert!(page.contains("<svg"), "charts render even with no data");
+        assert!(page.contains("archive is empty"));
+        assert!(page.contains("no sweep has run yet"));
+        assert!(page.contains("0 history samples"));
+    }
+
+    #[test]
+    fn non_finite_values_never_reach_the_svg() {
+        let mut s = sample(0, false);
+        s.quantiles = vec![(
+            "service.request.latency_us".into(),
+            QuantilePoint {
+                count_delta: 1,
+                p50: f64::NAN,
+                p90: f64::INFINITY,
+                p99: 1.0,
+            },
+        )];
+        let page = dash_page(&[s], &[], &Json::Obj(vec![]));
+        assert!(!page.contains("NaN") && !page.contains("inf"), "values are clamped");
+    }
+}

@@ -15,11 +15,16 @@
 //!   concurrency);
 //! - [`proto`] — the newline-delimited JSON protocol: typed requests
 //!   (`generate`, `pnr`, `simulate`, `dse`, `area`, `figure`, plus
-//!   `ping`/`info`/`stats`/`shutdown`) and streamed response frames
-//!   (progress events, then one terminal result or error);
+//!   `ping`/`info`/`stats`/`metrics`/`history`/`watch`/`shutdown`) and
+//!   streamed response frames (timestamped progress and history events,
+//!   then one terminal result or error);
 //! - [`server`] — `std::net::TcpListener` + a connection worker pool,
 //!   with graceful drain on `shutdown` requests and SIGTERM/SIGINT
-//!   (in-flight jobs finish, the cache is flushed, exit is clean);
+//!   (in-flight jobs finish, the cache is flushed, exit is clean), plus
+//!   a minimal HTTP responder on the same port (`GET /dash`,
+//!   `/metrics.json`, `/history.json`, `/archive.json`);
+//! - [`dash`] — the self-contained HTML+SVG dashboard page behind
+//!   `GET /dash`;
 //! - [`client`] — the thin blocking client behind `canal client`.
 //!
 //! Everything is `std`-only, consistent with the crate's offline
@@ -36,6 +41,7 @@
 //! The narrative protocol reference lives in `docs/service.md`.
 
 pub mod client;
+pub mod dash;
 pub mod proto;
 pub mod server;
 pub mod state;

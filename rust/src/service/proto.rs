@@ -14,9 +14,9 @@
 //! `{"id": <u64>, "cmd": "<name>", ...params}` — the `id` is chosen by
 //! the client and echoed on every response frame, so a client can match
 //! responses even though the server handles one request per connection
-//! at a time. Commands: `ping`, `info`, `stats`, `metrics`, `generate`,
-//! `pnr`, `simulate`, `dse`, `tune`, `area`, `figure`, `shutdown` (see
-//! [`Request`]).
+//! at a time. Commands: `ping`, `info`, `stats`, `metrics`, `history`,
+//! `watch`, `generate`, `pnr`, `simulate`, `dse`, `tune`, `area`,
+//! `figure`, `shutdown` (see [`Request`]).
 //!
 //! ## Responses
 //!
@@ -24,10 +24,18 @@
 //! exactly one terminal frame — *result* or *error*:
 //!
 //! ```json
-//! {"id":7,"frame":"progress","message":"12 jobs: 8 cached, 4 cold"}
+//! {"id":7,"frame":"progress","message":"12 jobs: 8 cached, 4 cold","ts_ms":1754640000123,"mono_ns":98765}
 //! {"id":7,"frame":"result","data":{...}}
 //! {"id":7,"frame":"error","error":"unknown app `nope`"}
 //! ```
+//!
+//! Progress frames carry a `ts_ms` wall-clock / `mono_ns` monotonic
+//! timestamp pair stamped at emit time (absent on pre-dash servers;
+//! parsed as 0). The one exception to "exactly one terminal frame" is
+//! `watch`: it streams *history* frames (`"frame":"history"`, same
+//! timestamp pair plus a `data` payload of [`crate::obs::history`]
+//! samples) until the client disconnects — it never terminates on its
+//! own, so a watch connection is dedicated to watching.
 //!
 //! A line the server cannot parse at all is answered with an error
 //! frame carrying `id: 0`, after which the server closes the
@@ -65,6 +73,14 @@ pub enum Request {
     /// ([`crate::obs::metrics`]): every counter/gauge/histogram the
     /// daemon has recorded, as `{"metrics":[...]}`.
     Metrics,
+    /// One-shot dump of the daemon's [`crate::obs::MetricsHistory`]
+    /// ring: every retained timestamped sample, as
+    /// `{"period_ms","capacity","next_seq","samples":[...]}`.
+    History,
+    /// Streaming follow of the same history: periodic `history` frames
+    /// carrying the samples recorded since the previous frame, until
+    /// the client disconnects (never a terminal frame).
+    Watch,
     /// Build an interconnect and report its shape.
     Generate(GenParams),
     /// Place-and-route a single application: a one-job sweep through
@@ -327,6 +343,8 @@ pub fn request_line(id: u64, req: &Request) -> String {
         Request::Info => cmd(&mut members, "info"),
         Request::Stats => cmd(&mut members, "stats"),
         Request::Metrics => cmd(&mut members, "metrics"),
+        Request::History => cmd(&mut members, "history"),
+        Request::Watch => cmd(&mut members, "watch"),
         Request::Shutdown => cmd(&mut members, "shutdown"),
         Request::Generate(g) => {
             cmd(&mut members, "generate");
@@ -382,6 +400,8 @@ pub fn parse_request(line: &str) -> Result<(u64, Request), String> {
         "info" => Request::Info,
         "stats" => Request::Stats,
         "metrics" => Request::Metrics,
+        "history" => Request::History,
+        "watch" => Request::Watch,
         "shutdown" => Request::Shutdown,
         "generate" => {
             let d = GenParams::default();
@@ -428,23 +448,45 @@ pub fn parse_request(line: &str) -> Result<(u64, Request), String> {
 /// One server→client frame.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Frame {
-    Progress { id: u64, message: String },
+    /// A human-readable status line (heartbeats, sweep stages), stamped
+    /// with the emit time. `ts_ms`/`mono_ns` parse as 0 from pre-dash
+    /// servers that didn't send them.
+    Progress { id: u64, message: String, ts_ms: u64, mono_ns: u64 },
+    /// A batch of [`crate::obs::history`] samples (the `watch` stream),
+    /// stamped with the emit time.
+    History { id: u64, ts_ms: u64, mono_ns: u64, data: Json },
     Result { id: u64, data: Json },
     Error { id: u64, error: String },
 }
 
 impl Frame {
+    /// A progress frame stamped with the current wall/monotonic time.
+    pub fn progress(id: u64, message: impl Into<String>) -> Frame {
+        Frame::Progress {
+            id,
+            message: message.into(),
+            ts_ms: crate::obs::now_ms(),
+            mono_ns: crate::obs::now_ns(),
+        }
+    }
+
+    /// A history frame stamped with the current wall/monotonic time.
+    pub fn history(id: u64, data: Json) -> Frame {
+        Frame::History { id, data, ts_ms: crate::obs::now_ms(), mono_ns: crate::obs::now_ns() }
+    }
+
     pub fn id(&self) -> u64 {
         match self {
-            Frame::Progress { id, .. } | Frame::Result { id, .. } | Frame::Error { id, .. } => {
-                *id
-            }
+            Frame::Progress { id, .. }
+            | Frame::History { id, .. }
+            | Frame::Result { id, .. }
+            | Frame::Error { id, .. } => *id,
         }
     }
 
     /// `true` for the frame that ends a request (result or error).
     pub fn is_terminal(&self) -> bool {
-        !matches!(self, Frame::Progress { .. })
+        !matches!(self, Frame::Progress { .. } | Frame::History { .. })
     }
 
     /// Serialize as a single line (no trailing newline). The
@@ -452,10 +494,19 @@ impl Frame {
     /// text and table content from breaking the framing.
     pub fn to_line(&self) -> String {
         let v = match self {
-            Frame::Progress { id, message } => Json::Obj(vec![
+            Frame::Progress { id, message, ts_ms, mono_ns } => Json::Obj(vec![
                 ("id".into(), Json::num_u64(*id)),
                 ("frame".into(), Json::str("progress")),
                 ("message".into(), Json::str(message)),
+                ("ts_ms".into(), Json::num_u64(*ts_ms)),
+                ("mono_ns".into(), Json::num_u64(*mono_ns)),
+            ]),
+            Frame::History { id, ts_ms, mono_ns, data } => Json::Obj(vec![
+                ("id".into(), Json::num_u64(*id)),
+                ("frame".into(), Json::str("history")),
+                ("ts_ms".into(), Json::num_u64(*ts_ms)),
+                ("mono_ns".into(), Json::num_u64(*mono_ns)),
+                ("data".into(), data.clone()),
             ]),
             Frame::Result { id, data } => Json::Obj(vec![
                 ("id".into(), Json::num_u64(*id)),
@@ -474,6 +525,7 @@ impl Frame {
     pub fn parse(line: &str) -> Result<Frame, String> {
         let v = Json::parse(line)?;
         let id = v.get("id").and_then(Json::as_u64).ok_or("frame: missing `id`")?;
+        let stamp = |k: &str| v.get(k).and_then(Json::as_u64).unwrap_or(0);
         match v.get("frame").and_then(Json::as_str) {
             Some("progress") => Ok(Frame::Progress {
                 id,
@@ -482,6 +534,14 @@ impl Frame {
                     .and_then(Json::as_str)
                     .unwrap_or_default()
                     .to_string(),
+                ts_ms: stamp("ts_ms"),
+                mono_ns: stamp("mono_ns"),
+            }),
+            Some("history") => Ok(Frame::History {
+                id,
+                ts_ms: stamp("ts_ms"),
+                mono_ns: stamp("mono_ns"),
+                data: v.get("data").cloned().unwrap_or(Json::Null),
             }),
             Some("result") => {
                 Ok(Frame::Result { id, data: v.get("data").cloned().unwrap_or(Json::Null) })
@@ -630,6 +690,8 @@ mod tests {
             Request::Info,
             Request::Stats,
             Request::Metrics,
+            Request::History,
+            Request::Watch,
             Request::Shutdown,
             Request::Generate(GenParams {
                 tracks: Some(4),
@@ -733,7 +795,18 @@ mod tests {
     #[test]
     fn frames_roundtrip_and_stay_single_line() {
         let frames = vec![
-            Frame::Progress { id: 3, message: "multi\nline\rmessage".into() },
+            Frame::Progress {
+                id: 3,
+                message: "multi\nline\rmessage".into(),
+                ts_ms: 1_754_640_000_123,
+                mono_ns: 42_000,
+            },
+            Frame::History {
+                id: 6,
+                ts_ms: 1_754_640_000_456,
+                mono_ns: 43_000,
+                data: Json::Obj(vec![("samples".into(), Json::Arr(vec![]))]),
+            },
             Frame::Result {
                 id: 4,
                 data: Json::Obj(vec![("table".into(), Json::str("a | b\nc | d\n"))]),
@@ -748,7 +821,30 @@ mod tests {
         assert!(Frame::parse(r#"{"id":1}"#).is_err());
         assert!(Frame::parse(r#"{"id":1,"frame":"warp"}"#).is_err());
         assert!(Frame::Error { id: 1, error: "x".into() }.is_terminal());
-        assert!(!Frame::Progress { id: 1, message: "x".into() }.is_terminal());
+        assert!(!Frame::progress(1, "x").is_terminal());
+        assert!(!Frame::history(1, Json::Null).is_terminal());
+    }
+
+    #[test]
+    fn frame_constructors_stamp_both_clocks() {
+        let a = Frame::progress(1, "tick");
+        let b = Frame::progress(1, "tock");
+        match (&a, &b) {
+            (
+                Frame::Progress { ts_ms, mono_ns, .. },
+                Frame::Progress { mono_ns: later, .. },
+            ) => {
+                assert!(*ts_ms > 0, "wall clock must be stamped");
+                assert!(later >= mono_ns, "monotonic stamps never go backwards");
+            }
+            other => panic!("expected progress frames, got {other:?}"),
+        }
+        // A pre-dash frame without stamps still parses (as zero).
+        let old = Frame::parse(r#"{"id":9,"frame":"progress","message":"hi"}"#).unwrap();
+        assert_eq!(
+            old,
+            Frame::Progress { id: 9, message: "hi".into(), ts_ms: 0, mono_ns: 0 }
+        );
     }
 
     #[test]

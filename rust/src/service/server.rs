@@ -35,6 +35,18 @@
 //! can no longer be trusted. A client that disconnects mid-request
 //! costs nothing but the wasted write: the computation still completes
 //! and its results stay in the shared cache for the next session.
+//!
+//! ## The HTTP surface
+//!
+//! The same listener doubles as a minimal HTTP responder: a first line
+//! starting with `GET ` is treated as an HTTP request (browsers and
+//! `curl` need no special port), served one response
+//! (`Connection: close`), and the connection closes — everything else
+//! is NDJSON, byte-identical to a daemon without the sniff. Routes:
+//! `/dash` (self-contained HTML dashboard, inline SVG),
+//! `/metrics.json`, `/history.json`, and `/archive.json`. HTTP hits
+//! count under `service.http.*` metrics, never under the NDJSON
+//! request counters.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -53,9 +65,11 @@ use crate::hw::{allocate, lower_ready_valid, lower_static, RvOptions};
 use crate::obs;
 use crate::obs::metrics::{counter, gauge, histogram, Counter};
 use crate::obs::span::names as spans;
+use crate::obs::HistorySampler;
 use crate::sim::{RvSim, StallPattern};
 use crate::util::json::Json;
 
+use super::dash;
 use super::proto::{self, DseParams, Frame, GenParams, Request, SimParams, PROTO_VERSION};
 use super::state::{SessionState, StateOptions};
 
@@ -74,6 +88,11 @@ const READ_POLL_BACKOFF_MAX: u32 = 4;
 
 /// Default for [`ServeOptions::heartbeat`].
 const HEARTBEAT_EVERY: Duration = Duration::from_secs(15);
+
+/// Cadence of `watch` delta frames. Fixed (not configurable over the
+/// wire): fast enough that a terminal dashboard feels live, slow enough
+/// that an idle watcher costs a few empty frames per second at most.
+const WATCH_EVERY: Duration = Duration::from_millis(250);
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -118,6 +137,9 @@ pub struct Server {
     conn_threads: usize,
     read_poll: Duration,
     heartbeat: Duration,
+    /// The history sampler thread, running from bind until the server
+    /// drops (its `Drop` stops and joins the thread).
+    _sampler: HistorySampler,
 }
 
 impl Server {
@@ -145,6 +167,15 @@ impl Server {
         // serves them); span tracing stays off unless a caller enabled
         // it before binding.
         obs::ObsOptions { metrics: true, trace: obs::trace_on() }.apply();
+        // The history sampler runs for the server's whole lifetime,
+        // snapshotting the registry (and the live sweep, when one is
+        // running) into the ring that `history`/`watch`/`GET /dash`
+        // serve.
+        let sampler = {
+            let history = Arc::clone(state.history());
+            let sampler_state = Arc::clone(&state);
+            HistorySampler::spawn(history, move || sampler_state.progress_sample())
+        };
         Ok(Server {
             listener,
             state,
@@ -152,6 +183,7 @@ impl Server {
             conn_threads,
             read_poll: opts.read_poll.max(Duration::from_millis(1)),
             heartbeat: opts.heartbeat.max(Duration::from_millis(1)),
+            _sampler: sampler,
         })
     }
 
@@ -285,6 +317,14 @@ fn handle_conn(
         if line.trim().is_empty() {
             continue;
         }
+        // Protocol sniff: browsers and `curl` speak HTTP to the same
+        // port. HTTP requests never touch the NDJSON counters, and the
+        // connection closes after one response — everything below this
+        // line is byte-identical to a daemon without the sniff.
+        if line.starts_with("GET ") {
+            serve_http(&line, &mut reader, &mut writer, state, shutdown);
+            break;
+        }
         state.stats().requests.fetch_add(1, Ordering::Relaxed);
         let (id, req) = match proto::parse_request(&line) {
             Ok(parsed) => parsed,
@@ -328,6 +368,8 @@ fn cmd_name(req: &Request) -> &'static str {
         Request::Info => "info",
         Request::Stats => "stats",
         Request::Metrics => "metrics",
+        Request::History => "history",
+        Request::Watch => "watch",
         Request::Generate(_) => "generate",
         Request::Simulate(_) => "simulate",
         Request::Pnr(_) => "pnr",
@@ -362,6 +404,8 @@ fn handle_request(
         Request::Info => respond(w, id, info_json(state)),
         Request::Stats => respond(w, id, state.stats_json()),
         Request::Metrics => respond(w, id, obs::export::metrics_json()),
+        Request::History => respond(w, id, state.history().to_json()),
+        Request::Watch => watch_request(id, state, w, shutdown),
         Request::Shutdown => {
             shutdown.store(true, Ordering::SeqCst);
             let flushed = state.flush().is_ok();
@@ -394,10 +438,7 @@ fn handle_request(
         Request::Figure { which, sa_moves } => {
             let _ = write_frame(
                 w,
-                &Frame::Progress {
-                    id,
-                    message: format!("regenerating {which} through the shared cache"),
-                },
+                &Frame::progress(id, format!("regenerating {which} through the shared cache")),
             );
             let (table, stats) =
                 with_heartbeat(w, id, heartbeat, None, || state.run_figure(&which, sa_moves))?;
@@ -413,6 +454,101 @@ fn handle_request(
             )
         }
     }
+}
+
+/// `watch`: stream the history ring as delta frames until the client
+/// disconnects (or the daemon drains). The first frame carries the
+/// whole ring (the backlog a fresh dashboard renders immediately);
+/// every [`WATCH_EVERY`] after that, a frame with the samples recorded
+/// since — empty frames included, so a silent daemon still proves it is
+/// alive and `mono_ns` stays strictly monotone frame over frame. A
+/// watch connection is dedicated: no terminal frame is ever sent, and
+/// the stream ends only with the connection.
+fn watch_request(
+    id: u64,
+    state: &Arc<SessionState>,
+    w: &mut TcpStream,
+    shutdown: &Arc<AtomicBool>,
+) -> Result<(), String> {
+    let history = state.history();
+    let mut from = 0u64;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        let (next, samples) = history.since(from);
+        from = next;
+        let data = Json::Obj(vec![(
+            "samples".into(),
+            Json::Arr(samples.iter().map(|s| s.to_json()).collect()),
+        )]);
+        if write_frame(w, &Frame::history(id, data)).is_err() {
+            // Client disconnected — the stream is the session.
+            break;
+        }
+        std::thread::sleep(WATCH_EVERY);
+    }
+    Ok(())
+}
+
+/// Serve one HTTP request on a sniffed connection and close it.
+///
+/// Deliberately minimal: the request line names the route, the header
+/// block is drained and ignored, and the response is a complete
+/// `Content-Length`-framed document with `Connection: close`. That is
+/// every bit of HTTP a dashboard tab or a `curl` one-liner needs.
+fn serve_http(
+    request_line: &str,
+    reader: &mut LineReader,
+    w: &mut TcpStream,
+    state: &Arc<SessionState>,
+    shutdown: &Arc<AtomicBool>,
+) {
+    while let Ok(Some(line)) = reader.read_line(shutdown) {
+        if line.trim().is_empty() {
+            break;
+        }
+    }
+    let path = request_line.split_whitespace().nth(1).unwrap_or("/");
+    let path = path.split(['?', '#']).next().unwrap_or("/");
+    let (status, ctype, body) = match path {
+        "/" | "/dash" => {
+            let samples = state.history().samples();
+            let metrics = obs::metrics::snapshot();
+            let archive = state.archive_json();
+            (
+                "200 OK",
+                "text/html; charset=utf-8",
+                dash::dash_page(&samples, &metrics, &archive),
+            )
+        }
+        "/metrics.json" => {
+            ("200 OK", "application/json", obs::export::metrics_json().render())
+        }
+        "/history.json" => {
+            ("200 OK", "application/json", state.history().to_json().render())
+        }
+        "/archive.json" => ("200 OK", "application/json", state.archive_json().render()),
+        _ => (
+            "404 Not Found",
+            "text/plain; charset=utf-8",
+            format!("no route for {path}\n"),
+        ),
+    };
+    if obs::metrics_on() {
+        counter("service.http.requests").inc();
+        if status == "200 OK" {
+            counter("service.http.ok").inc();
+        } else {
+            counter("service.http.not_found").inc();
+        }
+    }
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    let _ = w.write_all(head.as_bytes());
+    let _ = w.write_all(body.as_bytes());
 }
 
 /// Run `f` while a sibling thread emits a heartbeat progress frame
@@ -456,7 +592,7 @@ fn with_heartbeat<T: Send>(
                             Some(p) => p.snapshot().message(),
                             None => "still working".into(),
                         };
-                        let _ = write_frame(&mut hb, &Frame::Progress { id, message });
+                        let _ = write_frame(&mut hb, &Frame::progress(id, message));
                     }
                 }
             });
@@ -492,22 +628,25 @@ fn dse_request(
     }
     let _ = write_frame(
         w,
-        &Frame::Progress { id, message: format!("sweep `{}`: resolving jobs", spec.name) },
+        &Frame::progress(id, format!("sweep `{}`: resolving jobs", spec.name)),
     );
-    let progress = SweepProgress::new();
+    let progress = Arc::new(SweepProgress::new());
+    let live = state.track_progress(Arc::clone(&progress));
     let out = with_heartbeat(w, id, heartbeat, Some(&progress), || {
         state.run_dse_with_progress(&spec, Some(&progress))
-    })?;
+    });
+    drop(live);
+    let out = out?;
     let s = &out.stats;
     let _ = write_frame(
         w,
-        &Frame::Progress {
+        &Frame::progress(
             id,
-            message: format!(
+            format!(
                 "{} jobs: {} cached, {} coalesced, {} PnR runs, {} sims",
                 s.jobs, s.cache_hits, s.coalesced, s.pnr_runs, s.sims
             ),
-        },
+        ),
     );
     // The machine-readable record plus rendered tables, so thin clients
     // print without reimplementing the formatting.
@@ -538,24 +677,24 @@ fn tune_request(
     }
     let _ = write_frame(
         w,
-        &Frame::Progress {
-            id,
-            message: format!("tune `{}`: searching the design space", spec.name),
-        },
+        &Frame::progress(id, format!("tune `{}`: searching the design space", spec.name)),
     );
-    let progress = SweepProgress::new();
+    let progress = Arc::new(SweepProgress::new());
+    let live = state.track_progress(Arc::clone(&progress));
     let out = with_heartbeat(w, id, heartbeat, Some(&progress), || {
         state.run_tune_with_progress(&spec, &TuneOptions::default(), Some(&progress))
-    })?;
+    });
+    drop(live);
+    let out = out?;
     let _ = write_frame(
         w,
-        &Frame::Progress {
+        &Frame::progress(
             id,
-            message: format!(
+            format!(
                 "{} evaluations ({} cross-product): {} pruned, {} dropped, {} rounds",
                 out.evaluated, out.cross_product, out.pruned, out.dropped, out.rounds
             ),
-        },
+        ),
     );
     let Json::Obj(mut members) = tune_json(&out) else {
         unreachable!("tune_json returns an object")

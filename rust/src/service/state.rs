@@ -48,10 +48,11 @@ use crate::dse::{
     EngineOptions, EngineStats, InterconnectSource, JobKey, ParetoArchive, PointResult,
     ResultCache, SweepOutcome, SweepProgress, SweepSpec, TuneOptions, TuneOutcome,
 };
-use crate::obs;
-use crate::obs::span::names as spans;
 use crate::dsl::{create_uniform_interconnect, InterconnectConfig};
 use crate::ir::Interconnect;
+use crate::obs;
+use crate::obs::span::names as spans;
+use crate::obs::{MetricsHistory, ProgressSample};
 use crate::pnr::GlobalPlacer;
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -326,6 +327,34 @@ pub struct SessionState {
     /// requests through [`Self::run_dse`]'s shared path, so this costs
     /// nothing but archive consistency.
     tune_lock: Mutex<()>,
+    /// The dashboard's data source: a fixed-capacity ring of
+    /// timestamped metrics-registry samples, fed by the server's
+    /// background sampler thread and drained by `history`/`watch`
+    /// requests and `GET /dash`.
+    history: Arc<MetricsHistory>,
+    /// The sweep the sampler snapshots alongside each sample, if one is
+    /// live. Requests register their [`SweepProgress`] here for the
+    /// duration of a sweep (last writer wins when requests overlap —
+    /// the dashboard shows *a* live sweep, the trace files show all).
+    live_progress: Mutex<Option<Arc<SweepProgress>>>,
+}
+
+/// Clears a request's [`SweepProgress`] out of the live slot when the
+/// request finishes — but only if the slot still holds *this* request's
+/// tracker, so a concurrent request that registered later keeps its
+/// registration when an earlier one unwinds.
+pub struct LiveProgressGuard<'a> {
+    state: &'a SessionState,
+    progress: Arc<SweepProgress>,
+}
+
+impl Drop for LiveProgressGuard<'_> {
+    fn drop(&mut self) {
+        let mut slot = lock_ignore_poison(&self.state.live_progress);
+        if slot.as_ref().is_some_and(|p| Arc::ptr_eq(p, &self.progress)) {
+            *slot = None;
+        }
+    }
 }
 
 impl SessionState {
@@ -356,6 +385,8 @@ impl SessionState {
             stats: ServiceStats::default(),
             flush_lock: Mutex::new(()),
             tune_lock: Mutex::new(()),
+            history: Arc::new(MetricsHistory::with_defaults()),
+            live_progress: Mutex::new(None),
         })
     }
 
@@ -370,6 +401,67 @@ impl SessionState {
 
     pub fn ic_lru(&self) -> &IcLru {
         &self.ics
+    }
+
+    /// The dashboard's time-series ring (shared with the sampler thread).
+    pub fn history(&self) -> &Arc<MetricsHistory> {
+        &self.history
+    }
+
+    /// Register `progress` as the live sweep the sampler snapshots.
+    /// The returned guard clears the slot on drop — but only if this
+    /// registration is still the current one (`Arc::ptr_eq`), so
+    /// overlapping requests never clear each other's trackers.
+    pub fn track_progress(&self, progress: Arc<SweepProgress>) -> LiveProgressGuard<'_> {
+        *lock_ignore_poison(&self.live_progress) = Some(Arc::clone(&progress));
+        LiveProgressGuard { state: self, progress }
+    }
+
+    /// One point-in-time view of the live sweep, shaped for the history
+    /// ring (`None` when no sweep is running). Utilization is rendered
+    /// down to whole percent per worker — the ring stores thousands of
+    /// samples, so a `u8` per worker keeps it cheap.
+    pub fn progress_sample(&self) -> Option<ProgressSample> {
+        let progress = lock_ignore_poison(&self.live_progress).clone()?;
+        let snap = progress.snapshot();
+        let elapsed = snap.elapsed_ns.max(1);
+        let worker_util_pct = snap
+            .worker_busy_ns
+            .iter()
+            .map(|&busy| (busy.saturating_mul(100) / elapsed).min(100) as u8)
+            .collect();
+        Some(ProgressSample {
+            jobs_total: snap.jobs_total,
+            jobs_done: snap.jobs_done,
+            cache_hits: snap.cache_hits,
+            coalesced: snap.coalesced,
+            cold_total: snap.cold_total,
+            cold_done: snap.cold_done,
+            warm_starts: snap.warm_starts,
+            worker_util_pct,
+        })
+    }
+
+    /// The Pareto-archive document served at `GET /archive.json`: the
+    /// archive file next to the result cache, read as-is. Deliberately
+    /// *not* [`ParetoArchive::at`] — that constructor creates the file
+    /// as a side effect, and a read-only endpoint must not write. An
+    /// in-memory daemon (or a daemon that has never tuned) serves an
+    /// empty document of the same shape.
+    pub fn archive_json(&self) -> Json {
+        let empty = || {
+            Json::Obj(vec![
+                ("version".into(), Json::num_u64(1)),
+                ("entries".into(), Json::Arr(vec![])),
+            ])
+        };
+        let Some(cache) = &self.opts.cache_path else {
+            return empty();
+        };
+        match std::fs::read_to_string(archive_path_for(cache)) {
+            Ok(text) => Json::parse(&text).unwrap_or_else(|_| empty()),
+            Err(_) => empty(),
+        }
     }
 
     pub fn cache_len(&self) -> usize {
@@ -814,6 +906,61 @@ mod tests {
         // one-candidate specs produced identical ConfigDescriptor keys.
         let dse = st.run_dse(&spec).unwrap();
         assert_eq!(dse.stats.cache_hits, cold.evaluated);
+    }
+
+    #[test]
+    fn live_progress_slot_tracks_and_clears_by_identity() {
+        let st = state();
+        assert!(st.progress_sample().is_none(), "no sweep, no sample");
+        let p = Arc::new(SweepProgress::new());
+        p.begin(4, 1, 1);
+        {
+            let _guard = st.track_progress(Arc::clone(&p));
+            let sample = st.progress_sample().expect("live sweep must sample");
+            assert_eq!(sample.jobs_total, 4);
+            assert_eq!(sample.jobs_done, 2, "hits + coalesced count as done");
+            assert_eq!(sample.cache_hits, 1);
+            assert_eq!(sample.cold_total, 2);
+        }
+        assert!(st.progress_sample().is_none(), "guard clears the slot on drop");
+        // A superseded guard must not clear the newer registration.
+        let newer = Arc::new(SweepProgress::new());
+        newer.begin(8, 0, 0);
+        let old_guard = st.track_progress(Arc::clone(&p));
+        let _new_guard = st.track_progress(Arc::clone(&newer));
+        drop(old_guard);
+        let sample = st.progress_sample().expect("newer registration survives");
+        assert_eq!(sample.jobs_total, 8);
+    }
+
+    #[test]
+    fn archive_json_reads_the_file_without_creating_it() {
+        // In-memory daemon: empty document, correct shape.
+        let st = state();
+        let doc = st.archive_json();
+        assert_eq!(doc.get("entries").and_then(Json::as_arr).map(Vec::len), Some(0));
+        // File-backed daemon: the archive file is served as-is, and a
+        // read must not create it.
+        let cache = std::env::temp_dir()
+            .join(format!("canal_state_archive_{}.json", std::process::id()));
+        let archive = archive_path_for(&cache);
+        std::fs::remove_file(&archive).ok();
+        let st = SessionState::with_placer(
+            StateOptions { workers: 2, cache_path: Some(cache.clone()), ic_capacity: 32 },
+            Box::new(BatchedNativePlacer::default()),
+        )
+        .unwrap();
+        assert_eq!(
+            st.archive_json().get("entries").and_then(Json::as_arr).map(Vec::len),
+            Some(0)
+        );
+        assert!(!archive.exists(), "serving the archive must not create the file");
+        std::fs::write(&archive, "{\"version\":1,\"entries\":[{\"config\":\"t2\"}]}")
+            .unwrap();
+        let doc = st.archive_json();
+        assert_eq!(doc.get("entries").and_then(Json::as_arr).map(Vec::len), Some(1));
+        std::fs::remove_file(&archive).ok();
+        std::fs::remove_file(&cache).ok();
     }
 
     #[test]

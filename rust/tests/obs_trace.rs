@@ -9,12 +9,24 @@
 //! second sweep in this file) may add events; nothing here assumes it
 //! was the only writer.
 
+use std::sync::{Mutex, MutexGuard};
+
 use canal::dse::{DseEngine, EngineOptions, SweepSpec};
 use canal::dsl::InterconnectConfig;
 use canal::obs::span::names;
 use canal::obs::{self, ObsOptions};
 use canal::pnr::{FlowParams, NativePlacer, SaParams};
 use canal::util::json::Json;
+
+/// The gate byte and the span rings are process-global, and the tests
+/// in this binary run on separate threads: every test that flips the
+/// gate or reads ring totals serializes here, so one test's `disabled`
+/// window can't swallow another's events.
+static GATE_LOCK: Mutex<()> = Mutex::new(());
+
+fn gate_lock() -> MutexGuard<'static, ()> {
+    GATE_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
 
 fn tiny_spec() -> SweepSpec {
     SweepSpec {
@@ -33,6 +45,7 @@ fn tiny_spec() -> SweepSpec {
 
 #[test]
 fn traced_sweep_exports_a_valid_chrome_trace_and_metrics_snapshot() {
+    let _gate = gate_lock();
     ObsOptions::full().apply();
     let spec = tiny_spec();
     let mut engine =
@@ -122,4 +135,83 @@ fn traced_sweep_exports_a_valid_chrome_trace_and_metrics_snapshot() {
     assert!(nd.contains("\"pnr.route.ns\""), "stage duration histogram registered");
     assert!(nd.contains("\"engine.jobs\""), "engine stats mirrored into the registry");
     assert!(nd.contains("\"obs.span.recorded\""), "ring accounting present");
+}
+
+#[test]
+fn empty_span_buffer_exports_a_valid_trace() {
+    let _gate = gate_lock();
+    // No events, no labels — the degenerate document must still be
+    // loadable Chrome trace JSON (Perfetto accepts an empty array).
+    let doc = obs::export::chrome_trace(&[], &[]);
+    let parsed = Json::parse(&doc.render()).expect("empty trace renders valid JSON");
+    let evs = parsed
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .expect("traceEvents array present");
+    assert!(evs.is_empty(), "no events and no metadata records");
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+}
+
+#[test]
+fn ring_overflow_is_accounted_and_the_trace_stays_valid() {
+    let _gate = gate_lock();
+    ObsOptions::full().apply();
+    let (_, dropped_before) = obs::span::totals();
+    // One dedicated thread gets one fresh ring; pushing past its
+    // capacity forces drop-oldest mid-run.
+    const EXCESS: u64 = 512;
+    let burst = obs::span::DEFAULT_RING_CAPACITY as u64 + EXCESS;
+    std::thread::spawn(move || {
+        for i in 0..burst {
+            obs::event(names::CACHE_HIT, i, 0);
+        }
+    })
+    .join()
+    .expect("burst thread");
+    let events = obs::span::collect();
+    let labels = obs::span::track_labels();
+    ObsOptions::disabled().apply();
+    let (_, dropped_after) = obs::span::totals();
+    assert!(
+        dropped_after.saturating_sub(dropped_before) >= EXCESS,
+        "overflow must be accounted in obs.span.dropped_events \
+         ({dropped_before} -> {dropped_after})"
+    );
+    // The survivors still export: valid JSON, every event a complete
+    // record, count bounded by the ring capacity for that track.
+    let doc = obs::export::chrome_trace(&events, &labels);
+    let parsed = Json::parse(&doc.render()).expect("overflowed trace renders valid JSON");
+    let evs = parsed.get("traceEvents").and_then(Json::as_arr).unwrap();
+    assert!(!evs.is_empty(), "capacity-many events survive the overflow");
+}
+
+#[test]
+fn metrics_json_covers_all_three_metric_kinds_with_timestamps() {
+    let _gate = gate_lock();
+    ObsOptions::metrics_only().apply();
+    obs::metrics::counter("test.obs_trace.counter").add(7);
+    obs::metrics::gauge("test.obs_trace.gauge").set(-4);
+    obs::metrics::histogram("test.obs_trace.hist").record(250);
+    let doc = obs::export::metrics_json();
+    ObsOptions::disabled().apply();
+    assert!(doc.get("ts_ms").and_then(Json::as_u64).unwrap_or(0) > 0, "wall stamp");
+    assert!(doc.get("mono_ns").and_then(Json::as_u64).is_some(), "monotonic stamp");
+    let metrics = doc.get("metrics").and_then(Json::as_arr).expect("metrics array");
+    let find = |name: &str| {
+        metrics
+            .iter()
+            .find(|m| m.get("metric").and_then(Json::as_str) == Some(name))
+            .unwrap_or_else(|| panic!("metric `{name}` missing from snapshot"))
+    };
+    let c = find("test.obs_trace.counter");
+    assert_eq!(c.get("type").and_then(Json::as_str), Some("counter"));
+    assert!(c.get("value").and_then(Json::as_u64).unwrap_or(0) >= 7);
+    let g = find("test.obs_trace.gauge");
+    assert_eq!(g.get("type").and_then(Json::as_str), Some("gauge"));
+    assert_eq!(g.get("value").and_then(Json::as_f64), Some(-4.0));
+    let h = find("test.obs_trace.hist");
+    assert_eq!(h.get("type").and_then(Json::as_str), Some("histogram"));
+    assert!(h.get("count").and_then(Json::as_u64).unwrap_or(0) >= 1);
+    assert!(h.get("p50").and_then(Json::as_f64).is_some());
+    assert!(h.get("p99").and_then(Json::as_f64).is_some());
 }

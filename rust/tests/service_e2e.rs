@@ -370,6 +370,96 @@ fn heartbeats_carry_live_sweep_progress_mid_sweep() {
 }
 
 #[test]
+fn http_dash_on_the_ndjson_port_reflects_a_just_run_sweep() {
+    use std::io::{Read, Write};
+    let (addr, _state, handle) = spawn_server(None);
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    c.call(&Request::Dse(tiny_params())).unwrap();
+
+    // Plain HTTP/1.1 on the NDJSON port: the server sniffs the `GET `
+    // prefix and answers one response, then closes.
+    let http_get = |path: &str| -> String {
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(
+            format!("GET {path} HTTP/1.1\r\nHost: canal\r\nConnection: close\r\n\r\n")
+                .as_bytes(),
+        )
+        .unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        buf
+    };
+
+    let dash = http_get("/dash");
+    assert!(dash.starts_with("HTTP/1.1 200 OK\r\n"), "{}", &dash[..dash.len().min(80)]);
+    assert!(dash.contains("Content-Type: text/html"));
+    assert!(dash.contains("<!DOCTYPE html>"));
+    assert!(dash.contains("<svg"), "charts are inline SVG");
+    assert!(
+        dash.contains("service.request.dse"),
+        "the metrics table reflects the sweep this test just ran"
+    );
+    assert!(!dash.contains("<script"), "self-contained page: no JS");
+    assert!(!dash.contains("<link"), "self-contained page: no external CSS");
+
+    let metrics = http_get("/metrics.json");
+    assert!(metrics.starts_with("HTTP/1.1 200 OK\r\n"));
+    assert!(metrics.contains("Content-Type: application/json"));
+    let body = metrics.split("\r\n\r\n").nth(1).expect("body after headers");
+    let doc = Json::parse(body).expect("metrics body is valid JSON");
+    assert!(doc.get("ts_ms").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(doc.get("metrics").and_then(Json::as_arr).is_some());
+
+    let archive = http_get("/archive.json");
+    let body = archive.split("\r\n\r\n").nth(1).unwrap();
+    let doc = Json::parse(body).expect("archive body is valid JSON");
+    assert!(doc.get("entries").and_then(Json::as_arr).is_some());
+
+    assert!(http_get("/nope").starts_with("HTTP/1.1 404"));
+
+    // NDJSON clients on the same port are unaffected by HTTP traffic.
+    let pong = c.call(&Request::Ping).unwrap();
+    assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
+fn watch_streams_monotone_timestamped_history_frames() {
+    let (addr, _state, handle) = spawn_server(None);
+
+    // One-shot `history` first: the full ring document with its cursor.
+    let mut c = Client::connect(&addr.to_string()).unwrap();
+    let hist = c.call(&Request::History).unwrap();
+    assert!(hist.get("period_ms").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(hist.get("capacity").and_then(Json::as_u64).unwrap_or(0) > 0);
+    assert!(hist.get("samples").and_then(Json::as_arr).is_some());
+
+    // `watch` never terminates on its own: collect a few delta frames
+    // on a dedicated connection, then stop via the callback.
+    let mut w = Client::connect(&addr.to_string()).unwrap();
+    let mut stamps = Vec::new();
+    let out = w
+        .call_frames(&Request::Watch, |frame| {
+            if let Frame::History { ts_ms, mono_ns, .. } = frame {
+                assert!(*ts_ms > 0, "every history frame carries a wall stamp");
+                stamps.push(*mono_ns);
+            }
+            stamps.len() < 3
+        })
+        .unwrap();
+    assert!(out.is_none(), "watch must never send a terminal frame");
+    assert_eq!(stamps.len(), 3);
+    assert!(
+        stamps.windows(2).all(|p| p[0] < p[1]),
+        "frames strictly monotone in mono_ns: {stamps:?}"
+    );
+
+    c.call(&Request::Shutdown).unwrap();
+    handle.join().unwrap().unwrap();
+}
+
+#[test]
 fn shutdown_drains_and_flushes_the_shared_cache_file() {
     let path = std::env::temp_dir()
         .join(format!("canal_service_e2e_{}.json", std::process::id()));
